@@ -1,0 +1,54 @@
+//! The paper's motivating application (§1, §9): an implicit-QR symmetric
+//! eigensolver whose eigenvector updates are *delayed rotation sequences*
+//! applied with the paper's kernel.
+//!
+//! ```bash
+//! cargo run --release --example hessenberg_qr
+//! ```
+
+use rotseq::apps::symmetric_eigen;
+use rotseq::blocking::{plan, CacheParams};
+use rotseq::matrix::{orthogonality_error, Matrix, Rng64};
+
+fn main() -> anyhow::Result<()> {
+    let n = 200;
+    println!("symmetric eigensolve, n = {n}: tridiagonalize (Givens) +");
+    println!("implicit Wilkinson-shift QR, eigenvectors via delayed rotation batches\n");
+
+    // Random symmetric test matrix.
+    let mut rng = Rng64::new(3);
+    let mut a = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let v = rng.next_signed();
+            a.set(i, j, v);
+            a.set(j, i, v);
+        }
+    }
+
+    let cfg = plan(16, 2, CacheParams::detect(), 1);
+    let t0 = std::time::Instant::now();
+    let r = symmetric_eigen(&a, &cfg)?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    println!("done in {:.3}s: {} QR sweeps, {} delayed kernel batches", dt, r.sweeps, r.batches);
+    println!("eigenvalue range: [{:.6}, {:.6}]", r.eigenvalues[0], r.eigenvalues[n - 1]);
+    println!("Q orthogonality error: {:.3e}", orthogonality_error(&r.q));
+
+    // Residual check on a few eigenpairs: ||A q - w q||_inf.
+    let mut worst: f64 = 0.0;
+    for idx in [0, n / 3, 2 * n / 3, n - 1] {
+        let w = r.eigenvalues[idx];
+        for i in 0..n {
+            let mut av = 0.0;
+            for j in 0..n {
+                av += a.get(i, j) * r.q.get(j, idx);
+            }
+            worst = worst.max((av - w * r.q.get(i, idx)).abs());
+        }
+    }
+    println!("worst eigenpair residual (sampled): {worst:.3e}");
+    anyhow::ensure!(worst < 1e-8, "residual too large");
+    println!("\nOK");
+    Ok(())
+}

@@ -1,0 +1,31 @@
+//! §1.2 I/O analysis on the simulated two-memory machine: measured DRAM
+//! traffic and memory-operation counts for every variant, against the
+//! paper's closed-form bounds.
+//!
+//! ```bash
+//! cargo run --release --example io_analysis
+//! ```
+
+use rotseq::bench_harness::{io_table, print_io_table};
+use rotseq::simulator::{iolb, HierarchySpec};
+
+fn main() {
+    let spec = HierarchySpec::small_machine();
+    let s = spec.l3.capacity_doubles();
+
+    println!("simulated machine: L1 4KB / L2 32KB / L3 512KB, 64B lines, 4KB pages\n");
+
+    for (m, n, k) in [(128, 128, 12), (256, 256, 24), (512, 384, 24)] {
+        println!("--- m={m}, n={n}, k={k} ---");
+        let rows = io_table(m, n, k);
+        print_io_table(&rows, s);
+        println!(
+            "Eq 3.4 prediction for the 16x2 kernel: {:.3e} memops",
+            iolb::memops_wave_kernel(m, n, k, 16, 2)
+        );
+        println!(
+            "Eq 3.2 prediction for 2x2 fusing:     {:.3e} memops\n",
+            iolb::memops_fused22(m, n, k)
+        );
+    }
+}

@@ -1,0 +1,88 @@
+"""AOT lowering: JAX -> HLO text -> artifacts/ for the Rust runtime.
+
+HLO *text* (not ``lowered.compile().serialize()`` or proto bytes) is the
+interchange format: this image's xla_extension 0.5.1 rejects jax>=0.5
+protos (64-bit instruction ids); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot --out ../artifacts
+Writes one ``<name>_<m>x<n>x<k>.hlo.txt`` per entry point and shape, plus
+``manifest.txt`` (TSV: name, file, m, n, k — parsed by
+``rust/src/runtime/artifact.rs``).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ENTRY_POINTS
+
+jax.config.update("jax_enable_x64", True)
+
+# Shapes lowered by default: XLA executables are shape-specialized, so the
+# registry carries a small set the examples/tests use.
+DEFAULT_SHAPES = [
+    (32, 24, 4),
+    (64, 48, 8),
+    (128, 96, 16),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name, fn, m, n, k):
+    a = jax.ShapeDtypeStruct((m, n), jnp.float64)
+    cs = jax.ShapeDtypeStruct((n - 1, k), jnp.float64)
+    sn = jax.ShapeDtypeStruct((n - 1, k), jnp.float64)
+    return jax.jit(fn).lower(a, cs, sn)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--shapes",
+        default=None,
+        help="comma-separated m:n:k triples (default: %s)"
+        % ";".join("%d:%d:%d" % s for s in DEFAULT_SHAPES),
+    )
+    args = ap.parse_args()
+
+    shapes = DEFAULT_SHAPES
+    if args.shapes:
+        shapes = [tuple(int(x) for x in t.split(":")) for t in args.shapes.split(",")]
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = []
+    for m, n, k in shapes:
+        for name, fn in ENTRY_POINTS.items():
+            lowered = lower_entry(name, fn, m, n, k)
+            text = to_hlo_text(lowered)
+            assert "custom-call" not in text.lower(), (
+                f"{name} {m}x{n}x{k}: lowered HLO contains a custom-call; "
+                "the CPU PJRT client cannot run it (is interpret=True set?)"
+            )
+            fname = f"{name}_{m}x{n}x{k}.hlo.txt"
+            with open(os.path.join(args.out, fname), "w") as f:
+                f.write(text)
+            manifest.append(f"{name}_{m}x{n}x{k}\t{fname}\t{m}\t{n}\t{k}")
+            print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("# name\tfile\tm\tn\tk\n")
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts -> {args.out}/manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

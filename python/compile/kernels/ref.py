@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for rotation-sequence application.
+
+This is the Layer-1 correctness reference: the Pallas kernel
+(`rotseq_kernel.py`) and the L2 model (`model.py`) are validated against it
+by pytest/hypothesis. It implements Alg 1.2 of the paper verbatim with
+`lax.fori_loop` (sequences outer, rotations inner), so any
+dependency-respecting reordering in the optimized paths must match it
+bit-for-bit in exact arithmetic and to rounding in floating point.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+jax.config.update("jax_enable_x64", True)
+
+
+def apply_rotation(a, j, c, s):
+    """Apply one rotation to columns (j, j+1) of ``a`` from the right.
+
+    x' = c*x + s*y ; y' = -s*x + c*y   (Alg 1.1)
+    """
+    x = lax.dynamic_slice_in_dim(a, j, 1, axis=1)
+    y = lax.dynamic_slice_in_dim(a, j + 1, 1, axis=1)
+    xn = c * x + s * y
+    yn = -s * x + c * y
+    a = lax.dynamic_update_slice_in_dim(a, xn, j, axis=1)
+    a = lax.dynamic_update_slice_in_dim(a, yn, j + 1, axis=1)
+    return a
+
+
+def apply_sequences_ref(a, cs, sn):
+    """Alg 1.2: apply k sequences of n-1 rotations, stored in the
+    (n-1) x k matrices ``cs``/``sn``, to ``a`` (m x n) from the right.
+    """
+    nm1, k = cs.shape
+
+    def seq_body(p, a):
+        def rot_body(j, a):
+            return apply_rotation(a, j, cs[j, p], sn[j, p])
+
+        return lax.fori_loop(0, nm1, rot_body, a)
+
+    return lax.fori_loop(0, k, seq_body, a)
+
+
+def random_sequences(key, n, k, dtype=jnp.float64):
+    """Random uniform-angle (C, S) matrices of shape (n-1, k)."""
+    theta = jax.random.uniform(
+        key, (n - 1, k), dtype=dtype, minval=-jnp.pi, maxval=jnp.pi
+    )
+    return jnp.cos(theta), jnp.sin(theta)

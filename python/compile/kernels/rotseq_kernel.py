@@ -1,0 +1,141 @@
+"""Layer-1 Pallas kernel: wavefront rotation-sequence application.
+
+TPU adaptation of the paper's §3 register-reuse kernel (see DESIGN.md
+§Hardware-Adaptation):
+
+* the grid tiles A into ``(block_m, n_pad)`` row panels (BlockSpec = the §4
+  packing: HBM -> VMEM copies of whole panels);
+* inside a panel, sequences are processed in subgroups of ``k_r`` (the §5.2
+  first-loop-around-the-kernel) and each subgroup runs a ``fori_loop`` over
+  *waves*: a ``dynamic_slice`` column window of width ``k_r + 1`` plays the
+  role of the paper's register window, with the VPU applying each wave's
+  ``k_r`` rotations across all ``block_m`` lanes at once;
+* the startup/shutdown triangles are absorbed by padding: ``k_r - 1`` dummy
+  columns on each side of A and identity rotations outside the real grid
+  make every wave full (identity rotations are exact no-ops), which keeps
+  the loop body uniform — the TPU analogue of the paper's "switch to a
+  k_r = 1 kernel at the edges" (branchless instead).
+
+MUST run with ``interpret=True`` on CPU: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT client cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _apply_subgroup(a, cpad, spad, p0, kre, kr):
+    """Apply sequences ``p0 .. p0+kre`` to the padded block ``a``.
+
+    ``a``      : (bm, n + 2*(kr-1)) padded block value.
+    ``cpad``   : (n-1 + 2*(kr-1), k) rotation grid, identity-padded.
+    Wave ``v`` applies ops ``(i = v - u, p0 + u)`` for ``u = 0..kre``; op
+    ``(i, p)`` acts on padded columns ``(i, i+1)``.
+    """
+    bm = a.shape[0]
+    nrows = cpad.shape[0]  # n - 1 + 2*(kr - 1)
+    pad = kr - 1
+    # Real rotations live at padded rows [pad, nrows - pad); uniform waves
+    # v = pad .. nrows - pad + kre - 1 cover them all (plus identity pads).
+    v_lo = pad
+    v_hi = (nrows - pad) + (kre - 1)
+
+    def wave_body(v, a):
+        j0 = v - (kre - 1)  # leftmost window column
+        win = lax.dynamic_slice(a, (0, j0), (bm, kre + 1))
+        for u in range(kre):  # static unroll, like the paper's kernel
+            c = lax.dynamic_slice(cpad, (v - u, p0 + u), (1, 1))[0, 0]
+            s = lax.dynamic_slice(spad, (v - u, p0 + u), (1, 1))[0, 0]
+            lo = kre - 1 - u
+            x = win[:, lo]
+            y = win[:, lo + 1]
+            win = win.at[:, lo].set(c * x + s * y)
+            win = win.at[:, lo + 1].set(-s * x + c * y)
+        return lax.dynamic_update_slice(a, win, (0, j0))
+
+    return lax.fori_loop(v_lo, v_hi, wave_body, a)
+
+
+def _rotseq_kernel(c_ref, s_ref, a_ref, o_ref, *, kr):
+    """Pallas kernel body: full sequence set on one row panel."""
+    a = a_ref[...]
+    cpad = c_ref[...]
+    spad = s_ref[...]
+    k = cpad.shape[1]
+    p0 = 0
+    while p0 < k:  # static loop over subgroups (k is a trace-time constant)
+        kre = min(kr, k - p0)
+        a = _apply_subgroup(a, cpad, spad, p0, kre, kr)
+        p0 += kre
+    o_ref[...] = a
+
+
+def pad_rotations(cs, sn, kr):
+    """Identity-pad the rotation grid by ``kr - 1`` rows on each side."""
+    pad = kr - 1
+    if pad == 0:
+        return cs, sn
+    ones = jnp.ones((pad, cs.shape[1]), cs.dtype)
+    zeros = jnp.zeros((pad, cs.shape[1]), cs.dtype)
+    return (
+        jnp.concatenate([ones, cs, ones], axis=0),
+        jnp.concatenate([zeros, sn, zeros], axis=0),
+    )
+
+
+def pad_matrix(a, kr, block_m):
+    """Pad A: ``kr - 1`` dummy columns each side, rows to a ``block_m``
+    multiple (the §7 scheduler's m_r rounding, at panel granularity)."""
+    m = a.shape[0]
+    pad_c = kr - 1
+    pad_r = (-m) % block_m
+    return jnp.pad(a, ((0, pad_r), (pad_c, pad_c))), pad_r
+
+
+@functools.partial(jax.jit, static_argnames=("kr", "block_m", "interpret"))
+def apply_sequences_pallas(a, cs, sn, *, kr=2, block_m=128, interpret=True):
+    """Apply k sequences of n-1 rotations to ``a`` via the Pallas kernel.
+
+    Arguments mirror ``ref.apply_sequences_ref``; ``kr`` is the paper's
+    kernel wave width and ``block_m`` the row-panel height (the analogue of
+    m_b; m_r is the VPU lane dimension and implicit).
+    """
+    m, n = a.shape
+    assert cs.shape == sn.shape and cs.shape[0] == n - 1
+    bm = min(block_m, max(m, 1))
+    a_pad, pad_r = pad_matrix(a, kr, bm)
+    cpad, spad = pad_rotations(cs, sn, kr)
+    mp, npad = a_pad.shape
+
+    out = pl.pallas_call(
+        functools.partial(_rotseq_kernel, kr=kr),
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec(cpad.shape, lambda i: (0, 0)),
+            pl.BlockSpec(spad.shape, lambda i: (0, 0)),
+            pl.BlockSpec((bm, npad), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, npad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, npad), a.dtype),
+        interpret=interpret,
+    )(cpad, spad, a_pad)
+
+    return out[:m, kr - 1 : kr - 1 + n]
+
+
+def vmem_footprint_doubles(n, k, kr, block_m):
+    """Estimated VMEM working set (in f64 elements) of one kernel instance:
+    the padded panel, the rotation grids, and the column window. Used by
+    DESIGN.md §Perf to check the BlockSpec fits a 16 MiB VMEM with double
+    buffering."""
+    npad = n + 2 * (kr - 1)
+    panel = block_m * npad
+    grids = 2 * (n - 1 + 2 * (kr - 1)) * k
+    window = block_m * (kr + 1)
+    return 2 * panel + grids + window  # x2: double-buffered in/out panel

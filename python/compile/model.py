@@ -1,0 +1,46 @@
+"""Layer-2 JAX model: the compute graphs lowered to AOT artifacts.
+
+Two paths, both calling into Layer 1:
+
+* ``apply_sequences`` — the paper's algorithm: the Pallas wavefront kernel
+  over row panels (VPU path);
+* ``apply_sequences_gemm`` — the rs_gemm mapping: accumulate the rotation
+  set into an orthogonal factor Q and apply with a single matmul. On a real
+  TPU this is the MXU-native variant (see DESIGN.md §Hardware-Adaptation);
+  it also serves as the in-graph correctness cross-check.
+
+Python only ever runs at build time: `aot.py` lowers these jitted functions
+to HLO text that the Rust runtime loads and executes via PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ref import apply_sequences_ref
+from .kernels.rotseq_kernel import apply_sequences_pallas
+
+jax.config.update("jax_enable_x64", True)
+
+
+def apply_sequences(a, cs, sn, *, kr=2, block_m=128):
+    """Primary path: §3 wavefront kernel (Pallas, interpret mode)."""
+    return (apply_sequences_pallas(a, cs, sn, kr=kr, block_m=block_m),)
+
+
+def apply_sequences_gemm(a, cs, sn):
+    """rs_gemm path: Q = (sequences applied to I), then A·Q on the MXU."""
+    n = a.shape[1]
+    q = apply_sequences_ref(jnp.eye(n, dtype=a.dtype), cs, sn)
+    return (a @ q,)
+
+
+def apply_sequences_reference(a, cs, sn):
+    """The oracle itself, exported for numerics cross-checks from Rust."""
+    return (apply_sequences_ref(a, cs, sn),)
+
+
+ENTRY_POINTS = {
+    "apply_seq": apply_sequences,
+    "gemm_accum": apply_sequences_gemm,
+    "reference": apply_sequences_reference,
+}

@@ -1,0 +1,113 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, k_r, block sizes and dtypes; every case must
+match the Alg 1.2 reference to rounding.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import apply_sequences_ref, random_sequences
+from compile.kernels.rotseq_kernel import (
+    apply_sequences_pallas,
+    pad_matrix,
+    pad_rotations,
+    vmem_footprint_doubles,
+)
+
+jax.config.update("jax_enable_x64", True)
+
+
+def make_case(m, n, k, seed, dtype=jnp.float64):
+    key = jax.random.PRNGKey(seed)
+    ka, kr_ = jax.random.split(key)
+    a = jax.random.normal(ka, (m, n), dtype=dtype)
+    cs, sn = random_sequences(kr_, n, k, dtype=dtype)
+    return a, cs, sn
+
+
+@pytest.mark.parametrize(
+    "m,n,k,kr,block_m",
+    [
+        (8, 6, 2, 2, 8),
+        (16, 12, 5, 2, 8),
+        (7, 9, 3, 2, 4),  # row remainder
+        (12, 20, 7, 3, 6),
+        (32, 16, 1, 2, 16),  # single sequence
+        (4, 2, 3, 2, 4),  # minimal n
+        (8, 24, 4, 1, 8),  # kr = 1 (no padding path)
+        (24, 10, 9, 5, 8),  # kr > subgroup remainder
+    ],
+)
+def test_kernel_matches_ref(m, n, k, kr, block_m):
+    a, cs, sn = make_case(m, n, k, seed=m * 1000 + n * 10 + k)
+    expected = apply_sequences_ref(a, cs, sn)
+    got = apply_sequences_pallas(a, cs, sn, kr=kr, block_m=block_m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expected), rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 24),
+    n=st.integers(2, 24),
+    k=st.integers(1, 10),
+    kr=st.integers(1, 4),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_matches_ref_hypothesis(m, n, k, kr, seed):
+    a, cs, sn = make_case(m, n, k, seed)
+    expected = apply_sequences_ref(a, cs, sn)
+    got = apply_sequences_pallas(a, cs, sn, kr=kr, block_m=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expected), rtol=1e-11, atol=1e-11)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4), (jnp.float64, 1e-12)])
+def test_kernel_dtypes(dtype, tol):
+    a, cs, sn = make_case(16, 12, 4, seed=3, dtype=dtype)
+    expected = apply_sequences_ref(a, cs, sn)
+    got = apply_sequences_pallas(a, cs, sn, kr=2, block_m=8)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expected), rtol=tol, atol=tol)
+
+
+def test_identity_rotations_are_noop():
+    m, n, k = 9, 7, 3
+    a = jax.random.normal(jax.random.PRNGKey(0), (m, n), dtype=jnp.float64)
+    cs = jnp.ones((n - 1, k))
+    sn = jnp.zeros((n - 1, k))
+    got = apply_sequences_pallas(a, cs, sn, kr=2, block_m=4)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(a))
+
+
+def test_orthogonality_preserved():
+    m, n, k = 12, 12, 6
+    a = jnp.eye(n, dtype=jnp.float64)
+    _, cs = jax.random.split(jax.random.PRNGKey(1))
+    cs, sn = random_sequences(cs, n, k)
+    q = apply_sequences_pallas(a, cs, sn, kr=2, block_m=4)
+    gram = np.asarray(q.T @ q)
+    np.testing.assert_allclose(gram, np.eye(n), atol=1e-12)
+
+
+def test_padding_helpers():
+    a = jnp.arange(12.0).reshape(3, 4)
+    padded, pad_r = pad_matrix(a, kr=3, block_m=2)
+    assert padded.shape == (4, 8)  # rows 3->4, cols 4 + 2*2
+    assert pad_r == 1
+    np.testing.assert_array_equal(np.asarray(padded[:3, 2:6]), np.asarray(a))
+
+    cs = jnp.full((3, 2), 0.5)
+    sn = jnp.full((3, 2), 0.1)
+    cp, sp = pad_rotations(cs, sn, kr=3)
+    assert cp.shape == (7, 2)
+    assert float(cp[0, 0]) == 1.0 and float(sp[0, 0]) == 0.0
+    assert float(cp[-1, 1]) == 1.0 and float(sp[-1, 1]) == 0.0
+
+
+def test_vmem_footprint_within_budget():
+    # The production tile (block_m=256, n=512, k=180, kr=2) must fit a
+    # 16 MiB VMEM (2M doubles) with double buffering.
+    assert vmem_footprint_doubles(512, 180, 2, 256) < 2 * 1024 * 1024

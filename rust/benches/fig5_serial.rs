@@ -1,0 +1,61 @@
+//! Fig 5 regeneration: serial flop rates + runtime relative to
+//! rs_kernel_v2 for every variant. `cargo bench --bench fig5_serial`.
+//!
+//! The paper's shape claims, asserted on the largest size measured:
+//!   * rs_unoptimized collapses for large n;
+//!   * rs_fused ≈ 30% over rs_blocked;
+//!   * rs_kernel ≈ 60% over rs_blocked and 20–30% over rs_fused;
+//!   * rs_kernel_v2 ≥ rs_kernel.
+//! We assert the *orderings* (absolute factors vary with hardware) and
+//! print the measured factors for EXPERIMENTS.md.
+
+use rotseq::bench_harness::{fig5_serial, print_fig5, MeasureConfig};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (ns, k, mc): (Vec<usize>, usize, MeasureConfig) = if quick {
+        (vec![240], 36, MeasureConfig::quick())
+    } else {
+        (
+            vec![240, 480, 960],
+            180,
+            MeasureConfig {
+                warmup: 1,
+                reps: 3,
+                time_budget: 60.0,
+            },
+        )
+    };
+    let rows = fig5_serial(&ns, k, &mc);
+    print_fig5(&rows);
+
+    // Shape assertions at the largest n.
+    let n_max = *ns.last().unwrap();
+    let rate = |algo: &str| {
+        rows.iter()
+            .find(|r| r.algo == algo && r.n == n_max)
+            .map(|r| r.gflops)
+            .unwrap()
+    };
+    let (naive, blocked, fused) = (rate("rs_unoptimized"), rate("rs_blocked"), rate("rs_fused"));
+    let (kernel, v2) = (rate("rs_kernel"), rate("rs_kernel_v2"));
+    println!("\n# shape checks at n = {n_max}");
+    println!("kernel/blocked = {:.2} (paper ~1.6)", kernel / blocked);
+    println!("kernel/fused   = {:.2} (paper ~1.2-1.3)", kernel / fused);
+    println!("fused/blocked  = {:.2} (paper ~1.3)", fused / blocked);
+    println!("v2/kernel      = {:.2} (paper: slightly > 1)", v2 / kernel);
+    println!("blocked/naive  = {:.2} (paper: >> 1 at large n)", blocked / naive);
+
+    let mut ok = true;
+    let mut check = |name: &str, cond: bool| {
+        println!("  [{}] {name}", if cond { "pass" } else { "FAIL" });
+        ok &= cond;
+    };
+    check("kernel beats blocked", kernel > blocked);
+    check("kernel beats fused", kernel > fused);
+    check("v2 >= 0.95x kernel", v2 > 0.95 * kernel);
+    check("blocked beats naive at large n", blocked > naive);
+    if !ok {
+        std::process::exit(1);
+    }
+}

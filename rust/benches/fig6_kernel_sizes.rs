@@ -1,0 +1,54 @@
+//! Fig 6 regeneration: rs_kernel_v2 flop rate across kernel sizes (each
+//! with planner-tuned block sizes). `cargo bench --bench fig6_kernel_sizes`.
+//!
+//! Paper shape: 16x2 fastest, 12x3 close behind, small kernels (4x2)
+//! clearly slower; notably 16x2 beats 8x5 despite needing ~2x the memory
+//! operations (§8.2). We assert 16x2 lands in the top tier.
+
+use rotseq::bench_harness::{fig6_kernel_sizes, print_fig6, MeasureConfig};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (ns, k, mc): (Vec<usize>, usize, MeasureConfig) = if quick {
+        (vec![240], 36, MeasureConfig::quick())
+    } else {
+        (
+            vec![480, 960],
+            180,
+            MeasureConfig {
+                warmup: 1,
+                reps: 3,
+                time_budget: 60.0,
+            },
+        )
+    };
+    let rows = fig6_kernel_sizes(&ns, k, &mc);
+    print_fig6(&rows);
+
+    let n_max = *ns.last().unwrap();
+    let at = |mr: usize, kr: usize| {
+        rows.iter()
+            .find(|r| r.mr == mr && r.kr == kr && r.n == n_max)
+            .map(|r| r.gflops)
+            .unwrap()
+    };
+    let best = rows
+        .iter()
+        .filter(|r| r.n == n_max)
+        .map(|r| r.gflops)
+        .fold(0.0f64, f64::max);
+    println!("\n# shape checks at n = {n_max}");
+    println!("16x2 = {:.3}, best = {best:.3}", at(16, 2));
+    println!("16x2/8x5 = {:.2} (paper: > 1 despite ~2x memops)", at(16, 2) / at(8, 5));
+    println!("16x2/4x2 = {:.2} (paper: clearly > 1)", at(16, 2) / at(4, 2));
+
+    // The paper finds 16x2 fastest on 16-register AVX; our AVX2 target has
+    // the same register count but different port widths, so we accept 16x2
+    // anywhere in the top tier (>= 75% of the best size, which here may be
+    // the wider 24x2 extension).
+    if at(16, 2) < 0.75 * best {
+        println!("  [FAIL] 16x2 fell out of the top tier");
+        std::process::exit(1);
+    }
+    println!("  [pass] 16x2 in the top tier");
+}

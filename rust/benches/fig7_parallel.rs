@@ -1,0 +1,61 @@
+//! Fig 7 regeneration: parallel flop rate and speedup vs thread count.
+//! `cargo bench --bench fig7_parallel`.
+//!
+//! This container exposes a single core (hardware gate — DESIGN.md
+//! §Substitutions): the real §7 scheduler is run at every thread count for
+//! correctness and 1-core overhead, while the multicore *shape* (speedup
+//! ~10/16 on Xeon V2, ~16/28 on Xeon V3, and the m_r·threads load-balance
+//! oscillation) comes from the calibrated analytical model.
+
+use rotseq::bench_harness::{fig7_parallel, print_fig7, MeasureConfig};
+use rotseq::parallel::speedup_model::{modeled_gflops, modeled_speedup, MachineModel};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (ns, k, mc): (Vec<usize>, usize, MeasureConfig) = if quick {
+        (vec![240], 36, MeasureConfig::quick())
+    } else {
+        (vec![480, 960], 180, MeasureConfig::quick())
+    };
+    let threads = [1, 2, 4, 8, 16, 28];
+    let rows = fig7_parallel(&ns, k, &threads, &mc);
+    print_fig7(&rows);
+
+    // The paper-machine models, reported like the two panels of Fig 7.
+    println!("\n# modeled paper machines (m = n = 3840, k = 180)");
+    for (name, model, cores) in [
+        ("Xeon V2", MachineModel::xeon_v2(), 16),
+        ("Xeon V3", MachineModel::xeon_v3(), 28),
+    ] {
+        print!("{name}: speedup ");
+        for p in [1, 2, 4, 8, 16, 28] {
+            if p > cores {
+                continue;
+            }
+            print!("{p}t={:.1} ", modeled_speedup(&model, 3840, 3840, 180, p));
+        }
+        println!();
+    }
+
+    // Load-balance oscillation (the Fig 7 saw-tooth): aligned m beats m+1.
+    let model = MachineModel::xeon_v2();
+    let aligned = modeled_gflops(&model, 2560, 2560, 180, 10);
+    let misaligned = modeled_gflops(&model, 2561, 2561, 180, 10);
+    println!(
+        "oscillation: m=2560 (16*16*10) -> {aligned:.1} Gflop/s, m=2561 -> {misaligned:.1}"
+    );
+
+    let v2 = modeled_speedup(&MachineModel::xeon_v2(), 3840, 3840, 180, 16);
+    let v3 = modeled_speedup(&MachineModel::xeon_v3(), 3840, 3840, 180, 28);
+    let mut ok = true;
+    let mut check = |name: &str, cond: bool| {
+        println!("  [{}] {name}", if cond { "pass" } else { "FAIL" });
+        ok &= cond;
+    };
+    check("V2 16-thread speedup in 7..14 (paper ~10)", (7.0..14.0).contains(&v2));
+    check("V3 28-thread speedup in 12..22 (paper ~16)", (12.0..22.0).contains(&v3));
+    check("load-imbalance oscillation visible", aligned > misaligned);
+    if !ok {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,68 @@
+//! Fig 8 regeneration: every algorithm applied to 2x2 reflectors instead
+//! of Givens rotations (kernel size m_r=12, k_r=2 per §8.4).
+//! `cargo bench --bench fig8_reflectors`.
+//!
+//! Paper shape: the kernel variant still wins among reflector algorithms,
+//! but reflectors underperform the rotation versions (§8.4 reports this
+//! as an open question). We assert the first claim and report the second.
+
+use rotseq::bench_harness::{fig5_serial, fig8_reflectors, print_fig8, MeasureConfig};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (ns, k, mc): (Vec<usize>, usize, MeasureConfig) = if quick {
+        (vec![240], 36, MeasureConfig::quick())
+    } else {
+        (
+            vec![480, 960],
+            180,
+            MeasureConfig {
+                warmup: 1,
+                reps: 3,
+                time_budget: 60.0,
+            },
+        )
+    };
+    let rows = fig8_reflectors(&ns, k, &mc);
+    print_fig8(&rows);
+
+    let n_max = *ns.last().unwrap();
+    let rate = |algo: &str| {
+        rows.iter()
+            .find(|r| r.algo == algo && r.n == n_max)
+            .map(|r| r.gflops)
+            .unwrap()
+    };
+    let kernel = rate("rs_kernel_v2_tuned");
+    let kernel_12x2 = rate("rs_kernel_v2");
+    let fused = rate("rs_fused");
+    let blocked = rate("rs_blocked");
+
+    // Rotation-kernel rate at the same size for the §8.4 comparison.
+    let rot_rows = fig5_serial(&[n_max], k, &MeasureConfig::quick());
+    let rot_kernel = rot_rows
+        .iter()
+        .find(|r| r.algo == "rs_kernel_v2")
+        .map(|r| r.gflops)
+        .unwrap();
+
+    println!("\n# shape checks at n = {n_max}");
+    println!("reflector kernel(tuned)/fused = {:.2}", kernel / fused);
+    println!("reflector kernel(12x2)/fused  = {:.2} (the paper's fixed size)", kernel_12x2 / fused);
+    println!("reflector kernel/blocked      = {:.2}", kernel / blocked);
+    println!(
+        "reflector/rotation kernel = {:.2} (paper: < 1, cause open)",
+        kernel / rot_kernel
+    );
+
+    let mut ok = true;
+    let mut check = |name: &str, cond: bool| {
+        println!("  [{}] {name}", if cond { "pass" } else { "FAIL" });
+        ok &= cond;
+    };
+    check("reflector kernel beats reflector blocked", kernel > blocked);
+    check("reflector kernel beats reflector fused", kernel > fused);
+    if !ok {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,81 @@
+//! Microbenchmarks of the hot paths: per-kernel-size rates on a resident
+//! panel, the DGEMM substrate, packing overhead and stream-build overhead.
+//! Used by the §Perf optimization loop. `cargo bench --bench micro`.
+
+use rotseq::bench_harness::{measure, MeasureConfig};
+use rotseq::blocking::KernelConfig;
+use rotseq::gemm::{dgemm, GemmConfig};
+use rotseq::kernel::apply_kernel_packed;
+use rotseq::matrix::Matrix;
+use rotseq::pack::PackedMatrix;
+use rotseq::rot::{OpSequence, RotationSequence};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mc = if quick {
+        MeasureConfig::quick()
+    } else {
+        MeasureConfig {
+            warmup: 1,
+            reps: 5,
+            time_budget: 30.0,
+        }
+    };
+
+    // --- wave-kernel rates on an L2-resident panel ------------------------
+    let (m, n, k) = if quick { (128, 240, 36) } else { (256, 480, 60) };
+    let seq = RotationSequence::random(n, k, 42);
+    let flops = OpSequence::flops(&seq, m);
+    let base = Matrix::random(m, n, 7);
+    println!("# wave kernel on resident panel, m={m} n={n} k={k}");
+    println!("{:>4} {:>4} {:>10}", "m_r", "k_r", "Gflop/s");
+    for &(mr, kr) in rotseq::kernel::SUPPORTED_KERNELS {
+        if mr == 1 {
+            continue;
+        }
+        let cfg = KernelConfig {
+            mr,
+            kr,
+            mb: m,
+            kb: k.min(60),
+            nb: 216,
+            threads: 1,
+        };
+        let mut pm = PackedMatrix::from_matrix(&base, cfg.mb, cfg.mr);
+        let meas = measure(&mc, |_| apply_kernel_packed(&mut pm, &seq, &cfg).unwrap());
+        println!(
+            "{mr:>4} {kr:>4} {:>10.3}",
+            flops as f64 / meas.median_s / 1e9
+        );
+    }
+
+    // --- DGEMM substrate (the roofline yardstick) -------------------------
+    let sz = if quick { 256 } else { 512 };
+    let a = Matrix::random(sz, sz, 1);
+    let b = Matrix::random(sz, sz, 2);
+    let mut c = Matrix::zeros(sz, sz);
+    let gflops = 2.0 * (sz as f64).powi(3);
+    let meas = measure(&mc, |_| {
+        dgemm(1.0, &a, &b, 0.0, &mut c, &GemmConfig::default())
+    });
+    println!("\n# dgemm {sz}x{sz}x{sz}: {:.3} Gflop/s", gflops / meas.median_s / 1e9);
+
+    // --- packing overhead --------------------------------------------------
+    let big = Matrix::random(2048, 512, 3);
+    let meas = measure(&mc, |_| {
+        std::hint::black_box(PackedMatrix::from_matrix(&big, 512, 16));
+    });
+    let bytes = (2048 * 512 * 8) as f64;
+    println!(
+        "# pack 2048x512: {:.3} GB/s ({:.2} ms)",
+        bytes / meas.median_s / 1e9,
+        meas.median_s * 1e3
+    );
+
+    // --- wave-stream build overhead ----------------------------------------
+    let seq2 = RotationSequence::random(1024, 60, 5);
+    let meas = measure(&mc, |_| {
+        std::hint::black_box(rotseq::kernel::WaveStream::pack(&seq2, 0, 2, 1, 1000));
+    });
+    println!("# stream pack 1000 waves x 2: {:.2} us", meas.median_s * 1e6);
+}

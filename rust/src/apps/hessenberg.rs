@@ -1,0 +1,384 @@
+//! Symmetric eigensolver: Givens tridiagonalization + implicit shifted QR
+//! with delayed rotation-sequence application.
+//!
+//! This is the paper's flagship consumer (§1, §9): the implicit QR
+//! algorithm produces one sequence of `n-1` adjacent rotations per sweep,
+//! and the eigenvector matrix update — the `O(n³)` part — is exactly
+//! "apply `k` delayed sequences to an `m x n` matrix". We batch
+//! `DELAYED_SWEEPS` sweeps and apply them with [`crate::kernel`].
+
+use crate::blocking::KernelConfig;
+use crate::kernel::apply_kernel;
+use crate::matrix::Matrix;
+use crate::rot::{Givens, RotationSequence};
+use anyhow::{bail, Result};
+
+/// Number of QR sweeps whose rotations are accumulated before one blocked
+/// application to the eigenvector matrix (the paper's "delayed sequences",
+/// §5.1: `k` small relative to `n`).
+pub const DELAYED_SWEEPS: usize = 24;
+
+/// A symmetric tridiagonal matrix: diagonal `d`, off-diagonal `e`.
+#[derive(Clone, Debug)]
+pub struct Tridiagonal {
+    pub d: Vec<f64>,
+    pub e: Vec<f64>,
+}
+
+impl Tridiagonal {
+    pub fn n(&self) -> usize {
+        self.d.len()
+    }
+
+    /// Dense form (for tests / residual checks).
+    pub fn to_matrix(&self) -> Matrix {
+        let n = self.n();
+        Matrix::from_fn(n, n, |i, j| {
+            if i == j {
+                self.d[i]
+            } else if i + 1 == j {
+                self.e[i]
+            } else if j + 1 == i {
+                self.e[j]
+            } else {
+                0.0
+            }
+        })
+    }
+}
+
+/// Reduce a symmetric matrix to tridiagonal form with Givens rotations,
+/// accumulating the transform in `q` (so `A = Q T Qᵀ`).
+///
+/// Rotation-based (rather than Householder) reduction is `O(n³)` with a
+/// larger constant, but it exercises the structure-preserving property the
+/// paper cites: each rotation annihilates one sub-diagonal entry without
+/// disturbing the already-created zeros.
+pub fn tridiagonalize(a: &Matrix) -> Result<(Tridiagonal, Matrix)> {
+    if a.rows() != a.cols() {
+        bail!("tridiagonalize requires a square matrix");
+    }
+    let n = a.rows();
+    let mut t = a.clone();
+    let mut q = Matrix::identity(n);
+    // Zero column j below the first sub-diagonal, bottom-up, with rotations
+    // in adjacent row pairs (i-1, i).
+    for j in 0..n.saturating_sub(2) {
+        for i in (j + 2..n).rev() {
+            let x = t.get(i - 1, j);
+            let z = t.get(i, j);
+            if z == 0.0 {
+                continue;
+            }
+            let (g, _) = Givens::zeroing(x, z);
+            rotate_sym(&mut t, i - 1, g);
+            // Accumulate on Q's columns (right-multiplication).
+            let (qx, qy) = q.two_cols_mut(i - 1, i);
+            crate::rot::rot(qx, qy, g.c, g.s);
+        }
+    }
+    let d = (0..n).map(|i| t.get(i, i)).collect();
+    let e = (0..n.saturating_sub(1)).map(|i| t.get(i + 1, i)).collect();
+    Ok((Tridiagonal { d, e }, q))
+}
+
+/// Symmetric similarity update `T ← Gᵀ T G` on the adjacent pair
+/// `(p, p+1)` of rows and columns.
+fn rotate_sym(t: &mut Matrix, p: usize, g: Givens) {
+    let n = t.rows();
+    // Columns p, p+1.
+    {
+        let (x, y) = t.two_cols_mut(p, p + 1);
+        crate::rot::rot(x, y, g.c, g.s);
+    }
+    // Rows p, p+1 (same coefficients; symmetric transform).
+    for j in 0..n {
+        let u = t.get(p, j);
+        let v = t.get(p + 1, j);
+        let (nu, nv) = g.apply(u, v);
+        t.set(p, j, nu);
+        t.set(p + 1, j, nv);
+    }
+}
+
+/// Result of the symmetric eigensolve.
+pub struct EigenResult {
+    /// Eigenvalues, ascending.
+    pub eigenvalues: Vec<f64>,
+    /// Orthogonal eigenvector matrix (column `i` pairs with
+    /// `eigenvalues[i]`).
+    pub q: Matrix,
+    /// QR sweeps performed.
+    pub sweeps: usize,
+    /// Delayed-batch applications of rotation sequences to `q`.
+    pub batches: usize,
+}
+
+/// Full symmetric eigensolver: tridiagonalize, then implicit shifted QR
+/// with eigenvector accumulation through delayed rotation sequences.
+pub fn symmetric_eigen(a: &Matrix, cfg: &KernelConfig) -> Result<EigenResult> {
+    let (mut t, mut q) = tridiagonalize(a)?;
+    let n = t.n();
+    if n == 0 {
+        return Ok(EigenResult {
+            eigenvalues: vec![],
+            q,
+            sweeps: 0,
+            batches: 0,
+        });
+    }
+    if n == 1 {
+        return Ok(EigenResult {
+            eigenvalues: t.d.clone(),
+            q,
+            sweeps: 0,
+            batches: 0,
+        });
+    }
+
+    let eps = f64::EPSILON;
+    let max_sweeps = 60 * n;
+    let mut sweeps = 0;
+    let mut batches = 0;
+    // Pending sequences: each sweep contributes one column of (c, s).
+    let mut pending: Vec<(Vec<f64>, Vec<f64>)> = Vec::new();
+
+    let mut hi = n - 1;
+    while hi > 0 {
+        // Deflate converged off-diagonals at the active bottom.
+        while hi > 0 && t.e[hi - 1].abs() <= eps * (t.d[hi - 1].abs() + t.d[hi].abs()) {
+            t.e[hi - 1] = 0.0;
+            hi -= 1;
+        }
+        if hi == 0 {
+            break;
+        }
+        // Active block [lo, hi].
+        let mut lo = hi;
+        while lo > 0 && t.e[lo - 1].abs() > eps * (t.d[lo - 1].abs() + t.d[lo].abs()) {
+            lo -= 1;
+        }
+
+        if sweeps >= max_sweeps {
+            bail!("implicit QR failed to converge after {max_sweeps} sweeps");
+        }
+        let seq = qr_sweep(&mut t, lo, hi);
+        pending.push(seq);
+        sweeps += 1;
+
+        if pending.len() == DELAYED_SWEEPS {
+            apply_pending(&mut q, &mut pending, cfg)?;
+            batches += 1;
+        }
+    }
+    if !pending.is_empty() {
+        apply_pending(&mut q, &mut pending, cfg)?;
+        batches += 1;
+    }
+
+    // Sort ascending, permuting eigenvector columns accordingly.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| t.d[i].partial_cmp(&t.d[j]).unwrap());
+    let eigenvalues: Vec<f64> = order.iter().map(|&i| t.d[i]).collect();
+    let q_sorted = Matrix::from_fn(n, n, |i, j| q.get(i, order[j]));
+
+    Ok(EigenResult {
+        eigenvalues,
+        q: q_sorted,
+        sweeps,
+        batches,
+    })
+}
+
+/// One implicit Wilkinson-shifted QR sweep on the active block `[lo, hi]`
+/// of the tridiagonal. Returns the sweep's rotations as full-length
+/// `(c, s)` columns (identity outside the active block).
+fn qr_sweep(t: &mut Tridiagonal, lo: usize, hi: usize) -> (Vec<f64>, Vec<f64>) {
+    let n = t.n();
+    let mut cs = vec![1.0; n - 1];
+    let mut sn = vec![0.0; n - 1];
+
+    // Wilkinson shift from the trailing 2x2.
+    let a = t.d[hi - 1];
+    let b = t.e[hi - 1];
+    let c = t.d[hi];
+    let delta = (a - c) / 2.0;
+    let denom = delta.abs() + (delta * delta + b * b).sqrt();
+    let mu = if denom == 0.0 {
+        c
+    } else {
+        c - delta.signum() * b * b / denom
+    };
+
+    let mut x = t.d[lo] - mu;
+    let mut z = t.e[lo];
+    let mut bulge = 0.0;
+    for i in lo..hi {
+        let (g, _) = Givens::zeroing(x, z);
+        cs[i] = g.c;
+        sn[i] = g.s;
+        // Similarity on the tridiagonal: update the 3x3 window around i.
+        // Entries: d[i], d[i+1], e[i], plus e[i-1] (row above) and the
+        // bulge at (i+2, i).
+        if i > lo {
+            // e[i-1] pairs with the bulge from the previous step.
+            let (ne, _nb) = g.apply(t.e[i - 1], bulge);
+            t.e[i - 1] = ne;
+        }
+        let di = t.d[i];
+        let di1 = t.d[i + 1];
+        let ei = t.e[i];
+        // Column transform then row transform of the 2x2 block
+        // [[di, ei], [ei, di1]]: new = Gᵀ * M * G.
+        let m00 = g.c * (g.c * di + g.s * ei) + g.s * (g.c * ei + g.s * di1);
+        let m01 = -g.s * (g.c * di + g.s * ei) + g.c * (g.c * ei + g.s * di1);
+        let m11 = -g.s * (-g.s * di + g.c * ei) + g.c * (-g.s * ei + g.c * di1);
+        t.d[i] = m00;
+        t.e[i] = m01;
+        t.d[i + 1] = m11;
+        if i + 1 < hi {
+            // The rotation also touches e[i+1] and creates the next bulge.
+            let ei1 = t.e[i + 1];
+            let (nb, ne1) = g.apply(0.0, ei1);
+            bulge = nb;
+            t.e[i + 1] = ne1;
+            x = t.e[i];
+            z = bulge;
+        }
+    }
+    (cs, sn)
+}
+
+/// Apply the pending sweep sequences to the eigenvector matrix with the
+/// paper's kernel, then clear the batch.
+fn apply_pending(
+    q: &mut Matrix,
+    pending: &mut Vec<(Vec<f64>, Vec<f64>)>,
+    cfg: &KernelConfig,
+) -> Result<()> {
+    let n = q.cols();
+    let k = pending.len();
+    let seq = RotationSequence::from_fn(n, k, |i, p| Givens {
+        c: pending[p].0[i],
+        s: pending[p].1[i],
+    });
+    pending.clear();
+    apply_kernel(q, &seq, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{orthogonality_error, rel_error, Matrix, Rng64};
+
+    fn random_symmetric(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng64::new(seed);
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.next_signed();
+                a.set(i, j, v);
+                a.set(j, i, v);
+            }
+        }
+        a
+    }
+
+    fn small_cfg() -> KernelConfig {
+        KernelConfig {
+            mr: 8,
+            kr: 2,
+            mb: 32,
+            kb: 8,
+            nb: 16,
+            threads: 1,
+        }
+    }
+
+    #[test]
+    fn tridiagonalize_preserves_similarity() {
+        let a = random_symmetric(12, 1);
+        let (t, q) = tridiagonalize(&a).unwrap();
+        assert!(orthogonality_error(&q) < 1e-12);
+        // Q T Qᵀ = A
+        let recon = q.matmul(&t.to_matrix()).matmul(&q.transpose());
+        assert!(rel_error(&recon, &a) < 1e-12, "err={}", rel_error(&recon, &a));
+    }
+
+    #[test]
+    fn tridiagonal_is_actually_tridiagonal() {
+        let a = random_symmetric(9, 2);
+        let (t, _q) = tridiagonalize(&a).unwrap();
+        let dense = t.to_matrix();
+        for i in 0..9usize {
+            for j in 0..9usize {
+                if i.abs_diff(j) > 1 {
+                    assert_eq!(dense.get(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eigen_reconstructs_matrix() {
+        for n in [2, 3, 8, 17] {
+            let a = random_symmetric(n, n as u64);
+            let r = symmetric_eigen(&a, &small_cfg()).unwrap();
+            assert!(orthogonality_error(&r.q) < 1e-11, "n={n}");
+            // A = Q diag(w) Qᵀ
+            let mut lam = Matrix::zeros(n, n);
+            for i in 0..n {
+                lam.set(i, i, r.eigenvalues[i]);
+            }
+            let recon = r.q.matmul(&lam).matmul(&r.q.transpose());
+            assert!(
+                rel_error(&recon, &a) < 1e-10,
+                "n={n} err={}",
+                rel_error(&recon, &a)
+            );
+        }
+    }
+
+    #[test]
+    fn eigenvalues_sorted_and_trace_preserved() {
+        let n = 14;
+        let a = random_symmetric(n, 7);
+        let r = symmetric_eigen(&a, &small_cfg()).unwrap();
+        let mut trace = 0.0;
+        for i in 0..n {
+            trace += a.get(i, i);
+        }
+        let sum: f64 = r.eigenvalues.iter().sum();
+        assert!((sum - trace).abs() < 1e-10);
+        for w in r.eigenvalues.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        assert!(r.sweeps > 0);
+        assert!(r.batches > 0);
+    }
+
+    #[test]
+    fn known_eigenvalues_2x2() {
+        // [[2, 1], [1, 2]] -> eigenvalues 1, 3.
+        let mut a = Matrix::zeros(2, 2);
+        a.set(0, 0, 2.0);
+        a.set(1, 1, 2.0);
+        a.set(0, 1, 1.0);
+        a.set(1, 0, 1.0);
+        let r = symmetric_eigen(&a, &small_cfg()).unwrap();
+        assert!((r.eigenvalues[0] - 1.0).abs() < 1e-12);
+        assert!((r.eigenvalues[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diagonal_matrix_is_immediate() {
+        let mut a = Matrix::zeros(5, 5);
+        for i in 0..5 {
+            a.set(i, i, i as f64);
+        }
+        let r = symmetric_eigen(&a, &small_cfg()).unwrap();
+        for i in 0..5 {
+            assert!((r.eigenvalues[i] - i as f64).abs() < 1e-13);
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! One-sided Jacobi SVD with the Brent–Luk odd-even transposition ordering.
+//!
+//! Classic cyclic Jacobi pairs arbitrary columns, which does not fit the
+//! paper's adjacent-pair `(C, S)` sequence format. The Brent–Luk ordering
+//! fixes this: every half-sweep rotates the *adjacent* pairs of one parity
+//! — exactly one rotation sequence in the paper's format, applied through
+//! [`crate::kernel`] — and then swaps each pair's columns, so that over
+//! `n` half-sweeps every column pair meets (the odd-even transposition
+//! network). Convergence of this parallel ordering is classical
+//! (Brent & Luk, 1985).
+//!
+//! The final column order is whatever the transposition network left; the
+//! sort-by-σ at the end absorbs it (work and V always receive identical
+//! column operations, so they stay consistent).
+
+use crate::blocking::KernelConfig;
+use crate::kernel::apply_kernel;
+use crate::matrix::Matrix;
+use crate::rot::{Givens, RotationSequence};
+use anyhow::{bail, Result};
+
+/// SVD output: `A = U Σ Vᵀ`.
+pub struct SvdResult {
+    /// Left singular vectors, `m x n` (thin).
+    pub u: Matrix,
+    /// Singular values, descending.
+    pub sigma: Vec<f64>,
+    /// Right singular vectors, `n x n`.
+    pub v: Matrix,
+    /// Half-sweeps used.
+    pub half_sweeps: usize,
+}
+
+/// One-sided Jacobi SVD of an `m x n` matrix (`m >= n`).
+pub fn jacobi_svd(a: &Matrix, cfg: &KernelConfig) -> Result<SvdResult> {
+    let m = a.rows();
+    let n = a.cols();
+    if m < n {
+        bail!("jacobi_svd requires m >= n (got {m} x {n})");
+    }
+    if n == 0 {
+        return Ok(SvdResult {
+            u: Matrix::zeros(m, 0),
+            sigma: vec![],
+            v: Matrix::zeros(0, 0),
+            half_sweeps: 0,
+        });
+    }
+    let mut work = a.clone();
+    let mut v = Matrix::identity(n);
+    let tol = 1e-14;
+    // A full round of the transposition network is n half-sweeps; allow a
+    // generous number of rounds.
+    let max_half_sweeps = 40 * n.max(2);
+    let mut half_sweeps = 0;
+    // Number of consecutive rotation-free half-sweeps; n of them in a row
+    // means every pair has been inspected and found converged.
+    let mut quiet = 0;
+
+    if n >= 2 {
+        let mut parity = 0usize;
+        while quiet < n {
+            let mut cs = vec![1.0; n - 1];
+            let mut sn = vec![0.0; n - 1];
+            let mut any = false;
+            let mut i = parity;
+            while i + 1 < n {
+                let (app, aqq, apq) = gram_entries(&work, i, i + 1);
+                if apq.abs() > tol * (app * aqq).sqrt().max(f64::MIN_POSITIVE) {
+                    let g = jacobi_rotation(app, aqq, apq);
+                    cs[i] = g.c;
+                    sn[i] = g.s;
+                    any = true;
+                }
+                i += 2;
+            }
+            if any {
+                let seq = RotationSequence::from_fn(n, 1, |ii, _| Givens {
+                    c: cs[ii],
+                    s: sn[ii],
+                });
+                // The paper's kernel on both the data and the accumulated V.
+                apply_kernel(&mut work, &seq, cfg)?;
+                apply_kernel(&mut v, &seq, cfg)?;
+                quiet = 0;
+            } else {
+                quiet += 1;
+            }
+            // Transposition step: swap every adjacent pair of this parity in
+            // both matrices, advancing the odd-even network.
+            let mut i = parity;
+            while i + 1 < n {
+                swap_cols(&mut work, i, i + 1);
+                swap_cols(&mut v, i, i + 1);
+                i += 2;
+            }
+            parity ^= 1;
+            half_sweeps += 1;
+            if half_sweeps >= max_half_sweeps {
+                bail!("Jacobi SVD failed to converge after {max_half_sweeps} half-sweeps");
+            }
+        }
+    }
+
+    // Singular values = column norms of the rotated A; U = A Σ⁻¹.
+    let mut sigma: Vec<f64> = (0..n)
+        .map(|j| work.col(j).iter().map(|x| x * x).sum::<f64>().sqrt())
+        .collect();
+    // Sort descending, permuting U and V columns (this also absorbs the
+    // transposition network's residual permutation).
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| sigma[j].partial_cmp(&sigma[i]).unwrap());
+    let u = Matrix::from_fn(m, n, |i, jj| {
+        let j = order[jj];
+        let s = sigma[j];
+        if s > 0.0 {
+            work.get(i, j) / s
+        } else {
+            0.0
+        }
+    });
+    let v_sorted = Matrix::from_fn(n, n, |i, jj| v.get(i, order[jj]));
+    sigma.sort_by(|a, b| b.partial_cmp(a).unwrap());
+
+    Ok(SvdResult {
+        u,
+        sigma,
+        v: v_sorted,
+        half_sweeps,
+    })
+}
+
+fn swap_cols(a: &mut Matrix, p: usize, q: usize) {
+    let (x, y) = a.two_cols_mut(p, q);
+    x.swap_with_slice(y);
+}
+
+/// Gram entries for the column pair `(p, q)`.
+fn gram_entries(a: &Matrix, p: usize, q: usize) -> (f64, f64, f64) {
+    let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+    let cp = a.col(p);
+    let cq = a.col(q);
+    for i in 0..a.rows() {
+        app += cp[i] * cp[i];
+        aqq += cq[i] * cq[i];
+        apq += cp[i] * cq[i];
+    }
+    (app, aqq, apq)
+}
+
+/// The Jacobi rotation diagonalizing `[[app, apq], [apq, aqq]]` under our
+/// column convention `J = [[c, -s], [s, c]]` (small-magnitude root of
+/// `t² − 2τt − 1 = 0`, `τ = (aqq − app)/(2·apq)` — Rutishauser's stable
+/// formulation adapted to the sign of our `apply`).
+fn jacobi_rotation(app: f64, aqq: f64, apq: f64) -> Givens {
+    let tau = (aqq - app) / (2.0 * apq);
+    // Small-magnitude root: t = -sgn(τ) / (|τ| + sqrt(1 + τ²)).
+    let t = if tau >= 0.0 {
+        -1.0 / (tau + (1.0 + tau * tau).sqrt())
+    } else {
+        1.0 / (-tau + (1.0 + tau * tau).sqrt())
+    };
+    let c = 1.0 / (1.0 + t * t).sqrt();
+    Givens { c, s: t * c }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{orthogonality_error, rel_error, Matrix};
+
+    fn small_cfg() -> KernelConfig {
+        KernelConfig {
+            mr: 8,
+            kr: 2,
+            mb: 32,
+            kb: 8,
+            nb: 16,
+            threads: 1,
+        }
+    }
+
+    #[test]
+    fn jacobi_rotation_zeroes_offdiag() {
+        for (app, aqq, apq) in [(1.0, 0.5, 0.3), (0.1, 2.0, -0.9), (3.0, 3.0, 1.0)] {
+            let g = jacobi_rotation(app, aqq, apq);
+            // Off-diagonal of Jᵀ G J with J = [[c,-s],[s,c]].
+            let off = apq * (g.c * g.c - g.s * g.s) + g.c * g.s * (aqq - app);
+            assert!(off.abs() < 1e-12, "app={app} aqq={aqq} apq={apq}: {off}");
+        }
+    }
+
+    #[test]
+    fn svd_reconstructs() {
+        for (m, n, seed) in [(8, 8, 1u64), (12, 7, 2), (20, 5, 3), (6, 6, 4)] {
+            let a = Matrix::random(m, n, seed);
+            let r = jacobi_svd(&a, &small_cfg()).unwrap();
+            assert!(orthogonality_error(&r.v) < 1e-11, "V orth m={m} n={n}");
+            assert!(orthogonality_error(&r.u) < 1e-10, "U orth m={m} n={n}");
+            // A = U Σ Vᵀ
+            let mut us = r.u.clone();
+            for j in 0..n {
+                for i in 0..m {
+                    us.set(i, j, us.get(i, j) * r.sigma[j]);
+                }
+            }
+            let recon = us.matmul(&r.v.transpose());
+            assert!(
+                rel_error(&recon, &a) < 1e-10,
+                "recon m={m} n={n}: {}",
+                rel_error(&recon, &a)
+            );
+        }
+    }
+
+    #[test]
+    fn singular_values_descending_nonnegative() {
+        let a = Matrix::random(10, 6, 5);
+        let r = jacobi_svd(&a, &small_cfg()).unwrap();
+        for w in r.sigma.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        assert!(r.sigma.iter().all(|&s| s >= 0.0));
+        assert!(r.half_sweeps > 0);
+    }
+
+    #[test]
+    fn known_singular_values_diagonal() {
+        let mut a = Matrix::zeros(4, 4);
+        for (i, s) in [3.0, 1.0, 4.0, 2.0].iter().enumerate() {
+            a.set(i, i, *s);
+        }
+        let r = jacobi_svd(&a, &small_cfg()).unwrap();
+        let expect = [4.0, 3.0, 2.0, 1.0];
+        for i in 0..4 {
+            assert!((r.sigma[i] - expect[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn frobenius_norm_preserved_in_sigma() {
+        let a = Matrix::random(9, 5, 6);
+        let r = jacobi_svd(&a, &small_cfg()).unwrap();
+        let f2: f64 = r.sigma.iter().map(|s| s * s).sum();
+        let af2 = crate::matrix::frobenius_norm(&a).powi(2);
+        assert!((f2 - af2).abs() / af2 < 1e-12);
+    }
+
+    #[test]
+    fn wide_matrix_rejected() {
+        let a = Matrix::random(3, 5, 7);
+        assert!(jacobi_svd(&a, &small_cfg()).is_err());
+    }
+
+    #[test]
+    fn single_column() {
+        let a = Matrix::random(5, 1, 8);
+        let r = jacobi_svd(&a, &small_cfg()).unwrap();
+        let norm = crate::matrix::frobenius_norm(&a);
+        assert!((r.sigma[0] - norm).abs() < 1e-13);
+    }
+}

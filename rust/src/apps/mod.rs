@@ -1,0 +1,17 @@
+//! Downstream applications that motivate the paper (§1, §9): algorithms
+//! that *must* use rotations (reflectors would destroy the structure they
+//! preserve) and therefore need fast rotation-sequence application.
+//!
+//! * [`hessenberg`] — symmetric tridiagonal implicit-QR eigensolver with
+//!   *delayed* rotation sequences: each QR sweep emits one sequence; the
+//!   accumulated batch is applied to the eigenvector matrix with the
+//!   paper's kernel (`k` small, `m = n` large — exactly the workload §5.1
+//!   calls out).
+//! * [`jacobi_svd`] — one-sided Jacobi SVD with odd-even (adjacent-pair)
+//!   orderings, batching the right-singular-vector updates.
+
+pub mod hessenberg;
+pub mod jacobi_svd;
+
+pub use hessenberg::{symmetric_eigen, tridiagonalize, EigenResult, Tridiagonal};
+pub use jacobi_svd::{jacobi_svd, SvdResult};

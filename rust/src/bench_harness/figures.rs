@@ -1,0 +1,448 @@
+//! Regenerators for every figure/table in the paper's evaluation (§8 +
+//! §1.2). Each returns raw rows and prints the series the paper plots.
+
+use super::measure::{measure, MeasureConfig};
+use crate::blocking::{plan, CacheParams};
+use crate::kernel::{
+    apply_blocked, apply_fused, apply_kernel, apply_kernel_packed, Algorithm, BlockConfig,
+};
+use crate::matrix::Matrix;
+use crate::pack::PackedMatrix;
+use crate::parallel::speedup_model::{modeled_gflops, modeled_speedup, MachineModel};
+use crate::parallel::{apply_parallel_packed, partition_rows};
+use crate::rot::{
+    apply_naive, apply_reflector_sequence_naive, OpSequence, ReflectorSequence, RotationSequence,
+};
+use crate::simulator::{iolb, simulate_algorithm, HierarchySpec};
+
+/// One point of Fig 5: serial flop rate of a variant at one size.
+#[derive(Clone, Debug)]
+pub struct Fig5Row {
+    pub algo: &'static str,
+    pub n: usize,
+    pub gflops: f64,
+    /// Runtime relative to rs_kernel_v2 (the bottom panel of Fig 5).
+    pub rel_runtime: f64,
+}
+
+// Rate from the *minimum* time: this container's shared CPU shows ±30%
+// interference noise, and min-of-k is the standard robust estimator for
+// compute-bound kernels.
+fn gflops_of(flops: u64, m: &super::Measurement) -> f64 {
+    flops as f64 / m.min_s / 1e9
+}
+
+/// Fig 5: serial performance of all variants; `k = 180`, `m = n` over the
+/// sweep. Returns rows grouped per `n`.
+pub fn fig5_serial(ns: &[usize], k: usize, mc: &MeasureConfig) -> Vec<Fig5Row> {
+    let mut rows = Vec::new();
+    let cache = CacheParams::detect();
+    let cfg = plan(16, 2, cache, 1);
+
+    for &n in ns {
+        let m = n;
+        let seq = RotationSequence::random(n, k, 42);
+        let flops = seq.flops(m);
+        let base = Matrix::random(m, n, 7);
+
+        let mut results: Vec<(&'static str, f64)> = Vec::new();
+
+        // rs_unoptimized
+        let mut a = base.clone();
+        let meas = measure(mc, |_| apply_naive(&mut a, &seq));
+        results.push(("rs_unoptimized", gflops_of(flops, &meas)));
+
+        // rs_blocked
+        let mut a = base.clone();
+        let bc = BlockConfig {
+            mb: cfg.mb,
+            kb: cfg.kb,
+            nb: cfg.nb,
+        };
+        let meas = measure(mc, |_| apply_blocked(&mut a, &seq, &bc));
+        results.push(("rs_blocked", gflops_of(flops, &meas)));
+
+        // rs_fused
+        let mut a = base.clone();
+        let meas = measure(mc, |_| apply_fused(&mut a, &seq, usize::MAX));
+        results.push(("rs_fused", gflops_of(flops, &meas)));
+
+        // rs_gemm
+        let mut a = base.clone();
+        let meas = measure(mc, |_| {
+            crate::gemm::apply_gemm(&mut a, &seq, cfg.nb.max(cfg.kb), cfg.mb)
+        });
+        results.push(("rs_gemm", gflops_of(flops, &meas)));
+
+        // rs_kernel (packs per call)
+        let mut a = base.clone();
+        let meas = measure(mc, |_| apply_kernel(&mut a, &seq, &cfg).unwrap());
+        results.push(("rs_kernel", gflops_of(flops, &meas)));
+
+        // rs_kernel_v2 (pre-packed)
+        let mut pm = PackedMatrix::from_matrix(&base, cfg.mb, cfg.mr);
+        let meas = measure(mc, |_| apply_kernel_packed(&mut pm, &seq, &cfg).unwrap());
+        let v2_time = meas.median_s;
+        results.push(("rs_kernel_v2", gflops_of(flops, &meas)));
+
+        for (algo, gflops) in results {
+            let rel = (flops as f64 / gflops / 1e9) / v2_time;
+            rows.push(Fig5Row {
+                algo,
+                n,
+                gflops,
+                rel_runtime: rel,
+            });
+        }
+    }
+    rows
+}
+
+/// Print Fig 5 rows in the paper's layout (one series per variant).
+pub fn print_fig5(rows: &[Fig5Row]) {
+    println!("# Fig 5 — serial flop rates (Gflop/s), k = 180, m = n");
+    println!("{:<16} {:>6} {:>10} {:>12}", "algorithm", "n", "Gflop/s", "t/t_kernel_v2");
+    for r in rows {
+        println!(
+            "{:<16} {:>6} {:>10.3} {:>12.3}",
+            r.algo, r.n, r.gflops, r.rel_runtime
+        );
+    }
+}
+
+/// One point of Fig 6: kernel-size sweep.
+#[derive(Clone, Debug)]
+pub struct Fig6Row {
+    pub mr: usize,
+    pub kr: usize,
+    pub n: usize,
+    pub gflops: f64,
+}
+
+/// Fig 6: performance of rs_kernel_v2 for different kernel sizes (each with
+/// its own tuned block sizes, as in the paper).
+pub fn fig6_kernel_sizes(ns: &[usize], k: usize, mc: &MeasureConfig) -> Vec<Fig6Row> {
+    // The paper's eight sizes plus two wider extensions ((24,2), (32,2))
+    // our AVX2 target can exploit.
+    let kernels: &[(usize, usize)] = &[
+        (4, 2),
+        (8, 2),
+        (8, 5),
+        (12, 2),
+        (12, 3),
+        (16, 1),
+        (16, 2),
+        (16, 4),
+        (24, 2),
+        (32, 2),
+    ];
+    let cache = CacheParams::detect();
+    let mut rows = Vec::new();
+    for &n in ns {
+        let m = n;
+        let seq = RotationSequence::random(n, k, 42);
+        let flops = seq.flops(m);
+        let base = Matrix::random(m, n, 7);
+        for &(mr, kr) in kernels {
+            let cfg = plan(mr, kr, cache, 1);
+            let mut pm = PackedMatrix::from_matrix(&base, cfg.mb, cfg.mr);
+            let meas = measure(mc, |_| apply_kernel_packed(&mut pm, &seq, &cfg).unwrap());
+            rows.push(Fig6Row {
+                mr,
+                kr,
+                n,
+                gflops: gflops_of(flops, &meas),
+            });
+        }
+    }
+    rows
+}
+
+pub fn print_fig6(rows: &[Fig6Row]) {
+    println!("# Fig 6 — rs_kernel_v2 flop rate by kernel size (Gflop/s)");
+    println!("{:>4} {:>4} {:>6} {:>10}", "m_r", "k_r", "n", "Gflop/s");
+    for r in rows {
+        println!("{:>4} {:>4} {:>6} {:>10.3}", r.mr, r.kr, r.n, r.gflops);
+    }
+}
+
+/// One point of Fig 7: parallel scaling.
+#[derive(Clone, Debug)]
+pub struct Fig7Row {
+    pub n: usize,
+    pub threads: usize,
+    /// Measured on this container (1 physical core: expect flat).
+    pub measured_gflops: f64,
+    /// Modeled on the calibrated multicore machine.
+    pub modeled_gflops: f64,
+    pub modeled_speedup: f64,
+}
+
+/// Fig 7: parallel flop rate and speedup. Measures the real scheduler at
+/// each thread count (correctness + 1-core baseline) and reports the
+/// calibrated analytical model for the multicore shape (see DESIGN.md
+/// §Substitutions).
+pub fn fig7_parallel(ns: &[usize], k: usize, threads: &[usize], mc: &MeasureConfig) -> Vec<Fig7Row> {
+    let cache = CacheParams::detect();
+    let cfg1 = plan(16, 2, cache, 1);
+    let mut rows = Vec::new();
+    for &n in ns {
+        let m = n;
+        let seq = RotationSequence::random(n, k, 42);
+        let flops = seq.flops(m);
+        let base = Matrix::random(m, n, 7);
+
+        // Calibrate the model with the measured single-thread rate.
+        let mut pm = PackedMatrix::from_matrix(&base, cfg1.mb, cfg1.mr);
+        let meas1 = measure(mc, |_| apply_kernel_packed(&mut pm, &seq, &cfg1).unwrap());
+        let g1 = gflops_of(flops, &meas1);
+        let model = MachineModel::calibrated(g1, cfg1.mr, cfg1.kr, cfg1.nb);
+
+        for &t in threads {
+            let mut cfg = cfg1;
+            cfg.threads = t;
+            let parts = partition_rows(m, t, cfg.mr);
+            let mut pm = PackedMatrix::from_matrix(&base, parts[0].1.max(1), cfg.mr);
+            let meas = measure(mc, |_| apply_parallel_packed(&mut pm, &seq, &cfg).unwrap());
+            rows.push(Fig7Row {
+                n,
+                threads: t,
+                measured_gflops: gflops_of(flops, &meas),
+                modeled_gflops: modeled_gflops(&model, m, n, k, t),
+                modeled_speedup: modeled_speedup(&model, m, n, k, t),
+            });
+        }
+    }
+    rows
+}
+
+pub fn print_fig7(rows: &[Fig7Row]) {
+    println!("# Fig 7 — parallel scaling (measured on this container + calibrated model)");
+    println!(
+        "{:>6} {:>8} {:>14} {:>14} {:>14}",
+        "n", "threads", "meas Gflop/s", "model Gflop/s", "model speedup"
+    );
+    for r in rows {
+        println!(
+            "{:>6} {:>8} {:>14.3} {:>14.3} {:>14.2}",
+            r.n, r.threads, r.measured_gflops, r.modeled_gflops, r.modeled_speedup
+        );
+    }
+}
+
+/// One point of Fig 8: reflector variants.
+#[derive(Clone, Debug)]
+pub struct Fig8Row {
+    pub algo: &'static str,
+    pub n: usize,
+    pub gflops: f64,
+}
+
+/// Fig 8: the algorithms applied to 2x2 reflectors instead of rotations.
+/// The paper drops the kernel to `m_r = 12, k_r = 2` (§8.4: reflectors
+/// need one more scalar per op, shrinking its 16-register budget); our
+/// SIMD kernels hold the broadcast coefficients differently, and the
+/// sweep below picks the best of {12, 16, 24} x 2 like the paper tuned
+/// per-kernel block sizes in Fig 6. Both rows are reported.
+pub fn fig8_reflectors(ns: &[usize], k: usize, mc: &MeasureConfig) -> Vec<Fig8Row> {
+    let cache = CacheParams::detect();
+    let cfg = plan(12, 2, cache, 1);
+    let mut rows = Vec::new();
+    for &n in ns {
+        let m = n;
+        let rseq = ReflectorSequence::random(n, k, 42);
+        let flops = OpSequence::flops(&rseq, m);
+        let base = Matrix::random(m, n, 7);
+
+        let mut a = base.clone();
+        let meas = measure(mc, |_| apply_reflector_sequence_naive(&mut a, &rseq));
+        rows.push(Fig8Row {
+            algo: "rs_unoptimized",
+            n,
+            gflops: gflops_of(flops, &meas),
+        });
+
+        let mut a = base.clone();
+        let bc = BlockConfig {
+            mb: cfg.mb,
+            kb: cfg.kb,
+            nb: cfg.nb,
+        };
+        let meas = measure(mc, |_| apply_blocked(&mut a, &rseq, &bc));
+        rows.push(Fig8Row {
+            algo: "rs_blocked",
+            n,
+            gflops: gflops_of(flops, &meas),
+        });
+
+        let mut a = base.clone();
+        let meas = measure(mc, |_| apply_fused(&mut a, &rseq, usize::MAX));
+        rows.push(Fig8Row {
+            algo: "rs_fused",
+            n,
+            gflops: gflops_of(flops, &meas),
+        });
+
+        let mut pm = PackedMatrix::from_matrix(&base, cfg.mb, cfg.mr);
+        let meas = measure(mc, |_| apply_kernel_packed(&mut pm, &rseq, &cfg).unwrap());
+        rows.push(Fig8Row {
+            algo: "rs_kernel_v2",
+            n,
+            gflops: gflops_of(flops, &meas),
+        });
+
+        // Best tuned kernel size (the Fig 6 treatment applied to Fig 8).
+        let mut best = 0.0f64;
+        for mr in [12, 16, 24] {
+            let kcfg = plan(mr, 2, cache, 1);
+            let mut pm = PackedMatrix::from_matrix(&base, kcfg.mb, kcfg.mr);
+            let meas = measure(mc, |_| apply_kernel_packed(&mut pm, &rseq, &kcfg).unwrap());
+            best = best.max(gflops_of(flops, &meas));
+        }
+        rows.push(Fig8Row {
+            algo: "rs_kernel_v2_tuned",
+            n,
+            gflops: best,
+        });
+    }
+    rows
+}
+
+pub fn print_fig8(rows: &[Fig8Row]) {
+    println!("# Fig 8 — 2x2 reflector variants (Gflop/s), kernel m_r=12 k_r=2");
+    println!("{:<16} {:>6} {:>10}", "algorithm", "n", "Gflop/s");
+    for r in rows {
+        println!("{:<16} {:>6} {:>10.3}", r.algo, r.n, r.gflops);
+    }
+}
+
+/// One row of the §1.2 I/O table.
+#[derive(Clone, Debug)]
+pub struct IoRow {
+    pub algo: &'static str,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Measured DRAM traffic (doubles moved).
+    pub measured_io: f64,
+    /// The §1.2 formula prediction for this algorithm (doubles), if any.
+    pub predicted_io: Option<f64>,
+    /// Measured operational intensity (flops / DRAM byte x 8 = flops per
+    /// double moved).
+    pub op_intensity: f64,
+    /// Element-level memory operations issued (Eq 3.x quantity).
+    pub memops: u64,
+}
+
+/// §1.2 table: measured vs predicted I/O on the simulated machine.
+pub fn io_table(m: usize, n: usize, k: usize) -> Vec<IoRow> {
+    let spec = HierarchySpec::small_machine();
+    let s = spec.l3.capacity_doubles(); // two-memory model: cache = LLC
+    let cfg_kernel = plan(16, 2, CacheParams {
+        t1: spec.l1.capacity_doubles(),
+        t2: spec.l2.capacity_doubles(),
+        t3: spec.l3.capacity_doubles(),
+    }, 1);
+
+    let mut rows = Vec::new();
+    for (algo, predicted) in [
+        (Algorithm::Naive, None),
+        (
+            Algorithm::Wavefront,
+            Some(iolb::wavefront_io_optimal(m, n, k, s)),
+        ),
+        (Algorithm::Blocked, None),
+        (Algorithm::Fused, None),
+        (Algorithm::Kernel, None),
+        (Algorithm::KernelNoPack, None),
+    ] {
+        let r = simulate_algorithm(algo, m, n, k, spec, &cfg_kernel).unwrap();
+        rows.push(IoRow {
+            algo: algo.paper_name(),
+            m,
+            n,
+            k,
+            measured_io: r.memory_traffic_bytes as f64 / 8.0,
+            predicted_io: predicted,
+            op_intensity: r.flops as f64 / (r.memory_traffic_bytes as f64 / 8.0).max(1.0),
+            memops: r.memops.total(),
+        });
+    }
+    rows
+}
+
+pub fn print_io_table(rows: &[IoRow], s_doubles: usize) {
+    println!("# §1.2 — I/O on the simulated two-memory machine (S = {s_doubles} doubles)");
+    if let Some(r0) = rows.first() {
+        let lb = iolb::io_lower_bound(r0.m, r0.n, r0.k, s_doubles);
+        println!(
+            "lower bound mnk/sqrt(S) = {lb:.3e} doubles; OI limits: max {:.1}, wavefront {:.1}, gemm {:.1}",
+            iolb::op_intensity_max(s_doubles),
+            iolb::op_intensity_wavefront(s_doubles),
+            iolb::op_intensity_gemm(s_doubles)
+        );
+    }
+    println!(
+        "{:<18} {:>12} {:>12} {:>10} {:>14}",
+        "algorithm", "IO (dbl)", "pred (dbl)", "OI", "memops"
+    );
+    for r in rows {
+        println!(
+            "{:<18} {:>12.3e} {:>12} {:>10.2} {:>14}",
+            r.algo,
+            r.measured_io,
+            r.predicted_io
+                .map(|p| format!("{p:.3e}"))
+                .unwrap_or_else(|| "-".into()),
+            r.op_intensity,
+            r.memops
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_small_smoke() {
+        let rows = fig5_serial(&[64], 8, &MeasureConfig::quick());
+        assert_eq!(rows.len(), 6);
+        assert!(rows.iter().all(|r| r.gflops > 0.0));
+        // kernel_v2's relative runtime is 1 by construction
+        let v2 = rows.iter().find(|r| r.algo == "rs_kernel_v2").unwrap();
+        assert!((v2.rel_runtime - 1.0).abs() < 0.3);
+    }
+
+    #[test]
+    fn fig6_small_smoke() {
+        let rows = fig6_kernel_sizes(&[48], 6, &MeasureConfig::quick());
+        assert_eq!(rows.len(), 10);
+        assert!(rows.iter().all(|r| r.gflops > 0.0));
+    }
+
+    #[test]
+    fn fig7_small_smoke() {
+        let rows = fig7_parallel(&[64], 6, &[1, 2], &MeasureConfig::quick());
+        assert_eq!(rows.len(), 2);
+        assert!(rows[1].modeled_speedup >= 1.0);
+    }
+
+    #[test]
+    fn fig8_small_smoke() {
+        let rows = fig8_reflectors(&[48], 6, &MeasureConfig::quick());
+        assert_eq!(rows.len(), 5);
+        assert!(rows.iter().all(|r| r.gflops > 0.0));
+    }
+
+    #[test]
+    fn io_table_smoke() {
+        let rows = io_table(96, 96, 12);
+        assert_eq!(rows.len(), 6);
+        // naive must move the most data; kernel the least A-traffic classes.
+        let naive = rows.iter().find(|r| r.algo == "rs_unoptimized").unwrap();
+        let kernel = rows.iter().find(|r| r.algo == "rs_kernel").unwrap();
+        assert!(naive.measured_io > 0.0 && kernel.measured_io > 0.0);
+        assert!(naive.memops > kernel.memops);
+    }
+}

@@ -1,0 +1,112 @@
+//! Timing protocol: warmup, repetitions, median-of-k.
+
+use std::time::Instant;
+
+/// Measurement protocol parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct MeasureConfig {
+    /// Warmup runs (not recorded).
+    pub warmup: usize,
+    /// Recorded runs.
+    pub reps: usize,
+    /// Abort early once this much total time (seconds) is spent.
+    pub time_budget: f64,
+}
+
+impl Default for MeasureConfig {
+    fn default() -> Self {
+        Self {
+            warmup: 1,
+            reps: 5,
+            time_budget: 10.0,
+        }
+    }
+}
+
+impl MeasureConfig {
+    /// A faster protocol for CI / smoke runs.
+    pub fn quick() -> Self {
+        Self {
+            warmup: 1,
+            reps: 3,
+            time_budget: 2.0,
+        }
+    }
+}
+
+/// Result of measuring one closure.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    /// Median wall-time (seconds).
+    pub median_s: f64,
+    /// Minimum wall-time (seconds).
+    pub min_s: f64,
+    /// Recorded repetitions.
+    pub reps: usize,
+}
+
+/// Measure `f` under the protocol. `f` receives the repetition index
+/// (warmups get `usize::MAX`) so it can reset state cheaply.
+pub fn measure(cfg: &MeasureConfig, mut f: impl FnMut(usize)) -> Measurement {
+    for _ in 0..cfg.warmup {
+        f(usize::MAX);
+    }
+    let mut times = Vec::with_capacity(cfg.reps);
+    let start = Instant::now();
+    for rep in 0..cfg.reps {
+        let t0 = Instant::now();
+        f(rep);
+        times.push(t0.elapsed().as_secs_f64());
+        if start.elapsed().as_secs_f64() > cfg.time_budget && !times.is_empty() {
+            break;
+        }
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median_s = times[times.len() / 2];
+    Measurement {
+        median_s,
+        min_s: times[0],
+        reps: times.len(),
+    }
+}
+
+/// Measure and convert to Gflop/s given the useful-flop count.
+pub fn measure_flops(cfg: &MeasureConfig, flops: u64, f: impl FnMut(usize)) -> (Measurement, f64) {
+    let m = measure(cfg, f);
+    let gflops = flops as f64 / m.median_s / 1e9;
+    (m, gflops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_runs_expected_reps() {
+        let mut calls = 0;
+        let m = measure(
+            &MeasureConfig {
+                warmup: 2,
+                reps: 3,
+                time_budget: 60.0,
+            },
+            |_| calls += 1,
+        );
+        assert_eq!(calls, 5);
+        assert_eq!(m.reps, 3);
+        assert!(m.min_s <= m.median_s);
+    }
+
+    #[test]
+    fn gflops_is_positive() {
+        let (_, g) = measure_flops(&MeasureConfig::quick(), 1_000_000, |_| {
+            // ~1M flops of busywork
+            let mut x = 1.0f64;
+            for _ in 0..100_000 {
+                x = x * 1.0000001 + 1e-9;
+            }
+            std::hint::black_box(x);
+        });
+        assert!(g > 0.0);
+    }
+}

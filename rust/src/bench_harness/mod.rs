@@ -1,0 +1,28 @@
+//! Benchmark harness: measurement, workload generation and the
+//! paper-figure regenerators.
+//!
+//! Criterion is not in the offline vendor set, so [`measure`] provides the
+//! warmup + repetition + median protocol the benches use. Each `fig*`
+//! function prints the same series the paper's corresponding figure plots
+//! and returns the raw rows for assertions.
+
+mod figures;
+mod measure;
+
+pub use figures::{
+    fig5_serial, fig6_kernel_sizes, fig7_parallel, fig8_reflectors, io_table, print_fig5,
+    print_fig6, print_fig7, print_fig8, print_io_table, Fig5Row, Fig6Row, Fig7Row, Fig8Row, IoRow,
+};
+pub use measure::{measure, measure_flops, MeasureConfig, Measurement};
+
+/// Problem sizes used throughout the paper's §8: `k = 180`, `m = n`.
+pub const PAPER_K: usize = 180;
+
+/// The `n` sweep of Fig 5–8 (scaled to this container; the paper sweeps to
+/// 3840 on 16–28-core machines).
+pub fn paper_n_sweep(max_n: usize) -> Vec<usize> {
+    [240, 480, 720, 960, 1440, 1920, 2880, 3840]
+        .into_iter()
+        .filter(|&n| n <= max_n)
+        .collect()
+}

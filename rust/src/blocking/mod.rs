@@ -1,0 +1,106 @@
+//! Block-size selection (§5): the closed-form planner.
+//!
+//! Given the cache capacities `T1`, `T2`, `T3` (in doubles) and a kernel
+//! size `(m_r, k_r)`, the paper derives:
+//!
+//! * Eq 5.2 — `n_b ≤ (T1 − m_r·k_r) / (m_r + 2k_r)` (kernel block of `A`
+//!   plus the `C`/`S` wave stream fit in L1);
+//! * Eq 5.4 — `k_b ≤ (T2 − m_r·n_b) / (m_r + 2n_b)` (the wider `A` block
+//!   plus all `k_b` sequences' `C`/`S` fit in L2);
+//! * Eq 5.6 — `m_b ≤ T3 / (n_b + k_b)` (the full panel block fits in L3).
+//!
+//! Note: with the paper's own `T1 = 4000`, `m_r = 16`, `k_r = 2`, Eq 5.2
+//! gives `n_b ≤ 198`, not the "`n_b ≤ 220`" stated in §5.1 (the `m_b`
+//! bound `16231` *is* reproduced exactly). We implement the equations; the
+//! discrepancy is recorded in EXPERIMENTS.md.
+
+mod planner;
+
+pub use planner::{plan, plan_bounds as plan_bounds_for, plan_for_paper_machine, BlockPlan};
+
+use anyhow::{bail, Result};
+
+/// Cache capacities in **doubles** (f64 elements), as the paper counts them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheParams {
+    /// L1 data cache capacity (doubles). Paper's machine: 4000.
+    pub t1: usize,
+    /// L2 capacity (doubles). Paper's machine: 32000.
+    pub t2: usize,
+    /// L3 capacity (doubles) — *per-core share* if conservative.
+    /// Paper's machine: 4_480_000.
+    pub t3: usize,
+}
+
+impl CacheParams {
+    /// The paper's experimental machine (§5: T1=4000, T2=32000, T3=4.48e6).
+    pub const PAPER_MACHINE: CacheParams = CacheParams {
+        t1: 4_000,
+        t2: 32_000,
+        t3: 4_480_000,
+    };
+
+    /// Read L1d/L2/L3 sizes from sysfs, falling back to
+    /// [`Self::PAPER_MACHINE`] when unavailable (containers often hide
+    /// cache topology).
+    pub fn detect() -> CacheParams {
+        fn read_kb(path: &str) -> Option<usize> {
+            let s = std::fs::read_to_string(path).ok()?;
+            let s = s.trim();
+            let kb = s.strip_suffix('K')?.parse::<usize>().ok()?;
+            Some(kb * 1024 / 8)
+        }
+        let base = "/sys/devices/system/cpu/cpu0/cache";
+        let t1 = read_kb(&format!("{base}/index0/size"));
+        let t2 = read_kb(&format!("{base}/index2/size"));
+        let t3 = read_kb(&format!("{base}/index3/size"));
+        match (t1, t2, t3) {
+            (Some(t1), Some(t2), Some(t3)) if t1 > 0 && t2 > t1 && t3 > t2 => {
+                CacheParams { t1, t2, t3 }
+            }
+            _ => CacheParams::PAPER_MACHINE,
+        }
+    }
+}
+
+/// Full parameter set for the kernel algorithm: kernel size, block sizes,
+/// thread count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelConfig {
+    /// Kernel rows (`m_r`).
+    pub mr: usize,
+    /// Kernel wave width (`k_r`).
+    pub kr: usize,
+    /// Row-panel height (`m_b`).
+    pub mb: usize,
+    /// Sequences per k-block (`k_b`).
+    pub kb: usize,
+    /// Waves per pipeline chunk (`n_b`).
+    pub nb: usize,
+    /// Worker threads for the parallel driver (§7).
+    pub threads: usize,
+}
+
+impl Default for KernelConfig {
+    /// The paper's preferred configuration: `m_r = 16`, `k_r = 2`, block
+    /// sizes from the planner on the paper machine.
+    fn default() -> Self {
+        plan_for_paper_machine(16, 2)
+    }
+}
+
+impl KernelConfig {
+    /// Validate invariants the kernel drivers rely on.
+    pub fn validate(&self) -> Result<()> {
+        if !crate::kernel::kernel_supported(self.mr, self.kr) {
+            bail!("unsupported kernel size m_r={}, k_r={}", self.mr, self.kr);
+        }
+        if self.mb == 0 || self.kb == 0 || self.nb == 0 {
+            bail!("block sizes must be positive: {self:?}");
+        }
+        if self.threads == 0 {
+            bail!("thread count must be positive");
+        }
+        Ok(())
+    }
+}

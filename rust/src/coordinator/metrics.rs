@@ -1,0 +1,89 @@
+//! Coordinator metrics: thread-safe counters + snapshot.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Aggregated service counters (atomics; shared across workers).
+#[derive(Default)]
+pub struct Metrics {
+    jobs_submitted: AtomicU64,
+    jobs_completed: AtomicU64,
+    jobs_failed: AtomicU64,
+    flops_done: AtomicU64,
+    busy_nanos: AtomicU64,
+}
+
+/// A point-in-time copy of the counters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub flops_done: u64,
+    pub busy_nanos: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_submit(&self) {
+        self.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_complete(&self, flops: u64, nanos: u64) {
+        self.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        self.flops_done.fetch_add(flops, Ordering::Relaxed);
+        self.busy_nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    pub fn record_failure(&self) {
+        self.jobs_failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
+            jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
+            jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
+            flops_done: self.flops_done.load(Ordering::Relaxed),
+            busy_nanos: self.busy_nanos.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Aggregate throughput over busy time (Gflop/s).
+    pub fn gflops(&self) -> f64 {
+        if self.busy_nanos == 0 {
+            0.0
+        } else {
+            self.flops_done as f64 / self.busy_nanos as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_submit();
+        m.record_submit();
+        m.record_complete(600, 300);
+        m.record_failure();
+        let s = m.snapshot();
+        assert_eq!(s.jobs_submitted, 2);
+        assert_eq!(s.jobs_completed, 1);
+        assert_eq!(s.jobs_failed, 1);
+        assert_eq!(s.flops_done, 600);
+        assert!((s.gflops() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_gflops_is_zero() {
+        assert_eq!(Metrics::new().snapshot().gflops(), 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Layer-3 coordinator: a job service around the rotation-application
+//! library.
+//!
+//! The paper's contribution lives at the kernel level, so the coordinator
+//! is deliberately thin (per the architecture): a request loop that owns
+//! process lifecycle, routes each job to an algorithm variant (size-based
+//! heuristics mirroring the Fig 5 crossovers), runs it on a worker pool,
+//! and aggregates metrics. The offline vendor set has no tokio, so the
+//! event loop is `std::thread` + channels.
+
+mod metrics;
+mod router;
+mod server;
+
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::{route, RoutePolicy};
+pub use server::{Coordinator, Job, JobResult, JobSpec};

@@ -1,0 +1,69 @@
+//! Variant routing: pick the algorithm for a job from its shape.
+//!
+//! The heuristics encode the Fig 5 findings: the kernel variant wins
+//! across the board once the problem is big enough to amortize packing;
+//! tiny problems skip blocking entirely; `rs_gemm` is only competitive for
+//! very large `n` and is never auto-selected (it costs extra flops).
+
+use crate::kernel::Algorithm;
+
+/// Routing policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Pick by shape (default).
+    Auto,
+    /// Always use a fixed variant.
+    Fixed(Algorithm),
+}
+
+/// Decide the variant for an `m x n` apply of `k` sequences.
+pub fn route(policy: RoutePolicy, m: usize, n: usize, k: usize) -> Algorithm {
+    match policy {
+        RoutePolicy::Fixed(a) => a,
+        RoutePolicy::Auto => {
+            let work = m as u64 * n as u64 * k as u64;
+            if n < 8 || k == 0 || m == 0 {
+                // Degenerate: nothing to block.
+                Algorithm::Naive
+            } else if work < 32_768 {
+                // Too small to amortize packing or wave-stream setup; the
+                // fused sweep has no setup cost at all.
+                Algorithm::Fused
+            } else if work < 262_144 {
+                // Mid-size: kernel without the pack/unpack round trip.
+                Algorithm::KernelNoPack
+            } else {
+                Algorithm::Kernel
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_policy_wins() {
+        assert_eq!(
+            route(RoutePolicy::Fixed(Algorithm::Gemm), 10, 10, 1),
+            Algorithm::Gemm
+        );
+    }
+
+    #[test]
+    fn tiny_jobs_stay_simple() {
+        assert_eq!(route(RoutePolicy::Auto, 4, 4, 1), Algorithm::Naive);
+        assert_eq!(route(RoutePolicy::Auto, 32, 32, 2), Algorithm::Fused);
+    }
+
+    #[test]
+    fn large_jobs_use_kernel() {
+        assert_eq!(route(RoutePolicy::Auto, 1000, 1000, 180), Algorithm::Kernel);
+    }
+
+    #[test]
+    fn midsize_skips_packing() {
+        assert_eq!(route(RoutePolicy::Auto, 64, 64, 16), Algorithm::KernelNoPack);
+    }
+}

@@ -1,0 +1,274 @@
+//! The job service: a worker pool fed by a channel, returning results over
+//! per-job channels.
+
+use super::metrics::Metrics;
+use super::router::{route, RoutePolicy};
+use crate::blocking::KernelConfig;
+use crate::kernel::{apply_with, Algorithm};
+use crate::matrix::Matrix;
+use crate::rot::{OpSequence, RotationSequence};
+use anyhow::Result;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// What a job should do.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// `None` = let the router decide.
+    pub algorithm: Option<Algorithm>,
+    pub config: KernelConfig,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        Self {
+            algorithm: None,
+            config: KernelConfig::default(),
+        }
+    }
+}
+
+/// A unit of work: apply `seq` to `matrix`.
+pub struct Job {
+    pub matrix: Matrix,
+    pub seq: RotationSequence,
+    pub spec: JobSpec,
+}
+
+/// Completed job.
+pub struct JobResult {
+    pub matrix: Matrix,
+    pub algorithm: Algorithm,
+    pub elapsed_s: f64,
+    pub gflops: f64,
+}
+
+enum Message {
+    Work(Job, Sender<Result<JobResult>>),
+    Shutdown,
+}
+
+/// The coordinator: owns the worker pool and the metrics.
+pub struct Coordinator {
+    tx: Sender<Message>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    policy: RoutePolicy,
+}
+
+impl Coordinator {
+    /// Start `workers` worker threads.
+    pub fn start(workers: usize, policy: RoutePolicy) -> Self {
+        let (tx, rx) = channel::<Message>();
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::new());
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let metrics = Arc::clone(&metrics);
+                std::thread::spawn(move || worker_loop(rx, metrics, policy))
+            })
+            .collect();
+        Self {
+            tx,
+            workers: handles,
+            metrics,
+            policy,
+        }
+    }
+
+    /// Submit a job; returns a receiver for the result.
+    pub fn submit(&self, job: Job) -> Receiver<Result<JobResult>> {
+        let (rtx, rrx) = channel();
+        self.metrics.record_submit();
+        self.tx
+            .send(Message::Work(job, rtx))
+            .expect("coordinator channel closed");
+        rrx
+    }
+
+    /// Submit and wait.
+    pub fn run(&self, job: Job) -> Result<JobResult> {
+        self.submit(job).recv().expect("worker dropped result")
+    }
+
+    /// Current metrics.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// The active routing policy.
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    /// Stop accepting work and join the workers.
+    pub fn shutdown(mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Message::Shutdown);
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Message>>>, metrics: Arc<Metrics>, policy: RoutePolicy) {
+    loop {
+        let msg = {
+            let guard = rx.lock().expect("poisoned job queue");
+            guard.recv()
+        };
+        match msg {
+            Ok(Message::Work(job, reply)) => {
+                let result = execute_job(job, policy, &metrics);
+                let _ = reply.send(result);
+            }
+            Ok(Message::Shutdown) | Err(_) => return,
+        }
+    }
+}
+
+fn execute_job(mut job: Job, policy: RoutePolicy, metrics: &Metrics) -> Result<JobResult> {
+    let m = job.matrix.rows();
+    let n = job.matrix.cols();
+    let k = job.seq.k();
+    let algo = job
+        .spec
+        .algorithm
+        .unwrap_or_else(|| route(policy, m, n, k));
+    let flops = OpSequence::flops(&job.seq, m);
+    let t0 = Instant::now();
+    let outcome = apply_with(algo, &mut job.matrix, &job.seq, &job.spec.config);
+    let elapsed = t0.elapsed();
+    match outcome {
+        Ok(()) => {
+            metrics.record_complete(flops, elapsed.as_nanos() as u64);
+            Ok(JobResult {
+                matrix: job.matrix,
+                algorithm: algo,
+                elapsed_s: elapsed.as_secs_f64(),
+                gflops: flops as f64 / elapsed.as_secs_f64().max(1e-12) / 1e9,
+            })
+        }
+        Err(e) => {
+            metrics.record_failure();
+            Err(e)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{max_abs_diff, Matrix};
+    use crate::rot::apply_naive;
+
+    fn small_cfg() -> KernelConfig {
+        KernelConfig {
+            mr: 8,
+            kr: 2,
+            mb: 16,
+            kb: 4,
+            nb: 8,
+            threads: 1,
+        }
+    }
+
+    #[test]
+    fn coordinator_runs_jobs_correctly() {
+        let coord = Coordinator::start(2, RoutePolicy::Auto);
+        let (m, n, k) = (24, 18, 5);
+        let seq = RotationSequence::random(n, k, 1);
+        let a = Matrix::random(m, n, 2);
+        let mut expected = a.clone();
+        apply_naive(&mut expected, &seq);
+
+        let result = coord
+            .run(Job {
+                matrix: a,
+                seq,
+                spec: JobSpec {
+                    algorithm: None,
+                    config: small_cfg(),
+                },
+            })
+            .unwrap();
+        assert_eq!(max_abs_diff(&result.matrix, &expected), 0.0);
+        assert!(result.gflops > 0.0);
+
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.jobs_completed, 1);
+        assert_eq!(snap.jobs_failed, 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn coordinator_handles_many_concurrent_jobs() {
+        let coord = Coordinator::start(4, RoutePolicy::Auto);
+        let mut receivers = Vec::new();
+        let mut expected = Vec::new();
+        for seed in 0..12u64 {
+            let (m, n, k) = (10 + seed as usize, 8, 3);
+            let seq = RotationSequence::random(n, k, seed);
+            let a = Matrix::random(m, n, seed + 100);
+            let mut e = a.clone();
+            apply_naive(&mut e, &seq);
+            expected.push(e);
+            receivers.push(coord.submit(Job {
+                matrix: a,
+                seq,
+                spec: JobSpec {
+                    algorithm: None,
+                    config: small_cfg(),
+                },
+            }));
+        }
+        for (rx, e) in receivers.into_iter().zip(expected) {
+            let r = rx.recv().unwrap().unwrap();
+            assert_eq!(max_abs_diff(&r.matrix, &e), 0.0);
+        }
+        assert_eq!(coord.metrics().snapshot().jobs_completed, 12);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn fixed_algorithm_is_respected() {
+        let coord = Coordinator::start(1, RoutePolicy::Auto);
+        let seq = RotationSequence::random(8, 2, 3);
+        let a = Matrix::random(6, 8, 4);
+        let r = coord
+            .run(Job {
+                matrix: a,
+                seq,
+                spec: JobSpec {
+                    algorithm: Some(Algorithm::Fused),
+                    config: small_cfg(),
+                },
+            })
+            .unwrap();
+        assert_eq!(r.algorithm, Algorithm::Fused);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn failure_is_counted() {
+        let coord = Coordinator::start(1, RoutePolicy::Auto);
+        let seq = RotationSequence::random(8, 2, 3);
+        let a = Matrix::random(6, 8, 4);
+        let mut cfg = small_cfg();
+        cfg.mr = 7; // unsupported kernel
+        let r = coord.run(Job {
+            matrix: a,
+            seq,
+            spec: JobSpec {
+                algorithm: Some(Algorithm::Kernel),
+                config: cfg,
+            },
+        });
+        assert!(r.is_err());
+        assert_eq!(coord.metrics().snapshot().jobs_failed, 1);
+        coord.shutdown();
+    }
+}

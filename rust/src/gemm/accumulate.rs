@@ -1,0 +1,142 @@
+//! `rs_gemm` (§8): accumulate rotation blocks into orthogonal factors and
+//! apply them with DGEMM.
+//!
+//! For each wave-chunk `[w0, w1)` of the full `k`-sequence wavefront, the
+//! chunk's rotations touch only columns `[max(0, w0-k+1), min(n, w1+1))`.
+//! Accumulating them into a dense orthogonal factor `Q_chunk` (by applying
+//! the chunk sequence-major to an identity) turns the update into
+//! `A[:, cols] ← A[:, cols] · Q_chunk` — a GEMM, which trades extra flops
+//! (`2·m·c²` per chunk vs `6·m·(w1-w0)·k` of rotation flops) for GEMM-rate
+//! execution. The paper's Fig 5 shows this wins over `rs_fused` for large
+//! `n` but loses badly for small `n` where accumulation dominates; the
+//! harness reports only the 6mnk useful flops, as the paper does.
+
+use super::dgemm::{dgemm, GemmConfig};
+use crate::matrix::Matrix;
+use crate::rot::{OpSequence, PairOp};
+
+/// Accumulate the rotations of waves `[w0, w1)` into a dense local factor.
+///
+/// Returns `(c0, q)`: the first affected column of `A` and the
+/// `c x c` orthogonal factor over columns `c0 .. c0+c`.
+pub fn accumulate_q<S: OpSequence>(seq: &S, w0: usize, w1: usize) -> (usize, Matrix) {
+    let n = seq.n();
+    let k = seq.k();
+    let c0 = w0.saturating_sub(k - 1);
+    let c1 = (w1 + 1).min(n);
+    let c = c1 - c0;
+    let mut q = Matrix::identity(c);
+    // Sequence-major within the chunk (valid: see kernel::phases).
+    for l in 0..k {
+        let i_lo = w0.saturating_sub(l).max(c0);
+        let i_hi = (w1.saturating_sub(l)).min(n - 1);
+        for i in i_lo..i_hi {
+            let op = seq.get(i, l);
+            let (x, y) = q.two_cols_mut(i - c0, i - c0 + 1);
+            for (xi, yi) in x.iter_mut().zip(y.iter_mut()) {
+                let (nx, ny) = op.apply(*xi, *yi);
+                *xi = nx;
+                *yi = ny;
+            }
+        }
+    }
+    (c0, q)
+}
+
+/// `rs_gemm`: apply the full sequence set via accumulated factors.
+///
+/// * `chunk_waves` — waves per accumulated factor (the paper's block size;
+///   larger chunks amortize accumulation but grow `Q` quadratically);
+/// * `mb` — row-panel height for the GEMM application (cache blocking).
+pub fn apply_gemm<S: OpSequence>(a: &mut Matrix, seq: &S, chunk_waves: usize, mb: usize) {
+    assert_eq!(a.cols(), seq.n(), "matrix/sequence column mismatch");
+    let n = seq.n();
+    let k = seq.k();
+    if n < 2 || k == 0 {
+        return;
+    }
+    let total_waves = (n - 2) + (k - 1) + 1;
+    let chunk = chunk_waves.max(1);
+    let gemm_cfg = GemmConfig::default();
+    let m = a.rows();
+    let mb = mb.max(1).min(m.max(1));
+
+    let mut w0 = 0;
+    while w0 < total_waves {
+        let w1 = (w0 + chunk).min(total_waves);
+        let (c0, q) = accumulate_q(seq, w0, w1);
+        let c = q.cols();
+        // A[:, c0..c0+c] = A[:, c0..c0+c] * Q, row panel at a time.
+        let mut ib = 0;
+        while ib < m {
+            let rows = mb.min(m - ib);
+            let ablock = a.submatrix(ib, rows, c0, c);
+            let mut out = Matrix::zeros(rows, c);
+            dgemm(1.0, &ablock, &q, 0.0, &mut out, &gemm_cfg);
+            a.set_submatrix(ib, c0, &out);
+            ib += rows;
+        }
+        w0 = w1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{orthogonality_error, rel_error, Matrix};
+    use crate::rot::{apply_naive, RotationSequence};
+
+    #[test]
+    fn accumulated_q_is_orthogonal() {
+        let seq = RotationSequence::random(12, 4, 1);
+        let (c0, q) = accumulate_q(&seq, 3, 7);
+        assert_eq!(c0, 0);
+        assert!(orthogonality_error(&q) < 1e-13);
+    }
+
+    #[test]
+    fn accumulate_covers_correct_columns() {
+        let (n, k) = (20, 5);
+        let seq = RotationSequence::random(n, k, 2);
+        let (c0, q) = accumulate_q(&seq, 8, 12);
+        // columns [8-4, 13) = [4, 13)
+        assert_eq!(c0, 4);
+        assert_eq!(q.cols(), 9);
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        for (m, n, k, chunk, mb, seed) in [
+            (9, 11, 4, 5, 4, 1u64),
+            (16, 30, 7, 8, 100, 2),
+            (5, 6, 12, 3, 2, 3),
+            (20, 40, 2, 64, 7, 4),
+            (3, 4, 1, 1, 1, 5),
+        ] {
+            let seq = RotationSequence::random(n, k, seed);
+            let mut a_ref = Matrix::random(m, n, seed + 10);
+            let mut a_gem = a_ref.clone();
+            apply_naive(&mut a_ref, &seq);
+            apply_gemm(&mut a_gem, &seq, chunk, mb);
+            assert!(
+                rel_error(&a_gem, &a_ref) < 1e-12,
+                "rs_gemm mismatch m={m} n={n} k={k} chunk={chunk}: {}",
+                rel_error(&a_gem, &a_ref)
+            );
+        }
+    }
+
+    #[test]
+    fn full_range_single_chunk_equals_full_q() {
+        // One chunk covering everything: A·Q with Q the full accumulation.
+        let (m, n, k) = (8, 10, 3);
+        let seq = RotationSequence::random(n, k, 6);
+        let a = Matrix::random(m, n, 7);
+        let mut q = Matrix::identity(n);
+        apply_naive(&mut q, &seq);
+        let expected = a.matmul(&q);
+        let mut got = a.clone();
+        apply_gemm(&mut got, &seq, usize::MAX / 2, m);
+        assert!(rel_error(&got, &expected) < 1e-12);
+    }
+}

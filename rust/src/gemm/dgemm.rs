@@ -1,0 +1,275 @@
+//! Blocked, packed DGEMM: `C ← α·A·B + β·C`.
+//!
+//! Goto-style [4] loop nest: pack a `kc x nc` block of `B` and a `mc x kc`
+//! block of `A`, multiply with an `MR_G x NR_G` register-tiled microkernel
+//! built on `mul_add`. This exists as the substrate for `rs_gemm` and as
+//! the machine-roofline yardstick the paper compares against ("operational
+//! intensity of GEMM is √S", §1.2).
+
+use crate::matrix::Matrix;
+
+/// Microkernel tile: MR_G x NR_G accumulators.
+const MR_G: usize = 8;
+const NR_G: usize = 4;
+
+/// Cache-block sizes.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmConfig {
+    /// Rows of the packed `A` block (L2).
+    pub mc: usize,
+    /// Inner (shared) dimension block (L1).
+    pub kc: usize,
+    /// Columns of the packed `B` block (L3).
+    pub nc: usize,
+}
+
+impl Default for GemmConfig {
+    fn default() -> Self {
+        Self {
+            mc: 256,
+            kc: 256,
+            nc: 1024,
+        }
+    }
+}
+
+/// Reference triple loop (`C ← α·A·B + β·C`), used as the test oracle.
+pub fn dgemm_naive(alpha: f64, a: &Matrix, b: &Matrix, beta: f64, c: &mut Matrix) {
+    assert_eq!(a.cols(), b.rows());
+    assert_eq!(c.rows(), a.rows());
+    assert_eq!(c.cols(), b.cols());
+    for j in 0..c.cols() {
+        for i in 0..c.rows() {
+            let mut acc = 0.0;
+            for l in 0..a.cols() {
+                acc += a.get(i, l) * b.get(l, j);
+            }
+            c.set(i, j, alpha * acc + beta * c.get(i, j));
+        }
+    }
+}
+
+/// Blocked, packed DGEMM.
+pub fn dgemm(alpha: f64, a: &Matrix, b: &Matrix, beta: f64, c: &mut Matrix, cfg: &GemmConfig) {
+    assert_eq!(a.cols(), b.rows(), "inner dimension mismatch");
+    assert_eq!(c.rows(), a.rows());
+    assert_eq!(c.cols(), b.cols());
+    let (m, kdim, n) = (a.rows(), a.cols(), b.cols());
+    if m == 0 || n == 0 {
+        return;
+    }
+    // Scale C by beta once up front.
+    if beta != 1.0 {
+        for j in 0..n {
+            for v in c.col_mut(j) {
+                *v *= beta;
+            }
+        }
+    }
+    if kdim == 0 {
+        return;
+    }
+
+    let mut bpack = vec![0.0f64; cfg.kc * cfg.nc];
+    let mut apack = vec![0.0f64; cfg.mc * cfg.kc];
+
+    let mut jc = 0;
+    while jc < n {
+        let nc = cfg.nc.min(n - jc);
+        let mut pc = 0;
+        while pc < kdim {
+            let kc = cfg.kc.min(kdim - pc);
+            pack_b(b, pc, kc, jc, nc, &mut bpack);
+            let mut ic = 0;
+            while ic < m {
+                let mc = cfg.mc.min(m - ic);
+                pack_a(a, ic, mc, pc, kc, &mut apack);
+                macro_block(alpha, &apack, mc, kc, &bpack, nc, c, ic, jc);
+                ic += mc;
+            }
+            pc += kc;
+        }
+        jc += nc;
+    }
+}
+
+/// Pack `B[pc..pc+kc, jc..jc+nc]` in NR_G-column micro-panels, row-major
+/// inside each panel (the order the microkernel reads).
+fn pack_b(b: &Matrix, pc: usize, kc: usize, jc: usize, nc: usize, out: &mut [f64]) {
+    let mut idx = 0;
+    let mut j = 0;
+    while j < nc {
+        let nr = NR_G.min(nc - j);
+        for l in 0..kc {
+            for jj in 0..nr {
+                out[idx] = b.get(pc + l, jc + j + jj);
+                idx += 1;
+            }
+            for _ in nr..NR_G {
+                out[idx] = 0.0;
+                idx += 1;
+            }
+        }
+        j += NR_G;
+    }
+}
+
+/// Pack `A[ic..ic+mc, pc..pc+kc]` in MR_G-row micro-panels, column-major
+/// inside each panel.
+fn pack_a(a: &Matrix, ic: usize, mc: usize, pc: usize, kc: usize, out: &mut [f64]) {
+    let mut idx = 0;
+    let mut i = 0;
+    while i < mc {
+        let mr = MR_G.min(mc - i);
+        for l in 0..kc {
+            for ii in 0..mr {
+                out[idx] = a.get(ic + i + ii, pc + l);
+                idx += 1;
+            }
+            for _ in mr..MR_G {
+                out[idx] = 0.0;
+                idx += 1;
+            }
+        }
+        i += MR_G;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn macro_block(
+    alpha: f64,
+    apack: &[f64],
+    mc: usize,
+    kc: usize,
+    bpack: &[f64],
+    nc: usize,
+    c: &mut Matrix,
+    ic: usize,
+    jc: usize,
+) {
+    let mut j = 0;
+    while j < nc {
+        let nr = NR_G.min(nc - j);
+        let bpanel = &bpack[(j / NR_G) * kc * NR_G..][..kc * NR_G];
+        let mut i = 0;
+        while i < mc {
+            let mr = MR_G.min(mc - i);
+            let apanel = &apack[(i / MR_G) * kc * MR_G..][..kc * MR_G];
+            micro_kernel(alpha, apanel, bpanel, kc, c, ic + i, jc + j, mr, nr);
+            i += MR_G;
+        }
+        j += NR_G;
+    }
+}
+
+/// MR_G x NR_G register-tile microkernel: full tiles take the fast path,
+/// edges fall through to a scalar loop.
+#[allow(clippy::too_many_arguments)]
+fn micro_kernel(
+    alpha: f64,
+    apanel: &[f64],
+    bpanel: &[f64],
+    kc: usize,
+    c: &mut Matrix,
+    i0: usize,
+    j0: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut acc = [[0.0f64; MR_G]; NR_G];
+    for l in 0..kc {
+        let arow = &apanel[l * MR_G..(l + 1) * MR_G];
+        let brow = &bpanel[l * NR_G..(l + 1) * NR_G];
+        for jj in 0..NR_G {
+            let bv = brow[jj];
+            for ii in 0..MR_G {
+                acc[jj][ii] = arow[ii].mul_add(bv, acc[jj][ii]);
+            }
+        }
+    }
+    if mr == MR_G && nr == NR_G {
+        for jj in 0..NR_G {
+            let col = &mut c.col_mut(j0 + jj)[i0..i0 + MR_G];
+            for ii in 0..MR_G {
+                col[ii] = alpha.mul_add(acc[jj][ii], col[ii]);
+            }
+        }
+    } else {
+        for jj in 0..nr {
+            let col = &mut c.col_mut(j0 + jj)[i0..i0 + mr];
+            for (ii, cv) in col.iter_mut().enumerate() {
+                *cv = alpha.mul_add(acc[jj][ii], *cv);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{rel_error, Matrix};
+
+    fn check(m: usize, k: usize, n: usize, alpha: f64, beta: f64, seed: u64) {
+        let a = Matrix::random(m, k, seed);
+        let b = Matrix::random(k, n, seed + 1);
+        let c0 = Matrix::random(m, n, seed + 2);
+        let mut c_ref = c0.clone();
+        let mut c_opt = c0.clone();
+        dgemm_naive(alpha, &a, &b, beta, &mut c_ref);
+        dgemm(alpha, &a, &b, beta, &mut c_opt, &GemmConfig::default());
+        assert!(
+            rel_error(&c_opt, &c_ref) < 1e-13,
+            "dgemm mismatch m={m} k={k} n={n}: {}",
+            rel_error(&c_opt, &c_ref)
+        );
+    }
+
+    #[test]
+    fn matches_naive_square() {
+        check(16, 16, 16, 1.0, 0.0, 1);
+        check(32, 32, 32, 1.0, 1.0, 2);
+    }
+
+    #[test]
+    fn matches_naive_odd_shapes() {
+        check(7, 11, 5, 1.0, 0.0, 3);
+        check(9, 3, 17, 2.5, -0.5, 4);
+        check(1, 1, 1, 1.0, 0.0, 5);
+        check(13, 1, 13, 1.0, 2.0, 6);
+    }
+
+    #[test]
+    fn matches_naive_bigger_than_blocks() {
+        let cfg = GemmConfig {
+            mc: 8,
+            kc: 8,
+            nc: 8,
+        };
+        let a = Matrix::random(33, 21, 7);
+        let b = Matrix::random(21, 19, 8);
+        let mut c_ref = Matrix::zeros(33, 19);
+        let mut c_opt = Matrix::zeros(33, 19);
+        dgemm_naive(1.0, &a, &b, 0.0, &mut c_ref);
+        dgemm(1.0, &a, &b, 0.0, &mut c_opt, &cfg);
+        assert!(rel_error(&c_opt, &c_ref) < 1e-13);
+    }
+
+    #[test]
+    fn empty_dims_are_noops() {
+        let a = Matrix::zeros(3, 0);
+        let b = Matrix::zeros(0, 2);
+        let mut c = Matrix::random(3, 2, 9);
+        let orig = c.clone();
+        dgemm(1.0, &a, &b, 1.0, &mut c, &GemmConfig::default());
+        assert_eq!(c, orig);
+    }
+
+    #[test]
+    fn beta_zero_overwrites() {
+        let a = Matrix::identity(4);
+        let b = Matrix::random(4, 4, 10);
+        let mut c = Matrix::from_fn(4, 4, |_, _| f64::from(7));
+        dgemm(1.0, &a, &b, 0.0, &mut c, &GemmConfig::default());
+        assert!(rel_error(&c, &b.submatrix(0, 4, 0, 4)) < 1e-14);
+    }
+}

@@ -1,0 +1,106 @@
+//! DTRMM: in-place triangular matrix multiply `B ← B·T`.
+//!
+//! `rs_gemm` applies accumulated orthogonal factors whose leading/trailing
+//! corners are triangular; MKL's DTRMM exploits that structure. Our
+//! accumulated `Q` blocks have banded-trapezoidal shape, and the driver
+//! uses DTRMM on the triangular corners (skipping the known zeros) where
+//! profitable.
+
+use crate::matrix::Matrix;
+
+/// `B ← B · T` with `T` upper-triangular (entries below the diagonal
+/// ignored and treated as zero).
+pub fn dtrmm_upper(b: &mut Matrix, t: &Matrix) {
+    assert_eq!(t.rows(), t.cols(), "T must be square");
+    assert_eq!(b.cols(), t.rows());
+    let n = t.cols();
+    let m = b.rows();
+    // Column j of the result only reads columns 0..=j of B, so computing
+    // right-to-left allows in-place update.
+    for j in (0..n).rev() {
+        let tjj = t.get(j, j);
+        // result col j = sum_{l<=j} B[:,l] * T[l,j]
+        for i in 0..m {
+            let mut acc = b.get(i, j) * tjj;
+            for l in 0..j {
+                acc += b.get(i, l) * t.get(l, j);
+            }
+            b.set(i, j, acc);
+        }
+    }
+}
+
+/// `B ← B · T` with `T` lower-triangular (entries above the diagonal
+/// ignored and treated as zero).
+pub fn dtrmm_lower(b: &mut Matrix, t: &Matrix) {
+    assert_eq!(t.rows(), t.cols(), "T must be square");
+    assert_eq!(b.cols(), t.rows());
+    let n = t.cols();
+    let m = b.rows();
+    // Column j of the result reads columns j..n of B: compute left-to-right.
+    for j in 0..n {
+        let tjj = t.get(j, j);
+        for i in 0..m {
+            let mut acc = b.get(i, j) * tjj;
+            for l in j + 1..n {
+                acc += b.get(i, l) * t.get(l, j);
+            }
+            b.set(i, j, acc);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{rel_error, Matrix};
+
+    fn upper_of(a: &Matrix) -> Matrix {
+        Matrix::from_fn(a.rows(), a.cols(), |i, j| if i <= j { a.get(i, j) } else { 0.0 })
+    }
+
+    fn lower_of(a: &Matrix) -> Matrix {
+        Matrix::from_fn(a.rows(), a.cols(), |i, j| if i >= j { a.get(i, j) } else { 0.0 })
+    }
+
+    #[test]
+    fn upper_matches_matmul() {
+        let t = Matrix::random(6, 6, 1);
+        let b0 = Matrix::random(4, 6, 2);
+        let expected = b0.matmul(&upper_of(&t));
+        let mut b = b0.clone();
+        dtrmm_upper(&mut b, &t);
+        assert!(rel_error(&b, &expected) < 1e-13);
+    }
+
+    #[test]
+    fn lower_matches_matmul() {
+        let t = Matrix::random(5, 5, 3);
+        let b0 = Matrix::random(7, 5, 4);
+        let expected = b0.matmul(&lower_of(&t));
+        let mut b = b0.clone();
+        dtrmm_lower(&mut b, &t);
+        assert!(rel_error(&b, &expected) < 1e-13);
+    }
+
+    #[test]
+    fn identity_t_is_noop() {
+        let t = Matrix::identity(4);
+        let b0 = Matrix::random(3, 4, 5);
+        let mut b = b0.clone();
+        dtrmm_upper(&mut b, &t);
+        assert_eq!(b, b0);
+        dtrmm_lower(&mut b, &t);
+        assert_eq!(b, b0);
+    }
+
+    #[test]
+    fn one_by_one() {
+        let mut t = Matrix::zeros(1, 1);
+        t.set(0, 0, 3.0);
+        let mut b = Matrix::from_col_major(2, 1, &[1.0, 2.0]);
+        dtrmm_upper(&mut b, &t);
+        assert_eq!(b.get(0, 0), 3.0);
+        assert_eq!(b.get(1, 0), 6.0);
+    }
+}

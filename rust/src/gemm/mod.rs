@@ -1,0 +1,16 @@
+//! Dense matrix-multiply substrate and the `rs_gemm` baseline (§8).
+//!
+//! The paper's `rs_gemm` accumulates blocks of rotations into orthogonal
+//! factors and applies them with MKL's DGEMM/DTRMM. MKL is not available
+//! here, so this module provides a from-scratch blocked, packed DGEMM (and
+//! a DTRMM for triangular factors) with a register-tiled microkernel — the
+//! same Goto-style structure (§4 [4]) the paper's kernels borrow from —
+//! plus the accumulate-and-multiply driver itself.
+
+mod accumulate;
+mod dgemm;
+mod dtrmm;
+
+pub use accumulate::{accumulate_q, apply_gemm};
+pub use dgemm::{dgemm, dgemm_naive, GemmConfig};
+pub use dtrmm::{dtrmm_lower, dtrmm_upper};

@@ -1,0 +1,180 @@
+//! `rs_blocked` (§2): the blocked wavefront algorithm *without* the §3
+//! register-reuse kernel.
+//!
+//! The rotation grid is split into the same startup / parallelogram /
+//! shutdown blocks as the kernel algorithm, and each block is applied with
+//! the plain [`Alg 1.1`](crate::rot::rot) two-column loop (Alg 2.1 of the
+//! paper). This is the "rs_blocked" baseline of Fig 5: cache-friendly but
+//! with no register reuse beyond a single rotation.
+
+use crate::matrix::Matrix;
+use crate::rot::{OpSequence, PairOp};
+
+/// Configuration for the blocked baseline.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockConfig {
+    /// Row-panel height (L3-level block).
+    pub mb: usize,
+    /// Sequences per k-block (L2-level block).
+    pub kb: usize,
+    /// Waves per parallelogram block (L1-level block).
+    pub nb: usize,
+}
+
+impl Default for BlockConfig {
+    fn default() -> Self {
+        // The §5 worked example tuned for the 16x2 kernel also serves the
+        // scalar blocked baseline well.
+        Self {
+            mb: 4800,
+            kb: 60,
+            nb: 216,
+        }
+    }
+}
+
+/// Apply one wave-range `[w0, w1)` of the k-block `(pb, kb)` to rows
+/// `r0..r0+rows`, sequence-major (Alg 2.1's loop order).
+fn apply_wave_range<S: OpSequence>(
+    a: &mut Matrix,
+    rows_r0: usize,
+    rows: usize,
+    seq: &S,
+    pb: usize,
+    kb: usize,
+    w0: usize,
+    w1: usize,
+) {
+    let n = seq.n();
+    for l in 0..kb {
+        // Ops (i, pb + l) with w0 <= i + l < w1 and 0 <= i <= n-2.
+        let i_lo = w0.saturating_sub(l);
+        let i_hi = (w1 - l.min(w1)).min(n - 1);
+        for i in i_lo..i_hi {
+            let op = seq.get(i, pb + l);
+            let (x, y) = a.two_cols_mut(i, i + 1);
+            let x = &mut x[rows_r0..rows_r0 + rows];
+            let y = &mut y[rows_r0..rows_r0 + rows];
+            for (xi, yi) in x.iter_mut().zip(y.iter_mut()) {
+                let (nx, ny) = op.apply(*xi, *yi);
+                *xi = nx;
+                *yi = ny;
+            }
+        }
+    }
+}
+
+/// `rs_blocked`: blocked application with plain per-rotation inner loops.
+pub fn apply_blocked<S: OpSequence>(a: &mut Matrix, seq: &S, cfg: &BlockConfig) {
+    assert_eq!(a.cols(), seq.n(), "matrix/sequence column mismatch");
+    let n = seq.n();
+    let k = seq.k();
+    if n < 2 || k == 0 {
+        return;
+    }
+    let m = a.rows();
+    let kb_max = cfg.kb.min(n - 1).max(1);
+
+    let mut ib = 0;
+    while ib < m {
+        let mbe = cfg.mb.min(m - ib);
+        let mut pb = 0;
+        while pb < k {
+            let kbe = kb_max.min(k - pb);
+            // Waves of this k-block: [0, n-1+kbe-1); chunk the full range
+            // (startup and shutdown included — Alg 2.1 blocks are just
+            // clipped parallelograms there).
+            let w_end = (n - 2) + (kbe - 1) + 1;
+            let mut w0 = 0;
+            while w0 < w_end {
+                let w1 = (w0 + cfg.nb).min(w_end);
+                apply_wave_range(a, ib, mbe, seq, pb, kbe, w0, w1);
+                w0 = w1;
+            }
+            pb += kbe;
+        }
+        ib += mbe;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{max_abs_diff, Matrix};
+    use crate::rot::{apply_naive, RotationSequence};
+
+    fn check(m: usize, n: usize, k: usize, cfg: BlockConfig, seed: u64) {
+        let seq = RotationSequence::random(n, k, seed);
+        let mut a_ref = Matrix::random(m, n, seed + 1);
+        let mut a_blk = a_ref.clone();
+        apply_naive(&mut a_ref, &seq);
+        apply_blocked(&mut a_blk, &seq, &cfg);
+        assert_eq!(
+            max_abs_diff(&a_ref, &a_blk),
+            0.0,
+            "blocked mismatch m={m} n={n} k={k} cfg={cfg:?}"
+        );
+    }
+
+    #[test]
+    fn blocked_matches_naive_default_cfg() {
+        check(10, 12, 5, BlockConfig::default(), 1);
+    }
+
+    #[test]
+    fn blocked_matches_naive_tiny_blocks() {
+        check(
+            11,
+            17,
+            6,
+            BlockConfig {
+                mb: 3,
+                kb: 2,
+                nb: 4,
+            },
+            2,
+        );
+        check(
+            8,
+            9,
+            9,
+            BlockConfig {
+                mb: 8,
+                kb: 3,
+                nb: 1,
+            },
+            3,
+        );
+    }
+
+    #[test]
+    fn blocked_handles_kb_larger_than_n() {
+        // kb gets clamped to n-1.
+        check(
+            6,
+            5,
+            12,
+            BlockConfig {
+                mb: 4,
+                kb: 100,
+                nb: 3,
+            },
+            4,
+        );
+    }
+
+    #[test]
+    fn blocked_handles_k_1_and_m_1() {
+        check(
+            1,
+            6,
+            1,
+            BlockConfig {
+                mb: 1,
+                kb: 1,
+                nb: 2,
+            },
+            5,
+        );
+    }
+}

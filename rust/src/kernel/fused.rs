@@ -1,0 +1,180 @@
+//! `rs_fused` (§1.3): 2x2 fused rotations in wavefront order — the
+//! Van Zee / Kågström state of the art the paper improves on.
+//!
+//! A 2x2 fused tile applies the four ops
+//! `(i, p), (i+1, p), (i-1, p+1), (i, p+1)` in one pass over the rows,
+//! loading the 4 touched columns once instead of twice each (Eq 3.2:
+//! `2·m(n-k)k` memory ops instead of `4·m(n-k)k`).
+//!
+//! Sequences are processed in pairs `(p, p+1)`; within a pair the tile
+//! anchor `i` advances by 2, which is exactly the wavefront stagger: the
+//! second sequence trails the first by one rotation. Boundary tiles (the
+//! first/last partial tiles and an odd trailing sequence) fall back to
+//! unfused per-op sweeps with identical arithmetic, so results stay
+//! bitwise-equal to `rs_unoptimized`.
+
+use crate::matrix::Matrix;
+use crate::rot::{OpSequence, PairOp};
+
+/// Apply op to rows `[r0, r0+rows)` of column pair `(j, j+1)` (unfused).
+fn apply_cols<Op: PairOp>(a: &mut Matrix, r0: usize, rows: usize, j: usize, op: Op) {
+    let (x, y) = a.two_cols_mut(j, j + 1);
+    let x = &mut x[r0..r0 + rows];
+    let y = &mut y[r0..r0 + rows];
+    for (xi, yi) in x.iter_mut().zip(y.iter_mut()) {
+        let (nx, ny) = op.apply(*xi, *yi);
+        *xi = nx;
+        *yi = ny;
+    }
+}
+
+/// One full 2x2 fused tile at anchor `i` for sequence pair `(p, p+1)`:
+/// columns `i-1 .. i+2` are loaded once per row.
+///
+/// Requires `1 <= i` and `i + 2 <= n - 1` (all four columns and all four
+/// ops in range).
+fn fused_tile<S: OpSequence>(a: &mut Matrix, r0: usize, rows: usize, seq: &S, i: usize, p: usize) {
+    let op00 = seq.get(i, p); //        cols (i,   i+1)
+    let op10 = seq.get(i + 1, p); //    cols (i+1, i+2)
+    let op01 = seq.get(i - 1, p + 1); //cols (i-1, i)
+    let op11 = seq.get(i, p + 1); //    cols (i,   i+1)
+
+    let ld = a.ld();
+    let lo = (i - 1) * ld;
+    let hi = (i + 3) * ld;
+    let window = &mut a.data_mut()[lo..hi];
+    let (c0, rest) = window.split_at_mut(ld);
+    let (c1, rest) = rest.split_at_mut(ld);
+    let (c2, c3) = rest.split_at_mut(ld);
+    let c0 = &mut c0[r0..r0 + rows];
+    let c1 = &mut c1[r0..r0 + rows];
+    let c2 = &mut c2[r0..r0 + rows];
+    let c3 = &mut c3[r0..r0 + rows];
+
+    for r in 0..rows {
+        let mut x0 = c0[r];
+        let mut x1 = c1[r];
+        let mut x2 = c2[r];
+        let mut x3 = c3[r];
+        // Dependency-respecting order inside the tile.
+        let (a1, a2) = op00.apply(x1, x2);
+        x1 = a1;
+        x2 = a2;
+        let (b2, b3) = op10.apply(x2, x3);
+        x2 = b2;
+        x3 = b3;
+        let (d0, d1) = op01.apply(x0, x1);
+        x0 = d0;
+        x1 = d1;
+        let (e1, e2) = op11.apply(x1, x2);
+        x1 = e1;
+        x2 = e2;
+        c0[r] = x0;
+        c1[r] = x1;
+        c2[r] = x2;
+        c3[r] = x3;
+    }
+}
+
+/// `rs_fused`: apply the sequence set with 2x2 fused rotations.
+///
+/// `mb` optionally row-blocks the sweep (the paper's rs_fused follows [10]
+/// and does not cache-block, so the default driver passes `mb = m`).
+pub fn apply_fused<S: OpSequence>(a: &mut Matrix, seq: &S, mb: usize) {
+    assert_eq!(a.cols(), seq.n(), "matrix/sequence column mismatch");
+    let n = seq.n();
+    let k = seq.k();
+    if n < 2 || k == 0 {
+        return;
+    }
+    let m = a.rows();
+    let mb = mb.max(1);
+
+    let mut r0 = 0;
+    while r0 < m {
+        let rows = mb.min(m - r0);
+        let mut p = 0;
+        // Sequence pairs.
+        while p + 1 < k {
+            apply_pair(a, r0, rows, seq, p);
+            p += 2;
+        }
+        // Odd trailing sequence: plain sweep.
+        if p < k {
+            for i in 0..n - 1 {
+                apply_cols(a, r0, rows, i, seq.get(i, p));
+            }
+        }
+        r0 += rows;
+    }
+}
+
+/// Apply sequences `(p, p+1)` with fused tiles.
+///
+/// Tile anchors run `i = 1, 3, 5, …`; op `(0, p)` is applied unfused up
+/// front (no column `i-1` exists for an anchor at 0), and the trailing
+/// partial tile unfused at the end. The interleaving
+/// `(i,p),(i+1,p),(i-1,p+1),(i,p+1)` satisfies both dependency rules.
+fn apply_pair<S: OpSequence>(a: &mut Matrix, r0: usize, rows: usize, seq: &S, p: usize) {
+    let n = seq.n();
+    // Lead-in: op (0, p).
+    apply_cols(a, r0, rows, 0, seq.get(0, p));
+    let mut i = 1;
+    while i + 2 <= n - 1 {
+        fused_tile(a, r0, rows, seq, i, p);
+        i += 2;
+    }
+    // Lead-out: remaining ops of sequence p (at most one: i = n-2 when the
+    // tile loop stopped at i with i+2 > n-1), then the tail of sequence p+1.
+    for ii in i..n - 1 {
+        apply_cols(a, r0, rows, ii, seq.get(ii, p));
+    }
+    for ii in (i - 1)..n - 1 {
+        apply_cols(a, r0, rows, ii, seq.get(ii, p + 1));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{max_abs_diff, Matrix};
+    use crate::rot::{apply_naive, RotationSequence};
+
+    fn check(m: usize, n: usize, k: usize, mb: usize, seed: u64) {
+        let seq = RotationSequence::random(n, k, seed);
+        let mut a_ref = Matrix::random(m, n, seed + 1);
+        let mut a_fus = a_ref.clone();
+        apply_naive(&mut a_ref, &seq);
+        apply_fused(&mut a_fus, &seq, mb);
+        assert_eq!(
+            max_abs_diff(&a_ref, &a_fus),
+            0.0,
+            "fused mismatch m={m} n={n} k={k} mb={mb}"
+        );
+    }
+
+    #[test]
+    fn fused_matches_naive_even_k() {
+        check(7, 10, 4, usize::MAX, 1);
+        check(16, 33, 8, usize::MAX, 2);
+    }
+
+    #[test]
+    fn fused_matches_naive_odd_k() {
+        check(5, 12, 5, usize::MAX, 3);
+        check(9, 7, 1, usize::MAX, 4);
+    }
+
+    #[test]
+    fn fused_matches_naive_odd_n() {
+        check(6, 9, 4, usize::MAX, 5);
+        check(6, 8, 4, usize::MAX, 6);
+        check(3, 3, 3, usize::MAX, 7);
+        check(3, 2, 2, usize::MAX, 8);
+    }
+
+    #[test]
+    fn fused_with_row_blocking() {
+        check(23, 14, 6, 5, 9);
+    }
+}

@@ -1,0 +1,559 @@
+//! The §3 register-reuse microkernel.
+//!
+//! The kernel applies `nwaves` waves of `KR` operations to `MR` rows of a
+//! column-major panel. Unlike the fused kernels of [10] — which keep the
+//! *rotations* in registers and stream the matrix — this kernel keeps an
+//! `MR x (KR+1)` window of matrix *columns* in registers and streams the
+//! rotations through it:
+//!
+//! ```text
+//!   per wave:  load 1 column (MR values) + KR ops (2·KR scalars),
+//!              apply KR·MR rotations (6·KR·MR flops),
+//!              store 1 column (MR values).
+//! ```
+//!
+//! Memory operations per block: `(2/KR + 2/n_b + 2/MR)·m_b·(n_b-k_b)·k_b`
+//! (Eq 3.4), vs `2·m(n-k)k` for 2x2 fusing — because `MR` can be 8–16 while
+//! a fused tile is stuck at 2.
+//!
+//! The production sizes (`k_r ∈ {1,2}`, `m_r` a multiple of 4) are
+//! hand-specialized over `std::simd::f64x4` with *named* window locals and
+//! a `k_r+1`-unrolled wave loop (slot roles rotate back to the start, so
+//! the window never moves) — the portable-Rust analogue of the paper's AVX
+//! kernels. Exotic `k_r` values (the Fig 6 sweep) use a generic
+//! circular-slot loop over a `[[f64; MR]; KRP1]` window. Both paths
+//! perform bitwise-identical IEEE arithmetic to Alg 1.2.
+
+use crate::rot::{OpSequence, PairOp};
+
+/// A packed stream of operations in wave order (§4's packing applied to the
+/// `C`/`S` matrices): wave `t` occupies scalars
+/// `[t·KR·W, (t+1)·KR·W)` where `W = Op::WIDTH`, op `u` of the wave first.
+///
+/// Building the stream is `O(n_b·k_r)` per kernel block — negligible next to
+/// the `O(m_b·n_b·k_r)` flops — and it is reused across all `m_b/m_r` row
+/// chunks (the §5.2 C/S reuse in L2).
+pub struct WaveStream {
+    data: Vec<f64>,
+    per_wave: usize,
+    nwaves: usize,
+}
+
+impl WaveStream {
+    /// Pack ops for waves `v0 .. v0+nwaves` of the subgroup of `kr` sequences
+    /// starting at absolute sequence `p0`: wave `v` holds ops
+    /// `(i = v - u, p = p0 + u)` for `u = 0..kr`, in that order.
+    ///
+    /// All referenced positions must be valid (`0 ≤ v-u ≤ n-2`): the caller
+    /// (phase decomposition, [`super::phases`]) guarantees this.
+    pub fn pack<S: OpSequence>(seq: &S, p0: usize, kr: usize, v0: usize, nwaves: usize) -> Self {
+        let w = <S::Op as PairOp>::WIDTH;
+        let per_wave = kr * w;
+        let mut data = vec![0.0; per_wave * nwaves];
+        for t in 0..nwaves {
+            let v = v0 + t;
+            for u in 0..kr {
+                let op = seq.get(v - u, p0 + u);
+                op.store(&mut data[t * per_wave + u * w..]);
+            }
+        }
+        Self {
+            data,
+            per_wave,
+            nwaves,
+        }
+    }
+
+    #[inline(always)]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn nwaves(&self) -> usize {
+        self.nwaves
+    }
+
+    pub fn per_wave(&self) -> usize {
+        self.per_wave
+    }
+}
+
+/// The register-window wave kernel (§3).
+///
+/// Applies `nwaves` waves of `KR` ops (from `stream`, packed by
+/// [`WaveStream::pack`]) to rows `r0 .. r0+MR` of a column-major panel
+/// `data` with leading dimension `ld`. The window initially covers columns
+/// `j0 .. j0+KR-1`; wave `t` (local wave `v = v0 + t`, `j0 = v0 - KR + 1`)
+/// loads column `j0+t+KR`, applies op `u` to the column pair
+/// `(v-u, v-u+1)` — window slots `(KR-1-u, KR-u)` — and retires column
+/// `j0+t` back to memory.
+///
+/// `KRP1` must equal `KR + 1` (checked); it exists because stable Rust
+/// cannot write `[[f64; MR]; KR + 1]`.
+#[inline]
+pub fn wave_kernel<Op: PairOp, const MR: usize, const KR: usize, const KRP1: usize>(
+    data: &mut [f64],
+    ld: usize,
+    r0: usize,
+    j0: usize,
+    stream: &WaveStream,
+) {
+    debug_assert_eq!(KRP1, KR + 1);
+    debug_assert_eq!(stream.per_wave, KR * Op::WIDTH);
+    let nwaves = stream.nwaves;
+    if nwaves == 0 {
+        return;
+    }
+    debug_assert!(
+        (j0 + nwaves + KR - 1) * ld + r0 + MR <= data.len(),
+        "kernel window out of bounds"
+    );
+    // The production sizes (k_r = 1 cleanup, k_r = 2 flagship) go through
+    // hand-specialized bodies whose window slots are *named locals* — the
+    // compiler keeps them in vector registers unconditionally. Exotic k_r
+    // (the Fig 6 sweep) uses the generic circular-slot loop below.
+    // MR is a monomorphization constant, so this match folds away.
+    if KR == 1 {
+        match MR {
+            4 => return wave_kernel_k1::<Op, 1>(data, ld, r0, j0, stream),
+            8 => return wave_kernel_k1::<Op, 2>(data, ld, r0, j0, stream),
+            12 => return wave_kernel_k1::<Op, 3>(data, ld, r0, j0, stream),
+            16 => return wave_kernel_k1::<Op, 4>(data, ld, r0, j0, stream),
+            24 => return wave_kernel_k1::<Op, 6>(data, ld, r0, j0, stream),
+            32 => return wave_kernel_k1::<Op, 8>(data, ld, r0, j0, stream),
+            _ => {}
+        }
+    }
+    if KR == 2 {
+        match MR {
+            4 => return wave_kernel_k2::<Op, 1>(data, ld, r0, j0, stream),
+            8 => return wave_kernel_k2::<Op, 2>(data, ld, r0, j0, stream),
+            12 => return wave_kernel_k2::<Op, 3>(data, ld, r0, j0, stream),
+            16 => return wave_kernel_k2::<Op, 4>(data, ld, r0, j0, stream),
+            24 => return wave_kernel_k2::<Op, 6>(data, ld, r0, j0, stream),
+            32 => return wave_kernel_k2::<Op, 8>(data, ld, r0, j0, stream),
+            _ => {}
+        }
+    }
+    let ops = &stream.data;
+
+    // Circular slot discipline: column `j0 + c` lives in slot `c % KRP1`.
+    // The main loop is unrolled by KRP1 waves so every slot index is a
+    // compile-time constant — the window never moves (the register-rotation
+    // trick of the paper's hand-written kernels), unlike a shifting window
+    // which costs KR·MR register moves per wave.
+    let mut win = [[0.0f64; MR]; KRP1];
+    // Preload the KR carried columns into slots 0..KR.
+    for s in 0..KR {
+        let base = (j0 + s) * ld + r0;
+        win[s].copy_from_slice(&data[base..base + MR]);
+    }
+
+    #[inline(always)]
+    fn wave_body<Op: PairOp, const MR: usize, const KR: usize, const KRP1: usize>(
+        data: &mut [f64],
+        ld: usize,
+        r0: usize,
+        j0: usize,
+        ops: &[f64],
+        win: &mut [[f64; MR]; KRP1],
+        t: usize,
+        phase: usize,
+    ) {
+        // Load incoming column j0+t+KR into slot (phase + KR) % KRP1.
+        let lbase = (j0 + t + KR) * ld + r0;
+        let in_slot = (phase + KR) % KRP1;
+        win[in_slot].copy_from_slice(&data[lbase..lbase + MR]);
+        // Op u acts on columns (v-u, v-u+1) = slots
+        // ((phase + KR-1-u) % KRP1, (phase + KR-u) % KRP1).
+        let sbase = t * KR * Op::WIDTH;
+        let wave_ops = &ops[sbase..sbase + KR * Op::WIDTH];
+        for u in 0..KR {
+            let op = Op::load(&wave_ops[u * Op::WIDTH..(u + 1) * Op::WIDTH]);
+            let lo = (phase + KR - 1 - u) % KRP1;
+            let hi = (phase + KR - u) % KRP1;
+            debug_assert_ne!(lo, hi);
+            // Split-borrow the two slots via raw indices (lo != hi).
+            for r in 0..MR {
+                let (x, y) = op.apply(win[lo][r], win[hi][r]);
+                win[lo][r] = x;
+                win[hi][r] = y;
+            }
+        }
+        // Retire column j0+t from slot phase.
+        let obase = (j0 + t) * ld + r0;
+        data[obase..obase + MR].copy_from_slice(&win[phase % KRP1]);
+    }
+
+    // Main loop: KRP1 waves per iteration, slot roles rotate through the
+    // unrolled phases and return to the start — zero data movement.
+    let full = nwaves / KRP1 * KRP1;
+    let mut t = 0;
+    while t < full {
+        for phase in 0..KRP1 {
+            wave_body::<Op, MR, KR, KRP1>(data, ld, r0, j0, ops, &mut win, t + phase, phase);
+        }
+        t += KRP1;
+    }
+    // Remainder waves (< KRP1): same body, then a compacting shift so the
+    // drain below always reads slots 0..KR.
+    let rem = nwaves - full;
+    for phase in 0..rem {
+        wave_body::<Op, MR, KR, KRP1>(data, ld, r0, j0, ops, &mut win, t + phase, phase);
+    }
+    if rem > 0 {
+        // After `rem` remainder waves the live columns j0+nwaves+s (s in
+        // 0..KR) sit in slots (rem + s) % KRP1; move them to slots s.
+        let mut tmp = [[0.0f64; MR]; KRP1];
+        for s in 0..KR {
+            tmp[s] = win[(rem + s) % KRP1];
+        }
+        win = tmp;
+    }
+    // Drain the KR carried columns.
+    for s in 0..KR {
+        let base = (j0 + nwaves + s) * ld + r0;
+        data[base..base + MR].copy_from_slice(&win[s]);
+    }
+}
+
+use std::simd::f64x4;
+
+/// Load `V` vectors (4·V rows) of column `j` into registers.
+///
+/// SAFETY contract (upheld by [`wave_kernel`]'s entry bound check): every
+/// column the wave schedule touches lies within `data`.
+#[inline(always)]
+fn load_col_v<const V: usize>(data: &[f64], ld: usize, r0: usize, j: usize) -> [f64x4; V] {
+    let base = j * ld + r0;
+    debug_assert!(base + 4 * V <= data.len());
+    let mut out = [f64x4::splat(0.0); V];
+    for v in 0..V {
+        // SAFETY: see contract above; `wave_kernel` asserts the maximal
+        // index of the whole schedule before dispatching here.
+        let lane = unsafe { data.get_unchecked(base + 4 * v..base + 4 * v + 4) };
+        out[v] = f64x4::from_slice(lane);
+    }
+    out
+}
+
+/// Store `V` vectors back to column `j` (same safety contract as
+/// [`load_col_v`]).
+#[inline(always)]
+fn store_col_v<const V: usize>(
+    data: &mut [f64],
+    ld: usize,
+    r0: usize,
+    j: usize,
+    vals: &[f64x4; V],
+) {
+    let base = j * ld + r0;
+    debug_assert!(base + 4 * V <= data.len());
+    for v in 0..V {
+        // SAFETY: see `load_col_v`.
+        let lane = unsafe { data.get_unchecked_mut(base + 4 * v..base + 4 * v + 4) };
+        vals[v].copy_to_slice(lane);
+    }
+}
+
+/// Unchecked op load from the packed stream (bounds asserted at kernel
+/// entry: the stream holds exactly `nwaves * per_wave` scalars).
+#[inline(always)]
+fn load_op<Op: PairOp>(ops: &[f64], at: usize) -> Op {
+    debug_assert!(at + Op::WIDTH <= ops.len());
+    // SAFETY: `at` is `t * per_wave + u * WIDTH` with `t < nwaves`.
+    Op::load(unsafe { ops.get_unchecked(at..at + Op::WIDTH) })
+}
+
+/// `k_r = 1` specialization: a fused single-sequence sweep with a
+/// two-column vector-register window, unrolled by 2 so the window never
+/// moves. `V` vectors of 4 rows = `m_r = 4·V`.
+#[allow(unused_assignments)]
+fn wave_kernel_k1<Op: PairOp, const V: usize>(
+    data: &mut [f64],
+    ld: usize,
+    r0: usize,
+    j0: usize,
+    stream: &WaveStream,
+) {
+    let nwaves = stream.nwaves;
+    let ops = &stream.data;
+    let w = Op::WIDTH;
+    let mut a: [f64x4; V] = load_col_v(data, ld, r0, j0);
+    let mut b: [f64x4; V];
+
+    macro_rules! wave {
+        ($t:expr, $x:ident, $y:ident) => {{
+            let t = $t;
+            $y = load_col_v(data, ld, r0, j0 + t + 1);
+            let op = load_op::<Op>(ops, t * w).splat();
+            for v in 0..V {
+                let (nx, ny) = Op::apply_simd(&op, $x[v], $y[v]);
+                $x[v] = nx;
+                $y[v] = ny;
+            }
+            store_col_v(data, ld, r0, j0 + t, &$x);
+        }};
+    }
+
+    let full = nwaves & !1;
+    let mut t = 0;
+    while t < full {
+        wave!(t, a, b);
+        wave!(t + 1, b, a);
+        t += 2;
+    }
+    if t < nwaves {
+        wave!(t, a, b);
+        a = b;
+    }
+    store_col_v(data, ld, r0, j0 + nwaves, &a);
+}
+
+/// `k_r = 2` specialization (the paper's preferred 16x2 shape): a
+/// three-column vector-register window, waves unrolled by 3 so the slot
+/// roles rotate back to the start with zero data movement. Within a wave
+/// the two ops are fused per row-vector, so the shared middle column never
+/// leaves registers (§1.3 fusion inside the wave).
+#[allow(unused_assignments)]
+fn wave_kernel_k2<Op: PairOp, const V: usize>(
+    data: &mut [f64],
+    ld: usize,
+    r0: usize,
+    j0: usize,
+    stream: &WaveStream,
+) {
+    let nwaves = stream.nwaves;
+    let ops = &stream.data;
+    let w = Op::WIDTH;
+    let per_wave = 2 * w;
+    let mut a: [f64x4; V] = load_col_v(data, ld, r0, j0);
+    let mut b: [f64x4; V] = load_col_v(data, ld, r0, j0 + 1);
+    let mut c: [f64x4; V];
+
+    // Rolling offsets (strength reduction): the incoming-column base, the
+    // retiring-column base and the op-stream cursor each advance by a
+    // constant per wave — no per-wave multiplies.
+    let mut in_base = (j0 + 2) * ld + r0;
+    let mut out_base = j0 * ld + r0;
+    let mut sbase = 0usize;
+
+    macro_rules! wave {
+        ($incoming:ident, $mid:ident, $old:ident) => {{
+            $incoming = load_col_at(data, in_base);
+            let op0 = load_op::<Op>(ops, sbase).splat(); // newer pair
+            let op1 = load_op::<Op>(ops, sbase + w).splat(); // older pair
+            for v in 0..V {
+                let (m1, i1) = Op::apply_simd(&op0, $mid[v], $incoming[v]);
+                let (o1, m2) = Op::apply_simd(&op1, $old[v], m1);
+                $old[v] = o1;
+                $mid[v] = m2;
+                $incoming[v] = i1;
+            }
+            store_col_at(data, out_base, &$old);
+            in_base += ld;
+            out_base += ld;
+            sbase += per_wave;
+        }};
+    }
+
+    let full = nwaves - nwaves % 3;
+    let mut t = 0;
+    while t < full {
+        wave!(c, b, a); // retire a; live: (b, c)
+        wave!(a, c, b); // retire b; live: (c, a)
+        wave!(b, a, c); // retire c; live: (a, b)
+        t += 3;
+    }
+    let rem = nwaves - full;
+    if rem == 0 {
+        store_col_v(data, ld, r0, j0 + nwaves, &a);
+        store_col_v(data, ld, r0, j0 + nwaves + 1, &b);
+    } else if rem == 1 {
+        wave!(c, b, a);
+        store_col_v(data, ld, r0, j0 + nwaves, &b);
+        store_col_v(data, ld, r0, j0 + nwaves + 1, &c);
+    } else {
+        wave!(c, b, a);
+        wave!(a, c, b);
+        store_col_v(data, ld, r0, j0 + nwaves, &c);
+        store_col_v(data, ld, r0, j0 + nwaves + 1, &a);
+    }
+}
+
+/// Absolute-offset column load (rolling-base form of [`load_col_v`]).
+#[inline(always)]
+fn load_col_at<const V: usize>(data: &[f64], base: usize) -> [f64x4; V] {
+    debug_assert!(base + 4 * V <= data.len());
+    let mut out = [f64x4::splat(0.0); V];
+    for v in 0..V {
+        // SAFETY: see `load_col_v`.
+        let lane = unsafe { data.get_unchecked(base + 4 * v..base + 4 * v + 4) };
+        out[v] = f64x4::from_slice(lane);
+    }
+    out
+}
+
+/// Absolute-offset column store.
+#[inline(always)]
+fn store_col_at<const V: usize>(data: &mut [f64], base: usize, vals: &[f64x4; V]) {
+    debug_assert!(base + 4 * V <= data.len());
+    for v in 0..V {
+        // SAFETY: see `load_col_v`.
+        let lane = unsafe { data.get_unchecked_mut(base + 4 * v..base + 4 * v + 4) };
+        vals[v].copy_to_slice(lane);
+    }
+}
+
+/// Kernel sizes benchmarked in Fig 6 (plus the MR=1 correctness fallback
+/// used for row remainders). `(m_r, k_r)` pairs.
+pub const SUPPORTED_KERNELS: &[(usize, usize)] = &[
+    (4, 2),
+    (8, 1),
+    (8, 2),
+    (8, 5),
+    (12, 2),
+    (12, 3),
+    (16, 1),
+    (16, 2),
+    (16, 4),
+    (24, 2),
+    (32, 2),
+];
+
+/// Whether a `(m_r, k_r)` kernel is available for dispatch.
+pub fn kernel_supported(mr: usize, kr: usize) -> bool {
+    SUPPORTED_KERNELS.contains(&(mr, kr))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::Matrix;
+    use crate::rot::{apply_naive, Givens, RotationSequence};
+
+    /// Apply one subgroup's pipeline with the kernel and compare to naive.
+    fn run_kernel_case<const MR: usize, const KR: usize, const KRP1: usize>(
+        n: usize,
+        seed: u64,
+    ) {
+        // KR sequences, pipeline covers all waves where every op is valid:
+        // v in [KR-1, n-2]. Precede/follow with the triangular ops applied
+        // naively so the full sequence set is covered.
+        let k = KR;
+        let seq = RotationSequence::random(n, k, seed);
+        let mut a_ref = Matrix::random(MR, n, seed + 1);
+        let mut a_ker = a_ref.clone();
+
+        apply_naive(&mut a_ref, &seq);
+
+        // Kernel path: startup triangle naively (waves < KR-1), pipeline via
+        // kernel, shutdown triangle naively (waves > n-2).
+        // Startup: ops (i, p) with i + p < KR - 1, sequence-major.
+        for p in 0..k {
+            for i in 0..(KR - 1).saturating_sub(p).min(n - 1) {
+                let g = seq.get(i, p);
+                crate::rot::apply_rotation(&mut a_ker, i, g);
+            }
+        }
+        let v0 = KR - 1;
+        let nwaves = (n - 1) - v0;
+        let stream = WaveStream::pack(&seq, 0, KR, v0, nwaves);
+        let ld = a_ker.ld();
+        wave_kernel::<Givens, MR, KR, KRP1>(a_ker.data_mut(), ld, 0, v0 + 1 - KR, &stream);
+        // Shutdown: ops (i, p) with i + p > n - 2, sequence-major.
+        for p in 0..k {
+            let lo = (n - 1 - p).max(0);
+            for i in lo..n - 1 {
+                let g = seq.get(i, p);
+                crate::rot::apply_rotation(&mut a_ker, i, g);
+            }
+        }
+
+        assert_eq!(
+            crate::matrix::max_abs_diff(&a_ref, &a_ker),
+            0.0,
+            "kernel MR={MR} KR={KR} n={n} must be bitwise-identical to naive"
+        );
+    }
+
+    #[test]
+    fn kernel_16x2_matches_naive() {
+        run_kernel_case::<16, 2, 3>(12, 3);
+        run_kernel_case::<16, 2, 3>(40, 4);
+    }
+
+    #[test]
+    fn kernel_8x5_matches_naive() {
+        run_kernel_case::<8, 5, 6>(16, 5);
+        run_kernel_case::<8, 5, 6>(33, 6);
+    }
+
+    #[test]
+    fn kernel_12x3_matches_naive() {
+        run_kernel_case::<12, 3, 4>(19, 7);
+    }
+
+    #[test]
+    fn kernel_1x1_matches_naive() {
+        run_kernel_case::<1, 1, 2>(7, 8);
+    }
+
+    #[test]
+    fn kernel_4x2_and_16x4() {
+        run_kernel_case::<4, 2, 3>(21, 9);
+        run_kernel_case::<16, 4, 5>(26, 10);
+    }
+
+    #[test]
+    fn wave_stream_layout() {
+        let seq = RotationSequence::random(10, 3, 2);
+        let s = WaveStream::pack(&seq, 0, 3, 2, 4);
+        assert_eq!(s.nwaves(), 4);
+        assert_eq!(s.per_wave(), 6);
+        // wave t=1 (v=3), u=2 -> op (1, 2)
+        let g = seq.get(1, 2);
+        assert_eq!(s.data()[1 * 6 + 2 * 2], g.c);
+        assert_eq!(s.data()[1 * 6 + 2 * 2 + 1], g.s);
+    }
+
+    #[test]
+    fn empty_stream_is_noop() {
+        let seq = RotationSequence::random(6, 2, 3);
+        let s = WaveStream::pack(&seq, 0, 2, 1, 0);
+        let mut a = Matrix::random(8, 6, 1);
+        let orig = a.clone();
+        let ld = a.ld();
+        wave_kernel::<Givens, 8, 2, 3>(a.data_mut(), ld, 0, 0, &s);
+        assert_eq!(a, orig);
+    }
+
+    #[test]
+    fn supported_kernel_list() {
+        assert!(kernel_supported(16, 2));
+        assert!(kernel_supported(8, 5));
+        assert!(!kernel_supported(7, 3));
+    }
+
+    #[test]
+    fn kernel_respects_row_offset() {
+        // Applying to rows [4, 4+8) must leave other rows untouched.
+        let n = 14;
+        let seq = RotationSequence::random(n, 2, 11);
+        let mut a = Matrix::random(16, n, 12);
+        let orig = a.clone();
+        let v0 = 1;
+        let nwaves = (n - 1) - v0;
+        let stream = WaveStream::pack(&seq, 0, 2, v0, nwaves);
+        let ld = a.ld();
+        wave_kernel::<Givens, 8, 2, 3>(a.data_mut(), ld, 4, 0, &stream);
+        for j in 0..n {
+            for i in 0..4 {
+                assert_eq!(a.get(i, j), orig.get(i, j), "row {i} col {j} below offset");
+            }
+            for i in 12..16 {
+                assert_eq!(a.get(i, j), orig.get(i, j), "row {i} col {j} above window");
+            }
+        }
+    }
+}

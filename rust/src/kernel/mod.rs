@@ -1,0 +1,398 @@
+//! The paper's optimized algorithms and the variant dispatcher.
+//!
+//! Every variant of the paper's §8 evaluation is available behind
+//! [`Algorithm`] + [`apply`]:
+//!
+//! | variant | paper name | implementation |
+//! |---------|------------|----------------|
+//! | [`Algorithm::Naive`] | `rs_unoptimized` | Alg 1.2, [`crate::rot::apply_naive`] |
+//! | [`Algorithm::Wavefront`] | (Alg 1.3) | [`crate::rot::apply_wavefront`] |
+//! | [`Algorithm::Blocked`] | `rs_blocked` | §2 blocking, plain inner loop |
+//! | [`Algorithm::Fused`] | `rs_fused` | §1.3 2x2 fused tiles ([10]) |
+//! | [`Algorithm::Gemm`] | `rs_gemm` | accumulate + DGEMM ([`crate::gemm`]) |
+//! | [`Algorithm::Kernel`] | `rs_kernel` | §3 kernel + §4 packing + §5 blocking |
+//! | [`Algorithm::KernelNoPack`] | (ablation) | §3 kernel without packing |
+//! | packed API | `rs_kernel_v2` | [`apply_kernel_packed`] |
+//!
+//! All of them are generic over [`OpSequence`], so the 2x2-reflector
+//! versions (Fig 8) come from the same code.
+
+mod block;
+mod fused;
+pub mod microkernel;
+pub mod phases;
+
+pub use block::{apply_blocked, BlockConfig};
+pub use fused::apply_fused;
+pub use microkernel::{kernel_supported, wave_kernel, WaveStream, SUPPORTED_KERNELS};
+
+use crate::blocking::KernelConfig;
+use crate::matrix::Matrix;
+use crate::pack::{PackedMatrix, PackedPanel};
+use crate::rot::{OpSequence, PairOp, RotationSequence};
+use anyhow::{bail, Result};
+use phases::{plan_kblock, run_kblock, KBlockPlan};
+
+/// Algorithm variants evaluated in the paper (§8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// `rs_unoptimized` — Alg 1.2.
+    Naive,
+    /// Alg 1.3 — wavefront reordering, no blocking.
+    Wavefront,
+    /// `rs_blocked` — §2 blocking, plain rotation loop.
+    Blocked,
+    /// `rs_fused` — 2x2 fused rotations ([10]).
+    Fused,
+    /// `rs_gemm` — accumulate into orthogonal factors, apply with DGEMM.
+    Gemm,
+    /// `rs_kernel` — the paper's algorithm (§3 kernel, §4 packing, §5 blocks).
+    Kernel,
+    /// `rs_kernel` without the packing step (ablation of §4).
+    KernelNoPack,
+}
+
+impl Algorithm {
+    /// All variants, in the order of the paper's Fig 5 legend.
+    pub const ALL: &'static [Algorithm] = &[
+        Algorithm::Naive,
+        Algorithm::Wavefront,
+        Algorithm::Blocked,
+        Algorithm::Fused,
+        Algorithm::Gemm,
+        Algorithm::Kernel,
+        Algorithm::KernelNoPack,
+    ];
+
+    /// The paper's name for this variant.
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            Algorithm::Naive => "rs_unoptimized",
+            Algorithm::Wavefront => "rs_wavefront",
+            Algorithm::Blocked => "rs_blocked",
+            Algorithm::Fused => "rs_fused",
+            Algorithm::Gemm => "rs_gemm",
+            Algorithm::Kernel => "rs_kernel",
+            Algorithm::KernelNoPack => "rs_kernel_nopack",
+        }
+    }
+
+    /// Parse a CLI name (either enum-ish or the paper's `rs_*` names).
+    pub fn parse(name: &str) -> Result<Algorithm> {
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "naive" | "rs_unoptimized" | "unoptimized" => Algorithm::Naive,
+            "wavefront" | "rs_wavefront" => Algorithm::Wavefront,
+            "blocked" | "rs_blocked" => Algorithm::Blocked,
+            "fused" | "rs_fused" => Algorithm::Fused,
+            "gemm" | "rs_gemm" => Algorithm::Gemm,
+            "kernel" | "rs_kernel" => Algorithm::Kernel,
+            "kernel_nopack" | "rs_kernel_nopack" => Algorithm::KernelNoPack,
+            other => bail!("unknown algorithm '{other}'"),
+        })
+    }
+}
+
+/// Apply a rotation sequence set with the chosen algorithm and default
+/// (planner-derived) parameters.
+pub fn apply(algo: Algorithm, a: &mut Matrix, seq: &RotationSequence) -> Result<()> {
+    apply_with(algo, a, seq, &KernelConfig::default())
+}
+
+/// Apply with explicit kernel/block parameters.
+pub fn apply_with(
+    algo: Algorithm,
+    a: &mut Matrix,
+    seq: &RotationSequence,
+    cfg: &KernelConfig,
+) -> Result<()> {
+    match algo {
+        Algorithm::Naive => crate::rot::apply_naive(a, seq),
+        Algorithm::Wavefront => crate::rot::apply_wavefront(a, seq),
+        Algorithm::Blocked => apply_blocked(
+            a,
+            seq,
+            &BlockConfig {
+                mb: cfg.mb,
+                kb: cfg.kb,
+                nb: cfg.nb,
+            },
+        ),
+        Algorithm::Fused => apply_fused(a, seq, usize::MAX),
+        Algorithm::Gemm => crate::gemm::apply_gemm(a, seq, cfg.nb.max(cfg.kb), cfg.mb),
+        Algorithm::Kernel => apply_kernel(a, seq, cfg)?,
+        Algorithm::KernelNoPack => apply_kernel_unpacked(a, seq, cfg)?,
+    }
+    Ok(())
+}
+
+/// `rs_kernel`: pack each `m_b` row-panel into §4 micro-panel format, run
+/// the §5 loop nest with the §3 kernel, unpack.
+pub fn apply_kernel<S: OpSequence>(a: &mut Matrix, seq: &S, cfg: &KernelConfig) -> Result<()> {
+    assert_eq!(a.cols(), seq.n(), "matrix/sequence column mismatch");
+    let m = a.rows();
+    let mut ib = 0;
+    while ib < m {
+        let rows = cfg.mb.min(m - ib);
+        let mut panel = PackedPanel::pack(a, ib, rows, cfg.mr);
+        run_panel_packed(&mut panel, seq, cfg)?;
+        panel.unpack(a, ib);
+        ib += rows;
+    }
+    Ok(())
+}
+
+/// `rs_kernel` without packing (ablation): kernels run directly on the
+/// caller's (possibly unaligned, large-`ld`) storage.
+pub fn apply_kernel_unpacked<S: OpSequence>(
+    a: &mut Matrix,
+    seq: &S,
+    cfg: &KernelConfig,
+) -> Result<()> {
+    assert_eq!(a.cols(), seq.n(), "matrix/sequence column mismatch");
+    let m = a.rows();
+    let ld = a.ld();
+    let mut ib = 0;
+    while ib < m {
+        let rows = cfg.mb.min(m - ib);
+        run_panel_at(a.data_mut(), ld, ib, rows, seq, cfg)?;
+        ib += rows;
+    }
+    Ok(())
+}
+
+/// `rs_kernel_v2`: the matrix is already in packed-panel form and stays
+/// there (§8: repacking on every call is wasteful if the caller can keep
+/// `A` packed).
+pub fn apply_kernel_packed<S: OpSequence>(
+    pm: &mut PackedMatrix,
+    seq: &S,
+    cfg: &KernelConfig,
+) -> Result<()> {
+    assert_eq!(pm.cols(), seq.n(), "matrix/sequence column mismatch");
+    for panel in pm.panels_mut() {
+        run_panel_packed(panel, seq, cfg)?;
+    }
+    Ok(())
+}
+
+/// The §5 loop nest on one micro-panel packed panel. Public for the
+/// parallel scheduler ([`crate::parallel`]), which owns its panels.
+pub fn run_panel_packed<S: OpSequence>(
+    panel: &mut PackedPanel,
+    seq: &S,
+    cfg: &KernelConfig,
+) -> Result<()> {
+    let n = seq.n();
+    let k = seq.k();
+    if n < 2 || k == 0 || panel.rows() == 0 {
+        return Ok(());
+    }
+    anyhow::ensure!(
+        panel.mr() == cfg.mr,
+        "panel packed for m_r={} but config wants m_r={}",
+        panel.mr(),
+        cfg.mr
+    );
+    let chunks = panel.chunks();
+    let stride = panel.chunk_stride();
+    let kb_max = cfg.kb.min(n - 1).max(1);
+    let mut pb = 0;
+    while pb < k {
+        let kbe = kb_max.min(k - pb);
+        // kr > kbe is fine: the plan then routes every sequence through the
+        // KR = 1 remainder path, so the dispatched (mr, kr) stays supported.
+        let plan = plan_kblock(seq, pb, kbe, cfg.kr, cfg.nb);
+        dispatch_kblock_packed::<S::Op>(panel.data_mut(), chunks, stride, &plan, cfg.mr, cfg.kr)?;
+        pb += kbe;
+    }
+    Ok(())
+}
+
+/// The §5 loop nest on caller-owned (unpacked, `ld`-strided) storage.
+fn run_panel_at<S: OpSequence>(
+    data: &mut [f64],
+    ld: usize,
+    r0: usize,
+    rows: usize,
+    seq: &S,
+    cfg: &KernelConfig,
+) -> Result<()> {
+    let n = seq.n();
+    let k = seq.k();
+    if n < 2 || k == 0 {
+        return Ok(());
+    }
+    let kb_max = cfg.kb.min(n - 1).max(1);
+    let mut pb = 0;
+    while pb < k {
+        let kbe = kb_max.min(k - pb);
+        let plan = plan_kblock(seq, pb, kbe, cfg.kr, cfg.nb);
+        dispatch_kblock::<S::Op>(data, ld, r0, rows, &plan, cfg.mr, cfg.kr)?;
+        pb += kbe;
+    }
+    Ok(())
+}
+
+/// Every supported `(m_r, k_r)` pair expanded through a macro, shared by
+/// both dispatchers.
+macro_rules! dispatch_sizes {
+    ($mr:expr, $kr:expr, $case:ident) => {
+        match ($mr, $kr) {
+            (1, 1) => $case!(1, 1, 2),
+            (4, 2) => $case!(4, 2, 3),
+            (8, 1) => $case!(8, 1, 2),
+            (8, 2) => $case!(8, 2, 3),
+            (8, 5) => $case!(8, 5, 6),
+            (12, 2) => $case!(12, 2, 3),
+            (12, 3) => $case!(12, 3, 4),
+            (16, 1) => $case!(16, 1, 2),
+            (16, 2) => $case!(16, 2, 3),
+            (16, 4) => $case!(16, 4, 5),
+            (24, 2) => $case!(24, 2, 3),
+            (32, 2) => $case!(32, 2, 3),
+            (mr, kr) => bail!("unsupported kernel size m_r={mr}, k_r={kr}"),
+        }
+    };
+}
+
+/// Monomorphization dispatch (unpacked, `ld`-strided storage).
+fn dispatch_kblock<Op: PairOp>(
+    data: &mut [f64],
+    ld: usize,
+    r0: usize,
+    rows: usize,
+    plan: &KBlockPlan,
+    mr: usize,
+    kr: usize,
+) -> Result<()> {
+    macro_rules! case {
+        ($mr:literal, $kr:literal, $krp1:literal) => {
+            run_kblock::<Op, $mr, $kr, $krp1>(data, ld, r0, rows, plan)
+        };
+    }
+    dispatch_sizes!(mr, kr, case);
+    Ok(())
+}
+
+/// Monomorphization dispatch (§4 micro-panel packed storage).
+fn dispatch_kblock_packed<Op: PairOp>(
+    data: &mut [f64],
+    chunks: usize,
+    chunk_stride: usize,
+    plan: &KBlockPlan,
+    mr: usize,
+    kr: usize,
+) -> Result<()> {
+    macro_rules! case {
+        ($mr:literal, $kr:literal, $krp1:literal) => {
+            phases::run_kblock_packed::<Op, $mr, $kr, $krp1>(data, chunks, chunk_stride, plan)
+        };
+    }
+    dispatch_sizes!(mr, kr, case);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{max_abs_diff, Matrix};
+    use crate::rot::{apply_naive, ReflectorSequence};
+
+    fn cfg(mr: usize, kr: usize, mb: usize, kb: usize, nb: usize) -> KernelConfig {
+        KernelConfig {
+            mr,
+            kr,
+            mb,
+            kb,
+            nb,
+            threads: 1,
+        }
+    }
+
+    #[test]
+    fn all_algorithms_match_naive() {
+        let (m, n, k) = (37, 29, 11);
+        let seq = RotationSequence::random(n, k, 5);
+        let mut reference = Matrix::random(m, n, 6);
+        let orig = reference.clone();
+        apply_naive(&mut reference, &seq);
+
+        for &algo in Algorithm::ALL {
+            let mut a = orig.clone();
+            apply_with(algo, &mut a, &seq, &cfg(8, 2, 16, 4, 7)).unwrap();
+            let err = max_abs_diff(&a, &reference);
+            let tol = if algo == Algorithm::Gemm { 1e-12 } else { 0.0 };
+            assert!(
+                err <= tol,
+                "{} differs from naive by {err}",
+                algo.paper_name()
+            );
+        }
+    }
+
+    #[test]
+    fn kernel_matches_naive_many_shapes() {
+        for (m, n, k, mr, kr, mb, kb, nb, seed) in [
+            (16, 20, 4, 16, 2, 16, 4, 8, 1u64),
+            (33, 40, 13, 8, 5, 12, 6, 9, 2),
+            (7, 9, 2, 4, 2, 4, 2, 3, 3),
+            (50, 25, 30, 12, 3, 20, 6, 5, 4),
+            (5, 300, 1, 16, 2, 64, 60, 216, 5),
+            (64, 12, 180, 16, 2, 48, 11, 216, 6),
+        ] {
+            let seq = RotationSequence::random(n, k, seed);
+            let mut a_ref = Matrix::random(m, n, seed + 50);
+            let mut a_ker = a_ref.clone();
+            apply_naive(&mut a_ref, &seq);
+            apply_kernel(&mut a_ker, &seq, &cfg(mr, kr, mb, kb, nb)).unwrap();
+            assert_eq!(
+                max_abs_diff(&a_ref, &a_ker),
+                0.0,
+                "kernel m={m} n={n} k={k} mr={mr} kr={kr}"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_v2_matches_kernel() {
+        let (m, n, k) = (41, 23, 9);
+        let seq = RotationSequence::random(n, k, 7);
+        let a = Matrix::random(m, n, 8);
+        let c = cfg(16, 2, 12, 4, 6);
+
+        let mut a1 = a.clone();
+        apply_kernel(&mut a1, &seq, &c).unwrap();
+
+        let mut pm = PackedMatrix::from_matrix(&a, c.mb, c.mr);
+        apply_kernel_packed(&mut pm, &seq, &c).unwrap();
+        let a2 = pm.to_matrix();
+        assert_eq!(max_abs_diff(&a1, &a2), 0.0);
+    }
+
+    #[test]
+    fn kernel_works_for_reflectors() {
+        let (m, n, k) = (19, 15, 6);
+        let seq = ReflectorSequence::random(n, k, 9);
+        let mut a_ref = Matrix::random(m, n, 10);
+        let mut a_ker = a_ref.clone();
+        crate::rot::apply_reflector_sequence_naive(&mut a_ref, &seq);
+        apply_kernel(&mut a_ker, &seq, &cfg(12, 2, 8, 4, 5)).unwrap();
+        assert_eq!(max_abs_diff(&a_ref, &a_ker), 0.0);
+    }
+
+    #[test]
+    fn unsupported_kernel_size_errors() {
+        let seq = RotationSequence::random(8, 2, 1);
+        let mut a = Matrix::random(4, 8, 2);
+        let err = apply_kernel(&mut a, &seq, &cfg(7, 3, 4, 2, 4));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn algorithm_parse_round_trip() {
+        for &algo in Algorithm::ALL {
+            assert_eq!(Algorithm::parse(algo.paper_name()).unwrap(), algo);
+        }
+        assert!(Algorithm::parse("nonsense").is_err());
+    }
+}

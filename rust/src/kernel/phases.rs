@@ -1,0 +1,322 @@
+//! Phase decomposition of a `k`-block (§2, §5.4, §8 footnote 2).
+//!
+//! A `k`-block applies `kb` consecutive sequences (absolute indices
+//! `pb .. pb+kb`) to a row panel. In wave coordinates `w = i + l`
+//! (`l = p - pb` local sequence index) the block splits into
+//!
+//! * **startup**  — waves `[0, kb-1)`: triangular, sequence `l` contributes
+//!   ops `i ∈ [0, kb-1-l)`;
+//! * **pipeline** — waves `[kb-1, n-1)`: every wave is full; chunked into
+//!   `n_b`-wave parallelogram blocks (the §2 blocks) and executed by the
+//!   §3 kernel in subgroups of `k_r` sequences;
+//! * **shutdown** — waves `[n-1, n+kb-2]`: triangular, sequence `l`
+//!   contributes ops `i ∈ [n-1-l, n-1)`.
+//!
+//! Following the paper (§8: "switches to an m_r x 1 kernel to apply the
+//! startup and shutdown phases"), the triangular phases use the `KR = 1`
+//! wave kernel, which is a fused single-sequence sweep.
+//!
+//! Validity: the three phases partition the block by wave ranges and are
+//! processed in ascending wave order; within each phase processing is
+//! sequence-major, which respects both dependency rules
+//! (`(i-1, p)` before `(i, p)`; `(i+1, p)` before `(i, p+1)`).
+
+use super::microkernel::{wave_kernel, WaveStream};
+use crate::rot::{OpSequence, PairOp};
+
+/// One kernel invocation inside a phase: subgroup-local start wave `v0`
+/// plus the packed op stream. `full_group` distinguishes `k_r`-wide
+/// subgroups (run with the `(MR, KR)` kernel) from single-sequence cleanup
+/// streams (run with the `KR = 1` kernel).
+pub struct KernelCall {
+    pub v0: usize,
+    pub full_group: bool,
+    pub stream: WaveStream,
+}
+
+/// Per-`k`-block plan: packed wave streams, built once and reused across
+/// all row chunks (the §5.2 "C and S stay in L2" reuse).
+pub struct KBlockPlan {
+    /// Startup triangle: single-sequence sweeps, ascending local sequence.
+    pub startup: Vec<KernelCall>,
+    /// Pipeline wave-chunks in ascending wave order; within a chunk,
+    /// subgroups in ascending local-sequence order.
+    pub pipeline: Vec<Vec<KernelCall>>,
+    /// Shutdown triangle: single-sequence sweeps, ascending local sequence.
+    pub shutdown: Vec<KernelCall>,
+}
+
+/// Build the phase plan for a `k`-block.
+///
+/// * `seq` — the full sequence set; `pb`, `kb` select the block;
+/// * `kr` — kernel subgroup width; `nb` — pipeline wave-chunk size.
+///
+/// Requires `kb <= n - 1` (the paper's Alg 1.3 assumption; the top-level
+/// driver clamps block sizes to guarantee it).
+pub fn plan_kblock<S: OpSequence>(
+    seq: &S,
+    pb: usize,
+    kb: usize,
+    kr: usize,
+    nb: usize,
+) -> KBlockPlan {
+    let n = seq.n();
+    assert!(kb >= 1 && kb <= n - 1, "k-block requires 1 <= kb <= n-1");
+    assert!(kr >= 1 && nb >= 1);
+
+    // Startup: sequence l covers i in [0, kb-1-l): KR=1 waves v = i from 0.
+    let mut startup = Vec::new();
+    for l in 0..kb {
+        let end = kb - 1 - l;
+        if end > 0 {
+            startup.push(KernelCall {
+                v0: 0,
+                full_group: false,
+                stream: WaveStream::pack(seq, pb + l, 1, 0, end),
+            });
+        }
+    }
+
+    // Pipeline: waves [kb-1, n-1) in chunks of nb.
+    let mut pipeline = Vec::new();
+    let (w_lo, w_hi) = (kb - 1, n - 1);
+    let mut w0 = w_lo;
+    while w0 < w_hi {
+        let w1 = (w0 + nb).min(w_hi);
+        let mut chunk = Vec::new();
+        let full_groups = kb / kr;
+        for g in 0..full_groups {
+            let l0 = g * kr;
+            chunk.push(KernelCall {
+                v0: w0 - l0,
+                full_group: true,
+                stream: WaveStream::pack(seq, pb + l0, kr, w0 - l0, w1 - w0),
+            });
+        }
+        for l in full_groups * kr..kb {
+            chunk.push(KernelCall {
+                v0: w0 - l,
+                full_group: false,
+                stream: WaveStream::pack(seq, pb + l, 1, w0 - l, w1 - w0),
+            });
+        }
+        pipeline.push(chunk);
+        w0 = w1;
+    }
+
+    // Shutdown: sequence l covers i in [n-1-l, n-1): KR=1 waves from n-1-l.
+    let mut shutdown = Vec::new();
+    for l in 1..kb {
+        shutdown.push(KernelCall {
+            v0: n - 1 - l,
+            full_group: false,
+            stream: WaveStream::pack(seq, pb + l, 1, n - 1 - l, l),
+        });
+    }
+
+    KBlockPlan {
+        startup,
+        pipeline,
+        shutdown,
+    }
+}
+
+#[inline]
+fn run_call<Op: PairOp, const MR: usize, const KR: usize, const KRP1: usize>(
+    data: &mut [f64],
+    ld: usize,
+    r: usize,
+    call: &KernelCall,
+) {
+    if call.full_group {
+        wave_kernel::<Op, MR, KR, KRP1>(data, ld, r, call.v0 + 1 - KR, &call.stream);
+    } else {
+        wave_kernel::<Op, MR, 1, 2>(data, ld, r, call.v0, &call.stream);
+    }
+}
+
+/// Execute a planned `k`-block on rows `r0 .. r0+rows` of a column-major
+/// panel (`data`, `ld`), using the `(MR, KR)` kernel for full pipeline
+/// subgroups. Rows are chunked by `MR`; remainder rows (rows % MR) run
+/// through the same schedule with `MR = 1` kernels (rows are independent,
+/// so any per-row order is valid).
+pub fn run_kblock<Op: PairOp, const MR: usize, const KR: usize, const KRP1: usize>(
+    data: &mut [f64],
+    ld: usize,
+    r0: usize,
+    rows: usize,
+    plan: &KBlockPlan,
+) {
+    let full = rows / MR * MR;
+
+    // Startup (KR = 1 kernel).
+    for call in &plan.startup {
+        let mut r = 0;
+        while r < full {
+            run_call::<Op, MR, 1, 2>(data, ld, r0 + r, call);
+            r += MR;
+        }
+        for r in full..rows {
+            run_call::<Op, 1, 1, 2>(data, ld, r0 + r, call);
+        }
+    }
+
+    // Pipeline chunks: row loop outside the subgroup loop (§5.2: the
+    // m_r x n_b panel block stays in L1 across the k_b/k_r kernel calls).
+    for chunk in &plan.pipeline {
+        let mut r = 0;
+        while r < full {
+            for call in chunk {
+                run_call::<Op, MR, KR, KRP1>(data, ld, r0 + r, call);
+            }
+            r += MR;
+        }
+        for r in full..rows {
+            for call in chunk {
+                run_call::<Op, 1, KR, KRP1>(data, ld, r0 + r, call);
+            }
+        }
+    }
+
+    // Shutdown (KR = 1 kernel).
+    for call in &plan.shutdown {
+        let mut r = 0;
+        while r < full {
+            run_call::<Op, MR, 1, 2>(data, ld, r0 + r, call);
+            r += MR;
+        }
+        for r in full..rows {
+            run_call::<Op, 1, 1, 2>(data, ld, r0 + r, call);
+        }
+    }
+}
+
+/// Execute a planned `k`-block on a §4 micro-panel packed panel: `chunks`
+/// chunks of exactly `MR` rows (the last zero-padded — rotations keep the
+/// padding at zero), each `chunk_stride` doubles apart with columns at
+/// stride `MR`. No remainder path needed.
+pub fn run_kblock_packed<Op: PairOp, const MR: usize, const KR: usize, const KRP1: usize>(
+    data: &mut [f64],
+    chunks: usize,
+    chunk_stride: usize,
+    plan: &KBlockPlan,
+) {
+    for call in &plan.startup {
+        for c in 0..chunks {
+            run_call::<Op, MR, 1, 2>(&mut data[c * chunk_stride..], MR, 0, call);
+        }
+    }
+    // Pipeline: chunk (row) loop outside the subgroup loop (§5.2).
+    for chunk_calls in &plan.pipeline {
+        for c in 0..chunks {
+            let panel = &mut data[c * chunk_stride..];
+            for call in chunk_calls {
+                run_call::<Op, MR, KR, KRP1>(panel, MR, 0, call);
+            }
+        }
+    }
+    for call in &plan.shutdown {
+        for c in 0..chunks {
+            run_call::<Op, MR, 1, 2>(&mut data[c * chunk_stride..], MR, 0, call);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{max_abs_diff, Matrix};
+    use crate::rot::{apply_naive, Givens, RotationSequence};
+
+    fn run_full<const MR: usize, const KR: usize, const KRP1: usize>(
+        m: usize,
+        n: usize,
+        k: usize,
+        nb: usize,
+        seed: u64,
+    ) {
+        let seq = RotationSequence::random(n, k, seed);
+        let mut a_ref = Matrix::random(m, n, seed + 100);
+        let mut a_ker = a_ref.clone();
+        apply_naive(&mut a_ref, &seq);
+
+        let plan = plan_kblock(&seq, 0, k, KR, nb);
+        let ld = a_ker.ld();
+        run_kblock::<Givens, MR, KR, KRP1>(a_ker.data_mut(), ld, 0, m, &plan);
+
+        assert_eq!(
+            max_abs_diff(&a_ref, &a_ker),
+            0.0,
+            "kblock MR={MR} KR={KR} m={m} n={n} k={k} nb={nb}"
+        );
+    }
+
+    #[test]
+    fn kblock_matches_naive_16x2() {
+        run_full::<16, 2, 3>(16, 20, 4, 8, 1);
+        run_full::<16, 2, 3>(35, 33, 6, 5, 2); // row remainder
+    }
+
+    #[test]
+    fn kblock_matches_naive_8x5() {
+        run_full::<8, 5, 6>(24, 30, 10, 7, 3);
+        run_full::<8, 5, 6>(9, 25, 7, 100, 4); // kr remainder (7 % 5)
+    }
+
+    #[test]
+    fn kblock_matches_naive_12x3() {
+        run_full::<12, 3, 4>(12, 18, 3, 3, 5);
+    }
+
+    #[test]
+    fn kblock_single_sequence() {
+        run_full::<16, 2, 3>(16, 10, 1, 4, 6);
+    }
+
+    #[test]
+    fn kblock_k_equals_n_minus_1() {
+        run_full::<8, 2, 3>(8, 9, 8, 4, 7);
+    }
+
+    #[test]
+    fn kblock_tiny_nb() {
+        run_full::<4, 2, 3>(5, 14, 4, 1, 8);
+    }
+
+    #[test]
+    fn plan_counts() {
+        let seq = RotationSequence::random(20, 6, 9);
+        let plan = plan_kblock(&seq, 0, 6, 2, 5);
+        // startup: sequences 0..5 have non-empty ranges (kb-1-l > 0 for l<5)
+        assert_eq!(plan.startup.len(), 5);
+        // shutdown: sequences 1..6
+        assert_eq!(plan.shutdown.len(), 5);
+        // pipeline waves [5, 19) in chunks of 5 -> 3 chunks
+        assert_eq!(plan.pipeline.len(), 3);
+        // each chunk: 3 full subgroups, no remainder
+        assert!(plan.pipeline.iter().all(|c| c.len() == 3));
+        assert!(plan.pipeline[0].iter().all(|c| c.full_group));
+    }
+
+    #[test]
+    fn total_ops_in_plan_cover_block() {
+        // Sum of waves*kr over all calls must equal kb*(n-1) ops.
+        let (n, kb, kr, nb) = (17, 5, 2, 4);
+        let seq = RotationSequence::random(n, kb, 10);
+        let plan = plan_kblock(&seq, 0, kb, kr, nb);
+        let mut total = 0usize;
+        for c in &plan.startup {
+            total += c.stream.nwaves();
+        }
+        for chunk in &plan.pipeline {
+            for c in chunk {
+                let width = if c.full_group { kr } else { 1 };
+                total += c.stream.nwaves() * width;
+            }
+        }
+        for c in &plan.shutdown {
+            total += c.stream.nwaves();
+        }
+        assert_eq!(total, kb * (n - 1));
+    }
+}

@@ -1,0 +1,53 @@
+#![feature(portable_simd)]
+//! # rotseq — communication-efficient application of sequences of planar rotations
+//!
+//! A full-system reproduction of
+//! *"Communication efficient application of sequences of planar rotations to a
+//! matrix"* (Thijs Steel & Julien Langou, 2024).
+//!
+//! The paper's contribution is an algorithm (blocking + packing + a new
+//! register-reuse kernel) for applying `k` sequences of `n-1` Givens rotations
+//! to an `m x n` matrix at near-peak flop rates. This crate implements:
+//!
+//! * every algorithm variant evaluated in the paper (`rs_unoptimized`,
+//!   `rs_blocked`, `rs_fused`, `rs_gemm`, `rs_kernel`, `rs_kernel_v2`, and the
+//!   2x2-reflector versions) — see [`kernel`] and [`rot`];
+//! * the substrates the paper depends on: a column-major matrix type
+//!   ([`matrix`]), a blocked GEMM/TRMM ([`gemm`]), a memory-hierarchy
+//!   (cache + TLB) simulator used to validate the paper's §1.2 I/O analysis
+//!   ([`simulator`]), the §5 block-size planner ([`blocking`]), the §4 packing
+//!   scheme ([`pack`]), and the §7 parallel scheduler ([`parallel`]);
+//! * the downstream applications that motivate the paper: an implicit-QR
+//!   Hessenberg eigensolver and a Jacobi SVD ([`apps`]);
+//! * an AOT runtime that loads JAX/Pallas-lowered HLO artifacts and executes
+//!   them via PJRT ([`runtime`]), plus a job coordinator ([`coordinator`]);
+//! * a benchmark harness that regenerates every figure in the paper's
+//!   evaluation section ([`bench_harness`]).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use rotseq::matrix::Matrix;
+//! use rotseq::rot::RotationSequence;
+//! use rotseq::kernel::{apply, Algorithm};
+//!
+//! let m = 64;
+//! let n = 48;
+//! let k = 8;
+//! let mut a = Matrix::random(m, n, 42);
+//! let seq = RotationSequence::random(n, k, 7);
+//! apply(Algorithm::Kernel, &mut a, &seq).unwrap();
+//! ```
+pub mod apps;
+pub mod bench_harness;
+pub mod blocking;
+pub mod coordinator;
+pub mod gemm;
+pub mod kernel;
+pub mod matrix;
+pub mod pack;
+pub mod parallel;
+pub mod rot;
+pub mod runtime;
+pub mod simulator;
+pub mod testutil;

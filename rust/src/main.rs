@@ -1,0 +1,354 @@
+//! `rotseq` CLI — the Layer-3 entrypoint.
+//!
+//! Subcommands (hand-rolled parser; clap is not in the offline vendor set):
+//!
+//! ```text
+//! rotseq apply    --algo <name> --m <m> --n <n> --k <k> [--mr --kr --threads]
+//! rotseq plan     [--mr 16 --kr 2] [--t1 --t2 --t3]
+//! rotseq simulate --m <m> --n <n> --k <k>
+//! rotseq bench    --figure fig5|fig6|fig7|fig8|io [--max-n N] [--k K] [--quick]
+//! rotseq eig      --n <n>
+//! rotseq svd      --m <m> --n <n>
+//! rotseq pjrt     [--artifacts DIR]
+//! rotseq serve    [--workers W]          (reads jobs from stdin)
+//! ```
+
+use anyhow::{bail, Context, Result};
+use rotseq::bench_harness as bh;
+use rotseq::blocking::{plan, plan_bounds_for, CacheParams, KernelConfig};
+use rotseq::coordinator::{Coordinator, Job, JobSpec, RoutePolicy};
+use rotseq::kernel::Algorithm;
+use rotseq::matrix::{frobenius_norm, Matrix};
+use rotseq::rot::{OpSequence, RotationSequence};
+use std::collections::HashMap;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny `--key value` / `--flag` parser.
+struct Args {
+    values: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut values = HashMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    values.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                bail!("unexpected argument '{a}'");
+            }
+        }
+        Ok(Self { values, flags })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+        }
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.values
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+fn config_from_args(a: &Args) -> Result<KernelConfig> {
+    let mr = a.get("mr", 16usize)?;
+    let kr = a.get("kr", 2usize)?;
+    let threads = a.get("threads", 1usize)?;
+    let mut cfg = plan(mr, kr, CacheParams::detect(), threads);
+    if let Some(v) = a.values.get("mb") {
+        cfg.mb = v.parse().context("--mb")?;
+    }
+    if let Some(v) = a.values.get("kb") {
+        cfg.kb = v.parse().context("--kb")?;
+    }
+    if let Some(v) = a.values.get("nb") {
+        cfg.nb = v.parse().context("--nb")?;
+    }
+    Ok(cfg)
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "apply" => cmd_apply(&args),
+        "plan" => cmd_plan(&args),
+        "simulate" => cmd_simulate(&args),
+        "bench" => cmd_bench(&args),
+        "eig" => cmd_eig(&args),
+        "svd" => cmd_svd(&args),
+        "pjrt" => cmd_pjrt(&args),
+        "serve" => cmd_serve(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `rotseq help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "rotseq — communication-efficient application of rotation sequences\n\
+         (Steel & Langou 2024 reproduction)\n\n\
+         subcommands:\n\
+         \x20 apply    --algo rs_kernel --m 960 --n 960 --k 180  apply + report Gflop/s\n\
+         \x20 plan     [--mr 16 --kr 2 --t1 --t2 --t3]           §5 block-size planner\n\
+         \x20 simulate --m 256 --n 256 --k 24                    §1.2 I/O simulation table\n\
+         \x20 bench    --figure fig5|fig6|fig7|fig8|io           regenerate a paper figure\n\
+         \x20 eig      --n 120                                   implicit-QR eigensolver demo\n\
+         \x20 svd      --m 160 --n 80                            Jacobi SVD demo\n\
+         \x20 pjrt     [--artifacts artifacts]                   run AOT artifacts via PJRT\n\
+         \x20 serve    [--workers 2]                             job coordinator on stdin"
+    );
+}
+
+fn cmd_apply(a: &Args) -> Result<()> {
+    let algo = Algorithm::parse(&a.get_str("algo", "rs_kernel"))?;
+    let m = a.get("m", 960usize)?;
+    let n = a.get("n", 960usize)?;
+    let k = a.get("k", 180usize)?;
+    let seed = a.get("seed", 42u64)?;
+    let cfg = config_from_args(a)?;
+    let seq = RotationSequence::random(n, k, seed);
+    let mut mat = Matrix::random(m, n, seed ^ 0x5EED);
+    let flops = OpSequence::flops(&seq, m);
+
+    let t0 = std::time::Instant::now();
+    if cfg.threads > 1 {
+        rotseq::parallel::apply_parallel(&mut mat, &seq, &cfg)?;
+    } else {
+        rotseq::kernel::apply_with(algo, &mut mat, &seq, &cfg)?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{} m={m} n={n} k={k}: {:.3}s  {:.3} Gflop/s  (checksum {:.6e})",
+        algo.paper_name(),
+        dt,
+        flops as f64 / dt / 1e9,
+        frobenius_norm(&mat)
+    );
+    Ok(())
+}
+
+fn cmd_plan(a: &Args) -> Result<()> {
+    let mr = a.get("mr", 16usize)?;
+    let kr = a.get("kr", 2usize)?;
+    let detected = CacheParams::detect();
+    let cache = CacheParams {
+        t1: a.get("t1", detected.t1)?,
+        t2: a.get("t2", detected.t2)?,
+        t3: a.get("t3", detected.t3)?,
+    };
+    let b = plan_bounds_for(mr, kr, cache);
+    println!("cache (doubles): T1={} T2={} T3={}", cache.t1, cache.t2, cache.t3);
+    println!("kernel m_r={mr} k_r={kr}");
+    println!("Eq 5.2: n_b <= {}   -> n_b = {}", b.nb_bound, b.nb);
+    println!("Eq 5.4: k_b <= {}   -> k_b = {}", b.kb_bound, b.kb);
+    println!("Eq 5.6: m_b <= {}   -> m_b = {}", b.mb_bound, b.mb);
+    Ok(())
+}
+
+fn cmd_simulate(a: &Args) -> Result<()> {
+    let m = a.get("m", 256usize)?;
+    let n = a.get("n", 256usize)?;
+    let k = a.get("k", 24usize)?;
+    let rows = bh::io_table(m, n, k);
+    let s = rotseq::simulator::HierarchySpec::small_machine()
+        .l3
+        .capacity_doubles();
+    bh::print_io_table(&rows, s);
+    Ok(())
+}
+
+fn cmd_bench(a: &Args) -> Result<()> {
+    let figure = a.get_str("figure", "fig5");
+    let quick = a.has("quick");
+    let mc = if quick {
+        bh::MeasureConfig::quick()
+    } else {
+        bh::MeasureConfig::default()
+    };
+    let max_n = a.get("max-n", if quick { 480 } else { 960 })?;
+    let k = a.get("k", if quick { 36 } else { bh::PAPER_K })?;
+    let ns: Vec<usize> = bh::paper_n_sweep(max_n);
+    match figure.as_str() {
+        "fig5" => bh::print_fig5(&bh::fig5_serial(&ns, k, &mc)),
+        "fig6" => bh::print_fig6(&bh::fig6_kernel_sizes(&ns, k, &mc)),
+        "fig7" => {
+            let threads = [1, 2, 4, 8, 16, 28];
+            bh::print_fig7(&bh::fig7_parallel(&ns, k, &threads, &mc));
+        }
+        "fig8" => bh::print_fig8(&bh::fig8_reflectors(&ns, k, &mc)),
+        "io" => cmd_simulate(a)?,
+        other => bail!("unknown figure '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_eig(a: &Args) -> Result<()> {
+    let n = a.get("n", 120usize)?;
+    let seed = a.get("seed", 1u64)?;
+    let cfg = config_from_args(a)?;
+    let mat = {
+        let r = Matrix::random(n, n, seed);
+        let rt = r.transpose();
+        // (R + Rᵀ)/2: symmetric
+        Matrix::from_fn(n, n, |i, j| 0.5 * (r.get(i, j) + rt.get(i, j)))
+    };
+    let t0 = std::time::Instant::now();
+    let res = rotseq::apps::symmetric_eigen(&mat, &cfg)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "symmetric_eigen n={n}: {:.3}s, {} sweeps, {} delayed batches",
+        dt, res.sweeps, res.batches
+    );
+    println!(
+        "lambda_min={:.6}, lambda_max={:.6}, Q orth err={:.3e}",
+        res.eigenvalues[0],
+        res.eigenvalues[n - 1],
+        rotseq::matrix::orthogonality_error(&res.q)
+    );
+    Ok(())
+}
+
+fn cmd_svd(a: &Args) -> Result<()> {
+    let m = a.get("m", 160usize)?;
+    let n = a.get("n", 80usize)?;
+    let seed = a.get("seed", 1u64)?;
+    let cfg = config_from_args(a)?;
+    let mat = Matrix::random(m, n, seed);
+    let t0 = std::time::Instant::now();
+    let res = rotseq::apps::jacobi_svd(&mat, &cfg)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "jacobi_svd {m}x{n}: {:.3}s, {} half-sweeps, sigma_max={:.6}, sigma_min={:.6}",
+        dt,
+        res.half_sweeps,
+        res.sigma[0],
+        res.sigma[n - 1]
+    );
+    Ok(())
+}
+
+fn cmd_pjrt(a: &Args) -> Result<()> {
+    let dir = a.get_str("artifacts", "artifacts");
+    let reg = rotseq::runtime::ArtifactRegistry::load(&dir)
+        .with_context(|| format!("loading artifact registry from {dir} (run `make artifacts`)"))?;
+    let mut rt = rotseq::runtime::Runtime::cpu()?;
+    let nloaded = rt.load_registry(&reg)?;
+    println!("platform={} loaded={nloaded}", rt.platform());
+    for entry in reg.entries() {
+        let (m, n, k) = (entry.m, entry.n, entry.k);
+        let mat = Matrix::random(m, n, 11);
+        let seq = RotationSequence::random(n, k, 13);
+        let mut expected = mat.clone();
+        rotseq::rot::apply_naive(&mut expected, &seq);
+        let t0 = std::time::Instant::now();
+        let got = rotseq::runtime::apply_via_pjrt(&rt, &entry.name, &mat, &seq)?;
+        let dt = t0.elapsed().as_secs_f64();
+        let err = rotseq::matrix::max_abs_diff(&got, &expected);
+        println!(
+            "{:<24} {m:>4}x{n:<4} k={k:<3} {dt:>8.4}s  max|err| vs native = {err:.2e}",
+            entry.name
+        );
+    }
+    Ok(())
+}
+
+/// Job protocol on stdin, one job per line:
+/// `apply <m> <n> <k> <seed> [algo]` — prints the result checksum + rate.
+fn cmd_serve(a: &Args) -> Result<()> {
+    let workers = a.get("workers", 2usize)?;
+    let coord = Coordinator::start(workers, RoutePolicy::Auto);
+    println!("rotseq coordinator: {workers} workers; protocol: apply <m> <n> <k> <seed> [algo]");
+    let mut lines = std::io::stdin().lines();
+    while let Some(Ok(line)) = lines.next() {
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        match fields.as_slice() {
+            [] => continue,
+            ["quit"] | ["exit"] => break,
+            ["metrics"] => {
+                let s = coord.metrics().snapshot();
+                println!(
+                    "jobs: {} submitted, {} done, {} failed; {:.3} Gflop/s busy-rate",
+                    s.jobs_submitted,
+                    s.jobs_completed,
+                    s.jobs_failed,
+                    s.gflops()
+                );
+            }
+            ["apply", rest @ ..] if rest.len() >= 4 => {
+                let m: usize = rest[0].parse().context("m")?;
+                let n: usize = rest[1].parse().context("n")?;
+                let k: usize = rest[2].parse().context("k")?;
+                let seed: u64 = rest[3].parse().context("seed")?;
+                let algorithm = match rest.get(4) {
+                    Some(name) => Some(Algorithm::parse(name)?),
+                    None => None,
+                };
+                let job = Job {
+                    matrix: Matrix::random(m, n, seed),
+                    seq: RotationSequence::random(n, k, seed ^ 0xFEED),
+                    spec: JobSpec {
+                        algorithm,
+                        config: config_from_args(a)?,
+                    },
+                };
+                match coord.run(job) {
+                    Ok(r) => println!(
+                        "ok {} {:.4}s {:.3} Gflop/s checksum {:.6e}",
+                        r.algorithm.paper_name(),
+                        r.elapsed_s,
+                        r.gflops,
+                        frobenius_norm(&r.matrix)
+                    ),
+                    Err(e) => println!("err {e:#}"),
+                }
+            }
+            _ => println!("err unrecognized command: {line}"),
+        }
+    }
+    let s = coord.metrics().snapshot();
+    println!(
+        "shutting down: {} jobs, {} failed",
+        s.jobs_completed, s.jobs_failed
+    );
+    coord.shutdown();
+    Ok(())
+}

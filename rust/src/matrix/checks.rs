@@ -1,0 +1,96 @@
+//! Numerical checks used by tests, examples and the benchmark harness.
+
+use super::Matrix;
+
+/// Frobenius norm of a matrix.
+pub fn frobenius_norm(a: &Matrix) -> f64 {
+    let mut s = 0.0;
+    for j in 0..a.cols() {
+        for i in 0..a.rows() {
+            let v = a.get(i, j);
+            s += v * v;
+        }
+    }
+    s.sqrt()
+}
+
+/// Maximum absolute element-wise difference between two same-shaped matrices.
+pub fn max_abs_diff(a: &Matrix, b: &Matrix) -> f64 {
+    assert_eq!(a.rows(), b.rows());
+    assert_eq!(a.cols(), b.cols());
+    let mut m: f64 = 0.0;
+    for j in 0..a.cols() {
+        for i in 0..a.rows() {
+            m = m.max((a.get(i, j) - b.get(i, j)).abs());
+        }
+    }
+    m
+}
+
+/// Relative error `max|a-b| / max(1, max|b|)` — the metric used by the
+/// equivalence tests between algorithm variants.
+pub fn rel_error(a: &Matrix, b: &Matrix) -> f64 {
+    let mut scale: f64 = 1.0;
+    for j in 0..b.cols() {
+        for i in 0..b.rows() {
+            scale = scale.max(b.get(i, j).abs());
+        }
+    }
+    max_abs_diff(a, b) / scale
+}
+
+/// `|| Q^T Q - I ||_max` — how far `q` is from having orthonormal columns.
+///
+/// Rotation sequences are orthogonal, so applying one to the identity must
+/// produce a matrix whose orthogonality error is at machine-precision level.
+pub fn orthogonality_error(q: &Matrix) -> f64 {
+    let qt = q.transpose();
+    let p = qt.matmul(q);
+    let mut err: f64 = 0.0;
+    for j in 0..p.cols() {
+        for i in 0..p.rows() {
+            let expected = if i == j { 1.0 } else { 0.0 };
+            err = err.max((p.get(i, j) - expected).abs());
+        }
+    }
+    err
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frobenius_of_identity() {
+        let i = Matrix::identity(4);
+        assert!((frobenius_norm(&i) - 2.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn max_abs_diff_zero_for_equal() {
+        let a = Matrix::random(4, 5, 2);
+        assert_eq!(max_abs_diff(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn identity_is_orthogonal() {
+        let i = Matrix::identity(6);
+        assert_eq!(orthogonality_error(&i), 0.0);
+    }
+
+    #[test]
+    fn scaled_identity_is_not_orthogonal() {
+        let mut i = Matrix::identity(3);
+        i.set(0, 0, 2.0);
+        assert!(orthogonality_error(&i) > 1.0);
+    }
+
+    #[test]
+    fn rel_error_scales() {
+        let a = Matrix::from_fn(2, 2, |_, _| 100.0);
+        let mut b = a.clone();
+        b.set(0, 0, 101.0);
+        // max|a-b| = 1, scale = max|b| = 101.
+        assert!((rel_error(&a, &b) - 1.0 / 101.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,357 @@
+//! The core column-major matrix type.
+
+use super::Rng64;
+use std::fmt;
+
+/// Dense column-major `rows x cols` matrix of `f64`, with an explicit leading
+/// dimension (`ld >= rows`) so that sub-matrix views and LAPACK-style padded
+/// storage can be represented.
+///
+/// Element `(i, j)` lives at `data[i + j * ld]`.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    ld: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero-initialized matrix with `ld == rows`.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            ld: rows.max(1),
+            data: vec![0.0; rows.max(1) * cols],
+        }
+    }
+
+    /// Zero-initialized matrix with an explicit leading dimension.
+    ///
+    /// A leading dimension larger than `rows` reproduces the padded storage
+    /// of a sub-matrix inside a bigger allocation; the cache-simulator uses
+    /// this to model strided column access (§4 of the paper).
+    pub fn zeros_with_ld(rows: usize, cols: usize, ld: usize) -> Self {
+        assert!(ld >= rows.max(1), "ld {ld} < rows {rows}");
+        Self {
+            rows,
+            cols,
+            ld,
+            data: vec![0.0; ld * cols],
+        }
+    }
+
+    /// Identity matrix.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    /// Matrix with entries iid uniform in [-1, 1), reproducible from `seed`.
+    pub fn random(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = Rng64::new(seed);
+        let mut m = Self::zeros(rows, cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                m.set(i, j, rng.next_signed());
+            }
+        }
+        m
+    }
+
+    /// Build from a closure `f(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                m.set(i, j, f(i, j));
+            }
+        }
+        m
+    }
+
+    /// Build from a column-major slice (`ld == rows`).
+    pub fn from_col_major(rows: usize, cols: usize, data: &[f64]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self {
+            rows,
+            cols,
+            ld: rows.max(1),
+            data: data.to_vec(),
+        }
+    }
+
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Leading dimension of the underlying storage.
+    #[inline(always)]
+    pub fn ld(&self) -> usize {
+        self.ld
+    }
+
+    #[inline(always)]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i + j * self.ld]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i + j * self.ld] = v;
+    }
+
+    /// Immutable view of column `j` (rows `0..rows`).
+    #[inline(always)]
+    pub fn col(&self, j: usize) -> &[f64] {
+        debug_assert!(j < self.cols);
+        &self.data[j * self.ld..j * self.ld + self.rows]
+    }
+
+    /// Mutable view of column `j`.
+    #[inline(always)]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        debug_assert!(j < self.cols);
+        let ld = self.ld;
+        let rows = self.rows;
+        &mut self.data[j * ld..j * ld + rows]
+    }
+
+    /// Mutable views of two distinct columns `j0 != j1`.
+    ///
+    /// This is the fundamental access pattern of a planar rotation: it updates
+    /// two columns in place. Implemented with `split_at_mut` so it is safe.
+    #[inline(always)]
+    pub fn two_cols_mut(&mut self, j0: usize, j1: usize) -> (&mut [f64], &mut [f64]) {
+        assert!(j0 != j1, "two_cols_mut requires distinct columns");
+        debug_assert!(j0 < self.cols && j1 < self.cols);
+        let (lo, hi, swapped) = if j0 < j1 { (j0, j1, false) } else { (j1, j0, true) };
+        let ld = self.ld;
+        let rows = self.rows;
+        let (a, b) = self.data.split_at_mut(hi * ld);
+        let x = &mut a[lo * ld..lo * ld + rows];
+        let y = &mut b[..rows];
+        if swapped {
+            (y, x)
+        } else {
+            (x, y)
+        }
+    }
+
+    /// Raw column-major data (including any `ld` padding).
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Raw mutable column-major data.
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Copy of the matrix contents in packed row-major order.
+    pub fn to_row_major(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.rows * self.cols);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.push(self.get(i, j));
+            }
+        }
+        out
+    }
+
+    /// Copy of the matrix contents in packed column-major order (ld == rows).
+    pub fn to_col_major(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.rows * self.cols);
+        for j in 0..self.cols {
+            out.extend_from_slice(self.col(j));
+        }
+        out
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self.get(j, i))
+    }
+
+    /// Dense matrix product `self * other` (naive; for tests and small sizes —
+    /// the optimized path is [`crate::gemm`]).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul dimension mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for j in 0..other.cols {
+            for l in 0..self.cols {
+                let b = other.get(l, j);
+                if b == 0.0 {
+                    continue;
+                }
+                for i in 0..self.rows {
+                    let v = out.get(i, j) + self.get(i, l) * b;
+                    out.set(i, j, v);
+                }
+            }
+        }
+        out
+    }
+
+    /// Extract the sub-matrix `rows r0..r0+nr, cols c0..c0+nc` as a packed copy.
+    pub fn submatrix(&self, r0: usize, nr: usize, c0: usize, nc: usize) -> Matrix {
+        assert!(r0 + nr <= self.rows && c0 + nc <= self.cols);
+        Matrix::from_fn(nr, nc, |i, j| self.get(r0 + i, c0 + j))
+    }
+
+    /// Overwrite the sub-matrix starting at `(r0, c0)` with `block`.
+    pub fn set_submatrix(&mut self, r0: usize, c0: usize, block: &Matrix) {
+        assert!(r0 + block.rows() <= self.rows && c0 + block.cols() <= self.cols);
+        for j in 0..block.cols() {
+            for i in 0..block.rows() {
+                self.set(r0 + i, c0 + j, block.get(i, j));
+            }
+        }
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} (ld={})", self.rows, self.cols, self.ld)?;
+        let show_r = self.rows.min(8);
+        let show_c = self.cols.min(8);
+        for i in 0..show_r {
+            write!(f, "  [")?;
+            for j in 0..show_c {
+                write!(f, "{:>10.4}", self.get(i, j))?;
+                if j + 1 < show_c {
+                    write!(f, ", ")?;
+                }
+            }
+            if show_c < self.cols {
+                write!(f, ", ...")?;
+            }
+            writeln!(f, "]")?;
+        }
+        if show_r < self.rows {
+            writeln!(f, "  ...")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_identity() {
+        let z = Matrix::zeros(3, 4);
+        assert_eq!(z.rows(), 3);
+        assert_eq!(z.cols(), 4);
+        assert_eq!(z.get(2, 3), 0.0);
+        let i = Matrix::identity(3);
+        assert_eq!(i.get(1, 1), 1.0);
+        assert_eq!(i.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn col_access_matches_get() {
+        let m = Matrix::random(5, 4, 1);
+        for j in 0..4 {
+            let c = m.col(j);
+            for i in 0..5 {
+                assert_eq!(c[i], m.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn two_cols_mut_disjoint_and_ordered() {
+        let mut m = Matrix::from_fn(3, 3, |i, j| (i * 10 + j) as f64);
+        {
+            let (x, y) = m.two_cols_mut(0, 2);
+            assert_eq!(x[1], 10.0);
+            assert_eq!(y[1], 12.0);
+            x[0] = -1.0;
+            y[0] = -2.0;
+        }
+        assert_eq!(m.get(0, 0), -1.0);
+        assert_eq!(m.get(0, 2), -2.0);
+        // Reversed order must hand back views in argument order.
+        let (x, y) = m.two_cols_mut(2, 0);
+        assert_eq!(x[0], -2.0);
+        assert_eq!(y[0], -1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn two_cols_mut_same_col_panics() {
+        let mut m = Matrix::zeros(2, 2);
+        let _ = m.two_cols_mut(1, 1);
+    }
+
+    #[test]
+    fn ld_padding_preserved() {
+        let mut m = Matrix::zeros_with_ld(3, 2, 5);
+        m.set(2, 1, 7.0);
+        assert_eq!(m.ld(), 5);
+        assert_eq!(m.data().len(), 10);
+        assert_eq!(m.get(2, 1), 7.0);
+        assert_eq!(m.to_col_major(), vec![0.0, 0.0, 0.0, 0.0, 0.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::random(4, 4, 3);
+        let i = Matrix::identity(4);
+        let p = a.matmul(&i);
+        assert_eq!(p, a.submatrix(0, 4, 0, 4));
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Matrix::from_col_major(2, 2, &[1.0, 3.0, 2.0, 4.0]); // [[1,2],[3,4]]
+        let b = Matrix::from_col_major(2, 2, &[5.0, 7.0, 6.0, 8.0]); // [[5,6],[7,8]]
+        let c = a.matmul(&b);
+        assert_eq!(c.get(0, 0), 19.0);
+        assert_eq!(c.get(0, 1), 22.0);
+        assert_eq!(c.get(1, 0), 43.0);
+        assert_eq!(c.get(1, 1), 50.0);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let a = Matrix::random(5, 3, 9);
+        let att = a.transpose().transpose();
+        assert_eq!(a, att);
+    }
+
+    #[test]
+    fn submatrix_round_trip() {
+        let a = Matrix::random(6, 6, 11);
+        let block = a.submatrix(2, 3, 1, 4);
+        let mut b = Matrix::zeros(6, 6);
+        b.set_submatrix(2, 1, &block);
+        for j in 0..4 {
+            for i in 0..3 {
+                assert_eq!(b.get(2 + i, 1 + j), a.get(2 + i, 1 + j));
+            }
+        }
+    }
+
+    #[test]
+    fn row_major_round_trip() {
+        let a = Matrix::random(3, 4, 5);
+        let rm = a.to_row_major();
+        assert_eq!(rm[0 * 4 + 2], a.get(0, 2));
+        assert_eq!(rm[2 * 4 + 3], a.get(2, 3));
+    }
+}

@@ -1,0 +1,74 @@
+//! Lightweight column views.
+//!
+//! The rotation kernels operate on pairs of columns; these wrappers carry the
+//! row count so callers can't mix columns of different lengths.
+
+/// Immutable view of a single matrix column.
+#[derive(Clone, Copy)]
+pub struct ColView<'a> {
+    data: &'a [f64],
+}
+
+impl<'a> ColView<'a> {
+    pub fn new(data: &'a [f64]) -> Self {
+        Self { data }
+    }
+
+    #[inline(always)]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline(always)]
+    pub fn as_slice(&self) -> &'a [f64] {
+        self.data
+    }
+}
+
+/// Mutable view of a single matrix column.
+pub struct ColViewMut<'a> {
+    data: &'a mut [f64],
+}
+
+impl<'a> ColViewMut<'a> {
+    pub fn new(data: &'a mut [f64]) -> Self {
+        Self { data }
+    }
+
+    #[inline(always)]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline(always)]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn views_wrap_slices() {
+        let v = vec![1.0, 2.0, 3.0];
+        let cv = ColView::new(&v);
+        assert_eq!(cv.len(), 3);
+        assert!(!cv.is_empty());
+        assert_eq!(cv.as_slice()[1], 2.0);
+
+        let mut w = vec![0.0; 2];
+        let mut cm = ColViewMut::new(&mut w);
+        cm.as_mut_slice()[0] = 5.0;
+        assert_eq!(w[0], 5.0);
+    }
+}

@@ -1,0 +1,321 @@
+//! Packing (§4): Goto-style micro-panel packed format (Fig 2).
+//!
+//! The packed copy stores the matrix "in the exact way that it will be
+//! accessed" by the §3 kernel: the panel is split into chunks of `m_r`
+//! rows, and inside a chunk the columns are *contiguous at stride `m_r`*:
+//!
+//! ```text
+//! offset(chunk c, row r, col j) = c·(m_r·n) + j·m_r + r
+//! ```
+//!
+//! This fixes all three §4 problems at once: every cache line the kernel
+//! touches is fully used, consecutive columns never alias to the same
+//! cache set (a plain column-major panel with a power-of-two leading
+//! dimension maps *all* columns of a row-chunk onto one set), and a chunk's
+//! whole working set spans `m_r·n` contiguous bytes — a handful of TLB
+//! pages instead of one page per column.
+//!
+//! The last chunk is zero-padded to `m_r` rows: rotations map zero pairs to
+//! zero pairs exactly, so the kernels process the padding without a
+//! remainder path, and `unpack` simply ignores it.
+
+use crate::matrix::Matrix;
+
+/// Cache-line size in bytes assumed for alignment (§4.1: "typically 64").
+pub const CACHE_LINE_BYTES: usize = 64;
+const DOUBLES_PER_LINE: usize = CACHE_LINE_BYTES / std::mem::size_of::<f64>();
+
+/// A cache-line-aligned `f64` buffer.
+///
+/// `Vec<f64>` only guarantees 8-byte alignment; packing lets us align the
+/// panel to a line boundary even when the caller's matrix is not (§4.3).
+pub struct AlignedBuf {
+    raw: Vec<f64>,
+    offset: usize,
+    len: usize,
+}
+
+impl AlignedBuf {
+    /// Allocate `len` doubles aligned to [`CACHE_LINE_BYTES`].
+    pub fn new(len: usize) -> Self {
+        let raw = vec![0.0f64; len + DOUBLES_PER_LINE];
+        let addr = raw.as_ptr() as usize;
+        let misalign = addr % CACHE_LINE_BYTES;
+        let offset = if misalign == 0 {
+            0
+        } else {
+            (CACHE_LINE_BYTES - misalign) / std::mem::size_of::<f64>()
+        };
+        Self { raw, offset, len }
+    }
+
+    #[inline(always)]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.raw[self.offset..self.offset + self.len]
+    }
+
+    #[inline(always)]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.raw[self.offset..self.offset + self.len]
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Whether the data pointer is cache-line aligned.
+    pub fn is_aligned(&self) -> bool {
+        (self.as_slice().as_ptr() as usize) % CACHE_LINE_BYTES == 0
+    }
+}
+
+/// A packed row-panel in micro-panel format: rows `r0 .. r0+rows` of a
+/// matrix, all `n` columns, as `ceil(rows/m_r)` chunks of `m_r` rows.
+pub struct PackedPanel {
+    buf: AlignedBuf,
+    rows: usize,
+    cols: usize,
+    mr: usize,
+}
+
+impl PackedPanel {
+    /// Pack rows `r0 .. r0+rows` of `a` for an `m_r`-row kernel.
+    pub fn pack(a: &Matrix, r0: usize, rows: usize, mr: usize) -> Self {
+        assert!(r0 + rows <= a.rows());
+        assert!(mr >= 1);
+        let cols = a.cols();
+        let chunks = rows.div_ceil(mr).max(1);
+        let mut buf = AlignedBuf::new(chunks * mr * cols.max(1));
+        {
+            let dst = buf.as_mut_slice();
+            for c in 0..chunks {
+                let cr0 = r0 + c * mr;
+                let live = mr.min(r0 + rows - cr0);
+                let base = c * mr * cols;
+                for j in 0..cols {
+                    let src = &a.col(j)[cr0..cr0 + live];
+                    dst[base + j * mr..base + j * mr + live].copy_from_slice(src);
+                    // rows live..mr stay zero (padding).
+                }
+            }
+        }
+        Self {
+            buf,
+            rows,
+            cols,
+            mr,
+        }
+    }
+
+    /// Copy the live rows back into rows `r0 ..` of `a`.
+    pub fn unpack(&self, a: &mut Matrix, r0: usize) {
+        assert!(r0 + self.rows <= a.rows());
+        assert_eq!(self.cols, a.cols());
+        let src = self.buf.as_slice();
+        for c in 0..self.chunks() {
+            let cr0 = r0 + c * self.mr;
+            let live = self.mr.min(r0 + self.rows - cr0);
+            let base = c * self.mr * self.cols;
+            for j in 0..self.cols {
+                a.col_mut(j)[cr0..cr0 + live]
+                    .copy_from_slice(&src[base + j * self.mr..base + j * self.mr + live]);
+            }
+        }
+    }
+
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Kernel row width this panel is packed for.
+    #[inline(always)]
+    pub fn mr(&self) -> usize {
+        self.mr
+    }
+
+    /// Number of `m_r`-row chunks (the last may be padding-extended).
+    #[inline(always)]
+    pub fn chunks(&self) -> usize {
+        self.rows.div_ceil(self.mr).max(1)
+    }
+
+    /// Doubles between consecutive chunks (`m_r · cols`).
+    #[inline(always)]
+    pub fn chunk_stride(&self) -> usize {
+        self.mr * self.cols
+    }
+
+    #[inline(always)]
+    pub fn data(&self) -> &[f64] {
+        self.buf.as_slice()
+    }
+
+    #[inline(always)]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        self.buf.as_mut_slice()
+    }
+
+    /// Element accessor (tests / checksums; the hot path works on chunks).
+    pub fn get(&self, r: usize, j: usize) -> f64 {
+        assert!(r < self.rows && j < self.cols);
+        let c = r / self.mr;
+        self.buf.as_slice()[c * self.chunk_stride() + j * self.mr + r % self.mr]
+    }
+}
+
+/// A whole matrix held permanently in packed panels — the `rs_kernel_v2`
+/// input format (§8: repacking on every call is wasteful if the caller can
+/// keep `A` packed).
+pub struct PackedMatrix {
+    panels: Vec<PackedPanel>,
+    panel_rows: usize,
+    rows: usize,
+    cols: usize,
+}
+
+impl PackedMatrix {
+    /// Pack `a` into row-panels of height `mb` for an `m_r`-row kernel.
+    pub fn from_matrix(a: &Matrix, mb: usize, mr: usize) -> Self {
+        assert!(mb >= 1);
+        let mut panels = Vec::new();
+        let mut r0 = 0;
+        while r0 < a.rows() {
+            let rows = mb.min(a.rows() - r0);
+            panels.push(PackedPanel::pack(a, r0, rows, mr));
+            r0 += rows;
+        }
+        if panels.is_empty() {
+            panels.push(PackedPanel::pack(a, 0, a.rows(), mr));
+        }
+        Self {
+            panels,
+            panel_rows: mb,
+            rows: a.rows(),
+            cols: a.cols(),
+        }
+    }
+
+    /// Reassemble a plain matrix.
+    pub fn to_matrix(&self) -> Matrix {
+        let mut a = Matrix::zeros(self.rows, self.cols);
+        let mut r0 = 0;
+        for p in &self.panels {
+            p.unpack(&mut a, r0);
+            r0 += p.rows();
+        }
+        a
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Height used when packing (`m_b`).
+    pub fn panel_rows(&self) -> usize {
+        self.panel_rows
+    }
+
+    pub fn panels(&self) -> &[PackedPanel] {
+        &self.panels
+    }
+
+    pub fn panels_mut(&mut self) -> &mut [PackedPanel] {
+        &mut self.panels
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::max_abs_diff;
+
+    #[test]
+    fn aligned_buf_is_aligned() {
+        for len in [1, 7, 64, 1000] {
+            let b = AlignedBuf::new(len);
+            assert!(b.is_aligned(), "len={len}");
+            assert_eq!(b.len(), len);
+        }
+    }
+
+    #[test]
+    fn panel_round_trip() {
+        let a = Matrix::random(20, 7, 3);
+        let p = PackedPanel::pack(&a, 4, 9, 4);
+        assert_eq!(p.rows(), 9);
+        assert_eq!(p.chunks(), 3); // 4 + 4 + 1(+3 pad)
+        let mut b = a.clone();
+        p.unpack(&mut b, 4);
+        assert_eq!(max_abs_diff(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn micro_panel_layout() {
+        // 5 rows, mr=4: chunk 0 rows 0..4, chunk 1 row 4 (+pad).
+        let a = Matrix::from_fn(5, 3, |i, j| (10 * i + j) as f64);
+        let p = PackedPanel::pack(&a, 0, 5, 4);
+        let d = p.data();
+        // chunk 0, col 1, row 2 -> offset 1*4 + 2
+        assert_eq!(d[4 + 2], 21.0);
+        // chunk 1 (base 4*3=12), col 2, row 0 (global row 4)
+        assert_eq!(d[12 + 2 * 4], 42.0);
+        // padding is zero
+        assert_eq!(d[12 + 2 * 4 + 1], 0.0);
+        // accessor agrees
+        assert_eq!(p.get(2, 1), 21.0);
+        assert_eq!(p.get(4, 2), 42.0);
+    }
+
+    #[test]
+    fn unpack_ignores_padding_mutations() {
+        let a = Matrix::random(5, 3, 1);
+        let mut p = PackedPanel::pack(&a, 0, 5, 4);
+        let stride = p.chunk_stride();
+        p.data_mut()[stride + 3] = 99.0; // a pad row of chunk 1
+        let mut b = Matrix::zeros(5, 3);
+        p.unpack(&mut b, 0);
+        assert_eq!(max_abs_diff(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn packed_matrix_round_trip() {
+        let a = Matrix::random(53, 11, 9);
+        let pm = PackedMatrix::from_matrix(&a, 16, 8);
+        assert_eq!(pm.panels().len(), 4); // 16+16+16+5
+        assert_eq!(pm.panels()[3].rows(), 5);
+        let b = pm.to_matrix();
+        assert_eq!(max_abs_diff(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn packed_matrix_single_panel() {
+        let a = Matrix::random(8, 4, 2);
+        let pm = PackedMatrix::from_matrix(&a, 100, 16);
+        assert_eq!(pm.panels().len(), 1);
+        assert_eq!(max_abs_diff(&a, &pm.to_matrix()), 0.0);
+    }
+
+    #[test]
+    fn chunk_stride_and_counts() {
+        let a = Matrix::random(33, 10, 5);
+        let p = PackedPanel::pack(&a, 0, 33, 16);
+        assert_eq!(p.chunks(), 3);
+        assert_eq!(p.chunk_stride(), 160);
+        assert_eq!(p.mr(), 16);
+        assert_eq!(p.data().len(), 3 * 160);
+    }
+}

@@ -1,0 +1,19 @@
+//! Parallelization (§7): row-block scheduling across threads.
+//!
+//! Threads apply the *same* rotations to *different* rows, so the only
+//! coordination is partitioning rows. Per §7, instead of a fixed `m_b`
+//! each thread gets `m / nthreads` rows rounded up to a multiple of `m_r`
+//! (the kernel needs whole `m_r` chunks for full-rate execution; a
+//! non-multiple `m` causes the Fig 7 load-imbalance oscillation).
+//!
+//! The testbed for this reproduction has a single core, so measured
+//! multi-thread scaling is meaningless here; [`speedup_model`] provides the
+//! calibrated analytical model used to regenerate Fig 7's shape, while the
+//! real scheduler below is exercised for correctness under any thread
+//! count.
+
+pub mod speedup_model;
+
+mod scheduler;
+
+pub use scheduler::{apply_parallel, apply_parallel_packed, partition_rows};

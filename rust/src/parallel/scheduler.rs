@@ -1,0 +1,180 @@
+//! The §7 scheduler: balanced row partitioning + scoped worker threads.
+
+use crate::blocking::KernelConfig;
+use crate::matrix::Matrix;
+use crate::pack::{PackedMatrix, PackedPanel};
+use crate::rot::OpSequence;
+use anyhow::Result;
+
+/// Partition `m` rows over `threads` workers: each chunk is `m/threads`
+/// rounded **up** to a multiple of `mr` (§7), the last chunk takes the
+/// remainder. Returns `(r0, rows)` pairs; fewer than `threads` entries if
+/// the rounding exhausts the rows early.
+pub fn partition_rows(m: usize, threads: usize, mr: usize) -> Vec<(usize, usize)> {
+    let threads = threads.max(1);
+    let mr = mr.max(1);
+    let ideal = m.div_ceil(threads);
+    let chunk = ideal.div_ceil(mr) * mr;
+    let mut out = Vec::new();
+    let mut r0 = 0;
+    while r0 < m {
+        let rows = chunk.min(m - r0);
+        out.push((r0, rows));
+        r0 += rows;
+    }
+    out
+}
+
+/// Parallel `rs_kernel`: each worker packs its row panel, runs the §5 loop
+/// nest on it, and the panels are written back after the join. Workers
+/// share the (read-only) sequence set; there is no other communication —
+/// the reason the paper sees near-linear scaling.
+pub fn apply_parallel<S: OpSequence + Sync>(
+    a: &mut Matrix,
+    seq: &S,
+    cfg: &KernelConfig,
+) -> Result<()> {
+    assert_eq!(a.cols(), seq.n(), "matrix/sequence column mismatch");
+    let parts = partition_rows(a.rows(), cfg.threads, cfg.mr);
+    if parts.len() <= 1 {
+        return crate::kernel::apply_kernel(a, seq, cfg);
+    }
+
+    let shared: &Matrix = a;
+    let panels: Vec<Result<(usize, PackedPanel)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = parts
+            .iter()
+            .map(|&(r0, rows)| {
+                scope.spawn(move || -> Result<(usize, PackedPanel)> {
+                    let mut panel = PackedPanel::pack(shared, r0, rows, cfg.mr);
+                    // Per-thread m_b: its whole chunk (§7 load balancing).
+                    let mut local = *cfg;
+                    local.mb = rows.max(1);
+                    crate::kernel::run_panel_packed(&mut panel, seq, &local)?;
+                    Ok((r0, panel))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("worker panicked"))
+            .collect()
+    });
+
+    for res in panels {
+        let (r0, panel) = res?;
+        panel.unpack(a, r0);
+    }
+    Ok(())
+}
+
+/// Parallel `rs_kernel_v2`: the matrix lives in packed panels; workers take
+/// disjoint `&mut` panels, so no copying at all happens on the hot path.
+pub fn apply_parallel_packed<S: OpSequence + Sync>(
+    pm: &mut PackedMatrix,
+    seq: &S,
+    cfg: &KernelConfig,
+) -> Result<()> {
+    assert_eq!(pm.cols(), seq.n(), "matrix/sequence column mismatch");
+    let results: Vec<Result<()>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = pm
+            .panels_mut()
+            .iter_mut()
+            .map(|panel| {
+                scope.spawn(move || -> Result<()> {
+                    let mut local = *cfg;
+                    local.mb = panel.rows().max(1);
+                    crate::kernel::run_panel_packed(panel, seq, &local)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("worker panicked"))
+            .collect()
+    });
+    for r in results {
+        r?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{max_abs_diff, Matrix};
+    use crate::rot::{apply_naive, RotationSequence};
+
+    fn cfg(threads: usize) -> KernelConfig {
+        KernelConfig {
+            mr: 8,
+            kr: 2,
+            mb: 16,
+            kb: 4,
+            nb: 8,
+            threads,
+        }
+    }
+
+    #[test]
+    fn partition_covers_all_rows() {
+        for (m, t, mr) in [(100, 4, 8), (7, 3, 8), (64, 16, 16), (1, 1, 16), (33, 2, 4)] {
+            let parts = partition_rows(m, t, mr);
+            let mut next = 0;
+            for &(r0, rows) in &parts {
+                assert_eq!(r0, next);
+                assert!(rows > 0);
+                next += rows;
+            }
+            assert_eq!(next, m, "m={m} t={t} mr={mr}");
+        }
+    }
+
+    #[test]
+    fn partition_chunks_are_mr_multiples() {
+        let parts = partition_rows(100, 4, 8);
+        for &(_, rows) in &parts[..parts.len() - 1] {
+            assert_eq!(rows % 8, 0);
+        }
+    }
+
+    #[test]
+    fn balanced_when_divisible() {
+        // §7: m a multiple of m_r * threads -> perfectly equal chunks.
+        let parts = partition_rows(64, 4, 8);
+        assert_eq!(parts.len(), 4);
+        assert!(parts.iter().all(|&(_, rows)| rows == 16));
+    }
+
+    #[test]
+    fn parallel_matches_naive() {
+        for threads in [1, 2, 3, 7] {
+            let (m, n, k) = (45, 24, 9);
+            let seq = RotationSequence::random(n, k, 3);
+            let mut a_ref = Matrix::random(m, n, 4);
+            let mut a_par = a_ref.clone();
+            apply_naive(&mut a_ref, &seq);
+            apply_parallel(&mut a_par, &seq, &cfg(threads)).unwrap();
+            assert_eq!(
+                max_abs_diff(&a_ref, &a_par),
+                0.0,
+                "parallel mismatch threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_packed_matches_naive() {
+        let (m, n, k) = (50, 19, 6);
+        let seq = RotationSequence::random(n, k, 5);
+        let a = Matrix::random(m, n, 6);
+        let mut a_ref = a.clone();
+        apply_naive(&mut a_ref, &seq);
+
+        let c = cfg(4);
+        let parts = partition_rows(m, c.threads, c.mr);
+        let mut pm = PackedMatrix::from_matrix(&a, parts[0].1, c.mr);
+        apply_parallel_packed(&mut pm, &seq, &c).unwrap();
+        assert_eq!(max_abs_diff(&a_ref, &pm.to_matrix()), 0.0);
+    }
+}

@@ -1,0 +1,134 @@
+//! Baseline application algorithms: `rot` (Alg 1.1) and the naive
+//! `rot_sequence` (Alg 1.2) — the paper's `rs_unoptimized`.
+
+use super::{Givens, RotationSequence};
+use crate::matrix::Matrix;
+
+/// Alg 1.1: apply a single rotation to two equal-length vectors in place.
+///
+/// `x[i], y[i] ← c·x[i] + s·y[i], -s·x[i] + c·y[i]`.
+#[inline]
+pub fn rot(x: &mut [f64], y: &mut [f64], c: f64, s: f64) {
+    debug_assert_eq!(x.len(), y.len());
+    for (xi, yi) in x.iter_mut().zip(y.iter_mut()) {
+        let t = c * *xi + s * *yi;
+        *yi = -s * *xi + c * *yi;
+        *xi = t;
+    }
+}
+
+/// Apply a single rotation to columns `(j, j+1)` of `a`.
+#[inline]
+pub fn apply_rotation(a: &mut Matrix, j: usize, g: Givens) {
+    let (x, y) = a.two_cols_mut(j, j + 1);
+    rot(x, y, g.c, g.s);
+}
+
+/// Alg 1.2 — `rs_unoptimized`: loop over the sequences, applying each full
+/// sequence of `n-1` rotations before starting the next.
+///
+/// Between rotation `(i, p)` and `(i, p+1)` the whole matrix is touched, so
+/// for matrices larger than cache every column access misses — this is the
+/// slow baseline of Fig 5.
+pub fn apply_naive(a: &mut Matrix, seq: &RotationSequence) {
+    assert_eq!(a.cols(), seq.n(), "matrix/sequence column mismatch");
+    let n = seq.n();
+    for p in 0..seq.k() {
+        for j in 0..n - 1 {
+            apply_rotation(a, j, seq.get(j, p));
+        }
+    }
+}
+
+/// Apply the inverse of `seq` (undo [`apply_naive`]): sequences in reverse
+/// order, rotations within each sequence in reverse order, each transposed.
+pub fn apply_inverse_naive(a: &mut Matrix, seq: &RotationSequence) {
+    assert_eq!(a.cols(), seq.n(), "matrix/sequence column mismatch");
+    let n = seq.n();
+    for p in (0..seq.k()).rev() {
+        for j in (0..n - 1).rev() {
+            apply_rotation(a, j, seq.get(j, p).inverse());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{orthogonality_error, rel_error, Matrix};
+
+    #[test]
+    fn rot_matches_scalar_formula() {
+        let mut x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![4.0, 5.0, 6.0];
+        let (c, s) = (0.6, 0.8);
+        rot(&mut x, &mut y, c, s);
+        for i in 0..3 {
+            let (ex, ey) = Givens { c, s }.apply([1.0, 2.0, 3.0][i], [4.0, 5.0, 6.0][i]);
+            assert_eq!(x[i], ex);
+            assert_eq!(y[i], ey);
+        }
+    }
+
+    #[test]
+    fn identity_sequence_is_noop() {
+        let mut a = Matrix::random(6, 5, 1);
+        let orig = a.clone();
+        apply_naive(&mut a, &RotationSequence::identity(5, 3));
+        assert_eq!(a, orig);
+    }
+
+    #[test]
+    fn applying_to_identity_gives_orthogonal_q() {
+        let n = 16;
+        let mut q = Matrix::identity(n);
+        let seq = RotationSequence::random(n, 7, 5);
+        apply_naive(&mut q, &seq);
+        assert!(orthogonality_error(&q) < 1e-13);
+    }
+
+    #[test]
+    fn inverse_restores_matrix() {
+        let mut a = Matrix::random(12, 9, 3);
+        let orig = a.clone();
+        let seq = RotationSequence::random(9, 4, 8);
+        apply_naive(&mut a, &seq);
+        assert!(rel_error(&a, &orig) > 1e-6, "sequence must actually change A");
+        apply_inverse_naive(&mut a, &seq);
+        assert!(rel_error(&a, &orig) < 1e-12);
+    }
+
+    #[test]
+    fn single_rotation_matches_matmul() {
+        // Applying one rotation from the right equals A * G where G is the
+        // embedded 2x2 rotation block.
+        let n = 5;
+        let a = Matrix::random(4, n, 2);
+        let g = Givens::from_angle(0.9);
+        let mut rotated = a.clone();
+        apply_rotation(&mut rotated, 2, g);
+
+        let mut gm = Matrix::identity(n);
+        gm.set(2, 2, g.c);
+        gm.set(3, 3, g.c);
+        gm.set(2, 3, -g.s);
+        gm.set(3, 2, g.s);
+        let expected = a.matmul(&gm);
+        assert!(rel_error(&rotated, &expected) < 1e-14);
+    }
+
+    #[test]
+    fn sequence_matches_accumulated_matmul() {
+        // A after k sequences equals A * Q where Q = identity with the same
+        // sequences applied.
+        let (m, n, k) = (7, 6, 3);
+        let a = Matrix::random(m, n, 4);
+        let seq = RotationSequence::random(n, k, 6);
+        let mut applied = a.clone();
+        apply_naive(&mut applied, &seq);
+        let mut q = Matrix::identity(n);
+        apply_naive(&mut q, &seq);
+        let expected = a.matmul(&q);
+        assert!(rel_error(&applied, &expected) < 1e-13);
+    }
+}

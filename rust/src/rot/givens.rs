@@ -1,0 +1,136 @@
+//! The Givens rotation type and its construction.
+
+/// A single planar (Givens) rotation, defined by a cosine and a sine with
+/// `c² + s² = 1`.
+///
+/// Acting on a row-pair `[x, y]` from the right (the paper's convention):
+/// `x' = c·x + s·y`, `y' = -s·x + c·y`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Givens {
+    pub c: f64,
+    pub s: f64,
+}
+
+impl Givens {
+    /// The identity rotation.
+    pub const IDENTITY: Givens = Givens { c: 1.0, s: 0.0 };
+
+    /// Rotation from an angle θ: `c = cos θ`, `s = sin θ`.
+    pub fn from_angle(theta: f64) -> Self {
+        Self {
+            c: theta.cos(),
+            s: theta.sin(),
+        }
+    }
+
+    /// Construct the rotation that zeroes `b` in the pair `(a, b)`:
+    /// find `c, s` with `c² + s² = 1` such that
+    /// `[a b] · [[c, -s], [s, c]] = [r, 0]`.
+    ///
+    /// This is LAPACK `dlartg` without the scaling refinements: it uses the
+    /// hypot-based formulation which is adequate for well-scaled inputs (the
+    /// workloads of the paper: QR sweeps on balanced matrices).
+    pub fn zeroing(a: f64, b: f64) -> (Self, f64) {
+        if b == 0.0 {
+            return (Self::IDENTITY, a);
+        }
+        if a == 0.0 {
+            return (Self { c: 0.0, s: 1.0 }, b);
+        }
+        let r = a.hypot(b);
+        let r = if a >= 0.0 { r } else { -r };
+        (Self { c: a / r, s: b / r }, r)
+    }
+
+    /// Apply this rotation to a scalar pair, returning `(x', y')`.
+    ///
+    /// Uses the plain 6-flop formulation (4 mul + 2 add) of Alg 1.1. All
+    /// algorithm variants in this crate share this exact arithmetic, so any
+    /// dependency-respecting application order yields bitwise-identical
+    /// results — the equivalence tests rely on this.
+    #[inline(always)]
+    pub fn apply(&self, x: f64, y: f64) -> (f64, f64) {
+        (self.c * x + self.s * y, -self.s * x + self.c * y)
+    }
+
+    /// The inverse (transpose) rotation.
+    #[inline(always)]
+    pub fn inverse(&self) -> Givens {
+        Givens {
+            c: self.c,
+            s: -self.s,
+        }
+    }
+
+    /// `|c² + s² - 1|` — how far this pair is from being a true rotation.
+    pub fn orthogonality_defect(&self) -> f64 {
+        (self.c * self.c + self.s * self.s - 1.0).abs()
+    }
+
+    /// Whether this rotation is numerically the identity.
+    pub fn is_identity(&self) -> bool {
+        self.c == 1.0 && self.s == 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_leaves_pair_unchanged() {
+        let g = Givens::IDENTITY;
+        assert_eq!(g.apply(3.0, -4.0), (3.0, -4.0));
+        assert!(g.is_identity());
+    }
+
+    #[test]
+    fn from_angle_is_orthogonal() {
+        for i in 0..32 {
+            let g = Givens::from_angle(i as f64 * 0.37);
+            assert!(g.orthogonality_defect() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn zeroing_annihilates_second_component() {
+        let (g, r) = Givens::zeroing(3.0, 4.0);
+        let (x, y) = g.apply(3.0, 4.0);
+        assert!((x - r).abs() < 1e-14);
+        assert!(y.abs() < 1e-14);
+        assert!((r - 5.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn zeroing_edge_cases() {
+        let (g, r) = Givens::zeroing(2.0, 0.0);
+        assert!(g.is_identity());
+        assert_eq!(r, 2.0);
+        let (g, r) = Givens::zeroing(0.0, -3.0);
+        assert_eq!(g.c, 0.0);
+        assert_eq!(g.s, 1.0);
+        assert_eq!(r, -3.0);
+        // negative a: r keeps a's sign
+        let (g, r) = Givens::zeroing(-3.0, 4.0);
+        assert!(r < 0.0);
+        let (x, y) = g.apply(-3.0, 4.0);
+        assert!((x - r).abs() < 1e-14);
+        assert!(y.abs() < 1e-14);
+    }
+
+    #[test]
+    fn inverse_round_trips() {
+        let g = Givens::from_angle(0.7);
+        let (x, y) = g.apply(1.5, -2.5);
+        let (x2, y2) = g.inverse().apply(x, y);
+        assert!((x2 - 1.5).abs() < 1e-14);
+        assert!((y2 + 2.5).abs() < 1e-14);
+    }
+
+    #[test]
+    fn rotation_preserves_norm() {
+        let g = Givens::from_angle(1.1);
+        let (x, y) = g.apply(3.0, 4.0);
+        assert!((x.hypot(y) - 5.0).abs() < 1e-12);
+    }
+}

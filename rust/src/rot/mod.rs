@@ -1,0 +1,48 @@
+//! Planar (Givens) rotations and the baseline application algorithms.
+//!
+//! A planar rotation acting on columns `(j, j+1)` of `A` from the right is
+//! the 2x2 orthogonal transformation
+//!
+//! ```text
+//!   [ x'  y' ] = [ x  y ] · [  c  -s ]
+//!                           [  s   c ]
+//! ```
+//!
+//! applied element-wise down the two columns, i.e. (Alg 1.1 of the paper)
+//!
+//! ```text
+//!   t    =  c·x[i] + s·y[i]
+//!   y[i] = -s·x[i] + c·y[i]
+//!   x[i] =  t
+//! ```
+//!
+//! A *sequence* of rotations (as produced by one sweep of an implicit QR
+//! step, a Hessenberg reduction, or a Jacobi sweep) is stored as two
+//! `(n-1) x k` matrices `C` and `S`: rotation `(i, j)` acts on columns
+//! `(i, i+1)` and belongs to sequence `j`. Sequences are applied left to
+//! right: within sequence `j` in increasing `i`, and rotation `(i, j+1)` only
+//! after `(i+1, j)` (the wavefront dependency, §1.1).
+//!
+//! This module contains the rotation/reflector types, the sequence
+//! container, and the *reference* application algorithms
+//! ([`apply_naive`], [`apply_wavefront`]); the optimized block/kernel
+//! algorithms live in [`crate::kernel`].
+
+mod apply;
+mod fast_givens;
+mod givens;
+mod ops;
+mod reflector;
+mod sequence;
+mod wavefront;
+
+pub use apply::{apply_inverse_naive, apply_naive, apply_rotation, rot};
+pub use ops::{OpSequence, PairOp};
+pub use fast_givens::{apply_fast_givens, FastGivens, FastGivensSequence};
+pub use givens::Givens;
+pub use reflector::{
+    apply_reflector, apply_reflector_sequence_naive, reflector_from_givens, Reflector,
+    ReflectorSequence,
+};
+pub use sequence::{RotationSequence, SequenceKind};
+pub use wavefront::{apply_wavefront, wave_members, wave_of, waves_count, WavePosition};

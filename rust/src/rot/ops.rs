@@ -1,0 +1,237 @@
+//! Abstraction over the planar operation type.
+//!
+//! The paper evaluates every algorithm twice: with Givens rotations (Fig 5–7)
+//! and with 2x2 reflectors (Fig 8). All optimized algorithms in
+//! [`crate::kernel`] are generic over [`PairOp`] + [`OpSequence`], so the
+//! reflector variants are the *same* blocking/fusing/kernel code
+//! monomorphized over a different 2x2 operation — exactly the paper's setup.
+
+use super::{Givens, Reflector, ReflectorSequence, RotationSequence};
+use std::simd::f64x4;
+
+/// A 2x2 orthogonal operation applied to a pair of scalars.
+///
+/// Implementations must be pure and branch-free in `apply` (the microkernel
+/// inner loop is built from it) and encode/decode themselves from a packed
+/// scalar stream (`WIDTH` scalars per op) for the wave-stream packing of §4.
+pub trait PairOp: Copy + 'static {
+    /// Scalars per op in a packed stream (2 for Givens `c,s`;
+    /// 3 for reflectors `t1,t2,v2`).
+    const WIDTH: usize;
+
+    /// The no-op element (used to pad partial waves; must be exact).
+    const IDENTITY: Self;
+
+    /// The op with its coefficients broadcast into vector registers (the
+    /// §3 "broadcast the values of C and S" step, done once per wave).
+    type Splat: Copy;
+
+    /// Read one op from the head of a packed stream.
+    fn load(stream: &[f64]) -> Self;
+
+    /// Write this op to the head of a packed stream.
+    fn store(&self, stream: &mut [f64]);
+
+    /// Apply to a scalar pair.
+    fn apply(&self, x: f64, y: f64) -> (f64, f64);
+
+    /// Broadcast for the SIMD kernels.
+    fn splat(&self) -> Self::Splat;
+
+    /// Apply to a vector pair. Must compute the same IEEE operations per
+    /// lane as [`Self::apply`] (the equivalence tests rely on bitwise
+    /// agreement between scalar and SIMD paths).
+    fn apply_simd(op: &Self::Splat, x: f64x4, y: f64x4) -> (f64x4, f64x4);
+}
+
+/// Broadcast Givens coefficients.
+#[derive(Clone, Copy)]
+pub struct GivensSplat {
+    c: f64x4,
+    s: f64x4,
+}
+
+/// Broadcast reflector coefficients.
+#[derive(Clone, Copy)]
+pub struct ReflectorSplat {
+    t1: f64x4,
+    t2: f64x4,
+    v2: f64x4,
+}
+
+impl PairOp for Givens {
+    const WIDTH: usize = 2;
+    const IDENTITY: Givens = Givens { c: 1.0, s: 0.0 };
+    type Splat = GivensSplat;
+
+    #[inline(always)]
+    fn load(stream: &[f64]) -> Self {
+        Givens {
+            c: stream[0],
+            s: stream[1],
+        }
+    }
+
+    #[inline(always)]
+    fn store(&self, stream: &mut [f64]) {
+        stream[0] = self.c;
+        stream[1] = self.s;
+    }
+
+    #[inline(always)]
+    fn apply(&self, x: f64, y: f64) -> (f64, f64) {
+        Givens::apply(self, x, y)
+    }
+
+    #[inline(always)]
+    fn splat(&self) -> GivensSplat {
+        GivensSplat {
+            c: f64x4::splat(self.c),
+            s: f64x4::splat(self.s),
+        }
+    }
+
+    #[inline(always)]
+    fn apply_simd(op: &GivensSplat, x: f64x4, y: f64x4) -> (f64x4, f64x4) {
+        (op.c * x + op.s * y, op.c * y - op.s * x)
+    }
+}
+
+impl PairOp for Reflector {
+    const WIDTH: usize = 3;
+    // t1 = t2 = v2 = 0 gives w = 0, x' = x, y' = y: exact no-op.
+    const IDENTITY: Reflector = Reflector {
+        t1: 0.0,
+        t2: 0.0,
+        v2: 0.0,
+    };
+    type Splat = ReflectorSplat;
+
+    #[inline(always)]
+    fn load(stream: &[f64]) -> Self {
+        Reflector {
+            t1: stream[0],
+            t2: stream[1],
+            v2: stream[2],
+        }
+    }
+
+    #[inline(always)]
+    fn store(&self, stream: &mut [f64]) {
+        stream[0] = self.t1;
+        stream[1] = self.t2;
+        stream[2] = self.v2;
+    }
+
+    #[inline(always)]
+    fn apply(&self, x: f64, y: f64) -> (f64, f64) {
+        Reflector::apply(self, x, y)
+    }
+
+    #[inline(always)]
+    fn splat(&self) -> ReflectorSplat {
+        ReflectorSplat {
+            t1: f64x4::splat(self.t1),
+            t2: f64x4::splat(self.t2),
+            v2: f64x4::splat(self.v2),
+        }
+    }
+
+    #[inline(always)]
+    fn apply_simd(op: &ReflectorSplat, x: f64x4, y: f64x4) -> (f64x4, f64x4) {
+        let w = op.t1 * x + op.t2 * y;
+        (x - w, y - op.v2 * w)
+    }
+}
+
+/// A `k`-set of sequences of [`PairOp`]s over an `n`-column matrix.
+pub trait OpSequence {
+    type Op: PairOp;
+
+    /// Number of columns of the target matrix.
+    fn n(&self) -> usize;
+
+    /// Number of sequences.
+    fn k(&self) -> usize;
+
+    /// Op at position `(i, p)` (acts on columns `(i, i+1)`, sequence `p`).
+    fn get(&self, i: usize, p: usize) -> Self::Op;
+
+    /// Useful-flop count when applied to `m` rows (the paper's Gflop/s
+    /// denominator: 6 flops per op per row).
+    fn flops(&self, m: usize) -> u64 {
+        6 * m as u64 * (self.n() as u64 - 1) * self.k() as u64
+    }
+}
+
+impl OpSequence for RotationSequence {
+    type Op = Givens;
+
+    fn n(&self) -> usize {
+        RotationSequence::n(self)
+    }
+
+    fn k(&self) -> usize {
+        RotationSequence::k(self)
+    }
+
+    #[inline(always)]
+    fn get(&self, i: usize, p: usize) -> Givens {
+        RotationSequence::get(self, i, p)
+    }
+}
+
+impl OpSequence for ReflectorSequence {
+    type Op = Reflector;
+
+    fn n(&self) -> usize {
+        ReflectorSequence::n(self)
+    }
+
+    fn k(&self) -> usize {
+        ReflectorSequence::k(self)
+    }
+
+    #[inline(always)]
+    fn get(&self, i: usize, p: usize) -> Reflector {
+        ReflectorSequence::get(self, i, p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn givens_stream_round_trip() {
+        let g = Givens { c: 0.6, s: 0.8 };
+        let mut buf = [0.0; 2];
+        g.store(&mut buf);
+        assert_eq!(Givens::load(&buf), g);
+    }
+
+    #[test]
+    fn reflector_stream_round_trip() {
+        let h = Reflector {
+            t1: 1.3,
+            t2: 0.2,
+            v2: 0.15,
+        };
+        let mut buf = [0.0; 3];
+        h.store(&mut buf);
+        assert_eq!(Reflector::load(&buf), h);
+    }
+
+    #[test]
+    fn identities_are_exact_noops() {
+        let (x, y) = (1.234, -9.87);
+        assert_eq!(Givens::IDENTITY.apply(x, y), (x, y));
+        assert_eq!(Reflector::IDENTITY.apply(x, y), (x, y));
+    }
+
+    #[test]
+    fn op_sequence_trait_flops() {
+        let seq = RotationSequence::random(9, 3, 1);
+        assert_eq!(OpSequence::flops(&seq, 10), 6 * 10 * 8 * 3);
+    }
+}

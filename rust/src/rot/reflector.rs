@@ -1,0 +1,262 @@
+//! 2x2 reflectors (§6, §8.4).
+//!
+//! A 2x2 Householder reflector can play the same role as a Givens rotation
+//! (it maps a pair of columns to a pair of columns orthogonally) but can be
+//! applied with 3 multiplications and 3 additions instead of 4 + 2, which
+//! maps perfectly onto fused-multiply-add units:
+//!
+//! ```text
+//!   w  = t1·x + t2·y        (2 mul, 1 add)
+//!   x' = x - w              (1 add)
+//!   y' = y - v2·w           (1 mul, 1 add)
+//! ```
+//!
+//! where `H = I - τ·v·vᵀ` with `v = [1, v2]ᵀ`, `t1 = τ`, `t2 = τ·v2`.
+
+use super::{Givens, RotationSequence};
+use crate::matrix::Matrix;
+
+/// A 2x2 reflector in the factored `(τ, v2)` form used by the kernels.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Reflector {
+    /// `τ`
+    pub t1: f64,
+    /// `τ·v2`
+    pub t2: f64,
+    /// second component of the Householder vector `v = [1, v2]ᵀ`
+    pub v2: f64,
+}
+
+impl Reflector {
+    /// Apply to a scalar pair: `(x', y') = [x y]·H`.
+    ///
+    /// `H` is symmetric so left/right application coincide on a pair.
+    #[inline(always)]
+    pub fn apply(&self, x: f64, y: f64) -> (f64, f64) {
+        let w = self.t1 * x + self.t2 * y;
+        (x - w, y - self.v2 * w)
+    }
+
+    /// Apply using explicit fused-multiply-adds (`mul_add`) — the FMA
+    /// variant benchmarked in Fig 8. Same math, different rounding.
+    #[inline(always)]
+    pub fn apply_fma(&self, x: f64, y: f64) -> (f64, f64) {
+        let w = self.t1.mul_add(x, self.t2 * y);
+        (x - w, self.v2.mul_add(-w, y))
+    }
+
+    /// The dense 2x2 matrix `H = I - τ v vᵀ`.
+    pub fn to_matrix(&self) -> [[f64; 2]; 2] {
+        [
+            [1.0 - self.t1, -self.t2],
+            [-self.t2, 1.0 - self.t2 * self.v2],
+        ]
+    }
+
+    /// `‖HᵀH - I‖_max`: a valid reflector is orthogonal.
+    pub fn orthogonality_defect(&self) -> f64 {
+        let h = self.to_matrix();
+        let mut err: f64 = 0.0;
+        for i in 0..2 {
+            for j in 0..2 {
+                let dot = h[0][i] * h[0][j] + h[1][i] * h[1][j];
+                let expected = if i == j { 1.0 } else { 0.0 };
+                err = err.max((dot - expected).abs());
+            }
+        }
+        err
+    }
+}
+
+/// Build the reflector with the same column-mixing effect as the rotation
+/// `g` (up to sign): `H = ±[[c, s], [s, -c]]`.
+///
+/// The branch picks the numerically stable factorization: for `c ≥ 0` we
+/// represent `-[[c, s], [s, -c]]` (τ = 1 + c), otherwise `[[c, s], [s, -c]]`
+/// (τ = 1 - c), so `τ` never suffers cancellation. Reflectors have
+/// determinant −1, so the identity rotation has no reflector equivalent;
+/// both branches stay well-defined because `τ ≥ 1`.
+pub fn reflector_from_givens(g: Givens) -> Reflector {
+    if g.c >= 0.0 {
+        // H = -[[c, s],[s,-c]]: τ = 1 + c, v2 = s / (1 + c)
+        let t1 = 1.0 + g.c;
+        let v2 = g.s / t1;
+        Reflector { t1, t2: g.s, v2 }
+    } else {
+        // H = [[c, s],[s,-c]]: τ = 1 - c, v2 = -s / (1 - c)
+        let t1 = 1.0 - g.c;
+        let v2 = -g.s / t1;
+        Reflector {
+            t1,
+            t2: -g.s,
+            v2,
+        }
+    }
+}
+
+/// `k` sequences of `n-1` reflectors — the reflector analogue of
+/// [`RotationSequence`], used by the Fig 8 experiment.
+#[derive(Clone, Debug)]
+pub struct ReflectorSequence {
+    n: usize,
+    k: usize,
+    /// `t1` values, `(n-1) x k`.
+    t1: Matrix,
+    /// `t2` values, `(n-1) x k`.
+    t2: Matrix,
+    /// `v2` values, `(n-1) x k`.
+    v2: Matrix,
+}
+
+impl ReflectorSequence {
+    /// Convert a rotation sequence into reflectors position-by-position.
+    pub fn from_rotations(seq: &RotationSequence) -> Self {
+        let n = seq.n();
+        let k = seq.k();
+        let mut t1 = Matrix::zeros(n - 1, k);
+        let mut t2 = Matrix::zeros(n - 1, k);
+        let mut v2 = Matrix::zeros(n - 1, k);
+        for j in 0..k {
+            for i in 0..n - 1 {
+                let h = reflector_from_givens(seq.get(i, j));
+                t1.set(i, j, h.t1);
+                t2.set(i, j, h.t2);
+                v2.set(i, j, h.v2);
+            }
+        }
+        Self { n, k, t1, t2, v2 }
+    }
+
+    /// Random reflector sequence (via random rotations).
+    pub fn random(n: usize, k: usize, seed: u64) -> Self {
+        Self::from_rotations(&RotationSequence::random(n, k, seed))
+    }
+
+    #[inline(always)]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline(always)]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Reflector at position `(i, j)`.
+    #[inline(always)]
+    pub fn get(&self, i: usize, j: usize) -> Reflector {
+        Reflector {
+            t1: self.t1.get(i, j),
+            t2: self.t2.get(i, j),
+            v2: self.v2.get(i, j),
+        }
+    }
+
+    /// Flop count when applied to `m` rows (6 flops per reflector per row —
+    /// same count as rotations, but 3 mul + 3 add).
+    pub fn flops(&self, m: usize) -> u64 {
+        6 * m as u64 * (self.n as u64 - 1) * self.k as u64
+    }
+}
+
+/// Apply a single reflector to columns `(j, j+1)` of `a`.
+#[inline]
+pub fn apply_reflector(a: &mut Matrix, j: usize, h: Reflector) {
+    let (x, y) = a.two_cols_mut(j, j + 1);
+    for (xi, yi) in x.iter_mut().zip(y.iter_mut()) {
+        let (nx, ny) = h.apply(*xi, *yi);
+        *xi = nx;
+        *yi = ny;
+    }
+}
+
+/// Naive (Alg 1.2-order) application of a reflector sequence — the
+/// `rs_unoptimized` baseline of Fig 8.
+pub fn apply_reflector_sequence_naive(a: &mut Matrix, seq: &ReflectorSequence) {
+    assert_eq!(a.cols(), seq.n(), "matrix/sequence column mismatch");
+    for p in 0..seq.k() {
+        for j in 0..seq.n() - 1 {
+            apply_reflector(a, j, seq.get(j, p));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{frobenius_norm, orthogonality_error, Matrix};
+
+    #[test]
+    fn reflector_matches_dense_2x2() {
+        for theta in [0.0, 0.3, -0.9, 2.8, -3.0] {
+            let g = Givens::from_angle(theta);
+            let h = reflector_from_givens(g);
+            let hm = h.to_matrix();
+            let (x, y) = (1.3, -0.7);
+            let (hx, hy) = h.apply(x, y);
+            // row-vector times symmetric H
+            let ex = x * hm[0][0] + y * hm[1][0];
+            let ey = x * hm[0][1] + y * hm[1][1];
+            assert!((hx - ex).abs() < 1e-14, "theta={theta}");
+            assert!((hy - ey).abs() < 1e-14, "theta={theta}");
+        }
+    }
+
+    #[test]
+    fn reflector_is_orthogonal_and_involutive() {
+        for theta in [0.01, 0.5, 1.2, -2.2, 3.1] {
+            let h = reflector_from_givens(Givens::from_angle(theta));
+            assert!(h.orthogonality_defect() < 1e-14);
+            // H² = I
+            let (x, y) = h.apply(0.4, 2.0);
+            let (x2, y2) = h.apply(x, y);
+            assert!((x2 - 0.4).abs() < 1e-13);
+            assert!((y2 - 2.0).abs() < 1e-13);
+        }
+    }
+
+    #[test]
+    fn reflector_mixes_like_rotation_up_to_sign() {
+        let g = Givens::from_angle(0.8);
+        let h = reflector_from_givens(g);
+        let (x, y) = (1.1, -0.3);
+        let (gx, gy) = g.apply(x, y);
+        let (hx, hy) = h.apply(x, y);
+        // H = -[[c,s],[s,-c]] for c >= 0: hx = -gx', with gx' = c x + s y
+        assert!((hx + gx).abs() < 1e-14);
+        // hy = -(s x - c y) = -s x + c y = gy
+        assert!((hy - gy).abs() < 1e-14);
+    }
+
+    #[test]
+    fn fma_variant_agrees_to_rounding() {
+        let h = reflector_from_givens(Givens::from_angle(1.9));
+        let (a, b) = h.apply(0.123, -4.5);
+        let (c, d) = h.apply_fma(0.123, -4.5);
+        assert!((a - c).abs() < 1e-14);
+        assert!((b - d).abs() < 1e-14);
+    }
+
+    #[test]
+    fn sequence_preserves_norm_and_orthogonality() {
+        let n = 12;
+        let seq = ReflectorSequence::random(n, 5, 3);
+        let mut a = Matrix::random(9, n, 2);
+        let norm0 = frobenius_norm(&a);
+        apply_reflector_sequence_naive(&mut a, &seq);
+        assert!((frobenius_norm(&a) - norm0).abs() / norm0 < 1e-13);
+
+        let mut q = Matrix::identity(n);
+        apply_reflector_sequence_naive(&mut q, &seq);
+        assert!(orthogonality_error(&q) < 1e-13);
+    }
+
+    #[test]
+    fn negative_c_branch_is_stable() {
+        // c close to -1 must not blow up v2.
+        let g = Givens::from_angle(std::f64::consts::PI - 1e-8);
+        let h = reflector_from_givens(g);
+        assert!(h.v2.abs() < 1e7);
+        assert!(h.orthogonality_defect() < 1e-12);
+    }
+}

@@ -1,0 +1,238 @@
+//! The rotation-sequence container: the `(n-1) x k` matrices `C` and `S`.
+
+use super::Givens;
+use crate::matrix::{Matrix, Rng64};
+
+/// How a random test sequence is generated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SequenceKind {
+    /// Every rotation drawn from a uniform random angle.
+    RandomAngles,
+    /// Rotations as produced by chasing a bulge in an implicit QR sweep
+    /// (angles concentrated, many near-identity) — stresses numerical paths
+    /// differently from uniform angles.
+    QrSweepLike,
+    /// All rotations identity (useful for I/O-only measurements).
+    Identity,
+}
+
+/// `k` sequences of `n-1` rotations, stored as `(n-1) x k` matrices `C`, `S`
+/// (the paper's layout: rotation `(i, j)` = `C[i,j], S[i,j]` acts on columns
+/// `(i, i+1)` of the target matrix and belongs to sequence `j`).
+#[derive(Clone, Debug)]
+pub struct RotationSequence {
+    /// Number of columns of the target matrix (`A` is `m x n`).
+    n: usize,
+    /// Number of sequences.
+    k: usize,
+    /// Cosines, `(n-1) x k` column-major.
+    c: Matrix,
+    /// Sines, `(n-1) x k` column-major.
+    s: Matrix,
+}
+
+impl RotationSequence {
+    /// Create an all-identity sequence set.
+    pub fn identity(n: usize, k: usize) -> Self {
+        assert!(n >= 2, "need at least 2 columns");
+        let c = Matrix::from_fn(n - 1, k, |_, _| 1.0);
+        let s = Matrix::zeros(n - 1, k);
+        Self { n, k, c, s }
+    }
+
+    /// Random uniform-angle sequence set, reproducible from `seed`.
+    pub fn random(n: usize, k: usize, seed: u64) -> Self {
+        Self::generate(n, k, seed, SequenceKind::RandomAngles)
+    }
+
+    /// Generate a sequence set of the given kind.
+    pub fn generate(n: usize, k: usize, seed: u64, kind: SequenceKind) -> Self {
+        assert!(n >= 2, "need at least 2 columns");
+        let mut rng = Rng64::new(seed);
+        let mut c = Matrix::zeros(n - 1, k);
+        let mut s = Matrix::zeros(n - 1, k);
+        for j in 0..k {
+            for i in 0..n - 1 {
+                let g = match kind {
+                    SequenceKind::Identity => Givens::IDENTITY,
+                    SequenceKind::RandomAngles => {
+                        Givens::from_angle(rng.next_signed() * std::f64::consts::PI)
+                    }
+                    SequenceKind::QrSweepLike => {
+                        // Bulge-chasing rotations: mostly small angles with
+                        // occasional large ones, mimicking shifted QR sweeps.
+                        let u = rng.next_f64();
+                        let theta = if u < 0.85 {
+                            rng.next_signed() * 0.3
+                        } else {
+                            rng.next_signed() * std::f64::consts::PI
+                        };
+                        Givens::from_angle(theta)
+                    }
+                };
+                c.set(i, j, g.c);
+                s.set(i, j, g.s);
+            }
+        }
+        Self { n, k, c, s }
+    }
+
+    /// Build from explicit `C`/`S` matrices (`(n-1) x k`).
+    pub fn from_cs(n: usize, c: Matrix, s: Matrix) -> Self {
+        assert_eq!(c.rows(), n - 1);
+        assert_eq!(s.rows(), n - 1);
+        assert_eq!(c.cols(), s.cols());
+        let k = c.cols();
+        Self { n, k, c, s }
+    }
+
+    /// Build from a closure returning the rotation at `(i, j)`.
+    pub fn from_fn(n: usize, k: usize, mut f: impl FnMut(usize, usize) -> Givens) -> Self {
+        let mut c = Matrix::zeros(n - 1, k);
+        let mut s = Matrix::zeros(n - 1, k);
+        for j in 0..k {
+            for i in 0..n - 1 {
+                let g = f(i, j);
+                c.set(i, j, g.c);
+                s.set(i, j, g.s);
+            }
+        }
+        Self { n, k, c, s }
+    }
+
+    /// Number of columns of the target matrix.
+    #[inline(always)]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of sequences.
+    #[inline(always)]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Total number of rotations, `(n-1)·k`.
+    pub fn len(&self) -> usize {
+        (self.n - 1) * self.k
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Rotation `(i, j)`: acts on columns `(i, i+1)`, sequence `j`.
+    #[inline(always)]
+    pub fn get(&self, i: usize, j: usize) -> Givens {
+        Givens {
+            c: self.c.get(i, j),
+            s: self.s.get(i, j),
+        }
+    }
+
+    /// Cosine matrix.
+    pub fn c(&self) -> &Matrix {
+        &self.c
+    }
+
+    /// Sine matrix.
+    pub fn s(&self) -> &Matrix {
+        &self.s
+    }
+
+    /// Flop count for applying this sequence set to `m` rows: `6·m·(n-1)·k`
+    /// (4 mul + 2 add per rotation per row). This is the figure-of-merit
+    /// denominator used by the paper's Gflop/s plots.
+    pub fn flops(&self, m: usize) -> u64 {
+        6 * m as u64 * (self.n as u64 - 1) * self.k as u64
+    }
+
+    /// The sequence set whose application undoes this one.
+    ///
+    /// Applying sequences `0..k` then the inverse set restores the original
+    /// matrix: the inverse reverses both the sequence order and the order
+    /// within each sequence, transposing each rotation. Because rotation
+    /// `(i, j)` here acts *last-applied-first*, the inverse stores rotation
+    /// `(i, j)^T` at position `(n-2-i, k-1-j)` and must be applied with
+    /// [`super::apply_inverse_naive`] (which walks `i` downward).
+    pub fn inverse(&self) -> RotationSequence {
+        RotationSequence::from_fn(self.n, self.k, |i, j| self.get(i, j).inverse())
+    }
+
+    /// Maximum orthogonality defect over all rotations (validation helper).
+    pub fn max_defect(&self) -> f64 {
+        let mut d: f64 = 0.0;
+        for j in 0..self.k {
+            for i in 0..self.n - 1 {
+                d = d.max(self.get(i, j).orthogonality_defect());
+            }
+        }
+        d
+    }
+
+    /// Restrict to sequences `j0..j0+kb` (a `k`-block of the blocked
+    /// algorithm).
+    pub fn slice_sequences(&self, j0: usize, kb: usize) -> RotationSequence {
+        assert!(j0 + kb <= self.k);
+        RotationSequence::from_fn(self.n, kb, |i, j| self.get(i, j0 + j))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_sequence_is_identity() {
+        let s = RotationSequence::identity(5, 3);
+        for j in 0..3 {
+            for i in 0..4 {
+                assert!(s.get(i, j).is_identity());
+            }
+        }
+        assert_eq!(s.len(), 12);
+    }
+
+    #[test]
+    fn random_is_reproducible_and_orthogonal() {
+        let a = RotationSequence::random(10, 4, 3);
+        let b = RotationSequence::random(10, 4, 3);
+        for j in 0..4 {
+            for i in 0..9 {
+                assert_eq!(a.get(i, j), b.get(i, j));
+            }
+        }
+        assert!(a.max_defect() < 1e-14);
+    }
+
+    #[test]
+    fn kinds_generate_valid_rotations() {
+        for kind in [
+            SequenceKind::RandomAngles,
+            SequenceKind::QrSweepLike,
+            SequenceKind::Identity,
+        ] {
+            let s = RotationSequence::generate(12, 5, 9, kind);
+            assert!(s.max_defect() < 1e-14, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn flops_formula() {
+        let s = RotationSequence::random(11, 3, 1);
+        assert_eq!(s.flops(7), 6 * 7 * 10 * 3);
+    }
+
+    #[test]
+    fn slice_sequences_extracts_block() {
+        let s = RotationSequence::random(8, 6, 2);
+        let b = s.slice_sequences(2, 3);
+        assert_eq!(b.k(), 3);
+        assert_eq!(b.n(), 8);
+        for j in 0..3 {
+            for i in 0..7 {
+                assert_eq!(b.get(i, j), s.get(i, 2 + j));
+            }
+        }
+    }
+}

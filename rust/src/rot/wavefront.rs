@@ -1,0 +1,149 @@
+//! The wavefront algorithm (Alg 1.3, §1.1).
+//!
+//! Reorders the rotations of Alg 1.2 into anti-diagonal *waves*: wave `w`
+//! consists of rotations `(w, 0), (w-1, 1), …, (w-k+1, k-1)` (clipped to
+//! valid indices). Within a wave rotations are applied in increasing
+//! sequence index, which respects the dependency rule "(i+1, p) before
+//! (i, p+1)". Consecutive waves overlap in all but one of the columns they
+//! touch, so a window of `k+1` columns stays hot in cache.
+//!
+//! The three phases of Alg 1.3:
+//! * **startup** — waves `0 .. k-1`, shorter than `k` rotations;
+//! * **pipeline** — waves `k-1 .. n-1`, exactly `k` rotations each;
+//! * **shutdown** — waves `n-1 .. n+k-2`, shortening again.
+//!
+//! (For `k > n-1` every wave is shorter than `k`; the iterator below handles
+//! that uniformly, unlike the paper's pseudocode which assumes `k ≤ n-1`.)
+
+use super::RotationSequence;
+use crate::matrix::Matrix;
+use crate::rot::apply_rotation;
+
+/// Position of one rotation inside the wavefront order: rotation
+/// `(i, p)` of wave `w = i + p`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WavePosition {
+    /// Column index: the rotation acts on columns `(i, i+1)`.
+    pub i: usize,
+    /// Sequence index.
+    pub p: usize,
+}
+
+/// Wave index of rotation `(i, p)`.
+#[inline]
+pub fn wave_of(i: usize, p: usize) -> usize {
+    i + p
+}
+
+/// Total number of waves for an `n`-column, `k`-sequence problem:
+/// waves `0 ..= (n-2) + (k-1)`.
+pub fn waves_count(n: usize, k: usize) -> usize {
+    if n < 2 || k == 0 {
+        0
+    } else {
+        (n - 2) + (k - 1) + 1
+    }
+}
+
+/// The rotations of wave `w`, in application order (increasing `p`).
+///
+/// Valid members satisfy `i = w - p`, `0 ≤ i ≤ n-2`, `0 ≤ p ≤ k-1`.
+pub fn wave_members(w: usize, n: usize, k: usize) -> impl Iterator<Item = WavePosition> {
+    let p_lo = w.saturating_sub(n - 2);
+    let p_hi = w.min(k - 1);
+    (p_lo..=p_hi).map(move |p| WavePosition { i: w - p, p })
+}
+
+/// Alg 1.3: apply the sequence set in wavefront order.
+///
+/// Produces bitwise-identical results to [`super::apply_naive`] (same scalar
+/// operations, dependency-respecting order) while touching only a `k+1`
+/// column window per wave.
+pub fn apply_wavefront(a: &mut Matrix, seq: &RotationSequence) {
+    assert_eq!(a.cols(), seq.n(), "matrix/sequence column mismatch");
+    let n = seq.n();
+    let k = seq.k();
+    if k == 0 || n < 2 {
+        return;
+    }
+    for w in 0..waves_count(n, k) {
+        for pos in wave_members(w, n, k) {
+            apply_rotation(a, pos.i, seq.get(pos.i, pos.p));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{max_abs_diff, Matrix};
+    use crate::rot::apply_naive;
+
+    #[test]
+    fn waves_cover_every_rotation_exactly_once() {
+        let (n, k) = (9, 4);
+        let mut seen = vec![vec![0usize; k]; n - 1];
+        for w in 0..waves_count(n, k) {
+            for pos in wave_members(w, n, k) {
+                assert_eq!(wave_of(pos.i, pos.p), w);
+                seen[pos.i][pos.p] += 1;
+            }
+        }
+        for row in &seen {
+            for &c in row {
+                assert_eq!(c, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn waves_respect_dependencies() {
+        // (i+1, p) must come before (i, p+1); within a sequence increasing i.
+        let (n, k) = (10, 5);
+        let mut order = vec![vec![0usize; k]; n - 1];
+        let mut t = 0;
+        for w in 0..waves_count(n, k) {
+            for pos in wave_members(w, n, k) {
+                order[pos.i][pos.p] = t;
+                t += 1;
+            }
+        }
+        for p in 0..k {
+            for i in 0..n - 1 {
+                if i + 1 < n - 1 && p + 1 < k {
+                    assert!(
+                        order[i + 1][p] < order[i][p + 1],
+                        "dependency violated at ({i},{p})"
+                    );
+                }
+                if i + 1 < n - 1 {
+                    assert!(order[i][p] < order[i + 1][p], "sequence order at ({i},{p})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wavefront_matches_naive_bitwise() {
+        for (m, n, k) in [(5, 6, 3), (8, 12, 5), (3, 4, 7), (16, 9, 1), (4, 2, 2)] {
+            let mut a1 = Matrix::random(m, n, 42);
+            let mut a2 = a1.clone();
+            let seq = RotationSequence::random(n, k, 17);
+            apply_naive(&mut a1, &seq);
+            apply_wavefront(&mut a2, &seq);
+            assert_eq!(
+                max_abs_diff(&a1, &a2),
+                0.0,
+                "wavefront must be bitwise-identical to naive (m={m},n={n},k={k})"
+            );
+        }
+    }
+
+    #[test]
+    fn waves_count_edge_cases() {
+        assert_eq!(waves_count(2, 1), 1);
+        assert_eq!(waves_count(5, 1), 4);
+        assert_eq!(waves_count(2, 3), 3);
+        assert_eq!(waves_count(10, 4), 12);
+    }
+}

@@ -1,0 +1,112 @@
+//! Artifact registry: the manifest written by `python/compile/aot.py`.
+//!
+//! `artifacts/manifest.txt` is a plain text table (no serde in the offline
+//! vendor set): one artifact per line,
+//!
+//! ```text
+//! name<TAB>file<TAB>m<TAB>n<TAB>k
+//! ```
+//!
+//! where `(m, n, k)` are the static shapes the computation was lowered for
+//! (XLA executables are shape-specialized).
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One lowered computation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    /// Logical name, e.g. `apply_seq_64x48x8` or `gemm_accum_64x48x8`.
+    pub name: String,
+    /// HLO text file, relative to the manifest's directory.
+    pub file: String,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+/// Parsed manifest plus its base directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactRegistry {
+    base: PathBuf,
+    entries: Vec<ArtifactEntry>,
+}
+
+impl ArtifactRegistry {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let base = dir.as_ref().to_path_buf();
+        let manifest = base.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        Self::parse(base, &text)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(base: PathBuf, text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            if fields.len() != 5 {
+                bail!(
+                    "manifest line {}: expected 5 tab-separated fields, got {}",
+                    lineno + 1,
+                    fields.len()
+                );
+            }
+            entries.push(ArtifactEntry {
+                name: fields[0].to_string(),
+                file: fields[1].to_string(),
+                m: fields[2].parse().context("m")?,
+                n: fields[3].parse().context("n")?,
+                k: fields[4].parse().context("k")?,
+            });
+        }
+        Ok(Self { base, entries })
+    }
+
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.base.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trip() {
+        let text = "# comment\n\
+                    apply_seq_8x6x2\tapply_seq_8x6x2.hlo.txt\t8\t6\t2\n\
+                    \n\
+                    gemm_accum_8x6x2\tgemm_accum_8x6x2.hlo.txt\t8\t6\t2\n";
+        let reg = ArtifactRegistry::parse(PathBuf::from("/tmp/a"), text).unwrap();
+        assert_eq!(reg.entries().len(), 2);
+        let e = reg.find("apply_seq_8x6x2").unwrap();
+        assert_eq!((e.m, e.n, e.k), (8, 6, 2));
+        assert_eq!(
+            reg.path_of(e),
+            PathBuf::from("/tmp/a/apply_seq_8x6x2.hlo.txt")
+        );
+        assert!(reg.find("nope").is_none());
+    }
+
+    #[test]
+    fn bad_line_is_rejected() {
+        let text = "name only three\tfields\n";
+        assert!(ArtifactRegistry::parse(PathBuf::from("."), text).is_err());
+    }
+}

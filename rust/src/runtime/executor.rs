@@ -1,0 +1,79 @@
+//! The PJRT executor: compile HLO text once, execute many times.
+
+use super::artifact::ArtifactRegistry;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+
+/// A PJRT CPU client plus the compiled executables, keyed by artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            executables: HashMap::new(),
+        })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile one HLO-text artifact under `name`.
+    pub fn load_hlo_text(&mut self, name: &str, path: &std::path::Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling artifact '{name}': {e:?}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Load every artifact in a registry.
+    pub fn load_registry(&mut self, reg: &ArtifactRegistry) -> Result<usize> {
+        for entry in reg.entries() {
+            self.load_hlo_text(&entry.name, &reg.path_of(entry))?;
+        }
+        Ok(reg.entries().len())
+    }
+
+    /// Names of loaded executables.
+    pub fn loaded(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute a loaded computation. The compile path lowers with
+    /// `return_tuple=True`, so the raw result is a 1-tuple; this unwraps it
+    /// and returns the inner literals.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing '{name}': {e:?}"))?;
+        let first = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("'{name}' returned no outputs"))?;
+        let literal = first
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching '{name}' output: {e:?}"))?;
+        let tuple = literal
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling '{name}' output: {e:?}"))?;
+        Ok(tuple)
+    }
+}

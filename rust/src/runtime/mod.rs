@@ -1,0 +1,47 @@
+//! PJRT runtime: load and execute AOT-compiled JAX/Pallas artifacts.
+//!
+//! The compile path (`python/compile/aot.py`) lowers the L2 JAX model —
+//! which calls the L1 Pallas kernel — to **HLO text** (the interchange
+//! format this image's xla_extension 0.5.1 accepts; serialized jax≥0.5
+//! protos carry 64-bit instruction ids it rejects). This module loads those
+//! artifacts, compiles them once on the PJRT CPU client, and executes them
+//! from the Rust hot path. Python never runs at request time.
+
+mod artifact;
+mod executor;
+
+pub use artifact::{ArtifactEntry, ArtifactRegistry};
+pub use executor::Runtime;
+
+use crate::matrix::Matrix;
+use crate::rot::RotationSequence;
+use anyhow::Result;
+
+/// Apply a rotation-sequence set to `a` by executing a loaded artifact.
+///
+/// The artifact's computation is `apply(A, C, S) -> A'` over f64 arrays in
+/// row-major (JAX) layout; this helper handles the layout conversion.
+pub fn apply_via_pjrt(
+    rt: &Runtime,
+    name: &str,
+    a: &Matrix,
+    seq: &RotationSequence,
+) -> Result<Matrix> {
+    let m = a.rows();
+    let n = a.cols();
+    let k = seq.k();
+    let a_lit = xla::Literal::vec1(a.to_row_major().as_slice()).reshape(&[m as i64, n as i64])?;
+    let c_lit =
+        xla::Literal::vec1(seq.c().to_row_major().as_slice()).reshape(&[(n - 1) as i64, k as i64])?;
+    let s_lit =
+        xla::Literal::vec1(seq.s().to_row_major().as_slice()).reshape(&[(n - 1) as i64, k as i64])?;
+    let out = rt.execute(name, &[a_lit, c_lit, s_lit])?;
+    let values = out[0].to_vec::<f64>()?;
+    anyhow::ensure!(
+        values.len() == m * n,
+        "artifact '{name}' returned {} values, expected {}",
+        values.len(),
+        m * n
+    );
+    Ok(Matrix::from_fn(m, n, |i, j| values[i * n + j]))
+}

@@ -1,0 +1,244 @@
+//! Multi-level hierarchy: L1 → L2 → L3 → memory, plus a TLB (§4.2).
+
+use super::cache::{Cache, CacheSpec};
+
+/// TLB model: fully-associative LRU over pages.
+pub struct Tlb {
+    page_bytes: usize,
+    entries: usize,
+    stack: Vec<u64>,
+    hits: u64,
+    misses: u64,
+}
+
+impl Tlb {
+    pub fn new(page_bytes: usize, entries: usize) -> Self {
+        Self {
+            page_bytes,
+            entries,
+            stack: Vec::with_capacity(entries),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn access(&mut self, addr: u64) -> bool {
+        let page = addr / self.page_bytes as u64;
+        if let Some(pos) = self.stack.iter().position(|&p| p == page) {
+            let p = self.stack.remove(pos);
+            self.stack.push(p);
+            self.hits += 1;
+            true
+        } else {
+            if self.stack.len() == self.entries {
+                self.stack.remove(0);
+            }
+            self.stack.push(page);
+            self.misses += 1;
+            false
+        }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+}
+
+/// Geometry of the full hierarchy.
+#[derive(Clone, Copy, Debug)]
+pub struct HierarchySpec {
+    pub l1: CacheSpec,
+    pub l2: CacheSpec,
+    pub l3: CacheSpec,
+    /// Page size in bytes (§4.2: "typically 4kb").
+    pub page_bytes: usize,
+    /// TLB entries.
+    pub tlb_entries: usize,
+}
+
+impl HierarchySpec {
+    /// A model of the paper's Xeon-class machine: 32K/256K/35M caches
+    /// (T1 = 4000, T2 = 32000, T3 ≈ 4.48M doubles per the §5 values),
+    /// 64B lines, 4KB pages, 64-entry L1 TLB.
+    pub fn paper_machine() -> Self {
+        Self {
+            l1: CacheSpec {
+                size_bytes: 32 * 1024,
+                line_bytes: 64,
+                assoc: 8,
+            },
+            l2: CacheSpec {
+                size_bytes: 256 * 1024,
+                line_bytes: 64,
+                assoc: 8,
+            },
+            l3: CacheSpec {
+                size_bytes: 35 * 1024 * 1024 + 840 * 1024, // 4.48e6 doubles
+                line_bytes: 64,
+                assoc: 16,
+            },
+            page_bytes: 4096,
+            tlb_entries: 64,
+        }
+    }
+
+    /// A small machine for fast simulation sweeps: caches scaled down 8x so
+    /// that interesting capacity effects appear already at n ≈ 100–500.
+    pub fn small_machine() -> Self {
+        Self {
+            l1: CacheSpec {
+                size_bytes: 4 * 1024,
+                line_bytes: 64,
+                assoc: 8,
+            },
+            l2: CacheSpec {
+                size_bytes: 32 * 1024,
+                line_bytes: 64,
+                assoc: 8,
+            },
+            l3: CacheSpec {
+                size_bytes: 512 * 1024,
+                line_bytes: 64,
+                assoc: 16,
+            },
+            page_bytes: 4096,
+            tlb_entries: 16,
+        }
+    }
+}
+
+/// The simulated hierarchy with access counters.
+pub struct Hierarchy {
+    pub l1: Cache,
+    pub l2: Cache,
+    pub l3: Cache,
+    pub tlb: Tlb,
+    /// Total element accesses (loads + stores) issued.
+    pub accesses: u64,
+    /// Stores among them.
+    pub stores: u64,
+}
+
+impl Hierarchy {
+    pub fn new(spec: HierarchySpec) -> Self {
+        Self {
+            l1: Cache::new(spec.l1),
+            l2: Cache::new(spec.l2),
+            l3: Cache::new(spec.l3),
+            tlb: Tlb::new(spec.page_bytes, spec.tlb_entries),
+            accesses: 0,
+            stores: 0,
+        }
+    }
+
+    /// One element access at byte address `addr` (inclusive hierarchy:
+    /// probe L1, on miss L2, on miss L3, on miss memory).
+    #[inline]
+    pub fn access(&mut self, addr: u64, write: bool) {
+        self.accesses += 1;
+        if write {
+            self.stores += 1;
+        }
+        self.tlb.access(addr);
+        if !self.l1.access(addr) && !self.l2.access(addr) {
+            self.l3.access(addr);
+        }
+    }
+
+    /// Access a contiguous run of `count` f64 elements starting at byte
+    /// `addr`, touching each cache line once (consecutive same-line
+    /// accesses always hit and only dilute the counters).
+    pub fn access_run(&mut self, addr: u64, count: usize, write: bool) {
+        if count == 0 {
+            return;
+        }
+        let line = self.l1.spec().line_bytes as u64;
+        let end = addr + 8 * count as u64;
+        let mut a = addr;
+        let mut lines = 0u64;
+        while a < end {
+            self.access(a, write);
+            lines += 1;
+            a = (a / line + 1) * line;
+        }
+        let extra = (count as u64).saturating_sub(lines);
+        self.accesses += extra;
+        if write {
+            self.stores += extra;
+        }
+    }
+
+    /// DRAM traffic in bytes (L3 miss lines).
+    pub fn memory_traffic_bytes(&self) -> u64 {
+        self.l3.miss_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_propagates_through_levels() {
+        let mut h = Hierarchy::new(HierarchySpec::small_machine());
+        h.access(0, false);
+        assert_eq!(h.l1.misses(), 1);
+        assert_eq!(h.l2.misses(), 1);
+        assert_eq!(h.l3.misses(), 1);
+        h.access(8, false); // same line: L1 hit, no L2/L3 probe
+        assert_eq!(h.l1.hits(), 1);
+        assert_eq!(h.l2.misses(), 1);
+        assert_eq!(h.l3.misses(), 1);
+    }
+
+    #[test]
+    fn l2_catches_l1_capacity_misses() {
+        let mut h = Hierarchy::new(HierarchySpec::small_machine());
+        // Stream 8KB (>4KB L1, <32KB L2) twice.
+        for addr in (0..8192u64).step_by(64) {
+            h.access(addr, false);
+        }
+        let l2_misses_after_first = h.l2.misses();
+        for addr in (0..8192u64).step_by(64) {
+            h.access(addr, false);
+        }
+        // Second pass: L1 misses (capacity) but L2 absorbs them all.
+        assert_eq!(h.l2.misses(), l2_misses_after_first);
+        assert!(h.l1.misses() > 128);
+    }
+
+    #[test]
+    fn access_run_counts_elements_once() {
+        let mut h = Hierarchy::new(HierarchySpec::small_machine());
+        h.access_run(0, 16, true); // 16 doubles = 2 lines
+        assert_eq!(h.accesses, 16);
+        assert_eq!(h.stores, 16);
+        assert_eq!(h.l1.misses() + h.l1.hits(), 2);
+    }
+
+    #[test]
+    fn tlb_tracks_pages() {
+        let mut h = Hierarchy::new(HierarchySpec::small_machine());
+        // 20 distinct pages, 16-entry TLB: first pass all miss.
+        for p in 0..20u64 {
+            h.access(p * 4096, false);
+        }
+        assert_eq!(h.tlb.misses(), 20);
+        // Revisit the first page: evicted by now.
+        h.access(0, false);
+        assert_eq!(h.tlb.misses(), 21);
+    }
+
+    #[test]
+    fn memory_traffic_is_l3_miss_lines() {
+        let mut h = Hierarchy::new(HierarchySpec::small_machine());
+        for addr in (0..4096u64).step_by(64) {
+            h.access(addr, false);
+        }
+        assert_eq!(h.memory_traffic_bytes(), 64 * 64);
+    }
+}

@@ -1,0 +1,150 @@
+//! Closed-form I/O bounds and memory-operation counts (§1.2, §3).
+//!
+//! These are the analytical quantities the paper derives; the benchmark
+//! harness compares them against the measured values from the simulator
+//! ([`super::simulate_algorithm`]) and against instruction counts from the
+//! kernel schedules.
+
+/// §1.2: IOLB-derived I/O lower bound for Alg 1.2 on a two-memory machine
+/// with cache size `s` (in doubles): `mnk/√S`.
+pub fn io_lower_bound(m: usize, n: usize, k: usize, s: usize) -> f64 {
+    (m as f64) * (n as f64) * (k as f64) / (s as f64).sqrt()
+}
+
+/// §1.2: I/O of the wavefront algorithm with blocking `m_b x k_b`:
+/// `mnk/(m_b·k_b) · (2m_b + 2k_b)`.
+pub fn wavefront_io(m: usize, n: usize, k: usize, mb: usize, kb: usize) -> f64 {
+    let steps = (m as f64) * (n as f64) * (k as f64) / ((mb as f64) * (kb as f64));
+    steps * (2.0 * mb as f64 + 2.0 * kb as f64)
+}
+
+/// §1.2: the wavefront I/O at the optimal `m_b = k_b = √S`: `4mnk/√S`.
+pub fn wavefront_io_optimal(m: usize, n: usize, k: usize, s: usize) -> f64 {
+    4.0 * (m as f64) * (n as f64) * (k as f64) / (s as f64).sqrt()
+}
+
+/// Total flops: `6mnk` (§1.2 counts k full sequences of n rotations on m
+/// rows; the figures use `6·m·(n-1)·k` — both are reported).
+pub fn total_flops(m: usize, n: usize, k: usize) -> f64 {
+    6.0 * (m as f64) * (n as f64) * (k as f64)
+}
+
+/// §1.2: maximum possible operational intensity, `6√S`.
+pub fn op_intensity_max(s: usize) -> f64 {
+    6.0 * (s as f64).sqrt()
+}
+
+/// §1.2: wavefront operational intensity, `(3/2)√S`.
+pub fn op_intensity_wavefront(s: usize) -> f64 {
+    1.5 * (s as f64).sqrt()
+}
+
+/// §1.2: GEMM's operational intensity, `√S` (the comparison point).
+pub fn op_intensity_gemm(s: usize) -> f64 {
+    (s as f64).sqrt()
+}
+
+/// Eq 3.1: memory operations of the plain blocked kernel (Alg 2.1):
+/// `4·m_b(n_b−k_b)k_b + 2(n_b−k_b)k_b`.
+pub fn memops_plain(mb: usize, nb: usize, kb: usize) -> f64 {
+    let (mb, nb, kb) = (mb as f64, nb as f64, kb as f64);
+    4.0 * mb * (nb - kb) * kb + 2.0 * (nb - kb) * kb
+}
+
+/// Eq 3.2: with 2x2 fused rotations: `2·m_b(n_b−k_b)k_b + 2(n_b−k_b)k_b`.
+pub fn memops_fused22(mb: usize, nb: usize, kb: usize) -> f64 {
+    let (mb, nb, kb) = (mb as f64, nb as f64, kb as f64);
+    2.0 * mb * (nb - kb) * kb + 2.0 * (nb - kb) * kb
+}
+
+/// Eq 3.3: with `n_r x k_r` fused rotations:
+/// `(2/n_r + 2/k_r + 2/m_b)·m_b(n_b−k_b)k_b`.
+pub fn memops_fused_nrkr(mb: usize, nb: usize, kb: usize, nr: usize, kr: usize) -> f64 {
+    let (mb, nb, kb) = (mb as f64, nb as f64, kb as f64);
+    (2.0 / nr as f64 + 2.0 / kr as f64 + 2.0 / mb) * mb * (nb - kb) * kb
+}
+
+/// Eq 3.4: the §3 wave kernel (`m_r` rows, `k_r`-wide waves, `n_b` waves):
+/// `(2/k_r + 2/n_b + 2/m_r)·m_b(n_b−k_b)k_b`.
+pub fn memops_wave_kernel(mb: usize, nb: usize, kb: usize, mr: usize, kr: usize) -> f64 {
+    let (mbf, nbf, kbf) = (mb as f64, nb as f64, kb as f64);
+    (2.0 / kr as f64 + 2.0 / nbf + 2.0 / mr as f64) * mbf * (nbf - kbf) * kbf
+}
+
+/// Eq 3.5: the asymptotic coefficient for the `m_r = 8, k_r = 5` kernel:
+/// `0.65·m(n−k)k` memory operations.
+pub fn memops_kernel_85_asymptotic(m: usize, n: usize, k: usize) -> f64 {
+    0.65 * (m as f64) * ((n - k) as f64) * (k as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_between_bound_and_wavefront_is_four() {
+        let (m, n, k, s) = (1000, 1000, 180, 4000);
+        let lb = io_lower_bound(m, n, k, s);
+        let wf = wavefront_io_optimal(m, n, k, s);
+        assert!((wf / lb - 4.0).abs() < 1e-12, "§1.2: factor 4");
+    }
+
+    #[test]
+    fn wavefront_io_at_sqrt_s_matches_optimal() {
+        let (m, n, k, s) = (512, 512, 60, 4096);
+        let sb = (s as f64).sqrt() as usize; // 64
+        assert!(
+            (wavefront_io(m, n, k, sb, sb) - wavefront_io_optimal(m, n, k, s)).abs() < 1e-6
+        );
+    }
+
+    #[test]
+    fn operational_intensities() {
+        let s = 4000;
+        // flops / io: 6mnk / (mnk/√S) = 6√S etc.
+        let (m, n, k) = (100, 100, 10);
+        let oi_max = total_flops(m, n, k) / io_lower_bound(m, n, k, s);
+        assert!((oi_max - op_intensity_max(s)).abs() < 1e-9);
+        let oi_wf = total_flops(m, n, k) / wavefront_io_optimal(m, n, k, s);
+        assert!((oi_wf - op_intensity_wavefront(s)).abs() < 1e-9);
+        assert!(op_intensity_gemm(s) < op_intensity_wavefront(s));
+    }
+
+    #[test]
+    fn eq_3_4_beats_eq_3_2_for_large_mr() {
+        // The paper's headline: the wave kernel needs ~3x fewer memops than
+        // 2x2 fusing (0.65 vs 2.0 coefficient) with m_r=8, k_r=5.
+        let (mb, nb, kb) = (4800, 216, 60);
+        let fused = memops_fused22(mb, nb, kb);
+        let kernel = memops_wave_kernel(mb, nb, kb, 8, 5);
+        let ratio = fused / kernel;
+        assert!(ratio > 2.9 && ratio < 3.2, "ratio = {ratio}");
+    }
+
+    #[test]
+    fn eq_3_5_asymptotic_coefficient() {
+        // (2/5 + 2/8) = 0.65 as n_b -> infinity.
+        let (mb, nb, kb) = (100_000, 1_000_000, 10);
+        let per = memops_wave_kernel(mb, nb, kb, 8, 5)
+            / ((mb as f64) * ((nb - kb) as f64) * kb as f64);
+        assert!((per - 0.65).abs() < 0.01, "per-op coefficient = {per}");
+    }
+
+    #[test]
+    fn kernel_16x2_needs_more_memops_than_8x5() {
+        // §8.2: "the 16x2 kernel needs almost twice as many memory
+        // operations as the 8x5 kernel" (yet is faster in practice).
+        let (mb, nb, kb) = (4800, 216, 60);
+        let k85 = memops_wave_kernel(mb, nb, kb, 8, 5);
+        let k162 = memops_wave_kernel(mb, nb, kb, 16, 2);
+        let ratio = k162 / k85;
+        assert!(ratio > 1.6 && ratio < 2.0, "ratio = {ratio}");
+    }
+
+    #[test]
+    fn plain_is_twice_fused() {
+        let (mb, nb, kb) = (1000, 216, 60);
+        let r = memops_plain(mb, nb, kb) / memops_fused22(mb, nb, kb);
+        assert!(r > 1.9 && r < 2.1);
+    }
+}

@@ -1,0 +1,26 @@
+//! Memory-hierarchy simulator (§1.2, §4.1–4.2 substrate).
+//!
+//! The paper's I/O claims are statements about a *machine model* (the
+//! two-memory model with a cache of size `S`). The authors validate them
+//! with reasoning + hardware measurements; we validate them directly by
+//! building the machine model: a trace-driven, set-associative, LRU
+//! L1/L2/L3 + TLB simulator, driven by access-pattern emitters that mirror
+//! each algorithm's exact loop structure.
+//!
+//! Two kinds of results come out:
+//!
+//! * **measured I/O** — cache-line traffic between levels, to compare with
+//!   the §1.2 formulas (`mnk/√S` lower bound, `4mnk/√S` wavefront) and the
+//!   operational-intensity claims (`6√S` max, `(3/2)√S` wavefront, `√S`
+//!   GEMM);
+//! * **counted memory operations** — load/store instructions issued by the
+//!   kernel schedules, to validate Eq 3.1–3.5.
+
+mod cache;
+mod hierarchy;
+pub mod iolb;
+mod trace;
+
+pub use cache::{Cache, CacheSpec};
+pub use hierarchy::{Hierarchy, HierarchySpec, Tlb};
+pub use trace::{simulate_algorithm, AccessCounts, SimReport};

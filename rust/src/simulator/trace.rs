@@ -1,0 +1,613 @@
+//! Access-pattern emitters: drive the [`Hierarchy`] with the exact memory
+//! reference streams of each algorithm variant.
+//!
+//! The emitters mirror the loop structure of the real implementations
+//! (including the §5 loop nest and the §4 packing traffic of the kernel
+//! algorithm) but issue addresses instead of arithmetic. Consecutive
+//! same-line references are coalesced (they can never miss) while the
+//! element-level totals are preserved, so both cache statistics and
+//! instruction-count statistics (`Eq 3.1–3.5`) come out exact.
+
+use super::hierarchy::{Hierarchy, HierarchySpec};
+use crate::blocking::KernelConfig;
+use crate::kernel::Algorithm;
+use crate::rot::{wave_members, waves_count};
+use anyhow::{bail, Result};
+
+/// Element-level load/store totals (the Eq 3.x "memory operations").
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AccessCounts {
+    pub loads: u64,
+    pub stores: u64,
+}
+
+impl AccessCounts {
+    pub fn total(&self) -> u64 {
+        self.loads + self.stores
+    }
+}
+
+/// Everything the harness reports per simulated run.
+#[derive(Clone, Copy, Debug)]
+pub struct SimReport {
+    pub algorithm: Algorithm,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Element-level memory operations issued (Eq 3.x quantity).
+    pub memops: AccessCounts,
+    pub l1_misses: u64,
+    pub l2_misses: u64,
+    pub l3_misses: u64,
+    pub tlb_misses: u64,
+    /// Bytes moved between memory and the last-level cache.
+    pub memory_traffic_bytes: u64,
+    /// Useful flops (6·m·(n−1)·k).
+    pub flops: u64,
+    /// Operational intensity: flops / DRAM bytes moved.
+    pub op_intensity: f64,
+}
+
+/// Simulated memory layout: `A` column-major at 0, then `C`, `S`, then the
+/// packed panel buffer and the packed wave-stream buffer (disjoint, as in
+/// the real implementation).
+struct Layout {
+    m: usize,
+    n: usize,
+    ld_bytes: u64,
+    c_base: u64,
+    s_base: u64,
+    panel_base: u64,
+    stream_base: u64,
+}
+
+impl Layout {
+    fn new(m: usize, n: usize, k: usize) -> Self {
+        let a_bytes = (m * n * 8) as u64;
+        let cs_bytes = ((n - 1) * k * 8) as u64;
+        Self {
+            m,
+            n,
+            ld_bytes: (m * 8) as u64,
+            c_base: a_bytes,
+            s_base: a_bytes + cs_bytes,
+            panel_base: a_bytes + 2 * cs_bytes,
+            stream_base: a_bytes + 2 * cs_bytes + a_bytes,
+        }
+    }
+
+    #[inline]
+    fn a_col(&self, j: usize) -> u64 {
+        j as u64 * self.ld_bytes
+    }
+
+    #[inline]
+    fn c_at(&self, i: usize, p: usize) -> u64 {
+        self.c_base + ((i + p * (self.n - 1)) * 8) as u64
+    }
+
+    #[inline]
+    fn s_at(&self, i: usize, p: usize) -> u64 {
+        self.s_base + ((i + p * (self.n - 1)) * 8) as u64
+    }
+}
+
+/// Emit one rotation applied to full columns `j, j+1` over rows
+/// `[r0, r0+rows)`: the interleaved load/load/store/store element pattern
+/// of Alg 1.1, coalesced per line.
+fn emit_rot(h: &mut Hierarchy, l: &Layout, j: usize, r0: usize, rows: usize) {
+    emit_cols_pass(h, &[l.a_col(j), l.a_col(j + 1)], r0, rows);
+}
+
+/// Interleaved pass over several columns: per line-chunk of rows, read every
+/// column's chunk then write it back. Counts `2 * cols * rows` element ops.
+fn emit_cols_pass(h: &mut Hierarchy, col_bases: &[u64], r0: usize, rows: usize) {
+    const LINE_ELEMS: usize = 8;
+    let mut r = r0;
+    let end = r0 + rows;
+    while r < end {
+        let chunk = LINE_ELEMS.min(end - r) as u64;
+        for &base in col_bases {
+            h.access(base + (r * 8) as u64, false);
+        }
+        for &base in col_bases {
+            h.access(base + (r * 8) as u64, true);
+        }
+        let extra = (chunk - 1) * col_bases.len() as u64;
+        h.accesses += 2 * extra;
+        h.stores += extra;
+        r += chunk as usize;
+    }
+}
+
+fn emit_cs_load(h: &mut Hierarchy, l: &Layout, i: usize, p: usize) {
+    h.access(l.c_at(i, p), false);
+    h.access(l.s_at(i, p), false);
+}
+
+/// Alg 1.2 access stream.
+fn emit_naive(h: &mut Hierarchy, l: &Layout, k: usize) {
+    for p in 0..k {
+        for j in 0..l.n - 1 {
+            emit_cs_load(h, l, j, p);
+            emit_rot(h, l, j, 0, l.m);
+        }
+    }
+}
+
+/// Alg 1.3 access stream.
+fn emit_wavefront(h: &mut Hierarchy, l: &Layout, k: usize) {
+    for w in 0..waves_count(l.n, k) {
+        for pos in wave_members(w, l.n, k) {
+            emit_cs_load(h, l, pos.i, pos.p);
+            emit_rot(h, l, pos.i, 0, l.m);
+        }
+    }
+}
+
+/// §2 blocked access stream (plain inner loop, same schedule as
+/// [`crate::kernel::apply_blocked`]).
+fn emit_blocked(h: &mut Hierarchy, l: &Layout, k: usize, cfg: &KernelConfig) {
+    let (m, n) = (l.m, l.n);
+    let kb_max = cfg.kb.min(n - 1).max(1);
+    let mut ib = 0;
+    while ib < m {
+        let rows = cfg.mb.min(m - ib);
+        let mut pb = 0;
+        while pb < k {
+            let kbe = kb_max.min(k - pb);
+            let w_end = (n - 2) + (kbe - 1) + 1;
+            let mut w0 = 0;
+            while w0 < w_end {
+                let w1 = (w0 + cfg.nb).min(w_end);
+                for lseq in 0..kbe {
+                    let i_lo = w0.saturating_sub(lseq);
+                    let i_hi = (w1 - lseq.min(w1)).min(n - 1);
+                    for i in i_lo..i_hi {
+                        emit_cs_load(h, l, i, pb + lseq);
+                        emit_rot(h, l, i, ib, rows);
+                    }
+                }
+                w0 = w1;
+            }
+            pb += kbe;
+        }
+        ib += rows;
+    }
+}
+
+/// §1.3 2x2-fused access stream (pair sweep of
+/// [`crate::kernel::apply_fused`]): full tiles touch 4 columns once for 4
+/// rotations.
+fn emit_fused(h: &mut Hierarchy, l: &Layout, k: usize) {
+    let n = l.n;
+    let mut p = 0;
+    while p + 1 < k {
+        // lead-in
+        emit_cs_load(h, l, 0, p);
+        emit_rot(h, l, 0, 0, l.m);
+        let mut i = 1;
+        while i + 2 <= n - 1 {
+            emit_cs_load(h, l, i, p);
+            emit_cs_load(h, l, i + 1, p);
+            emit_cs_load(h, l, i - 1, p + 1);
+            emit_cs_load(h, l, i, p + 1);
+            emit_cols_pass(
+                h,
+                &[
+                    l.a_col(i - 1),
+                    l.a_col(i),
+                    l.a_col(i + 1),
+                    l.a_col(i + 2),
+                ],
+                0,
+                l.m,
+            );
+            i += 2;
+        }
+        for ii in i..n - 1 {
+            emit_cs_load(h, l, ii, p);
+            emit_rot(h, l, ii, 0, l.m);
+        }
+        for ii in (i - 1)..n - 1 {
+            emit_cs_load(h, l, ii, p + 1);
+            emit_rot(h, l, ii, 0, l.m);
+        }
+        p += 2;
+    }
+    if p < k {
+        for i in 0..n - 1 {
+            emit_cs_load(h, l, i, p);
+            emit_rot(h, l, i, 0, l.m);
+        }
+    }
+}
+
+/// One §3 wave-kernel invocation on `MR` rows: preload `kr` columns, per
+/// wave load 1 column + `2·kr` op scalars + store 1 column, drain `kr`
+/// columns. `col(j)` maps a panel-local column to its base address.
+#[allow(clippy::too_many_arguments)]
+fn emit_wave_kernel(
+    h: &mut Hierarchy,
+    col: &impl Fn(usize, usize) -> u64,
+    stream_base: u64,
+    r0: usize,
+    mr: usize,
+    j0: usize,
+    kr: usize,
+    nwaves: usize,
+) {
+    if nwaves == 0 {
+        return;
+    }
+    for s in 0..kr {
+        h.access_run(col(r0, j0 + s), mr, false);
+    }
+    for t in 0..nwaves {
+        h.access_run(col(r0, j0 + t + kr), mr, false);
+        h.access_run(stream_base + ((t * kr * 2) * 8) as u64, kr * 2, false);
+        h.access_run(col(r0, j0 + t), mr, true);
+    }
+    for s in 0..kr {
+        h.access_run(col(r0, j0 + nwaves + s), mr, true);
+    }
+}
+
+/// The full `rs_kernel` access stream: §4 packing, §5 loop nest, §3 kernel,
+/// with the same phase decomposition as [`crate::kernel::phases`].
+fn emit_kernel(h: &mut Hierarchy, l: &Layout, k: usize, cfg: &KernelConfig, pack: bool) {
+    let (m, n) = (l.m, l.n);
+    let kb_max = cfg.kb.min(n - 1).max(1);
+    let (mr, kr) = (cfg.mr, cfg.kr);
+
+    let mut ib = 0;
+    while ib < m {
+        let rows = cfg.mb.min(m - ib);
+        // §4 micro-panel layout: chunk c of m_r rows, column j at
+        // chunk_base + j*m_r (columns contiguous at stride m_r).
+        let chunk_stride = (mr * n) as u64;
+        let col = |r: usize, j: usize| -> u64 {
+            if pack {
+                let c = (r / mr) as u64;
+                l.panel_base + (c * chunk_stride + (j * mr + r % mr) as u64) * 8
+            } else {
+                l.a_col(j) + ((ib + r) * 8) as u64
+            }
+        };
+        // Packed panels process the zero-padded final chunk as a full m_r
+        // chunk (no remainder path), mirroring kernel::phases.
+        let rows_eff = if pack { rows.div_ceil(mr) * mr } else { rows };
+        if pack {
+            // Pack: read strided A columns per chunk, write the packed
+            // buffer contiguously.
+            let chunks = rows.div_ceil(mr);
+            for c in 0..chunks {
+                let live = mr.min(rows - c * mr);
+                for j in 0..n {
+                    h.access_run(l.a_col(j) + ((ib + c * mr) * 8) as u64, live, false);
+                    h.access_run(
+                        l.panel_base + (c as u64 * chunk_stride + (j * mr) as u64) * 8,
+                        mr,
+                        true,
+                    );
+                }
+            }
+        }
+
+        let mut pb = 0;
+        while pb < k {
+            let kbe = kb_max.min(k - pb);
+            let kre = kr.min(kbe);
+            // Build the wave streams once per k-block: read C/S, write the
+            // packed stream (cheap; mirrors WaveStream::pack).
+            let emit_stream_build = |h: &mut Hierarchy, nops: usize| {
+                // nops (c,s) pairs read + written to the stream buffer.
+                h.access_run(l.stream_base, nops * 2, true);
+            };
+
+            // --- startup ---
+            for lseq in 0..kbe {
+                let nw = kbe - 1 - lseq;
+                if nw == 0 {
+                    continue;
+                }
+                for i in 0..nw {
+                    emit_cs_load(h, l, i, pb + lseq);
+                }
+                emit_stream_build(h, nw);
+                let mut r = 0;
+                while r + mr <= rows_eff {
+                    emit_wave_kernel(h, &col, l.stream_base, r, mr, 0, 1, nw);
+                    r += mr;
+                }
+                for rr in r..rows_eff {
+                    emit_wave_kernel(h, &col, l.stream_base, rr, 1, 0, 1, nw);
+                }
+            }
+
+            // --- pipeline ---
+            let (w_lo, w_hi) = (kbe - 1, n - 1);
+            let mut w0 = w_lo;
+            while w0 < w_hi {
+                let w1 = (w0 + cfg.nb).min(w_hi);
+                let full_groups = kbe / kre;
+                // stream build for the chunk
+                for g in 0..full_groups {
+                    let l0 = g * kre;
+                    for t in 0..(w1 - w0) {
+                        for u in 0..kre {
+                            emit_cs_load(h, l, w0 + t - l0 - u, pb + l0 + u);
+                        }
+                    }
+                    emit_stream_build(h, (w1 - w0) * kre);
+                }
+                for lseq in full_groups * kre..kbe {
+                    for t in 0..(w1 - w0) {
+                        emit_cs_load(h, l, w0 + t - lseq, pb + lseq);
+                    }
+                    emit_stream_build(h, w1 - w0);
+                }
+                // row chunks x subgroups
+                let mut r = 0;
+                while r + mr <= rows_eff {
+                    for g in 0..full_groups {
+                        let l0 = g * kre;
+                        emit_wave_kernel(
+                            h,
+                            &col,
+                            l.stream_base,
+                            r,
+                            mr,
+                            w0 - l0 + 1 - kre,
+                            kre,
+                            w1 - w0,
+                        );
+                    }
+                    for lseq in full_groups * kre..kbe {
+                        emit_wave_kernel(
+                            h,
+                            &col,
+                            l.stream_base,
+                            r,
+                            mr,
+                            w0 - lseq,
+                            1,
+                            w1 - w0,
+                        );
+                    }
+                    r += mr;
+                }
+                for rr in r..rows_eff {
+                    for g in 0..full_groups {
+                        let l0 = g * kre;
+                        emit_wave_kernel(
+                            h,
+                            &col,
+                            l.stream_base,
+                            rr,
+                            1,
+                            w0 - l0 + 1 - kre,
+                            kre,
+                            w1 - w0,
+                        );
+                    }
+                    for lseq in full_groups * kre..kbe {
+                        emit_wave_kernel(
+                            h,
+                            &col,
+                            l.stream_base,
+                            rr,
+                            1,
+                            w0 - lseq,
+                            1,
+                            w1 - w0,
+                        );
+                    }
+                }
+                w0 = w1;
+            }
+
+            // --- shutdown ---
+            for lseq in 1..kbe {
+                for i in n - 1 - lseq..n - 1 {
+                    emit_cs_load(h, l, i, pb + lseq);
+                }
+                emit_stream_build(h, lseq);
+                let mut r = 0;
+                while r + mr <= rows_eff {
+                    emit_wave_kernel(
+                        h,
+                        &col,
+                        l.stream_base,
+                        r,
+                        mr,
+                        n - 1 - lseq,
+                        1,
+                        lseq,
+                    );
+                    r += mr;
+                }
+                for rr in r..rows_eff {
+                    emit_wave_kernel(
+                        h,
+                        &col,
+                        l.stream_base,
+                        rr,
+                        1,
+                        n - 1 - lseq,
+                        1,
+                        lseq,
+                    );
+                }
+            }
+            pb += kbe;
+        }
+
+        if pack {
+            // Unpack: read the packed chunks, write strided A columns.
+            let chunks = rows.div_ceil(mr);
+            for c in 0..chunks {
+                let live = mr.min(rows - c * mr);
+                for j in 0..n {
+                    h.access_run(
+                        l.panel_base + (c as u64 * chunk_stride + (j * mr) as u64) * 8,
+                        live,
+                        false,
+                    );
+                    h.access_run(l.a_col(j) + ((ib + c * mr) * 8) as u64, live, true);
+                }
+            }
+        }
+        ib += rows;
+    }
+}
+
+/// Run the access-pattern simulation for one algorithm variant.
+pub fn simulate_algorithm(
+    algo: Algorithm,
+    m: usize,
+    n: usize,
+    k: usize,
+    spec: HierarchySpec,
+    cfg: &KernelConfig,
+) -> Result<SimReport> {
+    assert!(n >= 2 && k >= 1 && m >= 1);
+    let l = Layout::new(m, n, k);
+    let mut h = Hierarchy::new(spec);
+    match algo {
+        Algorithm::Naive => emit_naive(&mut h, &l, k),
+        Algorithm::Wavefront => emit_wavefront(&mut h, &l, k),
+        Algorithm::Blocked => emit_blocked(&mut h, &l, k, cfg),
+        Algorithm::Fused => emit_fused(&mut h, &l, k),
+        Algorithm::Kernel => emit_kernel(&mut h, &l, k, cfg, true),
+        Algorithm::KernelNoPack => emit_kernel(&mut h, &l, k, cfg, false),
+        Algorithm::Gemm => bail!(
+            "rs_gemm is compared analytically (op intensity √S); no trace emitter"
+        ),
+    }
+    let flops = 6 * (m as u64) * ((n - 1) as u64) * (k as u64);
+    let traffic = h.memory_traffic_bytes();
+    Ok(SimReport {
+        algorithm: algo,
+        m,
+        n,
+        k,
+        memops: AccessCounts {
+            loads: h.accesses - h.stores,
+            stores: h.stores,
+        },
+        l1_misses: h.l1.misses(),
+        l2_misses: h.l2.misses(),
+        l3_misses: h.l3.misses(),
+        tlb_misses: h.tlb.misses(),
+        memory_traffic_bytes: traffic,
+        flops,
+        op_intensity: flops as f64 / traffic.max(1) as f64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocking::KernelConfig;
+
+    fn small_cfg() -> KernelConfig {
+        KernelConfig {
+            mr: 16,
+            kr: 2,
+            mb: 64,
+            kb: 8,
+            nb: 32,
+            threads: 1,
+        }
+    }
+
+    fn sim(algo: Algorithm, m: usize, n: usize, k: usize) -> SimReport {
+        simulate_algorithm(algo, m, n, k, HierarchySpec::small_machine(), &small_cfg()).unwrap()
+    }
+
+    #[test]
+    fn naive_memop_count_is_exact() {
+        // Alg 1.2: per rotation 2m loads + 2m stores of A + 2 loads of C/S.
+        let (m, n, k) = (24, 10, 3);
+        let r = sim(Algorithm::Naive, m, n, k);
+        let expected = (n - 1) as u64 * k as u64 * (4 * m as u64 + 2);
+        assert_eq!(r.memops.total(), expected);
+    }
+
+    #[test]
+    fn fused_roughly_halves_a_traffic() {
+        let (m, n, k) = (64, 40, 8);
+        let naive = sim(Algorithm::Naive, m, n, k);
+        let fused = sim(Algorithm::Fused, m, n, k);
+        let ratio = naive.memops.total() as f64 / fused.memops.total() as f64;
+        assert!(ratio > 1.7 && ratio < 2.1, "ratio = {ratio}");
+    }
+
+    #[test]
+    fn kernel_reduces_memops_below_fused() {
+        let (m, n, k) = (128, 96, 16);
+        let fused = sim(Algorithm::Fused, m, n, k);
+        let kernel = sim(Algorithm::Kernel, m, n, k);
+        assert!(
+            kernel.memops.total() < fused.memops.total(),
+            "kernel {} vs fused {}",
+            kernel.memops.total(),
+            fused.memops.total()
+        );
+    }
+
+    #[test]
+    fn wavefront_beats_naive_on_l1_misses_for_large_n() {
+        // n large enough that the matrix exceeds the small machine's L1
+        // (4KB = 64 lines), while the wavefront's k+1-column window
+        // (7 cols x 4 lines = 28 lines) still fits it.
+        let (m, n, k) = (32, 256, 6);
+        let naive = sim(Algorithm::Naive, m, n, k);
+        let wave = sim(Algorithm::Wavefront, m, n, k);
+        // L1 on the small machine has only 8 sets, so the scattered C/S
+        // loads thrash it for both variants; the wavefront still wins.
+        assert!(
+            wave.l1_misses < naive.l1_misses,
+            "L1: wavefront {} vs naive {}",
+            wave.l1_misses,
+            naive.l1_misses
+        );
+        // In L2 the k+1-column window pays only compulsory misses while the
+        // naive sweep reloads the matrix every sequence.
+        assert!(
+            wave.l2_misses * 2 < naive.l2_misses,
+            "L2: wavefront {} vs naive {}",
+            wave.l2_misses,
+            naive.l2_misses
+        );
+    }
+
+    #[test]
+    fn all_variants_same_flops() {
+        let (m, n, k) = (32, 20, 4);
+        let flops = sim(Algorithm::Naive, m, n, k).flops;
+        for algo in [
+            Algorithm::Wavefront,
+            Algorithm::Blocked,
+            Algorithm::Fused,
+            Algorithm::Kernel,
+            Algorithm::KernelNoPack,
+        ] {
+            assert_eq!(sim(algo, m, n, k).flops, flops);
+        }
+    }
+
+    #[test]
+    fn gemm_is_rejected() {
+        assert!(simulate_algorithm(
+            Algorithm::Gemm,
+            8,
+            8,
+            2,
+            HierarchySpec::small_machine(),
+            &small_cfg()
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,83 @@
+//! In-crate property-testing driver.
+//!
+//! The offline vendor set has no `proptest`/`quickcheck`, so this module
+//! provides the small subset the test-suite needs: a deterministic
+//! case-generator loop with failure reporting that includes the case seed,
+//! so any failure is reproducible by seed.
+
+use crate::matrix::Rng64;
+
+/// Run `f` on `cases` generated inputs. `gen` draws a case from the RNG;
+/// `f` panics (via assert) on failure. On failure the harness re-raises
+/// with the case index and root seed so the case can be replayed.
+pub fn property<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut generate: impl FnMut(&mut Rng64) -> T,
+    mut f: impl FnMut(&T),
+) {
+    let mut rng = Rng64::new(seed);
+    for case in 0..cases {
+        let input = generate(&mut rng);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&input)));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {case}/{cases} (seed {seed})\ninput: {input:#?}"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Draw a shape `(m, n, k)` in the given inclusive ranges.
+pub fn arb_shape(
+    rng: &mut Rng64,
+    m_range: (usize, usize),
+    n_range: (usize, usize),
+    k_range: (usize, usize),
+) -> (usize, usize, usize) {
+    let draw = |rng: &mut Rng64, (lo, hi): (usize, usize)| lo + rng.next_below(hi - lo + 1);
+    (
+        draw(rng, m_range),
+        draw(rng, n_range),
+        draw(rng, k_range),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_runs_all_cases() {
+        let mut count = 0;
+        property(
+            "counts",
+            1,
+            25,
+            |rng| rng.next_below(10),
+            |_| {
+                count += 1;
+            },
+        );
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn arb_shape_respects_ranges() {
+        let mut rng = Rng64::new(3);
+        for _ in 0..100 {
+            let (m, n, k) = arb_shape(&mut rng, (1, 5), (2, 9), (1, 3));
+            assert!((1..=5).contains(&m));
+            assert!((2..=9).contains(&n));
+            assert!((1..=3).contains(&k));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn property_propagates_failures() {
+        property("fails", 2, 5, |rng| rng.next_below(4), |&x| assert!(x > 10));
+    }
+}

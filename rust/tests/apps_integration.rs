@@ -1,0 +1,95 @@
+//! Application-level integration: the eigensolver and SVD built on the
+//! kernel agree with independent cross-checks at realistic sizes.
+
+use rotseq::apps::{jacobi_svd, symmetric_eigen};
+use rotseq::blocking::KernelConfig;
+use rotseq::matrix::{orthogonality_error, rel_error, Matrix, Rng64};
+
+fn cfg() -> KernelConfig {
+    KernelConfig {
+        mr: 16,
+        kr: 2,
+        mb: 64,
+        kb: 12,
+        nb: 32,
+        threads: 1,
+    }
+}
+
+fn random_symmetric(n: usize, seed: u64) -> Matrix {
+    let mut rng = Rng64::new(seed);
+    let mut a = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let v = rng.next_signed();
+            a.set(i, j, v);
+            a.set(j, i, v);
+        }
+    }
+    a
+}
+
+#[test]
+fn eigensolver_at_n_60() {
+    let n = 60;
+    let a = random_symmetric(n, 5);
+    let r = symmetric_eigen(&a, &cfg()).unwrap();
+    assert!(orthogonality_error(&r.q) < 1e-10);
+    // Residual ||A q_i - w_i q_i|| per eigenpair.
+    for idx in [0, n / 2, n - 1] {
+        let w = r.eigenvalues[idx];
+        let mut resid: f64 = 0.0;
+        let mut qnorm: f64 = 0.0;
+        for i in 0..n {
+            let mut av = 0.0;
+            for j in 0..n {
+                av += a.get(i, j) * r.q.get(j, idx);
+            }
+            resid = resid.max((av - w * r.q.get(i, idx)).abs());
+            qnorm += r.q.get(i, idx) * r.q.get(i, idx);
+        }
+        assert!((qnorm - 1.0).abs() < 1e-10);
+        assert!(resid < 1e-9, "eigenpair {idx}: residual {resid}");
+    }
+    // Delayed batches were actually used.
+    assert!(r.batches >= 1);
+    assert!(r.sweeps > n / 2);
+}
+
+#[test]
+fn eigenvalues_match_svd_for_gram_matrix() {
+    // Independent cross-check between the two apps: the eigenvalues of
+    // AᵀA must equal the squared singular values of A.
+    let (m, n) = (24, 16);
+    let a = Matrix::random(m, n, 9);
+    let gram = a.transpose().matmul(&a);
+
+    let eig = symmetric_eigen(&gram, &cfg()).unwrap();
+    let svd = jacobi_svd(&a, &cfg()).unwrap();
+
+    // eigenvalues ascending; singular values descending.
+    for i in 0..n {
+        let lambda = eig.eigenvalues[n - 1 - i];
+        let sigma2 = svd.sigma[i] * svd.sigma[i];
+        assert!(
+            (lambda - sigma2).abs() / sigma2.max(1e-12) < 1e-8,
+            "i={i}: lambda={lambda} sigma^2={sigma2}"
+        );
+    }
+}
+
+#[test]
+fn svd_at_tall_rectangular() {
+    let (m, n) = (80, 32);
+    let a = Matrix::random(m, n, 3);
+    let r = jacobi_svd(&a, &cfg()).unwrap();
+    assert!(orthogonality_error(&r.u) < 1e-10);
+    assert!(orthogonality_error(&r.v) < 1e-10);
+    let mut us = r.u.clone();
+    for j in 0..n {
+        for i in 0..m {
+            us.set(i, j, us.get(i, j) * r.sigma[j]);
+        }
+    }
+    assert!(rel_error(&us.matmul(&r.v.transpose()), &a) < 1e-10);
+}

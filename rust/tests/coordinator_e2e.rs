@@ -1,0 +1,90 @@
+//! End-to-end coordinator test: many concurrent jobs of mixed shapes
+//! through the routing + worker-pool path, results verified against the
+//! oracle, metrics consistent.
+
+use rotseq::blocking::KernelConfig;
+use rotseq::coordinator::{Coordinator, Job, JobSpec, RoutePolicy};
+use rotseq::kernel::Algorithm;
+use rotseq::matrix::{max_abs_diff, Matrix};
+use rotseq::rot::{apply_naive, RotationSequence};
+
+fn cfg() -> KernelConfig {
+    KernelConfig {
+        mr: 16,
+        kr: 2,
+        mb: 48,
+        kb: 8,
+        nb: 24,
+        threads: 1,
+    }
+}
+
+#[test]
+fn mixed_workload_through_router() {
+    let coord = Coordinator::start(3, RoutePolicy::Auto);
+    let shapes = [
+        (4, 4, 1),    // -> Naive
+        (24, 16, 3),  // -> Fused
+        (64, 64, 12), // -> KernelNoPack
+        (150, 90, 40),
+        (7, 300, 2),
+        (300, 7, 9),
+    ];
+    let mut pending = Vec::new();
+    for (i, &(m, n, k)) in shapes.iter().enumerate() {
+        let seq = RotationSequence::random(n, k, i as u64);
+        let a = Matrix::random(m, n, 1000 + i as u64);
+        let mut expected = a.clone();
+        apply_naive(&mut expected, &seq);
+        let rx = coord.submit(Job {
+            matrix: a,
+            seq,
+            spec: JobSpec {
+                algorithm: None,
+                config: cfg(),
+            },
+        });
+        pending.push((rx, expected));
+    }
+    for (rx, expected) in pending {
+        let r = rx.recv().unwrap().unwrap();
+        assert_eq!(max_abs_diff(&r.matrix, &expected), 0.0);
+    }
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.jobs_submitted, shapes.len() as u64);
+    assert_eq!(snap.jobs_completed, shapes.len() as u64);
+    assert_eq!(snap.jobs_failed, 0);
+    assert!(snap.gflops() > 0.0);
+    coord.shutdown();
+}
+
+#[test]
+fn every_variant_through_the_coordinator() {
+    let coord = Coordinator::start(2, RoutePolicy::Auto);
+    let (m, n, k) = (40, 30, 6);
+    let seq = RotationSequence::random(n, k, 42);
+    let a = Matrix::random(m, n, 43);
+    let mut expected = a.clone();
+    apply_naive(&mut expected, &seq);
+
+    for &algo in Algorithm::ALL {
+        let r = coord
+            .run(Job {
+                matrix: a.clone(),
+                seq: seq.clone(),
+                spec: JobSpec {
+                    algorithm: Some(algo),
+                    config: cfg(),
+                },
+            })
+            .unwrap();
+        assert_eq!(r.algorithm, algo);
+        let tol = if algo == Algorithm::Gemm { 1e-11 } else { 0.0 };
+        assert!(
+            max_abs_diff(&r.matrix, &expected) <= tol,
+            "{}",
+            algo.paper_name()
+        );
+    }
+    coord.shutdown();
+}

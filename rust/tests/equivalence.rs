@@ -1,0 +1,164 @@
+//! Cross-variant equivalence: every optimized algorithm must reproduce
+//! Alg 1.2 on randomized shapes — the library's core invariant. Uses the
+//! in-crate property driver (seeded, replayable).
+
+use rotseq::blocking::KernelConfig;
+use rotseq::kernel::{apply_with, Algorithm};
+use rotseq::matrix::{frobenius_norm, max_abs_diff, orthogonality_error, Matrix, Rng64};
+use rotseq::rot::{
+    apply_fast_givens, apply_inverse_naive, apply_naive, FastGivensSequence, RotationSequence,
+};
+use rotseq::testutil::{arb_shape, property};
+
+fn arb_config(rng: &mut Rng64) -> KernelConfig {
+    let kernels = rotseq::kernel::SUPPORTED_KERNELS;
+    let (mr, kr) = kernels[rng.next_below(kernels.len())];
+    KernelConfig {
+        mr,
+        kr,
+        mb: 1 + rng.next_below(40),
+        kb: 1 + rng.next_below(10),
+        nb: 1 + rng.next_below(30),
+        threads: 1,
+    }
+}
+
+#[test]
+fn all_variants_match_naive_on_random_shapes() {
+    property(
+        "variant equivalence",
+        0xC0FFEE,
+        40,
+        |rng| {
+            let (m, n, k) = arb_shape(rng, (1, 48), (2, 48), (1, 24));
+            let cfg = arb_config(rng);
+            let seed = rng.next_u64();
+            (m, n, k, cfg, seed)
+        },
+        |&(m, n, k, cfg, seed)| {
+            let seq = RotationSequence::random(n, k, seed);
+            let mut reference = Matrix::random(m, n, seed ^ 0xABCD);
+            let orig = reference.clone();
+            apply_naive(&mut reference, &seq);
+            for &algo in Algorithm::ALL {
+                let mut a = orig.clone();
+                apply_with(algo, &mut a, &seq, &cfg).unwrap();
+                let err = max_abs_diff(&a, &reference);
+                let tol = if algo == Algorithm::Gemm { 1e-11 } else { 0.0 };
+                assert!(
+                    err <= tol,
+                    "{} differs by {err} (m={m} n={n} k={k} cfg={cfg:?})",
+                    algo.paper_name()
+                );
+            }
+        },
+    );
+}
+
+#[test]
+fn parallel_matches_naive_on_random_shapes() {
+    property(
+        "parallel equivalence",
+        0xBEEF,
+        20,
+        |rng| {
+            let (m, n, k) = arb_shape(rng, (1, 64), (2, 32), (1, 12));
+            let mut cfg = arb_config(rng);
+            cfg.threads = 1 + rng.next_below(6);
+            (m, n, k, cfg, rng.next_u64())
+        },
+        |&(m, n, k, cfg, seed)| {
+            let seq = RotationSequence::random(n, k, seed);
+            let mut expected = Matrix::random(m, n, seed ^ 0x1234);
+            let orig = expected.clone();
+            apply_naive(&mut expected, &seq);
+            let mut a = orig.clone();
+            rotseq::parallel::apply_parallel(&mut a, &seq, &cfg).unwrap();
+            assert_eq!(
+                max_abs_diff(&a, &expected),
+                0.0,
+                "threads={} m={m} n={n} k={k}",
+                cfg.threads
+            );
+        },
+    );
+}
+
+#[test]
+fn invariants_norm_orthogonality_inverse() {
+    property(
+        "norm/orthogonality/inverse invariants",
+        0xDECAF,
+        25,
+        |rng| {
+            let (m, n, k) = arb_shape(rng, (2, 32), (3, 32), (1, 16));
+            (m, n, k, rng.next_u64())
+        },
+        |&(m, n, k, seed)| {
+            let seq = RotationSequence::random(n, k, seed);
+            // Norm preservation.
+            let mut a = Matrix::random(m, n, seed ^ 1);
+            let norm0 = frobenius_norm(&a);
+            apply_naive(&mut a, &seq);
+            assert!((frobenius_norm(&a) - norm0).abs() / norm0 < 1e-12);
+            // Inverse round trip.
+            let before = Matrix::random(m, n, seed ^ 2);
+            let mut rt = before.clone();
+            apply_naive(&mut rt, &seq);
+            apply_inverse_naive(&mut rt, &seq);
+            assert!(max_abs_diff(&rt, &before) < 1e-11 * norm0.max(1.0));
+            // Orthogonality of the accumulated transform.
+            let mut q = Matrix::identity(n);
+            apply_naive(&mut q, &seq);
+            assert!(orthogonality_error(&q) < 1e-12 * (n as f64));
+        },
+    );
+}
+
+#[test]
+fn fast_givens_matches_standard_on_random_shapes() {
+    property(
+        "fast Givens equivalence",
+        0xFA57,
+        20,
+        |rng| {
+            let (m, n, k) = arb_shape(rng, (1, 24), (2, 24), (1, 40));
+            (m, n, k, rng.next_u64())
+        },
+        |&(m, n, k, seed)| {
+            let seq = RotationSequence::random(n, k, seed);
+            let fast = FastGivensSequence::from_rotations(&seq);
+            let mut a1 = Matrix::random(m, n, seed ^ 3);
+            let mut a2 = a1.clone();
+            apply_naive(&mut a1, &seq);
+            apply_fast_givens(&mut a2, &fast);
+            let scale = frobenius_norm(&a1).max(1.0);
+            assert!(
+                max_abs_diff(&a1, &a2) / scale < 1e-11,
+                "m={m} n={n} k={k}"
+            );
+        },
+    );
+}
+
+#[test]
+fn packed_v2_equals_v1_on_random_shapes() {
+    property(
+        "packed v2 equivalence",
+        0xACED,
+        20,
+        |rng| {
+            let (m, n, k) = arb_shape(rng, (1, 50), (2, 30), (1, 10));
+            (m, n, k, arb_config(rng), rng.next_u64())
+        },
+        |&(m, n, k, cfg, seed)| {
+            let seq = RotationSequence::random(n, k, seed);
+            let a = Matrix::random(m, n, seed ^ 4);
+            let mut v1 = a.clone();
+            rotseq::kernel::apply_kernel(&mut v1, &seq, &cfg).unwrap();
+            let mut pm = rotseq::pack::PackedMatrix::from_matrix(&a, cfg.mb, cfg.mr);
+            rotseq::kernel::apply_kernel_packed(&mut pm, &seq, &cfg).unwrap();
+            assert_eq!(max_abs_diff(&v1, &pm.to_matrix()), 0.0);
+        },
+    );
+}

@@ -1,0 +1,172 @@
+//! §1.2 / §3 validation: the simulator's measured quantities against the
+//! paper's closed-form analysis.
+
+use rotseq::blocking::KernelConfig;
+use rotseq::kernel::Algorithm;
+use rotseq::simulator::{iolb, simulate_algorithm, HierarchySpec};
+
+fn cfg(mr: usize, kr: usize, mb: usize, kb: usize, nb: usize) -> KernelConfig {
+    KernelConfig {
+        mr,
+        kr,
+        mb,
+        kb,
+        nb,
+        threads: 1,
+    }
+}
+
+/// §1.2: when the wavefront's `m·(k+1)` column window fits the cache under
+/// study (here L2), its traffic at that level matches the paper's
+/// `mnk/(m_b·k_b)·(2m_b + 2k_b)` formula (with `m_b = m`, `k_b = k` — the
+/// unblocked wavefront) within boundary effects, and never beats the
+/// `mnk/√S` lower bound once traffic exceeds the compulsory floor.
+#[test]
+fn wavefront_traffic_brackets() {
+    let spec = HierarchySpec::small_machine();
+    // m*(k+1) doubles = 128*25*8B = 25.6KB < 32KB L2.
+    let (m, n, k) = (128, 384, 24);
+    let r = simulate_algorithm(Algorithm::Wavefront, m, n, k, spec, &cfg(16, 2, 64, 8, 32))
+        .unwrap();
+    let l2_traffic = r.l2_misses as f64 * 8.0; // in doubles (64B lines)
+    let predicted = iolb::wavefront_io(m, n, k, m, k);
+    let ratio = l2_traffic / predicted;
+    assert!(
+        (0.3..2.0).contains(&ratio),
+        "wavefront L2 traffic {l2_traffic:.3e} vs formula {predicted:.3e}: ratio {ratio}"
+    );
+    // Lower bound sanity: measured traffic + compulsory floor can't be
+    // beaten by more than the model's slack.
+    let s2 = spec.l2.capacity_doubles();
+    let lb = iolb::io_lower_bound(m, n, k, s2);
+    let compulsory = (m * n + 2 * (n - 1) * k) as f64;
+    assert!(
+        l2_traffic + compulsory >= lb.min(compulsory),
+        "traffic below any sensible floor"
+    );
+}
+
+/// Eq 3.1 vs measured: the plain blocked algorithm issues
+/// ~`4·m(n-1)k + 2(n-1)k` element memory operations.
+#[test]
+fn eq31_plain_memops() {
+    let (m, n, k) = (64, 96, 8);
+    let r = simulate_algorithm(
+        Algorithm::Blocked,
+        m,
+        n,
+        k,
+        HierarchySpec::small_machine(),
+        &cfg(16, 2, 32, 4, 16),
+    )
+    .unwrap();
+    let expected = 4.0 * (m * (n - 1) * k) as f64 + 2.0 * ((n - 1) * k) as f64;
+    let ratio = r.memops.total() as f64 / expected;
+    assert!(
+        (0.99..1.01).contains(&ratio),
+        "blocked memops ratio {ratio}"
+    );
+}
+
+/// Eq 3.2 vs measured: 2x2 fusing halves the A-traffic.
+#[test]
+fn eq32_fused_memops() {
+    let (m, n, k) = (64, 96, 8);
+    let r = simulate_algorithm(
+        Algorithm::Fused,
+        m,
+        n,
+        k,
+        HierarchySpec::small_machine(),
+        &cfg(16, 2, 32, 4, 16),
+    )
+    .unwrap();
+    let expected = 2.0 * (m * (n - 1) * k) as f64 + 2.0 * ((n - 1) * k) as f64;
+    let ratio = r.memops.total() as f64 / expected;
+    // Partial tiles at the boundaries push it a little above 1.
+    assert!(
+        (0.98..1.15).contains(&ratio),
+        "fused memops ratio {ratio}"
+    );
+}
+
+/// Eq 3.4 vs measured: the wave kernel's element memory operations match
+/// the `(2/k_r + 2/n_b + 2/m_r)` coefficient within boundary effects.
+#[test]
+fn eq34_kernel_memops() {
+    let (m, n, k) = (128, 256, 16);
+    let (mr, kr, nb, kb) = (16, 2, 64, 16);
+    let r = simulate_algorithm(
+        Algorithm::KernelNoPack,
+        m,
+        n,
+        k,
+        HierarchySpec::small_machine(),
+        &cfg(mr, kr, m, kb, nb),
+    )
+    .unwrap();
+    // A-traffic prediction: (2/kr + 2/nb + 2/mr) per rotation-row, over
+    // m*(n-1)*k rotation-rows, plus the C/S stream (2 loads/op + stream
+    // build) which Eq 3.4's big-m_b limit ignores.
+    let per_op = 2.0 / kr as f64 + 2.0 / nb as f64 + 2.0 / mr as f64;
+    let a_traffic = per_op * (m * (n - 1) * k) as f64;
+    let cs_traffic = 4.0 * ((n - 1) * k) as f64; // C/S read + stream write
+    let predicted = a_traffic + cs_traffic;
+    let ratio = r.memops.total() as f64 / predicted;
+    assert!(
+        (0.9..1.35).contains(&ratio),
+        "kernel memops {} vs Eq3.4 {predicted}: ratio {ratio}",
+        r.memops.total()
+    );
+}
+
+/// §3's headline: the kernel issues ~3x fewer memory operations than 2x2
+/// fusing (with the 8x5 kernel) and ~1.7x fewer with 16x2.
+#[test]
+fn kernel_memop_reduction_vs_fused() {
+    let (m, n, k) = (128, 256, 16);
+    let spec = HierarchySpec::small_machine();
+    let fused = simulate_algorithm(Algorithm::Fused, m, n, k, spec, &cfg(16, 2, m, 16, 64))
+        .unwrap();
+    let k85 = simulate_algorithm(
+        Algorithm::KernelNoPack,
+        m,
+        n,
+        k,
+        spec,
+        &cfg(8, 5, m, 15, 64),
+    )
+    .unwrap();
+    let ratio = fused.memops.total() as f64 / k85.memops.total() as f64;
+    assert!(
+        ratio > 2.2,
+        "8x5 kernel should cut memops ~3x vs fused; got {ratio}"
+    );
+}
+
+/// The operational-intensity ordering of §1.2 holds on the simulated
+/// machine *in the out-of-cache regime* (A larger than the LLC, where the
+/// naive sweep reloads the matrix every sequence while the blocked kernel
+/// streams it once per k-block): kernel ≫ naive, fused ≥ naive.
+#[test]
+fn operational_intensity_ordering() {
+    // A = 512x512 doubles = 2 MB > 512 KB L3 on the small machine.
+    let (m, n, k) = (512, 512, 12);
+    let spec = HierarchySpec::small_machine();
+    let c = cfg(16, 2, 64, 12, 64);
+    let naive = simulate_algorithm(Algorithm::Naive, m, n, k, spec, &c).unwrap();
+    let fused = simulate_algorithm(Algorithm::Fused, m, n, k, spec, &c).unwrap();
+    let kernel = simulate_algorithm(Algorithm::Kernel, m, n, k, spec, &c).unwrap();
+    assert!(
+        kernel.op_intensity > 2.0 * naive.op_intensity,
+        "kernel OI {} should beat naive OI {} decisively",
+        kernel.op_intensity,
+        naive.op_intensity
+    );
+    assert!(
+        fused.op_intensity >= naive.op_intensity,
+        "fused OI {} < naive OI {}",
+        fused.op_intensity,
+        naive.op_intensity
+    );
+}

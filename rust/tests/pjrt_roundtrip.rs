@@ -1,0 +1,48 @@
+//! Integration: load every AOT artifact, execute via PJRT, and match the
+//! native Rust implementation on identical inputs — proof that all three
+//! layers compose.
+
+use rotseq::matrix::{max_abs_diff, Matrix};
+use rotseq::rot::{apply_naive, RotationSequence};
+use rotseq::runtime::{apply_via_pjrt, ArtifactRegistry, Runtime};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn every_artifact_matches_native() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let reg = ArtifactRegistry::load(&dir).unwrap();
+    let mut rt = Runtime::cpu().unwrap();
+    let loaded = rt.load_registry(&reg).unwrap();
+    assert!(loaded >= 3, "expected at least 3 artifacts, got {loaded}");
+
+    for entry in reg.entries() {
+        let (m, n, k) = (entry.m, entry.n, entry.k);
+        let a = Matrix::random(m, n, 11);
+        let seq = RotationSequence::random(n, k, 13);
+        let mut expected = a.clone();
+        apply_naive(&mut expected, &seq);
+
+        let got = apply_via_pjrt(&rt, &entry.name, &a, &seq).unwrap();
+        let err = max_abs_diff(&got, &expected);
+        assert!(
+            err < 1e-11,
+            "artifact {} differs from native by {err}",
+            entry.name
+        );
+    }
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let rt = Runtime::cpu().unwrap();
+    let a = Matrix::random(4, 4, 1);
+    let seq = RotationSequence::random(4, 2, 2);
+    assert!(apply_via_pjrt(&rt, "not_loaded", &a, &seq).is_err());
+}

@@ -1,0 +1,187 @@
+//! Additional property suites: reflector variants across all algorithms,
+//! simulator determinism/monotonicity, and planner feasibility.
+
+use rotseq::blocking::{plan_bounds_for, CacheParams, KernelConfig};
+use rotseq::kernel::{apply_blocked, apply_fused, apply_kernel, Algorithm, BlockConfig};
+use rotseq::matrix::{max_abs_diff, Matrix, Rng64};
+use rotseq::rot::{apply_reflector_sequence_naive, ReflectorSequence};
+use rotseq::simulator::{simulate_algorithm, HierarchySpec};
+use rotseq::testutil::{arb_shape, property};
+
+fn arb_config(rng: &mut Rng64) -> KernelConfig {
+    let kernels = rotseq::kernel::SUPPORTED_KERNELS;
+    let (mr, kr) = kernels[rng.next_below(kernels.len())];
+    KernelConfig {
+        mr,
+        kr,
+        mb: 1 + rng.next_below(40),
+        kb: 1 + rng.next_below(10),
+        nb: 1 + rng.next_below(30),
+        threads: 1,
+    }
+}
+
+/// Every optimized algorithm, monomorphized over reflectors, reproduces
+/// the naive reflector sweep bitwise (same DAG, same scalar ops).
+#[test]
+fn reflector_variants_match_naive() {
+    property(
+        "reflector variant equivalence",
+        0x8EF1,
+        30,
+        |rng| {
+            let (m, n, k) = arb_shape(rng, (1, 40), (2, 40), (1, 16));
+            (m, n, k, arb_config(rng), rng.next_u64())
+        },
+        |&(m, n, k, cfg, seed)| {
+            let seq = ReflectorSequence::random(n, k, seed);
+            let mut reference = Matrix::random(m, n, seed ^ 0x77);
+            let orig = reference.clone();
+            apply_reflector_sequence_naive(&mut reference, &seq);
+
+            let mut a = orig.clone();
+            apply_fused(&mut a, &seq, usize::MAX);
+            assert_eq!(max_abs_diff(&a, &reference), 0.0, "fused reflectors");
+
+            let mut a = orig.clone();
+            apply_blocked(
+                &mut a,
+                &seq,
+                &BlockConfig {
+                    mb: cfg.mb,
+                    kb: cfg.kb,
+                    nb: cfg.nb,
+                },
+            );
+            assert_eq!(max_abs_diff(&a, &reference), 0.0, "blocked reflectors");
+
+            let mut a = orig.clone();
+            apply_kernel(&mut a, &seq, &cfg).unwrap();
+            assert_eq!(
+                max_abs_diff(&a, &reference),
+                0.0,
+                "kernel reflectors (cfg={cfg:?})"
+            );
+        },
+    );
+}
+
+/// The simulator is a pure function of its inputs: identical runs give
+/// identical counters (no hidden state between calls).
+#[test]
+fn simulator_is_deterministic() {
+    let cfg = KernelConfig {
+        mr: 16,
+        kr: 2,
+        mb: 32,
+        kb: 6,
+        nb: 24,
+        threads: 1,
+    };
+    for algo in [Algorithm::Naive, Algorithm::Fused, Algorithm::Kernel] {
+        let a = simulate_algorithm(algo, 96, 80, 9, HierarchySpec::small_machine(), &cfg).unwrap();
+        let b = simulate_algorithm(algo, 96, 80, 9, HierarchySpec::small_machine(), &cfg).unwrap();
+        assert_eq!(a.memops.loads, b.memops.loads);
+        assert_eq!(a.memops.stores, b.memops.stores);
+        assert_eq!(a.l1_misses, b.l1_misses);
+        assert_eq!(a.l3_misses, b.l3_misses);
+        assert_eq!(a.tlb_misses, b.tlb_misses);
+    }
+}
+
+/// Memory operations scale linearly in m for every emitter (each element
+/// op is per-row); misses are monotone in problem size.
+#[test]
+fn simulator_memops_scale_with_rows() {
+    let cfg = KernelConfig {
+        mr: 8,
+        kr: 2,
+        mb: 64,
+        kb: 4,
+        nb: 16,
+        threads: 1,
+    };
+    for algo in [Algorithm::Naive, Algorithm::Wavefront, Algorithm::Blocked] {
+        let small =
+            simulate_algorithm(algo, 40, 32, 5, HierarchySpec::small_machine(), &cfg).unwrap();
+        let big =
+            simulate_algorithm(algo, 80, 32, 5, HierarchySpec::small_machine(), &cfg).unwrap();
+        // A-traffic doubles; C/S traffic is row-independent.
+        let a_small = small.memops.total() as f64;
+        let a_big = big.memops.total() as f64;
+        let ratio = a_big / a_small;
+        assert!(
+            (1.7..2.05).contains(&ratio),
+            "{algo:?}: memops ratio {ratio}"
+        );
+    }
+}
+
+/// Planner outputs always satisfy their own constraints (Eq 5.1/5.3/5.5)
+/// across a sweep of cache geometries and kernel sizes.
+#[test]
+fn planner_constraints_always_hold() {
+    property(
+        "planner feasibility",
+        0x91A2,
+        40,
+        |rng| {
+            let kernels = rotseq::kernel::SUPPORTED_KERNELS;
+            let (mr, kr) = kernels[rng.next_below(kernels.len())];
+            let t1 = 512 + rng.next_below(16_000);
+            let t2 = t1 * (2 + rng.next_below(16));
+            let t3 = t2 * (2 + rng.next_below(64));
+            (mr, kr, CacheParams { t1, t2, t3 })
+        },
+        |&(mr, kr, cache)| {
+            let b = plan_bounds_for(mr, kr, cache);
+            // Chosen values are positive, rounded, and within bounds
+            // whenever the bound admits a rounded value at all.
+            assert!(b.nb > 0 && b.kb > 0 && b.mb > 0);
+            assert_eq!(b.kb % kr, 0);
+            assert_eq!(b.mb % mr, 0);
+            if b.nb <= b.nb_bound {
+                // Eq 5.1
+                assert!(mr * (b.nb + kr) + 2 * b.nb * kr <= cache.t1);
+            }
+            if b.kb <= b.kb_bound && b.nb <= b.nb_bound {
+                // Eq 5.3
+                assert!(mr * (b.nb + b.kb) + 2 * b.nb * b.kb <= cache.t2);
+            }
+            if b.mb <= b.mb_bound {
+                // Eq 5.5
+                assert!(b.mb * (b.nb + b.kb) <= cache.t3);
+            }
+        },
+    );
+}
+
+/// Identity sequences leave any matrix untouched through every variant —
+/// including the packed/SIMD kernels (exactness of the no-op is what the
+/// phase padding relies on).
+#[test]
+fn identity_sequences_are_exact_noops_everywhere() {
+    property(
+        "identity no-op",
+        0x1DE7,
+        15,
+        |rng| {
+            let (m, n, k) = arb_shape(rng, (1, 30), (2, 30), (1, 8));
+            (m, n, k, arb_config(rng), rng.next_u64())
+        },
+        |&(m, n, k, cfg, seed)| {
+            let seq = rotseq::rot::RotationSequence::identity(n, k);
+            let orig = Matrix::random(m, n, seed);
+            for &algo in Algorithm::ALL {
+                let mut a = orig.clone();
+                rotseq::kernel::apply_with(algo, &mut a, &seq, &cfg).unwrap();
+                let tol = if algo == Algorithm::Gemm { 1e-12 } else { 0.0 };
+                assert!(
+                    max_abs_diff(&a, &orig) <= tol,
+                    "{} not a no-op",
+                    algo.paper_name()
+                );
+            }
+        },
+    );
+}
