@@ -1,30 +1,29 @@
 //! End-to-end driver: proves all three layers compose on a real workload.
 //!
 //! 1. Loads the AOT artifacts (L2 JAX model + L1 Pallas kernel, lowered to
-//!    HLO text by `make artifacts`) into the PJRT runtime.
+//!    HLO text by `make artifacts`) into the PJRT runtime (only when built
+//!    with `--features pjrt`; skipped otherwise).
 //! 2. Starts the L3 coordinator and streams a batch of mixed-size jobs
-//!    through the router (native kernels).
+//!    through the router — repeated shapes hit the shared plan cache.
 //! 3. Cross-checks PJRT numerics against the native path on every
 //!    artifact shape.
-//! 4. Runs the headline workload (k = 180 delayed sequences) natively and
-//!    reports the flop rate — the paper's figure of merit.
+//! 4. Runs the headline workload (k = 180 delayed sequences) through a
+//!    prebuilt `RotationPlan` and reports the flop rate — the paper's
+//!    figure of merit.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example e2e_pipeline
+//! make artifacts && cargo run --release --example e2e_pipeline --features pjrt
 //! ```
 
 use rotseq::blocking::{plan, CacheParams};
 use rotseq::coordinator::{Coordinator, Job, JobSpec, RoutePolicy};
 use rotseq::matrix::{max_abs_diff, Matrix};
-use rotseq::pack::PackedMatrix;
+use rotseq::plan::RotationPlan;
 use rotseq::rot::{apply_naive, OpSequence, RotationSequence};
-use rotseq::runtime::{apply_via_pjrt, ArtifactRegistry, Runtime};
 
-fn main() -> anyhow::Result<()> {
-    let cfg = plan(16, 2, CacheParams::detect(), 1);
-
-    // --- Layer 1+2: AOT artifacts through PJRT ---------------------------
-    println!("== PJRT: JAX/Pallas artifacts vs native numerics ==");
+#[cfg(feature = "pjrt")]
+fn pjrt_crosscheck() -> anyhow::Result<()> {
+    use rotseq::runtime::{apply_via_pjrt, ArtifactRegistry, Runtime};
     match ArtifactRegistry::load("artifacts") {
         Ok(reg) => {
             let mut rt = Runtime::cpu()?;
@@ -44,6 +43,21 @@ fn main() -> anyhow::Result<()> {
             println!("  skipped ({e}); run `make artifacts` first");
         }
     }
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_crosscheck() -> anyhow::Result<()> {
+    println!("  skipped (built without the `pjrt` feature)");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = plan(16, 2, CacheParams::detect(), 1);
+
+    // --- Layer 1+2: AOT artifacts through PJRT ---------------------------
+    println!("== PJRT: JAX/Pallas artifacts vs native numerics ==");
+    pjrt_crosscheck()?;
 
     // --- Layer 3: coordinator under a mixed workload ---------------------
     println!("\n== coordinator: 24 mixed jobs through the router ==");
@@ -76,23 +90,25 @@ fn main() -> anyhow::Result<()> {
     }
     let snap = coord.metrics().snapshot();
     println!(
-        "  {} jobs done, 0 failed, busy-rate {:.3} Gflop/s",
+        "  {} jobs done, 0 failed, busy-rate {:.3} Gflop/s; plan cache: {} hits / {} misses",
         snap.jobs_completed,
-        snap.gflops()
+        snap.gflops(),
+        snap.plan_cache_hits,
+        snap.plan_cache_misses
     );
     coord.shutdown();
 
     // --- headline workload: k = 180 delayed sequences ---------------------
-    println!("\n== headline: rs_kernel_v2, k = 180, m = n = 960 ==");
+    println!("\n== headline: planned rs_kernel, k = 180, m = n = 960 ==");
     let (m, n, k) = (960, 960, 180);
     let seq = RotationSequence::random(n, k, 42);
-    let a = Matrix::random(m, n, 7);
+    let mut a = Matrix::random(m, n, 7);
     let flops = OpSequence::flops(&seq, m);
-    let mut pm = PackedMatrix::from_matrix(&a, cfg.mb, cfg.mr);
-    // Warmup + measured run.
-    rotseq::kernel::apply_kernel_packed(&mut pm, &seq, &cfg)?;
+    let mut rplan = RotationPlan::builder().shape(m, n, k).config(cfg).build()?;
+    // Warmup + measured run (the plan keeps its workspace between them).
+    rplan.execute(&mut a, &seq)?;
     let t0 = std::time::Instant::now();
-    rotseq::kernel::apply_kernel_packed(&mut pm, &seq, &cfg)?;
+    rplan.execute(&mut a, &seq)?;
     let dt = t0.elapsed().as_secs_f64();
     println!(
         "  {:.3}s -> {:.3} Gflop/s (useful flops 6*m*(n-1)*k = {:.3e})",

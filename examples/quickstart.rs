@@ -1,13 +1,17 @@
-//! Quickstart: apply a sequence of planar rotations to a matrix with every
-//! algorithm variant and compare rates.
+//! Quickstart: plan once, execute many.
+//!
+//! Builds a `RotationPlan` for the paper's workload shape, executes it
+//! against a stream of sequence sets (the Hessenberg-QR usage pattern),
+//! verifies a round trip through `execute_inverse`, and compares every
+//! algorithm variant through the same plan API.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use rotseq::blocking::{plan, CacheParams};
-use rotseq::kernel::{apply_with, Algorithm};
-use rotseq::matrix::{frobenius_norm, max_abs_diff, Matrix};
+use rotseq::kernel::Algorithm;
+use rotseq::matrix::{frobenius_norm, max_abs_diff, rel_error, Matrix};
+use rotseq::plan::RotationPlan;
 use rotseq::rot::{apply_naive, OpSequence, RotationSequence};
 
 fn main() -> anyhow::Result<()> {
@@ -16,29 +20,58 @@ fn main() -> anyhow::Result<()> {
     let (m, n, k) = (512, 512, 60);
     println!("applying {k} sequences of {} rotations to a {m}x{n} matrix\n", n - 1);
 
-    let seq = RotationSequence::random(n, k, 42);
     let a0 = Matrix::random(m, n, 7);
-    let flops = OpSequence::flops(&seq, m);
 
-    // Reference result (Alg 1.2).
+    // Plan once: §5 block solve, kernel selection, workspace allocation.
+    let mut plan = RotationPlan::builder().shape(m, n, k).build()?;
+    let cfg = plan.config();
+    println!(
+        "planner: m_r={} k_r={} -> n_b={} k_b={} m_b={}\n",
+        cfg.mr, cfg.kr, cfg.nb, cfg.kb, cfg.mb
+    );
+
+    // Execute many: same plan, fresh rotations every sweep — the hot loop
+    // of Hessenberg QR / Jacobi SVD. Zero allocation per call.
+    let sweeps = 8;
+    let mut a = a0.clone();
+    let t0 = std::time::Instant::now();
+    let mut flops = 0u64;
+    for sweep in 0..sweeps {
+        let seq = RotationSequence::random(n, k, 42 + sweep);
+        plan.execute(&mut a, &seq)?;
+        flops += OpSequence::flops(&seq, m);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{sweeps} planned sweeps: {:.3}s total, {:.3} Gflop/s (norm preserved: {:.6} -> {:.6})",
+        dt,
+        flops as f64 / dt / 1e9,
+        frobenius_norm(&a0),
+        frobenius_norm(&a)
+    );
+
+    // Undo everything through the same plan (reverse sweep order).
+    for sweep in (0..sweeps).rev() {
+        let seq = RotationSequence::random(n, k, 42 + sweep);
+        plan.execute_inverse(&mut a, &seq)?;
+    }
+    println!("inverse executes restore A: rel err {:.2e}\n", rel_error(&a, &a0));
+
+    // Every variant through the plan API, checked against Alg 1.2.
+    let seq = RotationSequence::random(n, k, 42);
     let mut reference = a0.clone();
     apply_naive(&mut reference, &seq);
-    println!("norm before {:.6}, after {:.6} (rotations preserve it)\n",
-        frobenius_norm(&a0), frobenius_norm(&reference));
-
-    // Block sizes from the §5 planner on this machine's caches.
-    let cfg = plan(16, 2, CacheParams::detect(), 1);
-    println!("planner: m_r=16 k_r=2 -> n_b={} k_b={} m_b={}\n", cfg.nb, cfg.kb, cfg.mb);
-
+    let flops = OpSequence::flops(&seq, m);
     println!("{:<18} {:>9} {:>10} {:>12}", "algorithm", "time", "Gflop/s", "max|err|");
     for &algo in Algorithm::ALL {
+        let mut vplan = RotationPlan::builder().shape(m, n, k).algorithm(algo).build()?;
         let mut a = a0.clone();
         let t0 = std::time::Instant::now();
-        apply_with(algo, &mut a, &seq, &cfg)?;
+        vplan.execute(&mut a, &seq)?;
         let dt = t0.elapsed().as_secs_f64();
         println!(
             "{:<18} {:>8.3}s {:>10.3} {:>12.2e}",
-            algo.paper_name(),
+            algo.to_string(),
             dt,
             flops as f64 / dt / 1e9,
             max_abs_diff(&a, &reference)

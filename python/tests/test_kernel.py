@@ -8,6 +8,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# Property sweeps need hypothesis; skip this module cleanly where it is
+# not installed (the container image does not bake it in).
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels.ref import apply_sequences_ref, random_sequences

@@ -3,11 +3,12 @@
 //! Used by the §Perf optimization loop. `cargo bench --bench micro`.
 
 use rotseq::bench_harness::{measure, MeasureConfig};
-use rotseq::blocking::KernelConfig;
+use rotseq::blocking::{plan, CacheParams, KernelConfig};
 use rotseq::gemm::{dgemm, GemmConfig};
-use rotseq::kernel::apply_kernel_packed;
+use rotseq::kernel::{apply_kernel_packed, apply_with, Algorithm};
 use rotseq::matrix::Matrix;
 use rotseq::pack::PackedMatrix;
+use rotseq::plan::RotationPlan;
 use rotseq::rot::{OpSequence, RotationSequence};
 
 fn main() {
@@ -78,4 +79,29 @@ fn main() {
         std::hint::black_box(rotseq::kernel::WaveStream::pack(&seq2, 0, 2, 1, 1000));
     });
     println!("# stream pack 1000 waves x 2: {:.2} us", meas.median_s * 1e6);
+
+    // --- plan-once / execute-many amortization ------------------------------
+    // The same kernel apply, one-shot (throwaway plan + workspace per call)
+    // vs through a prebuilt RotationPlan (zero per-call allocation). The gap
+    // is the setup cost the plan API amortizes across repeated executes.
+    let (pm, pn, pk) = if quick { (128, 96, 12) } else { (480, 240, 24) };
+    let cfg = plan(16, 2, CacheParams::detect(), 1);
+    let pseq = RotationSequence::random(pn, pk, 9);
+    let pflops = OpSequence::flops(&pseq, pm);
+    let mut pa = Matrix::random(pm, pn, 10);
+    let meas_oneshot = measure(&mc, |_| {
+        apply_with(Algorithm::Kernel, &mut pa, &pseq, &cfg).unwrap()
+    });
+    let mut rplan = RotationPlan::builder()
+        .shape(pm, pn, pk)
+        .config(cfg)
+        .build()
+        .unwrap();
+    let meas_planned = measure(&mc, |_| rplan.execute(&mut pa, &pseq).unwrap());
+    println!(
+        "\n# plan amortization m={pm} n={pn} k={pk}: one-shot {:.3} Gflop/s, planned {:.3} Gflop/s ({:.1}% setup overhead amortized)",
+        pflops as f64 / meas_oneshot.median_s / 1e9,
+        pflops as f64 / meas_planned.median_s / 1e9,
+        100.0 * (meas_oneshot.median_s - meas_planned.median_s) / meas_planned.median_s
+    );
 }

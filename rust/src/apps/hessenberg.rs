@@ -8,8 +8,9 @@
 //! `DELAYED_SWEEPS` sweeps and apply them with [`crate::kernel`].
 
 use crate::blocking::KernelConfig;
-use crate::kernel::apply_kernel;
+use crate::kernel::Algorithm;
 use crate::matrix::Matrix;
+use crate::plan::RotationPlan;
 use crate::rot::{Givens, RotationSequence};
 use anyhow::{bail, Result};
 
@@ -140,6 +141,13 @@ pub fn symmetric_eigen(a: &Matrix, cfg: &KernelConfig) -> Result<EigenResult> {
     let max_sweeps = 60 * n;
     let mut sweeps = 0;
     let mut batches = 0;
+    // Every delayed batch applies to the same n x n eigenvector matrix:
+    // plan once (block solve + packing workspace), execute per batch.
+    let mut plan = RotationPlan::builder()
+        .shape(n, n, DELAYED_SWEEPS)
+        .algorithm(Algorithm::Kernel)
+        .config(*cfg)
+        .build()?;
     // Pending sequences: each sweep contributes one column of (c, s).
     let mut pending: Vec<(Vec<f64>, Vec<f64>)> = Vec::new();
 
@@ -167,12 +175,12 @@ pub fn symmetric_eigen(a: &Matrix, cfg: &KernelConfig) -> Result<EigenResult> {
         sweeps += 1;
 
         if pending.len() == DELAYED_SWEEPS {
-            apply_pending(&mut q, &mut pending, cfg)?;
+            apply_pending(&mut q, &mut pending, &mut plan)?;
             batches += 1;
         }
     }
     if !pending.is_empty() {
-        apply_pending(&mut q, &mut pending, cfg)?;
+        apply_pending(&mut q, &mut pending, &mut plan)?;
         batches += 1;
     }
 
@@ -249,12 +257,12 @@ fn qr_sweep(t: &mut Tridiagonal, lo: usize, hi: usize) -> (Vec<f64>, Vec<f64>) {
     (cs, sn)
 }
 
-/// Apply the pending sweep sequences to the eigenvector matrix with the
-/// paper's kernel, then clear the batch.
+/// Apply the pending sweep sequences to the eigenvector matrix through the
+/// prebuilt plan (reused packing workspace), then clear the batch.
 fn apply_pending(
     q: &mut Matrix,
     pending: &mut Vec<(Vec<f64>, Vec<f64>)>,
-    cfg: &KernelConfig,
+    plan: &mut RotationPlan,
 ) -> Result<()> {
     let n = q.cols();
     let k = pending.len();
@@ -263,7 +271,7 @@ fn apply_pending(
         s: pending[p].1[i],
     });
     pending.clear();
-    apply_kernel(q, &seq, cfg)
+    plan.execute(q, &seq)
 }
 
 #[cfg(test)]

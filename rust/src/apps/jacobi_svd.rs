@@ -14,8 +14,9 @@
 //! column operations, so they stay consistent).
 
 use crate::blocking::KernelConfig;
-use crate::kernel::apply_kernel;
+use crate::kernel::Algorithm;
 use crate::matrix::Matrix;
+use crate::plan::RotationPlan;
 use crate::rot::{Givens, RotationSequence};
 use anyhow::{bail, Result};
 
@@ -58,6 +59,19 @@ pub fn jacobi_svd(a: &Matrix, cfg: &KernelConfig) -> Result<SvdResult> {
     let mut quiet = 0;
 
     if n >= 2 {
+        // Every half-sweep applies one adjacent-pair sequence to the same
+        // two shapes (work: m x n, V: n x n) — the plan API's home turf:
+        // plan each shape once, execute per half-sweep.
+        let mut work_plan = RotationPlan::builder()
+            .shape(m, n, 1)
+            .algorithm(Algorithm::Kernel)
+            .config(*cfg)
+            .build()?;
+        let mut v_plan = RotationPlan::builder()
+            .shape(n, n, 1)
+            .algorithm(Algorithm::Kernel)
+            .config(*cfg)
+            .build()?;
         let mut parity = 0usize;
         while quiet < n {
             let mut cs = vec![1.0; n - 1];
@@ -80,8 +94,8 @@ pub fn jacobi_svd(a: &Matrix, cfg: &KernelConfig) -> Result<SvdResult> {
                     s: sn[ii],
                 });
                 // The paper's kernel on both the data and the accumulated V.
-                apply_kernel(&mut work, &seq, cfg)?;
-                apply_kernel(&mut v, &seq, cfg)?;
+                work_plan.execute(&mut work, &seq)?;
+                v_plan.execute(&mut v, &seq)?;
                 quiet = 0;
             } else {
                 quiet += 1;

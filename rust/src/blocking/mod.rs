@@ -21,7 +21,7 @@ pub use planner::{plan, plan_bounds as plan_bounds_for, plan_for_paper_machine, 
 use anyhow::{bail, Result};
 
 /// Cache capacities in **doubles** (f64 elements), as the paper counts them.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct CacheParams {
     /// L1 data cache capacity (doubles). Paper's machine: 4000.
     pub t1: usize,
@@ -65,7 +65,7 @@ impl CacheParams {
 
 /// Full parameter set for the kernel algorithm: kernel size, block sizes,
 /// thread count.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct KernelConfig {
     /// Kernel rows (`m_r`).
     pub mr: usize,

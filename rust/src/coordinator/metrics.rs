@@ -10,6 +10,8 @@ pub struct Metrics {
     jobs_failed: AtomicU64,
     flops_done: AtomicU64,
     busy_nanos: AtomicU64,
+    plan_cache_hits: AtomicU64,
+    plan_cache_misses: AtomicU64,
 }
 
 /// A point-in-time copy of the counters.
@@ -20,6 +22,8 @@ pub struct MetricsSnapshot {
     pub jobs_failed: u64,
     pub flops_done: u64,
     pub busy_nanos: u64,
+    pub plan_cache_hits: u64,
+    pub plan_cache_misses: u64,
 }
 
 impl Metrics {
@@ -41,6 +45,16 @@ impl Metrics {
         self.jobs_failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A job reused a cached [`crate::plan::RotationPlan`].
+    pub fn record_plan_hit(&self) {
+        self.plan_cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A job had to build a fresh plan (first sight of its key).
+    pub fn record_plan_miss(&self) {
+        self.plan_cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
@@ -48,6 +62,8 @@ impl Metrics {
             jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
             flops_done: self.flops_done.load(Ordering::Relaxed),
             busy_nanos: self.busy_nanos.load(Ordering::Relaxed),
+            plan_cache_hits: self.plan_cache_hits.load(Ordering::Relaxed),
+            plan_cache_misses: self.plan_cache_misses.load(Ordering::Relaxed),
         }
     }
 }

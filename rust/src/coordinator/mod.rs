@@ -9,9 +9,11 @@
 //! event loop is `std::thread` + channels.
 
 mod metrics;
+mod plancache;
 mod router;
 mod server;
 
 pub use metrics::{Metrics, MetricsSnapshot};
+pub use plancache::{PlanCache, PlanKey};
 pub use router::{route, RoutePolicy};
 pub use server::{Coordinator, Job, JobResult, JobSpec};

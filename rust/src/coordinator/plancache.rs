@@ -1,0 +1,178 @@
+//! Shared plan cache: the coordinator serves repeated same-shaped jobs, so
+//! workers check [`crate::plan::RotationPlan`]s out of a pool keyed by
+//! shape + algorithm + parameters instead of re-planning per job.
+//!
+//! Checkout/checkin (rather than a shared `&RotationPlan`) because
+//! executing needs `&mut` access to the plan's workspace; two concurrent
+//! jobs with the same key simply populate two pooled plans, and the lock
+//! is never held while a job runs.
+
+use crate::blocking::KernelConfig;
+use crate::kernel::Algorithm;
+use crate::plan::RotationPlan;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// What makes two jobs plan-compatible.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub algorithm: Algorithm,
+    pub config: KernelConfig,
+}
+
+/// Default bound on pooled plans (a Kernel plan's workspace is roughly a
+/// packed copy of its matrix, so an unbounded pool would grow resident
+/// memory for the life of the service as new shapes arrive).
+pub const DEFAULT_MAX_POOLED: usize = 32;
+
+/// A bounded pool of reusable plans, keyed by [`PlanKey`]. When the pool
+/// is full, `checkin` drops the plan instead (the next job with that key
+/// simply rebuilds — a cache miss, never an error).
+pub struct PlanCache {
+    pool: Mutex<HashMap<PlanKey, Vec<RotationPlan>>>,
+    max_pooled: usize,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_MAX_POOLED)
+    }
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A cache holding at most `max_pooled` plans across all keys.
+    pub fn with_capacity(max_pooled: usize) -> Self {
+        Self {
+            pool: Mutex::new(HashMap::new()),
+            max_pooled,
+        }
+    }
+
+    /// Take a plan for `key` out of the pool, if one is available.
+    pub fn checkout(&self, key: &PlanKey) -> Option<RotationPlan> {
+        let mut pool = self.pool.lock().expect("plan cache poisoned");
+        pool.get_mut(key).and_then(Vec::pop)
+    }
+
+    /// Return a plan to the pool for the next job with the same key. At
+    /// capacity, one plan of another key is evicted first (the key with the
+    /// most pooled plans), so a workload shift to a new hot shape displaces
+    /// stale entries instead of being starved; only when the pool is full
+    /// of this very key is the incoming plan dropped.
+    pub fn checkin(&self, key: PlanKey, plan: RotationPlan) {
+        let mut pool = self.pool.lock().expect("plan cache poisoned");
+        let total: usize = pool.values().map(Vec::len).sum();
+        if total >= self.max_pooled {
+            let victim = pool
+                .iter()
+                .filter(|(k, v)| **k != key && !v.is_empty())
+                .max_by_key(|(_, v)| v.len())
+                .map(|(k, _)| *k);
+            match victim {
+                Some(v) => {
+                    let entry = pool.get_mut(&v).expect("victim key present");
+                    entry.pop();
+                    if entry.is_empty() {
+                        pool.remove(&v);
+                    }
+                }
+                // Every pooled plan already belongs to `key`: keeping more
+                // than max_pooled of one shape helps nobody.
+                None => return,
+            }
+        }
+        pool.entry(key).or_default().push(plan);
+    }
+
+    /// Number of pooled plans across all keys (observability).
+    pub fn pooled_plans(&self) -> usize {
+        let pool = self.pool.lock().expect("plan cache poisoned");
+        pool.values().map(Vec::len).sum()
+    }
+
+    /// Number of distinct keys seen (observability).
+    pub fn distinct_keys(&self) -> usize {
+        let pool = self.pool.lock().expect("plan cache poisoned");
+        pool.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key() -> PlanKey {
+        PlanKey {
+            m: 10,
+            n: 8,
+            k: 2,
+            algorithm: Algorithm::Kernel,
+            config: KernelConfig {
+                mr: 8,
+                kr: 2,
+                mb: 16,
+                kb: 4,
+                nb: 8,
+                threads: 1,
+            },
+        }
+    }
+
+    fn plan_for(k: &PlanKey) -> RotationPlan {
+        RotationPlan::builder()
+            .shape(k.m, k.n, k.k)
+            .algorithm(k.algorithm)
+            .config(k.config)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn checkout_checkin_round_trip() {
+        let cache = PlanCache::new();
+        let k = key();
+        assert!(cache.checkout(&k).is_none());
+        cache.checkin(k, plan_for(&k));
+        assert_eq!(cache.pooled_plans(), 1);
+        assert_eq!(cache.distinct_keys(), 1);
+        let got = cache.checkout(&k);
+        assert!(got.is_some());
+        assert!(cache.checkout(&k).is_none(), "pool is drained");
+        cache.checkin(k, got.unwrap());
+        assert_eq!(cache.pooled_plans(), 1);
+    }
+
+    #[test]
+    fn pool_is_bounded_and_new_shapes_displace_old() {
+        let cache = PlanCache::with_capacity(2);
+        let base = key();
+        let mut last = base;
+        for m in 0..5usize {
+            let mut k = base;
+            k.m = 10 + m;
+            cache.checkin(k, plan_for(&k));
+            last = k;
+        }
+        assert_eq!(cache.pooled_plans(), 2, "bounded at capacity");
+        // The most recent shape must still be cached (eviction, not drop).
+        assert!(cache.checkout(&last).is_some(), "hot shape was starved");
+    }
+
+    #[test]
+    fn keys_are_discriminating() {
+        let cache = PlanCache::new();
+        let k1 = key();
+        let mut k2 = key();
+        k2.algorithm = Algorithm::Fused;
+        cache.checkin(k1, plan_for(&k1));
+        assert!(cache.checkout(&k2).is_none(), "different algo, different key");
+        assert!(cache.checkout(&k1).is_some());
+    }
+}

@@ -1,11 +1,16 @@
 //! The job service: a worker pool fed by a channel, returning results over
-//! per-job channels.
+//! per-job channels. Workers execute through a shared
+//! [`PlanCache`](super::plancache::PlanCache): repeated same-shaped jobs
+//! reuse a prebuilt [`RotationPlan`] (block solve + packing workspace)
+//! instead of re-planning per job.
 
 use super::metrics::Metrics;
+use super::plancache::{PlanCache, PlanKey};
 use super::router::{route, RoutePolicy};
 use crate::blocking::KernelConfig;
-use crate::kernel::{apply_with, Algorithm};
+use crate::kernel::Algorithm;
 use crate::matrix::Matrix;
+use crate::plan::RotationPlan;
 use crate::rot::{OpSequence, RotationSequence};
 use anyhow::Result;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -18,6 +23,20 @@ pub struct JobSpec {
     /// `None` = let the router decide.
     pub algorithm: Option<Algorithm>,
     pub config: KernelConfig,
+}
+
+impl JobSpec {
+    /// The plan-cache key this spec resolves to for an `m x n` job with `k`
+    /// sequences (the router fills in the algorithm when unset).
+    pub fn plan_key(&self, policy: RoutePolicy, m: usize, n: usize, k: usize) -> PlanKey {
+        PlanKey {
+            m,
+            n,
+            k,
+            algorithm: self.algorithm.unwrap_or_else(|| route(policy, m, n, k)),
+            config: self.config,
+        }
+    }
 }
 
 impl Default for JobSpec {
@@ -49,11 +68,12 @@ enum Message {
     Shutdown,
 }
 
-/// The coordinator: owns the worker pool and the metrics.
+/// The coordinator: owns the worker pool, the plan cache, and the metrics.
 pub struct Coordinator {
     tx: Sender<Message>,
     workers: Vec<std::thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
+    plans: Arc<PlanCache>,
     policy: RoutePolicy,
 }
 
@@ -63,17 +83,20 @@ impl Coordinator {
         let (tx, rx) = channel::<Message>();
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::new());
+        let plans = Arc::new(PlanCache::new());
         let handles = (0..workers.max(1))
             .map(|_| {
                 let rx = Arc::clone(&rx);
                 let metrics = Arc::clone(&metrics);
-                std::thread::spawn(move || worker_loop(rx, metrics, policy))
+                let plans = Arc::clone(&plans);
+                std::thread::spawn(move || worker_loop(rx, metrics, plans, policy))
             })
             .collect();
         Self {
             tx,
             workers: handles,
             metrics,
+            plans,
             policy,
         }
     }
@@ -98,6 +121,11 @@ impl Coordinator {
         &self.metrics
     }
 
+    /// The shared plan cache (observability).
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.plans
+    }
+
     /// The active routing policy.
     pub fn policy(&self) -> RoutePolicy {
         self.policy
@@ -114,7 +142,12 @@ impl Coordinator {
     }
 }
 
-fn worker_loop(rx: Arc<Mutex<Receiver<Message>>>, metrics: Arc<Metrics>, policy: RoutePolicy) {
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<Message>>>,
+    metrics: Arc<Metrics>,
+    plans: Arc<PlanCache>,
+    policy: RoutePolicy,
+) {
     loop {
         let msg = {
             let guard = rx.lock().expect("poisoned job queue");
@@ -122,7 +155,7 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Message>>>, metrics: Arc<Metrics>, policy:
         };
         match msg {
             Ok(Message::Work(job, reply)) => {
-                let result = execute_job(job, policy, &metrics);
+                let result = execute_job(job, policy, &metrics, &plans);
                 let _ = reply.send(result);
             }
             Ok(Message::Shutdown) | Err(_) => return,
@@ -130,18 +163,43 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Message>>>, metrics: Arc<Metrics>, policy:
     }
 }
 
-fn execute_job(mut job: Job, policy: RoutePolicy, metrics: &Metrics) -> Result<JobResult> {
+fn execute_job(
+    mut job: Job,
+    policy: RoutePolicy,
+    metrics: &Metrics,
+    plans: &PlanCache,
+) -> Result<JobResult> {
     let m = job.matrix.rows();
     let n = job.matrix.cols();
     let k = job.seq.k();
-    let algo = job
-        .spec
-        .algorithm
-        .unwrap_or_else(|| route(policy, m, n, k));
+    let key = job.spec.plan_key(policy, m, n, k);
+    let algo = key.algorithm;
+    let mut plan = match plans.checkout(&key) {
+        Some(plan) => {
+            metrics.record_plan_hit();
+            plan
+        }
+        None => {
+            metrics.record_plan_miss();
+            match RotationPlan::builder()
+                .shape(m, n, k)
+                .algorithm(algo)
+                .config(key.config)
+                .build()
+            {
+                Ok(plan) => plan,
+                Err(e) => {
+                    metrics.record_failure();
+                    return Err(e);
+                }
+            }
+        }
+    };
     let flops = OpSequence::flops(&job.seq, m);
     let t0 = Instant::now();
-    let outcome = apply_with(algo, &mut job.matrix, &job.seq, &job.spec.config);
+    let outcome = plan.execute(&mut job.matrix, &job.seq);
     let elapsed = t0.elapsed();
+    plans.checkin(key, plan);
     match outcome {
         Ok(()) => {
             metrics.record_complete(flops, elapsed.as_nanos() as u64);
@@ -230,6 +288,36 @@ mod tests {
             assert_eq!(max_abs_diff(&r.matrix, &e), 0.0);
         }
         assert_eq!(coord.metrics().snapshot().jobs_completed, 12);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn repeated_shapes_hit_the_plan_cache() {
+        let coord = Coordinator::start(1, RoutePolicy::Auto);
+        let (m, n, k) = (24, 18, 5);
+        for seed in 0..5u64 {
+            let seq = RotationSequence::random(n, k, seed);
+            let a = Matrix::random(m, n, seed + 50);
+            let mut expected = a.clone();
+            apply_naive(&mut expected, &seq);
+            let r = coord
+                .run(Job {
+                    matrix: a,
+                    seq,
+                    spec: JobSpec {
+                        algorithm: None,
+                        config: small_cfg(),
+                    },
+                })
+                .unwrap();
+            assert_eq!(max_abs_diff(&r.matrix, &expected), 0.0, "seed {seed}");
+        }
+        let snap = coord.metrics().snapshot();
+        // One worker: the first job builds the plan, the rest reuse it.
+        assert_eq!(snap.plan_cache_misses, 1);
+        assert_eq!(snap.plan_cache_hits, 4);
+        assert_eq!(coord.plan_cache().distinct_keys(), 1);
+        assert_eq!(coord.plan_cache().pooled_plans(), 1);
         coord.shutdown();
     }
 

@@ -15,17 +15,59 @@ use super::dgemm::{dgemm, GemmConfig};
 use crate::matrix::Matrix;
 use crate::rot::{OpSequence, PairOp};
 
+/// Reusable scratch for [`apply_gemm_with`]: the accumulated factor, the
+/// row-panel copy of `A`, and the GEMM output. Kept alive by the plan API's
+/// workspace so repeated applies to same-shaped problems allocate nothing.
+pub struct GemmWorkspace {
+    q: Matrix,
+    ablock: Matrix,
+    out: Matrix,
+}
+
+impl GemmWorkspace {
+    pub fn new() -> Self {
+        Self {
+            q: Matrix::zeros(0, 0),
+            ablock: Matrix::zeros(0, 0),
+            out: Matrix::zeros(0, 0),
+        }
+    }
+
+    /// Total doubles allocated across the scratch matrices (test hook for
+    /// the plan API's no-growth guarantee).
+    pub fn capacity_doubles(&self) -> usize {
+        self.q.data_capacity() + self.ablock.data_capacity() + self.out.data_capacity()
+    }
+}
+
+impl Default for GemmWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Accumulate the rotations of waves `[w0, w1)` into a dense local factor.
 ///
 /// Returns `(c0, q)`: the first affected column of `A` and the
 /// `c x c` orthogonal factor over columns `c0 .. c0+c`.
 pub fn accumulate_q<S: OpSequence>(seq: &S, w0: usize, w1: usize) -> (usize, Matrix) {
+    let mut q = Matrix::zeros(0, 0);
+    let c0 = accumulate_q_into(seq, w0, w1, &mut q);
+    (c0, q)
+}
+
+/// [`accumulate_q`] into a caller-owned matrix (reused allocation).
+/// Returns the first affected column `c0`.
+pub fn accumulate_q_into<S: OpSequence>(seq: &S, w0: usize, w1: usize, q: &mut Matrix) -> usize {
     let n = seq.n();
     let k = seq.k();
     let c0 = w0.saturating_sub(k - 1);
     let c1 = (w1 + 1).min(n);
     let c = c1 - c0;
-    let mut q = Matrix::identity(c);
+    q.resize_zeroed(c, c);
+    for i in 0..c {
+        q.set(i, i, 1.0);
+    }
     // Sequence-major within the chunk (valid: see kernel::phases).
     for l in 0..k {
         let i_lo = w0.saturating_sub(l).max(c0);
@@ -40,7 +82,7 @@ pub fn accumulate_q<S: OpSequence>(seq: &S, w0: usize, w1: usize) -> (usize, Mat
             }
         }
     }
-    (c0, q)
+    c0
 }
 
 /// `rs_gemm`: apply the full sequence set via accumulated factors.
@@ -49,6 +91,18 @@ pub fn accumulate_q<S: OpSequence>(seq: &S, w0: usize, w1: usize) -> (usize, Mat
 ///   larger chunks amortize accumulation but grow `Q` quadratically);
 /// * `mb` — row-panel height for the GEMM application (cache blocking).
 pub fn apply_gemm<S: OpSequence>(a: &mut Matrix, seq: &S, chunk_waves: usize, mb: usize) {
+    apply_gemm_with(a, seq, chunk_waves, mb, &mut GemmWorkspace::new());
+}
+
+/// [`apply_gemm`] with caller-owned scratch (the plan API keeps `ws` alive
+/// so repeated applies reuse the accumulator and panel allocations).
+pub fn apply_gemm_with<S: OpSequence>(
+    a: &mut Matrix,
+    seq: &S,
+    chunk_waves: usize,
+    mb: usize,
+    ws: &mut GemmWorkspace,
+) {
     assert_eq!(a.cols(), seq.n(), "matrix/sequence column mismatch");
     let n = seq.n();
     let k = seq.k();
@@ -64,16 +118,16 @@ pub fn apply_gemm<S: OpSequence>(a: &mut Matrix, seq: &S, chunk_waves: usize, mb
     let mut w0 = 0;
     while w0 < total_waves {
         let w1 = (w0 + chunk).min(total_waves);
-        let (c0, q) = accumulate_q(seq, w0, w1);
-        let c = q.cols();
+        let c0 = accumulate_q_into(seq, w0, w1, &mut ws.q);
+        let c = ws.q.cols();
         // A[:, c0..c0+c] = A[:, c0..c0+c] * Q, row panel at a time.
         let mut ib = 0;
         while ib < m {
             let rows = mb.min(m - ib);
-            let ablock = a.submatrix(ib, rows, c0, c);
-            let mut out = Matrix::zeros(rows, c);
-            dgemm(1.0, &ablock, &q, 0.0, &mut out, &gemm_cfg);
-            a.set_submatrix(ib, c0, &out);
+            a.copy_submatrix_into(ib, rows, c0, c, &mut ws.ablock);
+            ws.out.resize_zeroed(rows, c);
+            dgemm(1.0, &ws.ablock, &ws.q, 0.0, &mut ws.out, &gemm_cfg);
+            a.set_submatrix(ib, c0, &ws.out);
             ib += rows;
         }
         w0 = w1;

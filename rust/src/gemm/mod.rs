@@ -11,6 +11,6 @@ mod accumulate;
 mod dgemm;
 mod dtrmm;
 
-pub use accumulate::{accumulate_q, apply_gemm};
+pub use accumulate::{accumulate_q, accumulate_q_into, apply_gemm, apply_gemm_with, GemmWorkspace};
 pub use dgemm::{dgemm, dgemm_naive, GemmConfig};
 pub use dtrmm::{dtrmm_lower, dtrmm_upper};

@@ -40,6 +40,16 @@ pub struct WaveStream {
 }
 
 impl WaveStream {
+    /// An empty stream with no backing allocation (arena slot awaiting its
+    /// first [`Self::repack`]).
+    pub fn empty() -> Self {
+        Self {
+            data: Vec::new(),
+            per_wave: 0,
+            nwaves: 0,
+        }
+    }
+
     /// Pack ops for waves `v0 .. v0+nwaves` of the subgroup of `kr` sequences
     /// starting at absolute sequence `p0`: wave `v` holds ops
     /// `(i = v - u, p = p0 + u)` for `u = 0..kr`, in that order.
@@ -47,21 +57,41 @@ impl WaveStream {
     /// All referenced positions must be valid (`0 ≤ v-u ≤ n-2`): the caller
     /// (phase decomposition, [`super::phases`]) guarantees this.
     pub fn pack<S: OpSequence>(seq: &S, p0: usize, kr: usize, v0: usize, nwaves: usize) -> Self {
+        let mut s = Self::empty();
+        s.repack(seq, p0, kr, v0, nwaves);
+        s
+    }
+
+    /// Re-fill this stream in place (same semantics as [`Self::pack`]),
+    /// reusing the existing allocation when its capacity suffices — the
+    /// k-block arena calls this so repeated executes allocate nothing.
+    pub fn repack<S: OpSequence>(
+        &mut self,
+        seq: &S,
+        p0: usize,
+        kr: usize,
+        v0: usize,
+        nwaves: usize,
+    ) {
         let w = <S::Op as PairOp>::WIDTH;
         let per_wave = kr * w;
-        let mut data = vec![0.0; per_wave * nwaves];
+        self.per_wave = per_wave;
+        self.nwaves = nwaves;
+        self.data.clear();
+        self.data.resize(per_wave * nwaves, 0.0);
         for t in 0..nwaves {
             let v = v0 + t;
             for u in 0..kr {
                 let op = seq.get(v - u, p0 + u);
-                op.store(&mut data[t * per_wave + u * w..]);
+                op.store(&mut self.data[t * per_wave + u * w..]);
             }
         }
-        Self {
-            data,
-            per_wave,
-            nwaves,
-        }
+    }
+
+    /// Allocated capacity in doubles (test hook for the no-growth
+    /// guarantee of the plan API).
+    pub fn capacity(&self) -> usize {
+        self.data.capacity()
     }
 
     #[inline(always)]

@@ -31,7 +31,8 @@ use crate::matrix::Matrix;
 use crate::pack::{PackedMatrix, PackedPanel};
 use crate::rot::{OpSequence, PairOp, RotationSequence};
 use anyhow::{bail, Result};
-use phases::{plan_kblock, run_kblock, KBlockPlan};
+pub use phases::{plan_kblock, plan_kblock_into, KBlockPlan};
+use phases::run_kblock;
 
 /// Algorithm variants evaluated in the paper (§8).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -77,8 +78,27 @@ impl Algorithm {
         }
     }
 
-    /// Parse a CLI name (either enum-ish or the paper's `rs_*` names).
+    /// Parse a CLI name (convenience alias for the [`std::str::FromStr`]
+    /// impl, which is the single parser shared by the CLI, the coordinator
+    /// router, and the bench harness).
     pub fn parse(name: &str) -> Result<Algorithm> {
+        name.parse()
+    }
+}
+
+impl std::fmt::Display for Algorithm {
+    /// Displays as the paper's `rs_*` name (round-trips through
+    /// [`std::str::FromStr`]).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.paper_name())
+    }
+}
+
+impl std::str::FromStr for Algorithm {
+    type Err = anyhow::Error;
+
+    /// Accepts either enum-ish names (`kernel`) or the paper's `rs_*` names.
+    fn from_str(name: &str) -> Result<Algorithm> {
         Ok(match name.to_ascii_lowercase().as_str() {
             "naive" | "rs_unoptimized" | "unoptimized" => Algorithm::Naive,
             "wavefront" | "rs_wavefront" => Algorithm::Wavefront,
@@ -92,50 +112,88 @@ impl Algorithm {
     }
 }
 
+/// A reusable per-worker workspace for the kernel algorithm: the §4 packing
+/// buffer plus the k-block plan arena. Owned by the plan API's `Workspace`
+/// (one per worker thread) so repeated executes allocate nothing.
+pub struct PanelWorkspace {
+    /// Micro-panel packing buffer (§4).
+    pub panel: PackedPanel,
+    /// Wave-stream arena (§2/§5 phase plans), recycled across k-blocks.
+    pub kplan: KBlockPlan,
+}
+
+impl PanelWorkspace {
+    /// Pre-size for a `rows x cols` panel packed for an `m_r`-row kernel.
+    pub fn with_capacity(rows: usize, cols: usize, mr: usize) -> Self {
+        Self {
+            panel: PackedPanel::with_capacity(rows, cols, mr),
+            kplan: KBlockPlan::new(),
+        }
+    }
+
+    /// Total doubles allocated (packing buffer + stream arena) — the
+    /// quantity the plan API's no-growth test watches.
+    pub fn capacity_doubles(&self) -> usize {
+        self.panel.buffer_capacity() + self.kplan.buffer_doubles()
+    }
+}
+
 /// Apply a rotation sequence set with the chosen algorithm and default
 /// (planner-derived) parameters.
+///
+/// One-shot shim over [`crate::plan::RotationPlan`]; hot loops that apply
+/// many same-shaped sets should build a plan once instead.
 pub fn apply(algo: Algorithm, a: &mut Matrix, seq: &RotationSequence) -> Result<()> {
     apply_with(algo, a, seq, &KernelConfig::default())
 }
 
-/// Apply with explicit kernel/block parameters.
+/// Apply with explicit kernel/block parameters (a throwaway
+/// [`crate::plan::RotationPlan`] under the hood).
 pub fn apply_with(
     algo: Algorithm,
     a: &mut Matrix,
     seq: &RotationSequence,
     cfg: &KernelConfig,
 ) -> Result<()> {
-    match algo {
-        Algorithm::Naive => crate::rot::apply_naive(a, seq),
-        Algorithm::Wavefront => crate::rot::apply_wavefront(a, seq),
-        Algorithm::Blocked => apply_blocked(
-            a,
-            seq,
-            &BlockConfig {
-                mb: cfg.mb,
-                kb: cfg.kb,
-                nb: cfg.nb,
-            },
-        ),
-        Algorithm::Fused => apply_fused(a, seq, usize::MAX),
-        Algorithm::Gemm => crate::gemm::apply_gemm(a, seq, cfg.nb.max(cfg.kb), cfg.mb),
-        Algorithm::Kernel => apply_kernel(a, seq, cfg)?,
-        Algorithm::KernelNoPack => apply_kernel_unpacked(a, seq, cfg)?,
-    }
-    Ok(())
+    let mut plan = crate::plan::RotationPlan::builder()
+        .shape(a.rows(), a.cols(), seq.k())
+        .algorithm(algo)
+        .config(*cfg)
+        .warm_workspace(false) // executes exactly once; warming would double the stream packing
+        .build()?;
+    plan.execute(a, seq)
 }
 
 /// `rs_kernel`: pack each `m_b` row-panel into §4 micro-panel format, run
 /// the §5 loop nest with the §3 kernel, unpack.
+///
+/// Allocates a throwaway workspace; the plan API
+/// ([`crate::plan::RotationPlan`]) keeps one alive across calls instead.
 pub fn apply_kernel<S: OpSequence>(a: &mut Matrix, seq: &S, cfg: &KernelConfig) -> Result<()> {
+    let m = a.rows();
+    let mut ws = PanelWorkspace::with_capacity(cfg.mb.max(1).min(m), a.cols(), cfg.mr);
+    apply_kernel_with_workspace(a, seq, cfg, &mut ws)
+}
+
+/// `rs_kernel` with a caller-owned workspace: the packing buffer and the
+/// wave-stream arena are reused across row-panels, k-blocks, and — when the
+/// caller keeps `ws` alive — across calls (zero per-call allocation once
+/// warm).
+pub fn apply_kernel_with_workspace<S: OpSequence>(
+    a: &mut Matrix,
+    seq: &S,
+    cfg: &KernelConfig,
+    ws: &mut PanelWorkspace,
+) -> Result<()> {
     assert_eq!(a.cols(), seq.n(), "matrix/sequence column mismatch");
     let m = a.rows();
+    let mb = cfg.mb.max(1);
     let mut ib = 0;
     while ib < m {
-        let rows = cfg.mb.min(m - ib);
-        let mut panel = PackedPanel::pack(a, ib, rows, cfg.mr);
-        run_panel_packed(&mut panel, seq, cfg)?;
-        panel.unpack(a, ib);
+        let rows = mb.min(m - ib);
+        ws.panel.pack_from(a, ib, rows);
+        run_panel_packed_with(&mut ws.panel, seq, cfg, &mut ws.kplan)?;
+        ws.panel.unpack(a, ib);
         ib += rows;
     }
     Ok(())
@@ -175,12 +233,49 @@ pub fn apply_kernel_packed<S: OpSequence>(
     Ok(())
 }
 
+/// Iterate the §5 k-block decomposition: calls `f(pb, kbe)` for each block
+/// of at most `kb` sequences (clamped to `n - 1` per Alg 1.3). This is the
+/// single source of truth for the block loop — the panel drivers below and
+/// the plan API's arena warm-up must march in lockstep (same block
+/// sequence → same arena sizes → the first-execute no-allocation
+/// guarantee).
+pub fn for_each_kblock(
+    n: usize,
+    k: usize,
+    kb: usize,
+    mut f: impl FnMut(usize, usize) -> Result<()>,
+) -> Result<()> {
+    if n < 2 || k == 0 {
+        return Ok(());
+    }
+    let kb_max = kb.min(n - 1).max(1);
+    let mut pb = 0;
+    while pb < k {
+        let kbe = kb_max.min(k - pb);
+        f(pb, kbe)?;
+        pb += kbe;
+    }
+    Ok(())
+}
+
 /// The §5 loop nest on one micro-panel packed panel. Public for the
 /// parallel scheduler ([`crate::parallel`]), which owns its panels.
 pub fn run_panel_packed<S: OpSequence>(
     panel: &mut PackedPanel,
     seq: &S,
     cfg: &KernelConfig,
+) -> Result<()> {
+    run_panel_packed_with(panel, seq, cfg, &mut KBlockPlan::new())
+}
+
+/// [`run_panel_packed`] with a caller-owned k-block arena: wave-stream
+/// buffers are recycled across k-blocks (and across calls when the caller
+/// keeps `kplan` alive) instead of freshly allocated.
+pub fn run_panel_packed_with<S: OpSequence>(
+    panel: &mut PackedPanel,
+    seq: &S,
+    cfg: &KernelConfig,
+    kplan: &mut KBlockPlan,
 ) -> Result<()> {
     let n = seq.n();
     let k = seq.k();
@@ -195,17 +290,12 @@ pub fn run_panel_packed<S: OpSequence>(
     );
     let chunks = panel.chunks();
     let stride = panel.chunk_stride();
-    let kb_max = cfg.kb.min(n - 1).max(1);
-    let mut pb = 0;
-    while pb < k {
-        let kbe = kb_max.min(k - pb);
+    for_each_kblock(n, k, cfg.kb, |pb, kbe| {
         // kr > kbe is fine: the plan then routes every sequence through the
         // KR = 1 remainder path, so the dispatched (mr, kr) stays supported.
-        let plan = plan_kblock(seq, pb, kbe, cfg.kr, cfg.nb);
-        dispatch_kblock_packed::<S::Op>(panel.data_mut(), chunks, stride, &plan, cfg.mr, cfg.kr)?;
-        pb += kbe;
-    }
-    Ok(())
+        plan_kblock_into(kplan, seq, pb, kbe, cfg.kr, cfg.nb);
+        dispatch_kblock_packed::<S::Op>(panel.data_mut(), chunks, stride, kplan, cfg.mr, cfg.kr)
+    })
 }
 
 /// The §5 loop nest on caller-owned (unpacked, `ld`-strided) storage.
@@ -222,15 +312,11 @@ fn run_panel_at<S: OpSequence>(
     if n < 2 || k == 0 {
         return Ok(());
     }
-    let kb_max = cfg.kb.min(n - 1).max(1);
-    let mut pb = 0;
-    while pb < k {
-        let kbe = kb_max.min(k - pb);
-        let plan = plan_kblock(seq, pb, kbe, cfg.kr, cfg.nb);
-        dispatch_kblock::<S::Op>(data, ld, r0, rows, &plan, cfg.mr, cfg.kr)?;
-        pb += kbe;
-    }
-    Ok(())
+    let mut kplan = KBlockPlan::new();
+    for_each_kblock(n, k, cfg.kb, |pb, kbe| {
+        plan_kblock_into(&mut kplan, seq, pb, kbe, cfg.kr, cfg.nb);
+        dispatch_kblock::<S::Op>(data, ld, r0, rows, &kplan, cfg.mr, cfg.kr)
+    })
 }
 
 /// Every supported `(m_r, k_r)` pair expanded through a macro, shared by
@@ -392,7 +478,43 @@ mod tests {
     fn algorithm_parse_round_trip() {
         for &algo in Algorithm::ALL {
             assert_eq!(Algorithm::parse(algo.paper_name()).unwrap(), algo);
+            // Display and FromStr are the same parser pair.
+            assert_eq!(algo.to_string(), algo.paper_name());
+            assert_eq!(algo.to_string().parse::<Algorithm>().unwrap(), algo);
         }
         assert!(Algorithm::parse("nonsense").is_err());
+        assert!("nonsense".parse::<Algorithm>().is_err());
+    }
+
+    #[test]
+    fn workspace_apply_matches_and_reuses() {
+        // m % mb == 0 and k % kb == 0: every row-panel and k-block has the
+        // same structure, so arena pairing is slot-stable (see
+        // `KBlockPlan::recycle`) and capacity is exact after one warm apply.
+        let (m, n, k) = (48, 26, 8);
+        let c = cfg(8, 2, 16, 4, 7);
+        let mut ws = PanelWorkspace::with_capacity(c.mb.min(m), n, c.mr);
+        let mut expected = Matrix::random(m, n, 21);
+        let mut a = expected.clone();
+
+        // Two different sequence sets through one workspace.
+        for seed in [1u64, 2] {
+            let seq = RotationSequence::random(n, k, seed);
+            crate::rot::apply_naive(&mut expected, &seq);
+            apply_kernel_with_workspace(&mut a, &seq, &c, &mut ws).unwrap();
+            assert_eq!(max_abs_diff(&a, &expected), 0.0, "seed={seed}");
+        }
+
+        // Once warm, further applies must not grow the workspace.
+        let seq = RotationSequence::random(n, k, 3);
+        apply_kernel_with_workspace(&mut a, &seq, &c, &mut ws).unwrap();
+        let cap = ws.capacity_doubles();
+        let ptr = ws.panel.data_ptr();
+        for seed in 4u64..8 {
+            let seq = RotationSequence::random(n, k, seed);
+            apply_kernel_with_workspace(&mut a, &seq, &c, &mut ws).unwrap();
+            assert_eq!(ws.capacity_doubles(), cap, "workspace grew at seed {seed}");
+            assert_eq!(ws.panel.data_ptr(), ptr, "packing buffer moved");
+        }
     }
 }

@@ -36,6 +36,12 @@ pub struct KernelCall {
 
 /// Per-`k`-block plan: packed wave streams, built once and reused across
 /// all row chunks (the §5.2 "C and S stay in L2" reuse).
+///
+/// The plan doubles as an *arena*: [`plan_kblock_into`] recycles the
+/// previous block's calls (and their stream allocations) instead of
+/// dropping them, so a loop over k-blocks — and, through the plan API's
+/// `Workspace`, a whole sequence of executes — performs no allocation
+/// once warm.
 pub struct KBlockPlan {
     /// Startup triangle: single-sequence sweeps, ascending local sequence.
     pub startup: Vec<KernelCall>,
@@ -44,6 +50,78 @@ pub struct KBlockPlan {
     pub pipeline: Vec<Vec<KernelCall>>,
     /// Shutdown triangle: single-sequence sweeps, ascending local sequence.
     pub shutdown: Vec<KernelCall>,
+    /// Recycled calls whose stream buffers are reusable.
+    spare: Vec<KernelCall>,
+    /// Recycled pipeline chunk vectors.
+    spare_chunks: Vec<Vec<KernelCall>>,
+}
+
+impl KBlockPlan {
+    /// An empty arena; fill it with [`plan_kblock_into`].
+    pub fn new() -> Self {
+        Self {
+            startup: Vec::new(),
+            pipeline: Vec::new(),
+            shutdown: Vec::new(),
+            spare: Vec::new(),
+            spare_chunks: Vec::new(),
+        }
+    }
+
+    /// Move every live call (and chunk vector) to the spare pools.
+    ///
+    /// Calls are pushed in *reverse* consumption order (shutdown, pipeline,
+    /// startup, each reversed) so the LIFO pops in [`plan_kblock_into`]
+    /// hand each rebuilt call the buffer of the call that previously held
+    /// the same position — a same-structure replan then reuses every
+    /// buffer at exactly its old size and never grows.
+    fn recycle(&mut self) {
+        self.spare.extend(self.shutdown.drain(..).rev());
+        for mut chunk in self.pipeline.drain(..).rev() {
+            self.spare.extend(chunk.drain(..).rev());
+            self.spare_chunks.push(chunk);
+        }
+        self.spare.extend(self.startup.drain(..).rev());
+    }
+
+    /// Take a call from the spare pool (or mint one) and repack it.
+    fn fresh_call<S: OpSequence>(
+        &mut self,
+        seq: &S,
+        p0: usize,
+        width: usize,
+        v0: usize,
+        nwaves: usize,
+        full_group: bool,
+    ) -> KernelCall {
+        let mut call = self.spare.pop().unwrap_or_else(|| KernelCall {
+            v0: 0,
+            full_group: false,
+            stream: WaveStream::empty(),
+        });
+        call.v0 = v0;
+        call.full_group = full_group;
+        call.stream.repack(seq, p0, width, v0, nwaves);
+        call
+    }
+
+    /// Total doubles allocated across all stream buffers, live and spare
+    /// (test hook for the no-growth guarantee).
+    pub fn buffer_doubles(&self) -> usize {
+        let live = self
+            .startup
+            .iter()
+            .chain(self.shutdown.iter())
+            .chain(self.pipeline.iter().flatten())
+            .chain(self.spare.iter());
+        live.map(|c| c.stream.capacity()).sum()
+    }
+}
+
+impl Default for KBlockPlan {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 /// Build the phase plan for a `k`-block.
@@ -60,64 +138,59 @@ pub fn plan_kblock<S: OpSequence>(
     kr: usize,
     nb: usize,
 ) -> KBlockPlan {
+    let mut plan = KBlockPlan::new();
+    plan_kblock_into(&mut plan, seq, pb, kb, kr, nb);
+    plan
+}
+
+/// Rebuild `plan` for a new `k`-block in place, recycling the previous
+/// block's call and stream allocations (see [`KBlockPlan`]).
+pub fn plan_kblock_into<S: OpSequence>(
+    plan: &mut KBlockPlan,
+    seq: &S,
+    pb: usize,
+    kb: usize,
+    kr: usize,
+    nb: usize,
+) {
     let n = seq.n();
     assert!(kb >= 1 && kb <= n - 1, "k-block requires 1 <= kb <= n-1");
     assert!(kr >= 1 && nb >= 1);
+    plan.recycle();
 
     // Startup: sequence l covers i in [0, kb-1-l): KR=1 waves v = i from 0.
-    let mut startup = Vec::new();
     for l in 0..kb {
         let end = kb - 1 - l;
         if end > 0 {
-            startup.push(KernelCall {
-                v0: 0,
-                full_group: false,
-                stream: WaveStream::pack(seq, pb + l, 1, 0, end),
-            });
+            let call = plan.fresh_call(seq, pb + l, 1, 0, end, false);
+            plan.startup.push(call);
         }
     }
 
     // Pipeline: waves [kb-1, n-1) in chunks of nb.
-    let mut pipeline = Vec::new();
     let (w_lo, w_hi) = (kb - 1, n - 1);
     let mut w0 = w_lo;
     while w0 < w_hi {
         let w1 = (w0 + nb).min(w_hi);
-        let mut chunk = Vec::new();
+        let mut chunk = plan.spare_chunks.pop().unwrap_or_default();
         let full_groups = kb / kr;
         for g in 0..full_groups {
             let l0 = g * kr;
-            chunk.push(KernelCall {
-                v0: w0 - l0,
-                full_group: true,
-                stream: WaveStream::pack(seq, pb + l0, kr, w0 - l0, w1 - w0),
-            });
+            let call = plan.fresh_call(seq, pb + l0, kr, w0 - l0, w1 - w0, true);
+            chunk.push(call);
         }
         for l in full_groups * kr..kb {
-            chunk.push(KernelCall {
-                v0: w0 - l,
-                full_group: false,
-                stream: WaveStream::pack(seq, pb + l, 1, w0 - l, w1 - w0),
-            });
+            let call = plan.fresh_call(seq, pb + l, 1, w0 - l, w1 - w0, false);
+            chunk.push(call);
         }
-        pipeline.push(chunk);
+        plan.pipeline.push(chunk);
         w0 = w1;
     }
 
     // Shutdown: sequence l covers i in [n-1-l, n-1): KR=1 waves from n-1-l.
-    let mut shutdown = Vec::new();
     for l in 1..kb {
-        shutdown.push(KernelCall {
-            v0: n - 1 - l,
-            full_group: false,
-            stream: WaveStream::pack(seq, pb + l, 1, n - 1 - l, l),
-        });
-    }
-
-    KBlockPlan {
-        startup,
-        pipeline,
-        shutdown,
+        let call = plan.fresh_call(seq, pb + l, 1, n - 1 - l, l, false);
+        plan.shutdown.push(call);
     }
 }
 
@@ -296,6 +369,27 @@ mod tests {
         // each chunk: 3 full subgroups, no remainder
         assert!(plan.pipeline.iter().all(|c| c.len() == 3));
         assert!(plan.pipeline[0].iter().all(|c| c.full_group));
+    }
+
+    #[test]
+    fn arena_replan_reuses_buffers_and_stays_correct() {
+        let seq = RotationSequence::random(24, 12, 11);
+        let mut plan = KBlockPlan::new();
+        plan_kblock_into(&mut plan, &seq, 0, 6, 2, 5);
+        // Warm once more so the LIFO buffer/slot pairing settles.
+        plan_kblock_into(&mut plan, &seq, 6, 6, 2, 5);
+        let cap = plan.buffer_doubles();
+        plan_kblock_into(&mut plan, &seq, 0, 6, 2, 5);
+        assert_eq!(plan.buffer_doubles(), cap, "same-shape replan must not grow");
+
+        // The recycled plan still computes the right thing.
+        let sub = seq.slice_sequences(0, 6);
+        let mut a_ref = Matrix::random(8, 24, 12);
+        let mut a_ker = a_ref.clone();
+        apply_naive(&mut a_ref, &sub);
+        let ld = a_ker.ld();
+        run_kblock::<Givens, 8, 2, 3>(a_ker.data_mut(), ld, 0, 8, &plan);
+        assert_eq!(max_abs_diff(&a_ref, &a_ker), 0.0);
     }
 
     #[test]

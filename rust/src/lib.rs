@@ -24,19 +24,43 @@
 //! * a benchmark harness that regenerates every figure in the paper's
 //!   evaluation section ([`bench_harness`]).
 //!
-//! ## Quickstart
+//! ## Quickstart: plan once, execute many
+//!
+//! The hot loops that motivate the paper apply hundreds of same-shaped
+//! sequence sets, so the primary API is a [`plan::RotationPlan`]: build it
+//! once (solves the §5 block sizes, selects the kernel, allocates reusable
+//! packing buffers), then execute against each new sequence set with zero
+//! per-call allocation:
 //!
 //! ```no_run
 //! use rotseq::matrix::Matrix;
+//! use rotseq::plan::RotationPlan;
 //! use rotseq::rot::RotationSequence;
-//! use rotseq::kernel::{apply, Algorithm};
 //!
-//! let m = 64;
-//! let n = 48;
-//! let k = 8;
+//! let (m, n, k) = (960, 960, 24);
+//! let mut plan = RotationPlan::builder()
+//!     .shape(m, n, k)          // required: the repeated problem shape
+//!     .threads(1)              // §7 workers (optional)
+//!     .build()?;               // §5 solve + workspace allocation
+//!
 //! let mut a = Matrix::random(m, n, 42);
-//! let seq = RotationSequence::random(n, k, 7);
-//! apply(Algorithm::Kernel, &mut a, &seq).unwrap();
+//! for sweep in 0..100 {
+//!     let seq = RotationSequence::random(n, k, sweep);
+//!     plan.execute(&mut a, &seq)?;          // apply
+//!     // ... and plan.execute_inverse(&mut a, &seq)? undoes it.
+//! }
+//! # anyhow::Ok(())
+//! ```
+//!
+//! One-shot calls can use the thin shim [`kernel::apply`] /
+//! [`kernel::apply_with`], which build a throwaway plan internally:
+//!
+//! ```no_run
+//! use rotseq::kernel::{apply, Algorithm};
+//! # let mut a = rotseq::matrix::Matrix::random(64, 48, 42);
+//! # let seq = rotseq::rot::RotationSequence::random(48, 8, 7);
+//! apply(Algorithm::Kernel, &mut a, &seq)?;
+//! # anyhow::Ok(())
 //! ```
 pub mod apps;
 pub mod bench_harness;
@@ -47,7 +71,9 @@ pub mod kernel;
 pub mod matrix;
 pub mod pack;
 pub mod parallel;
+pub mod plan;
 pub mod rot;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod simulator;
 pub mod testutil;

@@ -19,6 +19,7 @@ use rotseq::blocking::{plan, plan_bounds_for, CacheParams, KernelConfig};
 use rotseq::coordinator::{Coordinator, Job, JobSpec, RoutePolicy};
 use rotseq::kernel::Algorithm;
 use rotseq::matrix::{frobenius_norm, Matrix};
+use rotseq::plan::RotationPlan;
 use rotseq::rot::{OpSequence, RotationSequence};
 use std::collections::HashMap;
 
@@ -139,26 +140,33 @@ fn print_usage() {
 }
 
 fn cmd_apply(a: &Args) -> Result<()> {
-    let algo = Algorithm::parse(&a.get_str("algo", "rs_kernel"))?;
+    // `Algorithm` implements `FromStr`, so the generic flag parser reads it.
+    let algo: Algorithm = a.get("algo", Algorithm::Kernel)?;
     let m = a.get("m", 960usize)?;
     let n = a.get("n", 960usize)?;
     let k = a.get("k", 180usize)?;
     let seed = a.get("seed", 42u64)?;
+    let reps = a.get("reps", 1usize)?.max(1);
     let cfg = config_from_args(a)?;
     let seq = RotationSequence::random(n, k, seed);
     let mut mat = Matrix::random(m, n, seed ^ 0x5EED);
     let flops = OpSequence::flops(&seq, m);
 
+    // Plan once (block solve + workspace), execute --reps times: the CLI
+    // face of the plan/execute split. Threads > 1 parallelizes the kernel
+    // variant per §7.
+    let mut plan = RotationPlan::builder()
+        .shape(m, n, k)
+        .algorithm(algo)
+        .config(cfg)
+        .build()?;
     let t0 = std::time::Instant::now();
-    if cfg.threads > 1 {
-        rotseq::parallel::apply_parallel(&mut mat, &seq, &cfg)?;
-    } else {
-        rotseq::kernel::apply_with(algo, &mut mat, &seq, &cfg)?;
+    for _ in 0..reps {
+        plan.execute(&mut mat, &seq)?;
     }
-    let dt = t0.elapsed().as_secs_f64();
+    let dt = t0.elapsed().as_secs_f64() / reps as f64;
     println!(
-        "{} m={m} n={n} k={k}: {:.3}s  {:.3} Gflop/s  (checksum {:.6e})",
-        algo.paper_name(),
+        "{algo} m={m} n={n} k={k}: {:.3}s  {:.3} Gflop/s  (checksum {:.6e})",
         dt,
         flops as f64 / dt / 1e9,
         frobenius_norm(&mat)
@@ -266,6 +274,12 @@ fn cmd_svd(a: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_pjrt(_a: &Args) -> Result<()> {
+    bail!("built without the `pjrt` feature; rebuild with `--features pjrt`")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_pjrt(a: &Args) -> Result<()> {
     let dir = a.get_str("artifacts", "artifacts");
     let reg = rotseq::runtime::ArtifactRegistry::load(&dir)
@@ -306,11 +320,15 @@ fn cmd_serve(a: &Args) -> Result<()> {
             ["metrics"] => {
                 let s = coord.metrics().snapshot();
                 println!(
-                    "jobs: {} submitted, {} done, {} failed; {:.3} Gflop/s busy-rate",
+                    "jobs: {} submitted, {} done, {} failed; {:.3} Gflop/s busy-rate; \
+                     plans: {} hits / {} misses ({} pooled)",
                     s.jobs_submitted,
                     s.jobs_completed,
                     s.jobs_failed,
-                    s.gflops()
+                    s.gflops(),
+                    s.plan_cache_hits,
+                    s.plan_cache_misses,
+                    coord.plan_cache().pooled_plans()
                 );
             }
             ["apply", rest @ ..] if rest.len() >= 4 => {
@@ -319,7 +337,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
                 let k: usize = rest[2].parse().context("k")?;
                 let seed: u64 = rest[3].parse().context("seed")?;
                 let algorithm = match rest.get(4) {
-                    Some(name) => Some(Algorithm::parse(name)?),
+                    Some(name) => Some(name.parse::<Algorithm>()?),
                     None => None,
                 };
                 let job = Job {

@@ -74,6 +74,57 @@ impl Matrix {
         m
     }
 
+    /// Re-shape in place to a zero-filled `rows x cols` (`ld == rows`),
+    /// reusing the existing allocation whenever it is large enough. This is
+    /// the workspace-reuse primitive of the plan API's GEMM path.
+    pub fn resize_zeroed(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.ld = rows.max(1);
+        self.data.clear();
+        self.data.resize(self.ld * cols, 0.0);
+    }
+
+    /// Allocated capacity of the backing storage in doubles (test hook for
+    /// the plan API's no-growth guarantee).
+    pub fn data_capacity(&self) -> usize {
+        self.data.capacity()
+    }
+
+    /// Re-shape in place to `rows x cols` (`ld == rows`) **without**
+    /// zeroing retained contents (only a grown tail is zero-filled). For
+    /// destinations that are fully overwritten right after — skips the
+    /// redundant memset [`Self::resize_zeroed`] would pay on a hot path.
+    fn resize_for_overwrite(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.ld = rows.max(1);
+        let len = self.ld * cols;
+        if self.data.len() > len {
+            self.data.truncate(len);
+        } else {
+            self.data.resize(len, 0.0);
+        }
+    }
+
+    /// Copy the `nr x nc` block at `(r0, c0)` into `dst`, reshaping `dst`
+    /// in place (no allocation once `dst` is large enough).
+    pub fn copy_submatrix_into(
+        &self,
+        r0: usize,
+        nr: usize,
+        c0: usize,
+        nc: usize,
+        dst: &mut Matrix,
+    ) {
+        assert!(r0 + nr <= self.rows && c0 + nc <= self.cols);
+        // ld == nr, so the copies below overwrite every retained double.
+        dst.resize_for_overwrite(nr, nc);
+        for j in 0..nc {
+            dst.col_mut(j).copy_from_slice(&self.col(c0 + j)[r0..r0 + nr]);
+        }
+    }
+
     /// Build from a column-major slice (`ld == rows`).
     pub fn from_col_major(rows: usize, cols: usize, data: &[f64]) -> Self {
         assert_eq!(data.len(), rows * cols);

@@ -49,6 +49,23 @@ impl AlignedBuf {
         Self { raw, offset, len }
     }
 
+    /// Resize to `len` doubles, reusing the existing allocation whenever it
+    /// is large enough (the plan-once/execute-many hot path relies on this
+    /// never allocating after warm-up). Contents are unspecified after the
+    /// call; the caller must overwrite every double it will read.
+    pub fn ensure_len(&mut self, len: usize) {
+        if self.offset + len <= self.raw.len() {
+            self.len = len;
+        } else {
+            *self = Self::new(len);
+        }
+    }
+
+    /// Usable capacity in doubles (allocation size minus alignment slack).
+    pub fn capacity(&self) -> usize {
+        self.raw.len() - self.offset
+    }
+
     #[inline(always)]
     pub fn as_slice(&self) -> &[f64] {
         &self.raw[self.offset..self.offset + self.len]
@@ -83,31 +100,51 @@ pub struct PackedPanel {
 }
 
 impl PackedPanel {
-    /// Pack rows `r0 .. r0+rows` of `a` for an `m_r`-row kernel.
-    pub fn pack(a: &Matrix, r0: usize, rows: usize, mr: usize) -> Self {
-        assert!(r0 + rows <= a.rows());
+    /// Pre-allocate a panel able to hold `rows x cols` in `m_r`-chunks,
+    /// without packing anything yet (workspace construction). The buffer is
+    /// zeroed, so the padding invariant holds from the start.
+    pub fn with_capacity(rows: usize, cols: usize, mr: usize) -> Self {
         assert!(mr >= 1);
-        let cols = a.cols();
         let chunks = rows.div_ceil(mr).max(1);
-        let mut buf = AlignedBuf::new(chunks * mr * cols.max(1));
-        {
-            let dst = buf.as_mut_slice();
-            for c in 0..chunks {
-                let cr0 = r0 + c * mr;
-                let live = mr.min(r0 + rows - cr0);
-                let base = c * mr * cols;
-                for j in 0..cols {
-                    let src = &a.col(j)[cr0..cr0 + live];
-                    dst[base + j * mr..base + j * mr + live].copy_from_slice(src);
-                    // rows live..mr stay zero (padding).
-                }
-            }
-        }
         Self {
-            buf,
+            buf: AlignedBuf::new(chunks * mr * cols.max(1)),
             rows,
             cols,
             mr,
+        }
+    }
+
+    /// Pack rows `r0 .. r0+rows` of `a` for an `m_r`-row kernel.
+    pub fn pack(a: &Matrix, r0: usize, rows: usize, mr: usize) -> Self {
+        let mut p = Self::with_capacity(rows, a.cols(), mr);
+        p.pack_from(a, r0, rows);
+        p
+    }
+
+    /// Re-pack rows `r0 .. r0+rows` of `a` into this panel, reusing the
+    /// existing allocation (it grows only if the new shape needs more
+    /// space). This is the plan-API hot path: repeated executes on a
+    /// same-shaped matrix perform zero allocations here.
+    pub fn pack_from(&mut self, a: &Matrix, r0: usize, rows: usize) {
+        assert!(r0 + rows <= a.rows());
+        let mr = self.mr;
+        let cols = a.cols();
+        let chunks = rows.div_ceil(mr).max(1);
+        self.buf.ensure_len(chunks * mr * cols.max(1));
+        self.rows = rows;
+        self.cols = cols;
+        let dst = self.buf.as_mut_slice();
+        for c in 0..chunks {
+            let cr0 = r0 + c * mr;
+            let live = mr.min((r0 + rows).saturating_sub(cr0));
+            let base = c * mr * cols;
+            for j in 0..cols {
+                let src = &a.col(j)[cr0..cr0 + live];
+                dst[base + j * mr..base + j * mr + live].copy_from_slice(src);
+                // Rows live..mr are padding; the buffer is reused, so zero
+                // them explicitly (kernels expect exact zeros there).
+                dst[base + j * mr + live..base + (j + 1) * mr].fill(0.0);
+            }
         }
     }
 
@@ -163,6 +200,18 @@ impl PackedPanel {
     #[inline(always)]
     pub fn data_mut(&mut self) -> &mut [f64] {
         self.buf.as_mut_slice()
+    }
+
+    /// Capacity of the backing buffer in doubles (stability of this value
+    /// across executes is the plan API's no-allocation guarantee).
+    pub fn buffer_capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    /// Address of the packed data (test hook: pointer stability across
+    /// repacks proves the allocation was reused).
+    pub fn data_ptr(&self) -> *const f64 {
+        self.buf.as_slice().as_ptr()
     }
 
     /// Element accessor (tests / checksums; the hot path works on chunks).
@@ -307,6 +356,38 @@ mod tests {
         let pm = PackedMatrix::from_matrix(&a, 100, 16);
         assert_eq!(pm.panels().len(), 1);
         assert_eq!(max_abs_diff(&a, &pm.to_matrix()), 0.0);
+    }
+
+    #[test]
+    fn pack_from_reuses_allocation() {
+        let a = Matrix::random(40, 12, 4);
+        let b = Matrix::random(40, 12, 5);
+        let mut p = PackedPanel::pack(&a, 0, 24, 8);
+        let cap = p.buffer_capacity();
+        let ptr = p.data_ptr();
+        // Same-size repack from another source: no growth, same pointer.
+        p.pack_from(&b, 8, 24);
+        assert_eq!(p.buffer_capacity(), cap);
+        assert_eq!(p.data_ptr(), ptr);
+        let mut out = b.clone();
+        p.unpack(&mut out, 8);
+        assert_eq!(max_abs_diff(&b, &out), 0.0);
+        // Smaller repack also reuses.
+        p.pack_from(&b, 0, 9);
+        assert_eq!(p.buffer_capacity(), cap);
+        assert_eq!(p.data_ptr(), ptr);
+    }
+
+    #[test]
+    fn pack_from_rezeros_padding() {
+        let a = Matrix::random(10, 3, 6);
+        let mut p = PackedPanel::pack(&a, 0, 10, 4);
+        // Dirty a pad row of the last chunk (rows 8..10 live, 10..12 pad).
+        let stride = p.chunk_stride();
+        p.data_mut()[2 * stride + 3] = 77.0;
+        p.pack_from(&a, 0, 10);
+        assert_eq!(p.get(9, 0), a.get(9, 0));
+        assert_eq!(p.data()[2 * stride + 3], 0.0, "padding must be re-zeroed");
     }
 
     #[test]

@@ -16,4 +16,4 @@ pub mod speedup_model;
 
 mod scheduler;
 
-pub use scheduler::{apply_parallel, apply_parallel_packed, partition_rows};
+pub use scheduler::{apply_parallel, apply_parallel_packed, apply_parallel_with, partition_rows};

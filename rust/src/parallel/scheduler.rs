@@ -1,8 +1,9 @@
 //! The §7 scheduler: balanced row partitioning + scoped worker threads.
 
 use crate::blocking::KernelConfig;
+use crate::kernel::PanelWorkspace;
 use crate::matrix::Matrix;
-use crate::pack::{PackedMatrix, PackedPanel};
+use crate::pack::PackedMatrix;
 use crate::rot::OpSequence;
 use anyhow::Result;
 
@@ -29,6 +30,9 @@ pub fn partition_rows(m: usize, threads: usize, mr: usize) -> Vec<(usize, usize)
 /// nest on it, and the panels are written back after the join. Workers
 /// share the (read-only) sequence set; there is no other communication —
 /// the reason the paper sees near-linear scaling.
+///
+/// Allocates throwaway per-worker workspaces; the plan API
+/// ([`crate::plan::RotationPlan`]) keeps them alive across calls instead.
 pub fn apply_parallel<S: OpSequence + Sync>(
     a: &mut Matrix,
     seq: &S,
@@ -39,19 +43,53 @@ pub fn apply_parallel<S: OpSequence + Sync>(
     if parts.len() <= 1 {
         return crate::kernel::apply_kernel(a, seq, cfg);
     }
+    let mut units: Vec<PanelWorkspace> = parts
+        .iter()
+        .map(|&(_, rows)| PanelWorkspace::with_capacity(rows, a.cols(), cfg.mr))
+        .collect();
+    apply_parallel_with(a, seq, cfg, &parts, &mut units)
+}
+
+/// [`apply_parallel`] with caller-owned per-worker workspaces: worker `i`
+/// handles rows `parts[i]` using `units[i]` (packing buffer + wave-stream
+/// arena), so repeated calls on same-shaped problems allocate nothing.
+pub fn apply_parallel_with<S: OpSequence + Sync>(
+    a: &mut Matrix,
+    seq: &S,
+    cfg: &KernelConfig,
+    parts: &[(usize, usize)],
+    units: &mut [PanelWorkspace],
+) -> Result<()> {
+    assert_eq!(a.cols(), seq.n(), "matrix/sequence column mismatch");
+    assert_eq!(parts.len(), units.len(), "one workspace per partition");
+    if parts.is_empty() {
+        return Ok(());
+    }
+
+    if parts.len() == 1 {
+        // Single chunk: run in place on the calling thread.
+        let (r0, rows) = parts[0];
+        let unit = &mut units[0];
+        unit.panel.pack_from(a, r0, rows);
+        crate::kernel::run_panel_packed_with(&mut unit.panel, seq, cfg, &mut unit.kplan)?;
+        unit.panel.unpack(a, r0);
+        return Ok(());
+    }
 
     let shared: &Matrix = a;
-    let panels: Vec<Result<(usize, PackedPanel)>> = std::thread::scope(|scope| {
+    let results: Vec<Result<()>> = std::thread::scope(|scope| {
         let handles: Vec<_> = parts
             .iter()
-            .map(|&(r0, rows)| {
-                scope.spawn(move || -> Result<(usize, PackedPanel)> {
-                    let mut panel = PackedPanel::pack(shared, r0, rows, cfg.mr);
-                    // Per-thread m_b: its whole chunk (§7 load balancing).
-                    let mut local = *cfg;
-                    local.mb = rows.max(1);
-                    crate::kernel::run_panel_packed(&mut panel, seq, &local)?;
-                    Ok((r0, panel))
+            .zip(units.iter_mut())
+            .map(|(&(r0, rows), unit)| {
+                scope.spawn(move || -> Result<()> {
+                    unit.panel.pack_from(shared, r0, rows);
+                    crate::kernel::run_panel_packed_with(
+                        &mut unit.panel,
+                        seq,
+                        cfg,
+                        &mut unit.kplan,
+                    )
                 })
             })
             .collect();
@@ -60,10 +98,11 @@ pub fn apply_parallel<S: OpSequence + Sync>(
             .map(|h| h.join().expect("worker panicked"))
             .collect()
     });
-
-    for res in panels {
-        let (r0, panel) = res?;
-        panel.unpack(a, r0);
+    for r in results {
+        r?;
+    }
+    for (&(r0, _rows), unit) in parts.iter().zip(units.iter()) {
+        unit.panel.unpack(a, r0);
     }
     Ok(())
 }

@@ -1,0 +1,788 @@
+//! Plan-once / execute-many API (FFTW/BLIS-style).
+//!
+//! The paper's whole point is that applying rotation sequences is
+//! data-movement bound, and that the §5 block parameters and §4 packing
+//! amortize that movement. The hot loops that motivate the paper apply
+//! *hundreds* of same-shaped sequence sets (Hessenberg QR sweeps, Jacobi
+//! half-sweeps, a job service with repeated shapes) — so re-solving the
+//! block plan and re-allocating packing buffers on every call is exactly
+//! wrong. A [`RotationPlan`] front-loads all of that:
+//!
+//! * the §5 [`crate::blocking::BlockPlan`] solve and kernel selection;
+//! * the §7 row partition (when `threads > 1`);
+//! * a reusable [`Workspace`]: §4 packing buffers, the wave-stream arena,
+//!   and the `rs_gemm` accumulators;
+//!
+//! after which [`RotationPlan::execute`] / [`RotationPlan::execute_inverse`]
+//! run with zero per-call allocation.
+//!
+//! ```no_run
+//! use rotseq::matrix::Matrix;
+//! use rotseq::plan::RotationPlan;
+//! use rotseq::rot::RotationSequence;
+//!
+//! let (m, n, k) = (960, 960, 24);
+//! let mut plan = RotationPlan::builder().shape(m, n, k).build()?;
+//! let mut a = Matrix::random(m, n, 7);
+//! for sweep in 0..100 {
+//!     let seq = RotationSequence::random(n, k, sweep);
+//!     plan.execute(&mut a, &seq)?; // no allocation, no re-planning
+//! }
+//! # anyhow::Ok(())
+//! ```
+//!
+//! ## Inverse execution
+//!
+//! `execute_inverse` undoes `execute` *through the same optimized kernels*:
+//! applying the transposed rotations in fully reversed order equals a
+//! forward-format application of the column-mirrored sequence set to the
+//! column-mirrored matrix (write `B = A·P` with `P` the reversal
+//! permutation; the rotation `G(c, s)` on columns `(j, j+1)` of `A`
+//! becomes `G(c, s)` on columns `(n-2-j, n-1-j)` of `B` with the pair
+//! order flipped, which is exactly `G(c, s)ᵀ` in forward orientation). So
+//! the inverse pass mirrors the columns, runs the planned forward
+//! algorithm on the mirrored sequence set, and mirrors back — every
+//! algorithm variant, including the §3 kernel, serves both directions.
+//! The inverse pass builds the mirrored `C`/`S` copy per call — `O(n·k)`,
+//! small next to the `O(m·n·k)` apply — so the zero-allocation guarantee
+//! above is for forward executes.
+
+use anyhow::{bail, ensure, Result};
+use crate::blocking::{plan as solve_config, plan_bounds_for, BlockPlan, CacheParams, KernelConfig};
+use crate::gemm::GemmWorkspace;
+use crate::kernel::{self, Algorithm, KBlockPlan, PanelWorkspace};
+use crate::matrix::Matrix;
+use crate::parallel::{apply_parallel_with, partition_rows};
+use crate::rot::{self, RotationSequence};
+
+/// Which side of the matrix the sequences act on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Side {
+    /// `A ← A·Q`: rotations act on adjacent *column* pairs (the paper's
+    /// orientation; the zero-copy fast path).
+    Right,
+    /// `A ← Qᵀ·A`: rotations act on adjacent *row* pairs. Served by
+    /// transposing around the right-side path — correct, but it pays two
+    /// `m x n` copies per execute; plan on `Aᵀ` directly when the extra
+    /// data movement matters.
+    Left,
+}
+
+/// Default application direction of [`RotationPlan::execute`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Direction {
+    /// Apply the sequences as given.
+    Forward,
+    /// Apply the inverse (undo) of the sequences.
+    Inverse,
+}
+
+/// The reusable per-plan scratch: §4 packing buffers plus the wave-stream
+/// arena for each worker, and the `rs_gemm` accumulators. Allocated (and
+/// warmed) at [`PlanBuilder::build`]; repeated executes on plan-shaped
+/// problems never grow it.
+pub struct Workspace {
+    /// §7 row partition; empty means "serial" (one unit) or `m == 0`.
+    parts: Vec<(usize, usize)>,
+    /// One packing-buffer + stream-arena unit per concurrent worker.
+    units: Vec<PanelWorkspace>,
+    /// `rs_gemm` accumulator/panel scratch.
+    gemm: Option<GemmWorkspace>,
+}
+
+impl Workspace {
+    fn for_algo(
+        algo: Algorithm,
+        cfg: &KernelConfig,
+        wm: usize,
+        wn: usize,
+        k: usize,
+        warm: bool,
+    ) -> Workspace {
+        match algo {
+            Algorithm::Kernel => {
+                let (parts, mut units) = if cfg.threads > 1 {
+                    let parts = partition_rows(wm, cfg.threads, cfg.mr);
+                    let units = parts
+                        .iter()
+                        .map(|&(_, rows)| PanelWorkspace::with_capacity(rows, wn, cfg.mr))
+                        .collect();
+                    (parts, units)
+                } else {
+                    let rows = cfg.mb.max(1).min(wm.max(1));
+                    (
+                        Vec::new(),
+                        vec![PanelWorkspace::with_capacity(rows, wn, cfg.mr)],
+                    )
+                };
+                // Warm each stream arena with an identity sequence of the
+                // planned shape so even the first execute allocates nothing.
+                // Skipped for throwaway plans (the `apply`/`apply_with`
+                // shims), where the warm-up would just double the
+                // stream-packing work of the single execute.
+                if warm && wn >= 2 && k > 0 {
+                    let ident = RotationSequence::identity(wn, k);
+                    for unit in &mut units {
+                        warm_kplan(&mut unit.kplan, &ident, cfg);
+                    }
+                }
+                Workspace {
+                    parts,
+                    units,
+                    gemm: None,
+                }
+            }
+            Algorithm::Gemm => Workspace {
+                parts: Vec::new(),
+                units: Vec::new(),
+                gemm: Some(GemmWorkspace::new()),
+            },
+            _ => Workspace {
+                parts: Vec::new(),
+                units: Vec::new(),
+                gemm: None,
+            },
+        }
+    }
+
+    /// Total doubles allocated across all buffers (the workspace-reuse test
+    /// asserts this never grows across executes).
+    pub fn capacity_doubles(&self) -> usize {
+        self.units
+            .iter()
+            .map(|u| u.capacity_doubles())
+            .sum::<usize>()
+            + self.gemm.as_ref().map_or(0, |g| g.capacity_doubles())
+    }
+
+    /// Addresses of the packing buffers (pointer stability across executes
+    /// proves the allocations were reused, not replaced).
+    pub fn packing_ptrs(&self) -> Vec<usize> {
+        self.units.iter().map(|u| u.panel.data_ptr() as usize).collect()
+    }
+}
+
+/// Replay the k-block loop of one execute against `seq` so every stream
+/// buffer in the arena reaches its final size. Uses the same
+/// [`kernel::for_each_kblock`] iteration as the real drivers, so the warmed
+/// block sequence can never diverge from the executed one.
+fn warm_kplan(kplan: &mut KBlockPlan, seq: &RotationSequence, cfg: &KernelConfig) {
+    kernel::for_each_kblock(seq.n(), seq.k(), cfg.kb, |pb, kbe| {
+        kernel::plan_kblock_into(kplan, seq, pb, kbe, cfg.kr, cfg.nb);
+        Ok(())
+    })
+    .expect("warm-up closure is infallible");
+}
+
+/// Builder for [`RotationPlan`]; see the module docs for the full story.
+pub struct PlanBuilder {
+    shape: Option<(usize, usize, usize)>,
+    algorithm: Algorithm,
+    cache: Option<CacheParams>,
+    kernel_size: (usize, usize),
+    threads: Option<usize>,
+    side: Side,
+    direction: Direction,
+    config: Option<KernelConfig>,
+    warm: bool,
+}
+
+impl PlanBuilder {
+    fn new() -> Self {
+        Self {
+            shape: None,
+            algorithm: Algorithm::Kernel,
+            cache: None,
+            kernel_size: (16, 2),
+            threads: None,
+            side: Side::Right,
+            direction: Direction::Forward,
+            config: None,
+            warm: true,
+        }
+    }
+
+    /// Problem shape: `A` is `m x n`, sequence sets carry `k` sequences.
+    /// Required. `m` and `n` are binding (they size the workspace); `k`
+    /// guides the §5 solve and arena warm-up, but `execute` accepts any
+    /// `seq.k()` (the final Hessenberg batch is smaller, for example).
+    pub fn shape(mut self, m: usize, n: usize, k: usize) -> Self {
+        self.shape = Some((m, n, k));
+        self
+    }
+
+    /// Algorithm variant (default [`Algorithm::Kernel`], the paper's).
+    pub fn algorithm(mut self, algo: Algorithm) -> Self {
+        self.algorithm = algo;
+        self
+    }
+
+    /// Cache capacities for the §5 solve (default
+    /// [`CacheParams::detect`]). Ignored if [`Self::config`] is given.
+    pub fn cache(mut self, cache: CacheParams) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Kernel size `(m_r, k_r)` (default `(16, 2)`, the paper's flagship).
+    /// Ignored if [`Self::config`] is given.
+    pub fn kernel(mut self, mr: usize, kr: usize) -> Self {
+        self.kernel_size = (mr, kr);
+        self
+    }
+
+    /// Worker threads (§7). Default 1.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Which side the sequences act on (default [`Side::Right`]).
+    pub fn side(mut self, side: Side) -> Self {
+        self.side = side;
+        self
+    }
+
+    /// What [`RotationPlan::execute`] does (default [`Direction::Forward`]).
+    pub fn direction(mut self, direction: Direction) -> Self {
+        self.direction = direction;
+        self
+    }
+
+    /// Explicit block/kernel parameters, bypassing the §5 solve.
+    pub fn config(mut self, cfg: KernelConfig) -> Self {
+        self.config = Some(cfg);
+        self
+    }
+
+    /// Whether `build` pre-warms the wave-stream arena so even the first
+    /// execute allocates nothing (default `true`). Disable for throwaway
+    /// plans that will execute exactly once.
+    pub fn warm_workspace(mut self, warm: bool) -> Self {
+        self.warm = warm;
+        self
+    }
+
+    /// Solve the §5 plan, validate, and allocate the workspace.
+    pub fn build(self) -> Result<RotationPlan> {
+        let Some((m, n, k)) = self.shape else {
+            bail!("RotationPlan requires .shape(m, n, k)");
+        };
+        let (mr, kr) = self.kernel_size;
+        let (mut cfg, bounds) = match self.config {
+            Some(cfg) => (cfg, None),
+            None => {
+                let cache = self.cache.unwrap_or_else(CacheParams::detect);
+                (
+                    solve_config(mr, kr, cache, self.threads.unwrap_or(1)),
+                    Some(plan_bounds_for(mr, kr, cache)),
+                )
+            }
+        };
+        if let Some(t) = self.threads {
+            cfg.threads = t.max(1);
+        }
+        cfg.threads = cfg.threads.max(1);
+        if matches!(self.algorithm, Algorithm::Kernel | Algorithm::KernelNoPack) {
+            cfg.validate()?;
+        }
+        // Workspace dimensions: the matrix the kernels actually see
+        // (transposed for left-side application).
+        let (wm, wn) = match self.side {
+            Side::Right => (m, n),
+            Side::Left => (n, m),
+        };
+        ensure!(
+            wn >= 2,
+            "effective column count must be >= 2 (got {wn} for side {:?})",
+            self.side
+        );
+        let workspace = Workspace::for_algo(self.algorithm, &cfg, wm, wn, k, self.warm);
+        Ok(RotationPlan {
+            shape: (m, n, k),
+            algo: self.algorithm,
+            side: self.side,
+            direction: self.direction,
+            cfg,
+            bounds,
+            workspace,
+        })
+    }
+}
+
+/// A pre-solved, pre-allocated recipe for applying rotation-sequence sets
+/// to same-shaped matrices. Build once with [`RotationPlan::builder`],
+/// execute many times.
+pub struct RotationPlan {
+    shape: (usize, usize, usize),
+    algo: Algorithm,
+    side: Side,
+    direction: Direction,
+    cfg: KernelConfig,
+    bounds: Option<BlockPlan>,
+    workspace: Workspace,
+}
+
+impl RotationPlan {
+    /// Start building a plan.
+    pub fn builder() -> PlanBuilder {
+        PlanBuilder::new()
+    }
+
+    /// The planned `(m, n, k)` shape.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        self.shape
+    }
+
+    /// The algorithm variant this plan dispatches to.
+    pub fn algorithm(&self) -> Algorithm {
+        self.algo
+    }
+
+    /// The resolved block/kernel parameters.
+    pub fn config(&self) -> &KernelConfig {
+        &self.cfg
+    }
+
+    /// The raw §5 bounds, when the planner (not an explicit config) chose
+    /// the parameters.
+    pub fn bounds(&self) -> Option<&BlockPlan> {
+        self.bounds.as_ref()
+    }
+
+    /// Side the plan applies sequences on.
+    pub fn side(&self) -> Side {
+        self.side
+    }
+
+    /// Default direction of [`Self::execute`].
+    pub fn direction(&self) -> Direction {
+        self.direction
+    }
+
+    /// The reusable workspace (introspection / tests).
+    pub fn workspace(&self) -> &Workspace {
+        &self.workspace
+    }
+
+    /// Apply `seq` to `a` in the plan's direction.
+    pub fn execute(&mut self, a: &mut Matrix, seq: &RotationSequence) -> Result<()> {
+        let invert = matches!(self.direction, Direction::Inverse);
+        self.run(a, seq, invert)
+    }
+
+    /// Apply the opposite of the plan's direction — undoes
+    /// [`Self::execute`] (to rounding: the kernels are exact, the
+    /// rotations' inverses are their transposes).
+    ///
+    /// Unlike a forward execute, the inverse builds a mirrored copy of
+    /// the `C`/`S` matrices per call (`O(n·k)` doubles, outside the
+    /// tracked workspace — see the module docs).
+    pub fn execute_inverse(&mut self, a: &mut Matrix, seq: &RotationSequence) -> Result<()> {
+        let invert = matches!(self.direction, Direction::Forward);
+        self.run(a, seq, invert)
+    }
+
+    fn run(&mut self, a: &mut Matrix, seq: &RotationSequence, invert: bool) -> Result<()> {
+        let (m, n, _k) = self.shape;
+        ensure!(
+            a.rows() == m && a.cols() == n,
+            "matrix is {}x{}, plan is for {m}x{n}",
+            a.rows(),
+            a.cols()
+        );
+        let need_n = match self.side {
+            Side::Right => n,
+            Side::Left => m,
+        };
+        ensure!(
+            seq.n() == need_n,
+            "sequence acts on {} columns, plan needs {need_n} (side {:?})",
+            seq.n(),
+            self.side
+        );
+        if seq.k() == 0 {
+            return Ok(());
+        }
+        match self.side {
+            Side::Right => self.run_oriented(a, seq, invert),
+            Side::Left => {
+                let mut at = a.transpose();
+                let res = self.run_oriented(&mut at, seq, invert);
+                *a = at.transpose();
+                res
+            }
+        }
+    }
+
+    /// Forward or (via column-mirror conjugation, see module docs) inverse
+    /// application on the kernel-facing orientation.
+    fn run_oriented(&mut self, a: &mut Matrix, seq: &RotationSequence, invert: bool) -> Result<()> {
+        if !invert {
+            return self.run_forward(a, seq);
+        }
+        let nn = seq.n();
+        let kk = seq.k();
+        let mirrored =
+            RotationSequence::from_fn(nn, kk, |i, p| seq.get(nn - 2 - i, kk - 1 - p));
+        reverse_columns(a);
+        let res = self.run_forward(a, &mirrored);
+        reverse_columns(a);
+        res
+    }
+
+    fn run_forward(&mut self, a: &mut Matrix, seq: &RotationSequence) -> Result<()> {
+        let cfg = self.cfg;
+        match self.algo {
+            Algorithm::Naive => rot::apply_naive(a, seq),
+            Algorithm::Wavefront => rot::apply_wavefront(a, seq),
+            Algorithm::Blocked => kernel::apply_blocked(
+                a,
+                seq,
+                &kernel::BlockConfig {
+                    mb: cfg.mb,
+                    kb: cfg.kb,
+                    nb: cfg.nb,
+                },
+            ),
+            Algorithm::Fused => kernel::apply_fused(a, seq, usize::MAX),
+            Algorithm::Gemm => {
+                let ws = self.workspace.gemm.as_mut().expect("gemm workspace");
+                crate::gemm::apply_gemm_with(a, seq, cfg.nb.max(cfg.kb), cfg.mb, ws);
+            }
+            Algorithm::Kernel => {
+                if self.workspace.units.is_empty() {
+                    // m == 0 under threads > 1: nothing to do.
+                } else if self.workspace.parts.is_empty() {
+                    kernel::apply_kernel_with_workspace(
+                        a,
+                        seq,
+                        &cfg,
+                        &mut self.workspace.units[0],
+                    )?;
+                } else {
+                    apply_parallel_with(
+                        a,
+                        seq,
+                        &cfg,
+                        &self.workspace.parts,
+                        &mut self.workspace.units,
+                    )?;
+                }
+            }
+            Algorithm::KernelNoPack => kernel::apply_kernel_unpacked(a, seq, &cfg)?,
+        }
+        Ok(())
+    }
+}
+
+/// Swap column `j` with column `n-1-j` for all `j` (the mirror permutation
+/// used by inverse execution).
+fn reverse_columns(a: &mut Matrix) {
+    let n = a.cols();
+    for j in 0..n / 2 {
+        let (x, y) = a.two_cols_mut(j, n - 1 - j);
+        x.swap_with_slice(y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{max_abs_diff, rel_error, Matrix};
+    use crate::rot::{apply_naive, SequenceKind};
+
+    fn small_cfg(threads: usize) -> KernelConfig {
+        KernelConfig {
+            mr: 8,
+            kr: 2,
+            mb: 16,
+            kb: 4,
+            nb: 7,
+            threads,
+        }
+    }
+
+    #[test]
+    fn builder_requires_shape() {
+        assert!(RotationPlan::builder().build().is_err());
+    }
+
+    #[test]
+    fn builder_defaults_solve_the_paper_config() {
+        let plan = RotationPlan::builder()
+            .shape(64, 48, 8)
+            .cache(CacheParams::PAPER_MACHINE)
+            .build()
+            .unwrap();
+        assert_eq!(plan.algorithm(), Algorithm::Kernel);
+        assert_eq!(plan.config().mr, 16);
+        assert_eq!(plan.config().kr, 2);
+        // §5 bounds are exposed when the planner ran.
+        let b = plan.bounds().unwrap();
+        assert_eq!(b.nb, plan.config().nb);
+    }
+
+    #[test]
+    fn execute_rejects_wrong_shapes() {
+        let mut plan = RotationPlan::builder()
+            .shape(10, 8, 2)
+            .config(small_cfg(1))
+            .build()
+            .unwrap();
+        let seq = RotationSequence::random(8, 2, 1);
+        let mut wrong = Matrix::random(9, 8, 2);
+        assert!(plan.execute(&mut wrong, &seq).is_err());
+        let wrong_seq = RotationSequence::random(9, 2, 1);
+        let mut a = Matrix::random(10, 8, 2);
+        assert!(plan.execute(&mut a, &wrong_seq).is_err());
+        assert!(plan.execute(&mut a, &seq).is_ok());
+    }
+
+    #[test]
+    fn execute_matches_naive_for_every_algorithm() {
+        let (m, n, k) = (37, 24, 7);
+        let seq = RotationSequence::random(n, k, 5);
+        let base = Matrix::random(m, n, 6);
+        let mut reference = base.clone();
+        apply_naive(&mut reference, &seq);
+
+        for &algo in Algorithm::ALL {
+            let mut plan = RotationPlan::builder()
+                .shape(m, n, k)
+                .algorithm(algo)
+                .config(small_cfg(1))
+                .build()
+                .unwrap();
+            let mut a = base.clone();
+            plan.execute(&mut a, &seq).unwrap();
+            let tol = if algo == Algorithm::Gemm { 1e-12 } else { 0.0 };
+            assert!(
+                max_abs_diff(&a, &reference) <= tol,
+                "{algo} differs from naive"
+            );
+        }
+    }
+
+    #[test]
+    fn round_trip_all_algorithms_and_kinds() {
+        let (m, n, k) = (33, 20, 6);
+        for kind in [SequenceKind::RandomAngles, SequenceKind::QrSweepLike] {
+            let seq = RotationSequence::generate(n, k, 9, kind);
+            for &algo in Algorithm::ALL {
+                let mut plan = RotationPlan::builder()
+                    .shape(m, n, k)
+                    .algorithm(algo)
+                    .config(small_cfg(1))
+                    .build()
+                    .unwrap();
+                let orig = Matrix::random(m, n, 10);
+                let mut a = orig.clone();
+                plan.execute(&mut a, &seq).unwrap();
+                assert!(
+                    rel_error(&a, &orig) > 1e-8,
+                    "{algo} {kind:?}: sequence must actually change A"
+                );
+                plan.execute_inverse(&mut a, &seq).unwrap();
+                assert!(
+                    rel_error(&a, &orig) < 1e-12,
+                    "{algo} {kind:?}: round trip error {}",
+                    rel_error(&a, &orig)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_direction_plan_swaps_roles() {
+        let (m, n, k) = (18, 12, 3);
+        let seq = RotationSequence::random(n, k, 3);
+        let orig = Matrix::random(m, n, 4);
+
+        // Forward plan's execute == inverse plan's execute_inverse.
+        let mut fwd = RotationPlan::builder()
+            .shape(m, n, k)
+            .config(small_cfg(1))
+            .build()
+            .unwrap();
+        let mut inv = RotationPlan::builder()
+            .shape(m, n, k)
+            .direction(Direction::Inverse)
+            .config(small_cfg(1))
+            .build()
+            .unwrap();
+        let mut a1 = orig.clone();
+        fwd.execute(&mut a1, &seq).unwrap();
+        let mut a2 = orig.clone();
+        inv.execute_inverse(&mut a2, &seq).unwrap();
+        assert_eq!(max_abs_diff(&a1, &a2), 0.0);
+
+        // And the inverse plan's execute undoes the forward plan's.
+        inv.execute(&mut a1, &seq).unwrap();
+        assert!(rel_error(&a1, &orig) < 1e-12);
+    }
+
+    #[test]
+    fn inverse_matches_naive_inverse() {
+        let (m, n, k) = (21, 14, 4);
+        let seq = RotationSequence::random(n, k, 8);
+        let orig = Matrix::random(m, n, 9);
+        let mut expected = orig.clone();
+        apply_naive(&mut expected, &seq);
+        rot::apply_inverse_naive(&mut expected, &seq);
+
+        let mut plan = RotationPlan::builder()
+            .shape(m, n, k)
+            .config(small_cfg(1))
+            .build()
+            .unwrap();
+        let mut a = orig.clone();
+        plan.execute(&mut a, &seq).unwrap();
+        plan.execute_inverse(&mut a, &seq).unwrap();
+        // Same round trip as the naive reference pair, to rounding.
+        assert!(rel_error(&a, &expected) < 1e-13);
+    }
+
+    #[test]
+    fn left_side_matches_transposed_right() {
+        let (m, n, k) = (14, 9, 3);
+        // Sequences act on the m rows.
+        let seq = RotationSequence::random(m, k, 11);
+        let orig = Matrix::random(m, n, 12);
+
+        let mut expected_t = orig.transpose();
+        apply_naive(&mut expected_t, &seq);
+        let expected = expected_t.transpose();
+
+        let mut plan = RotationPlan::builder()
+            .shape(m, n, k)
+            .side(Side::Left)
+            .config(small_cfg(1))
+            .build()
+            .unwrap();
+        let mut a = orig.clone();
+        plan.execute(&mut a, &seq).unwrap();
+        assert_eq!(max_abs_diff(&a, &expected), 0.0);
+
+        plan.execute_inverse(&mut a, &seq).unwrap();
+        assert!(rel_error(&a, &orig) < 1e-12);
+    }
+
+    #[test]
+    fn parallel_plan_matches_naive() {
+        let (m, n, k) = (45, 24, 9);
+        let seq = RotationSequence::random(n, k, 3);
+        let base = Matrix::random(m, n, 4);
+        let mut reference = base.clone();
+        apply_naive(&mut reference, &seq);
+
+        for threads in [2, 3, 7] {
+            let mut plan = RotationPlan::builder()
+                .shape(m, n, k)
+                .config(small_cfg(threads))
+                .build()
+                .unwrap();
+            let mut a = base.clone();
+            plan.execute(&mut a, &seq).unwrap();
+            assert_eq!(max_abs_diff(&a, &reference), 0.0, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn repeated_executes_reuse_the_workspace() {
+        // Shape chosen so every row-panel and k-block has identical
+        // structure (m % mb == 0, k % kb == 0): the arena reaches its
+        // final size during the build-time warm-up, and *every* execute
+        // afterwards is allocation-free.
+        let (m, n, k) = (48, 26, 8);
+        let mut plan = RotationPlan::builder()
+            .shape(m, n, k)
+            .config(small_cfg(1))
+            .build()
+            .unwrap();
+        let mut a = Matrix::random(m, n, 1);
+
+        let cap0 = plan.workspace().capacity_doubles();
+        let ptrs0 = plan.workspace().packing_ptrs();
+        assert!(cap0 > 0);
+
+        for seed in 0..6u64 {
+            let seq = RotationSequence::random(n, k, seed);
+            plan.execute(&mut a, &seq).unwrap();
+            assert_eq!(
+                plan.workspace().capacity_doubles(),
+                cap0,
+                "workspace grew on execute {seed}"
+            );
+            assert_eq!(
+                plan.workspace().packing_ptrs(),
+                ptrs0,
+                "packing buffer moved on execute {seed}"
+            );
+        }
+        // Inverse executes share the same workspace too.
+        let seq = RotationSequence::random(n, k, 99);
+        plan.execute_inverse(&mut a, &seq).unwrap();
+        assert_eq!(plan.workspace().capacity_doubles(), cap0);
+        assert_eq!(plan.workspace().packing_ptrs(), ptrs0);
+    }
+
+    #[test]
+    fn parallel_workspace_reuses_too() {
+        let (m, n, k) = (64, 20, 4);
+        let mut plan = RotationPlan::builder()
+            .shape(m, n, k)
+            .config(small_cfg(4))
+            .build()
+            .unwrap();
+        let mut a = Matrix::random(m, n, 2);
+        let cap0 = plan.workspace().capacity_doubles();
+        let ptrs0 = plan.workspace().packing_ptrs();
+        assert_eq!(ptrs0.len(), 4, "one packing buffer per worker");
+        for seed in 0..4u64 {
+            let seq = RotationSequence::random(n, k, seed);
+            plan.execute(&mut a, &seq).unwrap();
+            assert_eq!(plan.workspace().capacity_doubles(), cap0);
+            assert_eq!(plan.workspace().packing_ptrs(), ptrs0);
+        }
+    }
+
+    #[test]
+    fn smaller_k_than_planned_is_accepted() {
+        // The Hessenberg tail batch: fewer sequences than the plan's k.
+        let (m, n, k) = (20, 12, 8);
+        let mut plan = RotationPlan::builder()
+            .shape(m, n, k)
+            .config(small_cfg(1))
+            .build()
+            .unwrap();
+        let seq = RotationSequence::random(n, 3, 7);
+        let mut a = Matrix::random(m, n, 8);
+        let mut expected = a.clone();
+        apply_naive(&mut expected, &seq);
+        plan.execute(&mut a, &seq).unwrap();
+        assert_eq!(max_abs_diff(&a, &expected), 0.0);
+    }
+
+    #[test]
+    fn gemm_workspace_reuses() {
+        let (m, n, k) = (24, 16, 5);
+        let mut plan = RotationPlan::builder()
+            .shape(m, n, k)
+            .algorithm(Algorithm::Gemm)
+            .config(small_cfg(1))
+            .build()
+            .unwrap();
+        let mut a = Matrix::random(m, n, 3);
+        // Warm once (the GEMM scratch sizes itself on first use) …
+        let seq = RotationSequence::random(n, k, 0);
+        plan.execute(&mut a, &seq).unwrap();
+        let cap = plan.workspace().capacity_doubles();
+        // … then stays fixed.
+        for seed in 1..5u64 {
+            let seq = RotationSequence::random(n, k, seed);
+            plan.execute(&mut a, &seq).unwrap();
+            assert_eq!(plan.workspace().capacity_doubles(), cap);
+        }
+    }
+}

@@ -1,6 +1,10 @@
 //! Integration: load every AOT artifact, execute via PJRT, and match the
 //! native Rust implementation on identical inputs — proof that all three
 //! layers compose.
+//!
+//! Compiled only with `--features pjrt`: the XLA/PJRT plugin and the AOT
+//! artifacts (`make artifacts`) are not part of the default environment.
+#![cfg(feature = "pjrt")]
 
 use rotseq::matrix::{max_abs_diff, Matrix};
 use rotseq::rot::{apply_naive, RotationSequence};
