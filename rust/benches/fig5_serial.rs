@@ -26,8 +26,8 @@ fn main() {
             },
         )
     };
-    let rows = fig5_serial(&ns, k, &mc);
-    print_fig5(&rows);
+    let rows = fig5_serial(&ns, k, &mc, 1);
+    print_fig5(&rows, 1);
 
     // Shape assertions at the largest n.
     let n_max = *ns.last().unwrap();

@@ -31,12 +31,15 @@ fn gflops_of(flops: u64, m: &super::Measurement) -> f64 {
     flops as f64 / m.min_s / 1e9
 }
 
-/// Fig 5: serial performance of all variants; `k = 180`, `m = n` over the
-/// sweep. Returns rows grouped per `n`.
-pub fn fig5_serial(ns: &[usize], k: usize, mc: &MeasureConfig) -> Vec<Fig5Row> {
+/// Fig 5: performance of all variants; `k = 180`, `m = n` over the sweep.
+/// Returns rows grouped per `n`. `threads = 1` reproduces the paper's
+/// serial figure; `threads > 1` routes the `rs_kernel` series through the
+/// persistent worker pool (plan-once, pooled execute-many — the CI smoke
+/// path for the §7 subsystem).
+pub fn fig5_serial(ns: &[usize], k: usize, mc: &MeasureConfig, threads: usize) -> Vec<Fig5Row> {
     let mut rows = Vec::new();
     let cache = CacheParams::detect();
-    let cfg = plan(16, 2, cache, 1);
+    let cfg = plan(16, 2, cache, threads.max(1));
 
     for &n in ns {
         let m = n;
@@ -104,8 +107,14 @@ pub fn fig5_serial(ns: &[usize], k: usize, mc: &MeasureConfig) -> Vec<Fig5Row> {
 }
 
 /// Print Fig 5 rows in the paper's layout (one series per variant).
-pub fn print_fig5(rows: &[Fig5Row]) {
-    println!("# Fig 5 — serial flop rates (Gflop/s), k = 180, m = n");
+/// `threads` is the count the rows were measured with, so pooled smoke
+/// runs are never mislabeled as the paper's serial series.
+pub fn print_fig5(rows: &[Fig5Row], threads: usize) {
+    if threads <= 1 {
+        println!("# Fig 5 — serial flop rates (Gflop/s), k = 180, m = n");
+    } else {
+        println!("# Fig 5 variant — pooled rs_kernel, threads = {threads} (Gflop/s), m = n");
+    }
     println!("{:<16} {:>6} {:>10} {:>12}", "algorithm", "n", "Gflop/s", "t/t_kernel_v2");
     for r in rows {
         println!(
@@ -187,7 +196,12 @@ pub struct Fig7Row {
 /// each thread count (correctness + 1-core baseline) and reports the
 /// calibrated analytical model for the multicore shape (see DESIGN.md
 /// §Substitutions).
-pub fn fig7_parallel(ns: &[usize], k: usize, threads: &[usize], mc: &MeasureConfig) -> Vec<Fig7Row> {
+pub fn fig7_parallel(
+    ns: &[usize],
+    k: usize,
+    threads: &[usize],
+    mc: &MeasureConfig,
+) -> Vec<Fig7Row> {
     let cache = CacheParams::detect();
     let cfg1 = plan(16, 2, cache, 1);
     let mut rows = Vec::new();
@@ -206,8 +220,9 @@ pub fn fig7_parallel(ns: &[usize], k: usize, threads: &[usize], mc: &MeasureConf
         for &t in threads {
             let mut cfg = cfg1;
             cfg.threads = t;
+            // One panel per balanced partition chunk: exactly t workers.
             let parts = partition_rows(m, t, cfg.mr);
-            let mut pm = PackedMatrix::from_matrix(&base, parts[0].1.max(1), cfg.mr);
+            let mut pm = PackedMatrix::from_partition(&base, &parts, cfg.mr);
             let meas = measure(mc, |_| apply_parallel_packed(&mut pm, &seq, &cfg).unwrap());
             rows.push(Fig7Row {
                 n,
@@ -411,12 +426,20 @@ mod tests {
 
     #[test]
     fn fig5_small_smoke() {
-        let rows = fig5_serial(&[64], 8, &MeasureConfig::quick());
+        let rows = fig5_serial(&[64], 8, &MeasureConfig::quick(), 1);
         assert_eq!(rows.len(), 6);
         assert!(rows.iter().all(|r| r.gflops > 0.0));
         // kernel_v2's relative runtime is 1 by construction
         let v2 = rows.iter().find(|r| r.algo == "rs_kernel_v2").unwrap();
         assert!((v2.rel_runtime - 1.0).abs() < 0.3);
+    }
+
+    #[test]
+    fn fig5_pooled_smoke() {
+        // The --threads path: rs_kernel runs through the worker pool.
+        let rows = fig5_serial(&[64], 8, &MeasureConfig::quick(), 3);
+        assert_eq!(rows.len(), 6);
+        assert!(rows.iter().all(|r| r.gflops > 0.0));
     }
 
     #[test]

@@ -6,14 +6,21 @@
 //! executing needs `&mut` access to the plan's workspace; two concurrent
 //! jobs with the same key simply populate two pooled plans, and the lock
 //! is never held while a job runs.
+//!
+//! The cache also owns the shared [`WorkerPool`]s: parallel plans built by
+//! the coordinator dispatch into one persistent pool per thread count
+//! (via [`PlanCache::pool_for`]) instead of each spawning its own workers.
 
 use crate::blocking::KernelConfig;
 use crate::kernel::Algorithm;
+use crate::parallel::WorkerPool;
 use crate::plan::RotationPlan;
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
-/// What makes two jobs plan-compatible.
+/// What makes two jobs plan-compatible. The embedded [`KernelConfig`]
+/// carries the thread count, so plans with different §7 partitionings (and
+/// hence different worker pools and workspace layouts) never share a key.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct PlanKey {
     pub m: usize,
@@ -34,6 +41,9 @@ pub const DEFAULT_MAX_POOLED: usize = 32;
 pub struct PlanCache {
     pool: Mutex<HashMap<PlanKey, Vec<RotationPlan>>>,
     max_pooled: usize,
+    /// One persistent §7 worker pool per thread count, shared by every
+    /// parallel plan the coordinator builds.
+    workers: Mutex<HashMap<usize, Arc<WorkerPool>>>,
 }
 
 impl Default for PlanCache {
@@ -52,7 +62,21 @@ impl PlanCache {
         Self {
             pool: Mutex::new(HashMap::new()),
             max_pooled,
+            workers: Mutex::new(HashMap::new()),
         }
+    }
+
+    /// The shared worker pool for `threads`-way plans, spawning it on
+    /// first use. Plans built against one cache therefore reuse a single
+    /// set of persistent threads per thread count for the life of the
+    /// service.
+    pub fn pool_for(&self, threads: usize) -> Arc<WorkerPool> {
+        let mut pools = self.workers.lock().expect("plan cache poisoned");
+        Arc::clone(
+            pools
+                .entry(threads.max(1))
+                .or_insert_with(|| Arc::new(WorkerPool::new(threads))),
+        )
     }
 
     /// Take a plan for `key` out of the pool, if one is available.
@@ -174,5 +198,33 @@ mod tests {
         cache.checkin(k1, plan_for(&k1));
         assert!(cache.checkout(&k2).is_none(), "different algo, different key");
         assert!(cache.checkout(&k1).is_some());
+    }
+
+    #[test]
+    fn thread_count_discriminates_keys() {
+        // A 4-way plan has a different partition, workspace layout, and
+        // pool than a serial one — they must never share a cache entry.
+        let cache = PlanCache::new();
+        let serial = key();
+        let mut par = key();
+        par.config.threads = 4;
+        par.m = 64;
+        let mut ser64 = serial;
+        ser64.m = 64;
+        cache.checkin(ser64, plan_for(&ser64));
+        assert!(cache.checkout(&par).is_none(), "threads must be part of the key");
+        assert!(cache.checkout(&ser64).is_some());
+    }
+
+    #[test]
+    fn pool_for_shares_by_thread_count() {
+        let cache = PlanCache::new();
+        let p4a = cache.pool_for(4);
+        let p4b = cache.pool_for(4);
+        let p2 = cache.pool_for(2);
+        assert!(Arc::ptr_eq(&p4a, &p4b), "same thread count, same pool");
+        assert!(!Arc::ptr_eq(&p4a, &p2), "different thread count, different pool");
+        assert_eq!(p4a.workers(), 4);
+        assert_eq!(p2.workers(), 2);
     }
 }

@@ -181,12 +181,17 @@ fn execute_job(
         }
         None => {
             metrics.record_plan_miss();
-            match RotationPlan::builder()
+            let mut builder = RotationPlan::builder()
                 .shape(m, n, k)
                 .algorithm(algo)
-                .config(key.config)
-                .build()
-            {
+                .config(key.config);
+            if key.config.threads > 1 {
+                // Parallel plans dispatch into one persistent pool per
+                // thread count, owned by the cache — never a fresh spawn
+                // per job.
+                builder = builder.pool(plans.pool_for(key.config.threads));
+            }
+            match builder.build() {
                 Ok(plan) => plan,
                 Err(e) => {
                     metrics.record_failure();
@@ -318,6 +323,33 @@ mod tests {
         assert_eq!(snap.plan_cache_hits, 4);
         assert_eq!(coord.plan_cache().distinct_keys(), 1);
         assert_eq!(coord.plan_cache().pooled_plans(), 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn parallel_jobs_share_the_cached_pool() {
+        let coord = Coordinator::start(2, RoutePolicy::Auto);
+        let mut cfg = small_cfg();
+        cfg.threads = 3;
+        let (m, n, k) = (48, 16, 4);
+        for seed in 0..6u64 {
+            let seq = RotationSequence::random(n, k, seed);
+            let a = Matrix::random(m, n, seed + 70);
+            let mut expected = a.clone();
+            apply_naive(&mut expected, &seq);
+            let r = coord
+                .run(Job {
+                    matrix: a,
+                    seq,
+                    spec: JobSpec {
+                        algorithm: Some(Algorithm::Kernel),
+                        config: cfg,
+                    },
+                })
+                .unwrap();
+            assert_eq!(max_abs_diff(&r.matrix, &expected), 0.0, "seed {seed}");
+        }
+        assert_eq!(coord.metrics().snapshot().jobs_completed, 6);
         coord.shutdown();
     }
 

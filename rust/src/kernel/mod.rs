@@ -271,6 +271,12 @@ pub fn run_panel_packed<S: OpSequence>(
 /// [`run_panel_packed`] with a caller-owned k-block arena: wave-stream
 /// buffers are recycled across k-blocks (and across calls when the caller
 /// keeps `kplan` alive) instead of freshly allocated.
+///
+/// Each k-block's streams are packed exactly once, so callers should hand
+/// this panels of at most `m_b` rows (as every §5 driver does). For panels
+/// spanning a whole §7 worker chunk, plan a [`SeqPlan`] once and use
+/// [`run_panel_planned`], which groups the chunk into `m_b` row blocks
+/// without re-packing any stream.
 pub fn run_panel_packed_with<S: OpSequence>(
     panel: &mut PackedPanel,
     seq: &S,
@@ -296,6 +302,109 @@ pub fn run_panel_packed_with<S: OpSequence>(
         plan_kblock_into(kplan, seq, pb, kbe, cfg.kr, cfg.nb);
         dispatch_kblock_packed::<S::Op>(panel.data_mut(), chunks, stride, kplan, cfg.mr, cfg.kr)
     })
+}
+
+/// How many `m_r`-row chunks make up one §5 `m_b` row block (at least one).
+fn chunks_per_mblock(cfg: &KernelConfig) -> usize {
+    (cfg.mb.max(1) / cfg.mr.max(1)).max(1)
+}
+
+/// The full §5 k-block schedule of one sequence set: every k-block's wave
+/// streams packed at once, so a single planning pass can be replayed over
+/// many panels, workers, and matrices — the §5.2 "C and S are reused"
+/// argument applied across a whole batch instead of one row panel.
+///
+/// Like [`KBlockPlan`], this is an *arena*: [`SeqPlan::plan_into`] recycles
+/// every existing block plan (and its stream buffers), so re-planning a
+/// same-shaped sequence set allocates nothing. The worker pool
+/// ([`crate::parallel::pool`]) shares one `SeqPlan` read-only across all
+/// workers.
+pub struct SeqPlan {
+    blocks: Vec<KBlockPlan>,
+    live: usize,
+}
+
+impl SeqPlan {
+    /// An empty arena; fill it with [`Self::plan_into`].
+    pub fn new() -> Self {
+        Self {
+            blocks: Vec::new(),
+            live: 0,
+        }
+    }
+
+    /// Re-plan for `seq`, recycling every existing k-block arena. Uses the
+    /// same [`for_each_kblock`] decomposition as the panel drivers, so a
+    /// replay visits exactly the blocks a direct run would.
+    pub fn plan_into<S: OpSequence>(&mut self, seq: &S, cfg: &KernelConfig) {
+        let mut idx = 0;
+        for_each_kblock(seq.n(), seq.k(), cfg.kb, |pb, kbe| {
+            if idx == self.blocks.len() {
+                self.blocks.push(KBlockPlan::new());
+            }
+            plan_kblock_into(&mut self.blocks[idx], seq, pb, kbe, cfg.kr, cfg.nb);
+            idx += 1;
+            Ok(())
+        })
+        .expect("planning closure is infallible");
+        self.live = idx;
+    }
+
+    /// The planned k-blocks, in application order.
+    pub fn blocks(&self) -> &[KBlockPlan] {
+        &self.blocks[..self.live]
+    }
+
+    /// Total doubles allocated across all stream arenas, live and spare
+    /// (hook for the plan API's no-growth guarantee).
+    pub fn buffer_doubles(&self) -> usize {
+        self.blocks.iter().map(KBlockPlan::buffer_doubles).sum()
+    }
+}
+
+impl Default for SeqPlan {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Replay a pre-planned schedule on one packed panel, honoring the §5
+/// `m_b` row blocking (each chunk group streams through every k-block
+/// while its rows stay in L2). Pure replay: performs no planning and no
+/// allocation.
+pub fn run_panel_planned<Op: PairOp>(
+    panel: &mut PackedPanel,
+    sp: &SeqPlan,
+    cfg: &KernelConfig,
+) -> Result<()> {
+    if panel.rows() == 0 || sp.blocks().is_empty() {
+        return Ok(());
+    }
+    anyhow::ensure!(
+        panel.mr() == cfg.mr,
+        "panel packed for m_r={} but config wants m_r={}",
+        panel.mr(),
+        cfg.mr
+    );
+    let chunks = panel.chunks();
+    let stride = panel.chunk_stride();
+    let group = chunks_per_mblock(cfg);
+    let mut c0 = 0;
+    while c0 < chunks {
+        let gc = group.min(chunks - c0);
+        for bp in sp.blocks() {
+            dispatch_kblock_packed::<Op>(
+                &mut panel.data_mut()[c0 * stride..(c0 + gc) * stride],
+                gc,
+                stride,
+                bp,
+                cfg.mr,
+                cfg.kr,
+            )?;
+        }
+        c0 += gc;
+    }
+    Ok(())
 }
 
 /// The §5 loop nest on caller-owned (unpacked, `ld`-strided) storage.

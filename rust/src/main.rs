@@ -131,7 +131,7 @@ fn print_usage() {
          \x20 apply    --algo rs_kernel --m 960 --n 960 --k 180  apply + report Gflop/s\n\
          \x20 plan     [--mr 16 --kr 2 --t1 --t2 --t3]           §5 block-size planner\n\
          \x20 simulate --m 256 --n 256 --k 24                    §1.2 I/O simulation table\n\
-         \x20 bench    --figure fig5|fig6|fig7|fig8|io           regenerate a paper figure\n\
+         \x20 bench    --figure fig5|fig6|fig7|fig8|io [--threads T]  regenerate a paper figure\n\
          \x20 eig      --n 120                                   implicit-QR eigensolver demo\n\
          \x20 svd      --m 160 --n 80                            Jacobi SVD demo\n\
          \x20 pjrt     [--artifacts artifacts]                   run AOT artifacts via PJRT\n\
@@ -214,9 +214,11 @@ fn cmd_bench(a: &Args) -> Result<()> {
     };
     let max_n = a.get("max-n", if quick { 480 } else { 960 })?;
     let k = a.get("k", if quick { 36 } else { bh::PAPER_K })?;
+    // fig5 only: > 1 routes rs_kernel through the §7 worker pool.
+    let threads = a.get("threads", 1usize)?;
     let ns: Vec<usize> = bh::paper_n_sweep(max_n);
     match figure.as_str() {
-        "fig5" => bh::print_fig5(&bh::fig5_serial(&ns, k, &mc)),
+        "fig5" => bh::print_fig5(&bh::fig5_serial(&ns, k, &mc, threads), threads),
         "fig6" => bh::print_fig6(&bh::fig6_kernel_sizes(&ns, k, &mc)),
         "fig7" => {
             let threads = [1, 2, 4, 8, 16, 28];

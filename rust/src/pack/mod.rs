@@ -126,9 +126,33 @@ impl PackedPanel {
     /// space). This is the plan-API hot path: repeated executes on a
     /// same-shaped matrix perform zero allocations here.
     pub fn pack_from(&mut self, a: &Matrix, r0: usize, rows: usize) {
-        assert!(r0 + rows <= a.rows());
+        // SAFETY: `a` is a live, exclusively-borrowed-by-nobody-else
+        // column-major matrix; its accessors guarantee the layout contract.
+        unsafe { self.pack_from_raw(a.data().as_ptr(), a.ld(), a.rows(), r0, rows, a.cols()) }
+    }
+
+    /// Raw-parts variant of [`Self::pack_from`] for the worker pool
+    /// ([`crate::parallel::pool`]), where several threads pack *disjoint*
+    /// row ranges of one column-major buffer concurrently.
+    ///
+    /// # Safety
+    /// `src` must point to a live column-major buffer holding `src_rows`
+    /// rows and `cols` columns at leading dimension `ld` (element `(i, j)`
+    /// at `src[i + j*ld]`, `ld >= src_rows`), valid for reads for the whole
+    /// call. Any concurrent writer must touch only rows outside
+    /// `[r0, r0 + rows)`.
+    pub unsafe fn pack_from_raw(
+        &mut self,
+        src: *const f64,
+        ld: usize,
+        src_rows: usize,
+        r0: usize,
+        rows: usize,
+        cols: usize,
+    ) {
+        assert!(r0 + rows <= src_rows, "row range exceeds source matrix");
+        assert!(ld >= src_rows.max(1), "ld {ld} < rows {src_rows}");
         let mr = self.mr;
-        let cols = a.cols();
         let chunks = rows.div_ceil(mr).max(1);
         self.buf.ensure_len(chunks * mr * cols.max(1));
         self.rows = rows;
@@ -139,8 +163,8 @@ impl PackedPanel {
             let live = mr.min((r0 + rows).saturating_sub(cr0));
             let base = c * mr * cols;
             for j in 0..cols {
-                let src = &a.col(j)[cr0..cr0 + live];
-                dst[base + j * mr..base + j * mr + live].copy_from_slice(src);
+                let col = std::slice::from_raw_parts(src.add(j * ld + cr0), live);
+                dst[base + j * mr..base + j * mr + live].copy_from_slice(col);
                 // Rows live..mr are padding; the buffer is reused, so zero
                 // them explicitly (kernels expect exact zeros there).
                 dst[base + j * mr + live..base + (j + 1) * mr].fill(0.0);
@@ -150,16 +174,32 @@ impl PackedPanel {
 
     /// Copy the live rows back into rows `r0 ..` of `a`.
     pub fn unpack(&self, a: &mut Matrix, r0: usize) {
-        assert!(r0 + self.rows <= a.rows());
         assert_eq!(self.cols, a.cols());
+        let (ld, rows) = (a.ld(), a.rows());
+        // SAFETY: exclusive borrow of `a`; layout per the Matrix contract.
+        unsafe { self.unpack_to_raw(a.data_mut().as_mut_ptr(), ld, rows, r0) }
+    }
+
+    /// Raw-parts variant of [`Self::unpack`] for the worker pool: threads
+    /// write back *disjoint* row ranges of one column-major buffer.
+    ///
+    /// # Safety
+    /// `dst` must point to a live column-major buffer holding `dst_rows`
+    /// rows and (at least) `self.cols()` columns at leading dimension `ld`
+    /// (`ld >= dst_rows`), valid for writes for the whole call. Any
+    /// concurrent reader or writer must touch only rows outside
+    /// `[r0, r0 + self.rows())`.
+    pub unsafe fn unpack_to_raw(&self, dst: *mut f64, ld: usize, dst_rows: usize, r0: usize) {
+        assert!(r0 + self.rows <= dst_rows, "row range exceeds destination");
+        assert!(ld >= dst_rows.max(1), "ld {ld} < rows {dst_rows}");
         let src = self.buf.as_slice();
         for c in 0..self.chunks() {
             let cr0 = r0 + c * self.mr;
             let live = self.mr.min(r0 + self.rows - cr0);
             let base = c * self.mr * self.cols;
             for j in 0..self.cols {
-                a.col_mut(j)[cr0..cr0 + live]
-                    .copy_from_slice(&src[base + j * self.mr..base + j * self.mr + live]);
+                let col = std::slice::from_raw_parts_mut(dst.add(j * ld + cr0), live);
+                col.copy_from_slice(&src[base + j * self.mr..base + j * self.mr + live]);
             }
         }
     }
@@ -249,6 +289,32 @@ impl PackedMatrix {
         Self {
             panels,
             panel_rows: mb,
+            rows: a.rows(),
+            cols: a.cols(),
+        }
+    }
+
+    /// Pack `a` into one panel per §7 partition chunk (`(r0, rows)` pairs
+    /// tiling all rows in order, e.g. from
+    /// [`crate::parallel::partition_rows`]) — the parallel-packed layout
+    /// where worker `i` owns panel `i`. An empty partition packs the whole
+    /// matrix as one panel.
+    pub fn from_partition(a: &Matrix, parts: &[(usize, usize)], mr: usize) -> Self {
+        if parts.is_empty() {
+            return Self::from_matrix(a, a.rows().max(1), mr);
+        }
+        let mut panels = Vec::with_capacity(parts.len());
+        let mut next = 0;
+        for &(r0, rows) in parts {
+            assert_eq!(r0, next, "partition must tile the rows in order");
+            panels.push(PackedPanel::pack(a, r0, rows, mr));
+            next = r0 + rows;
+        }
+        assert_eq!(next, a.rows(), "partition must cover all rows");
+        let panel_rows = panels.iter().map(PackedPanel::rows).max().unwrap_or(0);
+        Self {
+            panels,
+            panel_rows,
             rows: a.rows(),
             cols: a.cols(),
         }
@@ -348,6 +414,22 @@ mod tests {
         assert_eq!(pm.panels()[3].rows(), 5);
         let b = pm.to_matrix();
         assert_eq!(max_abs_diff(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn packed_matrix_from_partition_round_trip() {
+        let a = Matrix::random(60, 9, 13);
+        // A balanced-§7-style split: uneven chunk heights, one panel each.
+        let parts = [(0usize, 16usize), (16, 24), (40, 20)];
+        let pm = PackedMatrix::from_partition(&a, &parts, 8);
+        assert_eq!(pm.panels().len(), 3);
+        assert_eq!(pm.panels()[1].rows(), 24);
+        assert_eq!(pm.panel_rows(), 24, "panel_rows reports the tallest chunk");
+        assert_eq!(max_abs_diff(&a, &pm.to_matrix()), 0.0);
+        // Empty partition degrades to a single whole-matrix panel.
+        let whole = PackedMatrix::from_partition(&a, &[], 8);
+        assert_eq!(whole.panels().len(), 1);
+        assert_eq!(max_abs_diff(&a, &whole.to_matrix()), 0.0);
     }
 
     #[test]

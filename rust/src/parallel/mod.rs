@@ -1,19 +1,28 @@
 //! Parallelization (§7): row-block scheduling across threads.
 //!
 //! Threads apply the *same* rotations to *different* rows, so the only
-//! coordination is partitioning rows. Per §7, instead of a fixed `m_b`
-//! each thread gets `m / nthreads` rows rounded up to a multiple of `m_r`
-//! (the kernel needs whole `m_r` chunks for full-rate execution; a
-//! non-multiple `m` causes the Fig 7 load-imbalance oscillation).
+//! coordination is partitioning rows. Per §7 each thread gets a balanced
+//! share of whole `m_r` row-quanta ([`partition_rows`]; the kernel needs
+//! whole `m_r` chunks for full-rate execution, and a max−min spread above
+//! `m_r` causes the Fig 7 load-imbalance oscillation).
+//!
+//! Execution goes through a persistent [`WorkerPool`] ([`pool`]): threads
+//! are spawned once (per plan, or shared across plans via the
+//! coordinator), and each apply is a condvar handshake — zero per-call
+//! allocation, zero per-call spawn. [`apply_parallel`] is the one-shot
+//! shim over that path; [`apply_parallel_packed`] is the pre-packed
+//! (`rs_kernel_v2`) measurement harness.
 //!
 //! The testbed for this reproduction has a single core, so measured
 //! multi-thread scaling is meaningless here; [`speedup_model`] provides the
 //! calibrated analytical model used to regenerate Fig 7's shape, while the
-//! real scheduler below is exercised for correctness under any thread
+//! real scheduler and pool are exercised for correctness under any thread
 //! count.
 
+pub mod pool;
 pub mod speedup_model;
 
 mod scheduler;
 
-pub use scheduler::{apply_parallel, apply_parallel_packed, apply_parallel_with, partition_rows};
+pub use pool::{MatView, WorkerPool};
+pub use scheduler::{apply_parallel, apply_parallel_packed, partition_rows};

@@ -1,0 +1,423 @@
+//! Persistent worker pool (§7 without per-call thread spawns).
+//!
+//! `std::thread::scope` re-pays thread creation and teardown on every
+//! apply — exactly the per-call communication term that Demmel et al. and
+//! Ballard et al. show must be amortized for communication-optimal
+//! algorithms, and the reason PR 1's plan API stopped short of `threads >
+//! 1`. A [`WorkerPool`] spawns its threads **once**; every subsequent
+//! dispatch is a condition-variable handshake over a pre-published task
+//! descriptor:
+//!
+//! * the §7 row partition, the per-worker packing buffers, and the shared
+//!   wave-stream [`SeqPlan`] all live in the caller's
+//!   [`crate::plan::RotationPlan`] workspace, planned at build time;
+//! * a dispatch publishes raw views of the target matrices plus pointers
+//!   into that workspace, bumps an epoch, and blocks on a condvar until
+//!   every worker has finished — no channel nodes, no boxed closures, no
+//!   allocation of any kind on the steady-state path;
+//! * worker `i` packs rows `parts[i]` of each matrix into its own panel,
+//!   replays the shared `SeqPlan` streams, and writes the rows back. Row
+//!   ranges are disjoint, so the only synchronization is the join — the
+//!   §7 property that gives the paper its near-linear scaling.
+//!
+//! One pool can be shared by many plans (the coordinator keys pools by
+//! thread count); concurrent dispatches are serialized at the epoch
+//! hand-off.
+
+use crate::blocking::KernelConfig;
+use crate::kernel::{run_panel_planned, PanelWorkspace, SeqPlan};
+use crate::matrix::Matrix;
+use crate::rot::PairOp;
+use anyhow::{anyhow, ensure, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Raw view of a column-major matrix (element `(i, j)` at
+/// `data[i + j*ld]`), used to hand workers disjoint row ranges of the same
+/// buffer. Construct with [`MatView::of`]; the view is only dereferenced
+/// while the pool dispatch that received it is in flight, during which the
+/// source matrix is exclusively borrowed by the caller.
+#[derive(Clone, Copy)]
+pub struct MatView {
+    data: *mut f64,
+    ld: usize,
+    rows: usize,
+    cols: usize,
+}
+
+// SAFETY: a MatView is a dumb pointer + shape; the dispatch protocol
+// guarantees it is only dereferenced while the underlying matrix is
+// exclusively borrowed by the dispatching caller, and workers touch
+// disjoint row ranges.
+unsafe impl Send for MatView {}
+unsafe impl Sync for MatView {}
+
+impl MatView {
+    /// View of `a`. The exclusive borrow ends at the call boundary; the
+    /// caller must keep `a` alive and un-aliased for as long as the view
+    /// is dispatched.
+    pub fn of(a: &mut Matrix) -> MatView {
+        let (ld, rows, cols) = (a.ld(), a.rows(), a.cols());
+        MatView {
+            data: a.data_mut().as_mut_ptr(),
+            ld,
+            rows,
+            cols,
+        }
+    }
+
+    /// Rows of the viewed matrix.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Columns of the viewed matrix.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+}
+
+/// Monomorphized worker entry: runs worker `w`'s share of the task.
+type TaskFn = fn(&Task, usize) -> Result<()>;
+
+/// Everything a worker needs for one dispatch, as raw parts. Published
+/// under the pool mutex, copied out by each worker, and guaranteed valid
+/// until the dispatcher observes completion.
+#[derive(Clone, Copy)]
+struct Task {
+    run: TaskFn,
+    mats: *const MatView,
+    nmats: usize,
+    parts: *const (usize, usize),
+    nparts: usize,
+    units: *mut PanelWorkspace,
+    seqplan: *const SeqPlan,
+    cfg: KernelConfig,
+}
+
+// SAFETY: see the dispatch protocol above — all pointers outlive the
+// dispatch, workers index disjoint units and disjoint matrix rows.
+unsafe impl Send for Task {}
+
+struct State {
+    epoch: u64,
+    task: Option<Task>,
+    remaining: usize,
+    error: Option<anyhow::Error>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Signaled when a new epoch (or shutdown) is published.
+    work: Condvar,
+    /// Signaled when the last worker of an epoch finishes, and when the
+    /// dispatcher retires a task (so queued dispatchers can proceed).
+    done: Condvar,
+}
+
+/// A set of long-lived worker threads executing pre-planned §7 row-parallel
+/// applies. Created once (per plan, or shared across plans via
+/// [`crate::coordinator::PlanCache`]); dropped pools join their threads.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` persistent threads (at least one).
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                task: None,
+                remaining: 0,
+                error: None,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..workers.max(1))
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("rotseq-pool-{w}"))
+                    .spawn(move || worker_loop(&shared, w))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { shared, handles }
+    }
+
+    /// Number of persistent worker threads.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Apply the pre-planned streams in `seqplan` to every matrix in
+    /// `mats`: worker `i` processes rows `parts[i]` (pack → replay →
+    /// unpack) of each matrix using `units[i]`. Blocks until all workers
+    /// finish. Steady state performs zero allocation and zero thread
+    /// spawns; concurrent dispatches on a shared pool are serialized.
+    pub fn run_planned<Op: PairOp>(
+        &self,
+        mats: &[MatView],
+        parts: &[(usize, usize)],
+        units: &mut [PanelWorkspace],
+        seqplan: &SeqPlan,
+        cfg: &KernelConfig,
+    ) -> Result<()> {
+        ensure!(parts.len() == units.len(), "one workspace per partition");
+        ensure!(
+            parts.len() <= self.workers(),
+            "{} partitions exceed the pool's {} workers",
+            parts.len(),
+            self.workers()
+        );
+        if mats.is_empty() || parts.is_empty() {
+            return Ok(());
+        }
+        let task = Task {
+            run: run_chunk::<Op>,
+            mats: mats.as_ptr(),
+            nmats: mats.len(),
+            parts: parts.as_ptr(),
+            nparts: parts.len(),
+            units: units.as_mut_ptr(),
+            seqplan: seqplan as *const SeqPlan,
+            cfg: *cfg,
+        };
+        let mut st = self.shared.state.lock().expect("pool state poisoned");
+        // Another plan may be mid-dispatch on a shared pool: wait our turn.
+        while st.task.is_some() || st.remaining > 0 {
+            st = self.shared.done.wait(st).expect("pool state poisoned");
+        }
+        st.task = Some(task);
+        st.epoch += 1;
+        st.remaining = self.handles.len();
+        st.error = None;
+        self.shared.work.notify_all();
+        while st.remaining > 0 {
+            st = self.shared.done.wait(st).expect("pool state poisoned");
+        }
+        st.task = None;
+        let outcome = st.error.take();
+        drop(st);
+        // Wake any dispatcher queued behind us.
+        self.shared.done.notify_all();
+        match outcome {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().expect("pool state poisoned");
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, w: usize) {
+    let mut seen = 0u64;
+    loop {
+        let task = {
+            let mut st = shared.state.lock().expect("pool state poisoned");
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    break;
+                }
+                st = shared.work.wait(st).expect("pool state poisoned");
+            }
+            seen = st.epoch;
+            st.task.expect("live epoch carries a task")
+        };
+        let result = if w < task.nparts {
+            catch_unwind(AssertUnwindSafe(|| (task.run)(&task, w)))
+                .unwrap_or_else(|_| Err(anyhow!("pool worker {w} panicked")))
+        } else {
+            Ok(())
+        };
+        let mut st = shared.state.lock().expect("pool state poisoned");
+        if let Err(e) = result {
+            if st.error.is_none() {
+                st.error = Some(e);
+            }
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// One worker's share of a dispatch: rows `parts[w]` of every matrix, pack
+/// → replay the shared streams → unpack. Monomorphized per op type at the
+/// dispatch site.
+fn run_chunk<Op: PairOp>(t: &Task, w: usize) -> Result<()> {
+    // SAFETY: the dispatch protocol guarantees every pointer is live until
+    // the dispatcher observes completion; `w < nparts == units.len()`, each
+    // worker takes a distinct unit, and the `parts` row ranges are disjoint
+    // so concurrent pack/unpack touch disjoint elements of each matrix.
+    unsafe {
+        let (r0, rows) = *t.parts.add(w);
+        let unit = &mut *t.units.add(w);
+        let sp = &*t.seqplan;
+        for b in 0..t.nmats {
+            let mv = *t.mats.add(b);
+            unit.panel
+                .pack_from_raw(mv.data, mv.ld, mv.rows, r0, rows, mv.cols);
+            run_panel_planned::<Op>(&mut unit.panel, sp, &t.cfg)?;
+            unit.panel.unpack_to_raw(mv.data, mv.ld, mv.rows, r0);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{max_abs_diff, Matrix};
+    use crate::parallel::partition_rows;
+    use crate::rot::{apply_naive, Givens, OpSequence, RotationSequence};
+
+    fn cfg(threads: usize) -> KernelConfig {
+        KernelConfig {
+            mr: 8,
+            kr: 2,
+            mb: 16,
+            kb: 4,
+            nb: 8,
+            threads,
+        }
+    }
+
+    fn setup(
+        m: usize,
+        n: usize,
+        c: &KernelConfig,
+    ) -> (Vec<(usize, usize)>, Vec<PanelWorkspace>) {
+        let parts = partition_rows(m, c.threads, c.mr);
+        let units = parts
+            .iter()
+            .map(|&(_, rows)| PanelWorkspace::with_capacity(rows, n, c.mr))
+            .collect();
+        (parts, units)
+    }
+
+    #[test]
+    fn pool_matches_naive_single_matrix() {
+        let (m, n, k) = (45, 24, 9);
+        let seq = RotationSequence::random(n, k, 3);
+        let mut expected = Matrix::random(m, n, 4);
+        let mut a = expected.clone();
+        apply_naive(&mut expected, &seq);
+
+        let c = cfg(3);
+        let (parts, mut units) = setup(m, n, &c);
+        let pool = WorkerPool::new(c.threads);
+        let mut sp = SeqPlan::new();
+        sp.plan_into(&seq, &c);
+        let views = [MatView::of(&mut a)];
+        pool.run_planned::<Givens>(&views, &parts, &mut units, &sp, &c)
+            .unwrap();
+        assert_eq!(max_abs_diff(&a, &expected), 0.0);
+    }
+
+    #[test]
+    fn pool_batch_matches_naive_each() {
+        let (m, n, k, b) = (33, 17, 5, 4);
+        let seq = RotationSequence::random(n, k, 11);
+        let mut mats: Vec<Matrix> = (0..b).map(|i| Matrix::random(m, n, 20 + i)).collect();
+        let expected: Vec<Matrix> = mats
+            .iter()
+            .map(|a| {
+                let mut e = a.clone();
+                apply_naive(&mut e, &seq);
+                e
+            })
+            .collect();
+
+        let c = cfg(4);
+        let (parts, mut units) = setup(m, n, &c);
+        let pool = WorkerPool::new(c.threads);
+        let mut sp = SeqPlan::new();
+        sp.plan_into(&seq, &c);
+        let views: Vec<MatView> = mats.iter_mut().map(MatView::of).collect();
+        pool.run_planned::<Givens>(&views, &parts, &mut units, &sp, &c)
+            .unwrap();
+        for (a, e) in mats.iter().zip(&expected) {
+            assert_eq!(max_abs_diff(a, e), 0.0);
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_dispatches() {
+        let (m, n, k) = (40, 12, 3);
+        let c = cfg(2);
+        let (parts, mut units) = setup(m, n, &c);
+        let pool = WorkerPool::new(c.threads);
+        let mut sp = SeqPlan::new();
+        let mut a = Matrix::random(m, n, 1);
+        let mut expected = a.clone();
+        for seed in 0..5u64 {
+            let seq = RotationSequence::random(n, k, seed);
+            apply_naive(&mut expected, &seq);
+            sp.plan_into(&seq, &c);
+            let views = [MatView::of(&mut a)];
+            pool.run_planned::<Givens>(&views, &parts, &mut units, &sp, &c)
+                .unwrap();
+            assert_eq!(max_abs_diff(&a, &expected), 0.0, "dispatch {seed}");
+        }
+    }
+
+    #[test]
+    fn oversized_partition_is_rejected() {
+        let c = cfg(4);
+        let (parts, mut units) = setup(64, 8, &c);
+        assert_eq!(parts.len(), 4);
+        let pool = WorkerPool::new(2); // smaller than the partition
+        let mut a = Matrix::random(64, 8, 1);
+        let views = [MatView::of(&mut a)];
+        let seq = RotationSequence::random(8, 1, 2);
+        let mut sp = SeqPlan::new();
+        sp.plan_into(&seq, &c);
+        assert!(pool
+            .run_planned::<Givens>(&views, &parts, &mut units, &sp, &c)
+            .is_err());
+    }
+
+    #[test]
+    fn reflector_ops_work_through_the_pool() {
+        use crate::rot::{apply_reflector_sequence_naive, ReflectorSequence};
+        let (m, n, k) = (26, 14, 4);
+        let seq = ReflectorSequence::random(n, k, 7);
+        let mut expected = Matrix::random(m, n, 8);
+        let mut a = expected.clone();
+        apply_reflector_sequence_naive(&mut expected, &seq);
+
+        let c = cfg(2);
+        let (parts, mut units) = setup(m, n, &c);
+        let pool = WorkerPool::new(c.threads);
+        let mut sp = SeqPlan::new();
+        sp.plan_into(&seq, &c);
+        let views = [MatView::of(&mut a)];
+        pool.run_planned::<<ReflectorSequence as OpSequence>::Op>(
+            &views, &parts, &mut units, &sp, &c,
+        )
+        .unwrap();
+        assert_eq!(max_abs_diff(&a, &expected), 0.0);
+    }
+}

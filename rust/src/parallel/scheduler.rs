@@ -1,129 +1,93 @@
-//! The §7 scheduler: balanced row partitioning + scoped worker threads.
+//! The §7 scheduler: balanced row partitioning + the one-shot parallel
+//! shims. Hot loops should hold a [`crate::plan::RotationPlan`] built with
+//! `threads > 1` instead: it dispatches into a persistent
+//! [`super::WorkerPool`] with zero per-call allocation or thread spawn.
 
 use crate::blocking::KernelConfig;
-use crate::kernel::PanelWorkspace;
+use crate::kernel::SeqPlan;
 use crate::matrix::Matrix;
 use crate::pack::PackedMatrix;
-use crate::rot::OpSequence;
+use crate::plan::RotationPlan;
+use crate::rot::{OpSequence, RotationSequence};
 use anyhow::Result;
 
-/// Partition `m` rows over `threads` workers: each chunk is `m/threads`
-/// rounded **up** to a multiple of `mr` (§7), the last chunk takes the
-/// remainder. Returns `(r0, rows)` pairs; fewer than `threads` entries if
-/// the rounding exhausts the rows early.
+/// Partition `m` rows over `threads` workers as *balanced* `m_r`-multiples
+/// (§7): the `ceil(m / m_r)` row quanta are split floor/ceil over the
+/// workers, with any ceil shares (and the final partial quantum) assigned
+/// to the trailing chunks. Returns `(r0, rows)` pairs covering all rows in
+/// order. Guarantees:
+///
+/// * every chunk except possibly the last is a multiple of `m_r`;
+/// * `max − min` chunk size is at most `m_r`;
+/// * exactly `threads` chunks whenever `m >= threads·m_r` (fewer only when
+///   there aren't enough quanta to give every worker one).
+///
+/// The previous scheme rounded `m/threads` *up* to an `m_r` multiple,
+/// which starved the tail (m=100, t=4, m_r=8 gave 32/32/32/4 — the
+/// 4-row straggler's partner threads idle 87% of the join window).
 pub fn partition_rows(m: usize, threads: usize, mr: usize) -> Vec<(usize, usize)> {
     let threads = threads.max(1);
     let mr = mr.max(1);
-    let ideal = m.div_ceil(threads);
-    let chunk = ideal.div_ceil(mr) * mr;
-    let mut out = Vec::new();
+    if m == 0 {
+        return Vec::new();
+    }
+    let quanta = m.div_ceil(mr);
+    let t = threads.min(quanta);
+    let (share, extras) = (quanta / t, quanta % t);
+    let mut out = Vec::with_capacity(t);
     let mut r0 = 0;
-    while r0 < m {
-        let rows = chunk.min(m - r0);
+    for i in 0..t {
+        // Ceil shares go to the trailing chunks so the final chunk — the
+        // only one allowed to hold the partial quantum — is never also a
+        // floor chunk (that combination would break the max−min <= m_r
+        // balance bound).
+        let q = share + usize::from(i >= t - extras);
+        let rows = (q * mr).min(m - r0);
         out.push((r0, rows));
         r0 += rows;
     }
+    debug_assert_eq!(r0, m, "partition must cover all rows");
     out
 }
 
-/// Parallel `rs_kernel`: each worker packs its row panel, runs the §5 loop
-/// nest on it, and the panels are written back after the join. Workers
-/// share the (read-only) sequence set; there is no other communication —
-/// the reason the paper sees near-linear scaling.
-///
-/// Allocates throwaway per-worker workspaces; the plan API
-/// ([`crate::plan::RotationPlan`]) keeps them alive across calls instead.
-pub fn apply_parallel<S: OpSequence + Sync>(
-    a: &mut Matrix,
-    seq: &S,
-    cfg: &KernelConfig,
-) -> Result<()> {
-    assert_eq!(a.cols(), seq.n(), "matrix/sequence column mismatch");
-    let parts = partition_rows(a.rows(), cfg.threads, cfg.mr);
-    if parts.len() <= 1 {
-        return crate::kernel::apply_kernel(a, seq, cfg);
-    }
-    let mut units: Vec<PanelWorkspace> = parts
-        .iter()
-        .map(|&(_, rows)| PanelWorkspace::with_capacity(rows, a.cols(), cfg.mr))
-        .collect();
-    apply_parallel_with(a, seq, cfg, &parts, &mut units)
-}
-
-/// [`apply_parallel`] with caller-owned per-worker workspaces: worker `i`
-/// handles rows `parts[i]` using `units[i]` (packing buffer + wave-stream
-/// arena), so repeated calls on same-shaped problems allocate nothing.
-pub fn apply_parallel_with<S: OpSequence + Sync>(
-    a: &mut Matrix,
-    seq: &S,
-    cfg: &KernelConfig,
-    parts: &[(usize, usize)],
-    units: &mut [PanelWorkspace],
-) -> Result<()> {
-    assert_eq!(a.cols(), seq.n(), "matrix/sequence column mismatch");
-    assert_eq!(parts.len(), units.len(), "one workspace per partition");
-    if parts.is_empty() {
-        return Ok(());
-    }
-
-    if parts.len() == 1 {
-        // Single chunk: run in place on the calling thread.
-        let (r0, rows) = parts[0];
-        let unit = &mut units[0];
-        unit.panel.pack_from(a, r0, rows);
-        crate::kernel::run_panel_packed_with(&mut unit.panel, seq, cfg, &mut unit.kplan)?;
-        unit.panel.unpack(a, r0);
-        return Ok(());
-    }
-
-    let shared: &Matrix = a;
-    let results: Vec<Result<()>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = parts
-            .iter()
-            .zip(units.iter_mut())
-            .map(|(&(r0, rows), unit)| {
-                scope.spawn(move || -> Result<()> {
-                    unit.panel.pack_from(shared, r0, rows);
-                    crate::kernel::run_panel_packed_with(
-                        &mut unit.panel,
-                        seq,
-                        cfg,
-                        &mut unit.kplan,
-                    )
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("worker panicked"))
-            .collect()
-    });
-    for r in results {
-        r?;
-    }
-    for (&(r0, _rows), unit) in parts.iter().zip(units.iter()) {
-        unit.panel.unpack(a, r0);
-    }
-    Ok(())
+/// One-shot parallel `rs_kernel`: a thin shim over a throwaway
+/// [`RotationPlan`] (build → execute → drop), so it shares the pool
+/// subsystem's single code path. Loops applying many sequence sets should
+/// build the plan themselves and reuse it.
+pub fn apply_parallel(a: &mut Matrix, seq: &RotationSequence, cfg: &KernelConfig) -> Result<()> {
+    let mut plan = RotationPlan::builder()
+        .shape(a.rows(), a.cols(), seq.k())
+        .config(*cfg)
+        .warm_workspace(false) // executes exactly once
+        .build()?;
+    plan.execute(a, seq)
 }
 
 /// Parallel `rs_kernel_v2`: the matrix lives in packed panels; workers take
 /// disjoint `&mut` panels, so no copying at all happens on the hot path.
+/// Scoped threads are spawned per call — this is the measurement harness
+/// for pre-packed data, not the steady-state server path.
+///
+/// The `C`/`S` wave streams are planned **once** into a [`SeqPlan`] and
+/// replayed read-only by every worker, which groups its (possibly
+/// chunk-tall) panel into `m_b` row blocks — the §5 L2 blocking the old
+/// code disabled by overwriting `cfg.mb` with the whole panel height.
 pub fn apply_parallel_packed<S: OpSequence + Sync>(
     pm: &mut PackedMatrix,
     seq: &S,
     cfg: &KernelConfig,
 ) -> Result<()> {
     assert_eq!(pm.cols(), seq.n(), "matrix/sequence column mismatch");
+    let mut seqplan = SeqPlan::new();
+    seqplan.plan_into(seq, cfg);
+    let sp = &seqplan;
     let results: Vec<Result<()>> = std::thread::scope(|scope| {
         let handles: Vec<_> = pm
             .panels_mut()
             .iter_mut()
             .map(|panel| {
                 scope.spawn(move || -> Result<()> {
-                    let mut local = *cfg;
-                    local.mb = panel.rows().max(1);
-                    crate::kernel::run_panel_packed(panel, seq, &local)
+                    crate::kernel::run_panel_planned::<S::Op>(panel, sp, cfg)
                 })
             })
             .collect();
@@ -142,7 +106,7 @@ pub fn apply_parallel_packed<S: OpSequence + Sync>(
 mod tests {
     use super::*;
     use crate::matrix::{max_abs_diff, Matrix};
-    use crate::rot::{apply_naive, RotationSequence};
+    use crate::rot::apply_naive;
 
     fn cfg(threads: usize) -> KernelConfig {
         KernelConfig {
@@ -157,7 +121,15 @@ mod tests {
 
     #[test]
     fn partition_covers_all_rows() {
-        for (m, t, mr) in [(100, 4, 8), (7, 3, 8), (64, 16, 16), (1, 1, 16), (33, 2, 4)] {
+        for (m, t, mr) in [
+            (100, 4, 8),
+            (7, 3, 8),
+            (64, 16, 16),
+            (1, 1, 16),
+            (33, 2, 4),
+            (65, 8, 8),
+            (0, 4, 8),
+        ] {
             let parts = partition_rows(m, t, mr);
             let mut next = 0;
             for &(r0, rows) in &parts {
@@ -183,6 +155,22 @@ mod tests {
         let parts = partition_rows(64, 4, 8);
         assert_eq!(parts.len(), 4);
         assert!(parts.iter().all(|&(_, rows)| rows == 16));
+    }
+
+    #[test]
+    fn partition_is_balanced_and_full_width() {
+        // The shapes from the issue: the old rounding gave 32/32/32/4 and
+        // a five-chunk split with a 1-row straggler.
+        for (m, t, mr) in [(100, 4, 8), (65, 8, 8), (960, 28, 16), (129, 4, 16)] {
+            let parts = partition_rows(m, t, mr);
+            assert_eq!(parts.len(), t, "m={m} t={t} mr={mr}: one chunk per worker");
+            let max = parts.iter().map(|&(_, r)| r).max().unwrap();
+            let min = parts.iter().map(|&(_, r)| r).min().unwrap();
+            assert!(
+                max - min <= mr,
+                "m={m} t={t} mr={mr}: max {max} - min {min} > mr"
+            );
+        }
     }
 
     #[test]
@@ -212,7 +200,25 @@ mod tests {
 
         let c = cfg(4);
         let parts = partition_rows(m, c.threads, c.mr);
-        let mut pm = PackedMatrix::from_matrix(&a, parts[0].1, c.mr);
+        let mut pm = PackedMatrix::from_partition(&a, &parts, c.mr);
+        assert_eq!(pm.panels().len(), parts.len(), "one panel per worker");
+        apply_parallel_packed(&mut pm, &seq, &c).unwrap();
+        assert_eq!(max_abs_diff(&a_ref, &pm.to_matrix()), 0.0);
+    }
+
+    #[test]
+    fn parallel_packed_tall_panels_match_naive() {
+        // One panel per worker, each far taller than mb: exercises the
+        // in-panel §5 m-blocking that the old mb clobber disabled.
+        let (m, n, k) = (96, 15, 7);
+        let seq = RotationSequence::random(n, k, 9);
+        let a = Matrix::random(m, n, 10);
+        let mut a_ref = a.clone();
+        apply_naive(&mut a_ref, &seq);
+
+        let c = cfg(2);
+        let mut pm = PackedMatrix::from_matrix(&a, 48, c.mr); // 48 rows >> mb=16
+        assert_eq!(pm.panels().len(), 2);
         apply_parallel_packed(&mut pm, &seq, &c).unwrap();
         assert_eq!(max_abs_diff(&a_ref, &pm.to_matrix()), 0.0);
     }

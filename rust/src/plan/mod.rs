@@ -9,12 +9,20 @@
 //! wrong. A [`RotationPlan`] front-loads all of that:
 //!
 //! * the §5 [`crate::blocking::BlockPlan`] solve and kernel selection;
-//! * the §7 row partition (when `threads > 1`);
-//! * a reusable [`Workspace`]: §4 packing buffers, the wave-stream arena,
-//!   and the `rs_gemm` accumulators;
+//! * the §7 row partition **and a persistent
+//!   [`WorkerPool`]** (when `threads > 1`): worker threads are spawned at
+//!   build time (or shared across plans via [`PlanBuilder::pool`]), so an
+//!   execute is a condvar handshake — no `thread::scope` spawn per call;
+//! * a reusable [`Workspace`]: §4 packing buffers, the shared
+//!   [`SeqPlan`] wave-stream arena, and the `rs_gemm` accumulators;
 //!
 //! after which [`RotationPlan::execute`] / [`RotationPlan::execute_inverse`]
-//! run with zero per-call allocation.
+//! run with zero per-call allocation and zero per-call thread spawns.
+//!
+//! [`RotationPlan::execute_batch`] applies one sequence set to many
+//! same-shaped matrices in a single dispatch: the `C`/`S` wave streams are
+//! packed once for the whole batch (§5.2 applied across matrices) and the
+//! pool joins once, not per matrix.
 //!
 //! ```no_run
 //! use rotseq::matrix::Matrix;
@@ -50,10 +58,11 @@
 use anyhow::{bail, ensure, Result};
 use crate::blocking::{plan as solve_config, plan_bounds_for, BlockPlan, CacheParams, KernelConfig};
 use crate::gemm::GemmWorkspace;
-use crate::kernel::{self, Algorithm, KBlockPlan, PanelWorkspace};
+use crate::kernel::{self, Algorithm, PanelWorkspace, SeqPlan};
 use crate::matrix::Matrix;
-use crate::parallel::{apply_parallel_with, partition_rows};
-use crate::rot::{self, RotationSequence};
+use crate::parallel::{partition_rows, MatView, WorkerPool};
+use crate::rot::{self, Givens, RotationSequence};
+use std::sync::Arc;
 
 /// Which side of the matrix the sequences act on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -88,6 +97,14 @@ pub struct Workspace {
     units: Vec<PanelWorkspace>,
     /// `rs_gemm` accumulator/panel scratch.
     gemm: Option<GemmWorkspace>,
+    /// Shared pre-planned wave streams: packed once per execute, replayed
+    /// read-only by every pool worker, every serial `m_b` row panel, and
+    /// every batch matrix (§5.2 across the whole dispatch). Warmed at
+    /// build; `None` only until an unwarmed (throwaway) plan first runs.
+    seqplan: Option<SeqPlan>,
+    /// Reusable matrix-view scratch for pool dispatch (grows to the
+    /// largest batch size seen, then stays put).
+    views: Vec<MatView>,
 }
 
 impl Workspace {
@@ -101,7 +118,8 @@ impl Workspace {
     ) -> Workspace {
         match algo {
             Algorithm::Kernel => {
-                let (parts, mut units) = if cfg.threads > 1 {
+                let pooled = cfg.threads > 1;
+                let (parts, units) = if pooled {
                     let parts = partition_rows(wm, cfg.threads, cfg.mr);
                     let units = parts
                         .iter()
@@ -115,32 +133,39 @@ impl Workspace {
                         vec![PanelWorkspace::with_capacity(rows, wn, cfg.mr)],
                     )
                 };
-                // Warm each stream arena with an identity sequence of the
-                // planned shape so even the first execute allocates nothing.
-                // Skipped for throwaway plans (the `apply`/`apply_with`
-                // shims), where the warm-up would just double the
-                // stream-packing work of the single execute.
+                // Warm the shared `SeqPlan` with an identity sequence of
+                // the planned shape so even the first execute allocates
+                // nothing. Skipped for throwaway plans (the
+                // `apply`/`apply_with` shims), where the warm-up would just
+                // double the stream-packing work of the single execute.
+                let mut seqplan = None;
                 if warm && wn >= 2 && k > 0 {
                     let ident = RotationSequence::identity(wn, k);
-                    for unit in &mut units {
-                        warm_kplan(&mut unit.kplan, &ident, cfg);
-                    }
+                    let mut sp = SeqPlan::new();
+                    sp.plan_into(&ident, cfg);
+                    seqplan = Some(sp);
                 }
                 Workspace {
                     parts,
                     units,
                     gemm: None,
+                    seqplan,
+                    views: Vec::with_capacity(usize::from(pooled)),
                 }
             }
             Algorithm::Gemm => Workspace {
                 parts: Vec::new(),
                 units: Vec::new(),
                 gemm: Some(GemmWorkspace::new()),
+                seqplan: None,
+                views: Vec::new(),
             },
             _ => Workspace {
                 parts: Vec::new(),
                 units: Vec::new(),
                 gemm: None,
+                seqplan: None,
+                views: Vec::new(),
             },
         }
     }
@@ -153,6 +178,7 @@ impl Workspace {
             .map(|u| u.capacity_doubles())
             .sum::<usize>()
             + self.gemm.as_ref().map_or(0, |g| g.capacity_doubles())
+            + self.seqplan.as_ref().map_or(0, SeqPlan::buffer_doubles)
     }
 
     /// Addresses of the packing buffers (pointer stability across executes
@@ -162,16 +188,25 @@ impl Workspace {
     }
 }
 
-/// Replay the k-block loop of one execute against `seq` so every stream
-/// buffer in the arena reaches its final size. Uses the same
-/// [`kernel::for_each_kblock`] iteration as the real drivers, so the warmed
-/// block sequence can never diverge from the executed one.
-fn warm_kplan(kplan: &mut KBlockPlan, seq: &RotationSequence, cfg: &KernelConfig) {
-    kernel::for_each_kblock(seq.n(), seq.k(), cfg.kb, |pb, kbe| {
-        kernel::plan_kblock_into(kplan, seq, pb, kbe, cfg.kr, cfg.nb);
-        Ok(())
-    })
-    .expect("warm-up closure is infallible");
+/// Serial kernel execution: pack each `m_b` row panel, replay the shared
+/// pre-planned streams, unpack. The streams were packed exactly once (in
+/// `SeqPlan::plan_into`), not once per panel.
+fn replay_serial(
+    a: &mut Matrix,
+    unit: &mut PanelWorkspace,
+    sp: &SeqPlan,
+    cfg: &KernelConfig,
+) -> Result<()> {
+    let mb = cfg.mb.max(1);
+    let mut ib = 0;
+    while ib < a.rows() {
+        let rows = mb.min(a.rows() - ib);
+        unit.panel.pack_from(a, ib, rows);
+        kernel::run_panel_planned::<Givens>(&mut unit.panel, sp, cfg)?;
+        unit.panel.unpack(a, ib);
+        ib += rows;
+    }
+    Ok(())
 }
 
 /// Builder for [`RotationPlan`]; see the module docs for the full story.
@@ -185,6 +220,7 @@ pub struct PlanBuilder {
     direction: Direction,
     config: Option<KernelConfig>,
     warm: bool,
+    pool: Option<Arc<WorkerPool>>,
 }
 
 impl PlanBuilder {
@@ -199,6 +235,7 @@ impl PlanBuilder {
             direction: Direction::Forward,
             config: None,
             warm: true,
+            pool: None,
         }
     }
 
@@ -263,6 +300,16 @@ impl PlanBuilder {
         self
     }
 
+    /// Share a persistent [`WorkerPool`] with other plans instead of
+    /// spawning one per plan (the coordinator keys shared pools by thread
+    /// count). The pool must have at least as many workers as the §7
+    /// partition has chunks; ignored by serial plans and non-kernel
+    /// variants.
+    pub fn pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
     /// Solve the §5 plan, validate, and allocate the workspace.
     pub fn build(self) -> Result<RotationPlan> {
         let Some((m, n, k)) = self.shape else {
@@ -298,6 +345,23 @@ impl PlanBuilder {
             self.side
         );
         let workspace = Workspace::for_algo(self.algorithm, &cfg, wm, wn, k, self.warm);
+        // Parallel kernel plans dispatch into a persistent worker pool:
+        // threads are spawned here, once, and every execute afterwards is
+        // a condvar handshake (zero per-call spawn).
+        let pool = if matches!(self.algorithm, Algorithm::Kernel) && cfg.threads > 1 {
+            let pool = self
+                .pool
+                .unwrap_or_else(|| Arc::new(WorkerPool::new(cfg.threads)));
+            ensure!(
+                pool.workers() >= workspace.parts.len(),
+                "shared pool has {} workers but the plan partitions into {} chunks",
+                pool.workers(),
+                workspace.parts.len()
+            );
+            Some(pool)
+        } else {
+            None
+        };
         Ok(RotationPlan {
             shape: (m, n, k),
             algo: self.algorithm,
@@ -306,6 +370,7 @@ impl PlanBuilder {
             cfg,
             bounds,
             workspace,
+            pool,
         })
     }
 }
@@ -321,6 +386,8 @@ pub struct RotationPlan {
     cfg: KernelConfig,
     bounds: Option<BlockPlan>,
     workspace: Workspace,
+    /// Persistent §7 workers (kernel plans with `threads > 1` only).
+    pool: Option<Arc<WorkerPool>>,
 }
 
 impl RotationPlan {
@@ -383,6 +450,110 @@ impl RotationPlan {
         self.run(a, seq, invert)
     }
 
+    /// Apply one sequence set to many same-shaped matrices, in the plan's
+    /// direction — the coordinator's bursty same-shape traffic as a single
+    /// dispatch. On the kernel path the `C`/`S` wave streams are packed
+    /// **once** for the whole batch (the §5.2 reuse argument applied
+    /// across matrices) and, under `threads > 1`, every matrix flows
+    /// through the persistent worker pool with a single join per batch.
+    /// Results are bitwise identical to executing each matrix on its own.
+    pub fn execute_batch(&mut self, mats: &mut [Matrix], seq: &RotationSequence) -> Result<()> {
+        let invert = matches!(self.direction, Direction::Inverse);
+        self.run_batch(mats, seq, invert)
+    }
+
+    /// Batch counterpart of [`Self::execute_inverse`]: undoes
+    /// [`Self::execute_batch`] on every matrix.
+    pub fn execute_batch_inverse(
+        &mut self,
+        mats: &mut [Matrix],
+        seq: &RotationSequence,
+    ) -> Result<()> {
+        let invert = matches!(self.direction, Direction::Forward);
+        self.run_batch(mats, seq, invert)
+    }
+
+    fn run_batch(
+        &mut self,
+        mats: &mut [Matrix],
+        seq: &RotationSequence,
+        invert: bool,
+    ) -> Result<()> {
+        let (m, n, _k) = self.shape;
+        for a in mats.iter() {
+            ensure!(
+                a.rows() == m && a.cols() == n,
+                "batch matrix is {}x{}, plan is for {m}x{n}",
+                a.rows(),
+                a.cols()
+            );
+        }
+        let need_n = match self.side {
+            Side::Right => n,
+            Side::Left => m,
+        };
+        ensure!(
+            seq.n() == need_n,
+            "sequence acts on {} columns, plan needs {need_n} (side {:?})",
+            seq.n(),
+            self.side
+        );
+        if mats.is_empty() || seq.k() == 0 {
+            return Ok(());
+        }
+        if !matches!(self.algo, Algorithm::Kernel) || matches!(self.side, Side::Left) {
+            // Correct-for-every-variant fallback: per-matrix execution.
+            for a in mats.iter_mut() {
+                self.run(a, seq, invert)?;
+            }
+            return Ok(());
+        }
+        if invert {
+            // Same column-mirror conjugation as `run_oriented`, hoisted so
+            // the mirrored C/S copy is built once for the whole batch.
+            let nn = seq.n();
+            let kk = seq.k();
+            let mirrored =
+                RotationSequence::from_fn(nn, kk, |i, p| seq.get(nn - 2 - i, kk - 1 - p));
+            for a in mats.iter_mut() {
+                reverse_columns(a);
+            }
+            let res = self.batch_kernel(mats, &mirrored);
+            for a in mats.iter_mut() {
+                reverse_columns(a);
+            }
+            res
+        } else {
+            self.batch_kernel(mats, seq)
+        }
+    }
+
+    /// The batch fast path: plan the wave streams once, stream every
+    /// matrix through the replay — pooled when the plan has workers,
+    /// serial (one panel at a time) otherwise.
+    fn batch_kernel(&mut self, mats: &mut [Matrix], seq: &RotationSequence) -> Result<()> {
+        let cfg = self.cfg;
+        let ws = &mut self.workspace;
+        if ws.units.is_empty() {
+            // m == 0 under threads > 1: nothing to do.
+            return Ok(());
+        }
+        let sp = ws.seqplan.get_or_insert_with(SeqPlan::new);
+        sp.plan_into(seq, &cfg);
+        if let Some(pool) = &self.pool {
+            ws.views.clear();
+            ws.views.extend(mats.iter_mut().map(MatView::of));
+            let res = pool.run_planned::<Givens>(&ws.views, &ws.parts, &mut ws.units, sp, &cfg);
+            ws.views.clear();
+            res
+        } else {
+            for a in mats.iter_mut() {
+                replay_serial(a, &mut ws.units[0], sp, &cfg)?;
+            }
+            Ok(())
+        }
+    }
+
     fn run(&mut self, a: &mut Matrix, seq: &RotationSequence, invert: bool) -> Result<()> {
         let (m, n, _k) = self.shape;
         ensure!(
@@ -423,8 +594,7 @@ impl RotationPlan {
         }
         let nn = seq.n();
         let kk = seq.k();
-        let mirrored =
-            RotationSequence::from_fn(nn, kk, |i, p| seq.get(nn - 2 - i, kk - 1 - p));
+        let mirrored = RotationSequence::from_fn(nn, kk, |i, p| seq.get(nn - 2 - i, kk - 1 - p));
         reverse_columns(a);
         let res = self.run_forward(a, &mirrored);
         reverse_columns(a);
@@ -451,23 +621,24 @@ impl RotationPlan {
                 crate::gemm::apply_gemm_with(a, seq, cfg.nb.max(cfg.kb), cfg.mb, ws);
             }
             Algorithm::Kernel => {
-                if self.workspace.units.is_empty() {
+                let ws = &mut self.workspace;
+                if ws.units.is_empty() {
                     // m == 0 under threads > 1: nothing to do.
-                } else if self.workspace.parts.is_empty() {
-                    kernel::apply_kernel_with_workspace(
-                        a,
-                        seq,
-                        &cfg,
-                        &mut self.workspace.units[0],
-                    )?;
                 } else {
-                    apply_parallel_with(
-                        a,
-                        seq,
-                        &cfg,
-                        &self.workspace.parts,
-                        &mut self.workspace.units,
-                    )?;
+                    // Pack the wave streams once; replay them over every
+                    // row chunk (pooled) or m_b row panel (serial).
+                    let sp = ws.seqplan.get_or_insert_with(SeqPlan::new);
+                    sp.plan_into(seq, &cfg);
+                    if let Some(pool) = &self.pool {
+                        ws.views.clear();
+                        ws.views.push(MatView::of(a));
+                        let res = pool
+                            .run_planned::<Givens>(&ws.views, &ws.parts, &mut ws.units, sp, &cfg);
+                        ws.views.clear();
+                        res?;
+                    } else {
+                        replay_serial(a, &mut ws.units[0], sp, &cfg)?;
+                    }
                 }
             }
             Algorithm::KernelNoPack => kernel::apply_kernel_unpacked(a, seq, &cfg)?,
@@ -729,6 +900,8 @@ mod tests {
 
     #[test]
     fn parallel_workspace_reuses_too() {
+        // The pool path: no per-call allocation (capacity + pointer
+        // stability) across executes, batches, and inverse executes.
         let (m, n, k) = (64, 20, 4);
         let mut plan = RotationPlan::builder()
             .shape(m, n, k)
@@ -745,6 +918,149 @@ mod tests {
             assert_eq!(plan.workspace().capacity_doubles(), cap0);
             assert_eq!(plan.workspace().packing_ptrs(), ptrs0);
         }
+        let mut batch: Vec<Matrix> = (0..3).map(|i| Matrix::random(m, n, 40 + i)).collect();
+        for seed in 4..7u64 {
+            let seq = RotationSequence::random(n, k, seed);
+            plan.execute_batch(&mut batch, &seq).unwrap();
+            assert_eq!(plan.workspace().capacity_doubles(), cap0);
+            assert_eq!(plan.workspace().packing_ptrs(), ptrs0);
+        }
+        let seq = RotationSequence::random(n, k, 99);
+        plan.execute_inverse(&mut a, &seq).unwrap();
+        assert_eq!(plan.workspace().capacity_doubles(), cap0);
+        assert_eq!(plan.workspace().packing_ptrs(), ptrs0);
+    }
+
+    #[test]
+    fn batch_matches_sequential_bitwise() {
+        let (m, n, k, b) = (45, 22, 6, 5);
+        let seq = RotationSequence::random(n, k, 17);
+        let base: Vec<Matrix> = (0..b).map(|i| Matrix::random(m, n, 60 + i)).collect();
+
+        for threads in [1usize, 4] {
+            // Sequential reference: each matrix through its own execute.
+            let mut seq_plan = RotationPlan::builder()
+                .shape(m, n, k)
+                .config(small_cfg(threads))
+                .build()
+                .unwrap();
+            let mut expected = base.clone();
+            for a in expected.iter_mut() {
+                seq_plan.execute(a, &seq).unwrap();
+            }
+
+            // One batched dispatch must be bitwise identical.
+            let mut batch_plan = RotationPlan::builder()
+                .shape(m, n, k)
+                .config(small_cfg(threads))
+                .build()
+                .unwrap();
+            let mut got = base.clone();
+            batch_plan.execute_batch(&mut got, &seq).unwrap();
+            for (g, e) in got.iter().zip(&expected) {
+                assert_eq!(max_abs_diff(g, e), 0.0, "threads={threads}");
+            }
+
+            // And the batch inverse restores the originals.
+            batch_plan.execute_batch_inverse(&mut got, &seq).unwrap();
+            for (g, o) in got.iter().zip(&base) {
+                assert!(rel_error(g, o) < 1e-12, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_works_for_every_algorithm() {
+        let (m, n, k, b) = (26, 14, 4, 3);
+        let seq = RotationSequence::random(n, k, 23);
+        let base: Vec<Matrix> = (0..b).map(|i| Matrix::random(m, n, 80 + i)).collect();
+        let mut expected = base.clone();
+        for a in expected.iter_mut() {
+            apply_naive(a, &seq);
+        }
+        for &algo in Algorithm::ALL {
+            let mut plan = RotationPlan::builder()
+                .shape(m, n, k)
+                .algorithm(algo)
+                .config(small_cfg(1))
+                .build()
+                .unwrap();
+            let mut got = base.clone();
+            plan.execute_batch(&mut got, &seq).unwrap();
+            let tol = if algo == Algorithm::Gemm { 1e-12 } else { 0.0 };
+            for (g, e) in got.iter().zip(&expected) {
+                assert!(max_abs_diff(g, e) <= tol, "{algo} batch differs from naive");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_rejects_wrong_shapes() {
+        let mut plan = RotationPlan::builder()
+            .shape(10, 8, 2)
+            .config(small_cfg(2))
+            .build()
+            .unwrap();
+        let seq = RotationSequence::random(8, 2, 1);
+        let mut bad = vec![Matrix::random(10, 8, 1), Matrix::random(9, 8, 2)];
+        assert!(plan.execute_batch(&mut bad, &seq).is_err());
+        let mut ok = vec![Matrix::random(10, 8, 3)];
+        assert!(plan.execute_batch(&mut ok, &seq).is_ok());
+    }
+
+    #[test]
+    fn plans_can_share_one_pool() {
+        let pool = std::sync::Arc::new(WorkerPool::new(3));
+        let (m, n, k) = (40, 18, 5);
+        let seq = RotationSequence::random(n, k, 31);
+        let mut expected = Matrix::random(m, n, 32);
+        let a0 = expected.clone();
+        apply_naive(&mut expected, &seq);
+
+        for _ in 0..2 {
+            let mut plan = RotationPlan::builder()
+                .shape(m, n, k)
+                .config(small_cfg(3))
+                .pool(std::sync::Arc::clone(&pool))
+                .build()
+                .unwrap();
+            let mut a = a0.clone();
+            plan.execute(&mut a, &seq).unwrap();
+            assert_eq!(max_abs_diff(&a, &expected), 0.0);
+        }
+
+        // A pool smaller than the partition is rejected at build time.
+        let tiny = std::sync::Arc::new(WorkerPool::new(1));
+        assert!(RotationPlan::builder()
+            .shape(64, 18, 5)
+            .config(small_cfg(4))
+            .pool(tiny)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn parallel_left_side_and_inverse_round_trip() {
+        // The pool path composed with the Side::Left transpose wrap and
+        // the column-mirror inverse conjugation.
+        let (m, n, k) = (24, 40, 6);
+        let seq = RotationSequence::random(m, k, 41);
+        let orig = Matrix::random(m, n, 42);
+        let mut plan = RotationPlan::builder()
+            .shape(m, n, k)
+            .side(Side::Left)
+            .config(small_cfg(3))
+            .build()
+            .unwrap();
+        let mut expected_t = orig.transpose();
+        apply_naive(&mut expected_t, &seq);
+        let expected = expected_t.transpose();
+
+        let mut a = orig.clone();
+        plan.execute(&mut a, &seq).unwrap();
+        assert_eq!(max_abs_diff(&a, &expected), 0.0);
+        plan.execute_inverse(&mut a, &seq).unwrap();
+        assert!(rel_error(&a, &orig) < 1e-12);
     }
 
     #[test]

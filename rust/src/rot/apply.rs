@@ -32,9 +32,9 @@ pub fn apply_rotation(a: &mut Matrix, j: usize, g: Givens) {
 /// slow baseline of Fig 5.
 pub fn apply_naive(a: &mut Matrix, seq: &RotationSequence) {
     assert_eq!(a.cols(), seq.n(), "matrix/sequence column mismatch");
-    let n = seq.n();
+    let rots = seq.n().saturating_sub(1); // degenerate n < 2: no rotations
     for p in 0..seq.k() {
-        for j in 0..n - 1 {
+        for j in 0..rots {
             apply_rotation(a, j, seq.get(j, p));
         }
     }
@@ -44,9 +44,9 @@ pub fn apply_naive(a: &mut Matrix, seq: &RotationSequence) {
 /// order, rotations within each sequence in reverse order, each transposed.
 pub fn apply_inverse_naive(a: &mut Matrix, seq: &RotationSequence) {
     assert_eq!(a.cols(), seq.n(), "matrix/sequence column mismatch");
-    let n = seq.n();
+    let rots = seq.n().saturating_sub(1); // degenerate n < 2: no rotations
     for p in (0..seq.k()).rev() {
-        for j in (0..n - 1).rev() {
+        for j in (0..rots).rev() {
             apply_rotation(a, j, seq.get(j, p).inverse());
         }
     }

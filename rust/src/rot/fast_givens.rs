@@ -63,9 +63,23 @@ const RESCALE_EPS: f64 = 1e-150;
 
 impl FastGivensSequence {
     /// Convert a standard rotation sequence (all columns initially unscaled).
+    ///
+    /// Degenerate inputs (`n < 2` or `k == 0`) hold no rotations and
+    /// convert to an empty sequence with unit scales.
     pub fn from_rotations(seq: &RotationSequence) -> Self {
         let n = seq.n();
         let k = seq.k();
+        if n < 2 {
+            return Self {
+                n,
+                k,
+                type1: Vec::new(),
+                alpha: Matrix::zeros(0, k),
+                beta: Matrix::zeros(0, k),
+                final_scale: vec![1.0; n],
+                rescales: 0,
+            };
+        }
         let mut type1 = vec![false; (n - 1) * k];
         let mut alpha = Matrix::zeros(n - 1, k);
         let mut beta = Matrix::zeros(n - 1, k);
@@ -153,7 +167,7 @@ impl FastGivensSequence {
     /// Flop count when applied to `m` rows: 4 flops per rotation per row,
     /// plus the final `m·n` column scaling.
     pub fn flops(&self, m: usize) -> u64 {
-        4 * m as u64 * (self.n as u64 - 1) * self.k as u64 + (m * self.n) as u64
+        4 * m as u64 * self.n.saturating_sub(1) as u64 * self.k as u64 + (m * self.n) as u64
     }
 }
 
@@ -163,21 +177,24 @@ impl FastGivensSequence {
 pub fn apply_fast_givens(a: &mut Matrix, seq: &FastGivensSequence) {
     assert_eq!(a.cols(), seq.n(), "matrix/sequence column mismatch");
     let n = seq.n();
-    for p in 0..seq.k() {
-        for j in 0..n - 1 {
-            let f = seq.get(j, p);
-            let (x, y) = a.two_cols_mut(j, j + 1);
-            if f.type1 {
-                for (xi, yi) in x.iter_mut().zip(y.iter_mut()) {
-                    let t = *xi + f.beta * *yi;
-                    *yi = f.alpha * *xi + *yi;
-                    *xi = t;
-                }
-            } else {
-                for (xi, yi) in x.iter_mut().zip(y.iter_mut()) {
-                    let t = f.alpha * *xi + *yi;
-                    *yi = -*xi + f.beta * *yi;
-                    *xi = t;
+    // n < 2 holds no rotations; only the final scaling below applies.
+    if n >= 2 {
+        for p in 0..seq.k() {
+            for j in 0..n - 1 {
+                let f = seq.get(j, p);
+                let (x, y) = a.two_cols_mut(j, j + 1);
+                if f.type1 {
+                    for (xi, yi) in x.iter_mut().zip(y.iter_mut()) {
+                        let t = *xi + f.beta * *yi;
+                        *yi = f.alpha * *xi + *yi;
+                        *xi = t;
+                    }
+                } else {
+                    for (xi, yi) in x.iter_mut().zip(y.iter_mut()) {
+                        let t = f.alpha * *xi + *yi;
+                        *yi = -*xi + f.beta * *yi;
+                        *xi = t;
+                    }
                 }
             }
         }
@@ -245,6 +262,38 @@ mod tests {
             assert_eq!(g, 1.0);
         }
         assert_eq!(fast.rescale_events(), 0);
+    }
+
+    #[test]
+    fn degenerate_shapes_convert_and_apply() {
+        // n = 0 used to underflow `n - 1` and panic; n = 1 and k = 0 hold
+        // no rotations either. All three must convert to empty sequences
+        // with unit scales and apply as no-ops.
+        for (n, k) in [(0usize, 0usize), (0, 3), (1, 0), (1, 4), (6, 0)] {
+            let seq = RotationSequence::identity(n, k);
+            // The degenerate sequence's own accessors must not underflow.
+            assert_eq!(seq.len(), n.saturating_sub(1) * k);
+            assert!(seq.is_empty());
+            assert_eq!(seq.flops(10), 0);
+            assert_eq!(seq.inverse().n(), n);
+            let mut b = Matrix::random(3, n, 1);
+            let b0 = b.clone();
+            apply_naive(&mut b, &seq);
+            assert_eq!(b, b0, "naive apply is a no-op for n={n} k={k}");
+
+            let fast = FastGivensSequence::from_rotations(&seq);
+            assert_eq!(fast.n(), n);
+            assert_eq!(fast.k(), k);
+            assert_eq!(fast.final_scales().len(), n);
+            assert!(fast.final_scales().iter().all(|&g| g == 1.0));
+            assert_eq!(fast.rescale_events(), 0);
+            assert_eq!(fast.flops(10), (10 * n) as u64, "n={n} k={k}");
+
+            let mut a = Matrix::random(5, n, 7);
+            let before = a.clone();
+            apply_fast_givens(&mut a, &fast);
+            assert_eq!(a, before, "no-op apply for n={n} k={k}");
+        }
     }
 
     #[test]

@@ -158,9 +158,9 @@ pub trait OpSequence {
     fn get(&self, i: usize, p: usize) -> Self::Op;
 
     /// Useful-flop count when applied to `m` rows (the paper's Gflop/s
-    /// denominator: 6 flops per op per row).
+    /// denominator: 6 flops per op per row; zero for degenerate `n < 2`).
     fn flops(&self, m: usize) -> u64 {
-        6 * m as u64 * (self.n() as u64 - 1) * self.k() as u64
+        6 * m as u64 * self.n().saturating_sub(1) as u64 * self.k() as u64
     }
 }
 

@@ -32,11 +32,13 @@ pub struct RotationSequence {
 }
 
 impl RotationSequence {
-    /// Create an all-identity sequence set.
+    /// Create an all-identity sequence set. `n < 2` is allowed and yields
+    /// a degenerate set holding no rotations (each sequence would have
+    /// `n - 1 = 0` of them) — the empty value for edge-case handling.
     pub fn identity(n: usize, k: usize) -> Self {
-        assert!(n >= 2, "need at least 2 columns");
-        let c = Matrix::from_fn(n - 1, k, |_, _| 1.0);
-        let s = Matrix::zeros(n - 1, k);
+        let rows = n.saturating_sub(1);
+        let c = Matrix::from_fn(rows, k, |_, _| 1.0);
+        let s = Matrix::zeros(rows, k);
         Self { n, k, c, s }
     }
 
@@ -86,12 +88,15 @@ impl RotationSequence {
         Self { n, k, c, s }
     }
 
-    /// Build from a closure returning the rotation at `(i, j)`.
+    /// Build from a closure returning the rotation at `(i, j)`. `n < 2`
+    /// yields a degenerate set holding no rotations (the closure is never
+    /// called).
     pub fn from_fn(n: usize, k: usize, mut f: impl FnMut(usize, usize) -> Givens) -> Self {
-        let mut c = Matrix::zeros(n - 1, k);
-        let mut s = Matrix::zeros(n - 1, k);
+        let rows = n.saturating_sub(1);
+        let mut c = Matrix::zeros(rows, k);
+        let mut s = Matrix::zeros(rows, k);
         for j in 0..k {
-            for i in 0..n - 1 {
+            for i in 0..rows {
                 let g = f(i, j);
                 c.set(i, j, g.c);
                 s.set(i, j, g.s);
@@ -112,9 +117,9 @@ impl RotationSequence {
         self.k
     }
 
-    /// Total number of rotations, `(n-1)·k`.
+    /// Total number of rotations, `(n-1)·k` (zero for degenerate `n < 2`).
     pub fn len(&self) -> usize {
-        (self.n - 1) * self.k
+        self.n.saturating_sub(1) * self.k
     }
 
     pub fn is_empty(&self) -> bool {
@@ -144,7 +149,7 @@ impl RotationSequence {
     /// (4 mul + 2 add per rotation per row). This is the figure-of-merit
     /// denominator used by the paper's Gflop/s plots.
     pub fn flops(&self, m: usize) -> u64 {
-        6 * m as u64 * (self.n as u64 - 1) * self.k as u64
+        6 * m as u64 * self.n.saturating_sub(1) as u64 * self.k as u64
     }
 
     /// The sequence set whose application undoes this one.
@@ -163,7 +168,7 @@ impl RotationSequence {
     pub fn max_defect(&self) -> f64 {
         let mut d: f64 = 0.0;
         for j in 0..self.k {
-            for i in 0..self.n - 1 {
+            for i in 0..self.n.saturating_sub(1) {
                 d = d.max(self.get(i, j).orthogonality_defect());
             }
         }
