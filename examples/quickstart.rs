@@ -26,8 +26,26 @@ fn main() -> anyhow::Result<()> {
     let mut plan = RotationPlan::builder().shape(m, n, k).build()?;
     let cfg = plan.config();
     println!(
-        "planner: m_r={} k_r={} -> n_b={} k_b={} m_b={}\n",
+        "planner: m_r={} k_r={} -> n_b={} k_b={} m_b={}",
         cfg.mr, cfg.kr, cfg.nb, cfg.kb, cfg.mb
+    );
+
+    // `.autotune()` consults the persistent TuneDb (populated by
+    // `rotseq tune`) before falling back to the analytic §5 solve; the
+    // tuned schedule is bitwise-equivalent, just faster. (Status probe
+    // only — unwarmed so no full workspace is allocated for it.)
+    let tuned = RotationPlan::builder()
+        .shape(m, n, k)
+        .autotune()
+        .warm_workspace(false)
+        .build()?;
+    println!(
+        "autotune: {}\n",
+        if tuned.is_tuned() {
+            "using tuned config from the TuneDb"
+        } else {
+            "no TuneDb entry for this shape — analytic §5 config (run `rotseq tune`)"
+        }
     );
 
     // Execute many: same plan, fresh rotations every sweep — the hot loop

@@ -26,7 +26,7 @@ fn main() {
             },
         )
     };
-    let rows = fig5_serial(&ns, k, &mc, 1);
+    let rows = fig5_serial(&ns, k, &mc, 1, None);
     print_fig5(&rows, 1);
 
     // Shape assertions at the largest n.

@@ -18,7 +18,7 @@ fn main() {
         (vec![480, 960], 180, MeasureConfig::quick())
     };
     let threads = [1, 2, 4, 8, 16, 28];
-    let rows = fig7_parallel(&ns, k, &threads, &mc);
+    let rows = fig7_parallel(&ns, k, &threads, &mc, None);
     print_fig7(&rows);
 
     // The paper-machine models, reported like the two panels of Fig 7.

@@ -39,7 +39,7 @@ fn main() {
     let blocked = rate("rs_blocked");
 
     // Rotation-kernel rate at the same size for the §8.4 comparison.
-    let rot_rows = fig5_serial(&[n_max], k, &MeasureConfig::quick());
+    let rot_rows = fig5_serial(&[n_max], k, &MeasureConfig::quick(), 1, None);
     let rot_kernel = rot_rows
         .iter()
         .find(|r| r.algo == "rs_kernel_v2")

@@ -3,6 +3,7 @@
 
 use super::measure::{measure, MeasureConfig};
 use crate::blocking::{plan, CacheParams};
+use crate::jsonio::{num, obj, s, unum, Json};
 use crate::kernel::{apply_blocked, apply_fused, apply_kernel_packed, Algorithm, BlockConfig};
 use crate::matrix::Matrix;
 use crate::pack::PackedMatrix;
@@ -13,6 +14,7 @@ use crate::rot::{
     apply_naive, apply_reflector_sequence_naive, OpSequence, ReflectorSequence, RotationSequence,
 };
 use crate::simulator::{iolb, simulate_algorithm, HierarchySpec};
+use crate::tune::TuneDb;
 
 /// One point of Fig 5: serial flop rate of a variant at one size.
 #[derive(Clone, Debug)]
@@ -35,8 +37,17 @@ fn gflops_of(flops: u64, m: &super::Measurement) -> f64 {
 /// Returns rows grouped per `n`. `threads = 1` reproduces the paper's
 /// serial figure; `threads > 1` routes the `rs_kernel` series through the
 /// persistent worker pool (plan-once, pooled execute-many — the CI smoke
-/// path for the §7 subsystem).
-pub fn fig5_serial(ns: &[usize], k: usize, mc: &MeasureConfig, threads: usize) -> Vec<Fig5Row> {
+/// path for the §7 subsystem). With `tuned` set, an `rs_kernel_tuned`
+/// series runs the TuneDb config for each shape that has a record (a
+/// miss omits the series and prints a note — a key mismatch must be
+/// visible), so the BENCH output tracks analytic-vs-tuned over time.
+pub fn fig5_serial(
+    ns: &[usize],
+    k: usize,
+    mc: &MeasureConfig,
+    threads: usize,
+    tuned: Option<&TuneDb>,
+) -> Vec<Fig5Row> {
     let mut rows = Vec::new();
     let cache = CacheParams::detect();
     let cfg = plan(16, 2, cache, threads.max(1));
@@ -92,6 +103,30 @@ pub fn fig5_serial(ns: &[usize], k: usize, mc: &MeasureConfig, threads: usize) -
         let meas = measure(mc, |_| apply_kernel_packed(&mut pm, &seq, &cfg).unwrap());
         let v2_time = meas.median_s;
         results.push(("rs_kernel_v2", gflops_of(flops, &meas)));
+
+        // rs_kernel_tuned: the TuneDb winner for this shape class. On a
+        // DB miss the series is omitted (like fig7's '-') — silently
+        // re-measuring the analytic config would make a tune/bench key
+        // mismatch invisible in the BENCH artifact.
+        if let Some(db) = tuned {
+            match crate::tune::lookup(db, cache, m, n, k, threads.max(1)) {
+                Some(cfg_t) => {
+                    let mut a = base.clone();
+                    let mut tuned_plan = RotationPlan::builder()
+                        .shape(m, n, k)
+                        .config(cfg_t)
+                        .build()
+                        .expect("tuned kernel plan");
+                    let meas = measure(mc, |_| tuned_plan.execute(&mut a, &seq).unwrap());
+                    results.push(("rs_kernel_tuned", gflops_of(flops, &meas)));
+                }
+                None => eprintln!(
+                    "# rs_kernel_tuned: no TuneDb record for n={n} threads={} — series omitted \
+                     (run `rotseq tune`)",
+                    threads.max(1)
+                ),
+            }
+        }
 
         for (algo, gflops) in results {
             let rel = (flops as f64 / gflops / 1e9) / v2_time;
@@ -187,6 +222,10 @@ pub struct Fig7Row {
     pub threads: usize,
     /// Measured on this container (1 physical core: expect flat).
     pub measured_gflops: f64,
+    /// The `rs_kernel_tuned` series: measured with the TuneDb config for
+    /// this (shape class, threads). `None` when no DB was passed or it
+    /// has no record for the key.
+    pub tuned_gflops: Option<f64>,
     /// Modeled on the calibrated multicore machine.
     pub modeled_gflops: f64,
     pub modeled_speedup: f64,
@@ -195,12 +234,14 @@ pub struct Fig7Row {
 /// Fig 7: parallel flop rate and speedup. Measures the real scheduler at
 /// each thread count (correctness + 1-core baseline) and reports the
 /// calibrated analytical model for the multicore shape (see DESIGN.md
-/// §Substitutions).
+/// §Substitutions). With `tuned` set, each point also measures the TuneDb
+/// config for its (shape class, threads) key as `rs_kernel_tuned`.
 pub fn fig7_parallel(
     ns: &[usize],
     k: usize,
     threads: &[usize],
     mc: &MeasureConfig,
+    tuned: Option<&TuneDb>,
 ) -> Vec<Fig7Row> {
     let cache = CacheParams::detect();
     let cfg1 = plan(16, 2, cache, 1);
@@ -224,10 +265,22 @@ pub fn fig7_parallel(
             let parts = partition_rows(m, t, cfg.mr);
             let mut pm = PackedMatrix::from_partition(&base, &parts, cfg.mr);
             let meas = measure(mc, |_| apply_parallel_packed(&mut pm, &seq, &cfg).unwrap());
+            // Tuned series: only when the DB actually has this key (a
+            // fallback would just duplicate the measured series).
+            let tuned_gflops = tuned
+                .and_then(|db| crate::tune::lookup(db, cache, m, n, k, t))
+                .map(|cfg_t| {
+                    let parts = partition_rows(m, t, cfg_t.mr);
+                    let mut pm = PackedMatrix::from_partition(&base, &parts, cfg_t.mr);
+                    let meas =
+                        measure(mc, |_| apply_parallel_packed(&mut pm, &seq, &cfg_t).unwrap());
+                    gflops_of(flops, &meas)
+                });
             rows.push(Fig7Row {
                 n,
                 threads: t,
                 measured_gflops: gflops_of(flops, &meas),
+                tuned_gflops,
                 modeled_gflops: modeled_gflops(&model, m, n, k, t),
                 modeled_speedup: modeled_speedup(&model, m, n, k, t),
             });
@@ -239,13 +292,17 @@ pub fn fig7_parallel(
 pub fn print_fig7(rows: &[Fig7Row]) {
     println!("# Fig 7 — parallel scaling (measured on this container + calibrated model)");
     println!(
-        "{:>6} {:>8} {:>14} {:>14} {:>14}",
-        "n", "threads", "meas Gflop/s", "model Gflop/s", "model speedup"
+        "{:>6} {:>8} {:>14} {:>14} {:>14} {:>14}",
+        "n", "threads", "meas Gflop/s", "tuned Gflop/s", "model Gflop/s", "model speedup"
     );
     for r in rows {
+        let tuned = r
+            .tuned_gflops
+            .map(|g| format!("{g:.3}"))
+            .unwrap_or_else(|| "-".into());
         println!(
-            "{:>6} {:>8} {:>14.3} {:>14.3} {:>14.2}",
-            r.n, r.threads, r.measured_gflops, r.modeled_gflops, r.modeled_speedup
+            "{:>6} {:>8} {:>14.3} {:>14} {:>14.3} {:>14.2}",
+            r.n, r.threads, r.measured_gflops, tuned, r.modeled_gflops, r.modeled_speedup
         );
     }
 }
@@ -420,13 +477,54 @@ pub fn print_io_table(rows: &[IoRow], s_doubles: usize) {
     }
 }
 
+/// Machine-readable Fig 5 output (the BENCH json CI uploads: the
+/// `rs_kernel_tuned` series next to the analytic ones is the perf
+/// trajectory of the autotuner).
+pub fn fig5_json(rows: &[Fig5Row], threads: usize) -> String {
+    let items: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("algo", s(r.algo)),
+                ("n", unum(r.n)),
+                ("gflops", num(r.gflops)),
+                ("rel_runtime", num(r.rel_runtime)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("figure", s("fig5")),
+        ("threads", unum(threads)),
+        ("rows", Json::Arr(items)),
+    ])
+    .to_json_pretty()
+}
+
+/// Machine-readable Fig 7 output.
+pub fn fig7_json(rows: &[Fig7Row]) -> String {
+    let items: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("n", unum(r.n)),
+                ("threads", unum(r.threads)),
+                ("measured_gflops", num(r.measured_gflops)),
+                ("tuned_gflops", r.tuned_gflops.map_or(Json::Null, Json::Num)),
+                ("modeled_gflops", num(r.modeled_gflops)),
+                ("modeled_speedup", num(r.modeled_speedup)),
+            ])
+        })
+        .collect();
+    obj(vec![("figure", s("fig7")), ("rows", Json::Arr(items))]).to_json_pretty()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn fig5_small_smoke() {
-        let rows = fig5_serial(&[64], 8, &MeasureConfig::quick(), 1);
+        let rows = fig5_serial(&[64], 8, &MeasureConfig::quick(), 1, None);
         assert_eq!(rows.len(), 6);
         assert!(rows.iter().all(|r| r.gflops > 0.0));
         // kernel_v2's relative runtime is 1 by construction
@@ -437,9 +535,46 @@ mod tests {
     #[test]
     fn fig5_pooled_smoke() {
         // The --threads path: rs_kernel runs through the worker pool.
-        let rows = fig5_serial(&[64], 8, &MeasureConfig::quick(), 3);
+        let rows = fig5_serial(&[64], 8, &MeasureConfig::quick(), 3, None);
         assert_eq!(rows.len(), 6);
         assert!(rows.iter().all(|r| r.gflops > 0.0));
+    }
+
+    #[test]
+    fn fig5_tuned_series_and_json() {
+        use crate::blocking::{plan, CacheParams};
+        use crate::tune::{tune_key, TunedRecord};
+        // Empty DB: the tuned series is omitted (a miss must be visible,
+        // not silently re-measure the analytic config).
+        let db = TuneDb::in_memory();
+        let rows = fig5_serial(&[64], 8, &MeasureConfig::quick(), 1, Some(&db));
+        assert_eq!(rows.len(), 6);
+        assert!(!rows.iter().any(|r| r.algo == "rs_kernel_tuned"));
+
+        // With a record for this machine + shape class, the series runs.
+        let cache = CacheParams::detect();
+        db.put(
+            tune_key(cache, 64, 64, 8, 1),
+            TunedRecord {
+                config: plan(16, 2, cache, 1),
+                gflops: 1.0,
+                analytic_gflops: 1.0,
+                sim_traffic_bytes: 0,
+            },
+        );
+        let rows = fig5_serial(&[64], 8, &MeasureConfig::quick(), 1, Some(&db));
+        assert_eq!(rows.len(), 7);
+        let tuned = rows.iter().find(|r| r.algo == "rs_kernel_tuned").unwrap();
+        assert!(tuned.gflops > 0.0);
+        let json = fig5_json(&rows, 1);
+        let parsed = crate::jsonio::Json::parse(&json).unwrap();
+        assert_eq!(
+            parsed
+                .get("rows")
+                .and_then(crate::jsonio::Json::as_arr)
+                .map(<[crate::jsonio::Json]>::len),
+            Some(7)
+        );
     }
 
     #[test]
@@ -451,9 +586,13 @@ mod tests {
 
     #[test]
     fn fig7_small_smoke() {
-        let rows = fig7_parallel(&[64], 6, &[1, 2], &MeasureConfig::quick());
+        let rows = fig7_parallel(&[64], 6, &[1, 2], &MeasureConfig::quick(), None);
         assert_eq!(rows.len(), 2);
         assert!(rows[1].modeled_speedup >= 1.0);
+        assert!(rows.iter().all(|r| r.tuned_gflops.is_none()));
+        // The JSON dump parses back (tuned is null without a DB).
+        let parsed = crate::jsonio::Json::parse(&fig7_json(&rows)).unwrap();
+        assert_eq!(parsed.get("figure").and_then(crate::jsonio::Json::as_str), Some("fig7"));
     }
 
     #[test]

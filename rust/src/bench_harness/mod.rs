@@ -10,8 +10,9 @@ mod figures;
 mod measure;
 
 pub use figures::{
-    fig5_serial, fig6_kernel_sizes, fig7_parallel, fig8_reflectors, io_table, print_fig5,
-    print_fig6, print_fig7, print_fig8, print_io_table, Fig5Row, Fig6Row, Fig7Row, Fig8Row, IoRow,
+    fig5_json, fig5_serial, fig6_kernel_sizes, fig7_json, fig7_parallel, fig8_reflectors,
+    io_table, print_fig5, print_fig6, print_fig7, print_fig8, print_io_table, Fig5Row, Fig6Row,
+    Fig7Row, Fig8Row, IoRow,
 };
 pub use measure::{measure, measure_flops, MeasureConfig, Measurement};
 

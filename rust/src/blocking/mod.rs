@@ -16,7 +16,12 @@
 
 mod planner;
 
-pub use planner::{plan, plan_bounds as plan_bounds_for, plan_for_paper_machine, BlockPlan};
+pub use planner::{
+    plan, plan_bounds as plan_bounds_for, plan_for_paper_machine, try_plan, BlockPlan,
+};
+pub(crate) use planner::{
+    mb_headroomed, round_down_capped, solve_cache_for, solve_kb_bound, solve_mb_bound,
+};
 
 use anyhow::{bail, Result};
 
@@ -43,23 +48,253 @@ impl CacheParams {
     /// Read L1d/L2/L3 sizes from sysfs, falling back to
     /// [`Self::PAPER_MACHINE`] when unavailable (containers often hide
     /// cache topology).
+    ///
+    /// Caches are selected by their reported `level` + `type` (Data or
+    /// Unified — never Instruction), not by sysfs index position, since
+    /// the index assignment varies across vendors. Sizes with `K`/`M`
+    /// suffixes and raw byte counts are all accepted. A cluster-shared
+    /// L2 is divided by the number of *physical cores* on its
+    /// `shared_cpu_list` (logical width over the L1d's SMT sibling
+    /// count). L3 is reported whole: the §5 planner applies the paper's
+    /// shared-L3 `m_b` headroom, and threaded plans additionally solve
+    /// against a per-worker L3 share — so threaded plans never assume
+    /// the whole L3 per core, without stacking discounts.
     pub fn detect() -> CacheParams {
-        fn read_kb(path: &str) -> Option<usize> {
-            let s = std::fs::read_to_string(path).ok()?;
-            let s = s.trim();
-            let kb = s.strip_suffix('K')?.parse::<usize>().ok()?;
-            Some(kb * 1024 / 8)
-        }
-        let base = "/sys/devices/system/cpu/cpu0/cache";
-        let t1 = read_kb(&format!("{base}/index0/size"));
-        let t2 = read_kb(&format!("{base}/index2/size"));
-        let t3 = read_kb(&format!("{base}/index3/size"));
-        match (t1, t2, t3) {
-            (Some(t1), Some(t2), Some(t3)) if t1 > 0 && t2 > t1 && t3 > t2 => {
-                CacheParams { t1, t2, t3 }
+        Self::detect_from(std::path::Path::new("/sys/devices/system/cpu/cpu0/cache"))
+            .unwrap_or(CacheParams::PAPER_MACHINE)
+    }
+
+    /// [`Self::detect`] against an arbitrary sysfs-shaped directory (the
+    /// seam the detection tests use). Returns `None` when the topology is
+    /// missing or inconsistent; [`Self::detect`] maps that to the paper
+    /// machine.
+    pub fn detect_from(base: &std::path::Path) -> Option<CacheParams> {
+        let read = |idx: usize, file: &str| -> Option<String> {
+            let s = std::fs::read_to_string(base.join(format!("index{idx}")).join(file)).ok()?;
+            Some(s.trim().to_string())
+        };
+        // Per-level (capacity in doubles, shared_cpu_list width); keep
+        // the smallest capacity per level (a Data and a Unified cache at
+        // the same level is unusual, but the conservative choice is the
+        // smaller).
+        let mut levels: [Option<(usize, usize)>; 4] = [None; 4];
+        for idx in 0..16 {
+            let Some(level) = read(idx, "level").and_then(|s| s.parse::<usize>().ok()) else {
+                // Sysfs indices are contiguous: the first absent one ends
+                // the scan (index 0 absent => no topology at all).
+                break;
+            };
+            if !(1..=3).contains(&level) {
+                continue;
             }
-            _ => CacheParams::PAPER_MACHINE,
+            let Some(ty) = read(idx, "type") else {
+                continue;
+            };
+            if !matches!(ty.as_str(), "Data" | "Unified") {
+                continue; // Instruction caches never hold the matrix.
+            }
+            let Some(doubles) = read(idx, "size").and_then(|s| parse_cache_size_doubles(&s))
+            else {
+                continue;
+            };
+            let width = read(idx, "shared_cpu_list")
+                .map(|s| cpu_list_width(&s))
+                .filter(|&w| w > 0)
+                .unwrap_or(1);
+            levels[level] = Some(match levels[level] {
+                Some((prev, pw)) if prev <= doubles => (prev, pw),
+                _ => (doubles, width),
+            });
         }
+        let ((t1, l1_width), (l2_raw, l2_width)) = (levels[1]?, levels[2]?);
+        // A cluster-shared L2 (e.g. E-core designs: one L2 across several
+        // cores) is split across the *physical cores* on its
+        // shared_cpu_list: the L1d width is the SMT sibling count (L1d is
+        // private per core, shared between hyperthreads), so
+        // l2_width / l1_width is the number of cores contending for it —
+        // dividing by the raw logical-CPU width would halve the share on
+        // every SMT machine. On ordinary private-L2 parts the ratio is 1
+        // and nothing changes. L3 deliberately stays *whole*: the §5.3
+        // `m_b` headroom in the planner already discounts ambient L3
+        // sharing, and threaded plans additionally solve Eq 5.6 against a
+        // per-worker share (see `blocking::planner::solve_cache_for`) —
+        // dividing here as well would stack three discounts.
+        let l2_cores = (l2_width / l1_width.max(1)).max(1);
+        let t2 = l2_raw / l2_cores;
+        let t3 = match levels[3] {
+            None => t2, // two-level parts: L2 is the last level
+            Some((raw, _)) => raw.max(t2),
+        };
+        if t1 > 0 && t2 > t1 {
+            Some(CacheParams { t1, t2, t3 })
+        } else {
+            None
+        }
+    }
+}
+
+/// Parse a sysfs cache `size` string into **doubles**: `32K`, `1M`, or a
+/// raw byte count (suffixes are case-insensitive; `B` is tolerated).
+fn parse_cache_size_doubles(s: &str) -> Option<usize> {
+    let s = s.trim().trim_end_matches(['B', 'b']);
+    let (digits, mult) = match s.as_bytes().last()? {
+        b'K' | b'k' => (&s[..s.len() - 1], 1024usize),
+        b'M' | b'm' => (&s[..s.len() - 1], 1024 * 1024),
+        b'G' | b'g' => (&s[..s.len() - 1], 1024 * 1024 * 1024),
+        _ => (s, 1),
+    };
+    let n = digits.trim().parse::<usize>().ok()?;
+    Some(n.checked_mul(mult)? / 8)
+}
+
+/// Number of CPUs named by a sysfs `shared_cpu_list` (`0-3,8,10-11` → 7).
+fn cpu_list_width(list: &str) -> usize {
+    list.split(',')
+        .filter(|part| !part.trim().is_empty())
+        .map(|part| {
+            let part = part.trim();
+            match part.split_once('-') {
+                Some((lo, hi)) => {
+                    let lo = lo.trim().parse::<usize>().unwrap_or(0);
+                    let hi = hi.trim().parse::<usize>().unwrap_or(lo);
+                    hi.saturating_sub(lo) + 1
+                }
+                None => 1,
+            }
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+    use std::path::PathBuf;
+
+    /// Build a fake sysfs cache tree: one `indexN/` dir per entry of
+    /// `(level, type, size, shared_cpu_list)`.
+    fn fake_sysfs(name: &str, caches: &[(&str, &str, &str, &str)]) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "rotseq-cache-detect-{name}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        for (idx, (level, ty, size, shared)) in caches.iter().enumerate() {
+            let d = dir.join(format!("index{idx}"));
+            fs::create_dir_all(&d).unwrap();
+            fs::write(d.join("level"), level).unwrap();
+            fs::write(d.join("type"), ty).unwrap();
+            fs::write(d.join("size"), size).unwrap();
+            fs::write(d.join("shared_cpu_list"), shared).unwrap();
+        }
+        dir
+    }
+
+    #[test]
+    fn detect_selects_by_level_and_type_not_index() {
+        // Index order deliberately scrambled: L1i first (must be skipped),
+        // then L3, L1d, L2 — the old index0/2/3 scheme reads garbage here.
+        let dir = fake_sysfs(
+            "scrambled",
+            &[
+                ("1", "Instruction", "32K", "0-1"),
+                ("3", "Unified", "16M", "0-7"),
+                ("1", "Data", "48K", "0-1"),
+                ("2", "Unified", "1M", "0-1"),
+            ],
+        );
+        let c = CacheParams::detect_from(&dir).unwrap();
+        assert_eq!(c.t1, 48 * 1024 / 8);
+        assert_eq!(c.t2, 1024 * 1024 / 8);
+        // L3 reported whole; the planner handles sharing (headroom +
+        // per-worker solve), so detection must not pre-discount it.
+        assert_eq!(c.t3, 16 * 1024 * 1024 / 8);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn detect_accepts_m_and_byte_sizes() {
+        let dir = fake_sysfs(
+            "sizes",
+            &[
+                ("1", "Data", "32768", "0"),
+                ("1", "Instruction", "32K", "0"),
+                ("2", "Unified", "2M", "0"),
+                ("3", "Unified", "8388608", "0-3"),
+            ],
+        );
+        let c = CacheParams::detect_from(&dir).unwrap();
+        assert_eq!(c.t1, 32768 / 8);
+        assert_eq!(c.t2, 2 * 1024 * 1024 / 8);
+        assert_eq!(c.t3, 8388608 / 8);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn detect_divides_cluster_shared_l2_per_core() {
+        // E-core-style cluster: 4 single-thread cores share one 2MB L2.
+        // Each core must plan with 512K of L2, not the whole array; L3
+        // stays whole (the planner discounts sharing, not detection).
+        let dir = fake_sysfs(
+            "cluster",
+            &[
+                ("1", "Data", "32K", "0"),
+                ("2", "Unified", "2M", "0-3"),
+                ("3", "Unified", "8M", "0-7"),
+            ],
+        );
+        let c = CacheParams::detect_from(&dir).unwrap();
+        assert_eq!(c.t1, 32 * 1024 / 8);
+        assert_eq!(c.t2, 2 * 1024 * 1024 / 4 / 8);
+        assert_eq!(c.t3, 8 * 1024 * 1024 / 8);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn detect_without_l3_uses_l2_as_last_level() {
+        let dir = fake_sysfs(
+            "no-l3",
+            &[("1", "Data", "64K", "0"), ("2", "Unified", "512K", "0")],
+        );
+        let c = CacheParams::detect_from(&dir).unwrap();
+        assert_eq!(c.t2, 512 * 1024 / 8);
+        assert_eq!(c.t3, c.t2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn detect_missing_or_inconsistent_topology_is_none() {
+        let empty = std::env::temp_dir().join(format!(
+            "rotseq-cache-detect-empty-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&empty);
+        fs::create_dir_all(&empty).unwrap();
+        assert!(CacheParams::detect_from(&empty).is_none());
+        let _ = fs::remove_dir_all(&empty);
+
+        // L2 not larger than L1: inconsistent, reject.
+        let dir = fake_sysfs(
+            "inconsistent",
+            &[("1", "Data", "64K", "0"), ("2", "Unified", "64K", "0")],
+        );
+        assert!(CacheParams::detect_from(&dir).is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn size_and_cpu_list_parsers() {
+        assert_eq!(parse_cache_size_doubles("32K"), Some(4096));
+        assert_eq!(parse_cache_size_doubles("32k"), Some(4096));
+        assert_eq!(parse_cache_size_doubles("1M"), Some(131072));
+        assert_eq!(parse_cache_size_doubles("4096"), Some(512));
+        assert_eq!(parse_cache_size_doubles("1G"), Some(134217728));
+        assert_eq!(parse_cache_size_doubles("32KB"), Some(4096));
+        assert_eq!(parse_cache_size_doubles("junk"), None);
+        assert_eq!(cpu_list_width("0"), 1);
+        assert_eq!(cpu_list_width("0-3"), 4);
+        assert_eq!(cpu_list_width("0-3,8,10-11"), 7);
+        assert_eq!(cpu_list_width(""), 0);
     }
 }
 
@@ -100,6 +335,46 @@ impl KernelConfig {
         }
         if self.threads == 0 {
             bail!("thread count must be positive");
+        }
+        Ok(())
+    }
+
+    /// Validate the §5 cache-fit inequalities (Eq 5.1–5.6) on top of
+    /// [`Self::validate`]: the kernel block plus the wave stream fit in L1
+    /// (Eq 5.2), the k-block's working set fits in L2 (Eq 5.4), and the
+    /// row panel fits in (the per-core share of) L3 (Eq 5.6). A config
+    /// that passes [`Self::validate`] but not this is *correct* but
+    /// defeats the paper's communication analysis — the planner and the
+    /// autotuner never emit one.
+    pub fn validate_bounds(&self, cache: CacheParams) -> Result<()> {
+        self.validate()?;
+        let (mr, kr, mb, kb, nb) = (self.mr, self.kr, self.mb, self.kb, self.nb);
+        // Saturating: a config absurd enough to overflow is certainly
+        // over every bound.
+        let l1_set = mr
+            .saturating_mul(nb.saturating_add(kr))
+            .saturating_add(2usize.saturating_mul(nb).saturating_mul(kr));
+        if l1_set > cache.t1 {
+            bail!(
+                "Eq 5.2 violated: m_r(n_b + k_r) + 2 n_b k_r = {l1_set} > T1 = {} ({self:?})",
+                cache.t1
+            );
+        }
+        let l2_set = mr
+            .saturating_mul(nb.saturating_add(kb))
+            .saturating_add(2usize.saturating_mul(nb).saturating_mul(kb));
+        if l2_set > cache.t2 {
+            bail!(
+                "Eq 5.4 violated: m_r(n_b + k_b) + 2 n_b k_b = {l2_set} > T2 = {} ({self:?})",
+                cache.t2
+            );
+        }
+        let l3_set = mb.saturating_mul(nb.saturating_add(kb));
+        if l3_set > cache.t3 {
+            bail!(
+                "Eq 5.6 violated: m_b(n_b + k_b) = {l3_set} > T3 = {} ({self:?})",
+                cache.t3
+            );
         }
         Ok(())
     }

@@ -1,6 +1,7 @@
 //! The Eq 5.1–5.6 solver.
 
 use super::{CacheParams, KernelConfig};
+use anyhow::{bail, Result};
 
 /// The raw bounds computed by the §5 equations, before rounding.
 #[derive(Clone, Copy, Debug)]
@@ -17,25 +18,85 @@ pub struct BlockPlan {
     pub mb: usize,
 }
 
+impl BlockPlan {
+    /// Whether the solve produced usable block sizes. Infeasible means the
+    /// caches are too small for this kernel (e.g. Eq 5.2 leaves no room
+    /// for even one wave): the caller must shrink the kernel or give up —
+    /// the chosen values are *never* inflated past the bounds they solved.
+    pub fn feasible(&self) -> bool {
+        self.nb >= 1 && self.kb >= 1 && self.mb >= 1
+    }
+}
+
+/// Round `x` down to a multiple of `multiple`, but never below `multiple`
+/// unless `x` itself is smaller — in that case return `x` unrounded (the
+/// bound is authoritative; alignment is only a performance nicety).
+/// Shared with the autotuner's candidate generator.
+pub(crate) fn round_down_capped(x: usize, multiple: usize) -> usize {
+    let r = round_down(x, multiple);
+    if r >= multiple {
+        r
+    } else {
+        x
+    }
+}
+
+/// Eq 5.4 solved for `k_b` at a given `n_b`:
+/// `m_r(n_b + k_b) + 2 n_b k_b <= T2`. Zero means infeasible.
+pub(crate) fn solve_kb_bound(mr: usize, nb: usize, cache: CacheParams) -> usize {
+    if nb == 0 {
+        0
+    } else {
+        cache.t2.saturating_sub(mr * nb) / (mr + 2 * nb)
+    }
+}
+
+/// Eq 5.6 solved for `m_b` at given `n_b`, `k_b`:
+/// `m_b(n_b + k_b) <= T3`. Zero means infeasible.
+pub(crate) fn solve_mb_bound(nb: usize, kb: usize, cache: CacheParams) -> usize {
+    if nb + kb == 0 {
+        0
+    } else {
+        cache.t3 / (nb + kb)
+    }
+}
+
+/// The paper's shared-L3 headroom on `m_b` (§5.3: 4800 over 16231),
+/// rounded to the kernel quantum; falls back to the full (capped) bound
+/// when the headroomed value rounds to nothing. Never exceeds `mb_bound`.
+pub(crate) fn mb_headroomed(mb_bound: usize, mr: usize) -> usize {
+    let h = round_down(mb_bound * 4800 / 16231, mr);
+    if h >= mr {
+        h
+    } else {
+        round_down_capped(mb_bound, mr)
+    }
+}
+
 /// Solve the §5 equations for a kernel of size `(m_r, k_r)` on caches
 /// `cache`, then round down: `n_b` to a multiple of 8, `k_b` to a multiple
-/// of `k_r`, `m_b` to a multiple of `m_r`. `m_b` is additionally capped
-/// (the paper picks 4800 ≪ 16231 because L3 is shared; we apply the same
-/// ~3.4x headroom factor).
+/// of `k_r`, `m_b` to a multiple of `m_r` — rounding never exceeds the
+/// bound it started from, and when a bound is smaller than the rounding
+/// quantum the unrounded bound is used instead (correct, if unaligned).
+/// If a bound is zero the plan is infeasible ([`BlockPlan::feasible`])
+/// and the chosen value is 0; nothing is clamped upward, so a returned
+/// plan either satisfies Eq 5.2/5.4/5.6 exactly or reports infeasibility.
+/// `m_b` is additionally capped (the paper picks 4800 ≪ 16231 because L3
+/// is shared; we apply the same ~3.4x headroom factor).
 pub fn plan_bounds(mr: usize, kr: usize, cache: CacheParams) -> BlockPlan {
     assert!(mr >= 1 && kr >= 1);
     // Eq 5.2: m_r(n_b + k_r) + 2 n_b k_r <= T1
     let nb_bound = cache.t1.saturating_sub(mr * kr) / (mr + 2 * kr);
-    let nb = round_down(nb_bound, 8).max(kr.max(8));
+    let nb = round_down_capped(nb_bound, 8);
 
     // Eq 5.4: m_r(n_b + k_b) + 2 n_b k_b <= T2
-    let kb_bound = cache.t2.saturating_sub(mr * nb) / (mr + 2 * nb);
-    let kb = round_down(kb_bound, kr).max(kr);
+    let kb_bound = solve_kb_bound(mr, nb, cache);
+    let kb = round_down_capped(kb_bound, kr);
 
-    // Eq 5.6: m_b (n_b + k_b) <= T3
-    let mb_bound = cache.t3 / (nb + kb);
-    // Shared-L3 headroom (§5.3: the paper picks 4800 over 16231).
-    let mb = round_down((mb_bound * 4800 / 16231).max(mr), mr).max(mr);
+    // Eq 5.6: m_b (n_b + k_b) <= T3, taken with the paper's shared-L3
+    // headroom (§5.3: 4800 over 16231) — never above the bound itself.
+    let mb_bound = solve_mb_bound(nb, kb, cache);
+    let mb = mb_headroomed(mb_bound, mr);
 
     BlockPlan {
         nb_bound,
@@ -47,15 +108,80 @@ pub fn plan_bounds(mr: usize, kr: usize, cache: CacheParams) -> BlockPlan {
     }
 }
 
-/// Plan a full [`KernelConfig`] for the given kernel size and caches.
-pub fn plan(mr: usize, kr: usize, cache: CacheParams, threads: usize) -> KernelConfig {
+/// The cache budget a `threads`-way plan actually solves against: each
+/// §7 worker streams its own row panel, so Eq 5.6 gets a per-worker
+/// share of L3 (clamped to stay ≥ T2). Serial plans keep the whole
+/// cache — the §5.3 `m_b` headroom already discounts ambient sharing,
+/// and stacking a per-core division on top of it would double-discount
+/// (the bug class this helper exists to avoid).
+pub(crate) fn solve_cache_for(cache: CacheParams, threads: usize) -> CacheParams {
+    CacheParams {
+        t3: (cache.t3 / threads.max(1)).max(cache.t2),
+        ..cache
+    }
+}
+
+/// Plan a full [`KernelConfig`] for exactly the given kernel size, or
+/// report infeasibility when the caches cannot hold even one wave of it
+/// (Eq 5.2/5.4/5.6 leave a bound at zero). Threaded plans solve against
+/// a per-worker L3 share ([`solve_cache_for`]).
+pub fn try_plan(mr: usize, kr: usize, cache: CacheParams, threads: usize) -> Result<KernelConfig> {
+    let cache = solve_cache_for(cache, threads);
     let b = plan_bounds(mr, kr, cache);
-    KernelConfig {
+    if !b.feasible() {
+        bail!(
+            "kernel m_r={mr}, k_r={kr} is infeasible for caches {cache:?}: \
+             bounds n_b<={}, k_b<={}, m_b<={}",
+            b.nb_bound,
+            b.kb_bound,
+            b.mb_bound
+        );
+    }
+    let cfg = KernelConfig {
         mr,
         kr,
         mb: b.mb,
         kb: b.kb,
         nb: b.nb,
+        threads: threads.max(1),
+    };
+    cfg.validate_bounds(cache)?;
+    Ok(cfg)
+}
+
+/// Plan a full [`KernelConfig`] for the given kernel size and caches.
+///
+/// When the requested kernel does not fit the caches (tiny `t1`/`t2`),
+/// the kernel is *shrunk* through the supported sizes — never the block
+/// sizes inflated past their bounds — so the returned config always
+/// satisfies Eq 5.1–5.6 ([`KernelConfig::validate_bounds`]). Callers that
+/// need the exact requested kernel or an error should use [`try_plan`].
+pub fn plan(mr: usize, kr: usize, cache: CacheParams, threads: usize) -> KernelConfig {
+    if let Ok(cfg) = try_plan(mr, kr, cache, threads) {
+        return cfg;
+    }
+    // Shrink ladder: every supported kernel no larger than the request,
+    // biggest first (register reuse scales with m_r·k_r). Strictly a
+    // shrink — a kernel larger than requested is never substituted.
+    let mut ladder: Vec<(usize, usize)> = crate::kernel::SUPPORTED_KERNELS
+        .iter()
+        .copied()
+        .filter(|&(smr, skr)| smr <= mr && skr <= kr && (smr, skr) != (mr, kr))
+        .collect();
+    ladder.sort_by_key(|&(smr, skr)| std::cmp::Reverse((smr * skr, smr)));
+    for (smr, skr) in ladder {
+        if let Ok(cfg) = try_plan(smr, skr, cache, threads) {
+            return cfg;
+        }
+    }
+    // Caches smaller than any kernel's one-wave working set (a few dozen
+    // doubles): degenerate 1x1 blocks. Correct, communication-oblivious.
+    KernelConfig {
+        mr: 1,
+        kr: 1,
+        mb: 1,
+        kb: 1,
+        nb: 1,
         threads: threads.max(1),
     }
 }
@@ -130,18 +256,59 @@ mod tests {
             let cfg = plan(*mr, *kr, CacheParams::PAPER_MACHINE, 4);
             cfg.validate()
                 .unwrap_or_else(|e| panic!("mr={mr} kr={kr}: {e}"));
+            cfg.validate_bounds(CacheParams::PAPER_MACHINE)
+                .unwrap_or_else(|e| panic!("mr={mr} kr={kr}: {e}"));
             assert_eq!(cfg.threads, 4);
+            // The paper machine fits every supported kernel: no shrink.
+            assert_eq!((cfg.mr, cfg.kr), (*mr, *kr));
         }
     }
 
     #[test]
-    fn tiny_cache_still_positive() {
-        let b = plan_bounds(16, 2, CacheParams {
+    fn chosen_values_never_exceed_bounds() {
+        // The regression the old `.max(...)` clamps caused: small t1/t2
+        // used to inflate nb/kb/mb past the very bounds they solved.
+        for cache in [
+            CacheParams {
+                t1: 10,
+                t2: 20,
+                t3: 100,
+            },
+            CacheParams {
+                t1: 60,
+                t2: 200,
+                t3: 1000,
+            },
+            CacheParams {
+                t1: 300,
+                t2: 900,
+                t3: 20_000,
+            },
+            CacheParams::PAPER_MACHINE,
+        ] {
+            for (mr, kr) in [(16, 2), (8, 5), (4, 2), (1, 1)] {
+                let b = plan_bounds(mr, kr, cache);
+                assert!(b.nb <= b.nb_bound, "{cache:?} mr={mr} kr={kr}: {b:?}");
+                assert!(b.kb <= b.kb_bound, "{cache:?} mr={mr} kr={kr}: {b:?}");
+                assert!(b.mb <= b.mb_bound, "{cache:?} mr={mr} kr={kr}: {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_cache_shrinks_kernel_instead_of_violating_bounds() {
+        let cache = CacheParams {
             t1: 10,
             t2: 20,
             t3: 100,
-        });
-        assert!(b.nb >= 8 && b.kb >= 2 && b.mb >= 16);
+        };
+        // 16x2 cannot fit: Eq 5.2 gives nb_bound = 0.
+        assert!(!plan_bounds(16, 2, cache).feasible());
+        assert!(try_plan(16, 2, cache, 1).is_err());
+        // plan() shrinks the kernel until the bounds are satisfiable.
+        let cfg = plan(16, 2, cache, 1);
+        cfg.validate_bounds(cache).expect("shrunk plan must satisfy Eq 5.1-5.6");
+        assert!(cfg.mr < 16);
     }
 
     #[test]

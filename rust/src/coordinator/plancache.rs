@@ -11,10 +11,11 @@
 //! the coordinator dispatch into one persistent pool per thread count
 //! (via [`PlanCache::pool_for`]) instead of each spawning its own workers.
 
-use crate::blocking::KernelConfig;
+use crate::blocking::{plan as analytic_plan, CacheParams, KernelConfig};
 use crate::kernel::Algorithm;
 use crate::parallel::WorkerPool;
 use crate::plan::RotationPlan;
+use crate::tune::{self, TuneDb};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -44,6 +45,10 @@ pub struct PlanCache {
     /// One persistent §7 worker pool per thread count, shared by every
     /// parallel plan the coordinator builds.
     workers: Mutex<HashMap<usize, Arc<WorkerPool>>>,
+    /// Autotuning context ([`Self::set_tune_db`]): when present,
+    /// [`Self::tuned_key`] swaps analytic-default configs for tuned ones
+    /// before plans are built or looked up.
+    tuning: Mutex<Option<(Arc<TuneDb>, CacheParams)>>,
 }
 
 impl Default for PlanCache {
@@ -63,7 +68,55 @@ impl PlanCache {
             pool: Mutex::new(HashMap::new()),
             max_pooled,
             workers: Mutex::new(HashMap::new()),
+            tuning: Mutex::new(None),
         }
+    }
+
+    /// Enable autotuning: jobs whose config is the analytic §5 default
+    /// consult `db` (keyed against `cache`, which must be the machine the
+    /// DB was tuned on — normally [`CacheParams::detect`]) and run with
+    /// the tuned config instead. Explicitly overridden configs are never
+    /// touched.
+    pub fn set_tune_db(&self, db: Arc<TuneDb>, cache: CacheParams) {
+        *self.tuning.lock().expect("plan cache poisoned") = Some((db, cache));
+    }
+
+    /// Swap a job key's config for the tuned one when (a) a TuneDb was
+    /// installed, (b) the job runs the kernel algorithm, (c) the key's
+    /// config *is* a planner default for its kernel/threads — either the
+    /// analytic solve on the installed cache or the library fallback
+    /// [`KernelConfig::default`]'s paper-machine solve (an operator
+    /// override is respected verbatim) — and (d) the DB has a record for
+    /// this machine + shape class + thread count. Identity otherwise —
+    /// jobs keep working with no DB exactly as before.
+    pub fn tuned_key(&self, mut key: PlanKey) -> PlanKey {
+        if key.algorithm != Algorithm::Kernel {
+            return key;
+        }
+        // Take the handle and drop the lock before any real work: the
+        // plan solves and the DB lookup must not serialize job dispatch.
+        let installed = {
+            let guard = self.tuning.lock().expect("plan cache poisoned");
+            guard.as_ref().map(|(db, cache)| (Arc::clone(db), *cache))
+        };
+        let Some((db, cache)) = installed else {
+            return key;
+        };
+        let threads = key.config.threads;
+        // Open-loop defaults a job can arrive with: the analytic solve on
+        // the machine the DB was tuned for, or `KernelConfig::default()`
+        // (the paper machine — what `JobSpec::default()` carries when
+        // detection is unavailable or the caller never planned).
+        let is_default = [cache, CacheParams::PAPER_MACHINE]
+            .iter()
+            .any(|c| key.config == analytic_plan(key.config.mr, key.config.kr, *c, threads));
+        if !is_default {
+            return key; // explicitly chosen parameters win
+        }
+        if let Some(cfg) = tune::lookup(&db, cache, key.m, key.n, key.k, threads) {
+            key.config = cfg;
+        }
+        key
     }
 
     /// The shared worker pool for `threads`-way plans, spawning it on
@@ -214,6 +267,86 @@ mod tests {
         cache.checkin(ser64, plan_for(&ser64));
         assert!(cache.checkout(&par).is_none(), "threads must be part of the key");
         assert!(cache.checkout(&ser64).is_some());
+    }
+
+    #[test]
+    fn tuned_key_swaps_only_analytic_defaults() {
+        use crate::tune::{tune_key, TunedRecord};
+        let cache = CacheParams::PAPER_MACHINE;
+        let cache_obj = PlanCache::new();
+        let analytic = analytic_plan(16, 2, cache, 1);
+        let base = PlanKey {
+            m: 64,
+            n: 48,
+            k: 8,
+            algorithm: Algorithm::Kernel,
+            config: analytic,
+        };
+        // No DB installed: identity.
+        assert_eq!(cache_obj.tuned_key(base).config, analytic);
+
+        let db = Arc::new(TuneDb::in_memory());
+        let mut tuned = analytic;
+        tuned.nb = analytic.nb - 8;
+        db.put(
+            tune_key(cache, 64, 48, 8, 1),
+            TunedRecord {
+                config: tuned,
+                gflops: 1.0,
+                analytic_gflops: 1.0,
+                sim_traffic_bytes: 0,
+            },
+        );
+        cache_obj.set_tune_db(Arc::clone(&db), cache);
+        // Analytic default gets swapped …
+        assert_eq!(cache_obj.tuned_key(base).config, tuned);
+        // … an explicit override does not …
+        let mut overridden = base;
+        overridden.config.nb = 64;
+        assert_eq!(cache_obj.tuned_key(overridden).config.nb, 64);
+        // … nor a non-kernel algorithm …
+        let mut fused = base;
+        fused.algorithm = Algorithm::Fused;
+        assert_eq!(cache_obj.tuned_key(fused).config, analytic);
+        // … nor a shape class with no record.
+        let mut other = base;
+        other.m = 4096;
+        assert_eq!(cache_obj.tuned_key(other).config, analytic);
+    }
+
+    #[test]
+    fn tuned_key_recognizes_the_paper_machine_fallback_default() {
+        // `JobSpec::default()` carries `KernelConfig::default()` (the
+        // paper-machine solve). When the installed cache differs, that
+        // config is still a *default*, not an operator override.
+        use crate::tune::{tune_key, TunedRecord};
+        let installed = CacheParams {
+            t1: 8_000,
+            t2: 64_000,
+            t3: 8_960_000,
+        };
+        let db = Arc::new(TuneDb::in_memory());
+        let mut tuned = analytic_plan(16, 2, installed, 1);
+        tuned.nb -= 8;
+        db.put(
+            tune_key(installed, 64, 48, 8, 1),
+            TunedRecord {
+                config: tuned,
+                gflops: 1.0,
+                analytic_gflops: 1.0,
+                sim_traffic_bytes: 0,
+            },
+        );
+        let cache_obj = PlanCache::new();
+        cache_obj.set_tune_db(Arc::clone(&db), installed);
+        let key = PlanKey {
+            m: 64,
+            n: 48,
+            k: 8,
+            algorithm: Algorithm::Kernel,
+            config: KernelConfig::default(),
+        };
+        assert_eq!(cache_obj.tuned_key(key).config, tuned);
     }
 
     #[test]

@@ -126,6 +126,13 @@ impl Coordinator {
         &self.plans
     }
 
+    /// Enable autotuning for every subsequent job: analytic-default
+    /// kernel jobs consult `db` (tuned for `cache`) through the plan
+    /// cache. See [`PlanCache::set_tune_db`].
+    pub fn set_tune_db(&self, db: std::sync::Arc<crate::tune::TuneDb>, cache: crate::blocking::CacheParams) {
+        self.plans.set_tune_db(db, cache);
+    }
+
     /// The active routing policy.
     pub fn policy(&self) -> RoutePolicy {
         self.policy
@@ -172,7 +179,9 @@ fn execute_job(
     let m = job.matrix.rows();
     let n = job.matrix.cols();
     let k = job.seq.k();
-    let key = job.spec.plan_key(policy, m, n, k);
+    // Autotuning hook: analytic-default kernel jobs run with the TuneDb
+    // config when one was installed (identity otherwise).
+    let key = plans.tuned_key(job.spec.plan_key(policy, m, n, k));
     let algo = key.algorithm;
     let mut plan = match plans.checkout(&key) {
         Some(plan) => {

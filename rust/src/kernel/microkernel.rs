@@ -438,6 +438,7 @@ fn store_col_at<const V: usize>(data: &mut [f64], base: usize, vals: &[f64x4; V]
 /// Kernel sizes benchmarked in Fig 6 (plus the MR=1 correctness fallback
 /// used for row remainders). `(m_r, k_r)` pairs.
 pub const SUPPORTED_KERNELS: &[(usize, usize)] = &[
+    (1, 1),
     (4, 2),
     (8, 1),
     (8, 2),

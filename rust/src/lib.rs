@@ -15,8 +15,10 @@
 //! * the substrates the paper depends on: a column-major matrix type
 //!   ([`matrix`]), a blocked GEMM/TRMM ([`gemm`]), a memory-hierarchy
 //!   (cache + TLB) simulator used to validate the paper's §1.2 I/O analysis
-//!   ([`simulator`]), the §5 block-size planner ([`blocking`]), the §4 packing
-//!   scheme ([`pack`]), and the §7 parallel scheduler ([`parallel`]);
+//!   ([`simulator`]), the §5 block-size planner ([`blocking`]), the
+//!   simulator-guided autotuner that closes the §5 loop with a persistent
+//!   `TuneDb` ([`tune`]), the §4 packing scheme ([`pack`]), and the §7
+//!   parallel scheduler ([`parallel`]);
 //! * the downstream applications that motivate the paper: an implicit-QR
 //!   Hessenberg eigensolver and a Jacobi SVD ([`apps`]);
 //! * an AOT runtime that loads JAX/Pallas-lowered HLO artifacts and executes
@@ -67,6 +69,7 @@ pub mod bench_harness;
 pub mod blocking;
 pub mod coordinator;
 pub mod gemm;
+pub mod jsonio;
 pub mod kernel;
 pub mod matrix;
 pub mod pack;
@@ -77,3 +80,4 @@ pub mod rot;
 pub mod runtime;
 pub mod simulator;
 pub mod testutil;
+pub mod tune;

@@ -5,12 +5,14 @@
 //! ```text
 //! rotseq apply    --algo <name> --m <m> --n <n> --k <k> [--mr --kr --threads]
 //! rotseq plan     [--mr 16 --kr 2] [--t1 --t2 --t3]
+//! rotseq tune     [--m --n --k --threads] [--db PATH] [--quick]
 //! rotseq simulate --m <m> --n <n> --k <k>
 //! rotseq bench    --figure fig5|fig6|fig7|fig8|io [--max-n N] [--k K] [--quick]
+//!                 [--tuned] [--db PATH] [--json PATH]
 //! rotseq eig      --n <n>
 //! rotseq svd      --m <m> --n <n>
 //! rotseq pjrt     [--artifacts DIR]
-//! rotseq serve    [--workers W]          (reads jobs from stdin)
+//! rotseq serve    [--workers W] [--tuned] [--db PATH]   (reads jobs from stdin)
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -109,6 +111,7 @@ fn run() -> Result<()> {
     match cmd.as_str() {
         "apply" => cmd_apply(&args),
         "plan" => cmd_plan(&args),
+        "tune" => cmd_tune(&args),
         "simulate" => cmd_simulate(&args),
         "bench" => cmd_bench(&args),
         "eig" => cmd_eig(&args),
@@ -130,12 +133,15 @@ fn print_usage() {
          subcommands:\n\
          \x20 apply    --algo rs_kernel --m 960 --n 960 --k 180  apply + report Gflop/s\n\
          \x20 plan     [--mr 16 --kr 2 --t1 --t2 --t3]           §5 block-size planner\n\
+         \x20 tune     [--m 960 --n 960 --k 180 --threads 1]     autotune within the §5 bounds\n\
+         \x20          [--db PATH --quick]                       and persist the TuneDb winner\n\
          \x20 simulate --m 256 --n 256 --k 24                    §1.2 I/O simulation table\n\
          \x20 bench    --figure fig5|fig6|fig7|fig8|io [--threads T]  regenerate a paper figure\n\
+         \x20          [--tuned --db PATH --json PATH]           add rs_kernel_tuned + JSON dump\n\
          \x20 eig      --n 120                                   implicit-QR eigensolver demo\n\
          \x20 svd      --m 160 --n 80                            Jacobi SVD demo\n\
          \x20 pjrt     [--artifacts artifacts]                   run AOT artifacts via PJRT\n\
-         \x20 serve    [--workers 2]                             job coordinator on stdin"
+         \x20 serve    [--workers 2] [--tuned]                   job coordinator on stdin"
     );
 }
 
@@ -192,6 +198,63 @@ fn cmd_plan(a: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `rotseq tune`: generate → simulate → time → persist, then report.
+fn cmd_tune(a: &Args) -> Result<()> {
+    let quick = a.has("quick");
+    // Defaults mirror `bench`'s (`--quick` included), so `rotseq tune
+    // --quick && rotseq bench --figure fig5 --quick --tuned` land in the
+    // same shape class and the tuned series actually hits the DB.
+    let m = a.get("m", if quick { 240 } else { 960 })?;
+    let n = a.get("n", m)?;
+    let k = a.get("k", if quick { 36 } else { bh::PAPER_K })?;
+    let threads = a.get("threads", 1usize)?;
+    let cache = CacheParams::detect();
+    let db_path = a.get_str("db", &rotseq::tune::TuneDb::default_path().to_string_lossy());
+    let db = rotseq::tune::TuneDb::open(&db_path)?;
+    let opts = if quick {
+        rotseq::tune::TuneOptions::quick()
+    } else {
+        rotseq::tune::TuneOptions::default()
+    };
+
+    println!(
+        "tuning m={m} n={n} k={k} threads={threads} on {} (shape class {:?})",
+        rotseq::tune::machine_fingerprint(cache),
+        rotseq::tune::shape_class(m, n, k)
+    );
+    let report = rotseq::tune::tune_and_store(&db, m, n, k, threads, cache, &opts)?;
+    println!(
+        "{:<28} {:>12} {:>14} {:>12}",
+        "candidate (mr,kr,mb,kb,nb)", "sim cost", "pred IO (dbl)", "Gflop/s"
+    );
+    for c in &report.candidates {
+        let cfg = c.config;
+        let label = format!("({},{},{},{},{})", cfg.mr, cfg.kr, cfg.mb, cfg.kb, cfg.nb);
+        let rate = c
+            .measured_gflops
+            .map(|g| format!("{g:.3}"))
+            .unwrap_or_else(|| "pruned".into());
+        println!(
+            "{label:<28} {:>12} {:>14.3e} {rate:>12}",
+            c.sim_cost, c.predicted_io,
+        );
+    }
+    let w = report.record.config;
+    println!(
+        "winner: ({},{},{},{},{}) at {:.3} Gflop/s (analytic {:.3} Gflop/s, {:+.1}%)",
+        w.mr,
+        w.kr,
+        w.mb,
+        w.kb,
+        w.nb,
+        report.record.gflops,
+        report.analytic_gflops,
+        (report.record.gflops / report.analytic_gflops.max(1e-12) - 1.0) * 100.0
+    );
+    println!("persisted to {} ({} entries)", db_path, db.len());
+    Ok(())
+}
+
 fn cmd_simulate(a: &Args) -> Result<()> {
     let m = a.get("m", 256usize)?;
     let n = a.get("n", 256usize)?;
@@ -216,17 +279,52 @@ fn cmd_bench(a: &Args) -> Result<()> {
     let k = a.get("k", if quick { 36 } else { bh::PAPER_K })?;
     // fig5 only: > 1 routes rs_kernel through the §7 worker pool.
     let threads = a.get("threads", 1usize)?;
+    // --tuned adds the rs_kernel_tuned series from the TuneDb at --db
+    // (default path); --json dumps the rows machine-readably (the BENCH
+    // artifact CI uploads).
+    let db = if a.has("tuned") || a.values.contains_key("db") {
+        let db_path = a.get_str("db", &rotseq::tune::TuneDb::default_path().to_string_lossy());
+        Some(rotseq::tune::TuneDb::open(db_path)?)
+    } else {
+        None
+    };
+    let json_path = a.values.get("json").cloned();
+    let write_json = |text: String| -> Result<()> {
+        match &json_path {
+            None => Ok(()),
+            Some(p) => {
+                std::fs::write(p, text).with_context(|| format!("writing {p}"))?;
+                println!("wrote {p}");
+                Ok(())
+            }
+        }
+    };
     let ns: Vec<usize> = bh::paper_n_sweep(max_n);
     match figure.as_str() {
-        "fig5" => bh::print_fig5(&bh::fig5_serial(&ns, k, &mc, threads), threads),
-        "fig6" => bh::print_fig6(&bh::fig6_kernel_sizes(&ns, k, &mc)),
+        "fig5" => {
+            let rows = bh::fig5_serial(&ns, k, &mc, threads, db.as_ref());
+            bh::print_fig5(&rows, threads);
+            write_json(bh::fig5_json(&rows, threads))?;
+        }
         "fig7" => {
             let threads = [1, 2, 4, 8, 16, 28];
-            bh::print_fig7(&bh::fig7_parallel(&ns, k, &threads, &mc));
+            let rows = bh::fig7_parallel(&ns, k, &threads, &mc, db.as_ref());
+            bh::print_fig7(&rows);
+            write_json(bh::fig7_json(&rows))?;
         }
-        "fig8" => bh::print_fig8(&bh::fig8_reflectors(&ns, k, &mc)),
-        "io" => cmd_simulate(a)?,
-        other => bail!("unknown figure '{other}'"),
+        other => {
+            // The tuned series and JSON dump exist for fig5/fig7 only:
+            // fail loudly rather than produce a missing artifact.
+            if json_path.is_some() || db.is_some() {
+                bail!("--tuned/--json are only supported for fig5 and fig7 (got '{other}')");
+            }
+            match other {
+                "fig6" => bh::print_fig6(&bh::fig6_kernel_sizes(&ns, k, &mc)),
+                "fig8" => bh::print_fig8(&bh::fig8_reflectors(&ns, k, &mc)),
+                "io" => cmd_simulate(a)?,
+                _ => bail!("unknown figure '{other}'"),
+            }
+        }
     }
     Ok(())
 }
@@ -312,6 +410,13 @@ fn cmd_pjrt(a: &Args) -> Result<()> {
 fn cmd_serve(a: &Args) -> Result<()> {
     let workers = a.get("workers", 2usize)?;
     let coord = Coordinator::start(workers, RoutePolicy::Auto);
+    // --tuned: analytic-default kernel jobs run with TuneDb configs.
+    if a.has("tuned") || a.values.contains_key("db") {
+        let db_path = a.get_str("db", &rotseq::tune::TuneDb::default_path().to_string_lossy());
+        let db = std::sync::Arc::new(rotseq::tune::TuneDb::open(&db_path)?);
+        println!("autotuning: {} entries from {db_path}", db.len());
+        coord.set_tune_db(db, CacheParams::detect());
+    }
     println!("rotseq coordinator: {workers} workers; protocol: apply <m> <n> <k> <seed> [algo]");
     let mut lines = std::io::stdin().lines();
     while let Some(Ok(line)) = lines.next() {

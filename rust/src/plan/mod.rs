@@ -221,6 +221,11 @@ pub struct PlanBuilder {
     config: Option<KernelConfig>,
     warm: bool,
     pool: Option<Arc<WorkerPool>>,
+    autotune: bool,
+    /// Whether [`Self::kernel`] was called: an explicit kernel size is an
+    /// operator override the TuneDb must not displace.
+    kernel_explicit: bool,
+    tune_db: Option<Arc<crate::tune::TuneDb>>,
 }
 
 impl PlanBuilder {
@@ -236,6 +241,9 @@ impl PlanBuilder {
             config: None,
             warm: true,
             pool: None,
+            autotune: false,
+            kernel_explicit: false,
+            tune_db: None,
         }
     }
 
@@ -262,9 +270,13 @@ impl PlanBuilder {
     }
 
     /// Kernel size `(m_r, k_r)` (default `(16, 2)`, the paper's flagship).
-    /// Ignored if [`Self::config`] is given.
+    /// Ignored if [`Self::config`] is given. An explicit kernel size also
+    /// disables the [`Self::autotune`] TuneDb lookup — like
+    /// [`Self::config`], it is an operator override the tuner must not
+    /// displace.
     pub fn kernel(mut self, mr: usize, kr: usize) -> Self {
         self.kernel_size = (mr, kr);
+        self.kernel_explicit = true;
         self
     }
 
@@ -292,6 +304,27 @@ impl PlanBuilder {
         self
     }
 
+    /// Consult the autotuner's [`crate::tune::TuneDb`] before falling
+    /// back to the analytic §5 solve: if a tuned configuration exists for
+    /// this machine, the plan's shape class, and its thread count (a
+    /// `rotseq tune` run populates the DB), it is used instead of the
+    /// open-loop plan. Without a DB entry the behavior is identical to a
+    /// non-autotuned build — tuning never degrades, it only replaces the
+    /// analytic point with a measured-faster one. Uses the process-shared
+    /// DB at [`crate::tune::TuneDb::default_path`] unless [`Self::tune_db`]
+    /// names one. Ignored when an explicit [`Self::config`] is given.
+    pub fn autotune(mut self) -> Self {
+        self.autotune = true;
+        self
+    }
+
+    /// Autotune against a specific database (implies [`Self::autotune`]).
+    pub fn tune_db(mut self, db: Arc<crate::tune::TuneDb>) -> Self {
+        self.tune_db = Some(db);
+        self.autotune = true;
+        self
+    }
+
     /// Whether `build` pre-warms the wave-stream arena so even the first
     /// execute allocates nothing (default `true`). Disable for throwaway
     /// plans that will execute exactly once.
@@ -316,14 +349,29 @@ impl PlanBuilder {
             bail!("RotationPlan requires .shape(m, n, k)");
         };
         let (mr, kr) = self.kernel_size;
+        let mut tuned = false;
         let (mut cfg, bounds) = match self.config {
             Some(cfg) => (cfg, None),
             None => {
                 let cache = self.cache.unwrap_or_else(CacheParams::detect);
-                (
-                    solve_config(mr, kr, cache, self.threads.unwrap_or(1)),
-                    Some(plan_bounds_for(mr, kr, cache)),
-                )
+                let threads = self.threads.unwrap_or(1);
+                // Autotuned kernel plans consult the TuneDb first; a hit
+                // replaces the analytic point with the measured winner
+                // (same bounds, better constants). Miss => open-loop §5.
+                // Explicit .kernel() is an operator override: skip the DB.
+                let consult_db = self.autotune
+                    && !self.kernel_explicit
+                    && matches!(self.algorithm, Algorithm::Kernel);
+                let from_db = if consult_db {
+                    let db = self.tune_db.clone().unwrap_or_else(crate::tune::TuneDb::shared);
+                    crate::tune::lookup(&db, cache, m, n, k, threads)
+                } else {
+                    None
+                };
+                tuned = from_db.is_some();
+                let cfg = from_db.unwrap_or_else(|| solve_config(mr, kr, cache, threads));
+                let bounds = plan_bounds_for(cfg.mr, cfg.kr, cache);
+                (cfg, Some(bounds))
             }
         };
         if let Some(t) = self.threads {
@@ -369,6 +417,7 @@ impl PlanBuilder {
             direction: self.direction,
             cfg,
             bounds,
+            tuned,
             workspace,
             pool,
         })
@@ -385,6 +434,9 @@ pub struct RotationPlan {
     direction: Direction,
     cfg: KernelConfig,
     bounds: Option<BlockPlan>,
+    /// Whether the config came from the autotuner's TuneDb rather than
+    /// the analytic §5 solve.
+    tuned: bool,
     workspace: Workspace,
     /// Persistent §7 workers (kernel plans with `threads > 1` only).
     pool: Option<Arc<WorkerPool>>,
@@ -415,6 +467,13 @@ impl RotationPlan {
     /// the parameters.
     pub fn bounds(&self) -> Option<&BlockPlan> {
         self.bounds.as_ref()
+    }
+
+    /// Whether the config came from the autotuner's
+    /// [`crate::tune::TuneDb`] (a [`PlanBuilder::autotune`] build that hit
+    /// a tuned record) rather than the open-loop §5 solve.
+    pub fn is_tuned(&self) -> bool {
+        self.tuned
     }
 
     /// Side the plan applies sequences on.
@@ -692,6 +751,76 @@ mod tests {
         // §5 bounds are exposed when the planner ran.
         let b = plan.bounds().unwrap();
         assert_eq!(b.nb, plan.config().nb);
+    }
+
+    #[test]
+    fn autotune_consults_the_tune_db_and_stays_bitwise_equal() {
+        use crate::tune::{tune_key, TuneDb, TunedRecord};
+        let cache = CacheParams::PAPER_MACHINE;
+        let db = Arc::new(TuneDb::in_memory());
+        let (m, n, k) = (64, 48, 8);
+
+        // Empty DB: autotune falls back to the analytic solve.
+        let mut p0 = RotationPlan::builder()
+            .shape(m, n, k)
+            .cache(cache)
+            .tune_db(Arc::clone(&db))
+            .build()
+            .unwrap();
+        assert!(!p0.is_tuned());
+        let analytic = *p0.config();
+
+        // Store a valid tuned record that differs from the analytic point.
+        let mut tuned_cfg = analytic;
+        tuned_cfg.nb = analytic.nb - 8;
+        tuned_cfg.mb = analytic.mb / 2 / analytic.mr * analytic.mr;
+        tuned_cfg.validate_bounds(cache).unwrap();
+        db.put(
+            tune_key(cache, m, n, k, 1),
+            TunedRecord {
+                config: tuned_cfg,
+                gflops: 1.0,
+                analytic_gflops: 1.0,
+                sim_traffic_bytes: 0,
+            },
+        );
+        let mut p1 = RotationPlan::builder()
+            .shape(m, n, k)
+            .cache(cache)
+            .tune_db(Arc::clone(&db))
+            .build()
+            .unwrap();
+        assert!(p1.is_tuned());
+        assert_eq!(p1.config(), &tuned_cfg);
+        // An explicit config always beats the DB.
+        let p2 = RotationPlan::builder()
+            .shape(m, n, k)
+            .cache(cache)
+            .config(small_cfg(1))
+            .tune_db(Arc::clone(&db))
+            .build()
+            .unwrap();
+        assert!(!p2.is_tuned());
+        // So does an explicit kernel size: the (8,5) request must not be
+        // displaced by the DB's (16,2) record.
+        let p3 = RotationPlan::builder()
+            .shape(m, n, k)
+            .cache(cache)
+            .kernel(8, 5)
+            .tune_db(Arc::clone(&db))
+            .build()
+            .unwrap();
+        assert!(!p3.is_tuned());
+        assert_eq!((p3.config().mr, p3.config().kr), (8, 5));
+
+        // Tuned and analytic plans agree bitwise: blocks change the
+        // schedule, never the arithmetic.
+        let seq = RotationSequence::random(n, k, 3);
+        let base = Matrix::random(m, n, 4);
+        let (mut a0, mut a1) = (base.clone(), base.clone());
+        p0.execute(&mut a0, &seq).unwrap();
+        p1.execute(&mut a1, &seq).unwrap();
+        assert_eq!(max_abs_diff(&a0, &a1), 0.0);
     }
 
     #[test]

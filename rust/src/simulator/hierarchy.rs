@@ -86,6 +86,33 @@ impl HierarchySpec {
         }
     }
 
+    /// A hierarchy with the capacities of a detected [`CacheParams`]
+    /// (`T1`/`T2`/`T3` are in doubles) and typical x86 geometry (64B
+    /// lines, 8/8/16-way, 4KB pages). The autotuner scores candidate
+    /// configs on this spec so the simulated machine matches the machine
+    /// the §5 solve planned for.
+    pub fn from_cache_params(cache: crate::blocking::CacheParams) -> Self {
+        Self {
+            l1: CacheSpec {
+                size_bytes: cache.t1 * 8,
+                line_bytes: 64,
+                assoc: 8,
+            },
+            l2: CacheSpec {
+                size_bytes: cache.t2 * 8,
+                line_bytes: 64,
+                assoc: 8,
+            },
+            l3: CacheSpec {
+                size_bytes: cache.t3 * 8,
+                line_bytes: 64,
+                assoc: 16,
+            },
+            page_bytes: 4096,
+            tlb_entries: 64,
+        }
+    }
+
     /// A small machine for fast simulation sweeps: caches scaled down 8x so
     /// that interesting capacity effects appear already at n ≈ 100–500.
     pub fn small_machine() -> Self {

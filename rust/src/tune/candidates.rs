@@ -1,0 +1,178 @@
+//! Candidate generation: the analytic §5 point plus a bounded
+//! neighborhood, every point validated against Eq 5.1–5.6.
+//!
+//! The §5 equations give *upper bounds*; the analytic planner picks one
+//! point under them (rounded, with the paper's shared-L3 headroom on
+//! `m_b`). The true optimum depends on effects the closed form cannot
+//! see — associativity conflicts, prefetcher behavior, SMT sharing — but
+//! it provably lies under the same bounds, so the search space is the
+//! bounded lattice below them, not an open grid: every candidate this
+//! module emits satisfies [`KernelConfig::validate_bounds`] by
+//! construction (and a debug assert). All bound arithmetic is the
+//! planner's own ([`crate::blocking`]'s `solve_kb_bound`/`solve_mb_bound`/
+//! `mb_headroomed`), so the two can never drift apart.
+
+use crate::blocking::{
+    mb_headroomed, plan_bounds_for, round_down_capped, solve_cache_for, solve_kb_bound,
+    solve_mb_bound, CacheParams, KernelConfig,
+};
+
+/// Deduplicated, bound-respecting candidate set for one `(cache, threads)`
+/// point across the given kernel sizes. The analytic config for each
+/// feasible kernel is always included (and is always `candidates[0]` for
+/// the first feasible kernel), so a tuner that times every candidate can
+/// never do worse than the open-loop §5 choice.
+pub fn candidates(
+    cache: CacheParams,
+    threads: usize,
+    kernels: &[(usize, usize)],
+) -> Vec<KernelConfig> {
+    // Solve against the same per-worker L3 budget as `try_plan`, so the
+    // analytic point and its neighborhood come from one set of equations.
+    let cache = solve_cache_for(cache, threads);
+    let mut out: Vec<KernelConfig> = Vec::new();
+    let mut push = |cfg: KernelConfig| {
+        if cfg.validate_bounds(cache).is_ok() && !out.contains(&cfg) {
+            out.push(cfg);
+        }
+    };
+    for &(mr, kr) in kernels {
+        if !crate::kernel::kernel_supported(mr, kr) {
+            continue;
+        }
+        let b = plan_bounds_for(mr, kr, cache);
+        if !b.feasible() {
+            continue;
+        }
+        // The analytic point first: it is the baseline every tuned record
+        // stores an `analytic_gflops` for.
+        push(KernelConfig {
+            mr,
+            kr,
+            mb: b.mb,
+            kb: b.kb,
+            nb: b.nb,
+            threads,
+        });
+        // Bounded neighborhood: n_b down-steps (smaller pipeline chunks
+        // trade stream reuse for L1 headroom), k_b re-solved per n_b via
+        // Eq 5.4, and m_b between the paper's headroomed pick and the
+        // full Eq 5.6 bound.
+        for nb in nb_options(&b) {
+            let kb_bound = solve_kb_bound(mr, nb, cache);
+            for kb in kb_options(kb_bound, kr) {
+                if kb == 0 {
+                    continue;
+                }
+                let mb_bound = solve_mb_bound(nb, kb, cache);
+                for mb in mb_options(mb_bound, mr) {
+                    if mb == 0 {
+                        continue;
+                    }
+                    push(KernelConfig {
+                        mr,
+                        kr,
+                        mb,
+                        kb,
+                        nb,
+                        threads,
+                    });
+                }
+            }
+        }
+    }
+    debug_assert!(out.iter().all(|c| c.validate_bounds(cache).is_ok()));
+    out
+}
+
+/// `n_b` candidates: the planner's rounded choice and two down-steps
+/// (never above the bound — Eq 5.2 is monotone in `n_b`).
+fn nb_options(b: &crate::blocking::BlockPlan) -> Vec<usize> {
+    let mut opts = vec![b.nb];
+    for frac in [3, 2] {
+        // 3/4 and 1/2 of the chosen point, re-aligned down to 8.
+        let v = b.nb * frac / 4 / 8 * 8;
+        if v >= 8 && !opts.contains(&v) {
+            opts.push(v);
+        }
+    }
+    opts
+}
+
+/// `k_b` candidates for a given (re-solved) bound: the rounded bound and
+/// its half.
+fn kb_options(kb_bound: usize, kr: usize) -> Vec<usize> {
+    let full = round_down_capped(kb_bound, kr);
+    let mut opts = vec![full];
+    let half = full / 2 / kr * kr;
+    if half >= kr && !opts.contains(&half) {
+        opts.push(half);
+    }
+    opts
+}
+
+/// `m_b` candidates: the paper's shared-L3 headroomed pick, the halfway
+/// point, and the full Eq 5.6 bound.
+fn mb_options(mb_bound: usize, mr: usize) -> Vec<usize> {
+    let full = round_down_capped(mb_bound, mr);
+    let headroomed = mb_headroomed(mb_bound, mr);
+    let mid = (headroomed + full) / 2 / mr * mr;
+    let mut opts = vec![headroomed];
+    for v in [mid, full] {
+        if v >= 1 && v <= full && !opts.contains(&v) {
+            opts.push(v);
+        }
+    }
+    opts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_candidates_satisfy_bounds_on_paper_machine() {
+        let cands = candidates(
+            CacheParams::PAPER_MACHINE,
+            1,
+            &[(16, 2), (8, 5), (12, 3), (32, 2)],
+        );
+        assert!(cands.len() >= 8, "expected a real neighborhood, got {}", cands.len());
+        for c in &cands {
+            c.validate_bounds(CacheParams::PAPER_MACHINE)
+                .unwrap_or_else(|e| panic!("candidate {c:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn first_candidate_is_the_analytic_point() {
+        let cache = CacheParams::PAPER_MACHINE;
+        let analytic = crate::blocking::plan(16, 2, cache, 3);
+        let cands = candidates(cache, 3, &[(16, 2)]);
+        assert_eq!(cands[0], analytic);
+        assert!(cands.iter().all(|c| c.threads == 3));
+    }
+
+    #[test]
+    fn infeasible_kernels_are_skipped_not_emitted() {
+        let tiny = CacheParams {
+            t1: 60,
+            t2: 200,
+            t3: 1_000,
+        };
+        let cands = candidates(tiny, 1, &[(32, 2), (16, 2), (4, 2)]);
+        // 32x2 can't fit t1=60 (Eq 5.2 bound is 0); whatever comes out
+        // satisfies the bounds.
+        assert!(!cands.is_empty());
+        for c in &cands {
+            assert!(c.validate_bounds(tiny).is_ok(), "{c:?}");
+            assert!(c.mr < 32);
+        }
+    }
+
+    #[test]
+    fn unsupported_kernel_sizes_are_ignored() {
+        let cands = candidates(CacheParams::PAPER_MACHINE, 1, &[(7, 3), (16, 2)]);
+        assert!(cands.iter().all(|c| (c.mr, c.kr) == (16, 2)));
+    }
+}

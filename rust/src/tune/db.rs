@@ -1,0 +1,346 @@
+//! The persistent tuning database.
+//!
+//! One JSON file holds every tuned configuration, keyed by
+//! `(machine fingerprint, shape class, threads)`. The whole file is read
+//! into a `BTreeMap` at open (in-memory caching — lookups never touch the
+//! disk again) and written back with sorted keys through a temp-file
+//! rename, so saves are atomic-ish and byte-deterministic: saving the
+//! same entries twice produces identical files.
+
+use crate::blocking::KernelConfig;
+use crate::jsonio::{obj, s, unum, Json};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, OnceLock};
+
+/// What a tuned configuration is valid for.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TuneKey {
+    /// Machine identity: the detected cache geometry — deliberately *not*
+    /// the core count, which varies with CPU affinity/cgroup quotas
+    /// ([`super::machine_fingerprint`]). Machines with identical caches
+    /// share records; the lookup-time bounds check keeps that safe.
+    pub fingerprint: String,
+    /// Bucketed `(m, n, k)` ([`super::shape_class`]): shapes in one bucket
+    /// share a tuning.
+    pub shape_class: (usize, usize, usize),
+    /// Worker threads the tuning was measured with.
+    pub threads: usize,
+}
+
+/// A tuned configuration plus the evidence that selected it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TunedRecord {
+    /// The winning configuration (its `threads` equals the key's).
+    pub config: KernelConfig,
+    /// Measured rate of the winner (Gflop/s, min-of-reps).
+    pub gflops: f64,
+    /// Measured rate of the analytic §5 config in the same run — the
+    /// open-loop baseline the winner had to beat (or tie).
+    pub analytic_gflops: f64,
+    /// Simulated DRAM traffic of the winner (bytes, on the capped proxy
+    /// shape) — the pruning score.
+    pub sim_traffic_bytes: u64,
+}
+
+/// On-disk format version (bump on breaking schema changes; unknown
+/// versions are ignored at load, not errors — the DB is a cache).
+const FORMAT_VERSION: u64 = 1;
+
+/// The tuning database: an in-memory map with JSON persistence.
+pub struct TuneDb {
+    path: Option<PathBuf>,
+    entries: Mutex<BTreeMap<TuneKey, TunedRecord>>,
+}
+
+impl TuneDb {
+    /// The default on-disk location: `$ROTSEQ_TUNE_DB`, else
+    /// `$HOME/.cache/rotseq/tune.json`, else `./rotseq-tune.json`.
+    pub fn default_path() -> PathBuf {
+        if let Ok(p) = std::env::var("ROTSEQ_TUNE_DB") {
+            if !p.is_empty() {
+                return PathBuf::from(p);
+            }
+        }
+        match std::env::var("HOME") {
+            Ok(home) if !home.is_empty() => PathBuf::from(home)
+                .join(".cache")
+                .join("rotseq")
+                .join("tune.json"),
+            _ => PathBuf::from("rotseq-tune.json"),
+        }
+    }
+
+    /// Open (and load) the database at `path`. A missing file is an empty
+    /// database, not an error; a corrupt file is an error (the operator
+    /// should decide whether to delete it).
+    pub fn open(path: impl Into<PathBuf>) -> Result<TuneDb> {
+        let path = path.into();
+        let entries = match std::fs::read_to_string(&path) {
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => BTreeMap::new(),
+            Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+            Ok(text) => {
+                parse_entries(&text).with_context(|| format!("parsing {}", path.display()))?
+            }
+        };
+        Ok(TuneDb {
+            path: Some(path),
+            entries: Mutex::new(entries),
+        })
+    }
+
+    /// A purely in-memory database ([`Self::save`] is a no-op).
+    pub fn in_memory() -> TuneDb {
+        TuneDb {
+            path: None,
+            entries: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// The process-wide shared database at [`Self::default_path`], loaded
+    /// once. Falls back to an empty in-memory DB when the file is corrupt
+    /// (an autotuner must never break plan building).
+    pub fn shared() -> std::sync::Arc<TuneDb> {
+        static SHARED: OnceLock<std::sync::Arc<TuneDb>> = OnceLock::new();
+        std::sync::Arc::clone(SHARED.get_or_init(|| {
+            std::sync::Arc::new(
+                TuneDb::open(TuneDb::default_path()).unwrap_or_else(|_| TuneDb::in_memory()),
+            )
+        }))
+    }
+
+    /// Where this database persists, if anywhere.
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// Look up the tuned record for a key.
+    pub fn get(&self, key: &TuneKey) -> Option<TunedRecord> {
+        self.entries.lock().expect("tunedb poisoned").get(key).copied()
+    }
+
+    /// Insert or replace a record. The stored config's `threads` is
+    /// normalized to the key's (the on-disk format serializes one
+    /// `threads` field), so a mismatched `record.config.threads` can
+    /// never read back differently than it was written.
+    pub fn put(&self, key: TuneKey, mut record: TunedRecord) {
+        record.config.threads = key.threads;
+        self.entries.lock().expect("tunedb poisoned").insert(key, record);
+    }
+
+    /// Number of stored records.
+    pub fn len(&self) -> usize {
+        self.entries.lock().expect("tunedb poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Serialize the whole database (sorted keys: deterministic bytes).
+    pub fn to_json_string(&self) -> String {
+        let entries = self.entries.lock().expect("tunedb poisoned");
+        let rows: Vec<Json> = entries
+            .iter()
+            .map(|(k, r)| {
+                let c = r.config;
+                obj(vec![
+                    ("fingerprint", s(k.fingerprint.clone())),
+                    ("m_class", unum(k.shape_class.0)),
+                    ("n_class", unum(k.shape_class.1)),
+                    ("k_class", unum(k.shape_class.2)),
+                    ("threads", unum(k.threads)),
+                    ("mr", unum(c.mr)),
+                    ("kr", unum(c.kr)),
+                    ("mb", unum(c.mb)),
+                    ("kb", unum(c.kb)),
+                    ("nb", unum(c.nb)),
+                    ("gflops", Json::Num(r.gflops)),
+                    ("analytic_gflops", Json::Num(r.analytic_gflops)),
+                    ("sim_traffic_bytes", unum(r.sim_traffic_bytes as usize)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("version", unum(FORMAT_VERSION as usize)),
+            ("entries", Json::Arr(rows)),
+        ])
+        .to_json_pretty()
+    }
+
+    /// Persist to disk (unique temp file + rename, so concurrent savers —
+    /// across processes or threads — never clobber each other's temp or
+    /// fail mid-rename; whole-file content is still last-writer-wins).
+    /// No-op for in-memory DBs.
+    pub fn save(&self) -> Result<()> {
+        let Some(path) = &self.path else {
+            return Ok(());
+        };
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let text = self.to_json_string();
+        static SAVE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let seq = SAVE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let tmp = path.with_extension(format!("json.tmp.{}.{seq}", std::process::id()));
+        std::fs::write(&tmp, &text).with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+        Ok(())
+    }
+}
+
+fn parse_entries(text: &str) -> Result<BTreeMap<TuneKey, TunedRecord>> {
+    let root = Json::parse(text)?;
+    let mut entries = BTreeMap::new();
+    if root.get("version").and_then(Json::as_u64) != Some(FORMAT_VERSION) {
+        // Unknown schema: treat as empty (it's a cache, not a source of
+        // truth) rather than failing every plan build.
+        return Ok(entries);
+    }
+    let rows = root.get("entries").and_then(Json::as_arr).unwrap_or(&[]);
+    for row in rows {
+        let get_usize = |k: &str| row.get(k).and_then(Json::as_usize);
+        let (Some(fingerprint), Some(mc), Some(nc), Some(kc), Some(threads)) = (
+            row.get("fingerprint").and_then(Json::as_str),
+            get_usize("m_class"),
+            get_usize("n_class"),
+            get_usize("k_class"),
+            get_usize("threads"),
+        ) else {
+            continue; // skip malformed rows, keep the rest
+        };
+        let (Some(mr), Some(kr), Some(mb), Some(kb), Some(nb)) = (
+            get_usize("mr"),
+            get_usize("kr"),
+            get_usize("mb"),
+            get_usize("kb"),
+            get_usize("nb"),
+        ) else {
+            continue;
+        };
+        let config = KernelConfig {
+            mr,
+            kr,
+            mb,
+            kb,
+            nb,
+            threads,
+        };
+        if config.validate().is_err() {
+            continue; // stale record for a kernel this build doesn't have
+        }
+        entries.insert(
+            TuneKey {
+                fingerprint: fingerprint.to_string(),
+                shape_class: (mc, nc, kc),
+                threads,
+            },
+            TunedRecord {
+                config,
+                gflops: row.get("gflops").and_then(Json::as_f64).unwrap_or(0.0),
+                analytic_gflops: row
+                    .get("analytic_gflops")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0),
+                sim_traffic_bytes: row
+                    .get("sim_traffic_bytes")
+                    .and_then(Json::as_u64)
+                    .unwrap_or(0),
+            },
+        );
+    }
+    Ok(entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(threads: usize) -> TuneKey {
+        TuneKey {
+            fingerprint: "t1-4000_t2-32000_t3-4480000".into(),
+            shape_class: (1024, 1024, 256),
+            threads,
+        }
+    }
+
+    fn record() -> TunedRecord {
+        TunedRecord {
+            config: KernelConfig {
+                mr: 16,
+                kr: 2,
+                mb: 4800,
+                kb: 60,
+                nb: 192,
+                threads: 1,
+            },
+            gflops: 3.25,
+            analytic_gflops: 3.0,
+            sim_traffic_bytes: 123_456,
+        }
+    }
+
+    #[test]
+    fn round_trips_through_disk() {
+        let path = std::env::temp_dir().join(format!("rotseq-tunedb-rt-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let db = TuneDb::open(&path).unwrap();
+        assert!(db.is_empty());
+        db.put(key(1), record());
+        db.put(key(4), record());
+        db.save().unwrap();
+
+        let reopened = TuneDb::open(&path).unwrap();
+        assert_eq!(reopened.len(), 2);
+        assert_eq!(reopened.get(&key(1)), Some(record()));
+        // put() normalizes the stored config's threads to the key's.
+        let mut rec4 = record();
+        rec4.config.threads = 4;
+        assert_eq!(reopened.get(&key(4)), Some(rec4));
+        assert_eq!(reopened.get(&key(2)), None);
+
+        // Deterministic: save again from the reopened copy, bytes equal.
+        let first = std::fs::read_to_string(&path).unwrap();
+        reopened.save().unwrap();
+        let second = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(first, second);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_file_is_empty_corrupt_file_errors() {
+        let path = std::env::temp_dir().join(format!("rotseq-tunedb-missing-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        assert!(TuneDb::open(&path).unwrap().is_empty());
+        std::fs::write(&path, "not json at all").unwrap();
+        assert!(TuneDb::open(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn unknown_version_or_malformed_rows_are_skipped() {
+        let text = r#"{"version": 99, "entries": [{"fingerprint": "x"}]}"#;
+        assert!(parse_entries(text).unwrap().is_empty());
+        // Right version, one good row, one malformed, one unsupported
+        // kernel: only the good row survives.
+        let db = TuneDb::in_memory();
+        db.put(key(1), record());
+        let good = db.to_json_string();
+        let parsed = parse_entries(&good).unwrap();
+        assert_eq!(parsed.len(), 1);
+    }
+
+    #[test]
+    fn in_memory_save_is_noop() {
+        let db = TuneDb::in_memory();
+        db.put(key(1), record());
+        db.save().unwrap();
+        assert_eq!(db.path(), None);
+        assert_eq!(db.len(), 1);
+    }
+}

@@ -1,0 +1,398 @@
+//! Simulator-guided autotuning (the closed §5 feedback loop).
+//!
+//! The §5 planner is open-loop: it solves Eq 5.1–5.6 from detected cache
+//! sizes and trusts the answer. The paper's own §5.3 shows why that is
+//! not the last word — the analysis *bounds* the good region, it does not
+//! pick the optimum inside it (the paper itself takes `m_b = 4800` where
+//! the equations allow 16231). This module closes the loop, in the
+//! communication-avoiding tradition (derive bounds, then tune within
+//! them):
+//!
+//! 1. **generate** candidates from the §5 bounds — the analytic point
+//!    plus a bounded neighborhood over `m_b`/`k_b`/`n_b` and alternative
+//!    supported kernels, every point validated against Eq 5.1–5.6
+//!    ([`candidates`]);
+//! 2. **prune** with the cache simulator: replay the kernel's exact
+//!    access stream on a model of the detected hierarchy
+//!    ([`crate::simulator::simulate_algorithm`]) on a capped proxy shape,
+//!    rank by weighted miss cost, keep the few best (plus the analytic
+//!    baseline, always);
+//! 3. **measure** the survivors with the real kernels and the bench
+//!    harness's min-of-reps protocol ([`crate::bench_harness::measure`]);
+//! 4. **persist** the winner in an on-disk JSON [`TuneDb`] keyed by
+//!    (machine fingerprint, shape class, threads), consulted by
+//!    [`crate::plan::PlanBuilder::autotune`] and the coordinator's plan
+//!    cache.
+//!
+//! Because the analytic §5 configuration is always among the measured
+//! candidates, the stored winner is never slower than the open-loop
+//! default (up to measurement noise), and because every candidate is
+//! bound-validated, a tuned config still satisfies the paper's cache-fit
+//! guarantees. Tuned and analytic plans produce **bitwise identical**
+//! results — block sizes change the schedule, not the arithmetic (the
+//! equivalence suite asserts this).
+
+mod candidates;
+mod db;
+
+pub use candidates::candidates;
+pub use db::{TuneDb, TuneKey, TunedRecord};
+
+use crate::bench_harness::{measure, MeasureConfig};
+use crate::blocking::{plan as analytic_plan, CacheParams, KernelConfig};
+use crate::kernel::Algorithm;
+use crate::matrix::Matrix;
+use crate::plan::RotationPlan;
+use crate::rot::{OpSequence, RotationSequence};
+use crate::simulator::{simulate_algorithm, HierarchySpec};
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// Machine identity for TuneDb keys: the detected cache geometry. Two
+/// processes on the same machine agree on it regardless of CPU affinity
+/// or cgroup quotas (which is why thread counts are a separate key
+/// dimension, not part of the fingerprint — `available_parallelism`
+/// would make a DB tuned in a shell unreachable from a pinned service);
+/// a config tuned for one cache hierarchy is never served to another.
+pub fn machine_fingerprint(cache: CacheParams) -> String {
+    format!("t1-{}_t2-{}_t3-{}", cache.t1, cache.t2, cache.t3)
+}
+
+/// Bucket a shape into its tuning class: each dimension rounds up to the
+/// next power of two. Shapes in one bucket share a tuned config — block
+/// sizes depend on the cache-relative working set, which moves by factors,
+/// not increments. (Finer granularity is a ROADMAP follow-on.)
+pub fn shape_class(m: usize, n: usize, k: usize) -> (usize, usize, usize) {
+    (
+        m.max(1).next_power_of_two(),
+        n.max(1).next_power_of_two(),
+        k.max(1).next_power_of_two(),
+    )
+}
+
+/// The TuneDb key for a concrete problem on a concrete machine.
+pub fn tune_key(cache: CacheParams, m: usize, n: usize, k: usize, threads: usize) -> TuneKey {
+    TuneKey {
+        fingerprint: machine_fingerprint(cache),
+        shape_class: shape_class(m, n, k),
+        threads: threads.max(1),
+    }
+}
+
+/// Look up a tuned config for `(m, n, k, threads)` on the `cache` machine.
+/// Returns it with `threads` filled in; `None` when nothing was tuned (the
+/// caller falls back to the analytic §5 plan).
+pub fn lookup(
+    db: &TuneDb,
+    cache: CacheParams,
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+) -> Option<KernelConfig> {
+    let rec = db.get(&tune_key(cache, m, n, k, threads))?;
+    let mut cfg = rec.config;
+    cfg.threads = threads.max(1);
+    // Stale or hand-edited records must never poison a build.
+    cfg.validate_bounds(cache).ok()?;
+    Some(cfg)
+}
+
+/// Tuning effort knobs.
+#[derive(Clone, Debug)]
+pub struct TuneOptions {
+    /// Kernel sizes to draw candidates from.
+    pub kernels: Vec<(usize, usize)>,
+    /// How many simulator-ranked candidates to actually time (the
+    /// analytic baseline is timed on top of these, always).
+    pub sim_keep: usize,
+    /// Cap on the proxy shape the simulator replays (`m`,`n` capped here,
+    /// `k` at [`Self::sim_cap_k`]) — simulation is per-element, the full
+    /// shape would take minutes.
+    pub sim_cap_n: usize,
+    pub sim_cap_k: usize,
+    /// Timing protocol for the survivors.
+    pub mc: MeasureConfig,
+}
+
+impl Default for TuneOptions {
+    fn default() -> Self {
+        Self {
+            kernels: vec![(16, 2), (8, 5), (12, 3), (16, 4), (24, 2), (32, 2)],
+            sim_keep: 4,
+            sim_cap_n: 192,
+            sim_cap_k: 24,
+            mc: MeasureConfig::default(),
+        }
+    }
+}
+
+impl TuneOptions {
+    /// The CI profile: two kernels, two survivors, small proxy, quick
+    /// timing. A `rotseq tune --quick` finishes in seconds.
+    pub fn quick() -> Self {
+        Self {
+            kernels: vec![(16, 2), (8, 2)],
+            sim_keep: 2,
+            sim_cap_n: 96,
+            sim_cap_k: 12,
+            mc: MeasureConfig::quick(),
+        }
+    }
+}
+
+/// Per-candidate evidence, reported by [`tune_shape`] for printing.
+#[derive(Clone, Copy, Debug)]
+pub struct CandidateReport {
+    pub config: KernelConfig,
+    /// §1.2 predicted I/O at this `m_b`/`k_b` blocking (doubles,
+    /// [`crate::simulator::iolb::wavefront_io`]) — the analytic prior
+    /// that ranks the dimensions the capped simulation cannot see: the
+    /// proxy shape is far smaller than candidate `m_b`/`k_b`, so those
+    /// variants simulate identically and tie on `sim_cost`.
+    pub predicted_io: f64,
+    /// Eq 3.4 predicted memory operations per panel (analytic prior).
+    pub predicted_memops: f64,
+    /// Weighted simulated miss cost on the proxy shape (lower is better).
+    pub sim_cost: u64,
+    /// Simulated DRAM traffic on the proxy shape (bytes).
+    pub sim_traffic_bytes: u64,
+    /// Measured rate (Gflop/s, min-of-reps); `None` if pruned before
+    /// timing.
+    pub measured_gflops: Option<f64>,
+}
+
+/// The result of tuning one (shape, threads) point.
+#[derive(Clone, Debug)]
+pub struct TuneReport {
+    pub key: TuneKey,
+    pub cache: CacheParams,
+    /// Every candidate with its scores, simulator-rank order.
+    pub candidates: Vec<CandidateReport>,
+    /// The analytic §5 default (always measured).
+    pub analytic: KernelConfig,
+    pub analytic_gflops: f64,
+    /// The winner (highest measured rate; ≥ analytic by construction).
+    pub record: TunedRecord,
+}
+
+/// Tune one shape: generate → simulate → time → pick. Pure computation;
+/// [`tune_and_store`] adds persistence.
+pub fn tune_shape(
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+    cache: CacheParams,
+    opts: &TuneOptions,
+) -> Result<TuneReport> {
+    ensure!(m >= 1 && n >= 2 && k >= 1, "degenerate shape {m}x{n} k={k}");
+    let threads = threads.max(1);
+    let analytic = analytic_plan(16, 2, cache, threads);
+
+    // --- generate ---
+    let mut cands = candidates(cache, threads, &opts.kernels);
+    if !cands.contains(&analytic) {
+        cands.insert(0, analytic);
+    }
+
+    // --- prune with the simulator ---
+    let spec = HierarchySpec::from_cache_params(cache);
+    let (ms, ns, ks) = (
+        m.min(opts.sim_cap_n),
+        n.min(opts.sim_cap_n).max(2),
+        k.min(opts.sim_cap_k),
+    );
+    let mut scored: Vec<CandidateReport> = cands
+        .iter()
+        .map(|&config| {
+            let sim = simulate_algorithm(Algorithm::Kernel, ms, ns, ks, spec, &config)
+                .expect("kernel emitter never fails");
+            // Rough per-miss latency weights (L2/L3/DRAM fill costs): the
+            // ranking, not the absolute number, is what matters.
+            let sim_cost = 4 * sim.l1_misses + 16 * sim.l2_misses + 64 * sim.l3_misses;
+            CandidateReport {
+                config,
+                predicted_io: crate::simulator::iolb::wavefront_io(
+                    m,
+                    n,
+                    k,
+                    config.mb.min(m),
+                    config.kb.min(k),
+                ),
+                predicted_memops: crate::simulator::iolb::memops_wave_kernel(
+                    config.mb, config.nb, config.kb, config.mr, config.kr,
+                ),
+                sim_cost,
+                sim_traffic_bytes: sim.memory_traffic_bytes,
+                measured_gflops: None,
+            }
+        })
+        .collect();
+    // Primary order: simulated miss cost (sees m_r/k_r/n_b on the proxy
+    // shape). Tie-break: the §1.2 analytic I/O at the candidate's
+    // m_b/k_b blocking on the *real* shape — without it, m_b/k_b
+    // variants (invisible to the capped simulation) would be pruned by
+    // generation order instead of by any model.
+    scored.sort_by(|a, b| {
+        a.sim_cost.cmp(&b.sim_cost).then(
+            a.predicted_io
+                .partial_cmp(&b.predicted_io)
+                .unwrap_or(std::cmp::Ordering::Equal),
+        )
+    });
+    let mut survivors: Vec<usize> = (0..scored.len().min(opts.sim_keep.max(1))).collect();
+    if let Some(pos) = scored.iter().position(|c| c.config == analytic) {
+        if !survivors.contains(&pos) {
+            survivors.push(pos); // the baseline is always timed
+        }
+    }
+
+    // --- measure the survivors on the real shape ---
+    let seq = RotationSequence::random(n, k, 42);
+    let flops = OpSequence::flops(&seq, m);
+    let mut a = Matrix::random(m, n, 7);
+    let pool = (threads > 1).then(|| Arc::new(crate::parallel::WorkerPool::new(threads)));
+    for &idx in &survivors {
+        let config = scored[idx].config;
+        let mut builder = RotationPlan::builder().shape(m, n, k).config(config);
+        if let Some(pool) = &pool {
+            builder = builder.pool(Arc::clone(pool));
+        }
+        let mut plan = builder.build()?;
+        let meas = measure(&opts.mc, |_| {
+            plan.execute(&mut a, &seq).expect("tuning execute failed")
+        });
+        scored[idx].measured_gflops = Some(flops as f64 / meas.min_s.max(1e-12) / 1e9);
+    }
+
+    // --- pick ---
+    let analytic_gflops = scored
+        .iter()
+        .find(|c| c.config == analytic)
+        .and_then(|c| c.measured_gflops)
+        .expect("analytic baseline is always measured");
+    let winner = scored
+        .iter()
+        .filter(|c| c.measured_gflops.is_some())
+        .max_by(|x, y| {
+            x.measured_gflops
+                .partial_cmp(&y.measured_gflops)
+                .expect("rates are finite")
+        })
+        .expect("at least the baseline was measured");
+
+    Ok(TuneReport {
+        key: tune_key(cache, m, n, k, threads),
+        cache,
+        analytic,
+        analytic_gflops,
+        record: TunedRecord {
+            config: winner.config,
+            gflops: winner.measured_gflops.expect("winner was measured"),
+            analytic_gflops,
+            sim_traffic_bytes: winner.sim_traffic_bytes,
+        },
+        candidates: scored,
+    })
+}
+
+/// Tune one shape and persist the winner in `db` (saving to disk when the
+/// DB has a path).
+pub fn tune_and_store(
+    db: &TuneDb,
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+    cache: CacheParams,
+    opts: &TuneOptions,
+) -> Result<TuneReport> {
+    let report = tune_shape(m, n, k, threads, cache, opts)?;
+    db.put(report.key.clone(), report.record);
+    db.save()?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_opts() -> TuneOptions {
+        TuneOptions {
+            kernels: vec![(8, 2), (4, 2)],
+            sim_keep: 2,
+            sim_cap_n: 48,
+            sim_cap_k: 6,
+            mc: MeasureConfig {
+                warmup: 0,
+                reps: 1,
+                time_budget: 5.0,
+            },
+        }
+    }
+
+    #[test]
+    fn shape_class_buckets_by_power_of_two() {
+        assert_eq!(shape_class(960, 960, 180), (1024, 1024, 256));
+        assert_eq!(shape_class(1024, 1024, 256), (1024, 1024, 256));
+        assert_eq!(shape_class(1, 2, 1), (1, 2, 1));
+        // Same bucket => same key => shared tuning.
+        let c = CacheParams::PAPER_MACHINE;
+        assert_eq!(tune_key(c, 700, 700, 150, 2), tune_key(c, 960, 960, 180, 2));
+        assert_ne!(tune_key(c, 700, 700, 150, 2), tune_key(c, 700, 700, 150, 4));
+    }
+
+    #[test]
+    fn tune_stores_a_bound_respecting_winner_no_slower_than_analytic() {
+        let cache = CacheParams::PAPER_MACHINE;
+        let db = TuneDb::in_memory();
+        let report = tune_and_store(&db, 64, 48, 6, 1, cache, &small_opts()).unwrap();
+        assert!(report.record.gflops >= report.analytic_gflops);
+        report.record.config.validate_bounds(cache).unwrap();
+        assert_eq!(db.len(), 1);
+        // And the lookup round-trips through the same key derivation.
+        let cfg = lookup(&db, cache, 64, 48, 6, 1).unwrap();
+        assert_eq!(cfg, report.record.config);
+        // A different thread count is a different key: no entry.
+        assert!(lookup(&db, cache, 64, 48, 6, 2).is_none());
+    }
+
+    #[test]
+    fn analytic_baseline_is_always_among_measured() {
+        let cache = CacheParams::PAPER_MACHINE;
+        let report = tune_shape(48, 32, 4, 1, cache, &small_opts()).unwrap();
+        let analytic = report.analytic;
+        assert!(report
+            .candidates
+            .iter()
+            .any(|c| c.config == analytic && c.measured_gflops.is_some()));
+    }
+
+    #[test]
+    fn lookup_rejects_records_invalid_for_the_cache() {
+        // A record whose blocks violate this machine's bounds (e.g. the
+        // file was copied from a bigger machine with a colliding
+        // fingerprint) is ignored.
+        let cache = CacheParams::PAPER_MACHINE;
+        let db = TuneDb::in_memory();
+        let key = tune_key(cache, 64, 48, 6, 1);
+        db.put(
+            key,
+            TunedRecord {
+                config: KernelConfig {
+                    mr: 16,
+                    kr: 2,
+                    mb: cache.t3, // mb·(nb+kb) ≫ T3: violates Eq 5.6
+                    kb: 60,
+                    nb: 192,
+                    threads: 1,
+                },
+                gflops: 1.0,
+                analytic_gflops: 1.0,
+                sim_traffic_bytes: 0,
+            },
+        );
+        assert!(lookup(&db, cache, 64, 48, 6, 1).is_none());
+    }
+}

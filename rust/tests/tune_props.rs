@@ -1,0 +1,254 @@
+//! Autotuning + §5-bounds property suites:
+//!
+//! * every planned config satisfies Eq 5.1–5.6 for randomized cache
+//!   geometries (the clamp-bug regression class);
+//! * every tuner candidate satisfies the same bounds;
+//! * the TuneDb round-trips through disk deterministically;
+//! * a tuned plan's `execute` output is bitwise equal to the analytic
+//!   plan's.
+
+use rotseq::bench_harness::MeasureConfig;
+use rotseq::blocking::{plan, CacheParams, KernelConfig};
+use rotseq::matrix::{max_abs_diff, Matrix, Rng64};
+use rotseq::plan::RotationPlan;
+use rotseq::rot::{apply_naive, RotationSequence};
+use rotseq::testutil::property;
+use rotseq::tune::{
+    candidates, tune_and_store, tune_key, TuneDb, TuneKey, TuneOptions, TunedRecord,
+};
+use std::sync::Arc;
+
+/// Random but internally consistent cache geometry, down to sizes small
+/// enough to force the planner's kernel-shrink path.
+fn arb_cache(rng: &mut Rng64) -> CacheParams {
+    let t1 = 16 + rng.next_below(8_000);
+    let t2 = t1 * (2 + rng.next_below(10));
+    let t3 = t2 * (2 + rng.next_below(100));
+    CacheParams { t1, t2, t3 }
+}
+
+#[test]
+fn planned_configs_satisfy_bounds_for_random_caches() {
+    property(
+        "plan ⊨ Eq 5.1–5.6",
+        0x7E57,
+        80,
+        |rng| {
+            let kernels = rotseq::kernel::SUPPORTED_KERNELS;
+            let (mr, kr) = kernels[rng.next_below(kernels.len())];
+            (mr, kr, arb_cache(rng), 1 + rng.next_below(8))
+        },
+        |&(mr, kr, cache, threads)| {
+            let cfg = plan(mr, kr, cache, threads);
+            cfg.validate_bounds(cache)
+                .unwrap_or_else(|e| panic!("plan({mr},{kr},{cache:?}): {e}"));
+            assert_eq!(cfg.threads, threads);
+        },
+    );
+}
+
+#[test]
+fn tuner_candidates_satisfy_bounds_for_random_caches() {
+    property(
+        "candidates ⊨ Eq 5.1–5.6",
+        0xCA9D,
+        40,
+        |rng| (arb_cache(rng), 1 + rng.next_below(4)),
+        |&(cache, threads)| {
+            let cands = candidates(cache, threads, &[(16, 2), (8, 5), (12, 3), (4, 2), (1, 1)]);
+            for c in &cands {
+                c.validate_bounds(cache)
+                    .unwrap_or_else(|e| panic!("candidate {c:?} for {cache:?}: {e}"));
+                assert_eq!(c.threads, threads);
+            }
+        },
+    );
+}
+
+#[test]
+fn tunedb_roundtrips_deterministically_with_random_entries() {
+    let path = std::env::temp_dir().join(format!(
+        "rotseq-tunedb-props-{}.json",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+
+    let mut rng = Rng64::new(0xD8);
+    let db = TuneDb::open(&path).unwrap();
+    let mut expected: Vec<(TuneKey, TunedRecord)> = Vec::new();
+    for i in 0..20 {
+        let cache = arb_cache(&mut rng);
+        // Unique threads per entry => unique keys even if the random
+        // caches/shapes collide (BTreeMap overwrite would desync the
+        // expected list otherwise).
+        let threads = i + 1;
+        let key = tune_key(
+            cache,
+            1 + rng.next_below(4096),
+            2 + rng.next_below(4096),
+            1 + rng.next_below(512),
+            threads,
+        );
+        let record = TunedRecord {
+            config: plan(16, 2, cache, threads),
+            gflops: rng.next_f64() * 20.0,
+            analytic_gflops: rng.next_f64() * 20.0,
+            sim_traffic_bytes: rng.next_below(1 << 40) as u64,
+        };
+        db.put(key.clone(), record);
+        expected.push((key, record));
+        // Save at a few intermediate sizes too: every save must be
+        // loadable and re-savable byte-identically.
+        if i % 7 == 0 {
+            db.save().unwrap();
+        }
+    }
+    db.save().unwrap();
+    let bytes1 = std::fs::read_to_string(&path).unwrap();
+
+    let reopened = TuneDb::open(&path).unwrap();
+    for (key, record) in &expected {
+        assert_eq!(
+            reopened.get(key).as_ref(),
+            Some(record),
+            "lost or mangled {key:?}"
+        );
+    }
+    reopened.save().unwrap();
+    let bytes2 = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(bytes1, bytes2, "save is not byte-deterministic");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn tuned_plan_is_bitwise_equal_to_analytic_plan() {
+    let cache = CacheParams::PAPER_MACHINE;
+    let (m, n, k) = (48, 36, 6);
+    let db = Arc::new(TuneDb::in_memory());
+    let opts = TuneOptions {
+        kernels: vec![(8, 2), (12, 3)],
+        sim_keep: 2,
+        sim_cap_n: 48,
+        sim_cap_k: 6,
+        mc: MeasureConfig {
+            warmup: 0,
+            reps: 1,
+            time_budget: 5.0,
+        },
+    };
+    let report = tune_and_store(&db, m, n, k, 1, cache, &opts).unwrap();
+    assert!(report.record.gflops >= report.analytic_gflops);
+
+    // Autotuned build hits the record we just stored.
+    let mut tuned_plan = RotationPlan::builder()
+        .shape(m, n, k)
+        .cache(cache)
+        .tune_db(Arc::clone(&db))
+        .build()
+        .unwrap();
+    assert!(tuned_plan.is_tuned());
+    assert_eq!(*tuned_plan.config(), report.record.config);
+
+    let mut analytic_plan = RotationPlan::builder()
+        .shape(m, n, k)
+        .cache(cache)
+        .build()
+        .unwrap();
+    assert!(!analytic_plan.is_tuned());
+
+    // Same inputs through both plans (and the naive reference): bitwise
+    // identical outputs — tuning changes the schedule, not the result.
+    for seed in 0..3u64 {
+        let seq = RotationSequence::random(n, k, seed);
+        let base = Matrix::random(m, n, 100 + seed);
+        let mut reference = base.clone();
+        apply_naive(&mut reference, &seq);
+        let (mut a_t, mut a_a) = (base.clone(), base.clone());
+        tuned_plan.execute(&mut a_t, &seq).unwrap();
+        analytic_plan.execute(&mut a_a, &seq).unwrap();
+        assert_eq!(max_abs_diff(&a_t, &a_a), 0.0, "seed {seed}");
+        assert_eq!(max_abs_diff(&a_t, &reference), 0.0, "seed {seed} vs naive");
+    }
+}
+
+#[test]
+fn tuned_threads_are_keyed_separately_and_match_serial_results() {
+    // A record tuned for 3 threads must not leak into serial plans, and a
+    // pooled tuned plan still agrees bitwise with the serial one.
+    let cache = CacheParams::PAPER_MACHINE;
+    let (m, n, k) = (64, 24, 4);
+    let db = Arc::new(TuneDb::in_memory());
+    let mut cfg3 = plan(8, 2, cache, 3);
+    cfg3.mb = 16;
+    db.put(
+        tune_key(cache, m, n, k, 3),
+        TunedRecord {
+            config: cfg3,
+            gflops: 1.0,
+            analytic_gflops: 1.0,
+            sim_traffic_bytes: 0,
+        },
+    );
+
+    let serial = RotationPlan::builder()
+        .shape(m, n, k)
+        .cache(cache)
+        .tune_db(Arc::clone(&db))
+        .build()
+        .unwrap();
+    assert!(!serial.is_tuned(), "threads=1 must miss the threads=3 record");
+
+    let mut pooled = RotationPlan::builder()
+        .shape(m, n, k)
+        .cache(cache)
+        .threads(3)
+        .tune_db(Arc::clone(&db))
+        .build()
+        .unwrap();
+    assert!(pooled.is_tuned());
+
+    let seq = RotationSequence::random(n, k, 9);
+    let base = Matrix::random(m, n, 10);
+    let mut reference = base.clone();
+    apply_naive(&mut reference, &seq);
+    let mut a = base.clone();
+    pooled.execute(&mut a, &seq).unwrap();
+    assert_eq!(max_abs_diff(&a, &reference), 0.0);
+}
+
+#[test]
+fn config_equality_is_what_the_db_stores() {
+    // Guard against silent schema drift: a stored config reads back
+    // field-for-field (KernelConfig is the TuneDb's payload).
+    let cfg = KernelConfig {
+        mr: 12,
+        kr: 3,
+        mb: 4692,
+        kb: 66,
+        nb: 216,
+        threads: 2,
+    };
+    let path = std::env::temp_dir().join(format!(
+        "rotseq-tunedb-schema-{}.json",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+    let db = TuneDb::open(&path).unwrap();
+    let key = tune_key(CacheParams::PAPER_MACHINE, 100, 200, 30, 2);
+    db.put(
+        key.clone(),
+        TunedRecord {
+            config: cfg,
+            gflops: 2.5,
+            analytic_gflops: 2.25,
+            sim_traffic_bytes: 987_654_321,
+        },
+    );
+    db.save().unwrap();
+    let back = TuneDb::open(&path).unwrap().get(&key).unwrap();
+    assert_eq!(back.config, cfg);
+    assert_eq!(back.gflops, 2.5);
+    assert_eq!(back.analytic_gflops, 2.25);
+    assert_eq!(back.sim_traffic_bytes, 987_654_321);
+    let _ = std::fs::remove_file(&path);
+}
