@@ -116,9 +116,9 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let mut bcfg = cfg;
     bcfg.threads = 2;
-    let mut bplan = RotationPlan::builder().shape(bm, bn, bk).config(bcfg).build()?;
+    let mut bsession = RotationPlan::builder().shape(bm, bn, bk).config(bcfg).build_session()?;
     let t0 = std::time::Instant::now();
-    bplan.execute_batch(&mut batch, &bseq)?;
+    bsession.execute_batch(&mut batch, &bseq)?;
     let dt = t0.elapsed().as_secs_f64();
     for (got, want) in batch.iter().zip(&expected) {
         anyhow::ensure!(max_abs_diff(got, want) == 0.0, "batch result mismatch");
@@ -136,11 +136,11 @@ fn main() -> anyhow::Result<()> {
     let seq = RotationSequence::random(n, k, 42);
     let mut a = Matrix::random(m, n, 7);
     let flops = OpSequence::flops(&seq, m);
-    let mut rplan = RotationPlan::builder().shape(m, n, k).config(cfg).build()?;
-    // Warmup + measured run (the plan keeps its workspace between them).
-    rplan.execute(&mut a, &seq)?;
+    let mut rsession = RotationPlan::builder().shape(m, n, k).config(cfg).build_session()?;
+    // Warmup + measured run (the session keeps its context between them).
+    rsession.execute(&mut a, &seq)?;
     let t0 = std::time::Instant::now();
-    rplan.execute(&mut a, &seq)?;
+    rsession.execute(&mut a, &seq)?;
     let dt = t0.elapsed().as_secs_f64();
     println!(
         "  {:.3}s -> {:.3} Gflop/s (useful flops 6*m*(n-1)*k = {:.3e})",

@@ -1,9 +1,11 @@
-//! Quickstart: plan once, execute many.
+//! Quickstart: plans are shared, contexts are rented.
 //!
-//! Builds a `RotationPlan` for the paper's workload shape, executes it
-//! against a stream of sequence sets (the Hessenberg-QR usage pattern),
-//! verifies a round trip through `execute_inverse`, and compares every
-//! algorithm variant through the same plan API.
+//! Builds an immutable `RotationPlan` for the paper's workload shape,
+//! executes it against a stream of sequence sets through a `Session` (the
+//! Hessenberg-QR usage pattern), fans the *same* `Arc` plan out over
+//! several threads with pooled `ExecCtx`s, verifies a round trip through
+//! `execute_inverse`, and compares every algorithm variant through the
+//! same API.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -11,8 +13,9 @@
 
 use rotseq::kernel::Algorithm;
 use rotseq::matrix::{frobenius_norm, max_abs_diff, rel_error, Matrix};
-use rotseq::plan::RotationPlan;
+use rotseq::plan::{RotationPlan, Session, WorkspacePool};
 use rotseq::rot::{apply_naive, OpSequence, RotationSequence};
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     // The paper's workload shape: k sequences of n-1 rotations applied to
@@ -22,8 +25,10 @@ fn main() -> anyhow::Result<()> {
 
     let a0 = Matrix::random(m, n, 7);
 
-    // Plan once: §5 block solve, kernel selection, workspace allocation.
-    let mut plan = RotationPlan::builder().shape(m, n, k).build()?;
+    // Plan once: §5 block solve + kernel selection. The plan is immutable
+    // and Send + Sync — share it via Arc; buffers live in per-executor
+    // contexts.
+    let plan = Arc::new(RotationPlan::builder().shape(m, n, k).build()?);
     let cfg = plan.config();
     println!(
         "planner: m_r={} k_r={} -> n_b={} k_b={} m_b={}",
@@ -31,14 +36,11 @@ fn main() -> anyhow::Result<()> {
     );
 
     // `.autotune()` consults the persistent TuneDb (populated by
-    // `rotseq tune`) before falling back to the analytic §5 solve; the
-    // tuned schedule is bitwise-equivalent, just faster. (Status probe
-    // only — unwarmed so no full workspace is allocated for it.)
-    let tuned = RotationPlan::builder()
-        .shape(m, n, k)
-        .autotune()
-        .warm_workspace(false)
-        .build()?;
+    // `rotseq tune`; exact-shape records from `--shape MxNxK` win over
+    // the class bucket) before falling back to the analytic §5 solve;
+    // the tuned schedule is bitwise-equivalent, just faster. Status
+    // probe only — plans are buffer-free, so this costs nothing.
+    let tuned = RotationPlan::builder().shape(m, n, k).autotune().build()?;
     println!(
         "autotune: {}\n",
         if tuned.is_tuned() {
@@ -49,14 +51,16 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Execute many: same plan, fresh rotations every sweep — the hot loop
-    // of Hessenberg QR / Jacobi SVD. Zero allocation per call.
+    // of Hessenberg QR / Jacobi SVD. A Session pairs the shared plan with
+    // one executor's context; zero allocation per call.
     let sweeps = 8;
+    let mut session = Session::new(Arc::clone(&plan));
     let mut a = a0.clone();
     let t0 = std::time::Instant::now();
     let mut flops = 0u64;
     for sweep in 0..sweeps {
         let seq = RotationSequence::random(n, k, 42 + sweep);
-        plan.execute(&mut a, &seq)?;
+        session.execute(&mut a, &seq)?;
         flops += OpSequence::flops(&seq, m);
     }
     let dt = t0.elapsed().as_secs_f64();
@@ -68,20 +72,64 @@ fn main() -> anyhow::Result<()> {
         frobenius_norm(&a)
     );
 
-    // Undo everything through the same plan (reverse sweep order).
+    // Undo everything through the same session (reverse sweep order).
     for sweep in (0..sweeps).rev() {
         let seq = RotationSequence::random(n, k, 42 + sweep);
-        plan.execute_inverse(&mut a, &seq)?;
+        session.execute_inverse(&mut a, &seq)?;
     }
     println!("inverse executes restore A: rel err {:.2e}\n", rel_error(&a, &a0));
 
-    // Parallel + batched execution: `.threads(w)` gives the plan a
-    // persistent §7 worker pool (threads spawned once, at build), and
-    // `execute_batch` applies one sequence set to many same-shaped
-    // matrices while packing the C/S wave streams once for the whole
-    // batch. Results are bitwise identical to one-at-a-time executes.
+    // Concurrent serving: N threads share ONE plan (no clones, no locks
+    // on the plan) and rent contexts from a WorkspacePool. This is the
+    // coordinator's same-shape fan-out in miniature.
+    let executors = 4;
+    let ws_pool = Arc::new(WorkspacePool::new());
+    let seq = Arc::new(RotationSequence::random(n, k, 11));
+    let mut check = a0.clone();
+    apply_naive(&mut check, &seq);
+    let t0 = std::time::Instant::now();
+    let outputs: Vec<Matrix> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..executors)
+            .map(|_| {
+                let plan = Arc::clone(&plan);
+                let ws_pool = Arc::clone(&ws_pool);
+                let seq = Arc::clone(&seq);
+                let mut mine = a0.clone();
+                scope.spawn(move || {
+                    let mut ctx = ws_pool.rent(&plan);
+                    plan.execute(&mut ctx, &mut mine, &seq).unwrap();
+                    ws_pool.give_back(ctx);
+                    mine
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    let worst = outputs
+        .iter()
+        .map(|o| max_abs_diff(o, &check))
+        .fold(0.0f64, f64::max);
+    println!(
+        "{executors} threads over one shared Arc plan: {:.3}s, max|err| vs naive {:.2e} \
+         (ctxs created {}, reused {})\n",
+        dt,
+        worst,
+        ws_pool.ctxs_created(),
+        ws_pool.ctxs_reused()
+    );
+
+    // Parallel + batched execution: `.threads(w)` plans the §7 partition,
+    // and the session's context owns a persistent worker pool (threads
+    // spawned once). `execute_batch` applies one sequence set to many
+    // same-shaped matrices while packing the C/S wave streams once for
+    // the whole batch. Results are bitwise identical to one-at-a-time
+    // executes.
     let workers = 4;
-    let mut pooled = RotationPlan::builder().shape(m, n, k).threads(workers).build()?;
+    let mut pooled = RotationPlan::builder()
+        .shape(m, n, k)
+        .threads(workers)
+        .build_session()?;
     let seq = RotationSequence::random(n, k, 7);
     let mut batch: Vec<Matrix> = (0..6).map(|i| Matrix::random(m, n, 100 + i)).collect();
     let mut check = batch[0].clone();
@@ -105,10 +153,13 @@ fn main() -> anyhow::Result<()> {
     let flops = OpSequence::flops(&seq, m);
     println!("{:<18} {:>9} {:>10} {:>12}", "algorithm", "time", "Gflop/s", "max|err|");
     for &algo in Algorithm::ALL {
-        let mut vplan = RotationPlan::builder().shape(m, n, k).algorithm(algo).build()?;
+        let mut vsession = RotationPlan::builder()
+            .shape(m, n, k)
+            .algorithm(algo)
+            .build_session()?;
         let mut a = a0.clone();
         let t0 = std::time::Instant::now();
-        vplan.execute(&mut a, &seq)?;
+        vsession.execute(&mut a, &seq)?;
         let dt = t0.elapsed().as_secs_f64();
         println!(
             "{:<18} {:>8.3}s {:>10.3} {:>12.2e}",

@@ -92,12 +92,12 @@ fn main() {
     let meas_oneshot = measure(&mc, |_| {
         apply_with(Algorithm::Kernel, &mut pa, &pseq, &cfg).unwrap()
     });
-    let mut rplan = RotationPlan::builder()
+    let mut rsession = RotationPlan::builder()
         .shape(pm, pn, pk)
         .config(cfg)
-        .build()
+        .build_session()
         .unwrap();
-    let meas_planned = measure(&mc, |_| rplan.execute(&mut pa, &pseq).unwrap());
+    let meas_planned = measure(&mc, |_| rsession.execute(&mut pa, &pseq).unwrap());
     println!(
         "\n# plan amortization m={pm} n={pn} k={pk}: one-shot {:.3} Gflop/s, planned {:.3} Gflop/s ({:.1}% setup overhead amortized)",
         pflops as f64 / meas_oneshot.median_s / 1e9,

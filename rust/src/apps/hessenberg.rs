@@ -10,7 +10,7 @@
 use crate::blocking::KernelConfig;
 use crate::kernel::Algorithm;
 use crate::matrix::Matrix;
-use crate::plan::RotationPlan;
+use crate::plan::{RotationPlan, Session};
 use crate::rot::{Givens, RotationSequence};
 use anyhow::{bail, Result};
 
@@ -142,12 +142,13 @@ pub fn symmetric_eigen(a: &Matrix, cfg: &KernelConfig) -> Result<EigenResult> {
     let mut sweeps = 0;
     let mut batches = 0;
     // Every delayed batch applies to the same n x n eigenvector matrix:
-    // plan once (block solve + packing workspace), execute per batch.
-    let mut plan = RotationPlan::builder()
+    // plan once (block solve + context allocation), execute per batch
+    // through a single-executor session.
+    let mut session = RotationPlan::builder()
         .shape(n, n, DELAYED_SWEEPS)
         .algorithm(Algorithm::Kernel)
         .config(*cfg)
-        .build()?;
+        .build_session()?;
     // Pending sequences: each sweep contributes one column of (c, s).
     let mut pending: Vec<(Vec<f64>, Vec<f64>)> = Vec::new();
 
@@ -175,12 +176,12 @@ pub fn symmetric_eigen(a: &Matrix, cfg: &KernelConfig) -> Result<EigenResult> {
         sweeps += 1;
 
         if pending.len() == DELAYED_SWEEPS {
-            apply_pending(&mut q, &mut pending, &mut plan)?;
+            apply_pending(&mut q, &mut pending, &mut session)?;
             batches += 1;
         }
     }
     if !pending.is_empty() {
-        apply_pending(&mut q, &mut pending, &mut plan)?;
+        apply_pending(&mut q, &mut pending, &mut session)?;
         batches += 1;
     }
 
@@ -258,11 +259,12 @@ fn qr_sweep(t: &mut Tridiagonal, lo: usize, hi: usize) -> (Vec<f64>, Vec<f64>) {
 }
 
 /// Apply the pending sweep sequences to the eigenvector matrix through the
-/// prebuilt plan (reused packing workspace), then clear the batch.
+/// prebuilt session (shared plan + reused packing context), then clear the
+/// batch.
 fn apply_pending(
     q: &mut Matrix,
     pending: &mut Vec<(Vec<f64>, Vec<f64>)>,
-    plan: &mut RotationPlan,
+    session: &mut Session,
 ) -> Result<()> {
     let n = q.cols();
     let k = pending.len();
@@ -271,7 +273,7 @@ fn apply_pending(
         s: pending[p].1[i],
     });
     pending.clear();
-    plan.execute(q, &seq)
+    session.execute(q, &seq)
 }
 
 #[cfg(test)]

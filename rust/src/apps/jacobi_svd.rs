@@ -61,17 +61,17 @@ pub fn jacobi_svd(a: &Matrix, cfg: &KernelConfig) -> Result<SvdResult> {
     if n >= 2 {
         // Every half-sweep applies one adjacent-pair sequence to the same
         // two shapes (work: m x n, V: n x n) — the plan API's home turf:
-        // plan each shape once, execute per half-sweep.
-        let mut work_plan = RotationPlan::builder()
+        // plan each shape once, execute per half-sweep through a session.
+        let mut work_session = RotationPlan::builder()
             .shape(m, n, 1)
             .algorithm(Algorithm::Kernel)
             .config(*cfg)
-            .build()?;
-        let mut v_plan = RotationPlan::builder()
+            .build_session()?;
+        let mut v_session = RotationPlan::builder()
             .shape(n, n, 1)
             .algorithm(Algorithm::Kernel)
             .config(*cfg)
-            .build()?;
+            .build_session()?;
         let mut parity = 0usize;
         while quiet < n {
             let mut cs = vec![1.0; n - 1];
@@ -94,8 +94,8 @@ pub fn jacobi_svd(a: &Matrix, cfg: &KernelConfig) -> Result<SvdResult> {
                     s: sn[ii],
                 });
                 // The paper's kernel on both the data and the accumulated V.
-                work_plan.execute(&mut work, &seq)?;
-                v_plan.execute(&mut v, &seq)?;
+                work_session.execute(&mut work, &seq)?;
+                v_session.execute(&mut v, &seq)?;
                 quiet = 0;
             } else {
                 quiet += 1;

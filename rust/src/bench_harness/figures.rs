@@ -90,12 +90,12 @@ pub fn fig5_serial(
         // rs_kernel (packs per call; planned once, executed per rep — the
         // plan-once/execute-many usage the paper's consumers follow)
         let mut a = base.clone();
-        let mut kernel_plan = RotationPlan::builder()
+        let mut kernel_session = RotationPlan::builder()
             .shape(m, n, k)
             .config(cfg)
-            .build()
+            .build_session()
             .expect("kernel plan");
-        let meas = measure(mc, |_| kernel_plan.execute(&mut a, &seq).unwrap());
+        let meas = measure(mc, |_| kernel_session.execute(&mut a, &seq).unwrap());
         results.push(("rs_kernel", gflops_of(flops, &meas)));
 
         // rs_kernel_v2 (pre-packed)
@@ -112,12 +112,12 @@ pub fn fig5_serial(
             match crate::tune::lookup(db, cache, m, n, k, threads.max(1)) {
                 Some(cfg_t) => {
                     let mut a = base.clone();
-                    let mut tuned_plan = RotationPlan::builder()
+                    let mut tuned_session = RotationPlan::builder()
                         .shape(m, n, k)
                         .config(cfg_t)
-                        .build()
+                        .build_session()
                         .expect("tuned kernel plan");
-                    let meas = measure(mc, |_| tuned_plan.execute(&mut a, &seq).unwrap());
+                    let meas = measure(mc, |_| tuned_session.execute(&mut a, &seq).unwrap());
                     results.push(("rs_kernel_tuned", gflops_of(flops, &meas)));
                 }
                 None => eprintln!(

@@ -14,6 +14,6 @@ mod router;
 mod server;
 
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use plancache::{PlanCache, PlanKey};
+pub use plancache::{ExecTracker, KeyStats, PlanCache, PlanKey, DEFAULT_MAX_CACHED};
 pub use router::{route, RoutePolicy};
 pub use server::{Coordinator, Job, JobResult, JobSpec};

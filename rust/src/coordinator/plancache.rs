@@ -1,11 +1,16 @@
-//! Shared plan cache: the coordinator serves repeated same-shaped jobs, so
-//! workers check [`crate::plan::RotationPlan`]s out of a pool keyed by
-//! shape + algorithm + parameters instead of re-planning per job.
+//! Shared plan cache: the coordinator serves repeated same-shaped jobs
+//! through **one `Arc<RotationPlan>` per key**. Plans are immutable and
+//! buffer-free since the plan/ctx split, so N workers execute the same
+//! plan simultaneously — no checkout pool, no plan clones, no re-planning
+//! per job. Per-execution buffers come from the cache's shared
+//! [`WorkspacePool`] instead.
 //!
-//! Checkout/checkin (rather than a shared `&RotationPlan`) because
-//! executing needs `&mut` access to the plan's workspace; two concurrent
-//! jobs with the same key simply populate two pooled plans, and the lock
-//! is never held while a job runs.
+//! (The pre-split design kept a `Mutex<Vec<RotationPlan>>` checkout pool
+//! and built a *second* full plan — packing buffers and all — whenever two
+//! same-key jobs overlapped. That pool is gone: a cache hit is now an
+//! `Arc` clone, and builds are single-flight under the map lock, which is
+//! cheap precisely because building a plan no longer allocates any
+//! workspace.)
 //!
 //! The cache also owns the shared [`WorkerPool`]s: parallel plans built by
 //! the coordinator dispatch into one persistent pool per thread count
@@ -14,14 +19,14 @@
 use crate::blocking::{plan as analytic_plan, CacheParams, KernelConfig};
 use crate::kernel::Algorithm;
 use crate::parallel::WorkerPool;
-use crate::plan::RotationPlan;
+use crate::plan::{RotationPlan, WorkspacePool};
 use crate::tune::{self, TuneDb};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 /// What makes two jobs plan-compatible. The embedded [`KernelConfig`]
 /// carries the thread count, so plans with different §7 partitionings (and
-/// hence different worker pools and workspace layouts) never share a key.
+/// hence different worker pools and context layouts) never share a key.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct PlanKey {
     pub m: usize,
@@ -31,17 +36,41 @@ pub struct PlanKey {
     pub config: KernelConfig,
 }
 
-/// Default bound on pooled plans (a Kernel plan's workspace is roughly a
-/// packed copy of its matrix, so an unbounded pool would grow resident
-/// memory for the life of the service as new shapes arrive).
-pub const DEFAULT_MAX_POOLED: usize = 32;
+/// Default bound on cached plans. Plans are buffer-free, so this bounds
+/// bookkeeping rather than memory; the memory bound lives on the
+/// [`WorkspacePool`].
+pub const DEFAULT_MAX_CACHED: usize = 64;
 
-/// A bounded pool of reusable plans, keyed by [`PlanKey`]. When the pool
-/// is full, `checkin` drops the plan instead (the next job with that key
-/// simply rebuilds — a cache miss, never an error).
+struct CacheEntry {
+    plan: Arc<RotationPlan>,
+    /// Logical clock tick of the last hit (LRU eviction).
+    last_used: u64,
+}
+
+/// Per-key execution statistics: how often the key's shared plan was
+/// reused, and how many executors ran it at once — the observable proof
+/// that same-shape fan-out shares one plan instead of cloning per job.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KeyStats {
+    /// Lookups served by the cached `Arc` (no build).
+    pub hits: u64,
+    /// Plans built for this key (1 at steady state; eviction can rebuild).
+    pub builds: u64,
+    /// Executions currently in flight through [`PlanCache::track`].
+    pub in_flight: u64,
+    /// High-water mark of concurrent executions on this key's plan.
+    pub peak_concurrency: u64,
+}
+
+/// A bounded map of shared plans, keyed by [`PlanKey`], plus the
+/// [`WorkspacePool`] their executions rent contexts from. At capacity the
+/// least-recently-used key is evicted (in-flight executions keep their
+/// `Arc`; only the cache's reference is dropped).
 pub struct PlanCache {
-    pool: Mutex<HashMap<PlanKey, Vec<RotationPlan>>>,
-    max_pooled: usize,
+    plans: Mutex<HashMap<PlanKey, CacheEntry>>,
+    capacity: usize,
+    /// Logical clock for LRU ordering.
+    clock: std::sync::atomic::AtomicU64,
     /// One persistent §7 worker pool per thread count, shared by every
     /// parallel plan the coordinator builds.
     workers: Mutex<HashMap<usize, Arc<WorkerPool>>>,
@@ -49,11 +78,15 @@ pub struct PlanCache {
     /// [`Self::tuned_key`] swaps analytic-default configs for tuned ones
     /// before plans are built or looked up.
     tuning: Mutex<Option<(Arc<TuneDb>, CacheParams)>>,
+    /// Rentable per-execution contexts for every plan in the cache.
+    workspaces: Arc<WorkspacePool>,
+    /// Per-key hit/build/concurrency counters.
+    stats: Mutex<HashMap<PlanKey, KeyStats>>,
 }
 
 impl Default for PlanCache {
     fn default() -> Self {
-        Self::with_capacity(DEFAULT_MAX_POOLED)
+        Self::with_capacity(DEFAULT_MAX_CACHED)
     }
 }
 
@@ -62,13 +95,16 @@ impl PlanCache {
         Self::default()
     }
 
-    /// A cache holding at most `max_pooled` plans across all keys.
-    pub fn with_capacity(max_pooled: usize) -> Self {
+    /// A cache holding at most `capacity` plans across all keys.
+    pub fn with_capacity(capacity: usize) -> Self {
         Self {
-            pool: Mutex::new(HashMap::new()),
-            max_pooled,
+            plans: Mutex::new(HashMap::new()),
+            capacity: capacity.max(1),
+            clock: std::sync::atomic::AtomicU64::new(0),
             workers: Mutex::new(HashMap::new()),
             tuning: Mutex::new(None),
+            workspaces: Arc::new(WorkspacePool::new()),
+            stats: Mutex::new(HashMap::new()),
         }
     }
 
@@ -87,8 +123,9 @@ impl PlanCache {
     /// analytic solve on the installed cache or the library fallback
     /// [`KernelConfig::default`]'s paper-machine solve (an operator
     /// override is respected verbatim) — and (d) the DB has a record for
-    /// this machine + shape class + thread count. Identity otherwise —
-    /// jobs keep working with no DB exactly as before.
+    /// this machine + shape + thread count (exact-shape records first,
+    /// then the shape class). Identity otherwise — jobs keep working with
+    /// no DB exactly as before.
     pub fn tuned_key(&self, mut key: PlanKey) -> PlanKey {
         if key.algorithm != Algorithm::Kernel {
             return key;
@@ -132,52 +169,145 @@ impl PlanCache {
         )
     }
 
-    /// Take a plan for `key` out of the pool, if one is available.
-    pub fn checkout(&self, key: &PlanKey) -> Option<RotationPlan> {
-        let mut pool = self.pool.lock().expect("plan cache poisoned");
-        pool.get_mut(key).and_then(Vec::pop)
+    /// The [`WorkspacePool`] executions against cached plans rent their
+    /// [`crate::plan::ExecCtx`]s from.
+    pub fn workspace_pool(&self) -> &Arc<WorkspacePool> {
+        &self.workspaces
     }
 
-    /// Return a plan to the pool for the next job with the same key. At
-    /// capacity, one plan of another key is evicted first (the key with the
-    /// most pooled plans), so a workload shift to a new hot shape displaces
-    /// stale entries instead of being starved; only when the pool is full
-    /// of this very key is the incoming plan dropped.
-    pub fn checkin(&self, key: PlanKey, plan: RotationPlan) {
-        let mut pool = self.pool.lock().expect("plan cache poisoned");
-        let total: usize = pool.values().map(Vec::len).sum();
-        if total >= self.max_pooled {
-            let victim = pool
+    /// The shared plan for `key`, building (and caching) it on first
+    /// sight. Returns `(plan, hit)`: `hit` is `false` when this call
+    /// built the plan. Builds are single-flight — the map lock is held
+    /// across the build, which is cheap now that plans carry no buffers —
+    /// so racing same-key jobs never build (or clone) a second plan.
+    pub fn get_or_build(&self, key: &PlanKey) -> anyhow::Result<(Arc<RotationPlan>, bool)> {
+        // Resolve the shared worker pool BEFORE taking the plans lock:
+        // the first sight of a thread count spawns OS threads, which must
+        // not happen while every other key's lookup is blocked (repeat
+        // calls are a memoized Arc clone).
+        let worker_pool = (key.config.threads > 1).then(|| self.pool_for(key.config.threads));
+        let mut plans = self.plans.lock().expect("plan cache poisoned");
+        let tick = self
+            .clock
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+            + 1;
+        if let Some(entry) = plans.get_mut(key) {
+            entry.last_used = tick;
+            self.bump_stats(key, |s| s.hits += 1);
+            return Ok((Arc::clone(&entry.plan), true));
+        }
+        let mut builder = RotationPlan::builder()
+            .shape(key.m, key.n, key.k)
+            .algorithm(key.algorithm)
+            .config(key.config);
+        if let Some(pool) = worker_pool {
+            // Parallel plans dispatch into one persistent pool per
+            // thread count, owned by the cache — never a fresh spawn
+            // per context.
+            builder = builder.pool(pool);
+        }
+        let plan = Arc::new(builder.build()?);
+        if plans.len() >= self.capacity {
+            // Evict the least-recently-used key; executors holding its
+            // Arc finish undisturbed. The stats entry goes with it so
+            // per-key bookkeeping stays bounded by the cache capacity
+            // even under endless shape churn.
+            if let Some(victim) = plans
                 .iter()
-                .filter(|(k, v)| **k != key && !v.is_empty())
-                .max_by_key(|(_, v)| v.len())
-                .map(|(k, _)| *k);
-            match victim {
-                Some(v) => {
-                    let entry = pool.get_mut(&v).expect("victim key present");
-                    entry.pop();
-                    if entry.is_empty() {
-                        pool.remove(&v);
-                    }
-                }
-                // Every pooled plan already belongs to `key`: keeping more
-                // than max_pooled of one shape helps nobody.
-                None => return,
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+            {
+                plans.remove(&victim);
+                self.stats
+                    .lock()
+                    .expect("plan cache poisoned")
+                    .remove(&victim);
             }
         }
-        pool.entry(key).or_default().push(plan);
+        plans.insert(
+            *key,
+            CacheEntry {
+                plan: Arc::clone(&plan),
+                last_used: tick,
+            },
+        );
+        self.bump_stats(key, |s| s.builds += 1);
+        Ok((plan, false))
     }
 
-    /// Number of pooled plans across all keys (observability).
-    pub fn pooled_plans(&self) -> usize {
-        let pool = self.pool.lock().expect("plan cache poisoned");
-        pool.values().map(Vec::len).sum()
+    /// The cached plan for `key`, if present (observability; does not
+    /// build).
+    pub fn get(&self, key: &PlanKey) -> Option<Arc<RotationPlan>> {
+        let plans = self.plans.lock().expect("plan cache poisoned");
+        plans.get(key).map(|e| Arc::clone(&e.plan))
     }
 
-    /// Number of distinct keys seen (observability).
+    /// A [`crate::plan::Session`] over this cache's shared plan for `key`: the plan
+    /// comes from [`Self::get_or_build`], the context from this cache's
+    /// [`WorkspacePool`] (returned there when the session drops). The
+    /// layered home of `Session::from_cache`.
+    pub fn session(&self, key: &PlanKey) -> anyhow::Result<crate::plan::Session> {
+        let (plan, _hit) = self.get_or_build(key)?;
+        Ok(crate::plan::Session::rented(
+            plan,
+            Arc::clone(&self.workspaces),
+        ))
+    }
+
+    fn bump_stats(&self, key: &PlanKey, f: impl FnOnce(&mut KeyStats)) {
+        let mut stats = self.stats.lock().expect("plan cache poisoned");
+        f(stats.entry(*key).or_default());
+    }
+
+    /// Record an execution in flight on `key`'s plan; the returned guard
+    /// decrements on drop. `peak_concurrency` in [`Self::key_stats`] is
+    /// the high-water mark — the direct measurement of same-shape
+    /// fan-out over one shared plan.
+    pub fn track(&self, key: PlanKey) -> ExecTracker<'_> {
+        self.bump_stats(&key, |s| {
+            s.in_flight += 1;
+            s.peak_concurrency = s.peak_concurrency.max(s.in_flight);
+        });
+        ExecTracker { cache: self, key }
+    }
+
+    /// This key's hit/build/concurrency counters (zeroed default when the
+    /// key was never seen).
+    pub fn key_stats(&self, key: &PlanKey) -> KeyStats {
+        let stats = self.stats.lock().expect("plan cache poisoned");
+        stats.get(key).copied().unwrap_or_default()
+    }
+
+    /// Number of cached plans (observability).
+    pub fn cached_plans(&self) -> usize {
+        let plans = self.plans.lock().expect("plan cache poisoned");
+        plans.len()
+    }
+
+    /// Number of distinct keys currently cached (same as
+    /// [`Self::cached_plans`] — one shared plan per key; kept for
+    /// observability-API continuity).
     pub fn distinct_keys(&self) -> usize {
-        let pool = self.pool.lock().expect("plan cache poisoned");
-        pool.len()
+        self.cached_plans()
+    }
+}
+
+/// RAII guard from [`PlanCache::track`].
+pub struct ExecTracker<'a> {
+    cache: &'a PlanCache,
+    key: PlanKey,
+}
+
+impl Drop for ExecTracker<'_> {
+    fn drop(&mut self) {
+        // get_mut, not entry(): if the key was evicted while this
+        // execution was in flight, its stats went with it — resurrecting
+        // a zombie entry here would leak one HashMap slot per
+        // evicted-while-busy key for the life of the service.
+        let mut stats = self.cache.stats.lock().expect("plan cache poisoned");
+        if let Some(s) = stats.get_mut(&self.key) {
+            s.in_flight = s.in_flight.saturating_sub(1);
+        }
     }
 }
 
@@ -202,44 +332,41 @@ mod tests {
         }
     }
 
-    fn plan_for(k: &PlanKey) -> RotationPlan {
-        RotationPlan::builder()
-            .shape(k.m, k.n, k.k)
-            .algorithm(k.algorithm)
-            .config(k.config)
-            .build()
-            .unwrap()
-    }
-
     #[test]
-    fn checkout_checkin_round_trip() {
+    fn get_or_build_shares_one_arc_per_key() {
         let cache = PlanCache::new();
         let k = key();
-        assert!(cache.checkout(&k).is_none());
-        cache.checkin(k, plan_for(&k));
-        assert_eq!(cache.pooled_plans(), 1);
-        assert_eq!(cache.distinct_keys(), 1);
-        let got = cache.checkout(&k);
-        assert!(got.is_some());
-        assert!(cache.checkout(&k).is_none(), "pool is drained");
-        cache.checkin(k, got.unwrap());
-        assert_eq!(cache.pooled_plans(), 1);
+        assert!(cache.get(&k).is_none());
+        let (p1, hit1) = cache.get_or_build(&k).unwrap();
+        assert!(!hit1, "first sight builds");
+        let (p2, hit2) = cache.get_or_build(&k).unwrap();
+        assert!(hit2, "second sight hits");
+        assert!(Arc::ptr_eq(&p1, &p2), "same key, same shared plan");
+        assert_eq!(cache.cached_plans(), 1);
+        let stats = cache.key_stats(&k);
+        assert_eq!(stats.builds, 1);
+        assert_eq!(stats.hits, 1);
     }
 
     #[test]
-    fn pool_is_bounded_and_new_shapes_displace_old() {
+    fn cache_is_bounded_and_evicts_lru() {
         let cache = PlanCache::with_capacity(2);
         let base = key();
-        let mut last = base;
-        for m in 0..5usize {
-            let mut k = base;
-            k.m = 10 + m;
-            cache.checkin(k, plan_for(&k));
-            last = k;
-        }
-        assert_eq!(cache.pooled_plans(), 2, "bounded at capacity");
-        // The most recent shape must still be cached (eviction, not drop).
-        assert!(cache.checkout(&last).is_some(), "hot shape was starved");
+        let mut k1 = base;
+        k1.m = 10;
+        let mut k2 = base;
+        k2.m = 11;
+        let mut k3 = base;
+        k3.m = 12;
+        cache.get_or_build(&k1).unwrap();
+        cache.get_or_build(&k2).unwrap();
+        // Touch k1 so k2 is the LRU victim.
+        cache.get_or_build(&k1).unwrap();
+        cache.get_or_build(&k3).unwrap();
+        assert_eq!(cache.cached_plans(), 2, "bounded at capacity");
+        assert!(cache.get(&k1).is_some(), "recently used survives");
+        assert!(cache.get(&k2).is_none(), "LRU was evicted");
+        assert!(cache.get(&k3).is_some(), "new key cached");
     }
 
     #[test]
@@ -248,25 +375,95 @@ mod tests {
         let k1 = key();
         let mut k2 = key();
         k2.algorithm = Algorithm::Fused;
-        cache.checkin(k1, plan_for(&k1));
-        assert!(cache.checkout(&k2).is_none(), "different algo, different key");
-        assert!(cache.checkout(&k1).is_some());
+        cache.get_or_build(&k1).unwrap();
+        assert!(cache.get(&k2).is_none(), "different algo, different key");
+        assert!(cache.get(&k1).is_some());
     }
 
     #[test]
     fn thread_count_discriminates_keys() {
-        // A 4-way plan has a different partition, workspace layout, and
+        // A 4-way plan has a different partition, context layout, and
         // pool than a serial one — they must never share a cache entry.
         let cache = PlanCache::new();
-        let serial = key();
+        let mut ser64 = key();
+        ser64.m = 64;
         let mut par = key();
         par.config.threads = 4;
         par.m = 64;
-        let mut ser64 = serial;
-        ser64.m = 64;
-        cache.checkin(ser64, plan_for(&ser64));
-        assert!(cache.checkout(&par).is_none(), "threads must be part of the key");
-        assert!(cache.checkout(&ser64).is_some());
+        cache.get_or_build(&ser64).unwrap();
+        assert!(cache.get(&par).is_none(), "threads must be part of the key");
+        assert!(cache.get(&ser64).is_some());
+    }
+
+    #[test]
+    fn track_records_per_key_concurrency() {
+        let cache = PlanCache::new();
+        let k = key();
+        {
+            let _t1 = cache.track(k);
+            let _t2 = cache.track(k);
+            assert_eq!(cache.key_stats(&k).in_flight, 2);
+            assert_eq!(cache.key_stats(&k).peak_concurrency, 2);
+        }
+        assert_eq!(cache.key_stats(&k).in_flight, 0);
+        assert_eq!(cache.key_stats(&k).peak_concurrency, 2, "peak is sticky");
+    }
+
+    #[test]
+    fn cached_plan_executes_through_rented_ctx() {
+        use crate::matrix::{max_abs_diff, Matrix};
+        use crate::rot::{apply_naive, RotationSequence};
+        let cache = PlanCache::new();
+        let k = key();
+        let (plan, _) = cache.get_or_build(&k).unwrap();
+        let seq = RotationSequence::random(k.n, k.k, 1);
+        let mut a = Matrix::random(k.m, k.n, 2);
+        let mut expected = a.clone();
+        apply_naive(&mut expected, &seq);
+        let mut ctx = cache.workspace_pool().rent(&plan);
+        plan.execute(&mut ctx, &mut a, &seq).unwrap();
+        cache.workspace_pool().give_back(ctx);
+        assert_eq!(max_abs_diff(&a, &expected), 0.0);
+        assert_eq!(cache.workspace_pool().ctxs_created(), 1);
+        // A second job with the same key reuses both the plan and the ctx.
+        let (plan2, hit) = cache.get_or_build(&k).unwrap();
+        assert!(hit);
+        let ctx2 = cache.workspace_pool().rent(&plan2);
+        assert_eq!(cache.workspace_pool().ctxs_created(), 1);
+        assert_eq!(cache.workspace_pool().ctxs_reused(), 1);
+        cache.workspace_pool().give_back(ctx2);
+    }
+
+    #[test]
+    fn session_from_cache_joins_the_shared_plan() {
+        use crate::matrix::{max_abs_diff, Matrix};
+        use crate::plan::Session;
+        use crate::rot::{apply_naive, RotationSequence};
+        let cache = PlanCache::new();
+        let k = key();
+        let seq = RotationSequence::random(k.n, k.k, 5);
+        let a0 = Matrix::random(k.m, k.n, 6);
+        let mut expected = a0.clone();
+        apply_naive(&mut expected, &seq);
+
+        {
+            let mut s1 = Session::from_cache(&cache, &k).unwrap();
+            let mut a = a0.clone();
+            s1.execute(&mut a, &seq).unwrap();
+            assert_eq!(max_abs_diff(&a, &expected), 0.0);
+        } // drop returns the rented ctx to the cache's pool
+        assert_eq!(cache.workspace_pool().pooled(), 1);
+
+        let mut s2 = Session::from_cache(&cache, &k).unwrap();
+        assert!(
+            Arc::ptr_eq(s2.plan(), &cache.get(&k).unwrap()),
+            "second session joins the same Arc plan"
+        );
+        let mut a = a0.clone();
+        s2.execute(&mut a, &seq).unwrap();
+        assert_eq!(max_abs_diff(&a, &expected), 0.0);
+        assert_eq!(cache.workspace_pool().ctxs_created(), 1);
+        assert_eq!(cache.workspace_pool().ctxs_reused(), 1);
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! The job service: a worker pool fed by a channel, returning results over
 //! per-job channels. Workers execute through a shared
 //! [`PlanCache`](super::plancache::PlanCache): repeated same-shaped jobs
-//! reuse a prebuilt [`RotationPlan`] (block solve + packing workspace)
-//! instead of re-planning per job.
+//! share one `Arc<`[`crate::plan::RotationPlan`]`>` (block solve + §7
+//! partition, built once per key) and rent per-execution
+//! [`crate::plan::ExecCtx`]s from the cache's
+//! [`crate::plan::WorkspacePool`] — no re-planning and no plan cloning
+//! per job, even when same-key jobs overlap.
 
 use super::metrics::Metrics;
 use super::plancache::{PlanCache, PlanKey};
@@ -10,7 +13,6 @@ use super::router::{route, RoutePolicy};
 use crate::blocking::KernelConfig;
 use crate::kernel::Algorithm;
 use crate::matrix::Matrix;
-use crate::plan::RotationPlan;
 use crate::rot::{OpSequence, RotationSequence};
 use anyhow::Result;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -183,37 +185,32 @@ fn execute_job(
     // config when one was installed (identity otherwise).
     let key = plans.tuned_key(job.spec.plan_key(policy, m, n, k));
     let algo = key.algorithm;
-    let mut plan = match plans.checkout(&key) {
-        Some(plan) => {
-            metrics.record_plan_hit();
+    // One shared Arc plan per key: a hit is an Arc clone, a miss builds
+    // exactly once (single-flight; plans are buffer-free so builds are
+    // cheap). Concurrent same-key jobs execute the same plan
+    // simultaneously — no checkout pool, no plan clones.
+    let plan = match plans.get_or_build(&key) {
+        Ok((plan, hit)) => {
+            if hit {
+                metrics.record_plan_hit();
+            } else {
+                metrics.record_plan_miss();
+            }
             plan
         }
-        None => {
-            metrics.record_plan_miss();
-            let mut builder = RotationPlan::builder()
-                .shape(m, n, k)
-                .algorithm(algo)
-                .config(key.config);
-            if key.config.threads > 1 {
-                // Parallel plans dispatch into one persistent pool per
-                // thread count, owned by the cache — never a fresh spawn
-                // per job.
-                builder = builder.pool(plans.pool_for(key.config.threads));
-            }
-            match builder.build() {
-                Ok(plan) => plan,
-                Err(e) => {
-                    metrics.record_failure();
-                    return Err(e);
-                }
-            }
+        Err(e) => {
+            metrics.record_failure();
+            return Err(e);
         }
     };
+    // Per-execution buffers come from the cache's shared WorkspacePool.
+    let mut ctx = plans.workspace_pool().rent(&plan);
+    let _in_flight = plans.track(key);
     let flops = OpSequence::flops(&job.seq, m);
     let t0 = Instant::now();
-    let outcome = plan.execute(&mut job.matrix, &job.seq);
+    let outcome = plan.execute(&mut ctx, &mut job.matrix, &job.seq);
     let elapsed = t0.elapsed();
-    plans.checkin(key, plan);
+    plans.workspace_pool().give_back(ctx);
     match outcome {
         Ok(()) => {
             metrics.record_complete(flops, elapsed.as_nanos() as u64);
@@ -331,7 +328,10 @@ mod tests {
         assert_eq!(snap.plan_cache_misses, 1);
         assert_eq!(snap.plan_cache_hits, 4);
         assert_eq!(coord.plan_cache().distinct_keys(), 1);
-        assert_eq!(coord.plan_cache().pooled_plans(), 1);
+        assert_eq!(coord.plan_cache().cached_plans(), 1);
+        // The per-execution contexts were pooled, not rebuilt per job.
+        assert_eq!(coord.plan_cache().workspace_pool().ctxs_created(), 1);
+        assert_eq!(coord.plan_cache().workspace_pool().ctxs_reused(), 4);
         coord.shutdown();
     }
 

@@ -113,8 +113,9 @@ impl std::str::FromStr for Algorithm {
 }
 
 /// A reusable per-worker workspace for the kernel algorithm: the §4 packing
-/// buffer plus the k-block plan arena. Owned by the plan API's `Workspace`
-/// (one per worker thread) so repeated executes allocate nothing.
+/// buffer plus the k-block plan arena. Owned by the plan API's
+/// [`crate::plan::ExecCtx`] (one per worker thread) so repeated executes
+/// allocate nothing.
 pub struct PanelWorkspace {
     /// Micro-panel packing buffer (§4).
     pub panel: PackedPanel,
@@ -148,20 +149,20 @@ pub fn apply(algo: Algorithm, a: &mut Matrix, seq: &RotationSequence) -> Result<
 }
 
 /// Apply with explicit kernel/block parameters (a throwaway
-/// [`crate::plan::RotationPlan`] under the hood).
+/// [`crate::plan::Session`] — plan plus context — under the hood).
 pub fn apply_with(
     algo: Algorithm,
     a: &mut Matrix,
     seq: &RotationSequence,
     cfg: &KernelConfig,
 ) -> Result<()> {
-    let mut plan = crate::plan::RotationPlan::builder()
+    let mut session = crate::plan::RotationPlan::builder()
         .shape(a.rows(), a.cols(), seq.k())
         .algorithm(algo)
         .config(*cfg)
         .warm_workspace(false) // executes exactly once; warming would double the stream packing
-        .build()?;
-    plan.execute(a, seq)
+        .build_session()?;
+    session.execute(a, seq)
 }
 
 /// `rs_kernel`: pack each `m_b` row-panel into §4 micro-panel format, run

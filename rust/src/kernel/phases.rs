@@ -40,7 +40,7 @@ pub struct KernelCall {
 /// The plan doubles as an *arena*: [`plan_kblock_into`] recycles the
 /// previous block's calls (and their stream allocations) instead of
 /// dropping them, so a loop over k-blocks — and, through the plan API's
-/// `Workspace`, a whole sequence of executes — performs no allocation
+/// `ExecCtx`, a whole sequence of executes — performs no allocation
 /// once warm.
 pub struct KBlockPlan {
     /// Startup triangle: single-sequence sweeps, ascending local sequence.

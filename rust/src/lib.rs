@@ -26,13 +26,14 @@
 //! * a benchmark harness that regenerates every figure in the paper's
 //!   evaluation section ([`bench_harness`]).
 //!
-//! ## Quickstart: plan once, execute many
+//! ## Quickstart: plans are shared, contexts are rented
 //!
 //! The hot loops that motivate the paper apply hundreds of same-shaped
-//! sequence sets, so the primary API is a [`plan::RotationPlan`]: build it
-//! once (solves the §5 block sizes, selects the kernel, allocates reusable
-//! packing buffers), then execute against each new sequence set with zero
-//! per-call allocation:
+//! sequence sets, so the primary API is a [`plan::RotationPlan`]: an
+//! immutable, `Send + Sync` recipe (the §5 block solve, kernel selection,
+//! §7 partition — no buffers) that any number of executors share through
+//! an `Arc`, each with its own rented [`plan::ExecCtx`]. The
+//! [`plan::Session`] facade pairs the two for the single-executor case:
 //!
 //! ```no_run
 //! use rotseq::matrix::Matrix;
@@ -40,19 +41,24 @@
 //! use rotseq::rot::RotationSequence;
 //!
 //! let (m, n, k) = (960, 960, 24);
-//! let mut plan = RotationPlan::builder()
+//! let mut session = RotationPlan::builder()
 //!     .shape(m, n, k)          // required: the repeated problem shape
 //!     .threads(1)              // §7 workers (optional)
-//!     .build()?;               // §5 solve + workspace allocation
+//!     .build_session()?;       // §5 solve + per-executor context
 //!
 //! let mut a = Matrix::random(m, n, 42);
 //! for sweep in 0..100 {
 //!     let seq = RotationSequence::random(n, k, sweep);
-//!     plan.execute(&mut a, &seq)?;          // apply
-//!     // ... and plan.execute_inverse(&mut a, &seq)? undoes it.
+//!     session.execute(&mut a, &seq)?;       // apply; zero allocation
+//!     // ... and session.execute_inverse(&mut a, &seq)? undoes it.
 //! }
 //! # anyhow::Ok(())
 //! ```
+//!
+//! For concurrent serving, build the plan once (`.build()?`), wrap it in
+//! an `Arc`, and give each thread its own context
+//! ([`plan::ExecCtx::for_plan`] or a [`plan::WorkspacePool`] rental) —
+//! see the [`plan`] module docs.
 //!
 //! One-shot calls can use the thin shim [`kernel::apply`] /
 //! [`kernel::apply_with`], which build a throwaway plan internally:

@@ -4,8 +4,9 @@
 //!
 //! ```text
 //! rotseq apply    --algo <name> --m <m> --n <n> --k <k> [--mr --kr --threads]
+//!                 [--side right|left] [--direction forward|inverse]
 //! rotseq plan     [--mr 16 --kr 2] [--t1 --t2 --t3]
-//! rotseq tune     [--m --n --k --threads] [--db PATH] [--quick]
+//! rotseq tune     [--m --n --k --threads] [--shape MxNxK] [--db PATH] [--quick]
 //! rotseq simulate --m <m> --n <n> --k <k>
 //! rotseq bench    --figure fig5|fig6|fig7|fig8|io [--max-n N] [--k K] [--quick]
 //!                 [--tuned] [--db PATH] [--json PATH]
@@ -21,7 +22,7 @@ use rotseq::blocking::{plan, plan_bounds_for, CacheParams, KernelConfig};
 use rotseq::coordinator::{Coordinator, Job, JobSpec, RoutePolicy};
 use rotseq::kernel::Algorithm;
 use rotseq::matrix::{frobenius_norm, Matrix};
-use rotseq::plan::RotationPlan;
+use rotseq::plan::{Direction, RotationPlan, Side};
 use rotseq::rot::{OpSequence, RotationSequence};
 use std::collections::HashMap;
 
@@ -84,6 +85,19 @@ impl Args {
     }
 }
 
+/// Parse an `MxNxK` shape triple (`960x960x180`; `x` or `X`).
+fn parse_shape(s: &str) -> Result<(usize, usize, usize)> {
+    let parts: Vec<&str> = s.split(['x', 'X']).collect();
+    let [m, n, k] = parts.as_slice() else {
+        bail!("--shape expects MxNxK (got '{s}')");
+    };
+    Ok((
+        m.trim().parse().with_context(|| format!("--shape m in '{s}'"))?,
+        n.trim().parse().with_context(|| format!("--shape n in '{s}'"))?,
+        k.trim().parse().with_context(|| format!("--shape k in '{s}'"))?,
+    ))
+}
+
 fn config_from_args(a: &Args) -> Result<KernelConfig> {
     let mr = a.get("mr", 16usize)?;
     let kr = a.get("kr", 2usize)?;
@@ -132,9 +146,11 @@ fn print_usage() {
          (Steel & Langou 2024 reproduction)\n\n\
          subcommands:\n\
          \x20 apply    --algo rs_kernel --m 960 --n 960 --k 180  apply + report Gflop/s\n\
+         \x20          [--side right|left --direction forward|inverse]\n\
          \x20 plan     [--mr 16 --kr 2 --t1 --t2 --t3]           §5 block-size planner\n\
          \x20 tune     [--m 960 --n 960 --k 180 --threads 1]     autotune within the §5 bounds\n\
-         \x20          [--db PATH --quick]                       and persist the TuneDb winner\n\
+         \x20          [--shape MxNxK --db PATH --quick]         and persist the TuneDb winner\n\
+         \x20                                                    (--shape = exact-shape record)\n\
          \x20 simulate --m 256 --n 256 --k 24                    §1.2 I/O simulation table\n\
          \x20 bench    --figure fig5|fig6|fig7|fig8|io [--threads T]  regenerate a paper figure\n\
          \x20          [--tuned --db PATH --json PATH]           add rs_kernel_tuned + JSON dump\n\
@@ -146,33 +162,43 @@ fn print_usage() {
 }
 
 fn cmd_apply(a: &Args) -> Result<()> {
-    // `Algorithm` implements `FromStr`, so the generic flag parser reads it.
+    // `Algorithm`, `Side`, and `Direction` implement `FromStr`, so the
+    // generic flag parser reads them.
     let algo: Algorithm = a.get("algo", Algorithm::Kernel)?;
+    let side: Side = a.get("side", Side::Right)?;
+    let direction: Direction = a.get("direction", Direction::Forward)?;
     let m = a.get("m", 960usize)?;
     let n = a.get("n", 960usize)?;
     let k = a.get("k", 180usize)?;
     let seed = a.get("seed", 42u64)?;
     let reps = a.get("reps", 1usize)?.max(1);
     let cfg = config_from_args(a)?;
-    let seq = RotationSequence::random(n, k, seed);
+    // Left-side sequences act on the m rows.
+    let seq_n = match side {
+        Side::Right => n,
+        Side::Left => m,
+    };
+    let seq = RotationSequence::random(seq_n, k, seed);
     let mut mat = Matrix::random(m, n, seed ^ 0x5EED);
-    let flops = OpSequence::flops(&seq, m);
+    let flops = OpSequence::flops(&seq, if matches!(side, Side::Right) { m } else { n });
 
-    // Plan once (block solve + workspace), execute --reps times: the CLI
-    // face of the plan/execute split. Threads > 1 parallelizes the kernel
-    // variant per §7.
-    let mut plan = RotationPlan::builder()
+    // Plan once (block solve + context), execute --reps times through a
+    // session: the CLI face of the plan/execute split. Threads > 1
+    // parallelizes the kernel variant per §7.
+    let mut session = RotationPlan::builder()
         .shape(m, n, k)
         .algorithm(algo)
+        .side(side)
+        .direction(direction)
         .config(cfg)
-        .build()?;
+        .build_session()?;
     let t0 = std::time::Instant::now();
     for _ in 0..reps {
-        plan.execute(&mut mat, &seq)?;
+        session.execute(&mut mat, &seq)?;
     }
     let dt = t0.elapsed().as_secs_f64() / reps as f64;
     println!(
-        "{algo} m={m} n={n} k={k}: {:.3}s  {:.3} Gflop/s  (checksum {:.6e})",
+        "{algo} m={m} n={n} k={k} side={side} direction={direction}: {:.3}s  {:.3} Gflop/s  (checksum {:.6e})",
         dt,
         flops as f64 / dt / 1e9,
         frobenius_norm(&mat)
@@ -199,14 +225,28 @@ fn cmd_plan(a: &Args) -> Result<()> {
 }
 
 /// `rotseq tune`: generate → simulate → time → persist, then report.
+/// `--shape MxNxK` writes an **exact-shape** record (preferred over the
+/// class bucket at lookup time — the knob for the service's hottest keys).
 fn cmd_tune(a: &Args) -> Result<()> {
     let quick = a.has("quick");
+    // An explicit --shape means an exact record for exactly that shape.
+    let exact_shape = a
+        .values
+        .get("shape")
+        .map(|s| parse_shape(s))
+        .transpose()?;
     // Defaults mirror `bench`'s (`--quick` included), so `rotseq tune
     // --quick && rotseq bench --figure fig5 --quick --tuned` land in the
     // same shape class and the tuned series actually hits the DB.
-    let m = a.get("m", if quick { 240 } else { 960 })?;
-    let n = a.get("n", m)?;
-    let k = a.get("k", if quick { 36 } else { bh::PAPER_K })?;
+    let (m, n, k) = match exact_shape {
+        Some(shape) => shape,
+        None => {
+            let m = a.get("m", if quick { 240 } else { 960 })?;
+            let n = a.get("n", m)?;
+            let k = a.get("k", if quick { 36 } else { bh::PAPER_K })?;
+            (m, n, k)
+        }
+    };
     let threads = a.get("threads", 1usize)?;
     let cache = CacheParams::detect();
     let db_path = a.get_str("db", &rotseq::tune::TuneDb::default_path().to_string_lossy());
@@ -217,12 +257,23 @@ fn cmd_tune(a: &Args) -> Result<()> {
         rotseq::tune::TuneOptions::default()
     };
 
-    println!(
-        "tuning m={m} n={n} k={k} threads={threads} on {} (shape class {:?})",
-        rotseq::tune::machine_fingerprint(cache),
-        rotseq::tune::shape_class(m, n, k)
-    );
-    let report = rotseq::tune::tune_and_store(&db, m, n, k, threads, cache, &opts)?;
+    if exact_shape.is_some() {
+        println!(
+            "tuning m={m} n={n} k={k} threads={threads} on {} (exact-shape record)",
+            rotseq::tune::machine_fingerprint(cache)
+        );
+    } else {
+        println!(
+            "tuning m={m} n={n} k={k} threads={threads} on {} (shape class {:?})",
+            rotseq::tune::machine_fingerprint(cache),
+            rotseq::tune::shape_class(m, n, k)
+        );
+    }
+    let report = if exact_shape.is_some() {
+        rotseq::tune::tune_and_store_exact(&db, m, n, k, threads, cache, &opts)?
+    } else {
+        rotseq::tune::tune_and_store(&db, m, n, k, threads, cache, &opts)?
+    };
     println!(
         "{:<28} {:>12} {:>14} {:>12}",
         "candidate (mr,kr,mb,kb,nb)", "sim cost", "pred IO (dbl)", "Gflop/s"
@@ -406,7 +457,11 @@ fn cmd_pjrt(a: &Args) -> Result<()> {
 }
 
 /// Job protocol on stdin, one job per line:
-/// `apply <m> <n> <k> <seed> [algo]` — prints the result checksum + rate.
+/// `apply <m> <n> <k> <seed> [algo]` — run one job, print checksum + rate;
+/// `burst <count> <m> <n> <k> <seed> [algo]` — submit `count` same-shaped
+/// jobs at once (they fan out across the workers concurrently, sharing
+/// one Arc plan) and wait for all;
+/// `metrics` — print the service counters.
 fn cmd_serve(a: &Args) -> Result<()> {
     let workers = a.get("workers", 2usize)?;
     let coord = Coordinator::start(workers, RoutePolicy::Auto);
@@ -417,7 +472,10 @@ fn cmd_serve(a: &Args) -> Result<()> {
         println!("autotuning: {} entries from {db_path}", db.len());
         coord.set_tune_db(db, CacheParams::detect());
     }
-    println!("rotseq coordinator: {workers} workers; protocol: apply <m> <n> <k> <seed> [algo]");
+    println!(
+        "rotseq coordinator: {workers} workers; protocol: apply <m> <n> <k> <seed> [algo] | \
+         burst <count> <m> <n> <k> <seed> [algo] | metrics | quit"
+    );
     let mut lines = std::io::stdin().lines();
     while let Some(Ok(line)) = lines.next() {
         let fields: Vec<&str> = line.split_whitespace().collect();
@@ -426,16 +484,65 @@ fn cmd_serve(a: &Args) -> Result<()> {
             ["quit"] | ["exit"] => break,
             ["metrics"] => {
                 let s = coord.metrics().snapshot();
+                let cache = coord.plan_cache();
+                let ws = cache.workspace_pool();
+                // "0 cloned" is structural, not a counter: plans are
+                // Arc-shared and RotationPlan does not implement Clone,
+                // so a nonzero value is unrepresentable by construction.
                 println!(
                     "jobs: {} submitted, {} done, {} failed; {:.3} Gflop/s busy-rate; \
-                     plans: {} hits / {} misses ({} pooled)",
+                     plans: {} hits / {} misses ({} cached, 0 cloned [structural]); \
+                     ctxs: {} created / {} reused ({} pooled)",
                     s.jobs_submitted,
                     s.jobs_completed,
                     s.jobs_failed,
                     s.gflops(),
                     s.plan_cache_hits,
                     s.plan_cache_misses,
-                    coord.plan_cache().pooled_plans()
+                    cache.cached_plans(),
+                    ws.ctxs_created(),
+                    ws.ctxs_reused(),
+                    ws.pooled()
+                );
+            }
+            ["burst", rest @ ..] if rest.len() >= 5 => {
+                let count: usize = rest[0].parse().context("count")?;
+                let m: usize = rest[1].parse().context("m")?;
+                let n: usize = rest[2].parse().context("n")?;
+                let k: usize = rest[3].parse().context("k")?;
+                let seed: u64 = rest[4].parse().context("seed")?;
+                let algorithm = match rest.get(5) {
+                    Some(name) => Some(name.parse::<Algorithm>()?),
+                    None => None,
+                };
+                // Submit everything before collecting anything: the jobs
+                // are genuinely in flight together, so same-shape fan-out
+                // over the shared Arc plan actually happens.
+                let config = config_from_args(a)?;
+                let t0 = std::time::Instant::now();
+                let receivers: Vec<_> = (0..count as u64)
+                    .map(|i| {
+                        coord.submit(Job {
+                            matrix: Matrix::random(m, n, seed ^ i),
+                            seq: RotationSequence::random(n, k, (seed ^ i) ^ 0xFEED),
+                            spec: JobSpec { algorithm, config },
+                        })
+                    })
+                    .collect();
+                let mut done = 0usize;
+                let mut failed = 0usize;
+                for rx in receivers {
+                    match rx.recv().expect("worker dropped result") {
+                        Ok(_) => done += 1,
+                        Err(e) => {
+                            failed += 1;
+                            println!("err {e:#}");
+                        }
+                    }
+                }
+                println!(
+                    "burst {count} jobs {m}x{n} k={k}: {done} ok, {failed} failed in {:.3}s",
+                    t0.elapsed().as_secs_f64()
                 );
             }
             ["apply", rest @ ..] if rest.len() >= 4 => {

@@ -8,9 +8,10 @@
 //! dispatch is a condition-variable handshake over a pre-published task
 //! descriptor:
 //!
-//! * the §7 row partition, the per-worker packing buffers, and the shared
-//!   wave-stream [`SeqPlan`] all live in the caller's
-//!   [`crate::plan::RotationPlan`] workspace, planned at build time;
+//! * the §7 row partition lives in the caller's immutable
+//!   [`crate::plan::RotationPlan`]; the per-worker packing buffers and the
+//!   shared wave-stream [`SeqPlan`] live in its rented
+//!   [`crate::plan::ExecCtx`];
 //! * a dispatch publishes raw views of the target matrices plus pointers
 //!   into that workspace, bumps an epoch, and blocks on a condvar until
 //!   every worker has finished — no channel nodes, no boxed closures, no
@@ -118,7 +119,8 @@ struct Shared {
 }
 
 /// A set of long-lived worker threads executing pre-planned §7 row-parallel
-/// applies. Created once (per plan, or shared across plans via
+/// applies. Created once (per execution context, or shared across
+/// contexts/plans via [`crate::plan::PlanBuilder::pool`] and
 /// [`crate::coordinator::PlanCache`]); dropped pools join their threads.
 pub struct WorkerPool {
     shared: Arc<Shared>,

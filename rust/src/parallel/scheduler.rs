@@ -51,16 +51,16 @@ pub fn partition_rows(m: usize, threads: usize, mr: usize) -> Vec<(usize, usize)
 }
 
 /// One-shot parallel `rs_kernel`: a thin shim over a throwaway
-/// [`RotationPlan`] (build → execute → drop), so it shares the pool
-/// subsystem's single code path. Loops applying many sequence sets should
-/// build the plan themselves and reuse it.
+/// [`RotationPlan`] session (build → execute → drop), so it shares the
+/// pool subsystem's single code path. Loops applying many sequence sets
+/// should build the plan themselves and reuse it.
 pub fn apply_parallel(a: &mut Matrix, seq: &RotationSequence, cfg: &KernelConfig) -> Result<()> {
-    let mut plan = RotationPlan::builder()
+    let mut session = RotationPlan::builder()
         .shape(a.rows(), a.cols(), seq.k())
         .config(*cfg)
         .warm_workspace(false) // executes exactly once
-        .build()?;
-    plan.execute(a, seq)
+        .build_session()?;
+    session.execute(a, seq)
 }
 
 /// Parallel `rs_kernel_v2`: the matrix lives in packed panels; workers take

@@ -1,0 +1,344 @@
+//! Per-execution state: the rentable [`ExecCtx`] and the [`WorkspacePool`]
+//! that recycles contexts across executions.
+//!
+//! The split follows communication-avoiding practice (Demmel et al.,
+//! arXiv:0809.2407; Ballard et al., arXiv:1011.3077): the *schedule* — the
+//! §5 block solve, kernel selection, §7 partition — is shape-invariant and
+//! lives in the immutable, `Arc`-shareable [`RotationPlan`]; the *buffers*
+//! — §4 packing panels, the [`SeqPlan`] wave-stream arena, the `rs_gemm`
+//! accumulators — are per-execution and live here. One plan amortizes its
+//! solve across every concurrent executor; each executor rents an
+//! `ExecCtx` (cheaply, from a [`WorkspacePool`]) instead of cloning the
+//! plan and re-allocating every packing buffer.
+//!
+//! An `ExecCtx` is keyed by its [`WorkspaceSig`] — the tuple of facts that
+//! determine the buffer layout. Executing a plan with a context built for
+//! a different signature is a typed [`Error::WorkspaceMismatch`], never a
+//! panic and never silent corruption.
+
+use crate::blocking::KernelConfig;
+use crate::gemm::GemmWorkspace;
+use crate::kernel::{Algorithm, PanelWorkspace, SeqPlan};
+use crate::parallel::{MatView, WorkerPool};
+use crate::rot::RotationSequence;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::RotationPlan;
+
+/// Everything that determines an [`ExecCtx`]'s buffer layout: the
+/// algorithm, the kernel-facing matrix shape (`wm x wn` — transposed for
+/// left-side plans), the planned `k`, and the full block/kernel config
+/// (which carries the thread count and hence the §7 partition). Two plans
+/// with equal signatures can share rented contexts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct WorkspaceSig {
+    pub algo: Algorithm,
+    /// Rows of the matrix the kernels actually see.
+    pub wm: usize,
+    /// Columns of the matrix the kernels actually see.
+    pub wn: usize,
+    /// Planned sequence count (sizes the stream-arena warm-up).
+    pub k: usize,
+    pub cfg: KernelConfig,
+}
+
+impl std::fmt::Display for WorkspaceSig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} {}x{} k={} (mr={} kr={} mb={} kb={} nb={} threads={})",
+            self.algo,
+            self.wm,
+            self.wn,
+            self.k,
+            self.cfg.mr,
+            self.cfg.kr,
+            self.cfg.mb,
+            self.cfg.kb,
+            self.cfg.nb,
+            self.cfg.threads
+        )
+    }
+}
+
+/// Typed execution errors. Carried inside `anyhow::Error` on the `Result`
+/// paths (downcast with [`anyhow::Error::downcast_ref`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Error {
+    /// The [`ExecCtx`] handed to an execute was built for a different
+    /// plan signature (wrong algorithm, shape, or block config). The old
+    /// API aborted here (`expect("gemm workspace")`); a mismatched rental
+    /// must be a recoverable error.
+    WorkspaceMismatch {
+        /// What the executing plan requires.
+        plan: WorkspaceSig,
+        /// What the context was built for.
+        ctx: WorkspaceSig,
+    },
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::WorkspaceMismatch { plan, ctx } => write!(
+                f,
+                "workspace mismatch: plan needs [{plan}] but the ExecCtx was built for [{ctx}]"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// The per-execution scratch a [`RotationPlan`] runs against: §4 packing
+/// buffers (one per §7 worker), the shared [`SeqPlan`] wave-stream arena,
+/// the `rs_gemm` accumulators, and — for parallel plans — the
+/// [`WorkerPool`] handle the dispatch goes through. Build one with
+/// [`ExecCtx::for_plan`] or rent one from a [`WorkspacePool`]; repeated
+/// executes on plan-shaped problems never grow it.
+pub struct ExecCtx {
+    pub(crate) sig: WorkspaceSig,
+    /// One packing-buffer + stream-arena unit per concurrent worker.
+    pub(crate) units: Vec<PanelWorkspace>,
+    /// `rs_gemm` accumulator/panel scratch.
+    pub(crate) gemm: Option<GemmWorkspace>,
+    /// Shared pre-planned wave streams: packed once per execute, replayed
+    /// read-only by every pool worker, every serial `m_b` row panel, and
+    /// every batch matrix. Warmed at construction unless the plan opted
+    /// out ([`super::PlanBuilder::warm_workspace`]).
+    pub(crate) seqplan: Option<SeqPlan>,
+    /// Reusable matrix-view scratch for pool dispatch (grows to the
+    /// largest batch size seen, then stays put).
+    pub(crate) views: Vec<MatView>,
+    /// §7 workers this context dispatches into: the plan's shared pool
+    /// when one was configured ([`super::PlanBuilder::pool`]), else a
+    /// private pool spawned with the context — so concurrent executors of
+    /// one shared plan need not serialize on a single pool's epoch
+    /// handshake.
+    pub(crate) pool: Option<Arc<WorkerPool>>,
+}
+
+impl ExecCtx {
+    /// Allocate (and, unless the plan opted out, warm) a context for
+    /// `plan`. Plans built with `threads > 1` and no shared pool spawn a
+    /// private [`WorkerPool`] here — contexts, not plans, own workers.
+    pub fn for_plan(plan: &RotationPlan) -> ExecCtx {
+        Self::build(plan, plan.warm_contexts())
+    }
+
+    pub(crate) fn build(plan: &RotationPlan, warm: bool) -> ExecCtx {
+        let sig = plan.workspace_sig();
+        let WorkspaceSig { algo, wm, wn, k, cfg } = sig;
+        match algo {
+            Algorithm::Kernel => {
+                let pooled = cfg.threads > 1;
+                let units: Vec<PanelWorkspace> = if pooled {
+                    plan.parts()
+                        .iter()
+                        .map(|&(_, rows)| PanelWorkspace::with_capacity(rows, wn, cfg.mr))
+                        .collect()
+                } else {
+                    let rows = cfg.mb.max(1).min(wm.max(1));
+                    vec![PanelWorkspace::with_capacity(rows, wn, cfg.mr)]
+                };
+                // Warm the shared `SeqPlan` with an identity sequence of
+                // the planned shape so even the first execute allocates
+                // nothing. Skipped for throwaway contexts (the
+                // `apply`/`apply_with` shims), where the warm-up would
+                // just double the stream-packing work of the single
+                // execute.
+                let mut seqplan = None;
+                if warm && wn >= 2 && k > 0 {
+                    let ident = RotationSequence::identity(wn, k);
+                    let mut sp = SeqPlan::new();
+                    sp.plan_into(&ident, &cfg);
+                    seqplan = Some(sp);
+                }
+                let pool = (pooled && !units.is_empty()).then(|| {
+                    plan.shared_pool()
+                        .cloned()
+                        .unwrap_or_else(|| Arc::new(WorkerPool::new(cfg.threads)))
+                });
+                ExecCtx {
+                    sig,
+                    units,
+                    gemm: None,
+                    seqplan,
+                    views: Vec::with_capacity(usize::from(pooled)),
+                    pool,
+                }
+            }
+            Algorithm::Gemm => ExecCtx {
+                sig,
+                units: Vec::new(),
+                gemm: Some(GemmWorkspace::new()),
+                seqplan: None,
+                views: Vec::new(),
+                pool: None,
+            },
+            _ => ExecCtx {
+                sig,
+                units: Vec::new(),
+                gemm: None,
+                seqplan: None,
+                views: Vec::new(),
+                pool: None,
+            },
+        }
+    }
+
+    /// The signature this context was built for.
+    pub fn sig(&self) -> &WorkspaceSig {
+        &self.sig
+    }
+
+    /// Whether this context can execute `plan`.
+    pub fn matches(&self, plan: &RotationPlan) -> bool {
+        self.sig == plan.workspace_sig()
+    }
+
+    /// Total doubles allocated across all buffers (the workspace-reuse
+    /// tests assert this never grows across executes).
+    pub fn capacity_doubles(&self) -> usize {
+        self.units
+            .iter()
+            .map(PanelWorkspace::capacity_doubles)
+            .sum::<usize>()
+            + self.gemm.as_ref().map_or(0, GemmWorkspace::capacity_doubles)
+            + self.seqplan.as_ref().map_or(0, SeqPlan::buffer_doubles)
+    }
+
+    /// Addresses of the packing buffers (pointer stability across executes
+    /// proves the allocations were reused, not replaced).
+    pub fn packing_ptrs(&self) -> Vec<usize> {
+        self.units.iter().map(|u| u.panel.data_ptr() as usize).collect()
+    }
+
+    /// Re-point this context at `plan`'s shared [`WorkerPool`] when the
+    /// plan has one and the context carries a different pool. Signatures
+    /// don't encode pool identity (two same-sig plans may differ only in
+    /// their [`super::PlanBuilder::pool`] configuration), so a recycled
+    /// context must honor the executing plan's explicit pool choice; a
+    /// plan with no shared pool keeps whatever pool the context already
+    /// owns (same worker count by sig equality — reuse beats a re-spawn).
+    pub(crate) fn rebind_pool(&mut self, plan: &RotationPlan) {
+        if let Some(shared) = plan.shared_pool() {
+            let same = self.pool.as_ref().is_some_and(|p| Arc::ptr_eq(p, shared));
+            if !same && !self.units.is_empty() {
+                self.pool = Some(Arc::clone(shared));
+            }
+        }
+    }
+}
+
+/// Default bound on pooled contexts. A kernel context is roughly a packed
+/// copy of its matrix — and, for `threads > 1` plans with no shared pool,
+/// it also keeps its private [`WorkerPool`]'s parked OS threads alive
+/// while shelved — so an unbounded pool would grow resident memory *and*
+/// idle threads for the life of the service as new shapes arrive.
+/// (Idle-context reaping is a ROADMAP follow-on; services that fan out
+/// wide thread counts should configure a shared pool per thread count,
+/// as the coordinator does via [`crate::coordinator::PlanCache::pool_for`].)
+pub const DEFAULT_MAX_POOLED_CTXS: usize = 32;
+
+/// A lock-cheap pool of reusable [`ExecCtx`]s, keyed by [`WorkspaceSig`].
+/// `rent` pops a matching context (or builds one on first sight of a
+/// signature); `give_back` returns it for the next same-shaped execution.
+/// The lock is held only for the pop/push — never while a context is built
+/// or an execution runs — so N workers fan out over one shared plan
+/// without serializing on the pool.
+pub struct WorkspacePool {
+    shelves: Mutex<HashMap<WorkspaceSig, Vec<ExecCtx>>>,
+    max_pooled: usize,
+    created: AtomicU64,
+    reused: AtomicU64,
+}
+
+impl Default for WorkspacePool {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_MAX_POOLED_CTXS)
+    }
+}
+
+impl WorkspacePool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A pool holding at most `max_pooled` idle contexts across all
+    /// signatures (extra give-backs are dropped, never an error).
+    pub fn with_capacity(max_pooled: usize) -> Self {
+        Self {
+            shelves: Mutex::new(HashMap::new()),
+            max_pooled,
+            created: AtomicU64::new(0),
+            reused: AtomicU64::new(0),
+        }
+    }
+
+    /// Take a context usable with `plan`: a recycled one when the shelf
+    /// has a signature match, a freshly built one otherwise. The shelf
+    /// lock is dropped before any allocation happens. Recycled contexts
+    /// are re-pointed at the plan's shared [`WorkerPool`] when it has one
+    /// (signatures don't encode pool identity).
+    pub fn rent(&self, plan: &RotationPlan) -> ExecCtx {
+        let sig = plan.workspace_sig();
+        let recycled = {
+            let mut shelves = self.shelves.lock().expect("workspace pool poisoned");
+            shelves.get_mut(&sig).and_then(Vec::pop)
+        };
+        match recycled {
+            Some(mut ctx) => {
+                ctx.rebind_pool(plan);
+                self.reused.fetch_add(1, Ordering::Relaxed);
+                ctx
+            }
+            None => {
+                self.created.fetch_add(1, Ordering::Relaxed);
+                ExecCtx::for_plan(plan)
+            }
+        }
+    }
+
+    /// Return a rented context for the next execution with its signature.
+    /// At capacity the context is dropped (steady-state traffic never hits
+    /// this; it only bounds memory under shape churn).
+    pub fn give_back(&self, ctx: ExecCtx) {
+        let mut shelves = self.shelves.lock().expect("workspace pool poisoned");
+        let total: usize = shelves.values().map(Vec::len).sum();
+        if total >= self.max_pooled {
+            return;
+        }
+        shelves.entry(ctx.sig).or_default().push(ctx);
+    }
+
+    /// Idle contexts currently shelved (observability).
+    pub fn pooled(&self) -> usize {
+        let shelves = self.shelves.lock().expect("workspace pool poisoned");
+        shelves.values().map(Vec::len).sum()
+    }
+
+    /// Contexts built because no shelf match existed. Flat at steady
+    /// state: the no-growth suites assert this stops moving once every
+    /// concurrent executor has been served once.
+    pub fn ctxs_created(&self) -> u64 {
+        self.created.load(Ordering::Relaxed)
+    }
+
+    /// Rents served from the shelf without building anything.
+    pub fn ctxs_reused(&self) -> u64 {
+        self.reused.load(Ordering::Relaxed)
+    }
+}
+
+// The whole point of the split: plans are shared across threads, contexts
+// move between them through the pool.
+#[allow(dead_code)]
+fn _assert_ctx_mobility() {
+    fn assert_send_sync<T: Send + Sync>() {}
+    fn assert_send<T: Send>() {}
+    assert_send_sync::<WorkspacePool>();
+    assert_send::<ExecCtx>();
+}

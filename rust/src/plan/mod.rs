@@ -1,41 +1,49 @@
-//! Plan-once / execute-many API (FFTW/BLIS-style).
+//! Plan-once / execute-many API (FFTW/BLIS-style), split into a shared
+//! immutable plan and rentable per-execution contexts.
 //!
-//! The paper's whole point is that applying rotation sequences is
-//! data-movement bound, and that the §5 block parameters and §4 packing
-//! amortize that movement. The hot loops that motivate the paper apply
-//! *hundreds* of same-shaped sequence sets (Hessenberg QR sweeps, Jacobi
-//! half-sweeps, a job service with repeated shapes) — so re-solving the
-//! block plan and re-allocating packing buffers on every call is exactly
-//! wrong. A [`RotationPlan`] front-loads all of that:
+//! **Plans are shared, contexts are rented.** The paper's whole point is
+//! that the §5 block solve, the §4 packing layout, and the kernel
+//! selection are *shape-invariants*: computed once, they amortize across
+//! hundreds of same-shaped applies (Hessenberg QR sweeps, Jacobi
+//! half-sweeps, a job service with repeated shapes) — and across every
+//! *concurrent* executor of that shape. The API encodes the split:
 //!
-//! * the §5 [`crate::blocking::BlockPlan`] solve and kernel selection;
-//! * the §7 row partition **and a persistent
-//!   [`WorkerPool`]** (when `threads > 1`): worker threads are spawned at
-//!   build time (or shared across plans via [`PlanBuilder::pool`]), so an
-//!   execute is a condvar handshake — no `thread::scope` spawn per call;
-//! * a reusable [`Workspace`]: §4 packing buffers, the shared
-//!   [`SeqPlan`] wave-stream arena, and the `rs_gemm` accumulators;
+//! * [`RotationPlan`] — immutable, `Send + Sync`, `Arc`-shareable: the
+//!   shape, the [`Algorithm`], the solved §5 [`crate::blocking::BlockPlan`]
+//!   / [`KernelConfig`], the §7 row partition, side/direction, and the
+//!   tuned flag. **No buffers.** N workers execute one plan
+//!   simultaneously without cloning or locking it.
+//! * [`ExecCtx`] — the per-execution scratch (§4 packing buffers, the
+//!   shared [`SeqPlan`] wave-stream arena, `rs_gemm` accumulators, and the
+//!   [`WorkerPool`] handle for `threads > 1`), rented from a lock-cheap
+//!   [`WorkspacePool`] keyed by the plan's [`WorkspaceSig`].
+//! * [`Session`] — one executor's pairing of the two, preserving the
+//!   one-liner ergonomics (`session.execute(&mut a, &seq)?`) for apps,
+//!   benches, examples, and the CLI.
 //!
-//! after which [`RotationPlan::execute`] / [`RotationPlan::execute_inverse`]
-//! run with zero per-call allocation and zero per-call thread spawns.
-//!
-//! [`RotationPlan::execute_batch`] applies one sequence set to many
-//! same-shaped matrices in a single dispatch: the `C`/`S` wave streams are
-//! packed once for the whole batch (§5.2 applied across matrices) and the
-//! pool joins once, not per matrix.
+//! Execution is `plan.execute(&ctx, …)`-shaped: `&self` on the plan,
+//! `&mut` on the context. Repeated executes on plan-shaped problems
+//! allocate nothing; a context built for the wrong plan is a typed
+//! [`Error::WorkspaceMismatch`], not a panic.
 //!
 //! ```no_run
+//! use std::sync::Arc;
 //! use rotseq::matrix::Matrix;
-//! use rotseq::plan::RotationPlan;
+//! use rotseq::plan::{ExecCtx, RotationPlan, Session};
 //! use rotseq::rot::RotationSequence;
 //!
 //! let (m, n, k) = (960, 960, 24);
-//! let mut plan = RotationPlan::builder().shape(m, n, k).build()?;
+//! // One shared plan …
+//! let plan = Arc::new(RotationPlan::builder().shape(m, n, k).build()?);
+//! // … many executors, each with its own context.
+//! let mut ctx = ExecCtx::for_plan(&plan);
 //! let mut a = Matrix::random(m, n, 7);
 //! for sweep in 0..100 {
 //!     let seq = RotationSequence::random(n, k, sweep);
-//!     plan.execute(&mut a, &seq)?; // no allocation, no re-planning
+//!     plan.execute(&mut ctx, &mut a, &seq)?; // no allocation, no re-planning
 //! }
+//! // Or, single-executor ergonomics:
+//! let mut session = Session::new(plan);
 //! # anyhow::Ok(())
 //! ```
 //!
@@ -55,13 +63,18 @@
 //! small next to the `O(m·n·k)` apply — so the zero-allocation guarantee
 //! above is for forward executes.
 
+mod ctx;
+mod session;
+
+pub use ctx::{Error, ExecCtx, WorkspacePool, WorkspaceSig, DEFAULT_MAX_POOLED_CTXS};
+pub use session::Session;
+
 use anyhow::{bail, ensure, Result};
 use crate::blocking::{plan as solve_config, plan_bounds_for, BlockPlan, CacheParams, KernelConfig};
-use crate::gemm::GemmWorkspace;
 use crate::kernel::{self, Algorithm, PanelWorkspace, SeqPlan};
 use crate::matrix::Matrix;
 use crate::parallel::{partition_rows, MatView, WorkerPool};
-use crate::rot::{self, Givens, RotationSequence};
+use crate::rot::{Givens, RotationSequence};
 use std::sync::Arc;
 
 /// Which side of the matrix the sequences act on.
@@ -77,6 +90,32 @@ pub enum Side {
     Left,
 }
 
+impl std::fmt::Display for Side {
+    /// Displays as the CLI flag value (round-trips through
+    /// [`std::str::FromStr`]).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Side::Right => "right",
+            Side::Left => "left",
+        })
+    }
+}
+
+impl std::str::FromStr for Side {
+    type Err = anyhow::Error;
+
+    /// Accepts `right`/`r` and `left`/`l` (case-insensitive) — the single
+    /// parser shared by the CLI and any config surface, mirroring
+    /// [`Algorithm`]'s.
+    fn from_str(name: &str) -> Result<Side> {
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "right" | "r" => Side::Right,
+            "left" | "l" => Side::Left,
+            other => bail!("unknown side '{other}' (expected 'right' or 'left')"),
+        })
+    }
+}
+
 /// Default application direction of [`RotationPlan::execute`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Direction {
@@ -86,105 +125,28 @@ pub enum Direction {
     Inverse,
 }
 
-/// The reusable per-plan scratch: §4 packing buffers plus the wave-stream
-/// arena for each worker, and the `rs_gemm` accumulators. Allocated (and
-/// warmed) at [`PlanBuilder::build`]; repeated executes on plan-shaped
-/// problems never grow it.
-pub struct Workspace {
-    /// §7 row partition; empty means "serial" (one unit) or `m == 0`.
-    parts: Vec<(usize, usize)>,
-    /// One packing-buffer + stream-arena unit per concurrent worker.
-    units: Vec<PanelWorkspace>,
-    /// `rs_gemm` accumulator/panel scratch.
-    gemm: Option<GemmWorkspace>,
-    /// Shared pre-planned wave streams: packed once per execute, replayed
-    /// read-only by every pool worker, every serial `m_b` row panel, and
-    /// every batch matrix (§5.2 across the whole dispatch). Warmed at
-    /// build; `None` only until an unwarmed (throwaway) plan first runs.
-    seqplan: Option<SeqPlan>,
-    /// Reusable matrix-view scratch for pool dispatch (grows to the
-    /// largest batch size seen, then stays put).
-    views: Vec<MatView>,
+impl std::fmt::Display for Direction {
+    /// Displays as the CLI flag value (round-trips through
+    /// [`std::str::FromStr`]).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Direction::Forward => "forward",
+            Direction::Inverse => "inverse",
+        })
+    }
 }
 
-impl Workspace {
-    fn for_algo(
-        algo: Algorithm,
-        cfg: &KernelConfig,
-        wm: usize,
-        wn: usize,
-        k: usize,
-        warm: bool,
-    ) -> Workspace {
-        match algo {
-            Algorithm::Kernel => {
-                let pooled = cfg.threads > 1;
-                let (parts, units) = if pooled {
-                    let parts = partition_rows(wm, cfg.threads, cfg.mr);
-                    let units = parts
-                        .iter()
-                        .map(|&(_, rows)| PanelWorkspace::with_capacity(rows, wn, cfg.mr))
-                        .collect();
-                    (parts, units)
-                } else {
-                    let rows = cfg.mb.max(1).min(wm.max(1));
-                    (
-                        Vec::new(),
-                        vec![PanelWorkspace::with_capacity(rows, wn, cfg.mr)],
-                    )
-                };
-                // Warm the shared `SeqPlan` with an identity sequence of
-                // the planned shape so even the first execute allocates
-                // nothing. Skipped for throwaway plans (the
-                // `apply`/`apply_with` shims), where the warm-up would just
-                // double the stream-packing work of the single execute.
-                let mut seqplan = None;
-                if warm && wn >= 2 && k > 0 {
-                    let ident = RotationSequence::identity(wn, k);
-                    let mut sp = SeqPlan::new();
-                    sp.plan_into(&ident, cfg);
-                    seqplan = Some(sp);
-                }
-                Workspace {
-                    parts,
-                    units,
-                    gemm: None,
-                    seqplan,
-                    views: Vec::with_capacity(usize::from(pooled)),
-                }
-            }
-            Algorithm::Gemm => Workspace {
-                parts: Vec::new(),
-                units: Vec::new(),
-                gemm: Some(GemmWorkspace::new()),
-                seqplan: None,
-                views: Vec::new(),
-            },
-            _ => Workspace {
-                parts: Vec::new(),
-                units: Vec::new(),
-                gemm: None,
-                seqplan: None,
-                views: Vec::new(),
-            },
-        }
-    }
+impl std::str::FromStr for Direction {
+    type Err = anyhow::Error;
 
-    /// Total doubles allocated across all buffers (the workspace-reuse test
-    /// asserts this never grows across executes).
-    pub fn capacity_doubles(&self) -> usize {
-        self.units
-            .iter()
-            .map(|u| u.capacity_doubles())
-            .sum::<usize>()
-            + self.gemm.as_ref().map_or(0, |g| g.capacity_doubles())
-            + self.seqplan.as_ref().map_or(0, SeqPlan::buffer_doubles)
-    }
-
-    /// Addresses of the packing buffers (pointer stability across executes
-    /// proves the allocations were reused, not replaced).
-    pub fn packing_ptrs(&self) -> Vec<usize> {
-        self.units.iter().map(|u| u.panel.data_ptr() as usize).collect()
+    /// Accepts `forward`/`fwd` and `inverse`/`inv`/`backward`
+    /// (case-insensitive).
+    fn from_str(name: &str) -> Result<Direction> {
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "forward" | "fwd" => Direction::Forward,
+            "inverse" | "inv" | "backward" => Direction::Inverse,
+            other => bail!("unknown direction '{other}' (expected 'forward' or 'inverse')"),
+        })
     }
 }
 
@@ -248,7 +210,7 @@ impl PlanBuilder {
     }
 
     /// Problem shape: `A` is `m x n`, sequence sets carry `k` sequences.
-    /// Required. `m` and `n` are binding (they size the workspace); `k`
+    /// Required. `m` and `n` are binding (they size the contexts); `k`
     /// guides the §5 solve and arena warm-up, but `execute` accepts any
     /// `seq.k()` (the final Hessenberg batch is smaller, for example).
     pub fn shape(mut self, m: usize, n: usize, k: usize) -> Self {
@@ -306,12 +268,13 @@ impl PlanBuilder {
 
     /// Consult the autotuner's [`crate::tune::TuneDb`] before falling
     /// back to the analytic §5 solve: if a tuned configuration exists for
-    /// this machine, the plan's shape class, and its thread count (a
-    /// `rotseq tune` run populates the DB), it is used instead of the
-    /// open-loop plan. Without a DB entry the behavior is identical to a
-    /// non-autotuned build — tuning never degrades, it only replaces the
-    /// analytic point with a measured-faster one. Uses the process-shared
-    /// DB at [`crate::tune::TuneDb::default_path`] unless [`Self::tune_db`]
+    /// this machine, the plan's shape (exact records first, then the
+    /// shape class; a `rotseq tune` run populates the DB), and its thread
+    /// count, it is used instead of the open-loop plan. Without a DB
+    /// entry the behavior is identical to a non-autotuned build — tuning
+    /// never degrades, it only replaces the analytic point with a
+    /// measured-faster one. Uses the process-shared DB at
+    /// [`crate::tune::TuneDb::default_path`] unless [`Self::tune_db`]
     /// names one. Ignored when an explicit [`Self::config`] is given.
     pub fn autotune(mut self) -> Self {
         self.autotune = true;
@@ -325,25 +288,31 @@ impl PlanBuilder {
         self
     }
 
-    /// Whether `build` pre-warms the wave-stream arena so even the first
-    /// execute allocates nothing (default `true`). Disable for throwaway
-    /// plans that will execute exactly once.
+    /// Whether contexts built for this plan pre-warm the wave-stream
+    /// arena so even the first execute allocates nothing (default
+    /// `true`). Disable for throwaway contexts that will execute exactly
+    /// once.
     pub fn warm_workspace(mut self, warm: bool) -> Self {
         self.warm = warm;
         self
     }
 
-    /// Share a persistent [`WorkerPool`] with other plans instead of
-    /// spawning one per plan (the coordinator keys shared pools by thread
-    /// count). The pool must have at least as many workers as the §7
-    /// partition has chunks; ignored by serial plans and non-kernel
-    /// variants.
+    /// Share a persistent [`WorkerPool`] across this plan's contexts
+    /// instead of letting each context spawn its own (the coordinator
+    /// keys shared pools by thread count). The pool must have at least as
+    /// many workers as the §7 partition has chunks; ignored by serial
+    /// plans and non-kernel variants. With a shared pool, concurrent
+    /// executors serialize at the pool's epoch hand-off; without one,
+    /// each context's private pool dispatches independently.
     pub fn pool(mut self, pool: Arc<WorkerPool>) -> Self {
         self.pool = Some(pool);
         self
     }
 
-    /// Solve the §5 plan, validate, and allocate the workspace.
+    /// Solve the §5 plan and validate. The result is immutable and
+    /// buffer-free — wrap it in an `Arc` and share it; executors rent
+    /// [`ExecCtx`]s (or use [`Self::build_session`] for the one-executor
+    /// case).
     pub fn build(self) -> Result<RotationPlan> {
         let Some((m, n, k)) = self.shape else {
             bail!("RotationPlan requires .shape(m, n, k)");
@@ -381,7 +350,7 @@ impl PlanBuilder {
         if matches!(self.algorithm, Algorithm::Kernel | Algorithm::KernelNoPack) {
             cfg.validate()?;
         }
-        // Workspace dimensions: the matrix the kernels actually see
+        // Context dimensions: the matrix the kernels actually see
         // (transposed for left-side application).
         let (wm, wn) = match self.side {
             Side::Right => (m, n),
@@ -392,23 +361,25 @@ impl PlanBuilder {
             "effective column count must be >= 2 (got {wn} for side {:?})",
             self.side
         );
-        let workspace = Workspace::for_algo(self.algorithm, &cfg, wm, wn, k, self.warm);
-        // Parallel kernel plans dispatch into a persistent worker pool:
-        // threads are spawned here, once, and every execute afterwards is
-        // a condvar handshake (zero per-call spawn).
-        let pool = if matches!(self.algorithm, Algorithm::Kernel) && cfg.threads > 1 {
-            let pool = self
-                .pool
-                .unwrap_or_else(|| Arc::new(WorkerPool::new(cfg.threads)));
-            ensure!(
-                pool.workers() >= workspace.parts.len(),
-                "shared pool has {} workers but the plan partitions into {} chunks",
-                pool.workers(),
-                workspace.parts.len()
-            );
-            Some(pool)
+        // The §7 row partition is a shape-invariant: it lives in the plan
+        // and is replayed read-only by every context.
+        let pooled = matches!(self.algorithm, Algorithm::Kernel) && cfg.threads > 1;
+        let parts = if pooled {
+            partition_rows(wm, cfg.threads, cfg.mr)
         } else {
-            None
+            Vec::new()
+        };
+        let shared_pool = match (pooled, self.pool) {
+            (true, Some(pool)) => {
+                ensure!(
+                    pool.workers() >= parts.len(),
+                    "shared pool has {} workers but the plan partitions into {} chunks",
+                    pool.workers(),
+                    parts.len()
+                );
+                Some(pool)
+            }
+            _ => None,
         };
         Ok(RotationPlan {
             shape: (m, n, k),
@@ -418,15 +389,26 @@ impl PlanBuilder {
             cfg,
             bounds,
             tuned,
-            workspace,
-            pool,
+            parts,
+            shared_pool,
+            warm: self.warm,
         })
+    }
+
+    /// [`Self::build`] wrapped in a single-executor [`Session`] (the plan
+    /// plus a freshly built context) — the migration path for callers of
+    /// the old `&mut`-plan API.
+    pub fn build_session(self) -> Result<Session> {
+        Ok(Session::from_plan(self.build()?))
     }
 }
 
-/// A pre-solved, pre-allocated recipe for applying rotation-sequence sets
-/// to same-shaped matrices. Build once with [`RotationPlan::builder`],
-/// execute many times.
+/// A pre-solved, immutable recipe for applying rotation-sequence sets to
+/// same-shaped matrices: shape, algorithm, the §5 block/kernel solve, the
+/// §7 partition — and **no buffers**, so it is `Send + Sync` and
+/// `Arc`-shareable across any number of concurrent executors. Build once
+/// with [`RotationPlan::builder`]; execute with a rented [`ExecCtx`] (or
+/// through a [`Session`]).
 pub struct RotationPlan {
     shape: (usize, usize, usize),
     algo: Algorithm,
@@ -437,9 +419,21 @@ pub struct RotationPlan {
     /// Whether the config came from the autotuner's TuneDb rather than
     /// the analytic §5 solve.
     tuned: bool,
-    workspace: Workspace,
-    /// Persistent §7 workers (kernel plans with `threads > 1` only).
-    pool: Option<Arc<WorkerPool>>,
+    /// §7 row partition; empty means "serial" (one unit) or `m == 0`.
+    parts: Vec<(usize, usize)>,
+    /// A pool shared across this plan's contexts ([`PlanBuilder::pool`]);
+    /// `None` lets each context spawn its own workers.
+    shared_pool: Option<Arc<WorkerPool>>,
+    /// Whether contexts built for this plan pre-warm their stream arena.
+    warm: bool,
+}
+
+// The acceptance criterion, enforced at compile time: a plan with no
+// interior buffers is freely shareable.
+#[allow(dead_code)]
+fn _assert_plan_is_send_sync() {
+    fn assert<T: Send + Sync>() {}
+    assert::<RotationPlan>();
 }
 
 impl RotationPlan {
@@ -486,15 +480,57 @@ impl RotationPlan {
         self.direction
     }
 
-    /// The reusable workspace (introspection / tests).
-    pub fn workspace(&self) -> &Workspace {
-        &self.workspace
+    /// The §7 row partition (`(r0, rows)` per worker; empty for serial
+    /// plans).
+    pub fn parts(&self) -> &[(usize, usize)] {
+        &self.parts
     }
 
-    /// Apply `seq` to `a` in the plan's direction.
-    pub fn execute(&mut self, a: &mut Matrix, seq: &RotationSequence) -> Result<()> {
+    /// The signature a compatible [`ExecCtx`] must carry — the
+    /// [`WorkspacePool`] shelf key.
+    pub fn workspace_sig(&self) -> WorkspaceSig {
+        let (m, n, k) = self.shape;
+        let (wm, wn) = match self.side {
+            Side::Right => (m, n),
+            Side::Left => (n, m),
+        };
+        WorkspaceSig {
+            algo: self.algo,
+            wm,
+            wn,
+            k,
+            cfg: self.cfg,
+        }
+    }
+
+    pub(crate) fn shared_pool(&self) -> Option<&Arc<WorkerPool>> {
+        self.shared_pool.as_ref()
+    }
+
+    pub(crate) fn warm_contexts(&self) -> bool {
+        self.warm
+    }
+
+    /// The typed guard every execute runs first: a context built for a
+    /// different signature is an [`Error::WorkspaceMismatch`].
+    fn check_ctx(&self, ctx: &ExecCtx) -> Result<()> {
+        let want = self.workspace_sig();
+        if *ctx.sig() != want {
+            return Err(Error::WorkspaceMismatch {
+                plan: want,
+                ctx: *ctx.sig(),
+            }
+            .into());
+        }
+        Ok(())
+    }
+
+    /// Apply `seq` to `a` in the plan's direction, using `ctx` as the
+    /// execution scratch. `&self`: any number of executors may run one
+    /// shared plan concurrently, each with its own context.
+    pub fn execute(&self, ctx: &mut ExecCtx, a: &mut Matrix, seq: &RotationSequence) -> Result<()> {
         let invert = matches!(self.direction, Direction::Inverse);
-        self.run(a, seq, invert)
+        self.run(ctx, a, seq, invert)
     }
 
     /// Apply the opposite of the plan's direction — undoes
@@ -503,10 +539,15 @@ impl RotationPlan {
     ///
     /// Unlike a forward execute, the inverse builds a mirrored copy of
     /// the `C`/`S` matrices per call (`O(n·k)` doubles, outside the
-    /// tracked workspace — see the module docs).
-    pub fn execute_inverse(&mut self, a: &mut Matrix, seq: &RotationSequence) -> Result<()> {
+    /// tracked context — see the module docs).
+    pub fn execute_inverse(
+        &self,
+        ctx: &mut ExecCtx,
+        a: &mut Matrix,
+        seq: &RotationSequence,
+    ) -> Result<()> {
         let invert = matches!(self.direction, Direction::Forward);
-        self.run(a, seq, invert)
+        self.run(ctx, a, seq, invert)
     }
 
     /// Apply one sequence set to many same-shaped matrices, in the plan's
@@ -514,30 +555,38 @@ impl RotationPlan {
     /// dispatch. On the kernel path the `C`/`S` wave streams are packed
     /// **once** for the whole batch (the §5.2 reuse argument applied
     /// across matrices) and, under `threads > 1`, every matrix flows
-    /// through the persistent worker pool with a single join per batch.
+    /// through the context's worker pool with a single join per batch.
     /// Results are bitwise identical to executing each matrix on its own.
-    pub fn execute_batch(&mut self, mats: &mut [Matrix], seq: &RotationSequence) -> Result<()> {
+    pub fn execute_batch(
+        &self,
+        ctx: &mut ExecCtx,
+        mats: &mut [Matrix],
+        seq: &RotationSequence,
+    ) -> Result<()> {
         let invert = matches!(self.direction, Direction::Inverse);
-        self.run_batch(mats, seq, invert)
+        self.run_batch(ctx, mats, seq, invert)
     }
 
     /// Batch counterpart of [`Self::execute_inverse`]: undoes
     /// [`Self::execute_batch`] on every matrix.
     pub fn execute_batch_inverse(
-        &mut self,
+        &self,
+        ctx: &mut ExecCtx,
         mats: &mut [Matrix],
         seq: &RotationSequence,
     ) -> Result<()> {
         let invert = matches!(self.direction, Direction::Forward);
-        self.run_batch(mats, seq, invert)
+        self.run_batch(ctx, mats, seq, invert)
     }
 
     fn run_batch(
-        &mut self,
+        &self,
+        ctx: &mut ExecCtx,
         mats: &mut [Matrix],
         seq: &RotationSequence,
         invert: bool,
     ) -> Result<()> {
+        self.check_ctx(ctx)?;
         let (m, n, _k) = self.shape;
         for a in mats.iter() {
             ensure!(
@@ -563,7 +612,7 @@ impl RotationPlan {
         if !matches!(self.algo, Algorithm::Kernel) || matches!(self.side, Side::Left) {
             // Correct-for-every-variant fallback: per-matrix execution.
             for a in mats.iter_mut() {
-                self.run(a, seq, invert)?;
+                self.run(ctx, a, seq, invert)?;
             }
             return Ok(());
         }
@@ -577,43 +626,61 @@ impl RotationPlan {
             for a in mats.iter_mut() {
                 reverse_columns(a);
             }
-            let res = self.batch_kernel(mats, &mirrored);
+            let res = self.batch_kernel(ctx, mats, &mirrored);
             for a in mats.iter_mut() {
                 reverse_columns(a);
             }
             res
         } else {
-            self.batch_kernel(mats, seq)
+            self.batch_kernel(ctx, mats, seq)
         }
     }
 
     /// The batch fast path: plan the wave streams once, stream every
-    /// matrix through the replay — pooled when the plan has workers,
+    /// matrix through the replay — pooled when the context has workers,
     /// serial (one panel at a time) otherwise.
-    fn batch_kernel(&mut self, mats: &mut [Matrix], seq: &RotationSequence) -> Result<()> {
+    fn batch_kernel(
+        &self,
+        ctx: &mut ExecCtx,
+        mats: &mut [Matrix],
+        seq: &RotationSequence,
+    ) -> Result<()> {
         let cfg = self.cfg;
-        let ws = &mut self.workspace;
-        if ws.units.is_empty() {
+        let ExecCtx {
+            units,
+            seqplan,
+            views,
+            pool,
+            ..
+        } = ctx;
+        if units.is_empty() {
             // m == 0 under threads > 1: nothing to do.
             return Ok(());
         }
-        let sp = ws.seqplan.get_or_insert_with(SeqPlan::new);
+        let sp = seqplan.get_or_insert_with(SeqPlan::new);
         sp.plan_into(seq, &cfg);
-        if let Some(pool) = &self.pool {
-            ws.views.clear();
-            ws.views.extend(mats.iter_mut().map(MatView::of));
-            let res = pool.run_planned::<Givens>(&ws.views, &ws.parts, &mut ws.units, sp, &cfg);
-            ws.views.clear();
+        if let Some(pool) = pool {
+            views.clear();
+            views.extend(mats.iter_mut().map(MatView::of));
+            let res = pool.run_planned::<Givens>(views, &self.parts, units, sp, &cfg);
+            views.clear();
             res
         } else {
             for a in mats.iter_mut() {
-                replay_serial(a, &mut ws.units[0], sp, &cfg)?;
+                replay_serial(a, &mut units[0], sp, &cfg)?;
             }
             Ok(())
         }
     }
 
-    fn run(&mut self, a: &mut Matrix, seq: &RotationSequence, invert: bool) -> Result<()> {
+    fn run(
+        &self,
+        ctx: &mut ExecCtx,
+        a: &mut Matrix,
+        seq: &RotationSequence,
+        invert: bool,
+    ) -> Result<()> {
+        self.check_ctx(ctx)?;
         let (m, n, _k) = self.shape;
         ensure!(
             a.rows() == m && a.cols() == n,
@@ -635,10 +702,10 @@ impl RotationPlan {
             return Ok(());
         }
         match self.side {
-            Side::Right => self.run_oriented(a, seq, invert),
+            Side::Right => self.run_oriented(ctx, a, seq, invert),
             Side::Left => {
                 let mut at = a.transpose();
-                let res = self.run_oriented(&mut at, seq, invert);
+                let res = self.run_oriented(ctx, &mut at, seq, invert);
                 *a = at.transpose();
                 res
             }
@@ -647,24 +714,30 @@ impl RotationPlan {
 
     /// Forward or (via column-mirror conjugation, see module docs) inverse
     /// application on the kernel-facing orientation.
-    fn run_oriented(&mut self, a: &mut Matrix, seq: &RotationSequence, invert: bool) -> Result<()> {
+    fn run_oriented(
+        &self,
+        ctx: &mut ExecCtx,
+        a: &mut Matrix,
+        seq: &RotationSequence,
+        invert: bool,
+    ) -> Result<()> {
         if !invert {
-            return self.run_forward(a, seq);
+            return self.run_forward(ctx, a, seq);
         }
         let nn = seq.n();
         let kk = seq.k();
         let mirrored = RotationSequence::from_fn(nn, kk, |i, p| seq.get(nn - 2 - i, kk - 1 - p));
         reverse_columns(a);
-        let res = self.run_forward(a, &mirrored);
+        let res = self.run_forward(ctx, a, &mirrored);
         reverse_columns(a);
         res
     }
 
-    fn run_forward(&mut self, a: &mut Matrix, seq: &RotationSequence) -> Result<()> {
+    fn run_forward(&self, ctx: &mut ExecCtx, a: &mut Matrix, seq: &RotationSequence) -> Result<()> {
         let cfg = self.cfg;
         match self.algo {
-            Algorithm::Naive => rot::apply_naive(a, seq),
-            Algorithm::Wavefront => rot::apply_wavefront(a, seq),
+            Algorithm::Naive => crate::rot::apply_naive(a, seq),
+            Algorithm::Wavefront => crate::rot::apply_wavefront(a, seq),
             Algorithm::Blocked => kernel::apply_blocked(
                 a,
                 seq,
@@ -676,27 +749,39 @@ impl RotationPlan {
             ),
             Algorithm::Fused => kernel::apply_fused(a, seq, usize::MAX),
             Algorithm::Gemm => {
-                let ws = self.workspace.gemm.as_mut().expect("gemm workspace");
+                // `check_ctx` makes this unreachable for well-typed
+                // callers, but a hand-assembled context must still fail
+                // closed, not abort.
+                let (plan_sig, ctx_sig) = (self.workspace_sig(), *ctx.sig());
+                let ws = ctx.gemm.as_mut().ok_or(Error::WorkspaceMismatch {
+                    plan: plan_sig,
+                    ctx: ctx_sig,
+                })?;
                 crate::gemm::apply_gemm_with(a, seq, cfg.nb.max(cfg.kb), cfg.mb, ws);
             }
             Algorithm::Kernel => {
-                let ws = &mut self.workspace;
-                if ws.units.is_empty() {
+                let ExecCtx {
+                    units,
+                    seqplan,
+                    views,
+                    pool,
+                    ..
+                } = ctx;
+                if units.is_empty() {
                     // m == 0 under threads > 1: nothing to do.
                 } else {
                     // Pack the wave streams once; replay them over every
                     // row chunk (pooled) or m_b row panel (serial).
-                    let sp = ws.seqplan.get_or_insert_with(SeqPlan::new);
+                    let sp = seqplan.get_or_insert_with(SeqPlan::new);
                     sp.plan_into(seq, &cfg);
-                    if let Some(pool) = &self.pool {
-                        ws.views.clear();
-                        ws.views.push(MatView::of(a));
-                        let res = pool
-                            .run_planned::<Givens>(&ws.views, &ws.parts, &mut ws.units, sp, &cfg);
-                        ws.views.clear();
+                    if let Some(pool) = pool {
+                        views.clear();
+                        views.push(MatView::of(a));
+                        let res = pool.run_planned::<Givens>(views, &self.parts, units, sp, &cfg);
+                        views.clear();
                         res?;
                     } else {
-                        replay_serial(a, &mut ws.units[0], sp, &cfg)?;
+                        replay_serial(a, &mut units[0], sp, &cfg)?;
                     }
                 }
             }
@@ -754,6 +839,28 @@ mod tests {
     }
 
     #[test]
+    fn side_and_direction_parse_round_trip() {
+        for side in [Side::Right, Side::Left] {
+            assert_eq!(side.to_string().parse::<Side>().unwrap(), side);
+            assert_eq!(
+                side.to_string().to_uppercase().parse::<Side>().unwrap(),
+                side
+            );
+        }
+        assert_eq!("r".parse::<Side>().unwrap(), Side::Right);
+        assert_eq!("l".parse::<Side>().unwrap(), Side::Left);
+        assert!("middle".parse::<Side>().is_err());
+
+        for dir in [Direction::Forward, Direction::Inverse] {
+            assert_eq!(dir.to_string().parse::<Direction>().unwrap(), dir);
+        }
+        assert_eq!("fwd".parse::<Direction>().unwrap(), Direction::Forward);
+        assert_eq!("inv".parse::<Direction>().unwrap(), Direction::Inverse);
+        assert_eq!("backward".parse::<Direction>().unwrap(), Direction::Inverse);
+        assert!("sideways".parse::<Direction>().is_err());
+    }
+
+    #[test]
     fn autotune_consults_the_tune_db_and_stays_bitwise_equal() {
         use crate::tune::{tune_key, TuneDb, TunedRecord};
         let cache = CacheParams::PAPER_MACHINE;
@@ -761,14 +868,14 @@ mod tests {
         let (m, n, k) = (64, 48, 8);
 
         // Empty DB: autotune falls back to the analytic solve.
-        let mut p0 = RotationPlan::builder()
+        let mut s0 = RotationPlan::builder()
             .shape(m, n, k)
             .cache(cache)
             .tune_db(Arc::clone(&db))
-            .build()
+            .build_session()
             .unwrap();
-        assert!(!p0.is_tuned());
-        let analytic = *p0.config();
+        assert!(!s0.is_tuned());
+        let analytic = *s0.config();
 
         // Store a valid tuned record that differs from the analytic point.
         let mut tuned_cfg = analytic;
@@ -784,59 +891,160 @@ mod tests {
                 sim_traffic_bytes: 0,
             },
         );
-        let mut p1 = RotationPlan::builder()
+        let mut s1 = RotationPlan::builder()
             .shape(m, n, k)
             .cache(cache)
             .tune_db(Arc::clone(&db))
-            .build()
+            .build_session()
             .unwrap();
-        assert!(p1.is_tuned());
-        assert_eq!(p1.config(), &tuned_cfg);
+        assert!(s1.is_tuned());
+        assert_eq!(s1.config(), &tuned_cfg);
         // An explicit config always beats the DB.
-        let p2 = RotationPlan::builder()
+        let s2 = RotationPlan::builder()
             .shape(m, n, k)
             .cache(cache)
             .config(small_cfg(1))
             .tune_db(Arc::clone(&db))
-            .build()
+            .build_session()
             .unwrap();
-        assert!(!p2.is_tuned());
+        assert!(!s2.is_tuned());
         // So does an explicit kernel size: the (8,5) request must not be
         // displaced by the DB's (16,2) record.
-        let p3 = RotationPlan::builder()
+        let s3 = RotationPlan::builder()
             .shape(m, n, k)
             .cache(cache)
             .kernel(8, 5)
             .tune_db(Arc::clone(&db))
-            .build()
+            .build_session()
             .unwrap();
-        assert!(!p3.is_tuned());
-        assert_eq!((p3.config().mr, p3.config().kr), (8, 5));
+        assert!(!s3.is_tuned());
+        assert_eq!((s3.config().mr, s3.config().kr), (8, 5));
 
         // Tuned and analytic plans agree bitwise: blocks change the
         // schedule, never the arithmetic.
         let seq = RotationSequence::random(n, k, 3);
         let base = Matrix::random(m, n, 4);
         let (mut a0, mut a1) = (base.clone(), base.clone());
-        p0.execute(&mut a0, &seq).unwrap();
-        p1.execute(&mut a1, &seq).unwrap();
+        s0.execute(&mut a0, &seq).unwrap();
+        s1.execute(&mut a1, &seq).unwrap();
         assert_eq!(max_abs_diff(&a0, &a1), 0.0);
     }
 
     #[test]
     fn execute_rejects_wrong_shapes() {
-        let mut plan = RotationPlan::builder()
+        let mut session = RotationPlan::builder()
             .shape(10, 8, 2)
             .config(small_cfg(1))
-            .build()
+            .build_session()
             .unwrap();
         let seq = RotationSequence::random(8, 2, 1);
         let mut wrong = Matrix::random(9, 8, 2);
-        assert!(plan.execute(&mut wrong, &seq).is_err());
+        assert!(session.execute(&mut wrong, &seq).is_err());
         let wrong_seq = RotationSequence::random(9, 2, 1);
         let mut a = Matrix::random(10, 8, 2);
-        assert!(plan.execute(&mut a, &wrong_seq).is_err());
-        assert!(plan.execute(&mut a, &seq).is_ok());
+        assert!(session.execute(&mut a, &wrong_seq).is_err());
+        assert!(session.execute(&mut a, &seq).is_ok());
+    }
+
+    #[test]
+    fn mismatched_ctx_is_a_typed_error_not_an_abort() {
+        // An ExecCtx built for a kernel plan handed to a gemm plan (and
+        // vice versa) must surface Error::WorkspaceMismatch through
+        // Result — the old code aborted with expect("gemm workspace").
+        let (m, n, k) = (20, 12, 3);
+        let kernel_plan = RotationPlan::builder()
+            .shape(m, n, k)
+            .config(small_cfg(1))
+            .build()
+            .unwrap();
+        let gemm_plan = RotationPlan::builder()
+            .shape(m, n, k)
+            .algorithm(Algorithm::Gemm)
+            .config(small_cfg(1))
+            .build()
+            .unwrap();
+        let mut kernel_ctx = ExecCtx::for_plan(&kernel_plan);
+        let mut a = Matrix::random(m, n, 4);
+        let seq = RotationSequence::random(n, k, 5);
+
+        let err = gemm_plan.execute(&mut kernel_ctx, &mut a, &seq).unwrap_err();
+        match err.downcast_ref::<Error>() {
+            Some(Error::WorkspaceMismatch { plan, ctx }) => {
+                assert_eq!(plan.algo, Algorithm::Gemm);
+                assert_eq!(ctx.algo, Algorithm::Kernel);
+            }
+            other => panic!("expected WorkspaceMismatch, got {other:?}"),
+        }
+        // The matching pairing still works.
+        let mut gemm_ctx = ExecCtx::for_plan(&gemm_plan);
+        assert!(gemm_plan.execute(&mut gemm_ctx, &mut a, &seq).is_ok());
+        assert!(kernel_plan.execute(&mut kernel_ctx, &mut a, &seq).is_ok());
+        // Batch path takes the same guard.
+        let mut mats = vec![Matrix::random(m, n, 6)];
+        assert!(gemm_plan
+            .execute_batch(&mut kernel_ctx, &mut mats, &seq)
+            .unwrap_err()
+            .downcast_ref::<Error>()
+            .is_some());
+    }
+
+    #[test]
+    fn shared_plan_with_two_ctxs_matches_naive() {
+        // The tentpole invariant in miniature: one immutable plan, two
+        // contexts, interleaved executes — both match the reference.
+        let (m, n, k) = (37, 24, 7);
+        let seq = RotationSequence::random(n, k, 5);
+        let base = Matrix::random(m, n, 6);
+        let mut reference = base.clone();
+        apply_naive(&mut reference, &seq);
+
+        let plan = Arc::new(
+            RotationPlan::builder()
+                .shape(m, n, k)
+                .config(small_cfg(1))
+                .build()
+                .unwrap(),
+        );
+        let mut c1 = ExecCtx::for_plan(&plan);
+        let mut c2 = ExecCtx::for_plan(&plan);
+        let (mut a1, mut a2) = (base.clone(), base.clone());
+        plan.execute(&mut c1, &mut a1, &seq).unwrap();
+        plan.execute(&mut c2, &mut a2, &seq).unwrap();
+        assert_eq!(max_abs_diff(&a1, &reference), 0.0);
+        assert_eq!(max_abs_diff(&a2, &reference), 0.0);
+    }
+
+    #[test]
+    fn workspace_pool_recycles_by_signature() {
+        let (m, n, k) = (32, 20, 4);
+        let plan = RotationPlan::builder()
+            .shape(m, n, k)
+            .config(small_cfg(1))
+            .build()
+            .unwrap();
+        let pool = WorkspacePool::new();
+        let c1 = pool.rent(&plan);
+        let p1 = c1.packing_ptrs();
+        assert_eq!(pool.ctxs_created(), 1);
+        pool.give_back(c1);
+        assert_eq!(pool.pooled(), 1);
+        // Same signature: the identical buffers come back.
+        let c2 = pool.rent(&plan);
+        assert_eq!(c2.packing_ptrs(), p1);
+        assert_eq!(pool.ctxs_reused(), 1);
+        assert_eq!(pool.ctxs_created(), 1);
+        // A different signature gets its own context.
+        let other = RotationPlan::builder()
+            .shape(m, n + 2, k)
+            .config(small_cfg(1))
+            .build()
+            .unwrap();
+        let c3 = pool.rent(&other);
+        assert_eq!(pool.ctxs_created(), 2);
+        assert!(c3.matches(&other) && !c3.matches(&plan));
+        pool.give_back(c2);
+        pool.give_back(c3);
+        assert_eq!(pool.pooled(), 2);
     }
 
     #[test]
@@ -848,14 +1056,14 @@ mod tests {
         apply_naive(&mut reference, &seq);
 
         for &algo in Algorithm::ALL {
-            let mut plan = RotationPlan::builder()
+            let mut session = RotationPlan::builder()
                 .shape(m, n, k)
                 .algorithm(algo)
                 .config(small_cfg(1))
-                .build()
+                .build_session()
                 .unwrap();
             let mut a = base.clone();
-            plan.execute(&mut a, &seq).unwrap();
+            session.execute(&mut a, &seq).unwrap();
             let tol = if algo == Algorithm::Gemm { 1e-12 } else { 0.0 };
             assert!(
                 max_abs_diff(&a, &reference) <= tol,
@@ -870,20 +1078,20 @@ mod tests {
         for kind in [SequenceKind::RandomAngles, SequenceKind::QrSweepLike] {
             let seq = RotationSequence::generate(n, k, 9, kind);
             for &algo in Algorithm::ALL {
-                let mut plan = RotationPlan::builder()
+                let mut session = RotationPlan::builder()
                     .shape(m, n, k)
                     .algorithm(algo)
                     .config(small_cfg(1))
-                    .build()
+                    .build_session()
                     .unwrap();
                 let orig = Matrix::random(m, n, 10);
                 let mut a = orig.clone();
-                plan.execute(&mut a, &seq).unwrap();
+                session.execute(&mut a, &seq).unwrap();
                 assert!(
                     rel_error(&a, &orig) > 1e-8,
                     "{algo} {kind:?}: sequence must actually change A"
                 );
-                plan.execute_inverse(&mut a, &seq).unwrap();
+                session.execute_inverse(&mut a, &seq).unwrap();
                 assert!(
                     rel_error(&a, &orig) < 1e-12,
                     "{algo} {kind:?}: round trip error {}",
@@ -903,13 +1111,13 @@ mod tests {
         let mut fwd = RotationPlan::builder()
             .shape(m, n, k)
             .config(small_cfg(1))
-            .build()
+            .build_session()
             .unwrap();
         let mut inv = RotationPlan::builder()
             .shape(m, n, k)
             .direction(Direction::Inverse)
             .config(small_cfg(1))
-            .build()
+            .build_session()
             .unwrap();
         let mut a1 = orig.clone();
         fwd.execute(&mut a1, &seq).unwrap();
@@ -929,16 +1137,16 @@ mod tests {
         let orig = Matrix::random(m, n, 9);
         let mut expected = orig.clone();
         apply_naive(&mut expected, &seq);
-        rot::apply_inverse_naive(&mut expected, &seq);
+        crate::rot::apply_inverse_naive(&mut expected, &seq);
 
-        let mut plan = RotationPlan::builder()
+        let mut session = RotationPlan::builder()
             .shape(m, n, k)
             .config(small_cfg(1))
-            .build()
+            .build_session()
             .unwrap();
         let mut a = orig.clone();
-        plan.execute(&mut a, &seq).unwrap();
-        plan.execute_inverse(&mut a, &seq).unwrap();
+        session.execute(&mut a, &seq).unwrap();
+        session.execute_inverse(&mut a, &seq).unwrap();
         // Same round trip as the naive reference pair, to rounding.
         assert!(rel_error(&a, &expected) < 1e-13);
     }
@@ -954,17 +1162,17 @@ mod tests {
         apply_naive(&mut expected_t, &seq);
         let expected = expected_t.transpose();
 
-        let mut plan = RotationPlan::builder()
+        let mut session = RotationPlan::builder()
             .shape(m, n, k)
             .side(Side::Left)
             .config(small_cfg(1))
-            .build()
+            .build_session()
             .unwrap();
         let mut a = orig.clone();
-        plan.execute(&mut a, &seq).unwrap();
+        session.execute(&mut a, &seq).unwrap();
         assert_eq!(max_abs_diff(&a, &expected), 0.0);
 
-        plan.execute_inverse(&mut a, &seq).unwrap();
+        session.execute_inverse(&mut a, &seq).unwrap();
         assert!(rel_error(&a, &orig) < 1e-12);
     }
 
@@ -977,13 +1185,13 @@ mod tests {
         apply_naive(&mut reference, &seq);
 
         for threads in [2, 3, 7] {
-            let mut plan = RotationPlan::builder()
+            let mut session = RotationPlan::builder()
                 .shape(m, n, k)
                 .config(small_cfg(threads))
-                .build()
+                .build_session()
                 .unwrap();
             let mut a = base.clone();
-            plan.execute(&mut a, &seq).unwrap();
+            session.execute(&mut a, &seq).unwrap();
             assert_eq!(max_abs_diff(&a, &reference), 0.0, "threads={threads}");
         }
     }
@@ -992,39 +1200,39 @@ mod tests {
     fn repeated_executes_reuse_the_workspace() {
         // Shape chosen so every row-panel and k-block has identical
         // structure (m % mb == 0, k % kb == 0): the arena reaches its
-        // final size during the build-time warm-up, and *every* execute
+        // final size during the context warm-up, and *every* execute
         // afterwards is allocation-free.
         let (m, n, k) = (48, 26, 8);
-        let mut plan = RotationPlan::builder()
+        let mut session = RotationPlan::builder()
             .shape(m, n, k)
             .config(small_cfg(1))
-            .build()
+            .build_session()
             .unwrap();
         let mut a = Matrix::random(m, n, 1);
 
-        let cap0 = plan.workspace().capacity_doubles();
-        let ptrs0 = plan.workspace().packing_ptrs();
+        let cap0 = session.ctx().capacity_doubles();
+        let ptrs0 = session.ctx().packing_ptrs();
         assert!(cap0 > 0);
 
         for seed in 0..6u64 {
             let seq = RotationSequence::random(n, k, seed);
-            plan.execute(&mut a, &seq).unwrap();
+            session.execute(&mut a, &seq).unwrap();
             assert_eq!(
-                plan.workspace().capacity_doubles(),
+                session.ctx().capacity_doubles(),
                 cap0,
                 "workspace grew on execute {seed}"
             );
             assert_eq!(
-                plan.workspace().packing_ptrs(),
+                session.ctx().packing_ptrs(),
                 ptrs0,
                 "packing buffer moved on execute {seed}"
             );
         }
-        // Inverse executes share the same workspace too.
+        // Inverse executes share the same context too.
         let seq = RotationSequence::random(n, k, 99);
-        plan.execute_inverse(&mut a, &seq).unwrap();
-        assert_eq!(plan.workspace().capacity_doubles(), cap0);
-        assert_eq!(plan.workspace().packing_ptrs(), ptrs0);
+        session.execute_inverse(&mut a, &seq).unwrap();
+        assert_eq!(session.ctx().capacity_doubles(), cap0);
+        assert_eq!(session.ctx().packing_ptrs(), ptrs0);
     }
 
     #[test]
@@ -1032,32 +1240,32 @@ mod tests {
         // The pool path: no per-call allocation (capacity + pointer
         // stability) across executes, batches, and inverse executes.
         let (m, n, k) = (64, 20, 4);
-        let mut plan = RotationPlan::builder()
+        let mut session = RotationPlan::builder()
             .shape(m, n, k)
             .config(small_cfg(4))
-            .build()
+            .build_session()
             .unwrap();
         let mut a = Matrix::random(m, n, 2);
-        let cap0 = plan.workspace().capacity_doubles();
-        let ptrs0 = plan.workspace().packing_ptrs();
+        let cap0 = session.ctx().capacity_doubles();
+        let ptrs0 = session.ctx().packing_ptrs();
         assert_eq!(ptrs0.len(), 4, "one packing buffer per worker");
         for seed in 0..4u64 {
             let seq = RotationSequence::random(n, k, seed);
-            plan.execute(&mut a, &seq).unwrap();
-            assert_eq!(plan.workspace().capacity_doubles(), cap0);
-            assert_eq!(plan.workspace().packing_ptrs(), ptrs0);
+            session.execute(&mut a, &seq).unwrap();
+            assert_eq!(session.ctx().capacity_doubles(), cap0);
+            assert_eq!(session.ctx().packing_ptrs(), ptrs0);
         }
         let mut batch: Vec<Matrix> = (0..3).map(|i| Matrix::random(m, n, 40 + i)).collect();
         for seed in 4..7u64 {
             let seq = RotationSequence::random(n, k, seed);
-            plan.execute_batch(&mut batch, &seq).unwrap();
-            assert_eq!(plan.workspace().capacity_doubles(), cap0);
-            assert_eq!(plan.workspace().packing_ptrs(), ptrs0);
+            session.execute_batch(&mut batch, &seq).unwrap();
+            assert_eq!(session.ctx().capacity_doubles(), cap0);
+            assert_eq!(session.ctx().packing_ptrs(), ptrs0);
         }
         let seq = RotationSequence::random(n, k, 99);
-        plan.execute_inverse(&mut a, &seq).unwrap();
-        assert_eq!(plan.workspace().capacity_doubles(), cap0);
-        assert_eq!(plan.workspace().packing_ptrs(), ptrs0);
+        session.execute_inverse(&mut a, &seq).unwrap();
+        assert_eq!(session.ctx().capacity_doubles(), cap0);
+        assert_eq!(session.ctx().packing_ptrs(), ptrs0);
     }
 
     #[test]
@@ -1068,30 +1276,30 @@ mod tests {
 
         for threads in [1usize, 4] {
             // Sequential reference: each matrix through its own execute.
-            let mut seq_plan = RotationPlan::builder()
+            let mut seq_session = RotationPlan::builder()
                 .shape(m, n, k)
                 .config(small_cfg(threads))
-                .build()
+                .build_session()
                 .unwrap();
             let mut expected = base.clone();
             for a in expected.iter_mut() {
-                seq_plan.execute(a, &seq).unwrap();
+                seq_session.execute(a, &seq).unwrap();
             }
 
             // One batched dispatch must be bitwise identical.
-            let mut batch_plan = RotationPlan::builder()
+            let mut batch_session = RotationPlan::builder()
                 .shape(m, n, k)
                 .config(small_cfg(threads))
-                .build()
+                .build_session()
                 .unwrap();
             let mut got = base.clone();
-            batch_plan.execute_batch(&mut got, &seq).unwrap();
+            batch_session.execute_batch(&mut got, &seq).unwrap();
             for (g, e) in got.iter().zip(&expected) {
                 assert_eq!(max_abs_diff(g, e), 0.0, "threads={threads}");
             }
 
             // And the batch inverse restores the originals.
-            batch_plan.execute_batch_inverse(&mut got, &seq).unwrap();
+            batch_session.execute_batch_inverse(&mut got, &seq).unwrap();
             for (g, o) in got.iter().zip(&base) {
                 assert!(rel_error(g, o) < 1e-12, "threads={threads}");
             }
@@ -1108,14 +1316,14 @@ mod tests {
             apply_naive(a, &seq);
         }
         for &algo in Algorithm::ALL {
-            let mut plan = RotationPlan::builder()
+            let mut session = RotationPlan::builder()
                 .shape(m, n, k)
                 .algorithm(algo)
                 .config(small_cfg(1))
-                .build()
+                .build_session()
                 .unwrap();
             let mut got = base.clone();
-            plan.execute_batch(&mut got, &seq).unwrap();
+            session.execute_batch(&mut got, &seq).unwrap();
             let tol = if algo == Algorithm::Gemm { 1e-12 } else { 0.0 };
             for (g, e) in got.iter().zip(&expected) {
                 assert!(max_abs_diff(g, e) <= tol, "{algo} batch differs from naive");
@@ -1125,21 +1333,21 @@ mod tests {
 
     #[test]
     fn batch_rejects_wrong_shapes() {
-        let mut plan = RotationPlan::builder()
+        let mut session = RotationPlan::builder()
             .shape(10, 8, 2)
             .config(small_cfg(2))
-            .build()
+            .build_session()
             .unwrap();
         let seq = RotationSequence::random(8, 2, 1);
         let mut bad = vec![Matrix::random(10, 8, 1), Matrix::random(9, 8, 2)];
-        assert!(plan.execute_batch(&mut bad, &seq).is_err());
+        assert!(session.execute_batch(&mut bad, &seq).is_err());
         let mut ok = vec![Matrix::random(10, 8, 3)];
-        assert!(plan.execute_batch(&mut ok, &seq).is_ok());
+        assert!(session.execute_batch(&mut ok, &seq).is_ok());
     }
 
     #[test]
     fn plans_can_share_one_pool() {
-        let pool = std::sync::Arc::new(WorkerPool::new(3));
+        let pool = Arc::new(WorkerPool::new(3));
         let (m, n, k) = (40, 18, 5);
         let seq = RotationSequence::random(n, k, 31);
         let mut expected = Matrix::random(m, n, 32);
@@ -1147,19 +1355,19 @@ mod tests {
         apply_naive(&mut expected, &seq);
 
         for _ in 0..2 {
-            let mut plan = RotationPlan::builder()
+            let mut session = RotationPlan::builder()
                 .shape(m, n, k)
                 .config(small_cfg(3))
-                .pool(std::sync::Arc::clone(&pool))
-                .build()
+                .pool(Arc::clone(&pool))
+                .build_session()
                 .unwrap();
             let mut a = a0.clone();
-            plan.execute(&mut a, &seq).unwrap();
+            session.execute(&mut a, &seq).unwrap();
             assert_eq!(max_abs_diff(&a, &expected), 0.0);
         }
 
         // A pool smaller than the partition is rejected at build time.
-        let tiny = std::sync::Arc::new(WorkerPool::new(1));
+        let tiny = Arc::new(WorkerPool::new(1));
         assert!(RotationPlan::builder()
             .shape(64, 18, 5)
             .config(small_cfg(4))
@@ -1175,20 +1383,20 @@ mod tests {
         let (m, n, k) = (24, 40, 6);
         let seq = RotationSequence::random(m, k, 41);
         let orig = Matrix::random(m, n, 42);
-        let mut plan = RotationPlan::builder()
+        let mut session = RotationPlan::builder()
             .shape(m, n, k)
             .side(Side::Left)
             .config(small_cfg(3))
-            .build()
+            .build_session()
             .unwrap();
         let mut expected_t = orig.transpose();
         apply_naive(&mut expected_t, &seq);
         let expected = expected_t.transpose();
 
         let mut a = orig.clone();
-        plan.execute(&mut a, &seq).unwrap();
+        session.execute(&mut a, &seq).unwrap();
         assert_eq!(max_abs_diff(&a, &expected), 0.0);
-        plan.execute_inverse(&mut a, &seq).unwrap();
+        session.execute_inverse(&mut a, &seq).unwrap();
         assert!(rel_error(&a, &orig) < 1e-12);
     }
 
@@ -1196,38 +1404,38 @@ mod tests {
     fn smaller_k_than_planned_is_accepted() {
         // The Hessenberg tail batch: fewer sequences than the plan's k.
         let (m, n, k) = (20, 12, 8);
-        let mut plan = RotationPlan::builder()
+        let mut session = RotationPlan::builder()
             .shape(m, n, k)
             .config(small_cfg(1))
-            .build()
+            .build_session()
             .unwrap();
         let seq = RotationSequence::random(n, 3, 7);
         let mut a = Matrix::random(m, n, 8);
         let mut expected = a.clone();
         apply_naive(&mut expected, &seq);
-        plan.execute(&mut a, &seq).unwrap();
+        session.execute(&mut a, &seq).unwrap();
         assert_eq!(max_abs_diff(&a, &expected), 0.0);
     }
 
     #[test]
     fn gemm_workspace_reuses() {
         let (m, n, k) = (24, 16, 5);
-        let mut plan = RotationPlan::builder()
+        let mut session = RotationPlan::builder()
             .shape(m, n, k)
             .algorithm(Algorithm::Gemm)
             .config(small_cfg(1))
-            .build()
+            .build_session()
             .unwrap();
         let mut a = Matrix::random(m, n, 3);
         // Warm once (the GEMM scratch sizes itself on first use) …
         let seq = RotationSequence::random(n, k, 0);
-        plan.execute(&mut a, &seq).unwrap();
-        let cap = plan.workspace().capacity_doubles();
+        session.execute(&mut a, &seq).unwrap();
+        let cap = session.ctx().capacity_doubles();
         // … then stays fixed.
         for seed in 1..5u64 {
             let seq = RotationSequence::random(n, k, seed);
-            plan.execute(&mut a, &seq).unwrap();
-            assert_eq!(plan.workspace().capacity_doubles(), cap);
+            session.execute(&mut a, &seq).unwrap();
+            assert_eq!(session.ctx().capacity_doubles(), cap);
         }
     }
 }

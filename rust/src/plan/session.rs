@@ -1,0 +1,137 @@
+//! The [`Session`] facade: one executor's pairing of a shared plan with
+//! its rented context.
+//!
+//! [`RotationPlan::execute`] takes `(&self, &mut ExecCtx, …)` so N
+//! executors can share one `Arc<RotationPlan>`; a `Session` re-bundles the
+//! two for the common single-executor case, restoring the pre-split
+//! one-liner ergonomics (`session.execute(&mut a, &seq)?`). Apps, benches,
+//! examples, and the CLI all run through sessions; the coordinator's
+//! workers use the split API directly against the shared
+//! [`WorkspacePool`].
+//!
+//! Migration from the old `&mut`-plan API is mechanical:
+//!
+//! ```text
+//! let mut plan = RotationPlan::builder().shape(m, n, k).build()?;   // old
+//! let mut sess = RotationPlan::builder().shape(m, n, k).build_session()?;
+//! plan.execute(&mut a, &seq)?;  ->  sess.execute(&mut a, &seq)?;
+//! ```
+
+use crate::matrix::Matrix;
+use crate::rot::RotationSequence;
+use anyhow::Result;
+use std::sync::Arc;
+
+use super::{ExecCtx, RotationPlan, WorkspacePool};
+use crate::blocking::KernelConfig;
+use crate::coordinator::{PlanCache, PlanKey};
+
+/// A shared plan plus this executor's private context. Cheap to create
+/// per worker/request: the plan is an `Arc` clone, the context is rented
+/// (or built once and reused for the session's lifetime).
+pub struct Session {
+    plan: Arc<RotationPlan>,
+    /// `Some` except transiently during drop.
+    ctx: Option<ExecCtx>,
+    /// Where the context returns when the session ends (pool-rented
+    /// sessions only; `Session::new` contexts just drop).
+    home: Option<Arc<WorkspacePool>>,
+}
+
+impl Session {
+    /// A session over an already-shared plan, with a freshly built
+    /// context.
+    pub fn new(plan: Arc<RotationPlan>) -> Session {
+        let ctx = ExecCtx::for_plan(&plan);
+        Session {
+            plan,
+            ctx: Some(ctx),
+            home: None,
+        }
+    }
+
+    /// Wrap a plan that is not (yet) shared — the one-executor case.
+    pub fn from_plan(plan: RotationPlan) -> Session {
+        Session::new(Arc::new(plan))
+    }
+
+    /// A session over the coordinator's shared plan for `key`: the plan
+    /// comes out of (or is built into) `cache`, the context is rented
+    /// from the cache's [`WorkspacePool`] and returned there when the
+    /// session drops. Thin convenience delegate to
+    /// [`PlanCache::session`], which is where the coordinator-aware
+    /// logic lives.
+    pub fn from_cache(cache: &PlanCache, key: &PlanKey) -> Result<Session> {
+        cache.session(key)
+    }
+
+    /// A session whose context is rented from `pool` (and returned on
+    /// drop).
+    pub fn rented(plan: Arc<RotationPlan>, pool: Arc<WorkspacePool>) -> Session {
+        let ctx = pool.rent(&plan);
+        Session {
+            plan,
+            ctx: Some(ctx),
+            home: Some(pool),
+        }
+    }
+
+    /// The shared plan (clone the `Arc` to hand it to more executors).
+    pub fn plan(&self) -> &Arc<RotationPlan> {
+        &self.plan
+    }
+
+    /// Shorthand for [`RotationPlan::config`].
+    pub fn config(&self) -> &KernelConfig {
+        self.plan.config()
+    }
+
+    /// Shorthand for [`RotationPlan::is_tuned`].
+    pub fn is_tuned(&self) -> bool {
+        self.plan.is_tuned()
+    }
+
+    /// This session's context (introspection: the no-growth suites watch
+    /// [`ExecCtx::capacity_doubles`] and [`ExecCtx::packing_ptrs`]).
+    pub fn ctx(&self) -> &ExecCtx {
+        self.ctx.as_ref().expect("session context present")
+    }
+
+    /// Apply `seq` to `a` in the plan's direction (see
+    /// [`RotationPlan::execute`]).
+    pub fn execute(&mut self, a: &mut Matrix, seq: &RotationSequence) -> Result<()> {
+        let ctx = self.ctx.as_mut().expect("session context present");
+        self.plan.execute(ctx, a, seq)
+    }
+
+    /// Undo an [`Self::execute`] (see [`RotationPlan::execute_inverse`]).
+    pub fn execute_inverse(&mut self, a: &mut Matrix, seq: &RotationSequence) -> Result<()> {
+        let ctx = self.ctx.as_mut().expect("session context present");
+        self.plan.execute_inverse(ctx, a, seq)
+    }
+
+    /// Apply one sequence set to many same-shaped matrices (see
+    /// [`RotationPlan::execute_batch`]).
+    pub fn execute_batch(&mut self, mats: &mut [Matrix], seq: &RotationSequence) -> Result<()> {
+        let ctx = self.ctx.as_mut().expect("session context present");
+        self.plan.execute_batch(ctx, mats, seq)
+    }
+
+    /// Batch counterpart of [`Self::execute_inverse`].
+    pub fn execute_batch_inverse(
+        &mut self,
+        mats: &mut [Matrix],
+        seq: &RotationSequence,
+    ) -> Result<()> {
+        let ctx = self.ctx.as_mut().expect("session context present");
+        self.plan.execute_batch_inverse(ctx, mats, seq)
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        if let (Some(pool), Some(ctx)) = (self.home.take(), self.ctx.take()) {
+            pool.give_back(ctx);
+        }
+    }
+}

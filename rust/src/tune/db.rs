@@ -22,11 +22,16 @@ pub struct TuneKey {
     /// ([`super::machine_fingerprint`]). Machines with identical caches
     /// share records; the lookup-time bounds check keeps that safe.
     pub fingerprint: String,
-    /// Bucketed `(m, n, k)` ([`super::shape_class`]): shapes in one bucket
-    /// share a tuning.
+    /// `(m, n, k)` — bucketed by [`super::shape_class`] for class records,
+    /// verbatim for exact-shape records ([`Self::exact`]).
     pub shape_class: (usize, usize, usize),
     /// Worker threads the tuning was measured with.
     pub threads: usize,
+    /// `true` for an exact-shape record (`rotseq tune --shape MxNxK`):
+    /// [`super::lookup`] prefers an exact `(m, n, k)` hit over the
+    /// power-of-two class bucket — the coordinator's hottest keys get
+    /// their own tuning without widening their whole class.
+    pub exact: bool,
 }
 
 /// A tuned configuration plus the evidence that selected it.
@@ -151,6 +156,7 @@ impl TuneDb {
                     ("n_class", unum(k.shape_class.1)),
                     ("k_class", unum(k.shape_class.2)),
                     ("threads", unum(k.threads)),
+                    ("exact", Json::Bool(k.exact)),
                     ("mr", unum(c.mr)),
                     ("kr", unum(c.kr)),
                     ("mb", unum(c.mb)),
@@ -239,6 +245,8 @@ fn parse_entries(text: &str) -> Result<BTreeMap<TuneKey, TunedRecord>> {
                 fingerprint: fingerprint.to_string(),
                 shape_class: (mc, nc, kc),
                 threads,
+                // Absent in pre-exact-record files: those are class rows.
+                exact: row.get("exact").and_then(Json::as_bool).unwrap_or(false),
             },
             TunedRecord {
                 config,
@@ -266,6 +274,7 @@ mod tests {
             fingerprint: "t1-4000_t2-32000_t3-4480000".into(),
             shape_class: (1024, 1024, 256),
             threads,
+            exact: false,
         }
     }
 
@@ -293,10 +302,16 @@ mod tests {
         assert!(db.is_empty());
         db.put(key(1), record());
         db.put(key(4), record());
+        // An exact-shape record is a distinct key from its class bucket.
+        let mut exact = key(1);
+        exact.exact = true;
+        exact.shape_class = (960, 960, 180);
+        db.put(exact.clone(), record());
         db.save().unwrap();
 
         let reopened = TuneDb::open(&path).unwrap();
-        assert_eq!(reopened.len(), 2);
+        assert_eq!(reopened.len(), 3);
+        assert_eq!(reopened.get(&exact), Some(record()));
         assert_eq!(reopened.get(&key(1)), Some(record()));
         // put() normalizes the stored config's threads to the key's.
         let mut rec4 = record();

@@ -61,7 +61,9 @@ pub fn machine_fingerprint(cache: CacheParams) -> String {
 /// Bucket a shape into its tuning class: each dimension rounds up to the
 /// next power of two. Shapes in one bucket share a tuned config — block
 /// sizes depend on the cache-relative working set, which moves by factors,
-/// not increments. (Finer granularity is a ROADMAP follow-on.)
+/// not increments. The service's hottest keys can go finer: an
+/// exact-shape record ([`tune_key_exact`], `rotseq tune --shape MxNxK`)
+/// overrides the class bucket for its one shape.
 pub fn shape_class(m: usize, n: usize, k: usize) -> (usize, usize, usize) {
     (
         m.max(1).next_power_of_two(),
@@ -70,16 +72,31 @@ pub fn shape_class(m: usize, n: usize, k: usize) -> (usize, usize, usize) {
     )
 }
 
-/// The TuneDb key for a concrete problem on a concrete machine.
+/// The class-bucketed TuneDb key for a concrete problem on a concrete
+/// machine.
 pub fn tune_key(cache: CacheParams, m: usize, n: usize, k: usize, threads: usize) -> TuneKey {
     TuneKey {
         fingerprint: machine_fingerprint(cache),
         shape_class: shape_class(m, n, k),
         threads: threads.max(1),
+        exact: false,
     }
 }
 
-/// Look up a tuned config for `(m, n, k, threads)` on the `cache` machine.
+/// The exact-shape TuneDb key: `(m, n, k)` verbatim, preferred by
+/// [`lookup`] over the class bucket. Written by `rotseq tune --shape
+/// MxNxK` for the coordinator's hottest shapes.
+pub fn tune_key_exact(cache: CacheParams, m: usize, n: usize, k: usize, threads: usize) -> TuneKey {
+    TuneKey {
+        fingerprint: machine_fingerprint(cache),
+        shape_class: (m, n, k),
+        threads: threads.max(1),
+        exact: true,
+    }
+}
+
+/// Look up a tuned config for `(m, n, k, threads)` on the `cache` machine:
+/// an exact `(m, n, k)` record wins over the power-of-two class bucket.
 /// Returns it with `threads` filled in; `None` when nothing was tuned (the
 /// caller falls back to the analytic §5 plan).
 pub fn lookup(
@@ -90,7 +107,9 @@ pub fn lookup(
     k: usize,
     threads: usize,
 ) -> Option<KernelConfig> {
-    let rec = db.get(&tune_key(cache, m, n, k, threads))?;
+    let rec = db
+        .get(&tune_key_exact(cache, m, n, k, threads))
+        .or_else(|| db.get(&tune_key(cache, m, n, k, threads)))?;
     let mut cfg = rec.config;
     cfg.threads = threads.max(1);
     // Stale or hand-edited records must never poison a build.
@@ -259,9 +278,9 @@ pub fn tune_shape(
         if let Some(pool) = &pool {
             builder = builder.pool(Arc::clone(pool));
         }
-        let mut plan = builder.build()?;
+        let mut session = builder.build_session()?;
         let meas = measure(&opts.mc, |_| {
-            plan.execute(&mut a, &seq).expect("tuning execute failed")
+            session.execute(&mut a, &seq).expect("tuning execute failed")
         });
         scored[idx].measured_gflops = Some(flops as f64 / meas.min_s.max(1e-12) / 1e9);
     }
@@ -298,7 +317,7 @@ pub fn tune_shape(
 }
 
 /// Tune one shape and persist the winner in `db` (saving to disk when the
-/// DB has a path).
+/// DB has a path) under its power-of-two class key.
 pub fn tune_and_store(
     db: &TuneDb,
     m: usize,
@@ -309,6 +328,26 @@ pub fn tune_and_store(
     opts: &TuneOptions,
 ) -> Result<TuneReport> {
     let report = tune_shape(m, n, k, threads, cache, opts)?;
+    db.put(report.key.clone(), report.record);
+    db.save()?;
+    Ok(report)
+}
+
+/// Like [`tune_and_store`], but persist under the **exact** `(m, n, k)`
+/// key ([`tune_key_exact`]): the record serves this one shape and beats
+/// any class record at [`lookup`] time — the `rotseq tune --shape MxNxK`
+/// path for the coordinator's hottest keys.
+pub fn tune_and_store_exact(
+    db: &TuneDb,
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+    cache: CacheParams,
+    opts: &TuneOptions,
+) -> Result<TuneReport> {
+    let mut report = tune_shape(m, n, k, threads, cache, opts)?;
+    report.key = tune_key_exact(cache, m, n, k, threads);
     db.put(report.key.clone(), report.record);
     db.save()?;
     Ok(report)
@@ -341,6 +380,62 @@ mod tests {
         let c = CacheParams::PAPER_MACHINE;
         assert_eq!(tune_key(c, 700, 700, 150, 2), tune_key(c, 960, 960, 180, 2));
         assert_ne!(tune_key(c, 700, 700, 150, 2), tune_key(c, 700, 700, 150, 4));
+    }
+
+    #[test]
+    fn exact_shape_record_beats_the_class_bucket() {
+        let cache = CacheParams::PAPER_MACHINE;
+        let db = TuneDb::in_memory();
+        let (m, n, k) = (700, 700, 150);
+        let class_cfg = analytic_plan(16, 2, cache, 1);
+        let mut exact_cfg = class_cfg;
+        exact_cfg.nb -= 8;
+        db.put(
+            tune_key(cache, m, n, k, 1),
+            TunedRecord {
+                config: class_cfg,
+                gflops: 1.0,
+                analytic_gflops: 1.0,
+                sim_traffic_bytes: 0,
+            },
+        );
+        // Class record serves the whole bucket …
+        assert_eq!(lookup(&db, cache, m, n, k, 1), Some(class_cfg));
+        assert_eq!(lookup(&db, cache, 960, 960, 180, 1), Some(class_cfg));
+        // … until an exact record lands: preferred for its shape only.
+        db.put(
+            tune_key_exact(cache, m, n, k, 1),
+            TunedRecord {
+                config: exact_cfg,
+                gflops: 2.0,
+                analytic_gflops: 1.0,
+                sim_traffic_bytes: 0,
+            },
+        );
+        assert_eq!(lookup(&db, cache, m, n, k, 1), Some(exact_cfg));
+        assert_eq!(
+            lookup(&db, cache, 960, 960, 180, 1),
+            Some(class_cfg),
+            "bucket neighbors keep the class record"
+        );
+        // Exact and class keys never collide even when the shape is
+        // already a power of two in every dimension.
+        assert_ne!(
+            tune_key_exact(cache, 1024, 1024, 256, 1),
+            tune_key(cache, 1024, 1024, 256, 1)
+        );
+    }
+
+    #[test]
+    fn tune_and_store_exact_round_trips() {
+        let cache = CacheParams::PAPER_MACHINE;
+        let db = TuneDb::in_memory();
+        let report = tune_and_store_exact(&db, 64, 48, 6, 1, cache, &small_opts()).unwrap();
+        assert!(report.key.exact);
+        assert_eq!(report.key.shape_class, (64, 48, 6));
+        assert_eq!(lookup(&db, cache, 64, 48, 6, 1), Some(report.record.config));
+        // The exact record does not leak to bucket neighbors.
+        assert!(lookup(&db, cache, 63, 48, 6, 1).is_none());
     }
 
     #[test]

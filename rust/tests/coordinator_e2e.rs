@@ -59,6 +59,65 @@ fn mixed_workload_through_router() {
 }
 
 #[test]
+fn same_shape_fanout_shares_one_plan_without_clones() {
+    // The api_redesign acceptance path: a burst of same-shaped jobs
+    // across 4 workers must resolve to ONE shared Arc plan (single
+    // build, all the rest hits) with per-execution contexts rented from
+    // the cache's WorkspacePool — and the per-key concurrency metrics
+    // must have seen the traffic.
+    let coord = Coordinator::start(4, RoutePolicy::Auto);
+    let (m, n, k) = (64, 40, 8);
+    let jobs = 24u64;
+    let mut pending = Vec::new();
+    for seed in 0..jobs {
+        let seq = RotationSequence::random(n, k, seed);
+        let a = Matrix::random(m, n, 2000 + seed);
+        let mut expected = a.clone();
+        apply_naive(&mut expected, &seq);
+        let rx = coord.submit(Job {
+            matrix: a,
+            seq,
+            spec: JobSpec {
+                algorithm: Some(Algorithm::Kernel),
+                config: cfg(),
+            },
+        });
+        pending.push((rx, expected));
+    }
+    for (rx, expected) in pending {
+        let r = rx.recv().unwrap().unwrap();
+        assert_eq!(max_abs_diff(&r.matrix, &expected), 0.0);
+    }
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.jobs_completed, jobs);
+    // Single-flight build: exactly one miss even with 4 racing workers;
+    // no checkout pool means no plan was ever cloned or rebuilt.
+    assert_eq!(snap.plan_cache_misses, 1, "same-shape burst built >1 plan");
+    assert_eq!(snap.plan_cache_hits, jobs - 1);
+    assert_eq!(coord.plan_cache().cached_plans(), 1);
+
+    let key = coord.plan_cache().tuned_key(JobSpec {
+        algorithm: Some(Algorithm::Kernel),
+        config: cfg(),
+    }
+    .plan_key(coord.policy(), m, n, k));
+    let stats = coord.plan_cache().key_stats(&key);
+    assert_eq!(stats.builds, 1);
+    assert_eq!(stats.hits, jobs - 1);
+    assert_eq!(stats.in_flight, 0, "all executions retired");
+    assert!(stats.peak_concurrency >= 1);
+    // Contexts were pooled per concurrent executor, not per job.
+    let ws = coord.plan_cache().workspace_pool();
+    assert!(
+        ws.ctxs_created() <= 4,
+        "{} contexts for 4 workers",
+        ws.ctxs_created()
+    );
+    assert_eq!(ws.ctxs_created() + ws.ctxs_reused(), jobs);
+    coord.shutdown();
+}
+
+#[test]
 fn every_variant_through_the_coordinator() {
     let coord = Coordinator::start(2, RoutePolicy::Auto);
     let (m, n, k) = (40, 30, 6);

@@ -107,7 +107,7 @@ fn batch_equals_sequential_bitwise_on_random_shapes() {
             let mut one = RotationPlan::builder()
                 .shape(m, n, k)
                 .config(cfg)
-                .build()
+                .build_session()
                 .unwrap();
             for a in expected.iter_mut() {
                 one.execute(a, &seq).unwrap();
@@ -121,7 +121,7 @@ fn batch_equals_sequential_bitwise_on_random_shapes() {
             let mut batched = RotationPlan::builder()
                 .shape(m, n, k)
                 .config(cfg)
-                .build()
+                .build_session()
                 .unwrap();
             batched.execute_batch(&mut got, &seq).unwrap();
             for (g, e) in got.iter().zip(&expected) {
@@ -137,7 +137,7 @@ fn batch_equals_sequential_bitwise_on_random_shapes() {
 
 #[test]
 fn pooled_plan_is_steady_state_allocation_free() {
-    // Build (warm) -> every execute and batch afterwards keeps workspace
+    // Build (warm) -> every execute and batch afterwards keeps context
     // capacity and packing-buffer addresses fixed: nothing was allocated
     // or re-allocated on the hot path.
     let (m, n, k) = (100, 30, 6);
@@ -149,13 +149,13 @@ fn pooled_plan_is_steady_state_allocation_free() {
         nb: 8,
         threads: 4,
     };
-    let mut plan = RotationPlan::builder()
+    let mut session = RotationPlan::builder()
         .shape(m, n, k)
         .config(cfg)
-        .build()
+        .build_session()
         .unwrap();
-    let cap0 = plan.workspace().capacity_doubles();
-    let ptrs0 = plan.workspace().packing_ptrs();
+    let cap0 = session.ctx().capacity_doubles();
+    let ptrs0 = session.ctx().packing_ptrs();
     assert!(cap0 > 0);
     assert_eq!(ptrs0.len(), 4);
 
@@ -163,12 +163,67 @@ fn pooled_plan_is_steady_state_allocation_free() {
     let mut batch: Vec<Matrix> = (0..3).map(|i| Matrix::random(m, n, 50 + i)).collect();
     for seed in 0..5u64 {
         let seq = RotationSequence::random(n, k, seed);
-        plan.execute(&mut a, &seq).unwrap();
-        plan.execute_batch(&mut batch, &seq).unwrap();
-        plan.execute_inverse(&mut a, &seq).unwrap();
-        assert_eq!(plan.workspace().capacity_doubles(), cap0, "seed {seed}");
-        assert_eq!(plan.workspace().packing_ptrs(), ptrs0, "seed {seed}");
+        session.execute(&mut a, &seq).unwrap();
+        session.execute_batch(&mut batch, &seq).unwrap();
+        session.execute_inverse(&mut a, &seq).unwrap();
+        assert_eq!(session.ctx().capacity_doubles(), cap0, "seed {seed}");
+        assert_eq!(session.ctx().packing_ptrs(), ptrs0, "seed {seed}");
     }
+}
+
+#[test]
+fn workspace_pool_rentals_are_steady_state_allocation_free() {
+    // The rented-context counterpart of the suite above: after every
+    // concurrent executor has been served once, further rent/give_back
+    // cycles create nothing and the recycled buffers are the same
+    // allocations (pointer-stable), not replacements.
+    use rotseq::plan::WorkspacePool;
+    let (m, n, k) = (64, 24, 4);
+    let cfg = rotseq::blocking::KernelConfig {
+        mr: 8,
+        kr: 2,
+        mb: 16,
+        kb: 4,
+        nb: 8,
+        threads: 1,
+    };
+    let plan = std::sync::Arc::new(
+        RotationPlan::builder()
+            .shape(m, n, k)
+            .config(cfg)
+            .build()
+            .unwrap(),
+    );
+    let pool = WorkspacePool::new();
+    // Steady state of 3 concurrent executors: 3 contexts, ever.
+    let warm: Vec<_> = (0..3).map(|_| pool.rent(&plan)).collect();
+    let mut ptrs: Vec<Vec<usize>> = warm.iter().map(|c| c.packing_ptrs()).collect();
+    let caps: Vec<usize> = warm.iter().map(|c| c.capacity_doubles()).collect();
+    ptrs.sort();
+    for c in warm {
+        pool.give_back(c);
+    }
+    assert_eq!(pool.ctxs_created(), 3);
+
+    let seq = RotationSequence::random(n, k, 9);
+    let mut a = Matrix::random(m, n, 10);
+    for round in 0..5 {
+        let mut out: Vec<_> = (0..3).map(|_| pool.rent(&plan)).collect();
+        for ctx in out.iter_mut() {
+            plan.execute(ctx, &mut a, &seq).unwrap();
+        }
+        let mut got: Vec<Vec<usize>> = out.iter().map(|c| c.packing_ptrs()).collect();
+        got.sort();
+        assert_eq!(got, ptrs, "round {round}: buffers were reallocated");
+        for (c, cap) in out.iter().zip(&caps) {
+            assert_eq!(c.capacity_doubles(), *cap, "round {round}: context grew");
+        }
+        for c in out {
+            pool.give_back(c);
+        }
+        assert_eq!(pool.ctxs_created(), 3, "round {round}: pool grew");
+    }
+    assert_eq!(pool.ctxs_reused(), 15);
 }
 
 #[test]

@@ -1,0 +1,214 @@
+//! The plan/ctx split's acceptance suite: one immutable
+//! `Arc<RotationPlan>` shared by N threads with pooled `ExecCtx`s must be
+//! bitwise identical to serial execution, the `WorkspacePool` must reach
+//! a no-growth steady state, and a mismatched context must fail with the
+//! typed error, not an abort.
+
+use rotseq::blocking::KernelConfig;
+use rotseq::matrix::{max_abs_diff, Matrix};
+use rotseq::plan::{Error as PlanError, ExecCtx, RotationPlan, Session, WorkspacePool};
+use rotseq::rot::{apply_naive, RotationSequence};
+use std::sync::Arc;
+
+fn cfg(threads: usize) -> KernelConfig {
+    KernelConfig {
+        mr: 8,
+        kr: 2,
+        mb: 16,
+        kb: 4,
+        nb: 8,
+        threads,
+    }
+}
+
+#[test]
+fn n_threads_share_one_arc_plan_bitwise_identical_to_serial() {
+    let (m, n, k) = (72, 30, 6);
+    let jobs = 12usize;
+    let threads = 4usize;
+    let plan = Arc::new(
+        RotationPlan::builder()
+            .shape(m, n, k)
+            .config(cfg(1))
+            .build()
+            .unwrap(),
+    );
+    let pool = Arc::new(WorkspacePool::new());
+
+    let seqs: Vec<RotationSequence> =
+        (0..jobs as u64).map(|i| RotationSequence::random(n, k, i)).collect();
+    let bases: Vec<Matrix> = (0..jobs as u64).map(|i| Matrix::random(m, n, 100 + i)).collect();
+
+    // Serial reference: every job through one session on a private plan.
+    let mut serial = RotationPlan::builder()
+        .shape(m, n, k)
+        .config(cfg(1))
+        .build_session()
+        .unwrap();
+    let expected: Vec<Matrix> = bases
+        .iter()
+        .zip(&seqs)
+        .map(|(base, seq)| {
+            let mut a = base.clone();
+            serial.execute(&mut a, seq).unwrap();
+            a
+        })
+        .collect();
+
+    // Parallel: N threads strided over the jobs, all executing the SAME
+    // Arc plan with contexts rented from one shared pool.
+    let outputs: Vec<(usize, Matrix)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let plan = Arc::clone(&plan);
+                let pool = Arc::clone(&pool);
+                let seqs = &seqs;
+                let bases = &bases;
+                scope.spawn(move || {
+                    let mut done = Vec::new();
+                    for j in (t..seqs.len()).step_by(threads) {
+                        let mut ctx = pool.rent(&plan);
+                        let mut a = bases[j].clone();
+                        plan.execute(&mut ctx, &mut a, &seqs[j]).unwrap();
+                        pool.give_back(ctx);
+                        done.push((j, a));
+                    }
+                    done
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+
+    assert_eq!(outputs.len(), jobs);
+    for (j, got) in outputs {
+        assert_eq!(
+            max_abs_diff(&got, &expected[j]),
+            0.0,
+            "job {j}: shared-plan parallel result differs from serial"
+        );
+    }
+    // At most one context per concurrent executor was ever built.
+    assert!(
+        pool.ctxs_created() <= threads as u64,
+        "pool built {} contexts for {threads} executors",
+        pool.ctxs_created()
+    );
+}
+
+#[test]
+fn shared_pooled_kernel_plan_matches_naive_across_sessions() {
+    // threads > 1 in the plan config: each session's context owns (or
+    // shares) a §7 WorkerPool; the Arc plan itself stays immutable.
+    let (m, n, k) = (64, 22, 5);
+    let plan = Arc::new(
+        RotationPlan::builder()
+            .shape(m, n, k)
+            .config(cfg(3))
+            .build()
+            .unwrap(),
+    );
+    let seq = RotationSequence::random(n, k, 7);
+    let base = Matrix::random(m, n, 8);
+    let mut expected = base.clone();
+    apply_naive(&mut expected, &seq);
+
+    let results: Vec<Matrix> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let plan = Arc::clone(&plan);
+                let base = base.clone();
+                let seq = seq.clone();
+                scope.spawn(move || {
+                    let mut session = Session::new(plan);
+                    let mut a = base;
+                    session.execute(&mut a, &seq).unwrap();
+                    a
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (i, got) in results.iter().enumerate() {
+        assert_eq!(max_abs_diff(got, &expected), 0.0, "session {i}");
+    }
+}
+
+#[test]
+fn workspace_pool_no_growth_at_steady_state() {
+    let (m, n, k) = (48, 26, 8);
+    let plan = Arc::new(
+        RotationPlan::builder()
+            .shape(m, n, k)
+            .config(cfg(1))
+            .build()
+            .unwrap(),
+    );
+    let pool = WorkspacePool::new();
+    let mut a = Matrix::random(m, n, 1);
+    // First rental builds; everything after recycles the same buffers.
+    let ctx = pool.rent(&plan);
+    let cap0 = ctx.capacity_doubles();
+    let ptrs0 = ctx.packing_ptrs();
+    pool.give_back(ctx);
+    for seed in 0..8u64 {
+        let seq = RotationSequence::random(n, k, seed);
+        let mut ctx = pool.rent(&plan);
+        plan.execute(&mut ctx, &mut a, &seq).unwrap();
+        assert_eq!(ctx.capacity_doubles(), cap0, "context grew at seed {seed}");
+        assert_eq!(ctx.packing_ptrs(), ptrs0, "buffers moved at seed {seed}");
+        pool.give_back(ctx);
+        assert_eq!(pool.ctxs_created(), 1, "pool built a second context");
+        assert_eq!(pool.pooled(), 1);
+    }
+    assert_eq!(pool.ctxs_reused(), 8);
+}
+
+#[test]
+fn sessions_return_rented_ctxs_to_their_pool() {
+    let (m, n, k) = (32, 18, 3);
+    let plan = Arc::new(
+        RotationPlan::builder()
+            .shape(m, n, k)
+            .config(cfg(1))
+            .build()
+            .unwrap(),
+    );
+    let pool = Arc::new(WorkspacePool::new());
+    let seq = RotationSequence::random(n, k, 2);
+    for round in 0..3u64 {
+        let mut session = Session::rented(Arc::clone(&plan), Arc::clone(&pool));
+        let mut a = Matrix::random(m, n, 30 + round);
+        session.execute(&mut a, &seq).unwrap();
+        drop(session);
+        assert_eq!(pool.pooled(), 1, "round {round}: ctx not returned");
+    }
+    assert_eq!(pool.ctxs_created(), 1);
+    assert_eq!(pool.ctxs_reused(), 2);
+}
+
+#[test]
+fn workspace_mismatch_surfaces_as_typed_error() {
+    let (m, n, k) = (20, 12, 3);
+    let plan_a = RotationPlan::builder()
+        .shape(m, n, k)
+        .config(cfg(1))
+        .build()
+        .unwrap();
+    let plan_b = RotationPlan::builder()
+        .shape(m + 4, n, k)
+        .config(cfg(1))
+        .build()
+        .unwrap();
+    let mut ctx_a = ExecCtx::for_plan(&plan_a);
+    let mut a = Matrix::random(m + 4, n, 4);
+    let seq = RotationSequence::random(n, k, 5);
+    let err = plan_b.execute(&mut ctx_a, &mut a, &seq).unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<PlanError>(),
+            Some(PlanError::WorkspaceMismatch { .. })
+        ),
+        "expected typed WorkspaceMismatch, got: {err:#}"
+    );
+}

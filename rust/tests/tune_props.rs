@@ -140,21 +140,21 @@ fn tuned_plan_is_bitwise_equal_to_analytic_plan() {
     assert!(report.record.gflops >= report.analytic_gflops);
 
     // Autotuned build hits the record we just stored.
-    let mut tuned_plan = RotationPlan::builder()
+    let mut tuned_session = RotationPlan::builder()
         .shape(m, n, k)
         .cache(cache)
         .tune_db(Arc::clone(&db))
-        .build()
+        .build_session()
         .unwrap();
-    assert!(tuned_plan.is_tuned());
-    assert_eq!(*tuned_plan.config(), report.record.config);
+    assert!(tuned_session.is_tuned());
+    assert_eq!(*tuned_session.config(), report.record.config);
 
-    let mut analytic_plan = RotationPlan::builder()
+    let mut analytic_session = RotationPlan::builder()
         .shape(m, n, k)
         .cache(cache)
-        .build()
+        .build_session()
         .unwrap();
-    assert!(!analytic_plan.is_tuned());
+    assert!(!analytic_session.is_tuned());
 
     // Same inputs through both plans (and the naive reference): bitwise
     // identical outputs — tuning changes the schedule, not the result.
@@ -164,8 +164,8 @@ fn tuned_plan_is_bitwise_equal_to_analytic_plan() {
         let mut reference = base.clone();
         apply_naive(&mut reference, &seq);
         let (mut a_t, mut a_a) = (base.clone(), base.clone());
-        tuned_plan.execute(&mut a_t, &seq).unwrap();
-        analytic_plan.execute(&mut a_a, &seq).unwrap();
+        tuned_session.execute(&mut a_t, &seq).unwrap();
+        analytic_session.execute(&mut a_a, &seq).unwrap();
         assert_eq!(max_abs_diff(&a_t, &a_a), 0.0, "seed {seed}");
         assert_eq!(max_abs_diff(&a_t, &reference), 0.0, "seed {seed} vs naive");
     }
@@ -203,7 +203,7 @@ fn tuned_threads_are_keyed_separately_and_match_serial_results() {
         .cache(cache)
         .threads(3)
         .tune_db(Arc::clone(&db))
-        .build()
+        .build_session()
         .unwrap();
     assert!(pooled.is_tuned());
 
