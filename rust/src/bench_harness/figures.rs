@@ -4,7 +4,9 @@
 use super::measure::{measure, MeasureConfig};
 use crate::blocking::{plan, CacheParams};
 use crate::jsonio::{num, obj, s, unum, Json};
-use crate::kernel::{apply_blocked, apply_fused, apply_kernel_packed, Algorithm, BlockConfig};
+use crate::kernel::{
+    apply_blocked, apply_fused, apply_kernel_packed, Algorithm, BlockConfig, MemopCounts,
+};
 use crate::matrix::Matrix;
 use crate::pack::PackedMatrix;
 use crate::parallel::speedup_model::{modeled_gflops, modeled_speedup, MachineModel};
@@ -24,6 +26,9 @@ pub struct Fig5Row {
     pub gflops: f64,
     /// Runtime relative to rs_kernel_v2 (the bottom panel of Fig 5).
     pub rel_runtime: f64,
+    /// Per-execute element-move ledger (kernel plan series only): the
+    /// fused-vs-staged evidence the CI perf smoke asserts on.
+    pub memops: Option<MemopCounts>,
 }
 
 // Rate from the *minimum* time: this container's shared CPU shows ±30%
@@ -58,12 +63,12 @@ pub fn fig5_serial(
         let flops = seq.flops(m);
         let base = Matrix::random(m, n, 7);
 
-        let mut results: Vec<(&'static str, f64)> = Vec::new();
+        let mut results: Vec<(&'static str, f64, Option<MemopCounts>)> = Vec::new();
 
         // rs_unoptimized
         let mut a = base.clone();
         let meas = measure(mc, |_| apply_naive(&mut a, &seq));
-        results.push(("rs_unoptimized", gflops_of(flops, &meas)));
+        results.push(("rs_unoptimized", gflops_of(flops, &meas), None));
 
         // rs_blocked
         let mut a = base.clone();
@@ -73,36 +78,57 @@ pub fn fig5_serial(
             nb: cfg.nb,
         };
         let meas = measure(mc, |_| apply_blocked(&mut a, &seq, &bc));
-        results.push(("rs_blocked", gflops_of(flops, &meas)));
+        results.push(("rs_blocked", gflops_of(flops, &meas), None));
 
         // rs_fused
         let mut a = base.clone();
         let meas = measure(mc, |_| apply_fused(&mut a, &seq, usize::MAX));
-        results.push(("rs_fused", gflops_of(flops, &meas)));
+        results.push(("rs_fused", gflops_of(flops, &meas), None));
 
         // rs_gemm
         let mut a = base.clone();
         let meas = measure(mc, |_| {
             crate::gemm::apply_gemm(&mut a, &seq, cfg.nb.max(cfg.kb), cfg.mb)
         });
-        results.push(("rs_gemm", gflops_of(flops, &meas)));
+        results.push(("rs_gemm", gflops_of(flops, &meas), None));
 
-        // rs_kernel (packs per call; planned once, executed per rep — the
-        // plan-once/execute-many usage the paper's consumers follow)
+        // rs_kernel: the staged pack → kernel → unpack pipeline (planned
+        // once, executed per rep), kept as the A/B reference — its memop
+        // ledger carries the 4·m·n copy-sweep share the fused series sheds.
         let mut a = base.clone();
         let mut kernel_session = RotationPlan::builder()
             .shape(m, n, k)
             .config(cfg)
+            .fused(false)
             .build_session()
             .expect("kernel plan");
         let meas = measure(mc, |_| kernel_session.execute(&mut a, &seq).unwrap());
-        results.push(("rs_kernel", gflops_of(flops, &meas)));
+        results.push((
+            "rs_kernel",
+            gflops_of(flops, &meas),
+            Some(kernel_session.last_memops()),
+        ));
+
+        // rs_kernel_fused: the plan default — §4 packing folded into the
+        // first/last kernel passes, zero dedicated sweeps.
+        let mut a = base.clone();
+        let mut fused_session = RotationPlan::builder()
+            .shape(m, n, k)
+            .config(cfg)
+            .build_session()
+            .expect("fused kernel plan");
+        let meas = measure(mc, |_| fused_session.execute(&mut a, &seq).unwrap());
+        results.push((
+            "rs_kernel_fused",
+            gflops_of(flops, &meas),
+            Some(fused_session.last_memops()),
+        ));
 
         // rs_kernel_v2 (pre-packed)
         let mut pm = PackedMatrix::from_matrix(&base, cfg.mb, cfg.mr);
         let meas = measure(mc, |_| apply_kernel_packed(&mut pm, &seq, &cfg).unwrap());
         let v2_time = meas.median_s;
-        results.push(("rs_kernel_v2", gflops_of(flops, &meas)));
+        results.push(("rs_kernel_v2", gflops_of(flops, &meas), None));
 
         // rs_kernel_tuned: the TuneDb winner for this shape class. On a
         // DB miss the series is omitted (like fig7's '-') — silently
@@ -118,7 +144,11 @@ pub fn fig5_serial(
                         .build_session()
                         .expect("tuned kernel plan");
                     let meas = measure(mc, |_| tuned_session.execute(&mut a, &seq).unwrap());
-                    results.push(("rs_kernel_tuned", gflops_of(flops, &meas)));
+                    results.push((
+                        "rs_kernel_tuned",
+                        gflops_of(flops, &meas),
+                        Some(tuned_session.last_memops()),
+                    ));
                 }
                 None => eprintln!(
                     "# rs_kernel_tuned: no TuneDb record for n={n} threads={} — series omitted \
@@ -128,13 +158,14 @@ pub fn fig5_serial(
             }
         }
 
-        for (algo, gflops) in results {
+        for (algo, gflops, memops) in results {
             let rel = (flops as f64 / gflops / 1e9) / v2_time;
             rows.push(Fig5Row {
                 algo,
                 n,
                 gflops,
                 rel_runtime: rel,
+                memops,
             });
         }
     }
@@ -150,11 +181,18 @@ pub fn print_fig5(rows: &[Fig5Row], threads: usize) {
     } else {
         println!("# Fig 5 variant — pooled rs_kernel, threads = {threads} (Gflop/s), m = n");
     }
-    println!("{:<16} {:>6} {:>10} {:>12}", "algorithm", "n", "Gflop/s", "t/t_kernel_v2");
+    println!(
+        "{:<16} {:>6} {:>10} {:>12} {:>22}",
+        "algorithm", "n", "Gflop/s", "t/t_kernel_v2", "memops tot (sweeps)"
+    );
     for r in rows {
+        let memo = r
+            .memops
+            .map(|m| format!("{:.3e} ({:.2e})", m.total() as f64, m.sweep_copies as f64))
+            .unwrap_or_else(|| "-".into());
         println!(
-            "{:<16} {:>6} {:>10.3} {:>12.3}",
-            r.algo, r.n, r.gflops, r.rel_runtime
+            "{:<16} {:>6} {:>10.3} {:>12.3} {:>22}",
+            r.algo, r.n, r.gflops, r.rel_runtime, memo
         );
     }
 }
@@ -445,6 +483,19 @@ pub fn io_table(m: usize, n: usize, k: usize) -> Vec<IoRow> {
             memops: r.memops.total(),
         });
     }
+    // The staged pipeline (dedicated §4 pack/unpack sweeps) next to the
+    // fused rs_kernel default: the 4·m·n copy-sweep delta, simulated.
+    let r = crate::simulator::simulate_kernel_staged(m, n, k, spec, &cfg_kernel);
+    rows.push(IoRow {
+        algo: "rs_kernel_staged",
+        m,
+        n,
+        k,
+        measured_io: r.memory_traffic_bytes as f64 / 8.0,
+        predicted_io: None,
+        op_intensity: r.flops as f64 / (r.memory_traffic_bytes as f64 / 8.0).max(1.0),
+        memops: r.memops.total(),
+    });
     rows
 }
 
@@ -479,17 +530,33 @@ pub fn print_io_table(rows: &[IoRow], s_doubles: usize) {
 
 /// Machine-readable Fig 5 output (the BENCH json CI uploads: the
 /// `rs_kernel_tuned` series next to the analytic ones is the perf
-/// trajectory of the autotuner).
+/// trajectory of the autotuner, and the `rs_kernel` vs `rs_kernel_fused`
+/// memop counters are the fused-pack evidence the perf smoke asserts on).
 pub fn fig5_json(rows: &[Fig5Row], threads: usize) -> String {
     let items: Vec<Json> = rows
         .iter()
         .map(|r| {
-            obj(vec![
+            let mut fields = vec![
                 ("algo", s(r.algo)),
                 ("n", unum(r.n)),
                 ("gflops", num(r.gflops)),
                 ("rel_runtime", num(r.rel_runtime)),
-            ])
+            ];
+            match r.memops {
+                Some(mc) => fields.extend([
+                    ("memops_strided", unum(mc.strided() as usize)),
+                    ("memops_packed", unum(mc.packed() as usize)),
+                    ("memops_sweep_copies", unum(mc.sweep_copies as usize)),
+                    ("memops_total", unum(mc.total() as usize)),
+                ]),
+                None => fields.extend([
+                    ("memops_strided", Json::Null),
+                    ("memops_packed", Json::Null),
+                    ("memops_sweep_copies", Json::Null),
+                    ("memops_total", Json::Null),
+                ]),
+            }
+            obj(fields)
         })
         .collect();
     obj(vec![
@@ -525,19 +592,31 @@ mod tests {
     #[test]
     fn fig5_small_smoke() {
         let rows = fig5_serial(&[64], 8, &MeasureConfig::quick(), 1, None);
-        assert_eq!(rows.len(), 6);
+        assert_eq!(rows.len(), 7);
         assert!(rows.iter().all(|r| r.gflops > 0.0));
         // kernel_v2's relative runtime is 1 by construction
         let v2 = rows.iter().find(|r| r.algo == "rs_kernel_v2").unwrap();
         assert!((v2.rel_runtime - 1.0).abs() < 0.3);
+        // The memop ledgers carry the fused-pack evidence: the staged
+        // series pays the 4·m·n copy sweeps, the fused series none.
+        let staged = rows.iter().find(|r| r.algo == "rs_kernel").unwrap();
+        let fused = rows.iter().find(|r| r.algo == "rs_kernel_fused").unwrap();
+        let (sm, fm) = (staged.memops.unwrap(), fused.memops.unwrap());
+        assert_eq!(fm.sweep_copies, 0);
+        assert!(sm.sweep_copies >= (4 * 64 * 64) as u64);
+        assert!(fm.total() + (2 * 64 * 64) as u64 <= sm.total());
+        assert!(fm.packed() < sm.packed());
     }
 
     #[test]
     fn fig5_pooled_smoke() {
         // The --threads path: rs_kernel runs through the worker pool.
         let rows = fig5_serial(&[64], 8, &MeasureConfig::quick(), 3, None);
-        assert_eq!(rows.len(), 6);
+        assert_eq!(rows.len(), 7);
         assert!(rows.iter().all(|r| r.gflops > 0.0));
+        // Pooled fused executes keep a zero-sweep ledger too.
+        let fused = rows.iter().find(|r| r.algo == "rs_kernel_fused").unwrap();
+        assert_eq!(fused.memops.unwrap().sweep_copies, 0);
     }
 
     #[test]
@@ -548,7 +627,7 @@ mod tests {
         // not silently re-measure the analytic config).
         let db = TuneDb::in_memory();
         let rows = fig5_serial(&[64], 8, &MeasureConfig::quick(), 1, Some(&db));
-        assert_eq!(rows.len(), 6);
+        assert_eq!(rows.len(), 7);
         assert!(!rows.iter().any(|r| r.algo == "rs_kernel_tuned"));
 
         // With a record for this machine + shape class, the series runs.
@@ -563,18 +642,36 @@ mod tests {
             },
         );
         let rows = fig5_serial(&[64], 8, &MeasureConfig::quick(), 1, Some(&db));
-        assert_eq!(rows.len(), 7);
+        assert_eq!(rows.len(), 8);
         let tuned = rows.iter().find(|r| r.algo == "rs_kernel_tuned").unwrap();
         assert!(tuned.gflops > 0.0);
         let json = fig5_json(&rows, 1);
         let parsed = crate::jsonio::Json::parse(&json).unwrap();
+        let jrows = parsed
+            .get("rows")
+            .and_then(crate::jsonio::Json::as_arr)
+            .unwrap();
+        assert_eq!(jrows.len(), 8);
+        // Memop fields round-trip: numbers on kernel-plan series, nulls
+        // elsewhere (the CI perf smoke parses these).
+        let jfused = jrows
+            .iter()
+            .find(|r| r.get("algo").and_then(crate::jsonio::Json::as_str) == Some("rs_kernel_fused"))
+            .unwrap();
         assert_eq!(
-            parsed
-                .get("rows")
-                .and_then(crate::jsonio::Json::as_arr)
-                .map(<[crate::jsonio::Json]>::len),
-            Some(7)
+            jfused
+                .get("memops_sweep_copies")
+                .and_then(crate::jsonio::Json::as_u64),
+            Some(0)
         );
+        let jnaive = jrows
+            .iter()
+            .find(|r| r.get("algo").and_then(crate::jsonio::Json::as_str) == Some("rs_unoptimized"))
+            .unwrap();
+        assert!(matches!(
+            jnaive.get("memops_total"),
+            Some(crate::jsonio::Json::Null)
+        ));
     }
 
     #[test]
@@ -605,11 +702,15 @@ mod tests {
     #[test]
     fn io_table_smoke() {
         let rows = io_table(96, 96, 12);
-        assert_eq!(rows.len(), 6);
+        assert_eq!(rows.len(), 7);
         // naive must move the most data; kernel the least A-traffic classes.
         let naive = rows.iter().find(|r| r.algo == "rs_unoptimized").unwrap();
         let kernel = rows.iter().find(|r| r.algo == "rs_kernel").unwrap();
         assert!(naive.measured_io > 0.0 && kernel.measured_io > 0.0);
         assert!(naive.memops > kernel.memops);
+        // The fused default (rs_kernel) sheds the staged pipeline's
+        // dedicated pack/unpack element moves.
+        let staged = rows.iter().find(|r| r.algo == "rs_kernel_staged").unwrap();
+        assert!(staged.memops > kernel.memops);
     }
 }

@@ -74,10 +74,13 @@ pub fn apply_blocked<S: OpSequence>(a: &mut Matrix, seq: &S, cfg: &BlockConfig) 
     }
     let m = a.rows();
     let kb_max = cfg.kb.min(n - 1).max(1);
+    // `.max(1)`: a zero mb would pin `mbe` at 0 and spin forever (same
+    // guard as the packed kernel driver).
+    let mb = cfg.mb.max(1);
 
     let mut ib = 0;
     while ib < m {
-        let mbe = cfg.mb.min(m - ib);
+        let mbe = mb.min(m - ib);
         let mut pb = 0;
         while pb < k {
             let kbe = kb_max.min(k - pb);
@@ -160,6 +163,22 @@ mod tests {
                 nb: 3,
             },
             4,
+        );
+    }
+
+    #[test]
+    fn blocked_mb_zero_terminates_and_matches_naive() {
+        // Regression: mb = 0 used to spin forever (rows clamped to 0).
+        check(
+            6,
+            8,
+            3,
+            BlockConfig {
+                mb: 0,
+                kb: 2,
+                nb: 3,
+            },
+            6,
         );
     }
 

@@ -435,6 +435,152 @@ fn store_col_at<const V: usize>(data: &mut [f64], base: usize, vals: &[f64x4; V]
     }
 }
 
+/// The strided side of a fused-layout kernel call: one `m_r`-row chunk of
+/// the caller's column-major storage (element `(r, j)` of the chunk at
+/// `src[(r0 + r) + j*ld]`). Used by [`wave_kernel_io`] to fold the §4
+/// pack/unpack sweeps into the first/last computational passes: a fresh
+/// column's first load comes straight from here, and a finished column's
+/// last store retires straight back — the packed buffer is touched only
+/// for the in-flight spills in between.
+///
+/// `live` is the number of real rows in the chunk (`1..=m_r`); the last
+/// chunk of a panel may be shorter than `m_r`, in which case strided loads
+/// zero-fill the padding lanes (rotations keep them zero) and strided
+/// stores write only the live rows.
+#[derive(Clone, Copy)]
+pub struct StridedChunk {
+    pub src: *mut f64,
+    pub ld: usize,
+    /// Absolute first matrix row of this chunk.
+    pub r0: usize,
+    /// Live rows in this chunk.
+    pub live: usize,
+}
+
+/// Load column `j` for a fused call: packed when the column is already in
+/// flight (`j < load_split`), strided (zero-filling pad lanes) when this
+/// is its first touch.
+///
+/// # Safety
+/// `sc.src` must be valid for reads at column `j`, rows
+/// `[sc.r0, sc.r0 + sc.live)`; `packed` must hold column `j` at offset
+/// `j * MR` when `j < load_split`.
+#[inline(always)]
+unsafe fn load_col_io<const MR: usize>(
+    packed: &[f64],
+    sc: &StridedChunk,
+    j: usize,
+    load_split: usize,
+) -> [f64; MR] {
+    let mut col = [0.0f64; MR];
+    if j < load_split {
+        col.copy_from_slice(&packed[j * MR..j * MR + MR]);
+    } else {
+        let base = sc.src.add(j * sc.ld + sc.r0);
+        for (r, slot) in col.iter_mut().take(sc.live).enumerate() {
+            *slot = *base.add(r);
+        }
+    }
+    col
+}
+
+/// Store column `j` for a fused call: strided (live rows only) when this
+/// is the column's final touch (`j < store_split`), packed otherwise.
+///
+/// # Safety
+/// Mirror of [`load_col_io`], with `sc.src` valid for writes.
+#[inline(always)]
+unsafe fn store_col_io<const MR: usize>(
+    packed: &mut [f64],
+    sc: &StridedChunk,
+    j: usize,
+    col: &[f64; MR],
+    store_split: usize,
+) {
+    if j < store_split {
+        let base = sc.src.add(j * sc.ld + sc.r0);
+        for (r, v) in col.iter().take(sc.live).enumerate() {
+            *base.add(r) = *v;
+        }
+    } else {
+        packed[j * MR..j * MR + MR].copy_from_slice(col);
+    }
+}
+
+/// The layout-routed wave kernel: [`wave_kernel`] with its column
+/// load/store boundary parameterized over the source/destination layout.
+/// Columns `>= load_split` load from `sc` (the caller's strided storage);
+/// columns `< store_split` store to `sc`; everything else goes through
+/// `packed` (the chunk's §4 micro-panel slice, column stride `MR`).
+///
+/// This is the boundary-pass engine of the fused first-touch-pack /
+/// last-touch-unpack execution. It applies the exact same operations in
+/// the exact same order as [`wave_kernel`] — loads and stores never change
+/// arithmetic — so fused and staged execution are bitwise identical. Only
+/// the first/last k-block of a panel schedule runs through it; interior
+/// passes keep the hand-specialized Packed→Packed kernels.
+///
+/// # Safety
+/// `sc.src` must point to a live column-major buffer valid for reads and
+/// writes over rows `[sc.r0, sc.r0 + sc.live)` of every column this
+/// call's wave schedule touches, with no concurrent access to those
+/// elements. `packed` must hold all touched columns at stride `MR`.
+pub unsafe fn wave_kernel_io<Op: PairOp, const MR: usize, const KR: usize, const KRP1: usize>(
+    packed: &mut [f64],
+    sc: &StridedChunk,
+    j0: usize,
+    stream: &WaveStream,
+    load_split: usize,
+    store_split: usize,
+) {
+    debug_assert_eq!(KRP1, KR + 1);
+    debug_assert_eq!(stream.per_wave, KR * Op::WIDTH);
+    debug_assert!(sc.live >= 1 && sc.live <= MR);
+    let nwaves = stream.nwaves;
+    if nwaves == 0 {
+        return;
+    }
+    debug_assert!(
+        (j0 + nwaves + KR - 1) * MR + MR <= packed.len(),
+        "fused kernel window out of bounds"
+    );
+    let ops = &stream.data;
+
+    // Same circular slot discipline as the generic `wave_kernel` path:
+    // column `j0 + c` lives in slot `c % KRP1`; at wave `t` the retiring
+    // column leaves slot `t % KRP1`.
+    let mut win = [[0.0f64; MR]; KRP1];
+    for s in 0..KR {
+        win[s] = load_col_io::<MR>(packed, sc, j0 + s, load_split);
+    }
+    for t in 0..nwaves {
+        let phase = t % KRP1;
+        let in_slot = (phase + KR) % KRP1;
+        win[in_slot] = load_col_io::<MR>(packed, sc, j0 + t + KR, load_split);
+        let sbase = t * KR * Op::WIDTH;
+        let wave_ops = &ops[sbase..sbase + KR * Op::WIDTH];
+        for u in 0..KR {
+            let op = Op::load(&wave_ops[u * Op::WIDTH..(u + 1) * Op::WIDTH]);
+            let lo = (phase + KR - 1 - u) % KRP1;
+            let hi = (phase + KR - u) % KRP1;
+            debug_assert_ne!(lo, hi);
+            for r in 0..MR {
+                let (x, y) = op.apply(win[lo][r], win[hi][r]);
+                win[lo][r] = x;
+                win[hi][r] = y;
+            }
+        }
+        let out = win[phase];
+        store_col_io::<MR>(packed, sc, j0 + t, &out, store_split);
+    }
+    // Drain the KR carried columns from their final slots.
+    for s in 0..KR {
+        let slot = (nwaves + s) % KRP1;
+        let out = win[slot];
+        store_col_io::<MR>(packed, sc, j0 + nwaves + s, &out, store_split);
+    }
+}
+
 /// Kernel sizes benchmarked in Fig 6 (plus the MR=1 correctness fallback
 /// used for row remainders). `(m_r, k_r)` pairs.
 pub const SUPPORTED_KERNELS: &[(usize, usize)] = &[
@@ -564,6 +710,110 @@ mod tests {
         assert!(kernel_supported(16, 2));
         assert!(kernel_supported(8, 5));
         assert!(!kernel_supported(7, 3));
+    }
+
+    #[test]
+    fn io_kernel_matches_packed_kernel_under_any_split() {
+        // One KR=2 pipeline call over the whole wave range. The routed
+        // kernel must produce the same bits as the packed kernel no matter
+        // where the load/store layout boundaries sit.
+        const MR: usize = 8;
+        let n = 14;
+        let seq = RotationSequence::random(n, 2, 21);
+        let a = Matrix::random(MR, n, 22);
+        let v0 = 1;
+        let nwaves = (n - 1) - v0;
+        let stream = WaveStream::pack(&seq, 0, 2, v0, nwaves);
+
+        // Reference: the packed-layout kernel on a packed copy.
+        let pack = |m: &Matrix| -> Vec<f64> {
+            let mut p = vec![0.0; MR * n];
+            for j in 0..n {
+                for r in 0..MR {
+                    p[j * MR + r] = m.get(r, j);
+                }
+            }
+            p
+        };
+        let mut reference = pack(&a);
+        wave_kernel::<Givens, MR, 2, 3>(&mut reference, MR, 0, 0, &stream);
+
+        for load_split in [0usize, 1, 5, n, usize::MAX] {
+            for store_split in [0usize, 3, 7, n] {
+                let mut strided = a.clone();
+                // Packed side pre-filled only below the load boundary (the
+                // fused drivers guarantee a packed load is always preceded
+                // by a packed store or pre-pack; above the boundary the
+                // buffer may hold garbage).
+                let mut packed = pack(&a);
+                for v in packed.iter_mut().skip(load_split.min(n) * MR) {
+                    *v = f64::NAN;
+                }
+                let ld = strided.ld();
+                let sc = StridedChunk {
+                    src: strided.data_mut().as_mut_ptr(),
+                    ld,
+                    r0: 0,
+                    live: MR,
+                };
+                unsafe {
+                    wave_kernel_io::<Givens, MR, 2, 3>(
+                        &mut packed,
+                        &sc,
+                        0,
+                        &stream,
+                        load_split,
+                        store_split,
+                    );
+                }
+                for j in 0..n {
+                    for r in 0..MR {
+                        let got = if j < store_split {
+                            strided.get(r, j)
+                        } else {
+                            packed[j * MR + r]
+                        };
+                        assert_eq!(
+                            got,
+                            reference[j * MR + r],
+                            "col {j} row {r} load_split={load_split} store_split={store_split}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn io_kernel_zero_fills_short_chunks() {
+        // live < MR: strided loads zero-fill the pad lanes and strided
+        // stores write only the live rows.
+        const MR: usize = 8;
+        let live = 5;
+        let n = 9;
+        let seq = RotationSequence::random(n, 1, 31);
+        let a = Matrix::random(live, n, 32);
+        let stream = WaveStream::pack(&seq, 0, 1, 0, n - 1);
+
+        // Reference: naive on the live rows.
+        let mut expected = a.clone();
+        crate::rot::apply_naive(&mut expected, &seq);
+
+        let mut strided = a.clone();
+        let mut packed = vec![f64::NAN; MR * n];
+        let ld = strided.ld();
+        let sc = StridedChunk {
+            src: strided.data_mut().as_mut_ptr(),
+            ld,
+            r0: 0,
+            live,
+        };
+        unsafe {
+            // All-fresh loads, all-final stores: single-pass strided to
+            // strided through the register window.
+            wave_kernel_io::<Givens, MR, 1, 2>(&mut packed, &sc, 0, &stream, 0, n);
+        }
+        assert_eq!(crate::matrix::max_abs_diff(&strided, &expected), 0.0);
     }
 
     #[test]

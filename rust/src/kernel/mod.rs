@@ -31,7 +31,7 @@ use crate::matrix::Matrix;
 use crate::pack::{PackedMatrix, PackedPanel};
 use crate::rot::{OpSequence, PairOp, RotationSequence};
 use anyhow::{bail, Result};
-pub use phases::{plan_kblock, plan_kblock_into, KBlockPlan};
+pub use phases::{plan_kblock, plan_kblock_into, KBlockPlan, MemopCounts, StridedPanel};
 use phases::run_kblock;
 
 /// Algorithm variants evaluated in the paper (§8).
@@ -180,6 +180,14 @@ pub fn apply_kernel<S: OpSequence>(a: &mut Matrix, seq: &S, cfg: &KernelConfig) 
 /// wave-stream arena are reused across row-panels, k-blocks, and — when the
 /// caller keeps `ws` alive — across calls (zero per-call allocation once
 /// warm).
+///
+/// This is the **staged** reference path: a dedicated `pack_from` sweep
+/// before the §5 loop nest and a dedicated `unpack` after — `4·m·n`
+/// doubles of pure-copy traffic per call that the plan API's default
+/// *fused* execution ([`crate::plan::PlanBuilder::fused`]) eliminates by
+/// riding the pack on the first k-block's loads and the unpack on the
+/// last k-block's stores. The fused property tests compare against this
+/// function bitwise.
 pub fn apply_kernel_with_workspace<S: OpSequence>(
     a: &mut Matrix,
     seq: &S,
@@ -210,9 +218,12 @@ pub fn apply_kernel_unpacked<S: OpSequence>(
     assert_eq!(a.cols(), seq.n(), "matrix/sequence column mismatch");
     let m = a.rows();
     let ld = a.ld();
+    // `.max(1)`: a zero mb would pin `rows` at 0 and spin forever (the
+    // packed driver has the same guard).
+    let mb = cfg.mb.max(1);
     let mut ib = 0;
     while ib < m {
-        let rows = cfg.mb.min(m - ib);
+        let rows = mb.min(m - ib);
         run_panel_at(a.data_mut(), ld, ib, rows, seq, cfg)?;
         ib += rows;
     }
@@ -222,14 +233,21 @@ pub fn apply_kernel_unpacked<S: OpSequence>(
 /// `rs_kernel_v2`: the matrix is already in packed-panel form and stays
 /// there (§8: repacking on every call is wasteful if the caller can keep
 /// `A` packed).
+///
+/// The `C`/`S` wave streams are planned **once** into a shared [`SeqPlan`]
+/// and replayed over every panel — the same fix the §7 pool path got in
+/// PR 2; previously each panel re-packed every stream through its own
+/// per-panel [`KBlockPlan`].
 pub fn apply_kernel_packed<S: OpSequence>(
     pm: &mut PackedMatrix,
     seq: &S,
     cfg: &KernelConfig,
 ) -> Result<()> {
     assert_eq!(pm.cols(), seq.n(), "matrix/sequence column mismatch");
+    let mut sp = SeqPlan::new();
+    sp.plan_into(seq, cfg);
     for panel in pm.panels_mut() {
-        run_panel_packed(panel, seq, cfg)?;
+        run_panel_planned::<S::Op>(panel, &sp, cfg)?;
     }
     Ok(())
 }
@@ -408,6 +426,118 @@ pub fn run_panel_planned<Op: PairOp>(
     Ok(())
 }
 
+/// Fused replay of a pre-planned schedule: [`run_panel_planned`] with the
+/// §4 pack riding the first k-block's loads and the unpack riding the
+/// last k-block's stores (per `m_b` chunk group) instead of running as
+/// dedicated copy sweeps. `panel` is the in-flight spill buffer only: it
+/// must be shaped with [`PackedPanel::prepare`] (no packing — its prior
+/// contents are never read before being written), and after the call the
+/// result lives in the strided storage, not the panel.
+///
+/// Bitwise identical to `pack_from` → [`run_panel_planned`] → `unpack`:
+/// the layout routing changes where elements move, never the arithmetic.
+///
+/// # Safety
+/// `sp.src` must point to a live column-major buffer with
+/// `sp.ld >= sp.r0 + sp.rows`, valid for reads and writes over rows
+/// `[sp.r0, sp.r0 + sp.rows)` of all `panel.cols()` columns for the whole
+/// call; any concurrent access must touch only rows outside that range
+/// (the §7 pool's disjoint-parts contract, same as `pack_from_raw`).
+pub unsafe fn run_panel_planned_fused<Op: PairOp>(
+    panel: &mut PackedPanel,
+    sp: StridedPanel,
+    seqplan: &SeqPlan,
+    cfg: &KernelConfig,
+) -> Result<()> {
+    if panel.rows() == 0 || seqplan.blocks().is_empty() {
+        return Ok(());
+    }
+    anyhow::ensure!(
+        panel.mr() == cfg.mr,
+        "panel packed for m_r={} but config wants m_r={}",
+        panel.mr(),
+        cfg.mr
+    );
+    anyhow::ensure!(
+        panel.rows() == sp.rows,
+        "panel holds {} rows but the strided view covers {}",
+        panel.rows(),
+        sp.rows
+    );
+    let chunks = panel.chunks();
+    let stride = panel.chunk_stride();
+    let group = chunks_per_mblock(cfg);
+    let nblocks = seqplan.blocks().len();
+    let mut c0 = 0;
+    while c0 < chunks {
+        let gc = group.min(chunks - c0);
+        let gsp = StridedPanel {
+            src: sp.src,
+            ld: sp.ld,
+            r0: sp.r0 + c0 * cfg.mr,
+            rows: (gc * cfg.mr).min(sp.rows - c0 * cfg.mr),
+        };
+        for (idx, bp) in seqplan.blocks().iter().enumerate() {
+            dispatch_kblock_fused::<Op>(
+                &mut panel.data_mut()[c0 * stride..(c0 + gc) * stride],
+                gc,
+                stride,
+                bp,
+                gsp,
+                idx == 0,
+                idx + 1 == nblocks,
+                cfg.mr,
+                cfg.kr,
+            )?;
+        }
+        c0 += gc;
+    }
+    Ok(())
+}
+
+/// Exact per-execute element-move ledger for replaying `sp` over panels
+/// of the given heights (serial: `m_b`-row panels; pooled: one entry per
+/// §7 part). `fused` counts the fused layout routing (zero dedicated
+/// sweeps); otherwise the staged pack → replay → unpack, sweeps included.
+/// `O(panels · calls)` — no per-element work, cheap enough to run on
+/// every execute.
+pub fn seqplan_memops(
+    sp: &SeqPlan,
+    panel_rows: impl Iterator<Item = usize>,
+    mr: usize,
+    cols: usize,
+    fused: bool,
+) -> MemopCounts {
+    let mr = mr.max(1);
+    let nblocks = sp.blocks().len();
+    let mut mc = MemopCounts::default();
+    for rows in panel_rows {
+        if rows == 0 {
+            continue;
+        }
+        let padded = (rows.div_ceil(mr) * mr * cols) as u64;
+        let live = (rows * cols) as u64;
+        if fused {
+            for (idx, bp) in sp.blocks().iter().enumerate() {
+                mc.add(&bp.memops(idx == 0, idx + 1 == nblocks, rows, mr));
+            }
+        } else {
+            // pack: read live strided, write padded packed.
+            mc.strided_loads += live;
+            mc.packed_stores += padded;
+            // all k-blocks run packed→packed.
+            for bp in sp.blocks() {
+                mc.add(&bp.memops(false, false, rows, mr));
+            }
+            // unpack: read live packed, write live strided.
+            mc.packed_loads += live;
+            mc.strided_stores += live;
+            mc.sweep_copies += 2 * live + padded + live;
+        }
+    }
+    mc
+}
+
 /// The §5 loop nest on caller-owned (unpacked, `ld`-strided) storage.
 fn run_panel_at<S: OpSequence>(
     data: &mut [f64],
@@ -482,6 +612,39 @@ fn dispatch_kblock_packed<Op: PairOp>(
     macro_rules! case {
         ($mr:literal, $kr:literal, $krp1:literal) => {
             phases::run_kblock_packed::<Op, $mr, $kr, $krp1>(data, chunks, chunk_stride, plan)
+        };
+    }
+    dispatch_sizes!(mr, kr, case);
+    Ok(())
+}
+
+/// Monomorphization dispatch for the fused first/last k-block passes.
+///
+/// # Safety
+/// See [`phases::run_kblock_fused`].
+#[allow(clippy::too_many_arguments)]
+unsafe fn dispatch_kblock_fused<Op: PairOp>(
+    data: &mut [f64],
+    chunks: usize,
+    chunk_stride: usize,
+    plan: &KBlockPlan,
+    sp: StridedPanel,
+    first: bool,
+    last: bool,
+    mr: usize,
+    kr: usize,
+) -> Result<()> {
+    macro_rules! case {
+        ($mr:literal, $kr:literal, $krp1:literal) => {
+            phases::run_kblock_fused::<Op, $mr, $kr, $krp1>(
+                data,
+                chunks,
+                chunk_stride,
+                plan,
+                sp,
+                first,
+                last,
+            )
         };
     }
     dispatch_sizes!(mr, kr, case);
@@ -573,6 +736,19 @@ mod tests {
         let mut a_ker = a_ref.clone();
         crate::rot::apply_reflector_sequence_naive(&mut a_ref, &seq);
         apply_kernel(&mut a_ker, &seq, &cfg(12, 2, 8, 4, 5)).unwrap();
+        assert_eq!(max_abs_diff(&a_ref, &a_ker), 0.0);
+    }
+
+    #[test]
+    fn unpacked_mb_zero_terminates_and_matches_naive() {
+        // Regression: mb = 0 used to clamp the panel height to 0 and spin
+        // forever in apply_kernel_unpacked.
+        let (m, n, k) = (9, 11, 3);
+        let seq = RotationSequence::random(n, k, 14);
+        let mut a_ref = Matrix::random(m, n, 15);
+        let mut a_ker = a_ref.clone();
+        apply_naive(&mut a_ref, &seq);
+        apply_kernel_unpacked(&mut a_ker, &seq, &cfg(8, 2, 0, 2, 4)).unwrap();
         assert_eq!(max_abs_diff(&a_ref, &a_ker), 0.0);
     }
 

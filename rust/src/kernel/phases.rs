@@ -21,17 +21,56 @@
 //! sequence-major, which respects both dependency rules
 //! (`(i-1, p)` before `(i, p)`; `(i+1, p)` before `(i, p+1)`).
 
-use super::microkernel::{wave_kernel, WaveStream};
+use super::microkernel::{wave_kernel, wave_kernel_io, StridedChunk, WaveStream};
 use crate::rot::{OpSequence, PairOp};
 
 /// One kernel invocation inside a phase: subgroup-local start wave `v0`
 /// plus the packed op stream. `full_group` distinguishes `k_r`-wide
 /// subgroups (run with the `(MR, KR)` kernel) from single-sequence cleanup
 /// streams (run with the `KR = 1` kernel).
+///
+/// Each call also carries its **fused-layout thresholds**, computed by
+/// [`plan_kblock_into`] from the block's schedule: processing is in
+/// ascending wave order and every call's column interval overlaps the
+/// already-touched frontier, so the touched set is always a contiguous
+/// prefix `[0, load_split)` and the still-to-be-touched set a contiguous
+/// suffix `[store_split, n-1]`. That makes first-touch and last-touch
+/// per-column decisions exact threshold tests — the machinery that lets
+/// the first k-block of a panel ride its loads on the caller's strided
+/// storage (fused pack) and the last retire its stores there (fused
+/// unpack) with zero dedicated copy sweeps.
 pub struct KernelCall {
     pub v0: usize,
     pub full_group: bool,
+    /// Absolute first sequence of this call's subgroup (plan metadata;
+    /// the simulator's plan-driven emitter reads it).
+    pub p0: usize,
+    /// Subgroup width: `k_r` for full groups, 1 for cleanup sweeps.
+    pub width: usize,
+    /// Columns `>= load_split` have not been touched earlier in this
+    /// k-block: in a pack-fusing (first) block they load from strided
+    /// storage, below they come from the packed buffer.
+    pub load_split: usize,
+    /// Columns `< store_split` are never touched again in this k-block:
+    /// in an unpack-fusing (last) block they store to strided storage,
+    /// above they return to the packed buffer.
+    pub store_split: usize,
     pub stream: WaveStream,
+}
+
+impl KernelCall {
+    /// First column this call touches.
+    #[inline(always)]
+    pub fn col_lo(&self) -> usize {
+        self.v0 + 1 - self.width
+    }
+
+    /// Last column this call touches (inclusive): the window preload plus
+    /// one incoming column per wave.
+    #[inline(always)]
+    pub fn col_hi(&self) -> usize {
+        self.v0 + self.stream.nwaves()
+    }
 }
 
 /// Per-`k`-block plan: packed wave streams, built once and reused across
@@ -97,10 +136,18 @@ impl KBlockPlan {
         let mut call = self.spare.pop().unwrap_or_else(|| KernelCall {
             v0: 0,
             full_group: false,
+            p0: 0,
+            width: 1,
+            load_split: 0,
+            store_split: 0,
             stream: WaveStream::empty(),
         });
         call.v0 = v0;
         call.full_group = full_group;
+        call.p0 = p0;
+        call.width = width;
+        call.load_split = 0;
+        call.store_split = 0;
         call.stream.repack(seq, p0, width, v0, nwaves);
         call
     }
@@ -191,6 +238,47 @@ pub fn plan_kblock_into<S: OpSequence>(
     for l in 1..kb {
         let call = plan.fresh_call(seq, pb + l, 1, n - 1 - l, l, false);
         plan.shutdown.push(call);
+    }
+
+    // Fused-layout thresholds (see [`KernelCall`]). Forward pass: the
+    // touched-column frontier — every call's interval starts at or below
+    // it (the schedule ascends in wave order), so "first touch" is exactly
+    // "column >= frontier". Backward pass: the suffix minimum of later
+    // intervals — their union is contiguous up to n-1, so "last touch" is
+    // exactly "column < suffix-min". Both facts are asserted in tests
+    // (`splits_partition_first_and_last_touches`).
+    let mut frontier = 0usize;
+    let mut fwd = |c: &mut KernelCall| {
+        debug_assert!(c.col_lo() <= frontier, "schedule left a column gap");
+        c.load_split = frontier;
+        frontier = frontier.max(c.col_hi() + 1);
+    };
+    for c in plan.startup.iter_mut() {
+        fwd(c);
+    }
+    for chunk in plan.pipeline.iter_mut() {
+        for c in chunk.iter_mut() {
+            fwd(c);
+        }
+    }
+    for c in plan.shutdown.iter_mut() {
+        fwd(c);
+    }
+    let mut future_min = usize::MAX;
+    let mut bwd = |c: &mut KernelCall| {
+        c.store_split = future_min;
+        future_min = future_min.min(c.col_lo());
+    };
+    for c in plan.shutdown.iter_mut().rev() {
+        bwd(c);
+    }
+    for chunk in plan.pipeline.iter_mut().rev() {
+        for c in chunk.iter_mut().rev() {
+            bwd(c);
+        }
+    }
+    for c in plan.startup.iter_mut().rev() {
+        bwd(c);
     }
 }
 
@@ -295,6 +383,232 @@ pub fn run_kblock_packed<Op: PairOp, const MR: usize, const KR: usize, const KRP
     }
 }
 
+/// The strided side of a fused panel pass: the rows of the caller's
+/// column-major matrix that this packed panel covers.
+#[derive(Clone, Copy)]
+pub struct StridedPanel {
+    /// Base of the full column-major buffer (element `(i, j)` at
+    /// `src[i + j*ld]`).
+    pub src: *mut f64,
+    pub ld: usize,
+    /// First matrix row this panel covers.
+    pub r0: usize,
+    /// Live rows in this panel.
+    pub rows: usize,
+}
+
+/// One fused call on one chunk: route through the layout-aware kernel
+/// only when a layout boundary actually cuts the call's column interval —
+/// otherwise this is exactly [`run_call`], i.e. today's Packed→Packed
+/// code.
+#[inline]
+unsafe fn run_call_fused<Op: PairOp, const MR: usize, const KR: usize, const KRP1: usize>(
+    data: &mut [f64],
+    sc: &StridedChunk,
+    call: &KernelCall,
+    first: bool,
+    last: bool,
+) {
+    let load_split = if first { call.load_split } else { usize::MAX };
+    let store_split = if last { call.store_split } else { 0 };
+    if load_split > call.col_hi() && store_split <= call.col_lo() {
+        run_call::<Op, MR, KR, KRP1>(data, MR, 0, call);
+    } else if call.full_group {
+        wave_kernel_io::<Op, MR, KR, KRP1>(
+            data,
+            sc,
+            call.v0 + 1 - KR,
+            &call.stream,
+            load_split,
+            store_split,
+        );
+    } else {
+        wave_kernel_io::<Op, MR, 1, 2>(data, sc, call.v0, &call.stream, load_split, store_split);
+    }
+}
+
+/// Execute a planned `k`-block on a §4 packed panel with **fused
+/// first-touch pack / last-touch unpack**: when `first`, each column's
+/// first load of the block comes from the caller's strided storage
+/// instead of the packed buffer (the §4 pack riding the kernel's own
+/// loads); when `last`, each column's final store retires directly to
+/// strided storage (the unpack riding the stores). Interior blocks
+/// (`!first && !last`) take exactly the [`run_kblock_packed`] path, and a
+/// single-block panel (`first && last`) touches the packed buffer only as
+/// the in-flight window spill. Loads and stores never change arithmetic,
+/// so fused execution is bitwise identical to pack → kernel → unpack.
+///
+/// # Safety
+/// `sp.src` must point to a live column-major buffer with
+/// `sp.ld >= sp.r0 + sp.rows`, valid for reads and writes over rows
+/// `[sp.r0, sp.r0 + sp.rows)` of every column the plan touches, with no
+/// concurrent access to those elements. `data` must hold `chunks` chunks
+/// of `chunk_stride` doubles packed for `MR` rows covering those rows.
+pub unsafe fn run_kblock_fused<Op: PairOp, const MR: usize, const KR: usize, const KRP1: usize>(
+    data: &mut [f64],
+    chunks: usize,
+    chunk_stride: usize,
+    plan: &KBlockPlan,
+    sp: StridedPanel,
+    first: bool,
+    last: bool,
+) {
+    if !first && !last {
+        return run_kblock_packed::<Op, MR, KR, KRP1>(data, chunks, chunk_stride, plan);
+    }
+    if chunks == 0 {
+        return;
+    }
+    debug_assert!(sp.rows > (chunks - 1) * MR && sp.rows <= chunks * MR);
+    let chunk_io = |c: usize| StridedChunk {
+        src: sp.src,
+        ld: sp.ld,
+        r0: sp.r0 + c * MR,
+        live: MR.min(sp.rows - c * MR),
+    };
+    for call in &plan.startup {
+        for c in 0..chunks {
+            run_call_fused::<Op, MR, KR, KRP1>(
+                &mut data[c * chunk_stride..],
+                &chunk_io(c),
+                call,
+                first,
+                last,
+            );
+        }
+    }
+    // Pipeline: chunk (row) loop outside the subgroup loop (§5.2), same
+    // order as the packed driver — the thresholds were computed in this
+    // schedule order, and every row chunk replays the same schedule.
+    for chunk_calls in &plan.pipeline {
+        for c in 0..chunks {
+            let sc = chunk_io(c);
+            let panel = &mut data[c * chunk_stride..];
+            for call in chunk_calls {
+                run_call_fused::<Op, MR, KR, KRP1>(panel, &sc, call, first, last);
+            }
+        }
+    }
+    for call in &plan.shutdown {
+        for c in 0..chunks {
+            run_call_fused::<Op, MR, KR, KRP1>(
+                &mut data[c * chunk_stride..],
+                &chunk_io(c),
+                call,
+                first,
+                last,
+            );
+        }
+    }
+}
+
+/// Per-execute matrix-element move ledger (in doubles), split by where
+/// the elements lived: the caller's strided storage vs the packed §4
+/// workspace, with the dedicated pack/unpack copy sweeps of the staged
+/// path tracked separately (they are included in the four totals). The
+/// wave-stream (`C`/`S`) traffic is excluded — it is `O(n·k)` against
+/// the `O(m·n·k)` matrix traffic and identical across staged and fused.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MemopCounts {
+    /// Doubles loaded from the caller's strided storage.
+    pub strided_loads: u64,
+    /// Doubles stored to the caller's strided storage.
+    pub strided_stores: u64,
+    /// Doubles loaded from the packed workspace.
+    pub packed_loads: u64,
+    /// Doubles stored to the packed workspace.
+    pub packed_stores: u64,
+    /// Doubles moved by dedicated pack/unpack sweeps (both the read and
+    /// the write side; zero on the fused path — that is the point).
+    pub sweep_copies: u64,
+}
+
+impl MemopCounts {
+    /// Strided-storage traffic (loads + stores).
+    pub fn strided(&self) -> u64 {
+        self.strided_loads + self.strided_stores
+    }
+
+    /// Packed-workspace traffic (loads + stores).
+    pub fn packed(&self) -> u64 {
+        self.packed_loads + self.packed_stores
+    }
+
+    /// All matrix-element moves.
+    pub fn total(&self) -> u64 {
+        self.strided() + self.packed()
+    }
+
+    /// Accumulate another ledger into this one.
+    pub fn add(&mut self, o: &MemopCounts) {
+        self.strided_loads += o.strided_loads;
+        self.strided_stores += o.strided_stores;
+        self.packed_loads += o.packed_loads;
+        self.packed_stores += o.packed_stores;
+        self.sweep_copies += o.sweep_copies;
+    }
+
+    /// This ledger repeated `times` over (batch execution).
+    pub fn scaled(&self, times: u64) -> MemopCounts {
+        MemopCounts {
+            strided_loads: self.strided_loads * times,
+            strided_stores: self.strided_stores * times,
+            packed_loads: self.packed_loads * times,
+            packed_stores: self.packed_stores * times,
+            sweep_copies: self.sweep_copies * times,
+        }
+    }
+}
+
+impl KBlockPlan {
+    /// Exact element moves of executing this block on a `rows`-row panel
+    /// packed for an `mr` kernel, with the given fused position flags —
+    /// the same threshold tests [`run_kblock_fused`] routes by, evaluated
+    /// in closed form per call (`O(calls)`, no per-element work).
+    pub fn memops(&self, first: bool, last: bool, rows: usize, mr: usize) -> MemopCounts {
+        let chunks = rows.div_ceil(mr).max(1) as u64;
+        let padded = chunks * mr as u64;
+        let live = rows as u64;
+        let mut mc = MemopCounts::default();
+        let mut count = |call: &KernelCall| {
+            let (lo, hi) = (call.col_lo() as u64, call.col_hi() as u64);
+            let ncols = hi - lo + 1;
+            let load_split = (if first { call.load_split } else { usize::MAX }) as u64;
+            let store_split = (if last { call.store_split } else { 0usize }) as u64;
+            // Loads: columns >= load_split are first touches (strided,
+            // `live` doubles per column across the chunks); the rest come
+            // from the packed buffer (`mr` per chunk, pads included).
+            let sl_cols = if load_split <= hi {
+                hi + 1 - load_split.max(lo)
+            } else {
+                0
+            };
+            // Stores: columns < store_split are last touches.
+            let ss_cols = if store_split > lo {
+                (store_split - 1).min(hi) + 1 - lo
+            } else {
+                0
+            };
+            mc.strided_loads += sl_cols * live;
+            mc.packed_loads += (ncols - sl_cols) * padded;
+            mc.strided_stores += ss_cols * live;
+            mc.packed_stores += (ncols - ss_cols) * padded;
+        };
+        for c in &self.startup {
+            count(c);
+        }
+        for chunk in &self.pipeline {
+            for c in chunk {
+                count(c);
+            }
+        }
+        for c in &self.shutdown {
+            count(c);
+        }
+        mc
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -390,6 +704,116 @@ mod tests {
         let ld = a_ker.ld();
         run_kblock::<Givens, 8, 2, 3>(a_ker.data_mut(), ld, 0, 8, &plan);
         assert_eq!(max_abs_diff(&a_ref, &a_ker), 0.0);
+    }
+
+    #[test]
+    fn splits_partition_first_and_last_touches() {
+        // rows == mr so live == padded and the ledger is layout-invariant
+        // in volume; the thresholds must route each column's first load
+        // and last store to strided exactly once.
+        let (n, kb, kr, nb, rows, mr) = (23, 5, 2, 4, 8, 8);
+        let seq = RotationSequence::random(n, kb, 13);
+        let plan = plan_kblock(&seq, 0, kb, kr, nb);
+        let mc = plan.memops(true, true, rows, mr);
+        assert_eq!(mc.strided_loads, (rows * n) as u64);
+        assert_eq!(mc.strided_stores, (rows * n) as u64);
+        assert_eq!(mc.sweep_copies, 0);
+        assert_eq!(
+            mc.strided_loads + mc.packed_loads,
+            mc.strided_stores + mc.packed_stores,
+            "every touch is one load + one store"
+        );
+        // Interior block: all traffic stays in the packed buffer, with
+        // the same total volume (layout shifts, element count doesn't).
+        let mi = plan.memops(false, false, rows, mr);
+        assert_eq!(mi.strided(), 0);
+        assert_eq!(mi.total(), mc.total());
+        // First-only / last-only blocks fuse exactly one side.
+        let mf = plan.memops(true, false, rows, mr);
+        assert_eq!(mf.strided_loads, (rows * n) as u64);
+        assert_eq!(mf.strided_stores, 0);
+        let ml = plan.memops(false, true, rows, mr);
+        assert_eq!(ml.strided_loads, 0);
+        assert_eq!(ml.strided_stores, (rows * n) as u64);
+    }
+
+    #[test]
+    fn fused_kblock_matches_naive_from_cold_packed_buffer() {
+        // first && last: the packed buffer starts as NaN poison — any read
+        // of a column the fused path failed to spill first would propagate
+        // and fail the bitwise check.
+        for (m, n, kb, nb, seed) in [
+            (16, 20, 4, 8, 1u64),
+            (13, 15, 5, 4, 2), // row remainder (13 % 8)
+            (5, 9, 1, 3, 3),   // kb = 1 < kr: all cleanup sweeps
+            (8, 9, 8, 4, 4),   // kb = n-1
+            (3, 7, 2, 2, 5),   // m < mr
+        ] {
+            let seq = RotationSequence::random(n, kb, seed);
+            let mut expected = Matrix::random(m, n, seed + 9);
+            let mut fused = expected.clone();
+            apply_naive(&mut expected, &seq);
+
+            let plan = plan_kblock(&seq, 0, kb, 2, nb);
+            let chunks = m.div_ceil(8);
+            let stride = 8 * n;
+            let mut packed = vec![f64::NAN; chunks * stride];
+            let ld = fused.ld();
+            let sp = StridedPanel {
+                src: fused.data_mut().as_mut_ptr(),
+                ld,
+                r0: 0,
+                rows: m,
+            };
+            unsafe {
+                run_kblock_fused::<Givens, 8, 2, 3>(
+                    &mut packed, chunks, stride, &plan, sp, true, true,
+                );
+            }
+            assert_eq!(
+                max_abs_diff(&fused, &expected),
+                0.0,
+                "fused kblock m={m} n={n} kb={kb} nb={nb}"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_block_sequence_spills_between_blocks() {
+        // Two k-blocks: the first fuses the pack, the second the unpack;
+        // between them the matrix lives only in the packed buffer.
+        let (m, n, k, kb) = (11, 14, 6, 3);
+        let seq = RotationSequence::random(n, k, 21);
+        let mut expected = Matrix::random(m, n, 22);
+        let mut fused = expected.clone();
+        apply_naive(&mut expected, &seq);
+
+        let chunks = m.div_ceil(8);
+        let stride = 8 * n;
+        let mut packed = vec![f64::NAN; chunks * stride];
+        let ld = fused.ld();
+        let sp = StridedPanel {
+            src: fused.data_mut().as_mut_ptr(),
+            ld,
+            r0: 0,
+            rows: m,
+        };
+        let mut kplan = KBlockPlan::new();
+        for (idx, pb) in [(0usize, 0usize), (1, kb)] {
+            plan_kblock_into(&mut kplan, &seq, pb, kb, 2, 4);
+            unsafe {
+                run_kblock_fused::<Givens, 8, 2, 3>(
+                    &mut packed,
+                    chunks,
+                    stride,
+                    &kplan,
+                    sp,
+                    idx == 0,
+                    idx == 1,
+                );
+            }
+        }
+        assert_eq!(max_abs_diff(&fused, &expected), 0.0);
     }
 
     #[test]

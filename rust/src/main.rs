@@ -145,8 +145,8 @@ fn print_usage() {
         "rotseq — communication-efficient application of rotation sequences\n\
          (Steel & Langou 2024 reproduction)\n\n\
          subcommands:\n\
-         \x20 apply    --algo rs_kernel --m 960 --n 960 --k 180  apply + report Gflop/s\n\
-         \x20          [--side right|left --direction forward|inverse]\n\
+         \x20 apply    --algo rs_kernel --m 960 --n 960 --k 180  apply + report Gflop/s + memops\n\
+         \x20          [--side right|left --direction forward|inverse --staged]\n\
          \x20 plan     [--mr 16 --kr 2 --t1 --t2 --t3]           §5 block-size planner\n\
          \x20 tune     [--m 960 --n 960 --k 180 --threads 1]     autotune within the §5 bounds\n\
          \x20          [--shape MxNxK --db PATH --quick]         and persist the TuneDb winner\n\
@@ -191,6 +191,9 @@ fn cmd_apply(a: &Args) -> Result<()> {
         .side(side)
         .direction(direction)
         .config(cfg)
+        // --staged: the pre-fusing pack → kernel → unpack pipeline, for
+        // A/B runs against the fused default.
+        .fused(!a.has("staged"))
         .build_session()?;
     let t0 = std::time::Instant::now();
     for _ in 0..reps {
@@ -203,6 +206,20 @@ fn cmd_apply(a: &Args) -> Result<()> {
         flops as f64 / dt / 1e9,
         frobenius_norm(&mat)
     );
+    let mc = session.last_memops();
+    if mc.total() > 0 {
+        println!(
+            "memops/execute: {} strided + {} packed doubles, {} in dedicated copy sweeps{}",
+            mc.strided(),
+            mc.packed(),
+            mc.sweep_copies,
+            if mc.sweep_copies == 0 {
+                " (fused pack/unpack)"
+            } else {
+                " (staged)"
+            }
+        );
+    }
     Ok(())
 }
 

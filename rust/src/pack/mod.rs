@@ -172,6 +172,20 @@ impl PackedPanel {
         }
     }
 
+    /// Shape this panel for `rows x cols` **without packing anything**:
+    /// the fused first-touch-pack execution
+    /// ([`crate::kernel::run_panel_planned_fused`]) uses the panel purely
+    /// as an in-flight spill target, writing every column before it reads
+    /// it, so the buffer's prior contents (including stale pad rows) are
+    /// irrelevant. Reuses the allocation exactly like
+    /// [`Self::pack_from`] — zero allocation once warm.
+    pub fn prepare(&mut self, rows: usize, cols: usize) {
+        let chunks = rows.div_ceil(self.mr).max(1);
+        self.buf.ensure_len(chunks * self.mr * cols.max(1));
+        self.rows = rows;
+        self.cols = cols;
+    }
+
     /// Copy the live rows back into rows `r0 ..` of `a`.
     pub fn unpack(&self, a: &mut Matrix, r0: usize) {
         assert_eq!(self.cols, a.cols());

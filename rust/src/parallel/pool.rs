@@ -26,7 +26,9 @@
 //! hand-off.
 
 use crate::blocking::KernelConfig;
-use crate::kernel::{run_panel_planned, PanelWorkspace, SeqPlan};
+use crate::kernel::{
+    run_panel_planned, run_panel_planned_fused, PanelWorkspace, SeqPlan, StridedPanel,
+};
 use crate::matrix::Matrix;
 use crate::rot::PairOp;
 use anyhow::{anyhow, ensure, Result};
@@ -95,6 +97,9 @@ struct Task {
     units: *mut PanelWorkspace,
     seqplan: *const SeqPlan,
     cfg: KernelConfig,
+    /// Fused first-touch pack / last-touch unpack (the plan default) vs
+    /// the staged pack → replay → unpack reference path.
+    fused: bool,
 }
 
 // SAFETY: see the dispatch protocol above — all pointers outlive the
@@ -159,8 +164,10 @@ impl WorkerPool {
     }
 
     /// Apply the pre-planned streams in `seqplan` to every matrix in
-    /// `mats`: worker `i` processes rows `parts[i]` (pack → replay →
-    /// unpack) of each matrix using `units[i]`. Blocks until all workers
+    /// `mats`: worker `i` processes rows `parts[i]` of each matrix using
+    /// `units[i]` — with `fused`, the §4 pack/unpack ride the first/last
+    /// kernel passes (the unit's panel is pure spill space); without it,
+    /// the staged pack → replay → unpack. Blocks until all workers
     /// finish. Steady state performs zero allocation and zero thread
     /// spawns; concurrent dispatches on a shared pool are serialized.
     pub fn run_planned<Op: PairOp>(
@@ -170,6 +177,7 @@ impl WorkerPool {
         units: &mut [PanelWorkspace],
         seqplan: &SeqPlan,
         cfg: &KernelConfig,
+        fused: bool,
     ) -> Result<()> {
         ensure!(parts.len() == units.len(), "one workspace per partition");
         ensure!(
@@ -190,6 +198,7 @@ impl WorkerPool {
             units: units.as_mut_ptr(),
             seqplan: seqplan as *const SeqPlan,
             cfg: *cfg,
+            fused,
         };
         let mut st = self.shared.state.lock().expect("pool state poisoned");
         // Another plan may be mid-dispatch on a shared pool: wait our turn.
@@ -265,24 +274,41 @@ fn worker_loop(shared: &Shared, w: usize) {
     }
 }
 
-/// One worker's share of a dispatch: rows `parts[w]` of every matrix, pack
-/// → replay the shared streams → unpack. Monomorphized per op type at the
-/// dispatch site.
+/// One worker's share of a dispatch: rows `parts[w]` of every matrix —
+/// fused (layout-routed first/last passes, the panel as spill space) or
+/// staged (pack → replay the shared streams → unpack). Monomorphized per
+/// op type at the dispatch site.
 fn run_chunk<Op: PairOp>(t: &Task, w: usize) -> Result<()> {
     // SAFETY: the dispatch protocol guarantees every pointer is live until
     // the dispatcher observes completion; `w < nparts == units.len()`, each
     // worker takes a distinct unit, and the `parts` row ranges are disjoint
-    // so concurrent pack/unpack touch disjoint elements of each matrix.
+    // so concurrent packing/fused passes touch disjoint elements of each
+    // matrix.
     unsafe {
         let (r0, rows) = *t.parts.add(w);
         let unit = &mut *t.units.add(w);
         let sp = &*t.seqplan;
         for b in 0..t.nmats {
             let mv = *t.mats.add(b);
-            unit.panel
-                .pack_from_raw(mv.data, mv.ld, mv.rows, r0, rows, mv.cols);
-            run_panel_planned::<Op>(&mut unit.panel, sp, &t.cfg)?;
-            unit.panel.unpack_to_raw(mv.data, mv.ld, mv.rows, r0);
+            if t.fused {
+                unit.panel.prepare(rows, mv.cols);
+                run_panel_planned_fused::<Op>(
+                    &mut unit.panel,
+                    StridedPanel {
+                        src: mv.data,
+                        ld: mv.ld,
+                        r0,
+                        rows,
+                    },
+                    sp,
+                    &t.cfg,
+                )?;
+            } else {
+                unit.panel
+                    .pack_from_raw(mv.data, mv.ld, mv.rows, r0, rows, mv.cols);
+                run_panel_planned::<Op>(&mut unit.panel, sp, &t.cfg)?;
+                unit.panel.unpack_to_raw(mv.data, mv.ld, mv.rows, r0);
+            }
         }
     }
     Ok(())
@@ -321,21 +347,25 @@ mod tests {
 
     #[test]
     fn pool_matches_naive_single_matrix() {
-        let (m, n, k) = (45, 24, 9);
-        let seq = RotationSequence::random(n, k, 3);
-        let mut expected = Matrix::random(m, n, 4);
-        let mut a = expected.clone();
-        apply_naive(&mut expected, &seq);
+        // Both dispatch modes: staged (pack/replay/unpack) and fused
+        // (layout-routed first/last passes) must match naive bitwise.
+        for fused in [false, true] {
+            let (m, n, k) = (45, 24, 9);
+            let seq = RotationSequence::random(n, k, 3);
+            let mut expected = Matrix::random(m, n, 4);
+            let mut a = expected.clone();
+            apply_naive(&mut expected, &seq);
 
-        let c = cfg(3);
-        let (parts, mut units) = setup(m, n, &c);
-        let pool = WorkerPool::new(c.threads);
-        let mut sp = SeqPlan::new();
-        sp.plan_into(&seq, &c);
-        let views = [MatView::of(&mut a)];
-        pool.run_planned::<Givens>(&views, &parts, &mut units, &sp, &c)
-            .unwrap();
-        assert_eq!(max_abs_diff(&a, &expected), 0.0);
+            let c = cfg(3);
+            let (parts, mut units) = setup(m, n, &c);
+            let pool = WorkerPool::new(c.threads);
+            let mut sp = SeqPlan::new();
+            sp.plan_into(&seq, &c);
+            let views = [MatView::of(&mut a)];
+            pool.run_planned::<Givens>(&views, &parts, &mut units, &sp, &c, fused)
+                .unwrap();
+            assert_eq!(max_abs_diff(&a, &expected), 0.0, "fused={fused}");
+        }
     }
 
     #[test]
@@ -358,7 +388,7 @@ mod tests {
         let mut sp = SeqPlan::new();
         sp.plan_into(&seq, &c);
         let views: Vec<MatView> = mats.iter_mut().map(MatView::of).collect();
-        pool.run_planned::<Givens>(&views, &parts, &mut units, &sp, &c)
+        pool.run_planned::<Givens>(&views, &parts, &mut units, &sp, &c, true)
             .unwrap();
         for (a, e) in mats.iter().zip(&expected) {
             assert_eq!(max_abs_diff(a, e), 0.0);
@@ -379,7 +409,8 @@ mod tests {
             apply_naive(&mut expected, &seq);
             sp.plan_into(&seq, &c);
             let views = [MatView::of(&mut a)];
-            pool.run_planned::<Givens>(&views, &parts, &mut units, &sp, &c)
+            // Alternate modes across dispatches: a unit must serve both.
+            pool.run_planned::<Givens>(&views, &parts, &mut units, &sp, &c, seed % 2 == 0)
                 .unwrap();
             assert_eq!(max_abs_diff(&a, &expected), 0.0, "dispatch {seed}");
         }
@@ -397,7 +428,7 @@ mod tests {
         let mut sp = SeqPlan::new();
         sp.plan_into(&seq, &c);
         assert!(pool
-            .run_planned::<Givens>(&views, &parts, &mut units, &sp, &c)
+            .run_planned::<Givens>(&views, &parts, &mut units, &sp, &c, true)
             .is_err());
     }
 
@@ -417,7 +448,7 @@ mod tests {
         sp.plan_into(&seq, &c);
         let views = [MatView::of(&mut a)];
         pool.run_planned::<<ReflectorSequence as OpSequence>::Op>(
-            &views, &parts, &mut units, &sp, &c,
+            &views, &parts, &mut units, &sp, &c, true,
         )
         .unwrap();
         assert_eq!(max_abs_diff(&a, &expected), 0.0);

@@ -18,7 +18,7 @@
 
 use crate::blocking::KernelConfig;
 use crate::gemm::GemmWorkspace;
-use crate::kernel::{Algorithm, PanelWorkspace, SeqPlan};
+use crate::kernel::{Algorithm, MemopCounts, PanelWorkspace, SeqPlan};
 use crate::parallel::{MatView, WorkerPool};
 use crate::rot::RotationSequence;
 use std::collections::HashMap;
@@ -118,6 +118,9 @@ pub struct ExecCtx {
     /// one shared plan need not serialize on a single pool's epoch
     /// handshake.
     pub(crate) pool: Option<Arc<WorkerPool>>,
+    /// Element-move ledger of the most recent kernel execute through this
+    /// context (see [`Self::last_memops`]).
+    pub(crate) last_memops: MemopCounts,
 }
 
 impl ExecCtx {
@@ -168,6 +171,7 @@ impl ExecCtx {
                     seqplan,
                     views: Vec::with_capacity(usize::from(pooled)),
                     pool,
+                    last_memops: MemopCounts::default(),
                 }
             }
             Algorithm::Gemm => ExecCtx {
@@ -177,6 +181,7 @@ impl ExecCtx {
                 seqplan: None,
                 views: Vec::new(),
                 pool: None,
+                last_memops: MemopCounts::default(),
             },
             _ => ExecCtx {
                 sig,
@@ -185,6 +190,7 @@ impl ExecCtx {
                 seqplan: None,
                 views: Vec::new(),
                 pool: None,
+                last_memops: MemopCounts::default(),
             },
         }
     }
@@ -214,6 +220,18 @@ impl ExecCtx {
     /// proves the allocations were reused, not replaced).
     pub fn packing_ptrs(&self) -> Vec<usize> {
         self.units.iter().map(|u| u.panel.data_ptr() as usize).collect()
+    }
+
+    /// The element-move ledger of the most recent kernel execute through
+    /// this context: doubles moved to/from the caller's strided matrix vs
+    /// the packed workspace, plus the dedicated copy-sweep share (zero on
+    /// the fused default, `4·m·n` per staged execute). Computed in closed
+    /// form from the executed schedule — the same threshold tests the
+    /// fused kernels route by — so it costs `O(calls)`, not `O(m·n·k)`.
+    /// Batch executes report the whole batch; zero for non-kernel
+    /// algorithms.
+    pub fn last_memops(&self) -> MemopCounts {
+        self.last_memops
     }
 
     /// Re-point this context at `plan`'s shared [`WorkerPool`] when the

@@ -71,7 +71,7 @@ pub use session::Session;
 
 use anyhow::{bail, ensure, Result};
 use crate::blocking::{plan as solve_config, plan_bounds_for, BlockPlan, CacheParams, KernelConfig};
-use crate::kernel::{self, Algorithm, PanelWorkspace, SeqPlan};
+use crate::kernel::{self, Algorithm, MemopCounts, PanelWorkspace, SeqPlan};
 use crate::matrix::Matrix;
 use crate::parallel::{partition_rows, MatView, WorkerPool};
 use crate::rot::{Givens, RotationSequence};
@@ -150,9 +150,10 @@ impl std::str::FromStr for Direction {
     }
 }
 
-/// Serial kernel execution: pack each `m_b` row panel, replay the shared
-/// pre-planned streams, unpack. The streams were packed exactly once (in
-/// `SeqPlan::plan_into`), not once per panel.
+/// Staged serial kernel execution: pack each `m_b` row panel, replay the
+/// shared pre-planned streams, unpack. The streams were packed exactly
+/// once (in `SeqPlan::plan_into`), not once per panel. Kept as the
+/// measurable reference for the fused default ([`PlanBuilder::fused`]).
 fn replay_serial(
     a: &mut Matrix,
     unit: &mut PanelWorkspace,
@@ -171,6 +172,54 @@ fn replay_serial(
     Ok(())
 }
 
+/// Fused serial kernel execution: no dedicated pack/unpack sweeps — each
+/// `m_b` panel's first k-block pass loads straight from `a` and its last
+/// retires straight back, with `unit.panel` serving only as the in-flight
+/// window spill. Saves the staged path's `4·m·n` pure-copy doubles per
+/// execute while staying bitwise identical.
+fn replay_serial_fused(
+    a: &mut Matrix,
+    unit: &mut PanelWorkspace,
+    sp: &SeqPlan,
+    cfg: &KernelConfig,
+) -> Result<()> {
+    let mb = cfg.mb.max(1);
+    let m = a.rows();
+    let cols = a.cols();
+    let ld = a.ld();
+    let base = a.data_mut().as_mut_ptr();
+    let mut ib = 0;
+    while ib < m {
+        let rows = mb.min(m - ib);
+        unit.panel.prepare(rows, cols);
+        // SAFETY: `a` is exclusively borrowed for the whole loop; panels
+        // cover disjoint row ranges `[ib, ib + rows)` and `ld >= m`.
+        unsafe {
+            kernel::run_panel_planned_fused::<Givens>(
+                &mut unit.panel,
+                kernel::StridedPanel {
+                    src: base,
+                    ld,
+                    r0: ib,
+                    rows,
+                },
+                sp,
+                cfg,
+            )?;
+        }
+        ib += rows;
+    }
+    Ok(())
+}
+
+/// The `m_b` panel heights of a serial execute over `m` rows (the shape
+/// [`replay_serial`]/[`replay_serial_fused`] iterate), for the memop
+/// ledger.
+fn serial_panel_rows(m: usize, mb: usize) -> impl Iterator<Item = usize> {
+    let mb = mb.max(1);
+    (0..m.div_ceil(mb)).map(move |i| mb.min(m - i * mb))
+}
+
 /// Builder for [`RotationPlan`]; see the module docs for the full story.
 pub struct PlanBuilder {
     shape: Option<(usize, usize, usize)>,
@@ -182,6 +231,7 @@ pub struct PlanBuilder {
     direction: Direction,
     config: Option<KernelConfig>,
     warm: bool,
+    fused: bool,
     pool: Option<Arc<WorkerPool>>,
     autotune: bool,
     /// Whether [`Self::kernel`] was called: an explicit kernel size is an
@@ -202,6 +252,7 @@ impl PlanBuilder {
             direction: Direction::Forward,
             config: None,
             warm: true,
+            fused: true,
             pool: None,
             autotune: false,
             kernel_explicit: false,
@@ -294,6 +345,21 @@ impl PlanBuilder {
     /// once.
     pub fn warm_workspace(mut self, warm: bool) -> Self {
         self.warm = warm;
+        self
+    }
+
+    /// Whether kernel executes fold the §4 pack/unpack sweeps into the
+    /// first/last computational passes (default `true`): a fresh column's
+    /// first load comes straight from the caller's matrix and a finished
+    /// column's last store retires straight back, so no dedicated copy
+    /// sweep ever runs — for a single-k-block workload (`k ≤ k_b`) the
+    /// packed buffer is touched only as the in-flight window spill.
+    /// `fused(false)` restores the staged pack → kernel → unpack
+    /// pipeline: bitwise identical, but `4·m·n` extra pure-copy doubles
+    /// per execute (see [`ExecCtx::last_memops`]). It exists as the A/B
+    /// reference — the fig5 bench measures both series.
+    pub fn fused(mut self, fused: bool) -> Self {
+        self.fused = fused;
         self
     }
 
@@ -392,6 +458,7 @@ impl PlanBuilder {
             parts,
             shared_pool,
             warm: self.warm,
+            fused: self.fused,
         })
     }
 
@@ -426,6 +493,9 @@ pub struct RotationPlan {
     shared_pool: Option<Arc<WorkerPool>>,
     /// Whether contexts built for this plan pre-warm their stream arena.
     warm: bool,
+    /// Fused first-touch pack / last-touch unpack (the default) vs the
+    /// staged pack → kernel → unpack reference pipeline.
+    fused: bool,
 }
 
 // The acceptance criterion, enforced at compile time: a plan with no
@@ -468,6 +538,12 @@ impl RotationPlan {
     /// a tuned record) rather than the open-loop §5 solve.
     pub fn is_tuned(&self) -> bool {
         self.tuned
+    }
+
+    /// Whether kernel executes fuse the §4 pack/unpack into the boundary
+    /// passes ([`PlanBuilder::fused`], default `true`).
+    pub fn is_fused(&self) -> bool {
+        self.fused
     }
 
     /// Side the plan applies sequences on.
@@ -579,6 +655,30 @@ impl RotationPlan {
         self.run_batch(ctx, mats, seq, invert)
     }
 
+    /// The element-move ledger of one kernel dispatch on this plan's panel
+    /// decomposition (§7 parts when pooled, `m_b` panels when serial) —
+    /// the single place the ledger's row shapes are derived, so it cannot
+    /// drift from the replay loops per call site.
+    fn exec_ledger(&self, sp: &SeqPlan, m: usize, cols: usize) -> MemopCounts {
+        if self.parts.is_empty() {
+            kernel::seqplan_memops(
+                sp,
+                serial_panel_rows(m, self.cfg.mb),
+                self.cfg.mr,
+                cols,
+                self.fused,
+            )
+        } else {
+            kernel::seqplan_memops(
+                sp,
+                self.parts.iter().map(|&(_, rows)| rows),
+                self.cfg.mr,
+                cols,
+                self.fused,
+            )
+        }
+    }
+
     fn run_batch(
         &self,
         ctx: &mut ExecCtx,
@@ -646,13 +746,18 @@ impl RotationPlan {
         seq: &RotationSequence,
     ) -> Result<()> {
         let cfg = self.cfg;
+        let fused = self.fused;
+        let (m, cols) = (mats[0].rows(), mats[0].cols());
+        let nmats = mats.len() as u64;
         let ExecCtx {
             units,
             seqplan,
             views,
             pool,
+            last_memops,
             ..
         } = ctx;
+        *last_memops = MemopCounts::default();
         if units.is_empty() {
             // m == 0 under threads > 1: nothing to do.
             return Ok(());
@@ -662,15 +767,20 @@ impl RotationPlan {
         if let Some(pool) = pool {
             views.clear();
             views.extend(mats.iter_mut().map(MatView::of));
-            let res = pool.run_planned::<Givens>(views, &self.parts, units, sp, &cfg);
+            let res = pool.run_planned::<Givens>(views, &self.parts, units, sp, &cfg, fused);
             views.clear();
-            res
+            res?;
         } else {
             for a in mats.iter_mut() {
-                replay_serial(a, &mut units[0], sp, &cfg)?;
+                if fused {
+                    replay_serial_fused(a, &mut units[0], sp, &cfg)?;
+                } else {
+                    replay_serial(a, &mut units[0], sp, &cfg)?;
+                }
             }
-            Ok(())
         }
+        *last_memops = self.exec_ledger(sp, m, cols).scaled(nmats);
+        Ok(())
     }
 
     fn run(
@@ -735,6 +845,7 @@ impl RotationPlan {
 
     fn run_forward(&self, ctx: &mut ExecCtx, a: &mut Matrix, seq: &RotationSequence) -> Result<()> {
         let cfg = self.cfg;
+        ctx.last_memops = MemopCounts::default();
         match self.algo {
             Algorithm::Naive => crate::rot::apply_naive(a, seq),
             Algorithm::Wavefront => crate::rot::apply_wavefront(a, seq),
@@ -760,29 +871,38 @@ impl RotationPlan {
                 crate::gemm::apply_gemm_with(a, seq, cfg.nb.max(cfg.kb), cfg.mb, ws);
             }
             Algorithm::Kernel => {
+                let fused = self.fused;
+                let (m, cols) = (a.rows(), a.cols());
                 let ExecCtx {
                     units,
                     seqplan,
                     views,
                     pool,
+                    last_memops,
                     ..
                 } = ctx;
                 if units.is_empty() {
                     // m == 0 under threads > 1: nothing to do.
                 } else {
                     // Pack the wave streams once; replay them over every
-                    // row chunk (pooled) or m_b row panel (serial).
+                    // row chunk (pooled) or m_b row panel (serial) — with
+                    // the §4 pack/unpack fused into the first/last passes
+                    // unless the plan opted for the staged reference.
                     let sp = seqplan.get_or_insert_with(SeqPlan::new);
                     sp.plan_into(seq, &cfg);
                     if let Some(pool) = pool {
                         views.clear();
                         views.push(MatView::of(a));
-                        let res = pool.run_planned::<Givens>(views, &self.parts, units, sp, &cfg);
+                        let res =
+                            pool.run_planned::<Givens>(views, &self.parts, units, sp, &cfg, fused);
                         views.clear();
                         res?;
+                    } else if fused {
+                        replay_serial_fused(a, &mut units[0], sp, &cfg)?;
                     } else {
                         replay_serial(a, &mut units[0], sp, &cfg)?;
                     }
+                    *last_memops = self.exec_ledger(sp, m, cols);
                 }
             }
             Algorithm::KernelNoPack => kernel::apply_kernel_unpacked(a, seq, &cfg)?,

@@ -91,6 +91,12 @@ impl Session {
         self.plan.is_tuned()
     }
 
+    /// Shorthand for [`ExecCtx::last_memops`]: the element-move ledger of
+    /// this session's most recent kernel execute.
+    pub fn last_memops(&self) -> crate::kernel::MemopCounts {
+        self.ctx().last_memops()
+    }
+
     /// This session's context (introspection: the no-growth suites watch
     /// [`ExecCtx::capacity_doubles`] and [`ExecCtx::packing_ptrs`]).
     pub fn ctx(&self) -> &ExecCtx {

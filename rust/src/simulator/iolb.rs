@@ -77,6 +77,41 @@ pub fn memops_kernel_85_asymptotic(m: usize, n: usize, k: usize) -> f64 {
     0.65 * (m as f64) * ((n - k) as f64) * (k as f64)
 }
 
+/// The §4 packing sweeps of the staged execute: `pack` reads `m·n`
+/// strided doubles and writes `m·n` packed, `unpack` mirrors it — `4·m·n`
+/// doubles of pure-copy traffic per execute that the fused
+/// first-touch-pack / last-touch-unpack execution eliminates entirely.
+pub fn memops_pack_sweeps(m: usize, n: usize) -> f64 {
+    4.0 * (m as f64) * (n as f64)
+}
+
+/// Whole-execute memop model: the Eq 3.4 kernel-pass coefficient
+/// `(2/k_r + 2/n_b + 2/m_r)` applied to the full `m·(n−k)·k` op grid,
+/// plus — for the staged path — the [`memops_pack_sweeps`] copy traffic.
+/// The fused path's boundary passes move the same element count as their
+/// packed equivalents (loads/stores change *layout*, not volume), so the
+/// fused total is exactly the staged total minus the sweeps. This is the
+/// per-execute cost surface the §5 parameter selection and the tuner's
+/// candidate ranking see.
+pub fn memops_execute(
+    m: usize,
+    n: usize,
+    k: usize,
+    mr: usize,
+    kr: usize,
+    nb: usize,
+    fused: bool,
+) -> f64 {
+    let span = ((n as f64) - (k as f64)).max(1.0);
+    let kernel_passes =
+        (2.0 / kr as f64 + 2.0 / nb as f64 + 2.0 / mr as f64) * (m as f64) * span * (k as f64);
+    if fused {
+        kernel_passes
+    } else {
+        kernel_passes + memops_pack_sweeps(m, n)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -139,6 +174,28 @@ mod tests {
         let k162 = memops_wave_kernel(mb, nb, kb, 16, 2);
         let ratio = k162 / k85;
         assert!(ratio > 1.6 && ratio < 2.0, "ratio = {ratio}");
+    }
+
+    #[test]
+    fn fused_execute_saves_exactly_the_pack_sweeps() {
+        let (m, n, k) = (960, 960, 60);
+        let staged = memops_execute(m, n, k, 16, 2, 216, false);
+        let fused = memops_execute(m, n, k, 16, 2, 216, true);
+        assert!((staged - fused - memops_pack_sweeps(m, n)).abs() < 1e-6);
+        assert!(staged - fused >= 2.0 * (m as f64) * (n as f64));
+    }
+
+    #[test]
+    fn pack_sweeps_dominate_single_kblock_workloads() {
+        // k ≲ k_b, small k: the 4mn copy traffic rivals the kernel's own
+        // ~1.15·m·n·k — the regime the fused path exists for.
+        let (m, n, k) = (960, 960, 3);
+        let staged = memops_execute(m, n, k, 16, 2, 216, false);
+        let fused = memops_execute(m, n, k, 16, 2, 216, true);
+        assert!(
+            staged / fused > 2.0,
+            "sweeps should dominate: staged {staged}, fused {fused}"
+        );
     }
 
     #[test]

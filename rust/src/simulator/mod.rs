@@ -23,4 +23,4 @@ mod trace;
 
 pub use cache::{Cache, CacheSpec};
 pub use hierarchy::{Hierarchy, HierarchySpec, Tlb};
-pub use trace::{simulate_algorithm, AccessCounts, SimReport};
+pub use trace::{simulate_algorithm, simulate_kernel_staged, AccessCounts, SimReport};

@@ -10,8 +10,9 @@
 
 use super::hierarchy::{Hierarchy, HierarchySpec};
 use crate::blocking::KernelConfig;
-use crate::kernel::Algorithm;
-use crate::rot::{wave_members, waves_count};
+use crate::kernel::phases::KernelCall;
+use crate::kernel::{plan_kblock_into, Algorithm, KBlockPlan};
+use crate::rot::{wave_members, waves_count, RotationSequence};
 use anyhow::{bail, Result};
 
 /// Element-level load/store totals (the Eq 3.x "memory operations").
@@ -223,64 +224,156 @@ fn emit_fused(h: &mut Hierarchy, l: &Layout, k: usize) {
     }
 }
 
-/// One §3 wave-kernel invocation on `MR` rows: preload `kr` columns, per
-/// wave load 1 column + `2·kr` op scalars + store 1 column, drain `kr`
-/// columns. `col(j)` maps a panel-local column to its base address.
+/// How a kernel run gets the matrix in and out of §4 packed layout.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum PackMode {
+    /// Fused first-touch pack / last-touch unpack (the plan default):
+    /// boundary k-blocks route their column loads/stores to the strided
+    /// matrix, interior ones stay packed; no dedicated sweeps.
+    Fused,
+    /// Dedicated pack/unpack sweeps around an all-packed loop nest (the
+    /// pre-fusing pipeline, still reachable via `PlanBuilder::fused(false)`).
+    Staged,
+    /// No packing at all (`rs_kernel_nopack`): kernels run on the
+    /// caller's strided storage.
+    None,
+}
+
+/// One column touch of a kernel call, routed by the same threshold test
+/// the fused kernels use: a load goes strided iff `j >= split`, a store
+/// iff `j < split`. Packed accesses touch the full `mr` chunk (pads
+/// included); strided ones only the `live` rows.
 #[allow(clippy::too_many_arguments)]
-fn emit_wave_kernel(
+fn emit_col(
     h: &mut Hierarchy,
-    col: &impl Fn(usize, usize) -> u64,
-    stream_base: u64,
-    r0: usize,
+    packed_col: &impl Fn(usize, usize) -> u64,
+    strided_col: &impl Fn(usize, usize) -> u64,
+    r: usize,
     mr: usize,
-    j0: usize,
-    kr: usize,
-    nwaves: usize,
+    live: usize,
+    j: usize,
+    split: usize,
+    is_store: bool,
 ) {
-    if nwaves == 0 {
-        return;
-    }
-    for s in 0..kr {
-        h.access_run(col(r0, j0 + s), mr, false);
-    }
-    for t in 0..nwaves {
-        h.access_run(col(r0, j0 + t + kr), mr, false);
-        h.access_run(stream_base + ((t * kr * 2) * 8) as u64, kr * 2, false);
-        h.access_run(col(r0, j0 + t), mr, true);
-    }
-    for s in 0..kr {
-        h.access_run(col(r0, j0 + nwaves + s), mr, true);
+    let strided = if is_store { j < split } else { j >= split };
+    if strided {
+        h.access_run(strided_col(r, j), live, is_store);
+    } else {
+        h.access_run(packed_col(r, j), mr, is_store);
     }
 }
 
-/// The full `rs_kernel` access stream: §4 packing, §5 loop nest, §3 kernel,
-/// with the same phase decomposition as [`crate::kernel::phases`].
-fn emit_kernel(h: &mut Hierarchy, l: &Layout, k: usize, cfg: &KernelConfig, pack: bool) {
+/// The stream-building side of one kernel call: read the `C`/`S` entries
+/// of its ops, write the packed wave stream (mirrors `WaveStream::pack`).
+fn emit_call_setup(h: &mut Hierarchy, l: &Layout, call: &KernelCall) {
+    let w = call.width;
+    let nwaves = call.stream.nwaves();
+    for t in 0..nwaves {
+        for u in 0..w {
+            emit_cs_load(h, l, call.v0 + t - u, call.p0 + u);
+        }
+    }
+    h.access_run(l.stream_base, nwaves * w * 2, true);
+}
+
+/// One planned kernel call on one row chunk: preload `width` columns, per
+/// wave load 1 column + `2·width` op scalars + store 1 column, drain
+/// `width` columns — each column access routed by the call's layout
+/// splits.
+#[allow(clippy::too_many_arguments)]
+fn emit_call(
+    h: &mut Hierarchy,
+    l: &Layout,
+    call: &KernelCall,
+    packed_col: &impl Fn(usize, usize) -> u64,
+    strided_col: &impl Fn(usize, usize) -> u64,
+    r: usize,
+    mr: usize,
+    live: usize,
+    load_split: usize,
+    store_split: usize,
+) {
+    let w = call.width;
+    let j0 = call.col_lo();
+    let nwaves = call.stream.nwaves();
+    if nwaves == 0 {
+        return;
+    }
+    for s in 0..w {
+        emit_col(h, packed_col, strided_col, r, mr, live, j0 + s, load_split, false);
+    }
+    for t in 0..nwaves {
+        emit_col(
+            h,
+            packed_col,
+            strided_col,
+            r,
+            mr,
+            live,
+            j0 + t + w,
+            load_split,
+            false,
+        );
+        h.access_run(l.stream_base + ((t * w * 2) * 8) as u64, w * 2, false);
+        emit_col(h, packed_col, strided_col, r, mr, live, j0 + t, store_split, true);
+    }
+    for s in 0..w {
+        emit_col(
+            h,
+            packed_col,
+            strided_col,
+            r,
+            mr,
+            live,
+            j0 + nwaves + s,
+            store_split,
+            true,
+        );
+    }
+}
+
+/// The full `rs_kernel` access stream, **driven by the real planner**:
+/// each k-block's call schedule (and, for the fused mode, its layout
+/// thresholds) comes from [`plan_kblock_into`] itself, so the emitter can
+/// never drift from the implementation's phase decomposition.
+fn emit_kernel(h: &mut Hierarchy, l: &Layout, k: usize, cfg: &KernelConfig, mode: PackMode) {
     let (m, n) = (l.m, l.n);
     let kb_max = cfg.kb.min(n - 1).max(1);
-    let (mr, kr) = (cfg.mr, cfg.kr);
+    let mr = cfg.mr;
+    // The plan only needs call geometry; op values are irrelevant.
+    let ident = RotationSequence::identity(n, k);
+    let mut kplan = KBlockPlan::new();
 
     let mut ib = 0;
     while ib < m {
-        let rows = cfg.mb.min(m - ib);
+        let rows = cfg.mb.max(1).min(m - ib);
         // §4 micro-panel layout: chunk c of m_r rows, column j at
         // chunk_base + j*m_r (columns contiguous at stride m_r).
         let chunk_stride = (mr * n) as u64;
-        let col = |r: usize, j: usize| -> u64 {
-            if pack {
-                let c = (r / mr) as u64;
-                l.panel_base + (c * chunk_stride + (j * mr + r % mr) as u64) * 8
-            } else {
-                l.a_col(j) + ((ib + r) * 8) as u64
-            }
+        let chunks = rows.div_ceil(mr);
+        let packed_col = |r: usize, j: usize| -> u64 {
+            let c = (r / mr) as u64;
+            l.panel_base + (c * chunk_stride + (j * mr + r % mr) as u64) * 8
         };
-        // Packed panels process the zero-padded final chunk as a full m_r
-        // chunk (no remainder path), mirroring kernel::phases.
-        let rows_eff = if pack { rows.div_ceil(mr) * mr } else { rows };
-        if pack {
-            // Pack: read strided A columns per chunk, write the packed
-            // buffer contiguously.
-            let chunks = rows.div_ceil(mr);
+        let strided_col = |r: usize, j: usize| -> u64 { l.a_col(j) + ((ib + r) * 8) as u64 };
+        // Row-chunk descriptors `(first row, packed height, live rows)`:
+        // packed modes pad the last chunk to m_r; the unpacked ablation
+        // runs whole m_r chunks plus single-row remainders.
+        let chunk_descs: Vec<(usize, usize, usize)> = match mode {
+            PackMode::None => {
+                let full = rows / mr * mr;
+                let mut v: Vec<_> = (0..full / mr).map(|c| (c * mr, mr, mr)).collect();
+                v.extend((full..rows).map(|r| (r, 1, 1)));
+                v
+            }
+            _ => (0..chunks)
+                .map(|c| (c * mr, mr, mr.min(rows - c * mr)))
+                .collect(),
+        };
+
+        if mode == PackMode::Staged {
+            // Pack sweep: read strided A columns per chunk, write the
+            // packed buffer contiguously.
             for c in 0..chunks {
                 let live = mr.min(rows - c * mr);
                 for j in 0..n {
@@ -297,155 +390,51 @@ fn emit_kernel(h: &mut Hierarchy, l: &Layout, k: usize, cfg: &KernelConfig, pack
         let mut pb = 0;
         while pb < k {
             let kbe = kb_max.min(k - pb);
-            let kre = kr.min(kbe);
-            // Build the wave streams once per k-block: read C/S, write the
-            // packed stream (cheap; mirrors WaveStream::pack).
-            let emit_stream_build = |h: &mut Hierarchy, nops: usize| {
-                // nops (c,s) pairs read + written to the stream buffer.
-                h.access_run(l.stream_base, nops * 2, true);
+            plan_kblock_into(&mut kplan, &ident, pb, kbe, cfg.kr, cfg.nb);
+            let (first, last) = (pb == 0, pb + kbe >= k);
+            // Effective layout splits per call: the same routing the
+            // fused drivers apply.
+            let splits = |call: &KernelCall| -> (usize, usize) {
+                match mode {
+                    PackMode::None => (0, usize::MAX),
+                    PackMode::Staged => (usize::MAX, 0),
+                    PackMode::Fused => (
+                        if first { call.load_split } else { usize::MAX },
+                        if last { call.store_split } else { 0 },
+                    ),
+                }
             };
 
-            // --- startup ---
-            for lseq in 0..kbe {
-                let nw = kbe - 1 - lseq;
-                if nw == 0 {
-                    continue;
-                }
-                for i in 0..nw {
-                    emit_cs_load(h, l, i, pb + lseq);
-                }
-                emit_stream_build(h, nw);
-                let mut r = 0;
-                while r + mr <= rows_eff {
-                    emit_wave_kernel(h, &col, l.stream_base, r, mr, 0, 1, nw);
-                    r += mr;
-                }
-                for rr in r..rows_eff {
-                    emit_wave_kernel(h, &col, l.stream_base, rr, 1, 0, 1, nw);
+            for call in &kplan.startup {
+                emit_call_setup(h, l, call);
+                let (ls, ss) = splits(call);
+                for &(r, hk, live) in &chunk_descs {
+                    emit_call(h, l, call, &packed_col, &strided_col, r, hk, live, ls, ss);
                 }
             }
-
-            // --- pipeline ---
-            let (w_lo, w_hi) = (kbe - 1, n - 1);
-            let mut w0 = w_lo;
-            while w0 < w_hi {
-                let w1 = (w0 + cfg.nb).min(w_hi);
-                let full_groups = kbe / kre;
-                // stream build for the chunk
-                for g in 0..full_groups {
-                    let l0 = g * kre;
-                    for t in 0..(w1 - w0) {
-                        for u in 0..kre {
-                            emit_cs_load(h, l, w0 + t - l0 - u, pb + l0 + u);
-                        }
-                    }
-                    emit_stream_build(h, (w1 - w0) * kre);
+            for chunk_calls in &kplan.pipeline {
+                for call in chunk_calls {
+                    emit_call_setup(h, l, call);
                 }
-                for lseq in full_groups * kre..kbe {
-                    for t in 0..(w1 - w0) {
-                        emit_cs_load(h, l, w0 + t - lseq, pb + lseq);
-                    }
-                    emit_stream_build(h, w1 - w0);
-                }
-                // row chunks x subgroups
-                let mut r = 0;
-                while r + mr <= rows_eff {
-                    for g in 0..full_groups {
-                        let l0 = g * kre;
-                        emit_wave_kernel(
-                            h,
-                            &col,
-                            l.stream_base,
-                            r,
-                            mr,
-                            w0 - l0 + 1 - kre,
-                            kre,
-                            w1 - w0,
-                        );
-                    }
-                    for lseq in full_groups * kre..kbe {
-                        emit_wave_kernel(
-                            h,
-                            &col,
-                            l.stream_base,
-                            r,
-                            mr,
-                            w0 - lseq,
-                            1,
-                            w1 - w0,
-                        );
-                    }
-                    r += mr;
-                }
-                for rr in r..rows_eff {
-                    for g in 0..full_groups {
-                        let l0 = g * kre;
-                        emit_wave_kernel(
-                            h,
-                            &col,
-                            l.stream_base,
-                            rr,
-                            1,
-                            w0 - l0 + 1 - kre,
-                            kre,
-                            w1 - w0,
-                        );
-                    }
-                    for lseq in full_groups * kre..kbe {
-                        emit_wave_kernel(
-                            h,
-                            &col,
-                            l.stream_base,
-                            rr,
-                            1,
-                            w0 - lseq,
-                            1,
-                            w1 - w0,
-                        );
+                for &(r, hk, live) in &chunk_descs {
+                    for call in chunk_calls {
+                        let (ls, ss) = splits(call);
+                        emit_call(h, l, call, &packed_col, &strided_col, r, hk, live, ls, ss);
                     }
                 }
-                w0 = w1;
             }
-
-            // --- shutdown ---
-            for lseq in 1..kbe {
-                for i in n - 1 - lseq..n - 1 {
-                    emit_cs_load(h, l, i, pb + lseq);
-                }
-                emit_stream_build(h, lseq);
-                let mut r = 0;
-                while r + mr <= rows_eff {
-                    emit_wave_kernel(
-                        h,
-                        &col,
-                        l.stream_base,
-                        r,
-                        mr,
-                        n - 1 - lseq,
-                        1,
-                        lseq,
-                    );
-                    r += mr;
-                }
-                for rr in r..rows_eff {
-                    emit_wave_kernel(
-                        h,
-                        &col,
-                        l.stream_base,
-                        rr,
-                        1,
-                        n - 1 - lseq,
-                        1,
-                        lseq,
-                    );
+            for call in &kplan.shutdown {
+                emit_call_setup(h, l, call);
+                let (ls, ss) = splits(call);
+                for &(r, hk, live) in &chunk_descs {
+                    emit_call(h, l, call, &packed_col, &strided_col, r, hk, live, ls, ss);
                 }
             }
             pb += kbe;
         }
 
-        if pack {
-            // Unpack: read the packed chunks, write strided A columns.
-            let chunks = rows.div_ceil(mr);
+        if mode == PackMode::Staged {
+            // Unpack sweep: read the packed chunks, write strided A columns.
             for c in 0..chunks {
                 let live = mr.min(rows - c * mr);
                 for j in 0..n {
@@ -479,15 +468,36 @@ pub fn simulate_algorithm(
         Algorithm::Wavefront => emit_wavefront(&mut h, &l, k),
         Algorithm::Blocked => emit_blocked(&mut h, &l, k, cfg),
         Algorithm::Fused => emit_fused(&mut h, &l, k),
-        Algorithm::Kernel => emit_kernel(&mut h, &l, k, cfg, true),
-        Algorithm::KernelNoPack => emit_kernel(&mut h, &l, k, cfg, false),
+        Algorithm::Kernel => emit_kernel(&mut h, &l, k, cfg, PackMode::Fused),
+        Algorithm::KernelNoPack => emit_kernel(&mut h, &l, k, cfg, PackMode::None),
         Algorithm::Gemm => bail!(
             "rs_gemm is compared analytically (op intensity √S); no trace emitter"
         ),
     }
+    Ok(report_from(algo, m, n, k, h))
+}
+
+/// [`simulate_algorithm`] for the kernel algorithm with the **staged** §4
+/// pack/unpack sweeps (the pre-fusing pipeline, `PlanBuilder::fused(false)`):
+/// the A/B reference the §1.2 table reports next to the fused default.
+pub fn simulate_kernel_staged(
+    m: usize,
+    n: usize,
+    k: usize,
+    spec: HierarchySpec,
+    cfg: &KernelConfig,
+) -> SimReport {
+    assert!(n >= 2 && k >= 1 && m >= 1);
+    let l = Layout::new(m, n, k);
+    let mut h = Hierarchy::new(spec);
+    emit_kernel(&mut h, &l, k, cfg, PackMode::Staged);
+    report_from(Algorithm::Kernel, m, n, k, h)
+}
+
+fn report_from(algo: Algorithm, m: usize, n: usize, k: usize, h: Hierarchy) -> SimReport {
     let flops = 6 * (m as u64) * ((n - 1) as u64) * (k as u64);
     let traffic = h.memory_traffic_bytes();
-    Ok(SimReport {
+    SimReport {
         algorithm: algo,
         m,
         n,
@@ -503,7 +513,7 @@ pub fn simulate_algorithm(
         memory_traffic_bytes: traffic,
         flops,
         op_intensity: flops as f64 / traffic.max(1) as f64,
-    })
+    }
 }
 
 #[cfg(test)]
@@ -555,6 +565,26 @@ mod tests {
             kernel.memops.total(),
             fused.memops.total()
         );
+    }
+
+    #[test]
+    fn fused_kernel_saves_exactly_the_pack_sweeps() {
+        // m a multiple of m_r, m <= mb: one panel, padded == live, so the
+        // staged pipeline's extra element moves are exactly the 4·m·n
+        // pack/unpack sweep — the fused emitter must shed all of it while
+        // issuing the same C/S and stream traffic.
+        let (m, n, k) = (64, 48, 8);
+        let cfg = small_cfg();
+        let staged = simulate_kernel_staged(m, n, k, HierarchySpec::small_machine(), &cfg);
+        let fused = sim(Algorithm::Kernel, m, n, k);
+        assert_eq!(
+            staged.memops.total() - fused.memops.total(),
+            (4 * m * n) as u64,
+            "staged {} vs fused {}",
+            staged.memops.total(),
+            fused.memops.total()
+        );
+        assert_eq!(staged.flops, fused.flops);
     }
 
     #[test]

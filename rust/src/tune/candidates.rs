@@ -85,6 +85,18 @@ pub fn candidates(
     out
 }
 
+/// The analytic per-execute memop prior used to annotate (and, on
+/// simulation ties, reason about) candidates the capped proxy simulation
+/// cannot distinguish: the Eq 3.4 whole-execute model at the candidate's
+/// kernel size and `n_b`, on the **fused** pack/unpack cost surface —
+/// the plan default the tuner's timed measurements actually run, so the
+/// prior and the measurements price the same pipeline. (The staged
+/// surface adds a flat `4·m·n` to every candidate; see
+/// [`crate::simulator::iolb::memops_execute`].)
+pub fn analytic_memop_prior(cfg: &KernelConfig, m: usize, n: usize, k: usize) -> f64 {
+    crate::simulator::iolb::memops_execute(m, n, k, cfg.mr, cfg.kr, cfg.nb, true)
+}
+
 /// `n_b` candidates: the planner's rounded choice and two down-steps
 /// (never above the bound — Eq 5.2 is monotone in `n_b`).
 fn nb_options(b: &crate::blocking::BlockPlan) -> Vec<usize> {

@@ -35,7 +35,7 @@
 mod candidates;
 mod db;
 
-pub use candidates::candidates;
+pub use candidates::{analytic_memop_prior, candidates};
 pub use db::{TuneDb, TuneKey, TunedRecord};
 
 use crate::bench_harness::{measure, MeasureConfig};
@@ -170,7 +170,9 @@ pub struct CandidateReport {
     /// proxy shape is far smaller than candidate `m_b`/`k_b`, so those
     /// variants simulate identically and tie on `sim_cost`.
     pub predicted_io: f64,
-    /// Eq 3.4 predicted memory operations per panel (analytic prior).
+    /// Eq 3.4 whole-execute memop prior on the fused pack/unpack cost
+    /// surface ([`analytic_memop_prior`]) — priced for the same fused
+    /// pipeline the timed measurements run.
     pub predicted_memops: f64,
     /// Weighted simulated miss cost on the proxy shape (lower is better).
     pub sim_cost: u64,
@@ -239,9 +241,7 @@ pub fn tune_shape(
                     config.mb.min(m),
                     config.kb.min(k),
                 ),
-                predicted_memops: crate::simulator::iolb::memops_wave_kernel(
-                    config.mb, config.nb, config.kb, config.mr, config.kr,
-                ),
+                predicted_memops: analytic_memop_prior(&config, m, n, k),
                 sim_cost,
                 sim_traffic_bytes: sim.memory_traffic_bytes,
                 measured_gflops: None,

@@ -1,0 +1,276 @@
+//! Property suite for the fused first-touch-pack / last-touch-unpack
+//! execution: bitwise equality with the staged pipeline (and naive) across
+//! remainder shapes, for Givens and reflector sequences, serial and
+//! pooled; plus the no-growth guarantee of the fused workspace and the
+//! memop-ledger invariants the CI perf smoke builds on.
+
+use rotseq::blocking::KernelConfig;
+use rotseq::kernel::{
+    apply_kernel_with_workspace, run_panel_planned_fused, PanelWorkspace, SeqPlan, StridedPanel,
+};
+use rotseq::matrix::{max_abs_diff, rel_error, Matrix};
+use rotseq::pack::PackedPanel;
+use rotseq::plan::RotationPlan;
+use rotseq::rot::{
+    apply_naive, apply_reflector_sequence_naive, OpSequence, ReflectorSequence, RotationSequence,
+};
+
+fn cfg(mr: usize, kr: usize, mb: usize, kb: usize, nb: usize, threads: usize) -> KernelConfig {
+    KernelConfig {
+        mr,
+        kr,
+        mb,
+        kb,
+        nb,
+        threads,
+    }
+}
+
+/// The shape sweep of the acceptance criteria: row remainders
+/// (`m % m_r != 0`), sub-kernel panels (`m < m_r`), single k-block
+/// workloads (`k <= k_b`), the minimal column count (`n = 2`), an
+/// `m_b` that is not an `m_r` multiple, and pooled (`threads > 1`)
+/// variants of each.
+fn shape_sweep() -> Vec<(usize, usize, usize, KernelConfig)> {
+    vec![
+        (48, 26, 8, cfg(8, 2, 16, 4, 7, 1)),  // aligned baseline
+        (45, 26, 8, cfg(8, 2, 16, 4, 7, 1)),  // m % mr != 0
+        (5, 26, 8, cfg(8, 2, 16, 4, 7, 1)),   // m < mr
+        (45, 26, 3, cfg(8, 2, 16, 4, 7, 1)),  // k < kb: single k-block
+        (45, 26, 4, cfg(8, 2, 16, 4, 7, 1)),  // k == kb: single k-block
+        (45, 2, 1, cfg(8, 2, 16, 4, 7, 1)),   // n = 2: one column pair
+        (50, 25, 13, cfg(12, 3, 20, 6, 5, 1)), // mb not an mr multiple
+        (64, 20, 9, cfg(16, 2, 16, 4, 8, 1)), // flagship kernel
+        (45, 26, 8, cfg(8, 2, 16, 4, 7, 3)),  // pooled, m % mr != 0
+        (45, 26, 3, cfg(8, 2, 16, 4, 7, 4)),  // pooled, single k-block
+        (19, 9, 8, cfg(8, 2, 16, 4, 7, 2)),   // pooled, two k-blocks
+    ]
+}
+
+#[test]
+fn fused_equals_staged_equals_naive_bitwise() {
+    for (m, n, k, c) in shape_sweep() {
+        let seq = RotationSequence::random(n, k, (m + n + k) as u64);
+        let base = Matrix::random(m, n, (m * 31 + n) as u64);
+        let mut reference = base.clone();
+        apply_naive(&mut reference, &seq);
+
+        let mut fused_session = RotationPlan::builder()
+            .shape(m, n, k)
+            .config(c)
+            .build_session()
+            .unwrap();
+        let mut staged_session = RotationPlan::builder()
+            .shape(m, n, k)
+            .config(c)
+            .fused(false)
+            .build_session()
+            .unwrap();
+        assert!(fused_session.plan().is_fused());
+        assert!(!staged_session.plan().is_fused());
+
+        let mut a_fused = base.clone();
+        let mut a_staged = base.clone();
+        fused_session.execute(&mut a_fused, &seq).unwrap();
+        staged_session.execute(&mut a_staged, &seq).unwrap();
+        assert_eq!(
+            max_abs_diff(&a_fused, &reference),
+            0.0,
+            "fused vs naive m={m} n={n} k={k} threads={}",
+            c.threads
+        );
+        assert_eq!(
+            max_abs_diff(&a_fused, &a_staged),
+            0.0,
+            "fused vs staged m={m} n={n} k={k} threads={}",
+            c.threads
+        );
+
+        // Ledger invariants: the fused path never runs a copy sweep, the
+        // staged path pays ≥ 4·m·n for its two, and both already sit at
+        // the 2·m·n strided-traffic floor (one read + one write per
+        // element) — the whole saving is the sweeps.
+        let fm = fused_session.last_memops();
+        let sm = staged_session.last_memops();
+        let mn = (m * n) as u64;
+        assert_eq!(fm.sweep_copies, 0, "fused must not sweep");
+        // pack reads m·n + writes ≥ m·n (pad rows included), unpack moves
+        // 2·m·n: the staged pipeline always pays at least 4·m·n.
+        assert!(sm.sweep_copies >= 4 * mn);
+        assert_eq!(fm.strided(), 2 * mn, "fused strided floor");
+        assert_eq!(sm.strided(), 2 * mn, "staged strided floor");
+        assert!(
+            fm.total() + 2 * mn <= sm.total(),
+            "fused must move ≥ 2·m·n fewer doubles (fused {}, staged {})",
+            fm.total(),
+            sm.total()
+        );
+    }
+}
+
+#[test]
+fn fused_inverse_round_trips_and_matches_staged() {
+    for threads in [1usize, 3] {
+        let (m, n, k) = (37, 24, 7);
+        let c = cfg(8, 2, 16, 4, 7, threads);
+        let seq = RotationSequence::random(n, k, 5);
+        let orig = Matrix::random(m, n, 6);
+
+        let mut fused = RotationPlan::builder()
+            .shape(m, n, k)
+            .config(c)
+            .build_session()
+            .unwrap();
+        let mut staged = RotationPlan::builder()
+            .shape(m, n, k)
+            .config(c)
+            .fused(false)
+            .build_session()
+            .unwrap();
+        let mut a_f = orig.clone();
+        let mut a_s = orig.clone();
+        fused.execute(&mut a_f, &seq).unwrap();
+        staged.execute(&mut a_s, &seq).unwrap();
+        fused.execute_inverse(&mut a_f, &seq).unwrap();
+        staged.execute_inverse(&mut a_s, &seq).unwrap();
+        assert_eq!(max_abs_diff(&a_f, &a_s), 0.0, "threads={threads}");
+        assert!(rel_error(&a_f, &orig) < 1e-12);
+    }
+}
+
+#[test]
+fn fused_batch_matches_staged_batch_bitwise() {
+    for threads in [1usize, 4] {
+        let (m, n, k, b) = (45, 22, 6, 4);
+        let c = cfg(8, 2, 16, 4, 7, threads);
+        let seq = RotationSequence::random(n, k, 17);
+        let base: Vec<Matrix> = (0..b).map(|i| Matrix::random(m, n, 60 + i)).collect();
+
+        let mut fused = RotationPlan::builder()
+            .shape(m, n, k)
+            .config(c)
+            .build_session()
+            .unwrap();
+        let mut staged = RotationPlan::builder()
+            .shape(m, n, k)
+            .config(c)
+            .fused(false)
+            .build_session()
+            .unwrap();
+        let mut got_f = base.clone();
+        let mut got_s = base.clone();
+        fused.execute_batch(&mut got_f, &seq).unwrap();
+        staged.execute_batch(&mut got_s, &seq).unwrap();
+        for (f, s) in got_f.iter().zip(&got_s) {
+            assert_eq!(max_abs_diff(f, s), 0.0, "threads={threads}");
+        }
+        // Batch ledgers scale per matrix; still zero sweeps fused.
+        let fm = fused.last_memops();
+        assert_eq!(fm.sweep_copies, 0);
+        assert_eq!(fm.strided(), (2 * m * n * b) as u64);
+        assert_eq!(
+            staged.last_memops().sweep_copies % (b as u64),
+            0,
+            "staged sweeps are a whole multiple of the batch size"
+        );
+    }
+}
+
+#[test]
+fn fused_reflectors_match_staged_reference() {
+    // The plan API is rotation-typed, so the reflector coverage goes
+    // through the kernel layer directly: staged reference driver vs the
+    // fused planned replay, bitwise.
+    for (m, n, k) in [(26, 14, 4), (19, 15, 6), (13, 9, 2)] {
+        let c = cfg(12, 2, 8, 4, 5, 1);
+        let rseq = ReflectorSequence::random(n, k, (m + k) as u64);
+        let base = Matrix::random(m, n, (n + k) as u64);
+        let mut reference = base.clone();
+        apply_reflector_sequence_naive(&mut reference, &rseq);
+
+        let mut staged = base.clone();
+        let mut ws = PanelWorkspace::with_capacity(c.mb.min(m), n, c.mr);
+        apply_kernel_with_workspace(&mut staged, &rseq, &c, &mut ws).unwrap();
+        assert_eq!(max_abs_diff(&staged, &reference), 0.0);
+
+        let mut sp = SeqPlan::new();
+        sp.plan_into(&rseq, &c);
+        let mut fused = base.clone();
+        let mut panel = PackedPanel::with_capacity(c.mb.min(m), n, c.mr);
+        let ld = fused.ld();
+        let ptr = fused.data_mut().as_mut_ptr();
+        let mut ib = 0;
+        while ib < m {
+            let rows = c.mb.min(m - ib);
+            panel.prepare(rows, n);
+            // SAFETY: `fused` is exclusively borrowed; panels cover
+            // disjoint row ranges.
+            unsafe {
+                run_panel_planned_fused::<<ReflectorSequence as OpSequence>::Op>(
+                    &mut panel,
+                    StridedPanel {
+                        src: ptr,
+                        ld,
+                        r0: ib,
+                        rows,
+                    },
+                    &sp,
+                    &c,
+                )
+                .unwrap();
+            }
+            ib += rows;
+        }
+        assert_eq!(
+            max_abs_diff(&fused, &staged),
+            0.0,
+            "reflectors m={m} n={n} k={k}"
+        );
+    }
+}
+
+#[test]
+fn fused_workspace_never_grows_and_buffers_stay_put() {
+    // The fused default's no-growth guarantee: the spill panel is shaped
+    // per execute via `prepare` (no packing), which must reuse the
+    // warm allocation exactly like the staged `pack_from` did.
+    for threads in [1usize, 4] {
+        let (m, n, k) = (64, 20, 4);
+        let mut session = RotationPlan::builder()
+            .shape(m, n, k)
+            .config(cfg(8, 2, 16, 4, 8, threads))
+            .build_session()
+            .unwrap();
+        assert!(session.plan().is_fused());
+        let mut a = Matrix::random(m, n, 2);
+        let cap0 = session.ctx().capacity_doubles();
+        let ptrs0 = session.ctx().packing_ptrs();
+        assert!(cap0 > 0);
+        for seed in 0..4u64 {
+            let seq = RotationSequence::random(n, k, seed);
+            session.execute(&mut a, &seq).unwrap();
+            assert_eq!(session.ctx().capacity_doubles(), cap0, "grew at {seed}");
+            assert_eq!(session.ctx().packing_ptrs(), ptrs0, "moved at {seed}");
+        }
+        let mut batch: Vec<Matrix> = (0..3).map(|i| Matrix::random(m, n, 40 + i)).collect();
+        let seq = RotationSequence::random(n, k, 9);
+        session.execute_batch(&mut batch, &seq).unwrap();
+        session.execute_inverse(&mut a, &seq).unwrap();
+        assert_eq!(session.ctx().capacity_doubles(), cap0);
+        assert_eq!(session.ctx().packing_ptrs(), ptrs0);
+    }
+}
+
+#[test]
+fn plan_rejects_degenerate_columns_for_both_pipelines() {
+    // n < 2 cannot carry a rotation pair; both pipelines refuse at build
+    // time identically.
+    for fused in [true, false] {
+        assert!(RotationPlan::builder()
+            .shape(8, 1, 1)
+            .config(cfg(8, 2, 16, 4, 7, 1))
+            .fused(fused)
+            .build()
+            .is_err());
+    }
+}
