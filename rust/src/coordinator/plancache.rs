@@ -66,6 +66,12 @@ pub struct KeyStats {
 /// [`WorkspacePool`] their executions rent contexts from. At capacity the
 /// least-recently-used key is evicted (in-flight executions keep their
 /// `Arc`; only the cache's reference is dropped).
+///
+/// Every internal lock recovers from poisoning
+/// (`unwrap_or_else(PoisonError::into_inner)`): the critical sections
+/// are bare map/LRU bookkeeping plus single-flight plan builds, none of
+/// which leave partial state behind on unwind, and a long-lived serving
+/// cache must survive one panicked job.
 pub struct PlanCache {
     plans: Mutex<HashMap<PlanKey, CacheEntry>>,
     capacity: usize,
@@ -114,7 +120,7 @@ impl PlanCache {
     /// the tuned config instead. Explicitly overridden configs are never
     /// touched.
     pub fn set_tune_db(&self, db: Arc<TuneDb>, cache: CacheParams) {
-        *self.tuning.lock().expect("plan cache poisoned") = Some((db, cache));
+        *self.tuning.lock().unwrap_or_else(std::sync::PoisonError::into_inner) = Some((db, cache));
     }
 
     /// Swap a job key's config for the tuned one when (a) a TuneDb was
@@ -133,7 +139,7 @@ impl PlanCache {
         // Take the handle and drop the lock before any real work: the
         // plan solves and the DB lookup must not serialize job dispatch.
         let installed = {
-            let guard = self.tuning.lock().expect("plan cache poisoned");
+            let guard = self.tuning.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             guard.as_ref().map(|(db, cache)| (Arc::clone(db), *cache))
         };
         let Some((db, cache)) = installed else {
@@ -161,7 +167,7 @@ impl PlanCache {
     /// set of persistent threads per thread count for the life of the
     /// service.
     pub fn pool_for(&self, threads: usize) -> Arc<WorkerPool> {
-        let mut pools = self.workers.lock().expect("plan cache poisoned");
+        let mut pools = self.workers.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         Arc::clone(
             pools
                 .entry(threads.max(1))
@@ -186,7 +192,7 @@ impl PlanCache {
         // not happen while every other key's lookup is blocked (repeat
         // calls are a memoized Arc clone).
         let worker_pool = (key.config.threads > 1).then(|| self.pool_for(key.config.threads));
-        let mut plans = self.plans.lock().expect("plan cache poisoned");
+        let mut plans = self.plans.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         let tick = self
             .clock
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed)
@@ -220,7 +226,7 @@ impl PlanCache {
                 plans.remove(&victim);
                 self.stats
                     .lock()
-                    .expect("plan cache poisoned")
+                    .unwrap_or_else(std::sync::PoisonError::into_inner)
                     .remove(&victim);
             }
         }
@@ -238,7 +244,7 @@ impl PlanCache {
     /// The cached plan for `key`, if present (observability; does not
     /// build).
     pub fn get(&self, key: &PlanKey) -> Option<Arc<RotationPlan>> {
-        let plans = self.plans.lock().expect("plan cache poisoned");
+        let plans = self.plans.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         plans.get(key).map(|e| Arc::clone(&e.plan))
     }
 
@@ -255,7 +261,7 @@ impl PlanCache {
     }
 
     fn bump_stats(&self, key: &PlanKey, f: impl FnOnce(&mut KeyStats)) {
-        let mut stats = self.stats.lock().expect("plan cache poisoned");
+        let mut stats = self.stats.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         f(stats.entry(*key).or_default());
     }
 
@@ -274,13 +280,13 @@ impl PlanCache {
     /// This key's hit/build/concurrency counters (zeroed default when the
     /// key was never seen).
     pub fn key_stats(&self, key: &PlanKey) -> KeyStats {
-        let stats = self.stats.lock().expect("plan cache poisoned");
+        let stats = self.stats.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         stats.get(key).copied().unwrap_or_default()
     }
 
     /// Number of cached plans (observability).
     pub fn cached_plans(&self) -> usize {
-        let plans = self.plans.lock().expect("plan cache poisoned");
+        let plans = self.plans.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         plans.len()
     }
 
@@ -304,7 +310,7 @@ impl Drop for ExecTracker<'_> {
         // execution was in flight, its stats went with it — resurrecting
         // a zombie entry here would leak one HashMap slot per
         // evicted-while-busy key for the life of the service.
-        let mut stats = self.cache.stats.lock().expect("plan cache poisoned");
+        let mut stats = self.cache.stats.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         if let Some(s) = stats.get_mut(&self.key) {
             s.in_flight = s.in_flight.saturating_sub(1);
         }

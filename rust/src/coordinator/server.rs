@@ -103,19 +103,30 @@ impl Coordinator {
         }
     }
 
-    /// Submit a job; returns a receiver for the result.
+    /// Submit a job; returns a receiver for the result. A coordinator
+    /// whose workers are gone (post-shutdown submit) reports the failure
+    /// through the returned channel instead of panicking the caller.
     pub fn submit(&self, job: Job) -> Receiver<Result<JobResult>> {
         let (rtx, rrx) = channel();
         self.metrics.record_submit();
-        self.tx
-            .send(Message::Work(job, rtx))
-            .expect("coordinator channel closed");
+        if let Err(send_err) = self.tx.send(Message::Work(job, rtx)) {
+            self.metrics.record_failure();
+            // Recover the reply sender from the unsent message so the
+            // caller's receiver yields an error rather than a disconnect.
+            if let Message::Work(_, rtx) = send_err.0 {
+                let _ = rtx.send(Err(anyhow::anyhow!(
+                    "coordinator is shut down: job channel closed"
+                )));
+            }
+        }
         rrx
     }
 
     /// Submit and wait.
     pub fn run(&self, job: Job) -> Result<JobResult> {
-        self.submit(job).recv().expect("worker dropped result")
+        self.submit(job)
+            .recv()
+            .map_err(|_| anyhow::anyhow!("coordinator worker dropped the result channel"))?
     }
 
     /// Current metrics.
@@ -159,7 +170,10 @@ fn worker_loop(
 ) {
     loop {
         let msg = {
-            let guard = rx.lock().expect("poisoned job queue");
+            // Poison recovery: the critical section is a bare `recv()`;
+            // a peer worker that panicked mid-job cannot corrupt the
+            // channel, and one bad job must not wedge the whole service.
+            let guard = rx.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             guard.recv()
         };
         match msg {

@@ -143,7 +143,12 @@ pub fn wave_kernel<Op: PairOp, const MR: usize, const KR: usize, const KRP1: usi
     // compiler keeps them in vector registers unconditionally. Exotic k_r
     // (the Fig 6 sweep) uses the generic circular-slot loop below.
     // MR is a monomorphization constant, so this match folds away.
-    if KR == 1 {
+    // Under Miri the specializations are skipped (SIMD_SPECIALIZATIONS is
+    // const-false): their `get_unchecked` column walks take hours to
+    // interpret, and the generic loop below covers the same schedule with
+    // fully checked indexing — so Miri verifies the shared wave logic at
+    // tractable cost.
+    if SIMD_SPECIALIZATIONS && KR == 1 {
         match MR {
             4 => return wave_kernel_k1::<Op, 1>(data, ld, r0, j0, stream),
             8 => return wave_kernel_k1::<Op, 2>(data, ld, r0, j0, stream),
@@ -154,7 +159,7 @@ pub fn wave_kernel<Op: PairOp, const MR: usize, const KR: usize, const KRP1: usi
             _ => {}
         }
     }
-    if KR == 2 {
+    if SIMD_SPECIALIZATIONS && KR == 2 {
         match MR {
             4 => return wave_kernel_k2::<Op, 1>(data, ld, r0, j0, stream),
             8 => return wave_kernel_k2::<Op, 2>(data, ld, r0, j0, stream),
@@ -246,6 +251,14 @@ pub fn wave_kernel<Op: PairOp, const MR: usize, const KR: usize, const KRP1: usi
         data[base..base + MR].copy_from_slice(&win[s]);
     }
 }
+
+/// Route into the hand-specialized SIMD bodies. Const-false under Miri so
+/// the interpreter runs the checked generic loop instead; the branch folds
+/// away entirely in native builds.
+#[cfg(not(miri))]
+const SIMD_SPECIALIZATIONS: bool = true;
+#[cfg(miri)]
+const SIMD_SPECIALIZATIONS: bool = false;
 
 use std::simd::f64x4;
 
@@ -476,9 +489,14 @@ unsafe fn load_col_io<const MR: usize>(
     if j < load_split {
         col.copy_from_slice(&packed[j * MR..j * MR + MR]);
     } else {
-        let base = sc.src.add(j * sc.ld + sc.r0);
-        for (r, slot) in col.iter_mut().take(sc.live).enumerate() {
-            *slot = *base.add(r);
+        // SAFETY: caller contract — column `j`, rows
+        // `[sc.r0, sc.r0 + sc.live)` are in bounds of the live buffer
+        // behind `sc.src`, and `r < sc.live` here.
+        unsafe {
+            let base = sc.src.add(j * sc.ld + sc.r0);
+            for (r, slot) in col.iter_mut().take(sc.live).enumerate() {
+                *slot = *base.add(r);
+            }
         }
     }
     col
@@ -498,9 +516,14 @@ unsafe fn store_col_io<const MR: usize>(
     store_split: usize,
 ) {
     if j < store_split {
-        let base = sc.src.add(j * sc.ld + sc.r0);
-        for (r, v) in col.iter().take(sc.live).enumerate() {
-            *base.add(r) = *v;
+        // SAFETY: caller contract — column `j`, rows
+        // `[sc.r0, sc.r0 + sc.live)` are in bounds and writable, and
+        // `r < sc.live` here.
+        unsafe {
+            let base = sc.src.add(j * sc.ld + sc.r0);
+            for (r, v) in col.iter().take(sc.live).enumerate() {
+                *base.add(r) = *v;
+            }
         }
     } else {
         packed[j * MR..j * MR + MR].copy_from_slice(col);
@@ -551,12 +574,16 @@ pub unsafe fn wave_kernel_io<Op: PairOp, const MR: usize, const KR: usize, const
     // column leaves slot `t % KRP1`.
     let mut win = [[0.0f64; MR]; KRP1];
     for s in 0..KR {
-        win[s] = load_col_io::<MR>(packed, sc, j0 + s, load_split);
+        // SAFETY: caller contract — the wave schedule touches columns
+        // `[j0, j0 + nwaves + KR)`, all covered by `sc` and `packed`
+        // (bound re-checked by the debug_assert above).
+        win[s] = unsafe { load_col_io::<MR>(packed, sc, j0 + s, load_split) };
     }
     for t in 0..nwaves {
         let phase = t % KRP1;
         let in_slot = (phase + KR) % KRP1;
-        win[in_slot] = load_col_io::<MR>(packed, sc, j0 + t + KR, load_split);
+        // SAFETY: `j0 + t + KR < j0 + nwaves + KR` — in the schedule window.
+        win[in_slot] = unsafe { load_col_io::<MR>(packed, sc, j0 + t + KR, load_split) };
         let sbase = t * KR * Op::WIDTH;
         let wave_ops = &ops[sbase..sbase + KR * Op::WIDTH];
         for u in 0..KR {
@@ -571,13 +598,16 @@ pub unsafe fn wave_kernel_io<Op: PairOp, const MR: usize, const KR: usize, const
             }
         }
         let out = win[phase];
-        store_col_io::<MR>(packed, sc, j0 + t, &out, store_split);
+        // SAFETY: `j0 + t` is in the schedule window (caller contract).
+        unsafe { store_col_io::<MR>(packed, sc, j0 + t, &out, store_split) };
     }
     // Drain the KR carried columns from their final slots.
     for s in 0..KR {
         let slot = (nwaves + s) % KRP1;
         let out = win[slot];
-        store_col_io::<MR>(packed, sc, j0 + nwaves + s, &out, store_split);
+        // SAFETY: `j0 + nwaves + s` is the carried column's final home,
+        // still inside the schedule window `[j0, j0 + nwaves + KR)`.
+        unsafe { store_col_io::<MR>(packed, sc, j0 + nwaves + s, &out, store_split) };
     }
 }
 
@@ -756,6 +786,9 @@ mod tests {
                     r0: 0,
                     live: MR,
                 };
+                // SAFETY: `sc` points at a live `MR x n` matrix with
+                // `r0 + live = MR <= rows`, `packed` holds `MR * n`
+                // doubles, and `stream` was packed for columns `[0, n)`.
                 unsafe {
                     wave_kernel_io::<Givens, MR, 2, 3>(
                         &mut packed,
@@ -808,6 +841,9 @@ mod tests {
             r0: 0,
             live,
         };
+        // SAFETY: `sc` points at a live `live x n` matrix with
+        // `live <= MR` pad lanes zero-filled by the loads, `packed` holds
+        // `MR * n` doubles, and `stream` covers columns `[0, n)`.
         unsafe {
             // All-fresh loads, all-final stores: single-pass strided to
             // strided through the register window.

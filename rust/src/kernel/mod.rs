@@ -478,17 +478,23 @@ pub unsafe fn run_panel_planned_fused<Op: PairOp>(
             rows: (gc * cfg.mr).min(sp.rows - c0 * cfg.mr),
         };
         for (idx, bp) in seqplan.blocks().iter().enumerate() {
-            dispatch_kblock_fused::<Op>(
-                &mut panel.data_mut()[c0 * stride..(c0 + gc) * stride],
-                gc,
-                stride,
-                bp,
-                gsp,
-                idx == 0,
-                idx + 1 == nblocks,
-                cfg.mr,
-                cfg.kr,
-            )?;
+            // SAFETY: caller contract on `sp`, narrowed to this chunk
+            // group: `gsp` covers rows `[sp.r0 + c0·mr, …)` with
+            // `gsp.rows <= sp.rows - c0·mr`, and the panel slice holds
+            // `gc` chunks of `stride` doubles.
+            unsafe {
+                dispatch_kblock_fused::<Op>(
+                    &mut panel.data_mut()[c0 * stride..(c0 + gc) * stride],
+                    gc,
+                    stride,
+                    bp,
+                    gsp,
+                    idx == 0,
+                    idx + 1 == nblocks,
+                    cfg.mr,
+                    cfg.kr,
+                )?;
+            }
         }
         c0 += gc;
     }
@@ -636,15 +642,19 @@ unsafe fn dispatch_kblock_fused<Op: PairOp>(
 ) -> Result<()> {
     macro_rules! case {
         ($mr:literal, $kr:literal, $krp1:literal) => {
-            phases::run_kblock_fused::<Op, $mr, $kr, $krp1>(
-                data,
-                chunks,
-                chunk_stride,
-                plan,
-                sp,
-                first,
-                last,
-            )
+            // SAFETY: caller contract (identical to run_kblock_fused's),
+            // forwarded verbatim to the monomorphized instance.
+            unsafe {
+                phases::run_kblock_fused::<Op, $mr, $kr, $krp1>(
+                    data,
+                    chunks,
+                    chunk_stride,
+                    plan,
+                    sp,
+                    first,
+                    last,
+                )
+            }
         };
     }
     dispatch_sizes!(mr, kr, case);

@@ -401,6 +401,12 @@ pub struct StridedPanel {
 /// only when a layout boundary actually cuts the call's column interval —
 /// otherwise this is exactly [`run_call`], i.e. today's Packed→Packed
 /// code.
+///
+/// # Safety
+/// `sc` must describe live strided storage for this chunk's rows
+/// (`sc.src` valid for reads/writes over rows `[sc.r0, sc.r0 + sc.live)`
+/// of every column `call` touches, no concurrent access), and `data`
+/// must hold the chunk's `MR`-row packed storage for those columns.
 #[inline]
 unsafe fn run_call_fused<Op: PairOp, const MR: usize, const KR: usize, const KRP1: usize>(
     data: &mut [f64],
@@ -414,16 +420,23 @@ unsafe fn run_call_fused<Op: PairOp, const MR: usize, const KR: usize, const KRP
     if load_split > call.col_hi() && store_split <= call.col_lo() {
         run_call::<Op, MR, KR, KRP1>(data, MR, 0, call);
     } else if call.full_group {
-        wave_kernel_io::<Op, MR, KR, KRP1>(
-            data,
-            sc,
-            call.v0 + 1 - KR,
-            &call.stream,
-            load_split,
-            store_split,
-        );
+        // SAFETY: caller contract — `sc`/`data` cover every column of
+        // `call`, whose stream starts at wave `call.v0 + 1 - KR`.
+        unsafe {
+            wave_kernel_io::<Op, MR, KR, KRP1>(
+                data,
+                sc,
+                call.v0 + 1 - KR,
+                &call.stream,
+                load_split,
+                store_split,
+            );
+        }
     } else {
-        wave_kernel_io::<Op, MR, 1, 2>(data, sc, call.v0, &call.stream, load_split, store_split);
+        // SAFETY: caller contract, single-wave remainder group.
+        unsafe {
+            wave_kernel_io::<Op, MR, 1, 2>(data, sc, call.v0, &call.stream, load_split, store_split)
+        };
     }
 }
 
@@ -468,13 +481,18 @@ pub unsafe fn run_kblock_fused<Op: PairOp, const MR: usize, const KR: usize, con
     };
     for call in &plan.startup {
         for c in 0..chunks {
-            run_call_fused::<Op, MR, KR, KRP1>(
-                &mut data[c * chunk_stride..],
-                &chunk_io(c),
-                call,
-                first,
-                last,
-            );
+            // SAFETY: caller contract on `sp` — `chunk_io(c)` covers rows
+            // `[sp.r0 + c·MR, …)` with `live <= MR`, and the chunk's
+            // packed storage starts at `c * chunk_stride`.
+            unsafe {
+                run_call_fused::<Op, MR, KR, KRP1>(
+                    &mut data[c * chunk_stride..],
+                    &chunk_io(c),
+                    call,
+                    first,
+                    last,
+                );
+            }
         }
     }
     // Pipeline: chunk (row) loop outside the subgroup loop (§5.2), same
@@ -485,19 +503,25 @@ pub unsafe fn run_kblock_fused<Op: PairOp, const MR: usize, const KR: usize, con
             let sc = chunk_io(c);
             let panel = &mut data[c * chunk_stride..];
             for call in chunk_calls {
-                run_call_fused::<Op, MR, KR, KRP1>(panel, &sc, call, first, last);
+                // SAFETY: as above — same chunk descriptor and packed
+                // panel, replayed for each pipelined subgroup call.
+                unsafe { run_call_fused::<Op, MR, KR, KRP1>(panel, &sc, call, first, last) };
             }
         }
     }
     for call in &plan.shutdown {
         for c in 0..chunks {
-            run_call_fused::<Op, MR, KR, KRP1>(
-                &mut data[c * chunk_stride..],
-                &chunk_io(c),
-                call,
-                first,
-                last,
-            );
+            // SAFETY: as above — shutdown calls touch the same rows and
+            // columns under the same caller contract.
+            unsafe {
+                run_call_fused::<Op, MR, KR, KRP1>(
+                    &mut data[c * chunk_stride..],
+                    &chunk_io(c),
+                    call,
+                    first,
+                    last,
+                );
+            }
         }
     }
 }
@@ -765,6 +789,9 @@ mod tests {
                 r0: 0,
                 rows: m,
             };
+            // SAFETY: `sp` describes the live `m x n` matrix `fused`
+            // (ld >= m = r0 + rows), accessed by this thread only, and
+            // `packed` holds `chunks` chunks of `stride` doubles.
             unsafe {
                 run_kblock_fused::<Givens, 8, 2, 3>(
                     &mut packed, chunks, stride, &plan, sp, true, true,
@@ -801,6 +828,9 @@ mod tests {
         let mut kplan = KBlockPlan::new();
         for (idx, pb) in [(0usize, 0usize), (1, kb)] {
             plan_kblock_into(&mut kplan, &seq, pb, kb, 2, 4);
+            // SAFETY: `sp` describes the live `m x n` matrix `fused`,
+            // single-threaded here; `packed` holds `chunks * stride`
+            // doubles and persists across both blocks.
             unsafe {
                 run_kblock_fused::<Givens, 8, 2, 3>(
                     &mut packed,

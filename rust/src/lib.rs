@@ -1,4 +1,9 @@
 #![feature(portable_simd)]
+// Every unsafe operation inside an `unsafe fn` must sit in its own
+// `unsafe { }` block with a `// SAFETY:` comment (enforced together with
+// `cargo xtask lint`): the fn-level `unsafe` is a caller contract, not a
+// blanket license for the body.
+#![deny(unsafe_op_in_unsafe_fn)]
 //! # rotseq — communication-efficient application of sequences of planar rotations
 //!
 //! A full-system reproduction of

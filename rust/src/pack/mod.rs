@@ -163,7 +163,11 @@ impl PackedPanel {
             let live = mr.min((r0 + rows).saturating_sub(cr0));
             let base = c * mr * cols;
             for j in 0..cols {
-                let col = std::slice::from_raw_parts(src.add(j * ld + cr0), live);
+                // SAFETY: caller contract — `src` covers `src_rows x cols`
+                // at stride `ld`, and `cr0 + live <= r0 + rows <= src_rows`
+                // (asserted on entry), so the `live` elements at column
+                // `j`, row `cr0` are readable.
+                let col = unsafe { std::slice::from_raw_parts(src.add(j * ld + cr0), live) };
                 dst[base + j * mr..base + j * mr + live].copy_from_slice(col);
                 // Rows live..mr are padding; the buffer is reused, so zero
                 // them explicitly (kernels expect exact zeros there).
@@ -212,7 +216,11 @@ impl PackedPanel {
             let live = self.mr.min(r0 + self.rows - cr0);
             let base = c * self.mr * self.cols;
             for j in 0..self.cols {
-                let col = std::slice::from_raw_parts_mut(dst.add(j * ld + cr0), live);
+                // SAFETY: caller contract — `dst` covers `dst_rows x cols`
+                // at stride `ld`, `cr0 + live <= r0 + self.rows <=
+                // dst_rows` (asserted on entry), and this call holds the
+                // only access to rows `[r0, r0 + self.rows)`.
+                let col = unsafe { std::slice::from_raw_parts_mut(dst.add(j * ld + cr0), live) };
                 col.copy_from_slice(&src[base + j * self.mr..base + j * self.mr + live]);
             }
         }

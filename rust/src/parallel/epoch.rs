@@ -1,0 +1,183 @@
+//! The condvar-epoch dispatch/join protocol of the §7 worker pool,
+//! extracted into a dependency-free, payload-generic module.
+//!
+//! Extraction serves one purpose: the **exact shipping protocol code**
+//! can be model-checked. `rust/loom-model/` includes this file verbatim
+//! (via `#[path]`) and explores every interleaving of
+//! dispatch → work → quiesce under [loom] with `--cfg loom`; the main
+//! crate compiles the same lines against `std::sync`. The two builds
+//! differ only in the import below.
+//!
+//! Protocol (one mutex, two condvars):
+//!
+//! * **dispatch** — the dispatcher queues behind any in-flight epoch
+//!   (`task.is_some() || remaining > 0` on `done`), publishes the payload,
+//!   bumps `epoch`, sets `remaining = workers`, and notifies `work`. It
+//!   then blocks on `done` until `remaining == 0`, retires the payload,
+//!   and notifies `done` again so a queued dispatcher can proceed.
+//! * **worker** — each worker tracks the last epoch it `seen`; it sleeps
+//!   on `work` until `epoch != seen` (or shutdown), copies the payload
+//!   out, runs it outside the lock, and reports via [`EpochGate::complete`]
+//!   — which decrements `remaining` and notifies `done` when it hits zero.
+//!
+//! Invariants the loom model proves and [`EpochGate::complete`] asserts:
+//! a payload is only ever observed under the epoch it was published for
+//! (`complete` panics on a stale epoch — the raw pointers a payload
+//! carries must never outlive their dispatch), every worker observes
+//! every epoch exactly once, and no wakeup is lost across
+//! publish/notify/wait races.
+//!
+//! [loom]: https://docs.rs/loom
+
+#[cfg(loom)]
+use loom::sync::{Condvar, Mutex, MutexGuard};
+#[cfg(not(loom))]
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+struct GateState<P, E> {
+    /// Monotonic dispatch counter; `0` = nothing ever published.
+    epoch: u64,
+    /// The live payload (`Some` exactly while an epoch is in flight).
+    task: Option<P>,
+    /// Workers that have not yet completed the live epoch.
+    remaining: usize,
+    /// First error reported against the live epoch.
+    error: Option<E>,
+    shutdown: bool,
+}
+
+/// The dispatch/epoch/join gate. `P` is the published payload (copied out
+/// by every worker), `E` the worker error type.
+pub struct EpochGate<P, E> {
+    state: Mutex<GateState<P, E>>,
+    /// Signaled when a new epoch (or shutdown) is published.
+    work: Condvar,
+    /// Signaled when the last worker of an epoch finishes, and when the
+    /// dispatcher retires a payload (so queued dispatchers can proceed).
+    done: Condvar,
+}
+
+impl<P: Copy, E> Default for EpochGate<P, E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<P: Copy, E> EpochGate<P, E> {
+    pub fn new() -> Self {
+        Self {
+            state: Mutex::new(GateState {
+                epoch: 0,
+                task: None,
+                remaining: 0,
+                error: None,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        }
+    }
+
+    /// Poison recovery: protocol state is transitioned atomically under
+    /// the lock (no multi-step critical section leaves it torn), and a
+    /// worker panic is already reported through `complete` — propagating
+    /// poison would deadlock the surviving threads instead.
+    fn lock(&self) -> MutexGuard<'_, GateState<P, E>> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn wait_work<'a>(&self, g: MutexGuard<'a, GateState<P, E>>) -> MutexGuard<'a, GateState<P, E>> {
+        self.work.wait(g).unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn wait_done<'a>(&self, g: MutexGuard<'a, GateState<P, E>>) -> MutexGuard<'a, GateState<P, E>> {
+        self.done.wait(g).unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Dispatch one epoch: wait for any in-flight epoch to retire, publish
+    /// `make(epoch)` for `workers` workers, and block until every worker
+    /// has completed it. Returns the first worker error. `make` runs under
+    /// the gate lock so the payload's epoch stamp and its publication are
+    /// one atomic step even with concurrent dispatchers queued.
+    pub fn dispatch(&self, workers: usize, make: impl FnOnce(u64) -> P) -> Result<(), E> {
+        let mut st = self.lock();
+        // Another dispatcher may be mid-epoch on a shared gate: wait our
+        // turn (task retired AND all completions in).
+        while st.task.is_some() || st.remaining > 0 {
+            st = self.wait_done(st);
+        }
+        st.epoch = st.epoch.wrapping_add(1);
+        st.task = Some(make(st.epoch));
+        st.remaining = workers;
+        st.error = None;
+        self.work.notify_all();
+        while st.remaining > 0 {
+            st = self.wait_done(st);
+        }
+        st.task = None;
+        let outcome = st.error.take();
+        drop(st);
+        // Wake any dispatcher queued behind us.
+        self.done.notify_all();
+        match outcome {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Worker side: block until an epoch newer than `*seen` is published
+    /// (updating `*seen` and returning its payload) or the gate shuts
+    /// down (`None`).
+    pub fn next_task(&self, seen: &mut u64) -> Option<P> {
+        let mut st = self.lock();
+        loop {
+            if st.shutdown {
+                return None;
+            }
+            if st.epoch != *seen {
+                if let Some(task) = st.task {
+                    *seen = st.epoch;
+                    return Some(task);
+                }
+                // Unreachable by the protocol (a payload is only retired
+                // after every worker completed — and therefore observed —
+                // its epoch), but never hand out a stale epoch number.
+            }
+            st = self.wait_work(st);
+        }
+    }
+
+    /// Worker side: report completion of the epoch last returned by
+    /// [`Self::next_task`], with the worker's error if any (first one
+    /// wins).
+    ///
+    /// Panics if `epoch` is not the live epoch: a completion — and hence
+    /// the payload copy (with any raw pointers inside it) the worker is
+    /// retiring — must never outlive its dispatch epoch.
+    pub fn complete(&self, epoch: u64, error: Option<E>) {
+        let mut st = self.lock();
+        assert!(
+            epoch == st.epoch && st.remaining > 0,
+            "epoch {epoch} completion outlived its dispatch epoch (live: {}, remaining: {})",
+            st.epoch,
+            st.remaining
+        );
+        if let Some(e) = error {
+            if st.error.is_none() {
+                st.error = Some(e);
+            }
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Tell every worker (current and future callers of
+    /// [`Self::next_task`]) to exit.
+    pub fn shutdown(&self) {
+        let mut st = self.lock();
+        st.shutdown = true;
+        self.work.notify_all();
+    }
+}

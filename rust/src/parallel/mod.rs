@@ -9,7 +9,9 @@
 //! Execution goes through a persistent [`WorkerPool`] ([`pool`]): threads
 //! are spawned once (per plan, or shared across plans via the
 //! coordinator), and each apply is a condvar handshake — zero per-call
-//! allocation, zero per-call spawn. [`apply_parallel`] is the one-shot
+//! allocation, zero per-call spawn. The handshake itself is the
+//! dependency-free [`epoch`] module, model-checked under loom by the
+//! standalone `rust/loom-model/` crate. [`apply_parallel`] is the one-shot
 //! shim over that path; [`apply_parallel_packed`] is the pre-packed
 //! (`rs_kernel_v2`) measurement harness.
 //!
@@ -19,6 +21,7 @@
 //! real scheduler and pool are exercised for correctness under any thread
 //! count.
 
+pub mod epoch;
 pub mod pool;
 pub mod speedup_model;
 

@@ -21,10 +21,17 @@
 //!   ranges are disjoint, so the only synchronization is the join — the
 //!   §7 property that gives the paper its near-linear scaling.
 //!
+//! The dispatch/epoch/join handshake itself lives in
+//! [`super::epoch::EpochGate`], a dependency-free module that
+//! `rust/loom-model/` model-checks under loom; this file only decides
+//! *what* is published (the [`Task`] descriptor and its [`SendPtr`]
+//! fields) and what each worker does with it.
+//!
 //! One pool can be shared by many plans (the coordinator keys pools by
 //! thread count); concurrent dispatches are serialized at the epoch
 //! hand-off.
 
+use super::epoch::EpochGate;
 use crate::blocking::KernelConfig;
 use crate::kernel::{
     run_panel_planned, run_panel_planned_fused, PanelWorkspace, SeqPlan, StridedPanel,
@@ -33,7 +40,7 @@ use crate::matrix::Matrix;
 use crate::rot::PairOp;
 use anyhow::{anyhow, ensure, Result};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 /// Raw view of a column-major matrix (element `(i, j)` at
@@ -81,46 +88,114 @@ impl MatView {
     }
 }
 
+/// A `Send`able shared-read pointer into a dispatcher-owned slice.
+///
+/// This is the *only* way immutable borrows cross the pool's thread
+/// boundary, so the aliasing argument lives here instead of on a blanket
+/// `unsafe impl Send for Task`.
+struct SendPtr<T>(*const T);
+
+// SAFETY: the epoch-handshake aliasing argument. A SendPtr is built from
+// a live `&[T]`/`&T` in `WorkerPool::run_planned`, published under the
+// gate mutex as part of a Task, and only dereferenced by workers between
+// that publication and their `EpochGate::complete` call for the same
+// epoch. `run_planned` does not return until every worker has completed
+// the epoch, so the source borrow strictly outlives every dereference;
+// the data is never written during the dispatch, so shared reads from
+// many threads are benign. `EpochGate::complete` panics on a stale epoch,
+// turning any protocol violation (a pointer outliving its dispatch) into
+// an immediate, attributable failure instead of a silent use-after-free.
+unsafe impl<T> Send for SendPtr<T> {}
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    fn new(p: *const T) -> Self {
+        Self(p)
+    }
+
+    /// Shared reference to element `i` of the published slice.
+    ///
+    /// # Safety
+    ///
+    /// `i` must be in bounds of the slice this pointer was built from, and
+    /// the call must happen inside the dispatch epoch that published it
+    /// (i.e. before the worker's `complete` for that epoch).
+    unsafe fn index(&self, i: usize) -> &T {
+        // SAFETY: in bounds and epoch-live per this fn's contract; the
+        // source slice is not mutated during the dispatch.
+        unsafe { &*self.0.add(i) }
+    }
+}
+
+/// A `Send`able exclusive pointer into a dispatcher-owned slice, indexed
+/// disjointly per worker. Counterpart of [`SendPtr`] for the per-worker
+/// workspace.
+struct SendPtrMut<T>(*mut T);
+
+// SAFETY: same epoch-handshake argument as SendPtr, plus disjointness:
+// the pointed-to slice is exclusively borrowed by `run_planned` for the
+// whole dispatch, and worker `w` only ever forms `&mut` to element `w`
+// (one element per worker, checked against `nparts`), so no two threads
+// alias the same element.
+unsafe impl<T> Send for SendPtrMut<T> {}
+
+impl<T> Clone for SendPtrMut<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtrMut<T> {}
+
+impl<T> SendPtrMut<T> {
+    fn new(p: *mut T) -> Self {
+        Self(p)
+    }
+
+    /// Raw pointer to element `i` of the published slice; the caller
+    /// forms the `&mut` (and owns the exclusivity argument) at the use
+    /// site.
+    ///
+    /// # Safety
+    ///
+    /// `i` must be in bounds of the slice this pointer was built from.
+    unsafe fn at(&self, i: usize) -> *mut T {
+        // SAFETY: in bounds per this fn's contract, so the offset stays
+        // inside the source allocation.
+        unsafe { self.0.add(i) }
+    }
+}
+
 /// Monomorphized worker entry: runs worker `w`'s share of the task.
 type TaskFn = fn(&Task, usize) -> Result<()>;
 
-/// Everything a worker needs for one dispatch, as raw parts. Published
-/// under the pool mutex, copied out by each worker, and guaranteed valid
-/// until the dispatcher observes completion.
+/// Everything a worker needs for one dispatch. Published under the gate
+/// mutex, copied out by each worker, and guaranteed valid until the
+/// dispatcher observes completion. `Send` is derived: every pointer field
+/// is a [`SendPtr`]/[`SendPtrMut`] whose `Send` impl documents the
+/// epoch-handshake argument.
 #[derive(Clone, Copy)]
 struct Task {
     run: TaskFn,
-    mats: *const MatView,
+    mats: SendPtr<MatView>,
     nmats: usize,
-    parts: *const (usize, usize),
+    parts: SendPtr<(usize, usize)>,
     nparts: usize,
-    units: *mut PanelWorkspace,
-    seqplan: *const SeqPlan,
+    units: SendPtrMut<PanelWorkspace>,
+    seqplan: SendPtr<SeqPlan>,
     cfg: KernelConfig,
     /// Fused first-touch pack / last-touch unpack (the plan default) vs
     /// the staged pack → replay → unpack reference path.
     fused: bool,
-}
-
-// SAFETY: see the dispatch protocol above — all pointers outlive the
-// dispatch, workers index disjoint units and disjoint matrix rows.
-unsafe impl Send for Task {}
-
-struct State {
+    /// The gate epoch this task was published under. Workers assert it
+    /// against the epoch they observed, and `EpochGate::complete` asserts
+    /// it is still live when they retire it.
     epoch: u64,
-    task: Option<Task>,
-    remaining: usize,
-    error: Option<anyhow::Error>,
-    shutdown: bool,
-}
-
-struct Shared {
-    state: Mutex<State>,
-    /// Signaled when a new epoch (or shutdown) is published.
-    work: Condvar,
-    /// Signaled when the last worker of an epoch finishes, and when the
-    /// dispatcher retires a task (so queued dispatchers can proceed).
-    done: Condvar,
 }
 
 /// A set of long-lived worker threads executing pre-planned §7 row-parallel
@@ -128,34 +203,24 @@ struct Shared {
 /// contexts/plans via [`crate::plan::PlanBuilder::pool`] and
 /// [`crate::coordinator::PlanCache`]); dropped pools join their threads.
 pub struct WorkerPool {
-    shared: Arc<Shared>,
+    gate: Arc<EpochGate<Task, anyhow::Error>>,
     handles: Vec<JoinHandle<()>>,
 }
 
 impl WorkerPool {
     /// Spawn `workers` persistent threads (at least one).
     pub fn new(workers: usize) -> Self {
-        let shared = Arc::new(Shared {
-            state: Mutex::new(State {
-                epoch: 0,
-                task: None,
-                remaining: 0,
-                error: None,
-                shutdown: false,
-            }),
-            work: Condvar::new(),
-            done: Condvar::new(),
-        });
+        let gate = Arc::new(EpochGate::new());
         let handles = (0..workers.max(1))
             .map(|w| {
-                let shared = Arc::clone(&shared);
+                let gate = Arc::clone(&gate);
                 std::thread::Builder::new()
                     .name(format!("rotseq-pool-{w}"))
-                    .spawn(move || worker_loop(&shared, w))
+                    .spawn(move || worker_loop(&gate, w))
                     .expect("spawn pool worker")
             })
             .collect();
-        Self { shared, handles }
+        Self { gate, handles }
     }
 
     /// Number of persistent worker threads.
@@ -189,88 +254,49 @@ impl WorkerPool {
         if mats.is_empty() || parts.is_empty() {
             return Ok(());
         }
-        let task = Task {
+        // The borrows captured here stay alive across the whole dispatch:
+        // `dispatch` blocks until every worker completed the epoch, which
+        // is what makes the SendPtr Send impls sound.
+        self.gate.dispatch(self.handles.len(), |epoch| Task {
             run: run_chunk::<Op>,
-            mats: mats.as_ptr(),
+            mats: SendPtr::new(mats.as_ptr()),
             nmats: mats.len(),
-            parts: parts.as_ptr(),
+            parts: SendPtr::new(parts.as_ptr()),
             nparts: parts.len(),
-            units: units.as_mut_ptr(),
-            seqplan: seqplan as *const SeqPlan,
+            units: SendPtrMut::new(units.as_mut_ptr()),
+            seqplan: SendPtr::new(seqplan),
             cfg: *cfg,
             fused,
-        };
-        let mut st = self.shared.state.lock().expect("pool state poisoned");
-        // Another plan may be mid-dispatch on a shared pool: wait our turn.
-        while st.task.is_some() || st.remaining > 0 {
-            st = self.shared.done.wait(st).expect("pool state poisoned");
-        }
-        st.task = Some(task);
-        st.epoch += 1;
-        st.remaining = self.handles.len();
-        st.error = None;
-        self.shared.work.notify_all();
-        while st.remaining > 0 {
-            st = self.shared.done.wait(st).expect("pool state poisoned");
-        }
-        st.task = None;
-        let outcome = st.error.take();
-        drop(st);
-        // Wake any dispatcher queued behind us.
-        self.shared.done.notify_all();
-        match outcome {
-            Some(e) => Err(e),
-            None => Ok(()),
-        }
+            epoch,
+        })
     }
 }
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        {
-            let mut st = self.shared.state.lock().expect("pool state poisoned");
-            st.shutdown = true;
-            self.shared.work.notify_all();
-        }
+        self.gate.shutdown();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
-fn worker_loop(shared: &Shared, w: usize) {
+fn worker_loop(gate: &EpochGate<Task, anyhow::Error>, w: usize) {
     let mut seen = 0u64;
-    loop {
-        let task = {
-            let mut st = shared.state.lock().expect("pool state poisoned");
-            loop {
-                if st.shutdown {
-                    return;
-                }
-                if st.epoch != seen {
-                    break;
-                }
-                st = shared.work.wait(st).expect("pool state poisoned");
-            }
-            seen = st.epoch;
-            st.task.expect("live epoch carries a task")
-        };
+    while let Some(task) = gate.next_task(&mut seen) {
+        // Regression guard for the SendPtr contract: the task we are about
+        // to dereference must carry the stamp of the epoch we observed.
+        assert_eq!(
+            task.epoch, seen,
+            "pool worker {w}: task stamp outlived its dispatch epoch"
+        );
         let result = if w < task.nparts {
             catch_unwind(AssertUnwindSafe(|| (task.run)(&task, w)))
                 .unwrap_or_else(|_| Err(anyhow!("pool worker {w} panicked")))
         } else {
             Ok(())
         };
-        let mut st = shared.state.lock().expect("pool state poisoned");
-        if let Err(e) = result {
-            if st.error.is_none() {
-                st.error = Some(e);
-            }
-        }
-        st.remaining -= 1;
-        if st.remaining == 0 {
-            shared.done.notify_all();
-        }
+        gate.complete(seen, result.err());
     }
 }
 
@@ -279,19 +305,28 @@ fn worker_loop(shared: &Shared, w: usize) {
 /// staged (pack → replay the shared streams → unpack). Monomorphized per
 /// op type at the dispatch site.
 fn run_chunk<Op: PairOp>(t: &Task, w: usize) -> Result<()> {
-    // SAFETY: the dispatch protocol guarantees every pointer is live until
-    // the dispatcher observes completion; `w < nparts == units.len()`, each
-    // worker takes a distinct unit, and the `parts` row ranges are disjoint
-    // so concurrent packing/fused passes touch disjoint elements of each
-    // matrix.
-    unsafe {
-        let (r0, rows) = *t.parts.add(w);
-        let unit = &mut *t.units.add(w);
-        let sp = &*t.seqplan;
-        for b in 0..t.nmats {
-            let mv = *t.mats.add(b);
-            if t.fused {
-                unit.panel.prepare(rows, mv.cols);
+    // SAFETY: `w < t.nparts == units.len()` (checked by the caller in
+    // `worker_loop` against the `run_planned` ensure), and we are inside
+    // the dispatch epoch that published these pointers.
+    let (r0, rows) = unsafe { *t.parts.index(w) };
+    // SAFETY: in bounds as above; worker `w` is the only thread that forms
+    // a reference to unit `w`, and the dispatcher's exclusive borrow of the
+    // units slice is live for the whole epoch.
+    let unit = unsafe { &mut *t.units.at(w) };
+    // SAFETY: `seqplan` points at a single epoch-live SeqPlan that no
+    // thread mutates during the dispatch.
+    let sp = unsafe { t.seqplan.index(0) };
+    for b in 0..t.nmats {
+        // SAFETY: `b < t.nmats == mats.len()`; the views are read-only
+        // shape + pointer descriptors.
+        let mv = unsafe { *t.mats.index(b) };
+        if t.fused {
+            unit.panel.prepare(rows, mv.cols);
+            // SAFETY: `mv` describes a matrix exclusively borrowed by the
+            // dispatcher for this epoch; rows `[r0, r0+rows)` belong to
+            // this worker alone (disjoint §7 partition), and the strided
+            // view stays in bounds (`r0 + rows <= mv.rows <= mv.ld`).
+            unsafe {
                 run_panel_planned_fused::<Op>(
                     &mut unit.panel,
                     StridedPanel {
@@ -302,13 +337,19 @@ fn run_chunk<Op: PairOp>(t: &Task, w: usize) -> Result<()> {
                     },
                     sp,
                     &t.cfg,
-                )?;
-            } else {
+                )
+            }?;
+        } else {
+            // SAFETY: same disjoint-rows/in-bounds argument as the fused
+            // branch — pack reads and unpack writes touch only this
+            // worker's `[r0, r0+rows)` rows of the epoch-live matrix.
+            unsafe {
                 unit.panel
-                    .pack_from_raw(mv.data, mv.ld, mv.rows, r0, rows, mv.cols);
-                run_panel_planned::<Op>(&mut unit.panel, sp, &t.cfg)?;
-                unit.panel.unpack_to_raw(mv.data, mv.ld, mv.rows, r0);
-            }
+                    .pack_from_raw(mv.data, mv.ld, mv.rows, r0, rows, mv.cols)
+            };
+            run_panel_planned::<Op>(&mut unit.panel, sp, &t.cfg)?;
+            // SAFETY: as above.
+            unsafe { unit.panel.unpack_to_raw(mv.data, mv.ld, mv.rows, r0) };
         }
     }
     Ok(())
@@ -452,5 +493,49 @@ mod tests {
         )
         .unwrap();
         assert_eq!(max_abs_diff(&a, &expected), 0.0);
+    }
+
+    #[test]
+    fn pool_surfaces_worker_errors_without_poisoning() {
+        // A failing dispatch (partition wider than the pool) must leave the
+        // pool usable: the next well-formed dispatch still runs.
+        let c = cfg(2);
+        let (parts, mut units) = setup(40, 12, &c);
+        let pool = WorkerPool::new(c.threads);
+        let mut sp = SeqPlan::new();
+        let seq = RotationSequence::random(12, 3, 5);
+        sp.plan_into(&seq, &c);
+
+        let wide = cfg(4);
+        let (wide_parts, mut wide_units) = setup(40, 12, &wide);
+        let mut a = Matrix::random(40, 12, 2);
+        {
+            let views = [MatView::of(&mut a)];
+            assert!(pool
+                .run_planned::<Givens>(&views, &wide_parts, &mut wide_units, &sp, &wide, true)
+                .is_err());
+        }
+
+        let mut expected = a.clone();
+        apply_naive(&mut expected, &seq);
+        let views = [MatView::of(&mut a)];
+        pool.run_planned::<Givens>(&views, &parts, &mut units, &sp, &c, true)
+            .unwrap();
+        assert_eq!(max_abs_diff(&a, &expected), 0.0);
+    }
+
+    /// Regression test for the SendPtr epoch contract: retiring a task
+    /// under a stale epoch stamp — i.e. a pointer payload outliving its
+    /// dispatch — must abort loudly, not silently dereference.
+    #[test]
+    #[should_panic(expected = "outlived its dispatch epoch")]
+    fn stale_epoch_completion_is_rejected() {
+        let gate: EpochGate<(), anyhow::Error> = EpochGate::new();
+        // Dispatch an epoch with zero workers: it completes immediately
+        // and the payload is retired.
+        gate.dispatch(0, |_| ()).unwrap();
+        // A completion arriving for the already-retired epoch 1 is a
+        // use-after-dispatch; the gate must panic.
+        gate.complete(1, None);
     }
 }

@@ -77,6 +77,11 @@ pub enum Error {
         /// What the context was built for.
         ctx: WorkspaceSig,
     },
+    /// A [`super::Session`] was used after its context was surrendered
+    /// (only reachable if a panic unwound mid-drop and the session was
+    /// somehow revisited). The old accessor aborted with
+    /// `expect("session context present")`.
+    SessionContextUnavailable,
 }
 
 impl std::fmt::Display for Error {
@@ -86,6 +91,9 @@ impl std::fmt::Display for Error {
                 f,
                 "workspace mismatch: plan needs [{plan}] but the ExecCtx was built for [{ctx}]"
             ),
+            Error::SessionContextUnavailable => {
+                write!(f, "session context already surrendered (mid-drop use)")
+            }
         }
     }
 }
@@ -285,6 +293,16 @@ impl WorkspacePool {
         Self::default()
     }
 
+    /// Lock the shelves, recovering from poisoning: every critical
+    /// section is a bare pop/push on plain collections, so a panicked
+    /// renter cannot leave a shelf torn — and a context pool that panics
+    /// on rent would take the whole serving process down with it.
+    fn shelves(&self) -> std::sync::MutexGuard<'_, HashMap<WorkspaceSig, Vec<ExecCtx>>> {
+        self.shelves
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     /// A pool holding at most `max_pooled` idle contexts across all
     /// signatures (extra give-backs are dropped, never an error).
     pub fn with_capacity(max_pooled: usize) -> Self {
@@ -304,7 +322,7 @@ impl WorkspacePool {
     pub fn rent(&self, plan: &RotationPlan) -> ExecCtx {
         let sig = plan.workspace_sig();
         let recycled = {
-            let mut shelves = self.shelves.lock().expect("workspace pool poisoned");
+            let mut shelves = self.shelves();
             shelves.get_mut(&sig).and_then(Vec::pop)
         };
         match recycled {
@@ -324,7 +342,7 @@ impl WorkspacePool {
     /// At capacity the context is dropped (steady-state traffic never hits
     /// this; it only bounds memory under shape churn).
     pub fn give_back(&self, ctx: ExecCtx) {
-        let mut shelves = self.shelves.lock().expect("workspace pool poisoned");
+        let mut shelves = self.shelves();
         let total: usize = shelves.values().map(Vec::len).sum();
         if total >= self.max_pooled {
             return;
@@ -334,7 +352,7 @@ impl WorkspacePool {
 
     /// Idle contexts currently shelved (observability).
     pub fn pooled(&self) -> usize {
-        let shelves = self.shelves.lock().expect("workspace pool poisoned");
+        let shelves = self.shelves();
         shelves.values().map(Vec::len).sum()
     }
 

@@ -1330,20 +1330,20 @@ mod tests {
             .unwrap();
         let mut a = Matrix::random(m, n, 1);
 
-        let cap0 = session.ctx().capacity_doubles();
-        let ptrs0 = session.ctx().packing_ptrs();
+        let cap0 = session.ctx().unwrap().capacity_doubles();
+        let ptrs0 = session.ctx().unwrap().packing_ptrs();
         assert!(cap0 > 0);
 
         for seed in 0..6u64 {
             let seq = RotationSequence::random(n, k, seed);
             session.execute(&mut a, &seq).unwrap();
             assert_eq!(
-                session.ctx().capacity_doubles(),
+                session.ctx().unwrap().capacity_doubles(),
                 cap0,
                 "workspace grew on execute {seed}"
             );
             assert_eq!(
-                session.ctx().packing_ptrs(),
+                session.ctx().unwrap().packing_ptrs(),
                 ptrs0,
                 "packing buffer moved on execute {seed}"
             );
@@ -1351,8 +1351,8 @@ mod tests {
         // Inverse executes share the same context too.
         let seq = RotationSequence::random(n, k, 99);
         session.execute_inverse(&mut a, &seq).unwrap();
-        assert_eq!(session.ctx().capacity_doubles(), cap0);
-        assert_eq!(session.ctx().packing_ptrs(), ptrs0);
+        assert_eq!(session.ctx().unwrap().capacity_doubles(), cap0);
+        assert_eq!(session.ctx().unwrap().packing_ptrs(), ptrs0);
     }
 
     #[test]
@@ -1366,26 +1366,26 @@ mod tests {
             .build_session()
             .unwrap();
         let mut a = Matrix::random(m, n, 2);
-        let cap0 = session.ctx().capacity_doubles();
-        let ptrs0 = session.ctx().packing_ptrs();
+        let cap0 = session.ctx().unwrap().capacity_doubles();
+        let ptrs0 = session.ctx().unwrap().packing_ptrs();
         assert_eq!(ptrs0.len(), 4, "one packing buffer per worker");
         for seed in 0..4u64 {
             let seq = RotationSequence::random(n, k, seed);
             session.execute(&mut a, &seq).unwrap();
-            assert_eq!(session.ctx().capacity_doubles(), cap0);
-            assert_eq!(session.ctx().packing_ptrs(), ptrs0);
+            assert_eq!(session.ctx().unwrap().capacity_doubles(), cap0);
+            assert_eq!(session.ctx().unwrap().packing_ptrs(), ptrs0);
         }
         let mut batch: Vec<Matrix> = (0..3).map(|i| Matrix::random(m, n, 40 + i)).collect();
         for seed in 4..7u64 {
             let seq = RotationSequence::random(n, k, seed);
             session.execute_batch(&mut batch, &seq).unwrap();
-            assert_eq!(session.ctx().capacity_doubles(), cap0);
-            assert_eq!(session.ctx().packing_ptrs(), ptrs0);
+            assert_eq!(session.ctx().unwrap().capacity_doubles(), cap0);
+            assert_eq!(session.ctx().unwrap().packing_ptrs(), ptrs0);
         }
         let seq = RotationSequence::random(n, k, 99);
         session.execute_inverse(&mut a, &seq).unwrap();
-        assert_eq!(session.ctx().capacity_doubles(), cap0);
-        assert_eq!(session.ctx().packing_ptrs(), ptrs0);
+        assert_eq!(session.ctx().unwrap().capacity_doubles(), cap0);
+        assert_eq!(session.ctx().unwrap().packing_ptrs(), ptrs0);
     }
 
     #[test]
@@ -1550,12 +1550,12 @@ mod tests {
         // Warm once (the GEMM scratch sizes itself on first use) …
         let seq = RotationSequence::random(n, k, 0);
         session.execute(&mut a, &seq).unwrap();
-        let cap = session.ctx().capacity_doubles();
+        let cap = session.ctx().unwrap().capacity_doubles();
         // … then stays fixed.
         for seed in 1..5u64 {
             let seq = RotationSequence::random(n, k, seed);
             session.execute(&mut a, &seq).unwrap();
-            assert_eq!(session.ctx().capacity_doubles(), cap);
+            assert_eq!(session.ctx().unwrap().capacity_doubles(), cap);
         }
     }
 }

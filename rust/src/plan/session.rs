@@ -92,35 +92,50 @@ impl Session {
     }
 
     /// Shorthand for [`ExecCtx::last_memops`]: the element-move ledger of
-    /// this session's most recent kernel execute.
+    /// this session's most recent kernel execute. A zero ledger when the
+    /// context is gone (only transiently possible mid-drop).
     pub fn last_memops(&self) -> crate::kernel::MemopCounts {
-        self.ctx().last_memops()
+        self.ctx
+            .as_ref()
+            .map(ExecCtx::last_memops)
+            .unwrap_or_default()
     }
 
     /// This session's context (introspection: the no-growth suites watch
     /// [`ExecCtx::capacity_doubles`] and [`ExecCtx::packing_ptrs`]).
-    pub fn ctx(&self) -> &ExecCtx {
-        self.ctx.as_ref().expect("session context present")
+    /// [`super::Error::SessionContextUnavailable`] when the context has
+    /// already been surrendered — reachable only mid-drop, but a typed
+    /// error beats aborting a serving process.
+    pub fn ctx(&self) -> Result<&ExecCtx> {
+        self.ctx
+            .as_ref()
+            .ok_or_else(|| super::Error::SessionContextUnavailable.into())
     }
 
     /// Apply `seq` to `a` in the plan's direction (see
     /// [`RotationPlan::execute`]).
     pub fn execute(&mut self, a: &mut Matrix, seq: &RotationSequence) -> Result<()> {
-        let ctx = self.ctx.as_mut().expect("session context present");
-        self.plan.execute(ctx, a, seq)
+        match self.ctx.as_mut() {
+            Some(ctx) => self.plan.execute(ctx, a, seq),
+            None => Err(super::Error::SessionContextUnavailable.into()),
+        }
     }
 
     /// Undo an [`Self::execute`] (see [`RotationPlan::execute_inverse`]).
     pub fn execute_inverse(&mut self, a: &mut Matrix, seq: &RotationSequence) -> Result<()> {
-        let ctx = self.ctx.as_mut().expect("session context present");
-        self.plan.execute_inverse(ctx, a, seq)
+        match self.ctx.as_mut() {
+            Some(ctx) => self.plan.execute_inverse(ctx, a, seq),
+            None => Err(super::Error::SessionContextUnavailable.into()),
+        }
     }
 
     /// Apply one sequence set to many same-shaped matrices (see
     /// [`RotationPlan::execute_batch`]).
     pub fn execute_batch(&mut self, mats: &mut [Matrix], seq: &RotationSequence) -> Result<()> {
-        let ctx = self.ctx.as_mut().expect("session context present");
-        self.plan.execute_batch(ctx, mats, seq)
+        match self.ctx.as_mut() {
+            Some(ctx) => self.plan.execute_batch(ctx, mats, seq),
+            None => Err(super::Error::SessionContextUnavailable.into()),
+        }
     }
 
     /// Batch counterpart of [`Self::execute_inverse`].
@@ -129,8 +144,10 @@ impl Session {
         mats: &mut [Matrix],
         seq: &RotationSequence,
     ) -> Result<()> {
-        let ctx = self.ctx.as_mut().expect("session context present");
-        self.plan.execute_batch_inverse(ctx, mats, seq)
+        match self.ctx.as_mut() {
+            Some(ctx) => self.plan.execute_batch_inverse(ctx, mats, seq),
+            None => Err(super::Error::SessionContextUnavailable.into()),
+        }
     }
 }
 

@@ -120,9 +120,19 @@ impl TuneDb {
         self.path.as_deref()
     }
 
+    /// Lock the entry map, recovering from poisoning: every critical
+    /// section here is a single plain-old-data map operation, so a
+    /// panicked peer cannot leave the map torn — aborting the serve loop
+    /// over a stale poison flag would be strictly worse.
+    fn entries(&self) -> std::sync::MutexGuard<'_, BTreeMap<TuneKey, TunedRecord>> {
+        self.entries
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     /// Look up the tuned record for a key.
     pub fn get(&self, key: &TuneKey) -> Option<TunedRecord> {
-        self.entries.lock().expect("tunedb poisoned").get(key).copied()
+        self.entries().get(key).copied()
     }
 
     /// Insert or replace a record. The stored config's `threads` is
@@ -131,12 +141,12 @@ impl TuneDb {
     /// never read back differently than it was written.
     pub fn put(&self, key: TuneKey, mut record: TunedRecord) {
         record.config.threads = key.threads;
-        self.entries.lock().expect("tunedb poisoned").insert(key, record);
+        self.entries().insert(key, record);
     }
 
     /// Number of stored records.
     pub fn len(&self) -> usize {
-        self.entries.lock().expect("tunedb poisoned").len()
+        self.entries().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -145,7 +155,7 @@ impl TuneDb {
 
     /// Serialize the whole database (sorted keys: deterministic bytes).
     pub fn to_json_string(&self) -> String {
-        let entries = self.entries.lock().expect("tunedb poisoned");
+        let entries = self.entries();
         let rows: Vec<Json> = entries
             .iter()
             .map(|(k, r)| {

@@ -226,13 +226,12 @@ pub fn tune_shape(
     );
     let mut scored: Vec<CandidateReport> = cands
         .iter()
-        .map(|&config| {
-            let sim = simulate_algorithm(Algorithm::Kernel, ms, ns, ks, spec, &config)
-                .expect("kernel emitter never fails");
+        .map(|&config| -> Result<CandidateReport> {
+            let sim = simulate_algorithm(Algorithm::Kernel, ms, ns, ks, spec, &config)?;
             // Rough per-miss latency weights (L2/L3/DRAM fill costs): the
             // ranking, not the absolute number, is what matters.
             let sim_cost = 4 * sim.l1_misses + 16 * sim.l2_misses + 64 * sim.l3_misses;
-            CandidateReport {
+            Ok(CandidateReport {
                 config,
                 predicted_io: crate::simulator::iolb::wavefront_io(
                     m,
@@ -245,9 +244,9 @@ pub fn tune_shape(
                 sim_cost,
                 sim_traffic_bytes: sim.memory_traffic_bytes,
                 measured_gflops: None,
-            }
+            })
         })
-        .collect();
+        .collect::<Result<_>>()?;
     // Primary order: simulated miss cost (sees m_r/k_r/n_b on the proxy
     // shape). Tie-break: the §1.2 analytic I/O at the candidate's
     // m_b/k_b blocking on the *real* shape — without it, m_b/k_b
@@ -279,9 +278,17 @@ pub fn tune_shape(
             builder = builder.pool(Arc::clone(pool));
         }
         let mut session = builder.build_session()?;
+        // The measure closure cannot propagate errors; stash the first
+        // failure and surface it after the reps finish.
+        let mut exec_err = None;
         let meas = measure(&opts.mc, |_| {
-            session.execute(&mut a, &seq).expect("tuning execute failed")
+            if let Err(e) = session.execute(&mut a, &seq) {
+                exec_err.get_or_insert(e);
+            }
         });
+        if let Some(e) = exec_err {
+            return Err(e.context("tuning execute failed"));
+        }
         scored[idx].measured_gflops = Some(flops as f64 / meas.min_s.max(1e-12) / 1e9);
     }
 
@@ -290,28 +297,25 @@ pub fn tune_shape(
         .iter()
         .find(|c| c.config == analytic)
         .and_then(|c| c.measured_gflops)
-        .expect("analytic baseline is always measured");
-    let winner = scored
+        .ok_or_else(|| anyhow::anyhow!("analytic baseline was not measured"))?;
+    let (winner, winner_gflops) = scored
         .iter()
-        .filter(|c| c.measured_gflops.is_some())
-        .max_by(|x, y| {
-            x.measured_gflops
-                .partial_cmp(&y.measured_gflops)
-                .expect("rates are finite")
-        })
-        .expect("at least the baseline was measured");
+        .filter_map(|c| c.measured_gflops.map(|g| (c, g)))
+        .max_by(|(_, x), (_, y)| x.partial_cmp(y).unwrap_or(std::cmp::Ordering::Equal))
+        .ok_or_else(|| anyhow::anyhow!("no candidate was measured"))?;
+    let record = TunedRecord {
+        config: winner.config,
+        gflops: winner_gflops,
+        analytic_gflops,
+        sim_traffic_bytes: winner.sim_traffic_bytes,
+    };
 
     Ok(TuneReport {
         key: tune_key(cache, m, n, k, threads),
         cache,
         analytic,
         analytic_gflops,
-        record: TunedRecord {
-            config: winner.config,
-            gflops: winner.measured_gflops.expect("winner was measured"),
-            analytic_gflops,
-            sim_traffic_bytes: winner.sim_traffic_bytes,
-        },
+        record,
         candidates: scored,
     })
 }

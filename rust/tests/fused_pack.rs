@@ -243,21 +243,21 @@ fn fused_workspace_never_grows_and_buffers_stay_put() {
             .unwrap();
         assert!(session.plan().is_fused());
         let mut a = Matrix::random(m, n, 2);
-        let cap0 = session.ctx().capacity_doubles();
-        let ptrs0 = session.ctx().packing_ptrs();
+        let cap0 = session.ctx().unwrap().capacity_doubles();
+        let ptrs0 = session.ctx().unwrap().packing_ptrs();
         assert!(cap0 > 0);
         for seed in 0..4u64 {
             let seq = RotationSequence::random(n, k, seed);
             session.execute(&mut a, &seq).unwrap();
-            assert_eq!(session.ctx().capacity_doubles(), cap0, "grew at {seed}");
-            assert_eq!(session.ctx().packing_ptrs(), ptrs0, "moved at {seed}");
+            assert_eq!(session.ctx().unwrap().capacity_doubles(), cap0, "grew at {seed}");
+            assert_eq!(session.ctx().unwrap().packing_ptrs(), ptrs0, "moved at {seed}");
         }
         let mut batch: Vec<Matrix> = (0..3).map(|i| Matrix::random(m, n, 40 + i)).collect();
         let seq = RotationSequence::random(n, k, 9);
         session.execute_batch(&mut batch, &seq).unwrap();
         session.execute_inverse(&mut a, &seq).unwrap();
-        assert_eq!(session.ctx().capacity_doubles(), cap0);
-        assert_eq!(session.ctx().packing_ptrs(), ptrs0);
+        assert_eq!(session.ctx().unwrap().capacity_doubles(), cap0);
+        assert_eq!(session.ctx().unwrap().packing_ptrs(), ptrs0);
     }
 }
 

@@ -154,8 +154,8 @@ fn pooled_plan_is_steady_state_allocation_free() {
         .config(cfg)
         .build_session()
         .unwrap();
-    let cap0 = session.ctx().capacity_doubles();
-    let ptrs0 = session.ctx().packing_ptrs();
+    let cap0 = session.ctx().unwrap().capacity_doubles();
+    let ptrs0 = session.ctx().unwrap().packing_ptrs();
     assert!(cap0 > 0);
     assert_eq!(ptrs0.len(), 4);
 
@@ -166,8 +166,8 @@ fn pooled_plan_is_steady_state_allocation_free() {
         session.execute(&mut a, &seq).unwrap();
         session.execute_batch(&mut batch, &seq).unwrap();
         session.execute_inverse(&mut a, &seq).unwrap();
-        assert_eq!(session.ctx().capacity_doubles(), cap0, "seed {seed}");
-        assert_eq!(session.ctx().packing_ptrs(), ptrs0, "seed {seed}");
+        assert_eq!(session.ctx().unwrap().capacity_doubles(), cap0, "seed {seed}");
+        assert_eq!(session.ctx().unwrap().packing_ptrs(), ptrs0, "seed {seed}");
     }
 }
 

@@ -1,0 +1,551 @@
+//! `cargo xtask lint` — source-level lints for the rotseq unsafe core.
+//!
+//! Four lint families, all pure-std text analysis (no syn/proc-macro
+//! dependencies, so the task builds offline and in seconds):
+//!
+//! 1. **SAFETY comments** — every `unsafe { … }` block and every
+//!    `unsafe impl` must be preceded (within a few lines, or trailed on
+//!    the same line) by a `// SAFETY:` comment stating the invariant the
+//!    block relies on.
+//! 2. **`# Safety` docs** — every `unsafe fn` must carry a doc comment
+//!    with a `# Safety` section spelling out its caller contract.
+//! 3. **Forbidden APIs** — no `static mut` anywhere; no `transmute`
+//!    outside the SIMD shim allowlist; no `unwrap()` / `.expect(` in
+//!    non-test code under `plan/`, `coordinator/`, or `tune/` (hot
+//!    serving paths return typed errors instead of aborting).
+//! 4. **Kernel drift** — the `(m_r, k_r)` footprints in
+//!    `SUPPORTED_KERNELS` (kernel/microkernel.rs) must exactly match the
+//!    `dispatch_sizes!` monomorphization table (kernel/mod.rs), and every
+//!    dispatch arm must pass `KRP1 == KR + 1` (the wave-buffer constant
+//!    the microkernel's circular slot file is sized by).
+//!
+//! The lints scan a comment-and-string-blanked view of each file so that
+//! doc examples mentioning `unwrap()` or `unsafe` never trip them, while
+//! SAFETY-comment detection runs on the raw text.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("lint");
+    match cmd {
+        "lint" => run_lint(),
+        other => {
+            eprintln!("unknown xtask `{other}` (available: lint)");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Files allowed to mention `transmute` (SIMD shims only). Paths are
+/// relative to the crate root (`rust/`), with `/` separators.
+const TRANSMUTE_ALLOWLIST: &[&str] = &["src/kernel/microkernel.rs"];
+
+/// Directories (relative to `src/`) where `unwrap()`/`expect(` are
+/// forbidden outside `#[cfg(test)]` code.
+const NO_PANIC_DIRS: &[&str] = &["plan/", "coordinator/", "tune/"];
+
+fn run_lint() -> ExitCode {
+    // xtask lives at <crate>/xtask; the crate under lint is its parent.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask sits inside the crate root")
+        .to_path_buf();
+
+    let mut files = Vec::new();
+    for sub in ["src", "tests", "benches"] {
+        collect_rs_files(&root.join(sub), &mut files);
+    }
+    files.sort();
+
+    let mut violations: Vec<String> = Vec::new();
+    for path in &files {
+        let Ok(src) = fs::read_to_string(path) else {
+            violations.push(format!("{}: unreadable", rel(path, &root)));
+            continue;
+        };
+        lint_file(&rel(path, &root), &src, &mut violations);
+    }
+    lint_kernel_drift(&root, &mut violations);
+
+    if violations.is_empty() {
+        println!("xtask lint: {} files clean", files.len());
+        ExitCode::SUCCESS
+    } else {
+        for v in &violations {
+            eprintln!("{v}");
+        }
+        eprintln!("xtask lint: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else {
+        return; // missing subtree (e.g. no benches/) is fine
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+fn rel(path: &Path, root: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+/// Blank out comments and string literals, preserving byte positions and
+/// line structure, so token scans never match inside prose or literals.
+fn scrub(src: &str) -> String {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(usize),
+    }
+    let b = src.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        match st {
+            St::Code => {
+                if c == b'/' && b.get(i + 1) == Some(&b'/') {
+                    st = St::LineComment;
+                    out.push(b' ');
+                } else if c == b'/' && b.get(i + 1) == Some(&b'*') {
+                    st = St::BlockComment(1);
+                    out.push(b' ');
+                } else if c == b'"' {
+                    st = St::Str;
+                    out.push(b' ');
+                } else if c == b'r' && matches!(b.get(i + 1), Some(&b'"') | Some(&b'#')) {
+                    // Possible raw string r"…" / r#"…"#; count hashes.
+                    let mut j = i + 1;
+                    let mut hashes = 0;
+                    while b.get(j) == Some(&b'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if b.get(j) == Some(&b'"') {
+                        st = St::RawStr(hashes);
+                        for _ in i..=j {
+                            out.push(b' ');
+                        }
+                        i = j + 1;
+                        continue;
+                    }
+                    out.push(c);
+                } else {
+                    out.push(c);
+                }
+            }
+            St::LineComment => {
+                if c == b'\n' {
+                    st = St::Code;
+                    out.push(b'\n');
+                } else {
+                    out.push(b' ');
+                }
+            }
+            St::BlockComment(depth) => {
+                if c == b'/' && b.get(i + 1) == Some(&b'*') {
+                    st = St::BlockComment(depth + 1);
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                    continue;
+                } else if c == b'*' && b.get(i + 1) == Some(&b'/') {
+                    st = if depth == 1 {
+                        St::Code
+                    } else {
+                        St::BlockComment(depth - 1)
+                    };
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                    continue;
+                } else if c == b'\n' {
+                    out.push(b'\n');
+                } else {
+                    out.push(b' ');
+                }
+            }
+            St::Str => {
+                if c == b'\\' {
+                    out.push(b' ');
+                    if b.get(i + 1).is_some() {
+                        out.push(b' ');
+                        i += 2;
+                        continue;
+                    }
+                } else if c == b'"' {
+                    st = St::Code;
+                    out.push(b' ');
+                } else if c == b'\n' {
+                    out.push(b'\n');
+                } else {
+                    out.push(b' ');
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == b'"' {
+                    let mut j = i + 1;
+                    let mut n = 0;
+                    while n < hashes && b.get(j) == Some(&b'#') {
+                        n += 1;
+                        j += 1;
+                    }
+                    if n == hashes {
+                        st = St::Code;
+                        for _ in i..j {
+                            out.push(b' ');
+                        }
+                        i = j;
+                        continue;
+                    }
+                }
+                if c == b'\n' {
+                    out.push(b'\n');
+                } else {
+                    out.push(b' ');
+                }
+            }
+        }
+        i += 1;
+    }
+    String::from_utf8(out).expect("scrub preserves UTF-8 line structure")
+}
+
+/// How far above an `unsafe` site a `// SAFETY:` comment may sit.
+const SAFETY_WINDOW: usize = 10;
+
+fn lint_file(name: &str, src: &str, violations: &mut Vec<String>) {
+    let code = scrub(src);
+    let code_lines: Vec<&str> = code.lines().collect();
+    let raw_lines: Vec<&str> = src.lines().collect();
+
+    let in_no_panic_dir = NO_PANIC_DIRS.iter().any(|d| {
+        name.strip_prefix("src/")
+            .is_some_and(|rest| rest.starts_with(d))
+    });
+    let mut in_tests = false;
+
+    for (idx, line) in code_lines.iter().enumerate() {
+        let lineno = idx + 1;
+        if line.contains("#[cfg(test)]") {
+            // Test modules sit at the bottom of each file; everything
+            // after the first cfg(test) is test-only code.
+            in_tests = true;
+        }
+
+        // Forbidden APIs.
+        if line.contains("static mut") {
+            violations.push(format!(
+                "{name}:{lineno}: forbidden `static mut` (use interior mutability behind a sync primitive)"
+            ));
+        }
+        if line.contains("transmute") && !TRANSMUTE_ALLOWLIST.contains(&name) {
+            violations.push(format!(
+                "{name}:{lineno}: forbidden `transmute` outside the SIMD shim allowlist"
+            ));
+        }
+        if in_no_panic_dir && !in_tests && (line.contains("unwrap()") || line.contains(".expect("))
+        {
+            violations.push(format!(
+                "{name}:{lineno}: `unwrap()`/`expect(` in a no-panic path (return a typed error or recover)"
+            ));
+        }
+
+        // `unsafe` sites.
+        for col in find_word(line, "unsafe") {
+            let rest = after_token(&code_lines, idx, col + "unsafe".len());
+            if rest.starts_with("fn") {
+                if !has_safety_doc(&raw_lines, idx) {
+                    violations.push(format!(
+                        "{name}:{lineno}: `unsafe fn` without a `# Safety` doc section"
+                    ));
+                }
+            } else if rest.starts_with("impl") || rest.starts_with('{') {
+                let kind = if rest.starts_with('{') {
+                    "unsafe block"
+                } else {
+                    "unsafe impl"
+                };
+                if !has_safety_comment(&raw_lines, idx) {
+                    violations.push(format!(
+                        "{name}:{lineno}: {kind} without a `// SAFETY:` comment"
+                    ));
+                }
+            }
+            // `unsafe extern` / `unsafe trait`: none in this codebase; a
+            // new one will show up as an undocumented site the moment it
+            // gains a body brace.
+        }
+    }
+}
+
+/// Byte offsets of standalone occurrences of `word` in `line`.
+fn find_word(line: &str, word: &str) -> Vec<usize> {
+    let mut hits = Vec::new();
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0
+            || !line.as_bytes()[at - 1].is_ascii_alphanumeric() && line.as_bytes()[at - 1] != b'_';
+        let after = at + word.len();
+        let after_ok = after >= line.len()
+            || !line.as_bytes()[after].is_ascii_alphanumeric() && line.as_bytes()[after] != b'_';
+        if before_ok && after_ok {
+            hits.push(at);
+        }
+        start = after;
+    }
+    hits
+}
+
+/// The code text following a token, skipping whitespace and newlines.
+fn after_token(code_lines: &[&str], idx: usize, col: usize) -> String {
+    let mut s = String::new();
+    let first = code_lines[idx].get(col..).unwrap_or("");
+    s.push_str(first.trim_start());
+    let mut j = idx + 1;
+    while s.len() < 8 && j < code_lines.len() {
+        let _ = write!(s, " {}", code_lines[j].trim());
+        j += 1;
+    }
+    s.trim_start().to_string()
+}
+
+/// A `// SAFETY:` comment on the same line or within the preceding window.
+fn has_safety_comment(raw_lines: &[&str], idx: usize) -> bool {
+    let lo = idx.saturating_sub(SAFETY_WINDOW);
+    raw_lines[lo..=idx].iter().any(|l| l.contains("SAFETY:"))
+}
+
+/// A doc comment with `# Safety` directly above the declaration (skipping
+/// attributes and blank lines).
+fn has_safety_doc(raw_lines: &[&str], idx: usize) -> bool {
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let t = raw_lines[j].trim();
+        if t.starts_with("///") || t.starts_with("//!") {
+            if t.contains("# Safety") {
+                return true;
+            }
+        } else if t.starts_with("#[") || t.starts_with("//") || t.is_empty() || t.ends_with(']') {
+            // attribute (possibly multi-line), plain comment, or gap
+            continue;
+        } else {
+            return false;
+        }
+    }
+    false
+}
+
+/// Parse `(a, b)` pairs out of a source snippet.
+fn parse_pairs(snippet: &str) -> Vec<(usize, usize)> {
+    let mut pairs = Vec::new();
+    let b = snippet.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == b'(' {
+            if let Some(end) = snippet[i..].find(')') {
+                let inner = &snippet[i + 1..i + end];
+                let nums: Vec<Option<usize>> =
+                    inner.split(',').map(|s| s.trim().parse().ok()).collect();
+                if let [Some(a), Some(c)] = nums[..] {
+                    pairs.push((a, c));
+                }
+                i += end;
+            }
+        }
+        i += 1;
+    }
+    pairs
+}
+
+/// Lint 4: SUPPORTED_KERNELS ↔ dispatch_sizes! drift.
+fn lint_kernel_drift(root: &Path, violations: &mut Vec<String>) {
+    let micro_path = root.join("src/kernel/microkernel.rs");
+    let dispatch_path = root.join("src/kernel/mod.rs");
+    let (Ok(micro), Ok(dispatch)) = (
+        fs::read_to_string(&micro_path),
+        fs::read_to_string(&dispatch_path),
+    ) else {
+        violations.push("kernel drift check: cannot read kernel sources".to_string());
+        return;
+    };
+
+    // SUPPORTED_KERNELS: pairs between `= &[` and the closing `];`. Parse
+    // after the `=` so the `&[(usize, usize)]` type annotation's brackets
+    // are skipped.
+    let supported: Vec<(usize, usize)> = match micro.find("SUPPORTED_KERNELS") {
+        Some(at) => {
+            let tail = &micro[at..];
+            let tail = tail.find('=').map(|eq| &tail[eq..]).unwrap_or("");
+            match (tail.find('['), tail.find(']')) {
+                (Some(lo), Some(hi)) if lo < hi => parse_pairs(&tail[lo..hi]),
+                _ => Vec::new(),
+            }
+        }
+        None => Vec::new(),
+    };
+    if supported.is_empty() {
+        violations
+            .push("src/kernel/microkernel.rs: cannot parse SUPPORTED_KERNELS table".to_string());
+        return;
+    }
+
+    // dispatch_sizes!: arms `(mr, kr) => $case!(mr, kr, krp1),` between
+    // the macro_rules! header and its closing of the match block.
+    let mut arms: Vec<((usize, usize), (usize, usize, usize))> = Vec::new();
+    if let Some(at) = dispatch.find("macro_rules! dispatch_sizes") {
+        for line in dispatch[at..].lines() {
+            let t = line.trim();
+            if t.starts_with('_') || t.starts_with("other") {
+                continue; // fallback arm
+            }
+            if let Some((lhs, rhs)) = t.split_once("=>") {
+                let key = parse_pairs(lhs);
+                let expansion: Vec<usize> = rhs
+                    .trim_start_matches(|c: char| !c.is_ascii_digit())
+                    .trim_end_matches(|c: char| !c.is_ascii_digit())
+                    .split(',')
+                    .filter_map(|s| {
+                        s.trim()
+                            .trim_end_matches(|c: char| !c.is_ascii_digit())
+                            .parse()
+                            .ok()
+                    })
+                    .collect();
+                if let (Some(&(mr, kr)), [emr, ekr, ekrp1]) =
+                    (key.first(), expansion[..3.min(expansion.len())].as_ref())
+                {
+                    arms.push(((mr, kr), (*emr, *ekr, *ekrp1)));
+                }
+            }
+            if t.starts_with('}') && arms.len() >= supported.len() {
+                break;
+            }
+        }
+    }
+    if arms.is_empty() {
+        violations.push("src/kernel/mod.rs: cannot parse dispatch_sizes! table".to_string());
+        return;
+    }
+
+    let mut dispatch_keys: Vec<(usize, usize)> = arms.iter().map(|(k, _)| *k).collect();
+    let mut supported_sorted = supported.clone();
+    dispatch_keys.sort_unstable();
+    supported_sorted.sort_unstable();
+    if dispatch_keys != supported_sorted {
+        violations.push(format!(
+            "kernel drift: SUPPORTED_KERNELS {supported_sorted:?} != dispatch_sizes! arms {dispatch_keys:?}"
+        ));
+    }
+    for ((mr, kr), (emr, ekr, ekrp1)) in &arms {
+        if emr != mr || ekr != kr {
+            violations.push(format!(
+                "kernel drift: dispatch arm ({mr}, {kr}) expands to ({emr}, {ekr}, _)"
+            ));
+        }
+        if *ekrp1 != kr + 1 {
+            violations.push(format!(
+                "kernel drift: arm ({mr}, {kr}) has KRP1 = {ekrp1}, expected {} (wave slot file is KR+1 columns)",
+                kr + 1
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scrub_blanks_comments_and_strings() {
+        let src = "let x = \"unsafe {\"; // unsafe {\nunsafe { y() }\n";
+        let code = scrub(src);
+        let lines: Vec<&str> = code.lines().collect();
+        assert!(!lines[0].contains("unsafe"));
+        assert!(lines[1].contains("unsafe"));
+    }
+
+    #[test]
+    fn scrub_handles_nested_block_comments() {
+        let src = "/* a /* b */ still comment */ code";
+        assert_eq!(scrub(src).trim(), "code");
+    }
+
+    #[test]
+    fn find_word_respects_boundaries() {
+        assert_eq!(find_word("unsafe_fn unsafe", "unsafe"), vec![10]);
+        assert_eq!(find_word("an unsafe block", "unsafe"), vec![3]);
+    }
+
+    #[test]
+    fn undocumented_unsafe_block_is_flagged() {
+        let src = "fn f() {\n    unsafe { g() }\n}\n";
+        let mut v = Vec::new();
+        lint_file("src/kernel/x.rs", src, &mut v);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("SAFETY"));
+    }
+
+    #[test]
+    fn documented_unsafe_block_passes() {
+        let src = "fn f() {\n    // SAFETY: g is fine here.\n    unsafe { g() }\n}\n";
+        let mut v = Vec::new();
+        lint_file("src/kernel/x.rs", src, &mut v);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn unsafe_fn_needs_safety_doc() {
+        let bad = "pub unsafe fn f() {}\n";
+        let good = "/// Does f.\n///\n/// # Safety\n/// Caller upholds X.\n#[inline]\npub unsafe fn f() {}\n";
+        let mut v = Vec::new();
+        lint_file("src/a.rs", bad, &mut v);
+        assert_eq!(v.len(), 1);
+        v.clear();
+        lint_file("src/a.rs", good, &mut v);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn unwrap_flagged_only_in_no_panic_dirs_and_not_in_tests() {
+        let src = "fn f() { x.unwrap(); }\n#[cfg(test)]\nmod tests { fn g() { y.unwrap(); } }\n";
+        let mut v = Vec::new();
+        lint_file("src/plan/x.rs", src, &mut v);
+        assert_eq!(v.len(), 1, "{v:?}");
+        v.clear();
+        lint_file("src/kernel/x.rs", src, &mut v);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn doc_example_unwrap_is_ignored() {
+        let src = "/// `x.unwrap()` in prose\nfn f() {}\n";
+        let mut v = Vec::new();
+        lint_file("src/plan/x.rs", src, &mut v);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn parse_pairs_reads_tuples() {
+        assert_eq!(parse_pairs("(1, 1), (8, 2)"), vec![(1, 1), (8, 2)]);
+    }
+}

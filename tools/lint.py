@@ -1,0 +1,233 @@
+#!/usr/bin/env python3
+"""Python mirror of `cargo xtask lint` (rust/xtask/src/main.rs).
+
+The container this repo grows in has no Rust toolchain, so this mirror
+lets the same four lint families run pre-commit; CI runs the Rust
+implementation. Keep the two in sync — the Rust crate is the source of
+truth for behavior.
+
+Families:
+  1. every `unsafe { … }` block / `unsafe impl` needs a `// SAFETY:` comment
+  2. every `unsafe fn` needs a `# Safety` doc section
+  3. forbidden APIs: `static mut`; `transmute` outside the SIMD shims;
+     `unwrap()`/`.expect(` in non-test code under plan/, coordinator/, tune/
+  4. SUPPORTED_KERNELS ↔ dispatch_sizes! drift (incl. KRP1 == KR + 1)
+"""
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent / "rust"
+TRANSMUTE_ALLOWLIST = {"src/kernel/microkernel.rs"}
+NO_PANIC_DIRS = ("plan/", "coordinator/", "tune/")
+SAFETY_WINDOW = 10
+
+
+def scrub(src: str) -> str:
+    """Blank comments and string literals, preserving line structure."""
+    out = []
+    i, n = 0, len(src)
+    st = "code"
+    depth = 0
+    raw_hashes = 0
+    while i < n:
+        c = src[i]
+        if st == "code":
+            if c == "/" and src[i + 1 : i + 2] == "/":
+                st = "line"
+                out.append(" ")
+            elif c == "/" and src[i + 1 : i + 2] == "*":
+                st = "block"
+                depth = 1
+                out.append(" ")
+            elif c == '"':
+                st = "str"
+                out.append(" ")
+            elif c == "r" and src[i + 1 : i + 2] in ('"', "#"):
+                j = i + 1
+                h = 0
+                while src[j : j + 1] == "#":
+                    h += 1
+                    j += 1
+                if src[j : j + 1] == '"':
+                    st = "rawstr"
+                    raw_hashes = h
+                    out.append(" " * (j - i + 1))
+                    i = j + 1
+                    continue
+                out.append(c)
+            else:
+                out.append(c)
+        elif st == "line":
+            if c == "\n":
+                st = "code"
+                out.append("\n")
+            else:
+                out.append(" ")
+        elif st == "block":
+            if c == "/" and src[i + 1 : i + 2] == "*":
+                depth += 1
+                out.append("  ")
+                i += 2
+                continue
+            if c == "*" and src[i + 1 : i + 2] == "/":
+                depth -= 1
+                st = "code" if depth == 0 else "block"
+                out.append("  ")
+                i += 2
+                continue
+            out.append("\n" if c == "\n" else " ")
+        elif st == "str":
+            if c == "\\" and i + 1 < n:
+                out.append("  ")
+                i += 2
+                continue
+            if c == '"':
+                st = "code"
+                out.append(" ")
+            else:
+                out.append("\n" if c == "\n" else " ")
+        elif st == "rawstr":
+            if c == '"' and src[i + 1 : i + 1 + raw_hashes] == "#" * raw_hashes:
+                st = "code"
+                out.append(" " * (1 + raw_hashes))
+                i += 1 + raw_hashes
+                continue
+            out.append("\n" if c == "\n" else " ")
+        i += 1
+    return "".join(out)
+
+
+WORD = re.compile(r"(?<![A-Za-z0-9_])unsafe(?![A-Za-z0-9_])")
+
+
+def after_token(code_lines, idx, col):
+    s = code_lines[idx][col:].lstrip()
+    j = idx + 1
+    while len(s) < 8 and j < len(code_lines):
+        s += " " + code_lines[j].strip()
+        j += 1
+    return s.lstrip()
+
+
+def has_safety_comment(raw_lines, idx):
+    lo = max(0, idx - SAFETY_WINDOW)
+    return any("SAFETY:" in l for l in raw_lines[lo : idx + 1])
+
+
+def has_safety_doc(raw_lines, idx):
+    j = idx
+    while j > 0:
+        j -= 1
+        t = raw_lines[j].strip()
+        if t.startswith("///") or t.startswith("//!"):
+            if "# Safety" in t:
+                return True
+        elif t.startswith("#[") or t.startswith("//") or not t or t.endswith("]"):
+            continue
+        else:
+            return False
+    return False
+
+
+def lint_file(name, src, violations):
+    code_lines = scrub(src).split("\n")
+    raw_lines = src.split("\n")
+    in_no_panic = name.startswith("src/") and name[4:].startswith(NO_PANIC_DIRS)
+    in_tests = False
+    for idx, line in enumerate(code_lines):
+        ln = idx + 1
+        if "#[cfg(test)]" in line:
+            in_tests = True
+        if "static mut" in line:
+            violations.append(f"{name}:{ln}: forbidden `static mut`")
+        if "transmute" in line and name not in TRANSMUTE_ALLOWLIST:
+            violations.append(f"{name}:{ln}: forbidden `transmute` outside SIMD shims")
+        if in_no_panic and not in_tests and ("unwrap()" in line or ".expect(" in line):
+            violations.append(f"{name}:{ln}: `unwrap()`/`expect(` in a no-panic path")
+        for m in WORD.finditer(line):
+            rest = after_token(code_lines, idx, m.end())
+            if rest.startswith("fn"):
+                if not has_safety_doc(raw_lines, idx):
+                    violations.append(
+                        f"{name}:{ln}: `unsafe fn` without a `# Safety` doc section"
+                    )
+            elif rest.startswith("impl") or rest.startswith("{"):
+                kind = "unsafe block" if rest.startswith("{") else "unsafe impl"
+                if not has_safety_comment(raw_lines, idx):
+                    violations.append(
+                        f"{name}:{ln}: {kind} without a `// SAFETY:` comment"
+                    )
+
+
+def parse_pairs(snippet):
+    return [
+        (int(a), int(b))
+        for a, b in re.findall(r"\(\s*(\d+)\s*,\s*(\d+)\s*\)", snippet)
+    ]
+
+
+def lint_kernel_drift(violations):
+    micro = (ROOT / "src/kernel/microkernel.rs").read_text()
+    dispatch = (ROOT / "src/kernel/mod.rs").read_text()
+    at = micro.find("SUPPORTED_KERNELS")
+    # Skip the `&[(usize, usize)]` type annotation: parse after the `=`.
+    tail = micro[at:]
+    tail = tail[tail.find("=") :] if at >= 0 else ""
+    supported = parse_pairs(tail[tail.find("[") : tail.find("]")]) if tail else []
+    if not supported:
+        violations.append("src/kernel/microkernel.rs: cannot parse SUPPORTED_KERNELS")
+        return
+    arms = []
+    at = dispatch.find("macro_rules! dispatch_sizes")
+    for line in dispatch[at:].splitlines():
+        t = line.strip()
+        if "=>" in t:
+            lhs, rhs = t.split("=>", 1)
+            key = parse_pairs(lhs)
+            exp = [int(x) for x in re.findall(r"\d+", rhs)]
+            if key and len(exp) >= 3:
+                arms.append((key[0], tuple(exp[:3])))
+        if t.startswith("}") and len(arms) >= len(supported):
+            break
+    if not arms:
+        violations.append("src/kernel/mod.rs: cannot parse dispatch_sizes!")
+        return
+    if sorted(k for k, _ in arms) != sorted(supported):
+        violations.append(
+            f"kernel drift: SUPPORTED_KERNELS {sorted(supported)} != "
+            f"dispatch arms {sorted(k for k, _ in arms)}"
+        )
+    for (mr, kr), (emr, ekr, ekrp1) in arms:
+        if (emr, ekr) != (mr, kr):
+            violations.append(
+                f"kernel drift: arm ({mr}, {kr}) expands to ({emr}, {ekr}, _)"
+            )
+        if ekrp1 != kr + 1:
+            violations.append(
+                f"kernel drift: arm ({mr}, {kr}) has KRP1={ekrp1}, expected {kr + 1}"
+            )
+
+
+def main():
+    violations = []
+    files = []
+    for sub in ("src", "tests", "benches"):
+        d = ROOT / sub
+        if d.is_dir():
+            files.extend(sorted(d.rglob("*.rs")))
+    for path in files:
+        name = path.relative_to(ROOT).as_posix()
+        lint_file(name, path.read_text(), violations)
+    lint_kernel_drift(violations)
+    if violations:
+        print("\n".join(violations))
+        print(f"lint: {len(violations)} violation(s)", file=sys.stderr)
+        return 1
+    print(f"lint: {len(files)} files clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
