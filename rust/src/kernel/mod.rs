@@ -31,7 +31,7 @@ use crate::matrix::Matrix;
 use crate::pack::{PackedMatrix, PackedPanel};
 use crate::rot::{OpSequence, PairOp, RotationSequence};
 use anyhow::{bail, Result};
-pub use phases::{plan_kblock, plan_kblock_into, KBlockPlan, MemopCounts, StridedPanel};
+pub use phases::{plan_kblock, plan_kblock_into, KBlockPlan, KernelCall, MemopCounts, StridedPanel};
 use phases::run_kblock;
 
 /// Algorithm variants evaluated in the paper (§8).
@@ -372,6 +372,13 @@ impl SeqPlan {
     /// The planned k-blocks, in application order.
     pub fn blocks(&self) -> &[KBlockPlan] {
         &self.blocks[..self.live]
+    }
+
+    /// The planned k-blocks, mutably: the schedule-mutation hook for the
+    /// plan verifier's negative corpus ([`crate::verify`]), which
+    /// corrupts live schedules in place and asserts rejection.
+    pub fn blocks_mut(&mut self) -> &mut [KBlockPlan] {
+        &mut self.blocks[..self.live]
     }
 
     /// Total doubles allocated across all stream arenas, live and spare

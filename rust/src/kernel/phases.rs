@@ -152,6 +152,28 @@ impl KBlockPlan {
         call
     }
 
+    /// All planned calls in schedule (application) order: startup ramp,
+    /// then each pipeline wave chunk, then shutdown ramp. Double-ended,
+    /// so the backward threshold pass — and the plan verifier's
+    /// suffix-min replay ([`crate::verify`]) — can walk the exact same
+    /// order reversed.
+    pub fn calls(&self) -> impl DoubleEndedIterator<Item = &KernelCall> + '_ {
+        self.startup
+            .iter()
+            .chain(self.pipeline.iter().flatten())
+            .chain(self.shutdown.iter())
+    }
+
+    /// [`Self::calls`], mutably: the threshold passes rewrite the splits
+    /// in place, and the verifier's negative corpus corrupts calls
+    /// through it.
+    pub fn calls_mut(&mut self) -> impl DoubleEndedIterator<Item = &mut KernelCall> + '_ {
+        self.startup
+            .iter_mut()
+            .chain(self.pipeline.iter_mut().flatten())
+            .chain(self.shutdown.iter_mut())
+    }
+
     /// Total doubles allocated across all stream buffers, live and spare
     /// (test hook for the no-growth guarantee).
     pub fn buffer_doubles(&self) -> usize {
@@ -248,37 +270,15 @@ pub fn plan_kblock_into<S: OpSequence>(
     // exactly "column < suffix-min". Both facts are asserted in tests
     // (`splits_partition_first_and_last_touches`).
     let mut frontier = 0usize;
-    let mut fwd = |c: &mut KernelCall| {
+    for c in plan.calls_mut() {
         debug_assert!(c.col_lo() <= frontier, "schedule left a column gap");
         c.load_split = frontier;
         frontier = frontier.max(c.col_hi() + 1);
-    };
-    for c in plan.startup.iter_mut() {
-        fwd(c);
-    }
-    for chunk in plan.pipeline.iter_mut() {
-        for c in chunk.iter_mut() {
-            fwd(c);
-        }
-    }
-    for c in plan.shutdown.iter_mut() {
-        fwd(c);
     }
     let mut future_min = usize::MAX;
-    let mut bwd = |c: &mut KernelCall| {
+    for c in plan.calls_mut().rev() {
         c.store_split = future_min;
         future_min = future_min.min(c.col_lo());
-    };
-    for c in plan.shutdown.iter_mut().rev() {
-        bwd(c);
-    }
-    for chunk in plan.pipeline.iter_mut().rev() {
-        for c in chunk.iter_mut().rev() {
-            bwd(c);
-        }
-    }
-    for c in plan.startup.iter_mut().rev() {
-        bwd(c);
     }
 }
 
@@ -618,15 +618,7 @@ impl KBlockPlan {
             mc.strided_stores += ss_cols * live;
             mc.packed_stores += (ncols - ss_cols) * padded;
         };
-        for c in &self.startup {
-            count(c);
-        }
-        for chunk in &self.pipeline {
-            for c in chunk {
-                count(c);
-            }
-        }
-        for c in &self.shutdown {
+        for c in self.calls() {
             count(c);
         }
         mc

@@ -92,3 +92,4 @@ pub mod runtime;
 pub mod simulator;
 pub mod testutil;
 pub mod tune;
+pub mod verify;

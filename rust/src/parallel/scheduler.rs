@@ -173,6 +173,36 @@ mod tests {
         }
     }
 
+    /// Every partition the scheduler can produce satisfies the §7
+    /// contract the plan-level verifier checks (disjoint exact cover,
+    /// `m_r`-quantized interiors, balanced), and corrupting one chunk is
+    /// caught as a typed partition error.
+    #[test]
+    fn partitions_pass_the_schedule_verifier() {
+        use crate::verify::{verify_partition, Error, Report, VerifyLevel};
+
+        for m in [0, 1, 5, 64, 65, 100, 129, 960, 4001] {
+            for t in [1, 2, 4, 7, 28, 40] {
+                for mr in [1, 8, 16, 24] {
+                    let parts = partition_rows(m, t, mr);
+                    let mut r = Report::new(VerifyLevel::Full);
+                    verify_partition(&parts, m, t, mr, &mut r);
+                    assert!(r.ok(), "partition_rows({m},{t},{mr}): {:?}", r.errors);
+                }
+            }
+        }
+
+        let mut parts = partition_rows(100, 4, 8);
+        parts[1].0 += 4; // overlap the neighbour, leave a 4-row hole
+        let mut r = Report::new(VerifyLevel::Full);
+        verify_partition(&parts, 100, 4, 8, &mut r);
+        assert!(
+            matches!(r.errors.first(), Some(Error::Partition { .. })),
+            "{:?}",
+            r.errors
+        );
+    }
+
     #[test]
     fn parallel_matches_naive() {
         for threads in [1, 2, 3, 7] {

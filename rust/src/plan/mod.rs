@@ -232,6 +232,7 @@ pub struct PlanBuilder {
     config: Option<KernelConfig>,
     warm: bool,
     fused: bool,
+    verify: bool,
     pool: Option<Arc<WorkerPool>>,
     autotune: bool,
     /// Whether [`Self::kernel`] was called: an explicit kernel size is an
@@ -253,6 +254,7 @@ impl PlanBuilder {
             config: None,
             warm: true,
             fused: true,
+            verify: true,
             pool: None,
             autotune: false,
             kernel_explicit: false,
@@ -363,6 +365,22 @@ impl PlanBuilder {
         self
     }
 
+    /// Whether [`Self::build`] runs the plan verifier
+    /// ([`crate::verify::verify_plan`]) on the solved plan before handing
+    /// it out (default `true`): the kernel schedule's threshold,
+    /// footprint, and coverage invariants, the §7 partition cover, and
+    /// the Eq 5.1–5.6 bounds are all re-derived and a violation fails
+    /// the build with the first typed error. Debug builds check at
+    /// [`crate::verify::VerifyLevel::Full`] (per-op interpretation,
+    /// provenance, memop-ledger oracle); release builds use the
+    /// O(calls) [`crate::verify::VerifyLevel::Quick`] subset — plan
+    /// construction is cold, so the check is effectively free. Disable
+    /// only for benchmarking plan construction itself.
+    pub fn verify(mut self, on: bool) -> Self {
+        self.verify = on;
+        self
+    }
+
     /// Share a persistent [`WorkerPool`] across this plan's contexts
     /// instead of letting each context spawn its own (the coordinator
     /// keys shared pools by thread count). The pool must have at least as
@@ -385,10 +403,15 @@ impl PlanBuilder {
         };
         let (mr, kr) = self.kernel_size;
         let mut tuned = false;
+        // The cache the §5 solve ran against, kept for the verifier's
+        // Eq 5.1–5.6 re-check. Stays `None` for explicit `.config()`
+        // overrides — those are checked for structure, not refit.
+        let mut solve_cache = None;
         let (mut cfg, bounds) = match self.config {
             Some(cfg) => (cfg, None),
             None => {
                 let cache = self.cache.unwrap_or_else(CacheParams::detect);
+                solve_cache = Some(cache);
                 let threads = self.threads.unwrap_or(1);
                 // Autotuned kernel plans consult the TuneDb first; a hit
                 // replaces the analytic point with the measured winner
@@ -447,7 +470,7 @@ impl PlanBuilder {
             }
             _ => None,
         };
-        Ok(RotationPlan {
+        let plan = RotationPlan {
             shape: (m, n, k),
             algo: self.algorithm,
             side: self.side,
@@ -459,7 +482,19 @@ impl PlanBuilder {
             shared_pool,
             warm: self.warm,
             fused: self.fused,
-        })
+        };
+        if self.verify {
+            let level = if cfg!(debug_assertions) {
+                crate::verify::VerifyLevel::Full
+            } else {
+                crate::verify::VerifyLevel::Quick
+            };
+            let report = crate::verify::verify_plan(&plan, solve_cache, level);
+            if let Some(err) = report.errors.first() {
+                bail!("plan failed schedule verification [{}]: {err}", err.code());
+            }
+        }
+        Ok(plan)
     }
 
     /// [`Self::build`] wrapped in a single-executor [`Session`] (the plan

@@ -640,4 +640,31 @@ mod tests {
         )
         .is_err());
     }
+
+    /// The schedules the simulator traces are the same ones the kernel
+    /// executes: they must survive the Full-level verifier (including
+    /// the brute-force memop-ledger oracle) on the simulator's explicit
+    /// small config, for both the fused and staged variants.
+    #[test]
+    fn simulated_schedules_pass_full_verification() {
+        use crate::kernel::SeqPlan;
+        use crate::rot::RotationSequence;
+        use crate::verify::{verify_seqplan, Report, VerifyLevel};
+
+        let cfg = small_cfg();
+        for (n, k) in [(20, 4), (10, 3), (65, 9)] {
+            let seqs = RotationSequence::random(n, k, 0x51D);
+            let mut sp = SeqPlan::new();
+            sp.plan_into(&seqs, &cfg);
+            for fused in [true, false] {
+                let mut report = Report::new(VerifyLevel::Full);
+                verify_seqplan(&sp, n, k, &cfg, fused, VerifyLevel::Full, &mut report);
+                assert!(
+                    report.ok(),
+                    "simulator schedule (n={n} k={k} fused={fused}): {:?}",
+                    report.errors
+                );
+            }
+        }
+    }
 }

@@ -1,0 +1,312 @@
+//! The deterministic verification corpora behind `cargo xtask verify`:
+//! an adversarial shape sweep (every supported kernel, serial + pooled,
+//! fused + staged, plus degenerate shapes) that must PASS, and a
+//! mutation corpus (corrupted schedules, partitions, and configs) that
+//! must be REJECTED with a specific [`Error::code`].
+//!
+//! Everything here is replicated line-for-line by `tools/verify.py`
+//! (which reconstructs the same schedules from the same planner
+//! arithmetic): the verdict lines — including the first-error codes —
+//! must match verbatim, and CI diffs the two outputs.
+
+use super::{Report, VerifyLevel};
+use super::{verify_config, verify_partition, verify_seqplan};
+use crate::blocking::{plan_bounds_for, solve_cache_for, try_plan, CacheParams};
+use crate::kernel::{SeqPlan, SUPPORTED_KERNELS};
+use crate::parallel::partition_rows;
+use crate::rot::RotationSequence;
+
+/// One shape/kernel/mode point of the positive corpus.
+#[derive(Clone, Copy, Debug)]
+pub struct ShapeCase {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub mr: usize,
+    pub kr: usize,
+    pub threads: usize,
+    pub fused: bool,
+}
+
+/// The positive corpus: every supported kernel gets a serial fused case
+/// and a pooled staged case on a shape with `m % m_r != 0`, plus the
+/// flagship `16x2` kernel on the adversarial extremes from the issue
+/// (`m < m_r`, `n = 2`, `k` far beyond the clamped `k_b`, `k <= k_b`,
+/// `threads` beyond the row-quantum count, and an empty matrix).
+pub fn shape_corpus() -> Vec<ShapeCase> {
+    let mut cases = Vec::new();
+    for (mr, kr) in SUPPORTED_KERNELS.iter().copied() {
+        for (threads, fused) in [(1, true), (3, false)] {
+            cases.push(ShapeCase {
+                m: 6 * mr + 1,
+                n: 41,
+                k: 10,
+                mr,
+                kr,
+                threads,
+                fused,
+            });
+        }
+    }
+    for (m, n, k, threads, fused) in [
+        (5, 41, 10, 1, true),    // m < m_r: one padded row chunk
+        (97, 2, 3, 2, true),     // n = 2: single column pair, kb clamps to 1
+        (64, 12, 180, 1, true),  // k >> n - 1: many clamped k-blocks
+        (33, 300, 8, 4, true),   // k <= k_b: one tall block, m % m_r != 0
+        (40, 41, 10, 32, false), // threads >> row quanta: degenerate partition
+        (0, 41, 10, 4, true),    // empty matrix: no partition at all
+    ] {
+        cases.push(ShapeCase {
+            m,
+            n,
+            k,
+            mr: 16,
+            kr: 2,
+            threads,
+            fused,
+        });
+    }
+    cases
+}
+
+/// The schedule/partition/config corruptions of the negative corpus,
+/// each paired with the error class the verifier must reject it with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MutationKind {
+    /// Swap the first two pipeline subgroup calls: the forward frontier
+    /// no longer matches the stored `load_split`s.
+    SwapCalls,
+    /// Nudge a stored `load_split` off the true forward frontier.
+    ShiftLoadSplit,
+    /// Nudge a stored `store_split` off the true backward suffix-min.
+    ShiftStoreSplit,
+    /// Push the last shutdown call's column interval past `n - 1`.
+    BumpV0,
+    /// Clear `full_group` on a width-`k_r` call: width contract broken.
+    FlipFullGroup,
+    /// Shrink the first §7 row chunk: the cover develops a hole.
+    ShrinkPartition,
+    /// Inflate `n_b` past its Eq 5.2 solver bound.
+    InflateNb,
+}
+
+impl MutationKind {
+    /// Stable corpus name (also used by `tools/verify.py`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            MutationKind::SwapCalls => "swap-calls",
+            MutationKind::ShiftLoadSplit => "shift-load-split",
+            MutationKind::ShiftStoreSplit => "shift-store-split",
+            MutationKind::BumpV0 => "bump-v0",
+            MutationKind::FlipFullGroup => "flip-full-group",
+            MutationKind::ShrinkPartition => "shrink-partition",
+            MutationKind::InflateNb => "inflate-nb",
+        }
+    }
+
+    /// The [`super::Error::code`] the verifier must reject this with.
+    pub fn expected_code(&self) -> &'static str {
+        match self {
+            MutationKind::SwapCalls => "load-split",
+            MutationKind::ShiftLoadSplit => "load-split",
+            MutationKind::ShiftStoreSplit => "store-split",
+            MutationKind::BumpV0 => "footprint",
+            MutationKind::FlipFullGroup => "footprint",
+            MutationKind::ShrinkPartition => "partition",
+            MutationKind::InflateNb => "bounds",
+        }
+    }
+}
+
+/// Every mutation class, in corpus order.
+pub fn mutation_corpus() -> Vec<MutationKind> {
+    vec![
+        MutationKind::SwapCalls,
+        MutationKind::ShiftLoadSplit,
+        MutationKind::ShiftStoreSplit,
+        MutationKind::BumpV0,
+        MutationKind::FlipFullGroup,
+        MutationKind::ShrinkPartition,
+        MutationKind::InflateNb,
+    ]
+}
+
+/// The fixed shape the mutation corpus corrupts: big enough that every
+/// structural feature exists (startup ramp, >= 2 full pipeline groups,
+/// shutdown ramp, a 4-chunk partition), and on the `16x2` kernel whose
+/// `k_r = 2` makes the `full_group` width contract observable.
+const MUT_BASE: ShapeCase = ShapeCase {
+    m: 100,
+    n: 41,
+    k: 10,
+    mr: 16,
+    kr: 2,
+    threads: 4,
+    fused: true,
+};
+
+/// Run the corpus and render one verdict line per case: the positive
+/// shape sweep, or (`mutate`) the negative mutation sweep. Returns the
+/// lines plus whether every case landed as required (every shape PASS,
+/// every mutation REJECTed with its expected code).
+pub fn corpus_verdicts(mutate: bool) -> (Vec<String>, bool) {
+    let mut lines = Vec::new();
+    let mut ok = true;
+    if mutate {
+        for kind in mutation_corpus() {
+            let (line, good) = run_mutation(kind);
+            lines.push(line);
+            ok &= good;
+        }
+    } else {
+        for case in shape_corpus() {
+            let (line, good) = run_shape(&case);
+            lines.push(line);
+            ok &= good;
+        }
+    }
+    (lines, ok)
+}
+
+fn case_head(prefix: &str, case: &ShapeCase) -> String {
+    format!(
+        "{prefix} m={} n={} k={} mr={} kr={} t={} {}",
+        case.m,
+        case.n,
+        case.k,
+        case.mr,
+        case.kr,
+        case.threads,
+        if case.fused { "fused" } else { "staged" }
+    )
+}
+
+fn run_shape(case: &ShapeCase) -> (String, bool) {
+    let head = case_head("shape", case);
+    let cache = solve_cache_for(CacheParams::PAPER_MACHINE, case.threads);
+    let cfg = match try_plan(case.mr, case.kr, CacheParams::PAPER_MACHINE, case.threads) {
+        Ok(c) => c,
+        Err(_) => return (format!("{head}: FAIL plan-infeasible"), false),
+    };
+    let mut report = Report::new(VerifyLevel::Full);
+    if case.n >= 2 && case.k > 0 {
+        let ident = RotationSequence::identity(case.n, case.k);
+        let mut sp = SeqPlan::new();
+        sp.plan_into(&ident, &cfg);
+        verify_seqplan(
+            &sp,
+            case.n,
+            case.k,
+            &cfg,
+            case.fused,
+            VerifyLevel::Full,
+            &mut report,
+        );
+    }
+    if case.threads > 1 {
+        let parts = partition_rows(case.m, cfg.threads, cfg.mr);
+        if !parts.is_empty() {
+            verify_partition(&parts, case.m, cfg.threads, cfg.mr, &mut report);
+        }
+    }
+    let bounds = plan_bounds_for(case.mr, case.kr, cache);
+    verify_config(&cfg, Some(&bounds), Some(cache), false, &mut report);
+    match report.errors.first() {
+        None => (
+            format!(
+                "{head}: PASS blocks={} calls={}",
+                report.blocks, report.calls
+            ),
+            true,
+        ),
+        Some(e) => (format!("{head}: FAIL {}", e.code()), false),
+    }
+}
+
+fn run_mutation(kind: MutationKind) -> (String, bool) {
+    let case = MUT_BASE;
+    let head = case_head(&format!("mut {}", kind.name()), &case);
+    let cache = solve_cache_for(CacheParams::PAPER_MACHINE, case.threads);
+    let cfg = match try_plan(case.mr, case.kr, CacheParams::PAPER_MACHINE, case.threads) {
+        Ok(c) => c,
+        Err(_) => return (format!("{head}: FAIL plan-infeasible"), false),
+    };
+    let mut report = Report::new(VerifyLevel::Full);
+    match kind {
+        MutationKind::SwapCalls
+        | MutationKind::ShiftLoadSplit
+        | MutationKind::ShiftStoreSplit
+        | MutationKind::BumpV0
+        | MutationKind::FlipFullGroup => {
+            let ident = RotationSequence::identity(case.n, case.k);
+            let mut sp = SeqPlan::new();
+            sp.plan_into(&ident, &cfg);
+            if let Some(b0) = sp.blocks_mut().first_mut() {
+                match kind {
+                    MutationKind::SwapCalls => {
+                        if let Some(chunk) = b0.pipeline.first_mut() {
+                            if chunk.len() >= 2 {
+                                chunk.swap(0, 1);
+                            }
+                        }
+                    }
+                    MutationKind::ShiftLoadSplit => {
+                        if let Some(c) = b0.startup.first_mut() {
+                            c.load_split += 1;
+                        }
+                    }
+                    MutationKind::ShiftStoreSplit => {
+                        if let Some(c) = b0.startup.first_mut() {
+                            c.store_split += 1;
+                        }
+                    }
+                    MutationKind::BumpV0 => {
+                        if let Some(c) = b0.shutdown.last_mut() {
+                            c.v0 += 1;
+                        }
+                    }
+                    MutationKind::FlipFullGroup => {
+                        if let Some(chunk) = b0.pipeline.first_mut() {
+                            if let Some(c) = chunk.first_mut() {
+                                c.full_group = false;
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            verify_seqplan(
+                &sp,
+                case.n,
+                case.k,
+                &cfg,
+                case.fused,
+                VerifyLevel::Full,
+                &mut report,
+            );
+        }
+        MutationKind::ShrinkPartition => {
+            let mut parts = partition_rows(case.m, cfg.threads, cfg.mr);
+            if let Some(p) = parts.first_mut() {
+                p.1 = p.1.saturating_sub(8);
+            }
+            verify_partition(&parts, case.m, cfg.threads, cfg.mr, &mut report);
+        }
+        MutationKind::InflateNb => {
+            let bounds = plan_bounds_for(case.mr, case.kr, cache);
+            let mut bad = cfg;
+            bad.nb = bounds.nb_bound + 8;
+            verify_config(&bad, Some(&bounds), Some(cache), false, &mut report);
+        }
+    }
+    match report.errors.first() {
+        None => (format!("{head}: ACCEPT (BAD)"), false),
+        Some(e) if e.code() == kind.expected_code() => {
+            (format!("{head}: REJECT {}", e.code()), true)
+        }
+        Some(e) => (
+            format!("{head}: REJECT {} (WANT {})", e.code(), kind.expected_code()),
+            false,
+        ),
+    }
+}

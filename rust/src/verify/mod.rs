@@ -1,0 +1,369 @@
+//! Plan-level schedule verifier: an abstract interpreter over
+//! [`RotationPlan`] kernel schedules — "borrow-check the schedule".
+//!
+//! The §3 kernel, the §4 fused pack/unpack, the §5 blocking, and the §7
+//! partition are sound because of *semantic* invariants of the planned
+//! [`crate::kernel::phases::KernelCall`] lists, not because of anything
+//! the type system sees. This module re-derives each invariant from the
+//! schedule alone — independent walks, never the planner's own
+//! arithmetic — and reports violations as typed [`Error`]s:
+//!
+//! 1. **Thresholds** — every call's `load_split` is exactly the forward
+//!    touched-column frontier and its `store_split` exactly the backward
+//!    suffix-min of later column intervals (so no column is read strided
+//!    twice or stored to strided storage early), and no call opens a
+//!    column gap (the `debug_assert!` in `phases.rs`, promoted to a typed
+//!    error checked in release builds too).
+//! 2. **Provenance** — replaying the schedule through a per-column
+//!    storage-state machine proves every packed-buffer element is written
+//!    before it is read, and that each column's first access in a fused
+//!    panel is the strided load that zero-fills its pad rows.
+//! 3. **Footprint** — rotation indices stay inside the kernel footprint
+//!    for the dispatched `(m_r, k_r)`: subgroup widths match
+//!    `full_group`, column intervals stay inside `[0, n-1]`, sequence
+//!    ranges inside the k-block, and the per-op interpretation (Full
+//!    level) confirms both dependency rules and exact coverage.
+//! 4. **Partition** — the §7 row chunks are pairwise disjoint, cover
+//!    `[0, m)` exactly, and respect the `m_r` quantization/balance
+//!    contract of [`crate::parallel::partition_rows`].
+//! 5. **Bounds** — the plan's [`KernelConfig`] satisfies the Eq 5.1–5.6
+//!    cache inequalities it was solved under.
+//!
+//! Three exposures share the implementation:
+//!
+//! * [`verify_plan`] — the typed [`Report`] API, run by
+//!   [`crate::plan::PlanBuilder::build`] unless `.verify(false)`:
+//!   [`VerifyLevel::Full`] in debug builds, the O(calls)
+//!   [`VerifyLevel::Quick`] subset in release (plan construction is
+//!   cold, so the check is free on the coordinator's build-once path).
+//! * `cargo xtask verify [--mutate]` — the deterministic corpus runner
+//!   ([`corpus_verdicts`]): an adversarial shape sweep plus a mutation
+//!   mode that corrupts schedules and asserts rejection.
+//! * `tools/verify.py` — a line-for-line Python mirror emitting the same
+//!   verdict lines over the same corpora, runnable in toolchain-free
+//!   containers; CI diffs the two outputs (the `lint.py` parity
+//!   contract).
+
+mod corpus;
+mod schedule;
+
+pub use corpus::{corpus_verdicts, mutation_corpus, shape_corpus, MutationKind, ShapeCase};
+pub use schedule::{verify_config, verify_partition, verify_seqplan};
+
+use crate::blocking::CacheParams;
+use crate::kernel::{Algorithm, SeqPlan};
+use crate::plan::RotationPlan;
+use crate::rot::RotationSequence;
+
+/// How deep the verifier digs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VerifyLevel {
+    /// O(calls) per k-block: threshold recomputation (forward frontier +
+    /// backward suffix-min), per-call footprint checks, per-sequence op
+    /// totals, partition and Eq 5.1–5.6 bound checks. The release-build
+    /// plan-time default.
+    Quick,
+    /// Everything in [`Self::Quick`] plus the per-op abstract
+    /// interpretation (dependency rules, exact coverage), the per-column
+    /// packed-storage provenance machine, and a brute-force per-column
+    /// memop ledger cross-checked against [`crate::kernel::KBlockPlan::memops`].
+    /// The debug-build, test, and `xtask verify` default.
+    Full,
+}
+
+/// One violated schedule invariant. Every variant carries a stable
+/// string [`Error::code`] shared verbatim with `tools/verify.py` — the
+/// corpus verdict lines print codes, and CI diffs them across the two
+/// implementations.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Error {
+    /// A call's column interval starts above the touched frontier: the
+    /// schedule skipped a column (the `phases.rs` forward-pass
+    /// `debug_assert!`, as a typed error).
+    ColumnGap {
+        block: usize,
+        call: usize,
+        col_lo: usize,
+        frontier: usize,
+    },
+    /// A stored `load_split` is not the recomputed forward frontier.
+    LoadSplit {
+        block: usize,
+        call: usize,
+        stored: usize,
+        expected: usize,
+    },
+    /// A stored `store_split` is not the recomputed backward suffix-min.
+    StoreSplit {
+        block: usize,
+        call: usize,
+        stored: usize,
+        expected: usize,
+    },
+    /// A call steps outside the kernel footprint (width/`full_group`
+    /// mismatch, column interval outside `[0, n-1]`, sequence range
+    /// outside the k-block, or an empty stream).
+    Footprint {
+        block: usize,
+        call: usize,
+        what: &'static str,
+        got: usize,
+        limit: usize,
+    },
+    /// The plan's `(m_r, k_r)` has no monomorphized kernel.
+    KernelSize { mr: usize, kr: usize },
+    /// The schedule has a different number of k-blocks than the §5
+    /// decomposition prescribes.
+    Blocks { got: usize, want: usize },
+    /// The per-op interpretation found an out-of-order op within a
+    /// sequence (`(i-1, p)` must precede `(i, p)`).
+    OpOrder {
+        block: usize,
+        seq: usize,
+        expected: usize,
+        got: usize,
+    },
+    /// The per-op interpretation found a cross-sequence dependency
+    /// violation (`(i+1, p)` must precede `(i, p+1)`).
+    CrossDep {
+        block: usize,
+        seq: usize,
+        op: usize,
+        upstream_done: usize,
+        need: usize,
+    },
+    /// A sequence did not apply exactly its `n-1` ops in this k-block.
+    Coverage {
+        block: usize,
+        seq: usize,
+        done: usize,
+        need: usize,
+    },
+    /// The §7 row partition is not a disjoint, exact, `m_r`-quantized,
+    /// balanced cover of `[0, m)`.
+    Partition {
+        what: &'static str,
+        got: usize,
+        want: usize,
+    },
+    /// The config violates an Eq 5.1–5.6 bound (or a positivity
+    /// requirement) it was solved under.
+    Bounds {
+        what: &'static str,
+        got: usize,
+        limit: usize,
+    },
+    /// The packed-storage state machine caught a read-before-write (or a
+    /// column not retired to its home storage at the end of the panel).
+    Provenance {
+        block: usize,
+        column: usize,
+        what: &'static str,
+    },
+    /// The closed-form [`crate::kernel::KBlockPlan::memops`] ledger
+    /// disagrees with the brute-force per-column count.
+    Ledger {
+        block: usize,
+        first: bool,
+        last: bool,
+        rows: usize,
+    },
+}
+
+impl Error {
+    /// Stable machine-readable code, shared with `tools/verify.py`.
+    pub fn code(&self) -> &'static str {
+        match self {
+            Error::ColumnGap { .. } => "column-gap",
+            Error::LoadSplit { .. } => "load-split",
+            Error::StoreSplit { .. } => "store-split",
+            Error::Footprint { .. } => "footprint",
+            Error::KernelSize { .. } => "kernel-size",
+            Error::Blocks { .. } => "coverage",
+            Error::OpOrder { .. } => "op-order",
+            Error::CrossDep { .. } => "cross-dep",
+            Error::Coverage { .. } => "coverage",
+            Error::Partition { .. } => "partition",
+            Error::Bounds { .. } => "bounds",
+            Error::Provenance { .. } => "provenance",
+            Error::Ledger { .. } => "ledger",
+        }
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::ColumnGap {
+                block,
+                call,
+                col_lo,
+                frontier,
+            } => write!(
+                f,
+                "block {block} call {call}: column gap (interval starts at \
+                 {col_lo}, touched frontier is {frontier})"
+            ),
+            Error::LoadSplit {
+                block,
+                call,
+                stored,
+                expected,
+            } => write!(
+                f,
+                "block {block} call {call}: load_split is {stored}, forward \
+                 frontier recomputes to {expected}"
+            ),
+            Error::StoreSplit {
+                block,
+                call,
+                stored,
+                expected,
+            } => write!(
+                f,
+                "block {block} call {call}: store_split is {stored}, backward \
+                 suffix-min recomputes to {expected}"
+            ),
+            Error::Footprint {
+                block,
+                call,
+                what,
+                got,
+                limit,
+            } => write!(
+                f,
+                "block {block} call {call}: {what} is {got}, kernel footprint \
+                 limit is {limit}"
+            ),
+            Error::KernelSize { mr, kr } => {
+                write!(f, "kernel size m_r={mr}, k_r={kr} has no dispatch arm")
+            }
+            Error::Blocks { got, want } => write!(
+                f,
+                "schedule has {got} k-blocks, the \u{a7}5 decomposition \
+                 prescribes {want}"
+            ),
+            Error::OpOrder {
+                block,
+                seq,
+                expected,
+                got,
+            } => write!(
+                f,
+                "block {block} sequence {seq}: op {got} applied when op \
+                 {expected} was next in order"
+            ),
+            Error::CrossDep {
+                block,
+                seq,
+                op,
+                upstream_done,
+                need,
+            } => write!(
+                f,
+                "block {block} sequence {seq}: op {op} needs sequence \
+                 {}'s progress >= {need}, found {upstream_done}",
+                seq.saturating_sub(1)
+            ),
+            Error::Coverage {
+                block,
+                seq,
+                done,
+                need,
+            } => write!(
+                f,
+                "block {block} sequence {seq}: {done} ops scheduled, block \
+                 requires exactly {need}"
+            ),
+            Error::Partition { what, got, want } => {
+                write!(f, "\u{a7}7 partition: {what} is {got}, expected {want}")
+            }
+            Error::Bounds { what, got, limit } => {
+                write!(f, "config bounds: {what} is {got}, limit {limit}")
+            }
+            Error::Provenance {
+                block,
+                column,
+                what,
+            } => write!(f, "block {block} column {column}: {what}"),
+            Error::Ledger {
+                block,
+                first,
+                last,
+                rows,
+            } => write!(
+                f,
+                "block {block}: closed-form memop ledger disagrees with the \
+                 per-column count (first={first} last={last} rows={rows})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// The outcome of a verification run: what was walked and every invariant
+/// violation found, in deterministic (schedule-order) priority.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Level the run executed at.
+    pub level: VerifyLevel,
+    /// k-blocks walked.
+    pub blocks: usize,
+    /// Kernel calls walked (across all blocks).
+    pub calls: usize,
+    /// Violations, ordered: per-block footprint → thresholds → op totals
+    /// → (Full) interpretation, then cross-block provenance and ledger,
+    /// then partition, then bounds. The Python mirror reports the same
+    /// first error on the shared corpora.
+    pub errors: Vec<Error>,
+}
+
+impl Report {
+    /// An empty (passing) report at the given level.
+    pub fn new(level: VerifyLevel) -> Self {
+        Report {
+            level,
+            blocks: 0,
+            calls: 0,
+            errors: Vec::new(),
+        }
+    }
+
+    /// Whether every checked invariant held.
+    pub fn ok(&self) -> bool {
+        self.errors.is_empty()
+    }
+}
+
+/// Verify a built [`RotationPlan`]: materialize its identity-sequence
+/// schedule (the same one context warm-up packs) and check every
+/// invariant the kernel execution paths rely on. Non-kernel plans have no
+/// schedule and verify trivially. `cache` enables the Eq 5.1–5.6
+/// inequality checks — [`crate::plan::PlanBuilder::build`] passes the
+/// cache it solved against; pass `None` when it is unknown (explicit
+/// configs are operator overrides, checked for structure but not refit
+/// to a cache).
+pub fn verify_plan(plan: &RotationPlan, cache: Option<CacheParams>, level: VerifyLevel) -> Report {
+    let mut report = Report::new(level);
+    if !matches!(plan.algorithm(), Algorithm::Kernel) {
+        return report;
+    }
+    let cfg = plan.config();
+    let (m, n, k) = plan.shape();
+    let (wm, wn) = match plan.side() {
+        crate::plan::Side::Right => (m, n),
+        crate::plan::Side::Left => (n, m),
+    };
+    if wn >= 2 && k > 0 {
+        let ident = RotationSequence::identity(wn, k);
+        let mut sp = SeqPlan::new();
+        sp.plan_into(&ident, cfg);
+        verify_seqplan(&sp, wn, k, cfg, plan.is_fused(), level, &mut report);
+    }
+    if !plan.parts().is_empty() {
+        verify_partition(plan.parts(), wm, cfg.threads, cfg.mr, &mut report);
+    }
+    verify_config(cfg, plan.bounds(), cache, plan.is_tuned(), &mut report);
+    report
+}

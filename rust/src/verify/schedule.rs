@@ -1,0 +1,544 @@
+//! The verification passes: per-k-block abstract interpretation of the
+//! planned call lists, the §7 partition checks, and the Eq 5.1–5.6
+//! config checks.
+//!
+//! Check order is part of the contract: every pass runs in schedule
+//! order and stops at the *first* violation, so the first error (and
+//! its [`super::Error::code`]) is deterministic and `tools/verify.py`
+//! can reproduce it verbatim. Per block: footprint → forward frontier
+//! (column-gap, load-split) → backward suffix-min (store-split) →
+//! per-sequence op totals → (Full) per-op interpretation; then, across
+//! blocks (Full): storage provenance → memop-ledger oracle.
+//!
+//! This module is panic-free on arbitrary (adversarially mutated)
+//! schedules: every derived index is bounds-checked by the footprint
+//! pass before later passes use it, and interval arithmetic saturates
+//! instead of underflowing.
+
+use super::{Error, Report, VerifyLevel};
+use crate::blocking::{BlockPlan, CacheParams, KernelConfig};
+use crate::kernel::{
+    for_each_kblock, kernel_supported, KBlockPlan, KernelCall, MemopCounts, SeqPlan,
+};
+
+/// Verify every k-block of a planned schedule against the shape it was
+/// planned for, then (at [`VerifyLevel::Full`]) the cross-block storage
+/// provenance and the closed-form memop ledger. Stops at the first
+/// violation; `report.errors` gains at most one entry.
+#[allow(clippy::too_many_arguments)]
+pub fn verify_seqplan(
+    sp: &SeqPlan,
+    n: usize,
+    k: usize,
+    cfg: &KernelConfig,
+    fused: bool,
+    level: VerifyLevel,
+    report: &mut Report,
+) {
+    let mut spans = Vec::new();
+    let planned = for_each_kblock(n, k, cfg.kb, |pb, kbe| {
+        spans.push((pb, kbe));
+        Ok(())
+    });
+    debug_assert!(planned.is_ok(), "span collection is infallible");
+    let blocks = sp.blocks();
+    report.blocks = blocks.len();
+    if blocks.len() != spans.len() {
+        report.errors.push(Error::Blocks {
+            got: blocks.len(),
+            want: spans.len(),
+        });
+        return;
+    }
+    for (bidx, (bp, &(pb, kbe))) in blocks.iter().zip(spans.iter()).enumerate() {
+        if !verify_kblock(bp, bidx, pb, kbe, n, cfg.kr, level, report) {
+            return;
+        }
+    }
+    if level == VerifyLevel::Full && !blocks.is_empty() {
+        if !verify_provenance(blocks, n, fused, report) {
+            return;
+        }
+        verify_ledger(blocks, cfg.mr, report);
+    }
+}
+
+/// The per-block passes. Returns `true` when the block is clean.
+#[allow(clippy::too_many_arguments)]
+fn verify_kblock(
+    bp: &KBlockPlan,
+    block: usize,
+    pb: usize,
+    kbe: usize,
+    n: usize,
+    kr: usize,
+    level: VerifyLevel,
+    report: &mut Report,
+) -> bool {
+    let ncalls = bp.calls().count();
+    report.calls += ncalls;
+    if n < 2 {
+        // A planned block for a width-<2 window cannot exist (the block
+        // decomposition emits none); flag rather than index below.
+        report.errors.push(Error::Blocks {
+            got: 1,
+            want: 0,
+        });
+        return false;
+    }
+
+    // Pass 1 — footprint: widths, wave counts, column intervals inside
+    // [0, n-1], sequence ranges inside [pb, pb+kbe). Everything later
+    // indexes by these, so any violation stops the block here.
+    for (ci, c) in bp.calls().enumerate() {
+        let want_width = if c.full_group { kr } else { 1 };
+        if c.width != want_width {
+            report.errors.push(Error::Footprint {
+                block,
+                call: ci,
+                what: "subgroup width",
+                got: c.width,
+                limit: want_width,
+            });
+            return false;
+        }
+        let nwaves = c.stream.nwaves();
+        if nwaves == 0 {
+            report.errors.push(Error::Footprint {
+                block,
+                call: ci,
+                what: "wave count",
+                got: 0,
+                limit: 1,
+            });
+            return false;
+        }
+        if c.v0 + 1 < c.width {
+            report.errors.push(Error::Footprint {
+                block,
+                call: ci,
+                what: "first wave index v0+1",
+                got: c.v0 + 1,
+                limit: c.width,
+            });
+            return false;
+        }
+        let hi = c.v0 + nwaves;
+        if hi > n - 1 {
+            report.errors.push(Error::Footprint {
+                block,
+                call: ci,
+                what: "column interval end",
+                got: hi,
+                limit: n - 1,
+            });
+            return false;
+        }
+        if c.p0 < pb {
+            report.errors.push(Error::Footprint {
+                block,
+                call: ci,
+                what: "sequence range start",
+                got: c.p0,
+                limit: pb,
+            });
+            return false;
+        }
+        if c.p0 + c.width > pb + kbe {
+            report.errors.push(Error::Footprint {
+                block,
+                call: ci,
+                what: "sequence range end",
+                got: c.p0 + c.width,
+                limit: pb + kbe,
+            });
+            return false;
+        }
+    }
+
+    // Pass 2 — forward frontier: recompute the first-touch threshold the
+    // planner stored as `load_split`, and promote the phases.rs
+    // `debug_assert!` (no column gap) to a typed, release-checked error.
+    let mut frontier = 0usize;
+    for (ci, c) in bp.calls().enumerate() {
+        let lo = c.col_lo();
+        if lo > frontier {
+            report.errors.push(Error::ColumnGap {
+                block,
+                call: ci,
+                col_lo: lo,
+                frontier,
+            });
+            return false;
+        }
+        if c.load_split != frontier {
+            report.errors.push(Error::LoadSplit {
+                block,
+                call: ci,
+                stored: c.load_split,
+                expected: frontier,
+            });
+            return false;
+        }
+        frontier = frontier.max(c.col_hi() + 1);
+    }
+
+    // Pass 3 — backward suffix-min: recompute the last-touch threshold
+    // the planner stored as `store_split` (usize::MAX on the final call
+    // chain: no future call revisits any column).
+    let mut future_min = usize::MAX;
+    for (ci, c) in bp.calls().rev().enumerate() {
+        let ci = ncalls - 1 - ci;
+        if c.store_split != future_min {
+            report.errors.push(Error::StoreSplit {
+                block,
+                call: ci,
+                stored: c.store_split,
+                expected: future_min,
+            });
+            return false;
+        }
+        future_min = future_min.min(c.col_lo());
+    }
+
+    // Pass 4 — op totals: every sequence in the block must apply exactly
+    // its n-1 rotations here (each call contributes `nwaves` ops to each
+    // covered sequence).
+    let mut ops = vec![0usize; kbe];
+    for c in bp.calls() {
+        for s in 0..c.width {
+            ops[c.p0 - pb + s] += c.stream.nwaves();
+        }
+    }
+    for (l, &done) in ops.iter().enumerate() {
+        if done != n - 1 {
+            report.errors.push(Error::Coverage {
+                block,
+                seq: l,
+                done,
+                need: n - 1,
+            });
+            return false;
+        }
+    }
+
+    if level != VerifyLevel::Full {
+        return true;
+    }
+
+    // Pass 5 (Full) — per-op abstract interpretation. Replay every call
+    // in the kernel's own op order (wave-major, subgroup-minor): op
+    // (i, p) with i = v0 + t - s, p = p0 + s. Each sequence must apply
+    // ops 0..n-1 in order, and op (i, p) requires its upstream neighbour
+    // sequence p-1 to have finished op i+1 (the §3 wave dependency
+    // (i+1, p-1) -> (i, p)) — within this schedule family the upstream
+    // sequence is always at least min(i+2, n-1) ops deep by then.
+    let mut done = vec![0usize; kbe];
+    for c in bp.calls() {
+        for t in 0..c.stream.nwaves() {
+            for s in 0..c.width {
+                // No underflow: pass 1 proved v0 + 1 >= width > s.
+                let i = c.v0 + t - s;
+                let l = c.p0 - pb + s;
+                if i != done[l] {
+                    report.errors.push(Error::OpOrder {
+                        block,
+                        seq: l,
+                        expected: done[l],
+                        got: i,
+                    });
+                    return false;
+                }
+                if l > 0 {
+                    let need = (i + 2).min(n - 1);
+                    if done[l - 1] < need {
+                        report.errors.push(Error::CrossDep {
+                            block,
+                            seq: l,
+                            op: i,
+                            upstream_done: done[l - 1],
+                            need,
+                        });
+                        return false;
+                    }
+                }
+                done[l] = i + 1;
+            }
+        }
+    }
+    for (l, &d) in done.iter().enumerate() {
+        if d != n - 1 {
+            report.errors.push(Error::Coverage {
+                block,
+                seq: l,
+                done: d,
+                need: n - 1,
+            });
+            return false;
+        }
+    }
+    true
+}
+
+/// Cross-block storage provenance (Full level): replay the whole panel
+/// schedule through a per-column state machine (`true` = the live value
+/// sits in the caller's strided storage, `false` = in the packed §4
+/// buffer). Proves every packed read was preceded by a packed write
+/// (write-before-read), that a fused panel's first touch of each column
+/// is the strided, pad-zero-filling load, and that every column is
+/// retired to its home storage by the end of the panel.
+fn verify_provenance(blocks: &[KBlockPlan], n: usize, fused: bool, report: &mut Report) -> bool {
+    let nblocks = blocks.len();
+    let mut strided = vec![fused; n];
+    for (bidx, bp) in blocks.iter().enumerate() {
+        let first = fused && bidx == 0;
+        let last = fused && bidx + 1 == nblocks;
+        for c in bp.calls() {
+            for col in c.col_lo()..=c.col_hi() {
+                let want_strided = first && col >= c.load_split;
+                if strided[col] != want_strided {
+                    let what = if strided[col] {
+                        "packed read scheduled while the live value is still strided"
+                    } else {
+                        "strided (zero-filling) load scheduled for an already-packed column"
+                    };
+                    report.errors.push(Error::Provenance {
+                        block: bidx,
+                        column: col,
+                        what,
+                    });
+                    return false;
+                }
+                strided[col] = last && col < c.store_split;
+            }
+        }
+    }
+    for (col, &s) in strided.iter().enumerate() {
+        if s != fused {
+            report.errors.push(Error::Provenance {
+                block: nblocks - 1,
+                column: col,
+                what: "column not retired to its home storage at panel end",
+            });
+            return false;
+        }
+    }
+    true
+}
+
+/// Memop-ledger oracle (Full level): brute-force the per-column element
+/// moves of each block from the verified thresholds alone and require
+/// exact agreement with the closed-form [`KBlockPlan::memops`] ledger,
+/// across all four fused-position flag combinations and pad-exercising
+/// row counts. This is what ties the simulator/CI `MemopCounts`
+/// accounting to the verifier's touch intervals.
+fn verify_ledger(blocks: &[KBlockPlan], mr: usize, report: &mut Report) -> bool {
+    let mr = mr.max(1);
+    for (bidx, bp) in blocks.iter().enumerate() {
+        for (first, last) in [(false, false), (false, true), (true, false), (true, true)] {
+            for rows in [1usize, mr, mr + 1] {
+                let chunks = rows.div_ceil(mr).max(1) as u64;
+                let padded = chunks * mr as u64;
+                let live = rows as u64;
+                let mut brute = MemopCounts::default();
+                for c in bp.calls() {
+                    count_call(c, first, last, live, padded, &mut brute);
+                }
+                if brute != bp.memops(first, last, rows, mr) {
+                    report.errors.push(Error::Ledger {
+                        block: bidx,
+                        first,
+                        last,
+                        rows,
+                    });
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+/// One call's element moves, counted per column (the brute-force side of
+/// the ledger oracle).
+fn count_call(
+    c: &KernelCall,
+    first: bool,
+    last: bool,
+    live: u64,
+    padded: u64,
+    brute: &mut MemopCounts,
+) {
+    for col in c.col_lo()..=c.col_hi() {
+        if first && col >= c.load_split {
+            brute.strided_loads += live;
+        } else {
+            brute.packed_loads += padded;
+        }
+        if last && col < c.store_split {
+            brute.strided_stores += live;
+        } else {
+            brute.packed_stores += padded;
+        }
+    }
+}
+
+/// Verify the §7 row partition: one chunk per worker (capped by the
+/// quantum count), contiguous and disjoint chunks covering `[0, m)`
+/// exactly, every interior chunk an `m_r` multiple, and the floor/ceil
+/// balance bound `max - min <= m_r`.
+pub fn verify_partition(
+    parts: &[(usize, usize)],
+    m: usize,
+    threads: usize,
+    mr: usize,
+    report: &mut Report,
+) {
+    let threads = threads.max(1);
+    let mr = mr.max(1);
+    if m == 0 {
+        if !parts.is_empty() {
+            report.errors.push(Error::Partition {
+                what: "chunk count for an empty matrix",
+                got: parts.len(),
+                want: 0,
+            });
+        }
+        return;
+    }
+    let want_chunks = threads.min(m.div_ceil(mr));
+    if parts.len() != want_chunks {
+        report.errors.push(Error::Partition {
+            what: "chunk count",
+            got: parts.len(),
+            want: want_chunks,
+        });
+        return;
+    }
+    let mut next = 0usize;
+    for &(r0, rows) in parts {
+        if r0 != next {
+            report.errors.push(Error::Partition {
+                what: "chunk start",
+                got: r0,
+                want: next,
+            });
+            return;
+        }
+        if rows == 0 {
+            report.errors.push(Error::Partition {
+                what: "chunk rows",
+                got: 0,
+                want: 1,
+            });
+            return;
+        }
+        next = r0 + rows;
+    }
+    for &(_, rows) in &parts[..parts.len() - 1] {
+        if rows % mr != 0 {
+            report.errors.push(Error::Partition {
+                what: "interior chunk rows mod m_r",
+                got: rows % mr,
+                want: 0,
+            });
+            return;
+        }
+    }
+    if next != m {
+        report.errors.push(Error::Partition {
+            what: "covered rows",
+            got: next,
+            want: m,
+        });
+        return;
+    }
+    let max = parts.iter().map(|&(_, r)| r).max().unwrap_or(0);
+    let min = parts.iter().map(|&(_, r)| r).min().unwrap_or(0);
+    if max - min > mr {
+        report.errors.push(Error::Partition {
+            what: "max minus min chunk rows",
+            got: max - min,
+            want: mr,
+        });
+    }
+}
+
+/// Verify the plan's [`KernelConfig`]: the `(m_r, k_r)` pair has a
+/// monomorphized dispatch arm, every block size is positive, the config
+/// dominates the solver bounds it was derived from (skipped for tuned
+/// configs — a measured `k_b` may legally exceed the bound stored for
+/// the analytic `n_b`), and — when the solve cache is known — the
+/// Eq 5.2/5.4/5.6 inequalities hold exactly as
+/// [`KernelConfig::validate_bounds`] computes them.
+pub fn verify_config(
+    cfg: &KernelConfig,
+    bounds: Option<&BlockPlan>,
+    cache: Option<CacheParams>,
+    tuned: bool,
+    report: &mut Report,
+) {
+    if !kernel_supported(cfg.mr, cfg.kr) {
+        report.errors.push(Error::KernelSize {
+            mr: cfg.mr,
+            kr: cfg.kr,
+        });
+        return;
+    }
+    for (what, got) in [
+        ("m_b", cfg.mb),
+        ("k_b", cfg.kb),
+        ("n_b", cfg.nb),
+        ("threads", cfg.threads),
+    ] {
+        if got == 0 {
+            report.errors.push(Error::Bounds { what, got, limit: 1 });
+            return;
+        }
+    }
+    if let (Some(b), false) = (bounds, tuned) {
+        for (what, got, limit) in [
+            ("n_b over solver bound", cfg.nb, b.nb_bound),
+            ("k_b over solver bound", cfg.kb, b.kb_bound),
+            ("m_b over solver bound", cfg.mb, b.mb_bound),
+        ] {
+            if got > limit {
+                report.errors.push(Error::Bounds { what, got, limit });
+                return;
+            }
+        }
+    }
+    if let Some(cache) = cache {
+        let (mr, kr, mb, kb, nb) = (cfg.mr, cfg.kr, cfg.mb, cfg.kb, cfg.nb);
+        let l1_set = mr
+            .saturating_mul(nb.saturating_add(kr))
+            .saturating_add(2usize.saturating_mul(nb).saturating_mul(kr));
+        if l1_set > cache.t1 {
+            report.errors.push(Error::Bounds {
+                what: "Eq 5.2 L1 working set",
+                got: l1_set,
+                limit: cache.t1,
+            });
+            return;
+        }
+        let l2_set = mr
+            .saturating_mul(nb.saturating_add(kb))
+            .saturating_add(2usize.saturating_mul(nb).saturating_mul(kb));
+        if l2_set > cache.t2 {
+            report.errors.push(Error::Bounds {
+                what: "Eq 5.4 L2 working set",
+                got: l2_set,
+                limit: cache.t2,
+            });
+            return;
+        }
+        let l3_set = mb.saturating_mul(nb.saturating_add(kb));
+        if l3_set > cache.t3 {
+            report.errors.push(Error::Bounds {
+                what: "Eq 5.6 L3 working set",
+                got: l3_set,
+                limit: cache.t3,
+            });
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Schedule-verifier property suites:
+//!
+//! * the positive shape corpus PASSes and the mutation corpus is
+//!   REJECTed class-for-class (the same sweeps `cargo xtask verify`
+//!   and `tools/verify.py` print and CI diffs);
+//! * randomized planner schedules verify clean at `Full` level, and
+//!   their stored `load_split`/`store_split` thresholds match a
+//!   brute-force touched-column-set oracle that shares no code with
+//!   either the planner's threshold passes or the verifier's;
+//! * corrupted schedules, partitions, and configs are rejected with the
+//!   typed [`Error`] variant naming the violated invariant;
+//! * `PlanBuilder` verifies by default and `.verify(false)` opts out.
+
+use rotseq::blocking::{plan, CacheParams};
+use rotseq::kernel::{SeqPlan, SUPPORTED_KERNELS};
+use rotseq::parallel::partition_rows;
+use rotseq::plan::RotationPlan;
+use rotseq::rot::RotationSequence;
+use rotseq::testutil::property;
+use rotseq::verify::{
+    corpus_verdicts, verify_config, verify_partition, verify_plan, verify_seqplan, Error, Report,
+    VerifyLevel,
+};
+use std::collections::HashSet;
+
+#[test]
+fn shape_corpus_all_pass() {
+    let (lines, ok) = corpus_verdicts(false);
+    assert!(ok, "shape corpus has failures:\n{}", lines.join("\n"));
+    assert!(!lines.is_empty());
+    for line in &lines {
+        assert!(line.contains(": PASS "), "not a PASS verdict: {line}");
+    }
+}
+
+#[test]
+fn mutation_corpus_all_rejected_with_expected_codes() {
+    let (lines, ok) = corpus_verdicts(true);
+    assert!(ok, "mutation corpus has failures:\n{}", lines.join("\n"));
+    assert!(!lines.is_empty());
+    for line in &lines {
+        assert!(line.contains(": REJECT "), "not a REJECT verdict: {line}");
+        assert!(!line.contains("WANT"), "rejected with wrong code: {line}");
+    }
+}
+
+/// Plan a schedule for (n, k) on the paper machine with the given kernel.
+fn planned(
+    n: usize,
+    k: usize,
+    mr: usize,
+    kr: usize,
+    threads: usize,
+) -> (SeqPlan, rotseq::blocking::KernelConfig) {
+    let cfg = plan(mr, kr, CacheParams::PAPER_MACHINE, threads);
+    assert_eq!((cfg.mr, cfg.kr), (mr, kr), "paper machine fits every kernel");
+    let seqs = RotationSequence::random(n, k, 0xC0FFEE ^ ((n as u64) << 8) ^ (k as u64));
+    let mut sp = SeqPlan::new();
+    sp.plan_into(&seqs, &cfg);
+    (sp, cfg)
+}
+
+#[test]
+fn random_schedules_verify_full_and_match_touch_set_oracle() {
+    property(
+        "verify ⊨ planner schedules",
+        0x5EED_BA11,
+        60,
+        |rng| {
+            let (mr, kr) = SUPPORTED_KERNELS[rng.next_below(SUPPORTED_KERNELS.len())];
+            (
+                2 + rng.next_below(70),
+                1 + rng.next_below(16),
+                mr,
+                kr,
+                1 + rng.next_below(4),
+                rng.next_below(2) == 0,
+            )
+        },
+        |&(n, k, mr, kr, threads, fused)| {
+            let (sp, cfg) = planned(n, k, mr, kr, threads);
+            let mut report = Report::new(VerifyLevel::Full);
+            verify_seqplan(&sp, n, k, &cfg, fused, VerifyLevel::Full, &mut report);
+            assert!(
+                report.ok(),
+                "planner schedule rejected (n={n} k={k} {mr}x{kr}): {:?}",
+                report.errors
+            );
+            assert!(report.blocks >= 1);
+            // Oracle: recompute the thresholds from scratch with a touched
+            // column *set* (not the frontier/suffix-min recurrences the
+            // planner and verifier both use).
+            for bp in sp.blocks() {
+                let calls: Vec<_> = bp.calls().collect();
+                let mut touched: HashSet<usize> = HashSet::new();
+                for c in &calls {
+                    let expect = touched.iter().max().map_or(0, |&t| t + 1);
+                    assert_eq!(c.load_split, expect, "load_split vs touch-set oracle");
+                    for col in c.col_lo()..=c.col_hi() {
+                        touched.insert(col);
+                    }
+                }
+                for (j, c) in calls.iter().enumerate() {
+                    let expect = calls[j + 1..]
+                        .iter()
+                        .map(|d| d.col_lo())
+                        .min()
+                        .unwrap_or(usize::MAX);
+                    assert_eq!(c.store_split, expect, "store_split vs suffix oracle");
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn corrupted_load_split_is_a_typed_load_split_error() {
+    let (mut sp, cfg) = planned(41, 10, 16, 2, 1);
+    sp.blocks_mut()[0].startup[0].load_split += 1;
+    let mut r = Report::new(VerifyLevel::Full);
+    verify_seqplan(&sp, 41, 10, &cfg, true, VerifyLevel::Full, &mut r);
+    assert!(matches!(r.errors.first(), Some(Error::LoadSplit { .. })), "{:?}", r.errors);
+    assert_eq!(r.errors[0].code(), "load-split");
+}
+
+#[test]
+fn corrupted_store_split_is_a_typed_store_split_error() {
+    let (mut sp, cfg) = planned(41, 10, 16, 2, 1);
+    sp.blocks_mut()[0].startup[0].store_split += 1;
+    let mut r = Report::new(VerifyLevel::Full);
+    verify_seqplan(&sp, 41, 10, &cfg, true, VerifyLevel::Full, &mut r);
+    assert!(matches!(r.errors.first(), Some(Error::StoreSplit { .. })), "{:?}", r.errors);
+}
+
+#[test]
+fn out_of_range_column_interval_is_a_typed_footprint_error() {
+    let (mut sp, cfg) = planned(41, 10, 16, 2, 1);
+    let last = sp.blocks_mut()[0].shutdown.last_mut().unwrap();
+    last.v0 += 1;
+    let mut r = Report::new(VerifyLevel::Full);
+    verify_seqplan(&sp, 41, 10, &cfg, true, VerifyLevel::Full, &mut r);
+    assert!(matches!(r.errors.first(), Some(Error::Footprint { .. })), "{:?}", r.errors);
+}
+
+#[test]
+fn block_count_mismatch_is_a_typed_blocks_error() {
+    // Planned for k = 10 (one clamped k-block), verified against k = 100
+    // (three): the §5 decomposition disagrees with the schedule.
+    let (sp, cfg) = planned(41, 10, 16, 2, 1);
+    let mut r = Report::new(VerifyLevel::Full);
+    verify_seqplan(&sp, 41, 100, &cfg, true, VerifyLevel::Full, &mut r);
+    assert!(matches!(r.errors.first(), Some(Error::Blocks { .. })), "{:?}", r.errors);
+    assert_eq!(r.errors[0].code(), "coverage");
+}
+
+#[test]
+fn partition_sweep_verifies_and_holes_are_typed_partition_errors() {
+    property(
+        "verify ⊨ partition_rows",
+        0x7A27,
+        120,
+        |rng| {
+            (
+                rng.next_below(4000),
+                1 + rng.next_below(40),
+                1 + rng.next_below(33),
+            )
+        },
+        |&(m, threads, mr)| {
+            let parts = partition_rows(m, threads, mr);
+            let mut r = Report::new(VerifyLevel::Full);
+            verify_partition(&parts, m, threads, mr, &mut r);
+            assert!(r.ok(), "partition_rows({m},{threads},{mr}): {:?}", r.errors);
+        },
+    );
+    let mut parts = partition_rows(100, 4, 16);
+    parts[0].1 -= 8;
+    let mut r = Report::new(VerifyLevel::Full);
+    verify_partition(&parts, 100, 4, 16, &mut r);
+    assert!(matches!(r.errors.first(), Some(Error::Partition { .. })), "{:?}", r.errors);
+}
+
+#[test]
+fn config_violations_are_typed_bounds_and_kernel_size_errors() {
+    let mut fat = plan(16, 2, CacheParams::PAPER_MACHINE, 1);
+    fat.nb += 9999; // blows Eq 5.2 regardless of rounding slack
+    let mut r = Report::new(VerifyLevel::Full);
+    verify_config(&fat, None, Some(CacheParams::PAPER_MACHINE), false, &mut r);
+    assert!(matches!(r.errors.first(), Some(Error::Bounds { .. })), "{:?}", r.errors);
+
+    let mut alien = plan(16, 2, CacheParams::PAPER_MACHINE, 1);
+    alien.mr = 7; // no dispatch arm
+    let mut r = Report::new(VerifyLevel::Full);
+    verify_config(&alien, None, None, false, &mut r);
+    assert!(matches!(r.errors.first(), Some(Error::KernelSize { .. })), "{:?}", r.errors);
+    assert_eq!(r.errors[0].code(), "kernel-size");
+}
+
+#[test]
+fn builder_verifies_by_default_and_can_opt_out() {
+    let built = RotationPlan::builder()
+        .shape(32, 41, 6)
+        .cache(CacheParams::PAPER_MACHINE)
+        .build()
+        .expect("default build passes its own verifier");
+    // Re-verify externally at Full level, with the same solve cache.
+    let report = verify_plan(&built, Some(CacheParams::PAPER_MACHINE), VerifyLevel::Full);
+    assert!(report.ok(), "{:?}", report.errors);
+    assert!(report.blocks >= 1);
+    assert!(report.calls >= 1);
+
+    RotationPlan::builder()
+        .shape(32, 41, 6)
+        .cache(CacheParams::PAPER_MACHINE)
+        .verify(false)
+        .build()
+        .expect("opting out of verification still builds");
+}
+
+#[test]
+fn non_kernel_plans_verify_trivially() {
+    let built = RotationPlan::builder()
+        .shape(8, 9, 2)
+        .algorithm(rotseq::kernel::Algorithm::Naive)
+        .build()
+        .expect("naive build");
+    let report = verify_plan(&built, None, VerifyLevel::Full);
+    assert!(report.ok());
+    assert_eq!(report.blocks, 0);
+}

@@ -1,7 +1,15 @@
-//! `cargo xtask lint` — source-level lints for the rotseq unsafe core.
+//! Repo-local build tasks.
+//!
+//! * `cargo xtask lint` — source-level lints for the rotseq unsafe core.
+//! * `cargo xtask verify [--mutate]` — the plan-schedule verifier corpus:
+//!   sweeps the adversarial shape corpus (every case must PASS) or, with
+//!   `--mutate`, the corrupted-schedule corpus (every case must be
+//!   REJECTed with its expected error code). One verdict line per case
+//!   on stdout; `tools/verify.py` must emit byte-identical lines (the
+//!   same parity contract CI enforces for `tools/lint.py`).
 //!
 //! Four lint families, all pure-std text analysis (no syn/proc-macro
-//! dependencies, so the task builds offline and in seconds):
+//! dependencies, so the lint builds offline and in seconds):
 //!
 //! 1. **SAFETY comments** — every `unsafe { … }` block and every
 //!    `unsafe impl` must be preceded (within a few lines, or trailed on
@@ -11,8 +19,10 @@
 //!    with a `# Safety` section spelling out its caller contract.
 //! 3. **Forbidden APIs** — no `static mut` anywhere; no `transmute`
 //!    outside the SIMD shim allowlist; no `unwrap()` / `.expect(` in
-//!    non-test code under `plan/`, `coordinator/`, or `tune/` (hot
-//!    serving paths return typed errors instead of aborting).
+//!    non-test code under `plan/`, `coordinator/`, `tune/`, or `verify/`
+//!    (hot serving paths — and the verifier, which must stay panic-free
+//!    on adversarially corrupted schedules — return typed errors
+//!    instead of aborting).
 //! 4. **Kernel drift** — the `(m_r, k_r)` footprints in
 //!    `SUPPORTED_KERNELS` (kernel/microkernel.rs) must exactly match the
 //!    `dispatch_sizes!` monomorphization table (kernel/mod.rs), and every
@@ -33,10 +43,29 @@ fn main() -> ExitCode {
     let cmd = args.first().map(String::as_str).unwrap_or("lint");
     match cmd {
         "lint" => run_lint(),
+        "verify" => run_verify(args.iter().any(|a| a == "--mutate")),
         other => {
-            eprintln!("unknown xtask `{other}` (available: lint)");
+            eprintln!("unknown xtask `{other}` (available: lint, verify)");
             ExitCode::FAILURE
         }
+    }
+}
+
+/// `cargo xtask verify [--mutate]`: run the schedule-verifier corpus and
+/// print one verdict line per case. Verdict lines go to stdout (CI diffs
+/// them against `tools/verify.py`), the summary to stderr.
+fn run_verify(mutate: bool) -> ExitCode {
+    let (lines, ok) = rotseq::verify::corpus_verdicts(mutate);
+    for line in &lines {
+        println!("{line}");
+    }
+    let mode = if mutate { "mutation" } else { "shape" };
+    if ok {
+        eprintln!("xtask verify: {} {mode} cases ok", lines.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("xtask verify: FAILURES in {} {mode} cases", lines.len());
+        ExitCode::FAILURE
     }
 }
 
@@ -46,7 +75,7 @@ const TRANSMUTE_ALLOWLIST: &[&str] = &["src/kernel/microkernel.rs"];
 
 /// Directories (relative to `src/`) where `unwrap()`/`expect(` are
 /// forbidden outside `#[cfg(test)]` code.
-const NO_PANIC_DIRS: &[&str] = &["plan/", "coordinator/", "tune/"];
+const NO_PANIC_DIRS: &[&str] = &["plan/", "coordinator/", "tune/", "verify/"];
 
 fn run_lint() -> ExitCode {
     // xtask lives at <crate>/xtask; the crate under lint is its parent.

@@ -10,7 +10,8 @@ Families:
   1. every `unsafe { … }` block / `unsafe impl` needs a `// SAFETY:` comment
   2. every `unsafe fn` needs a `# Safety` doc section
   3. forbidden APIs: `static mut`; `transmute` outside the SIMD shims;
-     `unwrap()`/`.expect(` in non-test code under plan/, coordinator/, tune/
+     `unwrap()`/`.expect(` in non-test code under plan/, coordinator/,
+     tune/, verify/
   4. SUPPORTED_KERNELS ↔ dispatch_sizes! drift (incl. KRP1 == KR + 1)
 """
 
@@ -20,7 +21,7 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent / "rust"
 TRANSMUTE_ALLOWLIST = {"src/kernel/microkernel.rs"}
-NO_PANIC_DIRS = ("plan/", "coordinator/", "tune/")
+NO_PANIC_DIRS = ("plan/", "coordinator/", "tune/", "verify/")
 SAFETY_WINDOW = 10
 
 

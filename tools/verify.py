@@ -1,0 +1,567 @@
+#!/usr/bin/env python3
+"""Python mirror of `cargo xtask verify` (rust/src/verify/ + xtask).
+
+The container this repo grows in has no Rust toolchain, so this mirror
+lets the plan-schedule verifier run pre-commit; CI runs both and diffs
+the stdout verdict lines byte-for-byte (the same parity contract as
+tools/lint.py). Keep the two in sync — the Rust crate is the source of
+truth for behavior; every function here names its Rust counterpart.
+
+What it does, end to end, with no Rust involved:
+  1. re-derives each corpus case's KernelConfig from the Eq 5.1-5.6
+     solver arithmetic (blocking/planner.rs: plan_bounds / try_plan);
+  2. reconstructs the k-block kernel schedules exactly as the planner
+     builds them (kernel/phases.rs: plan_kblock_into, including the
+     forward-frontier / backward-suffix-min threshold passes);
+  3. runs the same abstract-interpretation passes as rust/src/verify/
+     in the same order, so the first error code matches verbatim;
+  4. prints one verdict line per corpus case, identical to the Rust
+     runner's stdout.
+
+Usage: tools/verify.py [--mutate]   (exit 0 iff every case lands right)
+"""
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent / "rust"
+
+# usize::MAX: the store_split sentinel on final call chains.
+UMAX = (1 << 64) - 1
+
+# CacheParams::PAPER_MACHINE (blocking/mod.rs).
+PAPER = (4_000, 32_000, 4_480_000)
+
+
+def supported_kernels():
+    """SUPPORTED_KERNELS, parsed from the source of truth
+    (kernel/microkernel.rs) so the corpus can never drift from it."""
+    micro = (ROOT / "src/kernel/microkernel.rs").read_text()
+    at = micro.find("SUPPORTED_KERNELS")
+    tail = micro[at:]
+    tail = tail[tail.find("=") :]
+    return [
+        (int(a), int(b))
+        for a, b in re.findall(
+            r"\(\s*(\d+)\s*,\s*(\d+)\s*\)", tail[tail.find("[") : tail.find("]")]
+        )
+    ]
+
+
+SUPPORTED = supported_kernels()
+
+
+# --- blocking/planner.rs -------------------------------------------------
+
+
+def round_down(x, multiple):
+    return x if multiple == 0 else x // multiple * multiple
+
+
+def round_down_capped(x, multiple):
+    r = round_down(x, multiple)
+    return r if r >= multiple else x
+
+
+def mb_headroomed(mb_bound, mr):
+    h = round_down(mb_bound * 4800 // 16231, mr)
+    return h if h >= mr else round_down_capped(mb_bound, mr)
+
+
+def plan_bounds(mr, kr, cache):
+    """planner.rs plan_bounds: the Eq 5.2/5.4/5.6 solve + rounding."""
+    t1, t2, t3 = cache
+    nb_bound = max(t1 - mr * kr, 0) // (mr + 2 * kr)
+    nb = round_down_capped(nb_bound, 8)
+    kb_bound = 0 if nb == 0 else max(t2 - mr * nb, 0) // (mr + 2 * nb)
+    kb = round_down_capped(kb_bound, kr)
+    mb_bound = 0 if nb + kb == 0 else t3 // (nb + kb)
+    mb = mb_headroomed(mb_bound, mr)
+    return dict(nb_bound=nb_bound, kb_bound=kb_bound, mb_bound=mb_bound,
+                nb=nb, kb=kb, mb=mb)
+
+
+def solve_cache_for(cache, threads):
+    """planner.rs solve_cache_for: per-worker L3 share, clamped >= T2."""
+    t1, t2, t3 = cache
+    return (t1, t2, max(t3 // max(threads, 1), t2))
+
+
+def eq_bounds_ok(cfg, cache):
+    """KernelConfig::validate_bounds (blocking/mod.rs), sans messages.
+    Rust saturates; these corpus values are far from overflow, so plain
+    integer arithmetic is exact here."""
+    t1, t2, t3 = cache
+    mr, kr, mb, kb, nb = cfg["mr"], cfg["kr"], cfg["mb"], cfg["kb"], cfg["nb"]
+    if mr * (nb + kr) + 2 * nb * kr > t1:
+        return False
+    if mr * (nb + kb) + 2 * nb * kb > t2:
+        return False
+    if mb * (nb + kb) > t3:
+        return False
+    return True
+
+
+def try_plan(mr, kr, cache, threads):
+    """planner.rs try_plan: returns (cfg, bounds) or (None, None)."""
+    cache = solve_cache_for(cache, threads)
+    b = plan_bounds(mr, kr, cache)
+    if not (b["nb"] >= 1 and b["kb"] >= 1 and b["mb"] >= 1):
+        return None, None
+    cfg = dict(mr=mr, kr=kr, mb=b["mb"], kb=b["kb"], nb=b["nb"],
+               threads=max(threads, 1))
+    if not eq_bounds_ok(cfg, cache):
+        return None, None
+    return cfg, b
+
+
+# --- parallel/scheduler.rs ----------------------------------------------
+
+
+def partition_rows(m, threads, mr):
+    """scheduler.rs partition_rows: balanced m_r-quantum row chunks."""
+    threads = max(threads, 1)
+    mr = max(mr, 1)
+    if m == 0:
+        return []
+    quanta = -(-m // mr)
+    t = min(threads, quanta)
+    share, extras = divmod(quanta, t)
+    out = []
+    r0 = 0
+    for i in range(t):
+        q = share + (1 if i >= t - extras else 0)
+        rows = min(q * mr, m - r0)
+        out.append((r0, rows))
+        r0 += rows
+    return out
+
+
+# --- kernel/phases.rs ----------------------------------------------------
+
+
+class Call:
+    """KernelCall, structurally (the C/S stream values are irrelevant to
+    verification; only nwaves is)."""
+
+    __slots__ = ("v0", "full_group", "p0", "width", "load_split",
+                 "store_split", "nwaves")
+
+    def __init__(self, p0, width, v0, nwaves, full_group):
+        self.p0 = p0
+        self.width = width
+        self.v0 = v0
+        self.nwaves = nwaves
+        self.full_group = full_group
+        self.load_split = 0
+        self.store_split = 0
+
+    def col_lo(self):
+        return self.v0 + 1 - self.width
+
+    def col_hi(self):
+        return self.v0 + self.nwaves
+
+
+class KBlock:
+    """KBlockPlan: startup / pipeline chunks / shutdown call lists."""
+
+    def __init__(self, startup, pipeline, shutdown):
+        self.startup = startup
+        self.pipeline = pipeline
+        self.shutdown = shutdown
+
+    def calls(self):
+        """KBlockPlan::calls — schedule (application) order."""
+        yield from self.startup
+        for chunk in self.pipeline:
+            yield from chunk
+        yield from self.shutdown
+
+
+def plan_kblock(n, pb, kb, kr, nb):
+    """phases.rs plan_kblock_into: construction + threshold passes."""
+    startup, pipeline, shutdown = [], [], []
+    for l in range(kb):
+        end = kb - 1 - l
+        if end > 0:
+            startup.append(Call(pb + l, 1, 0, end, False))
+    w0, w_hi = kb - 1, n - 1
+    while w0 < w_hi:
+        w1 = min(w0 + nb, w_hi)
+        chunk = []
+        full_groups = kb // kr
+        for g in range(full_groups):
+            l0 = g * kr
+            chunk.append(Call(pb + l0, kr, w0 - l0, w1 - w0, True))
+        for l in range(full_groups * kr, kb):
+            chunk.append(Call(pb + l, 1, w0 - l, w1 - w0, False))
+        pipeline.append(chunk)
+        w0 = w1
+    for l in range(1, kb):
+        shutdown.append(Call(pb + l, 1, n - 1 - l, l, False))
+    plan = KBlock(startup, pipeline, shutdown)
+    frontier = 0
+    for c in plan.calls():
+        c.load_split = frontier
+        frontier = max(frontier, c.col_hi() + 1)
+    future_min = UMAX
+    for c in reversed(list(plan.calls())):
+        c.store_split = future_min
+        future_min = min(future_min, c.col_lo())
+    return plan
+
+
+def kblock_spans(n, k, kb):
+    """kernel/mod.rs for_each_kblock."""
+    if n < 2 or k == 0:
+        return []
+    kb_max = max(min(kb, n - 1), 1)
+    spans = []
+    pb = 0
+    while pb < k:
+        kbe = min(kb_max, k - pb)
+        spans.append((pb, kbe))
+        pb += kbe
+    return spans
+
+
+def memops(block, first, last, rows, mr):
+    """KBlockPlan::memops — the closed-form ledger the oracle checks."""
+    chunks = max(-(-rows // mr), 1)
+    padded = chunks * mr
+    live = rows
+    sl = ss = pl = ps = 0
+    for c in block.calls():
+        lo, hi = c.col_lo(), c.col_hi()
+        ncols = hi - lo + 1
+        load_split = c.load_split if first else UMAX
+        store_split = c.store_split if last else 0
+        sl_cols = (hi + 1 - max(load_split, lo)) if load_split <= hi else 0
+        ss_cols = (min(store_split - 1, hi) + 1 - lo) if store_split > lo else 0
+        sl += sl_cols * live
+        pl += (ncols - sl_cols) * padded
+        ss += ss_cols * live
+        ps += (ncols - ss_cols) * padded
+    return (sl, ss, pl, ps)
+
+
+# --- rust/src/verify/schedule.rs ----------------------------------------
+# Always the Full level (the corpus runners use Full on both sides).
+# Every pass stops at the first violation, so the returned code matches
+# Rust's report.errors.first() exactly.
+
+
+def verify_kblock(bp, pb, kbe, n, kr):
+    """schedule.rs verify_kblock: footprint -> forward frontier ->
+    backward suffix-min -> op totals -> per-op interpretation."""
+    calls = list(bp.calls())
+    # Pass 1 — footprint.
+    for c in calls:
+        want_width = kr if c.full_group else 1
+        if c.width != want_width:
+            return "footprint"
+        if c.nwaves == 0:
+            return "footprint"
+        if c.v0 + 1 < c.width:
+            return "footprint"
+        if c.v0 + c.nwaves > n - 1:
+            return "footprint"
+        if c.p0 < pb:
+            return "footprint"
+        if c.p0 + c.width > pb + kbe:
+            return "footprint"
+    # Pass 2 — forward frontier.
+    frontier = 0
+    for c in calls:
+        if c.col_lo() > frontier:
+            return "column-gap"
+        if c.load_split != frontier:
+            return "load-split"
+        frontier = max(frontier, c.col_hi() + 1)
+    # Pass 3 — backward suffix-min.
+    future_min = UMAX
+    for c in reversed(calls):
+        if c.store_split != future_min:
+            return "store-split"
+        future_min = min(future_min, c.col_lo())
+    # Pass 4 — op totals.
+    ops = [0] * kbe
+    for c in calls:
+        for s in range(c.width):
+            ops[c.p0 - pb + s] += c.nwaves
+    for done in ops:
+        if done != n - 1:
+            return "coverage"
+    # Pass 5 — per-op interpretation.
+    done = [0] * kbe
+    for c in calls:
+        for t in range(c.nwaves):
+            for s in range(c.width):
+                i = c.v0 + t - s
+                l = c.p0 - pb + s
+                if i != done[l]:
+                    return "op-order"
+                if l > 0 and done[l - 1] < min(i + 2, n - 1):
+                    return "cross-dep"
+                done[l] = i + 1
+    for d in done:
+        if d != n - 1:
+            return "coverage"
+    return None
+
+
+def verify_provenance(blocks, n, fused):
+    """schedule.rs verify_provenance: per-column storage state machine."""
+    nblocks = len(blocks)
+    strided = [fused] * n
+    for bidx, bp in enumerate(blocks):
+        first = fused and bidx == 0
+        last = fused and bidx + 1 == nblocks
+        for c in bp.calls():
+            for col in range(c.col_lo(), c.col_hi() + 1):
+                want = first and col >= c.load_split
+                if strided[col] != want:
+                    return "provenance"
+                strided[col] = last and col < c.store_split
+    for s in strided:
+        if s != fused:
+            return "provenance"
+    return None
+
+
+def verify_ledger(blocks, mr):
+    """schedule.rs verify_ledger: brute-force per-column counts must
+    equal the closed-form memops ledger."""
+    mr = max(mr, 1)
+    for bp in blocks:
+        for first, last in ((False, False), (False, True), (True, False),
+                            (True, True)):
+            for rows in (1, mr, mr + 1):
+                chunks = max(-(-rows // mr), 1)
+                padded = chunks * mr
+                live = rows
+                sl = ss = pl = ps = 0
+                for c in bp.calls():
+                    for col in range(c.col_lo(), c.col_hi() + 1):
+                        if first and col >= c.load_split:
+                            sl += live
+                        else:
+                            pl += padded
+                        if last and col < c.store_split:
+                            ss += live
+                        else:
+                            ps += padded
+                if (sl, ss, pl, ps) != memops(bp, first, last, rows, mr):
+                    return "ledger"
+    return None
+
+
+def verify_seqplan(blocks, spans, n, kr, fused, mr):
+    """schedule.rs verify_seqplan. Returns (code|None, blocks, calls)."""
+    ncalls = sum(len(list(bp.calls())) for bp in blocks)
+    if len(blocks) != len(spans):
+        return "coverage", len(blocks), ncalls
+    for bp, (pb, kbe) in zip(blocks, spans):
+        err = verify_kblock(bp, pb, kbe, n, kr)
+        if err:
+            return err, len(blocks), ncalls
+    if blocks:
+        err = verify_provenance(blocks, n, fused)
+        if err:
+            return err, len(blocks), ncalls
+        err = verify_ledger(blocks, mr)
+        if err:
+            return err, len(blocks), ncalls
+    return None, len(blocks), ncalls
+
+
+def verify_partition(parts, m, threads, mr):
+    """schedule.rs verify_partition, same check order."""
+    threads = max(threads, 1)
+    mr = max(mr, 1)
+    if m == 0:
+        return "partition" if parts else None
+    if len(parts) != min(threads, -(-m // mr)):
+        return "partition"
+    nxt = 0
+    for r0, rows in parts:
+        if r0 != nxt:
+            return "partition"
+        if rows == 0:
+            return "partition"
+        nxt = r0 + rows
+    for _, rows in parts[:-1]:
+        if rows % mr != 0:
+            return "partition"
+    if nxt != m:
+        return "partition"
+    sizes = [rows for _, rows in parts]
+    if max(sizes) - min(sizes) > mr:
+        return "partition"
+    return None
+
+
+def verify_config(cfg, bounds, cache, tuned):
+    """schedule.rs verify_config, same check order."""
+    if (cfg["mr"], cfg["kr"]) not in SUPPORTED:
+        return "kernel-size"
+    for v in (cfg["mb"], cfg["kb"], cfg["nb"], cfg["threads"]):
+        if v == 0:
+            return "bounds"
+    if bounds is not None and not tuned:
+        if cfg["nb"] > bounds["nb_bound"]:
+            return "bounds"
+        if cfg["kb"] > bounds["kb_bound"]:
+            return "bounds"
+        if cfg["mb"] > bounds["mb_bound"]:
+            return "bounds"
+    if cache is not None and not eq_bounds_ok(cfg, cache):
+        return "bounds"
+    return None
+
+
+# --- rust/src/verify/corpus.rs ------------------------------------------
+
+
+def shape_corpus():
+    """corpus.rs shape_corpus, same cases in the same order."""
+    cases = []
+    for mr, kr in SUPPORTED:
+        for threads, fused in ((1, True), (3, False)):
+            cases.append((6 * mr + 1, 41, 10, mr, kr, threads, fused))
+    for m, n, k, threads, fused in (
+        (5, 41, 10, 1, True),
+        (97, 2, 3, 2, True),
+        (64, 12, 180, 1, True),
+        (33, 300, 8, 4, True),
+        (40, 41, 10, 32, False),
+        (0, 41, 10, 4, True),
+    ):
+        cases.append((m, n, k, 16, 2, threads, fused))
+    return cases
+
+
+MUTATIONS = (
+    ("swap-calls", "load-split"),
+    ("shift-load-split", "load-split"),
+    ("shift-store-split", "store-split"),
+    ("bump-v0", "footprint"),
+    ("flip-full-group", "footprint"),
+    ("shrink-partition", "partition"),
+    ("inflate-nb", "bounds"),
+)
+
+MUT_BASE = (100, 41, 10, 16, 2, 4, True)
+
+
+def case_head(prefix, case):
+    m, n, k, mr, kr, t, fused = case
+    mode = "fused" if fused else "staged"
+    return f"{prefix} m={m} n={n} k={k} mr={mr} kr={kr} t={t} {mode}"
+
+
+def build_blocks(n, k, cfg):
+    spans = kblock_spans(n, k, cfg["kb"])
+    return [plan_kblock(n, pb, kbe, cfg["kr"], cfg["nb"]) for pb, kbe in spans], spans
+
+
+def run_shape(case):
+    """corpus.rs run_shape: same sub-verifier sequence, first code wins."""
+    m, n, k, mr, kr, t, fused = case
+    head = case_head("shape", case)
+    cache = solve_cache_for(PAPER, t)
+    cfg, bounds = try_plan(mr, kr, PAPER, t)
+    if cfg is None:
+        return f"{head}: FAIL plan-infeasible", False
+    err, nblocks, ncalls = None, 0, 0
+    if n >= 2 and k > 0:
+        blocks, spans = build_blocks(n, k, cfg)
+        err, nblocks, ncalls = verify_seqplan(blocks, spans, n, cfg["kr"],
+                                              fused, cfg["mr"])
+    if err is None and t > 1:
+        parts = partition_rows(m, cfg["threads"], cfg["mr"])
+        if parts:
+            err = verify_partition(parts, m, cfg["threads"], cfg["mr"])
+    if err is None:
+        err = verify_config(cfg, bounds, cache, False)
+    if err is None:
+        return f"{head}: PASS blocks={nblocks} calls={ncalls}", True
+    return f"{head}: FAIL {err}", False
+
+
+def run_mutation(kind, expected):
+    """corpus.rs run_mutation: corrupt, verify, demand the exact code."""
+    case = MUT_BASE
+    m, n, k, mr, kr, t, fused = case
+    head = case_head(f"mut {kind}", case)
+    cache = solve_cache_for(PAPER, t)
+    cfg, bounds = try_plan(mr, kr, PAPER, t)
+    if cfg is None:
+        return f"{head}: FAIL plan-infeasible", False
+    err = None
+    if kind in ("swap-calls", "shift-load-split", "shift-store-split",
+                "bump-v0", "flip-full-group"):
+        blocks, spans = build_blocks(n, k, cfg)
+        b0 = blocks[0]
+        if kind == "swap-calls":
+            chunk = b0.pipeline[0]
+            if len(chunk) >= 2:
+                chunk[0], chunk[1] = chunk[1], chunk[0]
+        elif kind == "shift-load-split":
+            b0.startup[0].load_split += 1
+        elif kind == "shift-store-split":
+            b0.startup[0].store_split += 1
+        elif kind == "bump-v0":
+            b0.shutdown[-1].v0 += 1
+        elif kind == "flip-full-group":
+            b0.pipeline[0][0].full_group = False
+        err, _, _ = verify_seqplan(blocks, spans, n, cfg["kr"], fused,
+                                   cfg["mr"])
+    elif kind == "shrink-partition":
+        parts = partition_rows(m, cfg["threads"], cfg["mr"])
+        r0, rows = parts[0]
+        parts[0] = (r0, max(rows - 8, 0))
+        err = verify_partition(parts, m, cfg["threads"], cfg["mr"])
+    else:  # inflate-nb
+        bad = dict(cfg)
+        bad["nb"] = bounds["nb_bound"] + 8
+        err = verify_config(bad, bounds, cache, False)
+    if err is None:
+        return f"{head}: ACCEPT (BAD)", False
+    if err == expected:
+        return f"{head}: REJECT {err}", True
+    return f"{head}: REJECT {err} (WANT {expected})", False
+
+
+def corpus_verdicts(mutate):
+    lines, ok = [], True
+    if mutate:
+        for kind, expected in MUTATIONS:
+            line, good = run_mutation(kind, expected)
+            lines.append(line)
+            ok &= good
+    else:
+        for case in shape_corpus():
+            line, good = run_shape(case)
+            lines.append(line)
+            ok &= good
+    return lines, ok
+
+
+def main():
+    mutate = "--mutate" in sys.argv[1:]
+    lines, ok = corpus_verdicts(mutate)
+    for line in lines:
+        print(line)
+    mode = "mutation" if mutate else "shape"
+    if ok:
+        print(f"verify.py: {len(lines)} {mode} cases ok", file=sys.stderr)
+        return 0
+    print(f"verify.py: FAILURES in {len(lines)} {mode} cases", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
