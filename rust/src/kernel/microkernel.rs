@@ -273,7 +273,7 @@ fn load_col_v<const V: usize>(data: &[f64], ld: usize, r0: usize, j: usize) -> [
     let mut out = [f64x4::splat(0.0); V];
     for v in 0..V {
         // SAFETY: see contract above; `wave_kernel` asserts the maximal
-        // index of the whole schedule before dispatching here.
+        // index of the whole schedule before dispatching here. [INV-LANES]
         let lane = unsafe { data.get_unchecked(base + 4 * v..base + 4 * v + 4) };
         out[v] = f64x4::from_slice(lane);
     }
@@ -293,7 +293,7 @@ fn store_col_v<const V: usize>(
     let base = j * ld + r0;
     debug_assert!(base + 4 * V <= data.len());
     for v in 0..V {
-        // SAFETY: see `load_col_v`.
+        // SAFETY: see `load_col_v`. [INV-LANES]
         let lane = unsafe { data.get_unchecked_mut(base + 4 * v..base + 4 * v + 4) };
         vals[v].copy_to_slice(lane);
     }
@@ -304,7 +304,7 @@ fn store_col_v<const V: usize>(
 #[inline(always)]
 fn load_op<Op: PairOp>(ops: &[f64], at: usize) -> Op {
     debug_assert!(at + Op::WIDTH <= ops.len());
-    // SAFETY: `at` is `t * per_wave + u * WIDTH` with `t < nwaves`.
+    // SAFETY: `at` is `t * per_wave + u * WIDTH` with `t < nwaves`. [INV-LANES]
     Op::load(unsafe { ops.get_unchecked(at..at + Op::WIDTH) })
 }
 
@@ -430,7 +430,7 @@ fn load_col_at<const V: usize>(data: &[f64], base: usize) -> [f64x4; V] {
     debug_assert!(base + 4 * V <= data.len());
     let mut out = [f64x4::splat(0.0); V];
     for v in 0..V {
-        // SAFETY: see `load_col_v`.
+        // SAFETY: see `load_col_v`. [INV-LANES]
         let lane = unsafe { data.get_unchecked(base + 4 * v..base + 4 * v + 4) };
         out[v] = f64x4::from_slice(lane);
     }
@@ -442,7 +442,7 @@ fn load_col_at<const V: usize>(data: &[f64], base: usize) -> [f64x4; V] {
 fn store_col_at<const V: usize>(data: &mut [f64], base: usize, vals: &[f64x4; V]) {
     debug_assert!(base + 4 * V <= data.len());
     for v in 0..V {
-        // SAFETY: see `load_col_v`.
+        // SAFETY: see `load_col_v`. [INV-LANES]
         let lane = unsafe { data.get_unchecked_mut(base + 4 * v..base + 4 * v + 4) };
         vals[v].copy_to_slice(lane);
     }
@@ -491,7 +491,7 @@ unsafe fn load_col_io<const MR: usize>(
     } else {
         // SAFETY: caller contract — column `j`, rows
         // `[sc.r0, sc.r0 + sc.live)` are in bounds of the live buffer
-        // behind `sc.src`, and `r < sc.live` here.
+        // behind `sc.src`, and `r < sc.live` here. [INV-LANES]
         unsafe {
             let base = sc.src.add(j * sc.ld + sc.r0);
             for (r, slot) in col.iter_mut().take(sc.live).enumerate() {
@@ -518,7 +518,7 @@ unsafe fn store_col_io<const MR: usize>(
     if j < store_split {
         // SAFETY: caller contract — column `j`, rows
         // `[sc.r0, sc.r0 + sc.live)` are in bounds and writable, and
-        // `r < sc.live` here.
+        // `r < sc.live` here. [INV-LANES]
         unsafe {
             let base = sc.src.add(j * sc.ld + sc.r0);
             for (r, v) in col.iter().take(sc.live).enumerate() {
@@ -576,13 +576,13 @@ pub unsafe fn wave_kernel_io<Op: PairOp, const MR: usize, const KR: usize, const
     for s in 0..KR {
         // SAFETY: caller contract — the wave schedule touches columns
         // `[j0, j0 + nwaves + KR)`, all covered by `sc` and `packed`
-        // (bound re-checked by the debug_assert above).
+        // (bound re-checked by the debug_assert above). [INV-LANES]
         win[s] = unsafe { load_col_io::<MR>(packed, sc, j0 + s, load_split) };
     }
     for t in 0..nwaves {
         let phase = t % KRP1;
         let in_slot = (phase + KR) % KRP1;
-        // SAFETY: `j0 + t + KR < j0 + nwaves + KR` — in the schedule window.
+        // SAFETY: `j0 + t + KR < j0 + nwaves + KR` — in the schedule window. [INV-LANES]
         win[in_slot] = unsafe { load_col_io::<MR>(packed, sc, j0 + t + KR, load_split) };
         let sbase = t * KR * Op::WIDTH;
         let wave_ops = &ops[sbase..sbase + KR * Op::WIDTH];
@@ -598,7 +598,7 @@ pub unsafe fn wave_kernel_io<Op: PairOp, const MR: usize, const KR: usize, const
             }
         }
         let out = win[phase];
-        // SAFETY: `j0 + t` is in the schedule window (caller contract).
+        // SAFETY: `j0 + t` is in the schedule window (caller contract). [INV-LANES]
         unsafe { store_col_io::<MR>(packed, sc, j0 + t, &out, store_split) };
     }
     // Drain the KR carried columns from their final slots.
@@ -606,7 +606,7 @@ pub unsafe fn wave_kernel_io<Op: PairOp, const MR: usize, const KR: usize, const
         let slot = (nwaves + s) % KRP1;
         let out = win[slot];
         // SAFETY: `j0 + nwaves + s` is the carried column's final home,
-        // still inside the schedule window `[j0, j0 + nwaves + KR)`.
+        // still inside the schedule window `[j0, j0 + nwaves + KR)`. [INV-LANES]
         unsafe { store_col_io::<MR>(packed, sc, j0 + nwaves + s, &out, store_split) };
     }
 }
@@ -788,7 +788,7 @@ mod tests {
                 };
                 // SAFETY: `sc` points at a live `MR x n` matrix with
                 // `r0 + live = MR <= rows`, `packed` holds `MR * n`
-                // doubles, and `stream` was packed for columns `[0, n)`.
+                // doubles, and `stream` was packed for columns `[0, n)`. [INV-LANES]
                 unsafe {
                     wave_kernel_io::<Givens, MR, 2, 3>(
                         &mut packed,
@@ -843,7 +843,7 @@ mod tests {
         };
         // SAFETY: `sc` points at a live `live x n` matrix with
         // `live <= MR` pad lanes zero-filled by the loads, `packed` holds
-        // `MR * n` doubles, and `stream` covers columns `[0, n)`.
+        // `MR * n` doubles, and `stream` covers columns `[0, n)`. [INV-LANES]
         unsafe {
             // All-fresh loads, all-final stores: single-pass strided to
             // strided through the register window.

@@ -488,7 +488,7 @@ pub unsafe fn run_panel_planned_fused<Op: PairOp>(
             // SAFETY: caller contract on `sp`, narrowed to this chunk
             // group: `gsp` covers rows `[sp.r0 + c0·mr, …)` with
             // `gsp.rows <= sp.rows - c0·mr`, and the panel slice holds
-            // `gc` chunks of `stride` doubles.
+            // `gc` chunks of `stride` doubles. [INV-WINDOW]
             unsafe {
                 dispatch_kblock_fused::<Op>(
                     &mut panel.data_mut()[c0 * stride..(c0 + gc) * stride],
@@ -650,7 +650,7 @@ unsafe fn dispatch_kblock_fused<Op: PairOp>(
     macro_rules! case {
         ($mr:literal, $kr:literal, $krp1:literal) => {
             // SAFETY: caller contract (identical to run_kblock_fused's),
-            // forwarded verbatim to the monomorphized instance.
+            // forwarded verbatim to the monomorphized instance. [INV-WINDOW]
             unsafe {
                 phases::run_kblock_fused::<Op, $mr, $kr, $krp1>(
                     data,

@@ -421,7 +421,7 @@ unsafe fn run_call_fused<Op: PairOp, const MR: usize, const KR: usize, const KRP
         run_call::<Op, MR, KR, KRP1>(data, MR, 0, call);
     } else if call.full_group {
         // SAFETY: caller contract — `sc`/`data` cover every column of
-        // `call`, whose stream starts at wave `call.v0 + 1 - KR`.
+        // `call`, whose stream starts at wave `call.v0 + 1 - KR`. [INV-WINDOW]
         unsafe {
             wave_kernel_io::<Op, MR, KR, KRP1>(
                 data,
@@ -433,7 +433,7 @@ unsafe fn run_call_fused<Op: PairOp, const MR: usize, const KR: usize, const KRP
             );
         }
     } else {
-        // SAFETY: caller contract, single-wave remainder group.
+        // SAFETY: caller contract, single-wave remainder group. [INV-WINDOW]
         unsafe {
             wave_kernel_io::<Op, MR, 1, 2>(data, sc, call.v0, &call.stream, load_split, store_split)
         };
@@ -483,7 +483,7 @@ pub unsafe fn run_kblock_fused<Op: PairOp, const MR: usize, const KR: usize, con
         for c in 0..chunks {
             // SAFETY: caller contract on `sp` — `chunk_io(c)` covers rows
             // `[sp.r0 + c·MR, …)` with `live <= MR`, and the chunk's
-            // packed storage starts at `c * chunk_stride`.
+            // packed storage starts at `c * chunk_stride`. [INV-SPLITS]
             unsafe {
                 run_call_fused::<Op, MR, KR, KRP1>(
                     &mut data[c * chunk_stride..],
@@ -504,7 +504,7 @@ pub unsafe fn run_kblock_fused<Op: PairOp, const MR: usize, const KR: usize, con
             let panel = &mut data[c * chunk_stride..];
             for call in chunk_calls {
                 // SAFETY: as above — same chunk descriptor and packed
-                // panel, replayed for each pipelined subgroup call.
+                // panel, replayed for each pipelined subgroup call. [INV-SPLITS]
                 unsafe { run_call_fused::<Op, MR, KR, KRP1>(panel, &sc, call, first, last) };
             }
         }
@@ -512,7 +512,7 @@ pub unsafe fn run_kblock_fused<Op: PairOp, const MR: usize, const KR: usize, con
     for call in &plan.shutdown {
         for c in 0..chunks {
             // SAFETY: as above — shutdown calls touch the same rows and
-            // columns under the same caller contract.
+            // columns under the same caller contract. [INV-SPLITS]
             unsafe {
                 run_call_fused::<Op, MR, KR, KRP1>(
                     &mut data[c * chunk_stride..],
@@ -783,7 +783,7 @@ mod tests {
             };
             // SAFETY: `sp` describes the live `m x n` matrix `fused`
             // (ld >= m = r0 + rows), accessed by this thread only, and
-            // `packed` holds `chunks` chunks of `stride` doubles.
+            // `packed` holds `chunks` chunks of `stride` doubles. [INV-PROV]
             unsafe {
                 run_kblock_fused::<Givens, 8, 2, 3>(
                     &mut packed, chunks, stride, &plan, sp, true, true,
@@ -822,7 +822,7 @@ mod tests {
             plan_kblock_into(&mut kplan, &seq, pb, kb, 2, 4);
             // SAFETY: `sp` describes the live `m x n` matrix `fused`,
             // single-threaded here; `packed` holds `chunks * stride`
-            // doubles and persists across both blocks.
+            // doubles and persists across both blocks. [INV-PROV]
             unsafe {
                 run_kblock_fused::<Givens, 8, 2, 3>(
                     &mut packed,

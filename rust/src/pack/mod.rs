@@ -127,7 +127,7 @@ impl PackedPanel {
     /// same-shaped matrix perform zero allocations here.
     pub fn pack_from(&mut self, a: &Matrix, r0: usize, rows: usize) {
         // SAFETY: `a` is a live, exclusively-borrowed-by-nobody-else
-        // column-major matrix; its accessors guarantee the layout contract.
+        // column-major matrix; its accessors guarantee the layout contract. [INV-PROV]
         unsafe { self.pack_from_raw(a.data().as_ptr(), a.ld(), a.rows(), r0, rows, a.cols()) }
     }
 
@@ -166,7 +166,7 @@ impl PackedPanel {
                 // SAFETY: caller contract — `src` covers `src_rows x cols`
                 // at stride `ld`, and `cr0 + live <= r0 + rows <= src_rows`
                 // (asserted on entry), so the `live` elements at column
-                // `j`, row `cr0` are readable.
+                // `j`, row `cr0` are readable. [INV-WINDOW]
                 let col = unsafe { std::slice::from_raw_parts(src.add(j * ld + cr0), live) };
                 dst[base + j * mr..base + j * mr + live].copy_from_slice(col);
                 // Rows live..mr are padding; the buffer is reused, so zero
@@ -194,7 +194,7 @@ impl PackedPanel {
     pub fn unpack(&self, a: &mut Matrix, r0: usize) {
         assert_eq!(self.cols, a.cols());
         let (ld, rows) = (a.ld(), a.rows());
-        // SAFETY: exclusive borrow of `a`; layout per the Matrix contract.
+        // SAFETY: exclusive borrow of `a`; layout per the Matrix contract. [INV-PROV]
         unsafe { self.unpack_to_raw(a.data_mut().as_mut_ptr(), ld, rows, r0) }
     }
 
@@ -219,7 +219,7 @@ impl PackedPanel {
                 // SAFETY: caller contract — `dst` covers `dst_rows x cols`
                 // at stride `ld`, `cr0 + live <= r0 + self.rows <=
                 // dst_rows` (asserted on entry), and this call holds the
-                // only access to rows `[r0, r0 + self.rows)`.
+                // only access to rows `[r0, r0 + self.rows)`. [INV-WINDOW]
                 let col = unsafe { std::slice::from_raw_parts_mut(dst.add(j * ld + cr0), live) };
                 col.copy_from_slice(&src[base + j * self.mr..base + j * self.mr + live]);
             }

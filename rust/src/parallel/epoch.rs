@@ -20,12 +20,16 @@
 //!   out, runs it outside the lock, and reports via [`EpochGate::complete`]
 //!   — which decrements `remaining` and notifies `done` when it hits zero.
 //!
-//! Invariants the loom model proves and [`EpochGate::complete`] asserts:
-//! a payload is only ever observed under the epoch it was published for
-//! (`complete` panics on a stale epoch — the raw pointers a payload
-//! carries must never outlive their dispatch), every worker observes
-//! every epoch exactly once, and no wakeup is lost across
-//! publish/notify/wait races.
+//! Invariants the loom model proves and completion checks: a payload is
+//! only ever observed under the epoch it was published for — a stale
+//! completion (the raw pointers a payload carries must never outlive
+//! their dispatch) is recorded as a sticky [`StaleEpoch`] violation by
+//! [`EpochGate::try_complete`] (the abort-safe worker path; the
+//! dispatcher surfaces it via [`EpochGate::take_violation`]) or panicked
+//! by [`EpochGate::complete`]; every worker observes every epoch exactly
+//! once; and no wakeup is lost across publish/notify/wait races.
+//! [`dispatch_hb_edges`] exports the happens-before order a dispatch
+//! establishes as data, consumed by the `verify::races` analyzer.
 //!
 //! [loom]: https://docs.rs/loom
 
@@ -33,6 +37,52 @@
 use loom::sync::{Condvar, Mutex, MutexGuard};
 #[cfg(not(loom))]
 use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// A node of the happens-before order one dispatch establishes. Pure
+/// data: the race analyzer ([`crate::verify::races`]) builds its graph
+/// from [`dispatch_hb_edges`] so the edges it reasons over come from
+/// this file — the same lines the loom model checks — rather than from
+/// a hand-copied description that could drift.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HbNode {
+    /// The dispatcher publishing the payload (everything the dispatcher
+    /// did before `dispatch` is ordered before this).
+    Publish,
+    /// Worker `w` running the payload.
+    Worker(usize),
+    /// The dispatcher observing `remaining == 0` (everything after
+    /// `dispatch` returns is ordered after this).
+    Join,
+}
+
+/// The happens-before edges one `dispatch(workers, ..)` call creates:
+/// the publish (mutex release + `work` notify) is ordered before every
+/// worker's payload copy, and each worker's [`EpochGate::complete`]
+/// (mutex acquire, `remaining` decrement) is ordered before the
+/// dispatcher's return from its `done` wait. Workers are mutually
+/// *unordered* — exactly why their footprints must be disjoint.
+pub fn dispatch_hb_edges(workers: usize) -> Vec<(HbNode, HbNode)> {
+    let mut edges = Vec::with_capacity(2 * workers);
+    for w in 0..workers {
+        edges.push((HbNode::Publish, HbNode::Worker(w)));
+        edges.push((HbNode::Worker(w), HbNode::Join));
+    }
+    edges
+}
+
+/// A completion that arrived for a retired (or never-dispatched) epoch:
+/// the payload copy a worker was retiring outlived its dispatch. Kept
+/// as plain data so the worker drop path can *record* it instead of
+/// panicking — a panic there during unwinding would abort the process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StaleEpoch {
+    /// The epoch the completion claimed.
+    pub completed: u64,
+    /// The gate's live epoch at that moment.
+    pub live: u64,
+    /// Workers still outstanding on the live epoch.
+    pub remaining: usize,
+}
 
 struct GateState<P, E> {
     /// Monotonic dispatch counter; `0` = nothing ever published.
@@ -43,6 +93,10 @@ struct GateState<P, E> {
     remaining: usize,
     /// First error reported against the live epoch.
     error: Option<E>,
+    /// First stale completion ever observed (sticky until taken): a
+    /// protocol violation recorded instead of panicking so unwinding
+    /// workers cannot double-panic in their drop path.
+    violation: Option<StaleEpoch>,
     shutdown: bool,
 }
 
@@ -71,6 +125,7 @@ impl<P: Copy, E> EpochGate<P, E> {
                 task: None,
                 remaining: 0,
                 error: None,
+                violation: None,
                 shutdown: false,
             }),
             work: Condvar::new(),
@@ -151,17 +206,25 @@ impl<P: Copy, E> EpochGate<P, E> {
     /// [`Self::next_task`], with the worker's error if any (first one
     /// wins).
     ///
-    /// Panics if `epoch` is not the live epoch: a completion — and hence
-    /// the payload copy (with any raw pointers inside it) the worker is
-    /// retiring — must never outlive its dispatch epoch.
-    pub fn complete(&self, epoch: u64, error: Option<E>) {
+    /// A completion for a non-live epoch — the payload copy (with any
+    /// raw pointers inside it) outlived its dispatch — is a protocol
+    /// violation. It is *recorded* in the gate (sticky, first one wins;
+    /// see [`Self::take_violation`]) and returned as `Err` rather than
+    /// panicked: the worker loop reports completions on its unwind path
+    /// too, and a panic inside a panic aborts the process.
+    pub fn try_complete(&self, epoch: u64, error: Option<E>) -> Result<(), StaleEpoch> {
         let mut st = self.lock();
-        assert!(
-            epoch == st.epoch && st.remaining > 0,
-            "epoch {epoch} completion outlived its dispatch epoch (live: {}, remaining: {})",
-            st.epoch,
-            st.remaining
-        );
+        if epoch != st.epoch || st.remaining == 0 {
+            let v = StaleEpoch {
+                completed: epoch,
+                live: st.epoch,
+                remaining: st.remaining,
+            };
+            if st.violation.is_none() {
+                st.violation = Some(v);
+            }
+            return Err(v);
+        }
         if let Some(e) = error {
             if st.error.is_none() {
                 st.error = Some(e);
@@ -171,6 +234,26 @@ impl<P: Copy, E> EpochGate<P, E> {
         if st.remaining == 0 {
             self.done.notify_all();
         }
+        Ok(())
+    }
+
+    /// [`Self::try_complete`] for contexts that are *not* unwinding:
+    /// panics on a stale epoch (the historical contract, kept for tests
+    /// and direct protocol users).
+    pub fn complete(&self, epoch: u64, error: Option<E>) {
+        if let Err(v) = self.try_complete(epoch, error) {
+            panic!(
+                "epoch {} completion outlived its dispatch epoch (live: {}, remaining: {})",
+                v.completed, v.live, v.remaining
+            );
+        }
+    }
+
+    /// Take the first recorded stale-completion violation, if any. The
+    /// dispatcher checks this after every dispatch and surfaces it as a
+    /// typed error in place of the panic the worker suppressed.
+    pub fn take_violation(&self) -> Option<StaleEpoch> {
+        self.lock().violation.take()
     }
 
     /// Tell every worker (current and future callers of

@@ -27,5 +27,6 @@ pub mod speedup_model;
 
 mod scheduler;
 
-pub use pool::{MatView, WorkerPool};
+pub use epoch::{dispatch_hb_edges, HbNode, StaleEpoch};
+pub use pool::{dispatch_spec, MatView, TaskSpec, WorkerPool};
 pub use scheduler::{apply_parallel, apply_parallel_packed, partition_rows};

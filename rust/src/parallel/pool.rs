@@ -59,7 +59,7 @@ pub struct MatView {
 // SAFETY: a MatView is a dumb pointer + shape; the dispatch protocol
 // guarantees it is only dereferenced while the underlying matrix is
 // exclusively borrowed by the dispatching caller, and workers touch
-// disjoint row ranges.
+// disjoint row ranges. [INV-EPOCH]
 unsafe impl Send for MatView {}
 unsafe impl Sync for MatView {}
 
@@ -104,7 +104,7 @@ struct SendPtr<T>(*const T);
 // the data is never written during the dispatch, so shared reads from
 // many threads are benign. `EpochGate::complete` panics on a stale epoch,
 // turning any protocol violation (a pointer outliving its dispatch) into
-// an immediate, attributable failure instead of a silent use-after-free.
+// an immediate, attributable failure instead of a silent use-after-free. [INV-EPOCH]
 unsafe impl<T> Send for SendPtr<T> {}
 
 impl<T> Clone for SendPtr<T> {
@@ -128,7 +128,7 @@ impl<T> SendPtr<T> {
     /// (i.e. before the worker's `complete` for that epoch).
     unsafe fn index(&self, i: usize) -> &T {
         // SAFETY: in bounds and epoch-live per this fn's contract; the
-        // source slice is not mutated during the dispatch.
+        // source slice is not mutated during the dispatch. [INV-EPOCH]
         unsafe { &*self.0.add(i) }
     }
 }
@@ -142,7 +142,7 @@ struct SendPtrMut<T>(*mut T);
 // the pointed-to slice is exclusively borrowed by `run_planned` for the
 // whole dispatch, and worker `w` only ever forms `&mut` to element `w`
 // (one element per worker, checked against `nparts`), so no two threads
-// alias the same element.
+// alias the same element. [INV-DISJOINT]
 unsafe impl<T> Send for SendPtrMut<T> {}
 
 impl<T> Clone for SendPtrMut<T> {
@@ -166,9 +166,43 @@ impl<T> SendPtrMut<T> {
     /// `i` must be in bounds of the slice this pointer was built from.
     unsafe fn at(&self, i: usize) -> *mut T {
         // SAFETY: in bounds per this fn's contract, so the offset stays
-        // inside the source allocation.
+        // inside the source allocation. [INV-EPOCH]
         unsafe { self.0.add(i) }
     }
+}
+
+/// Pure-data description of one worker's share of a dispatch: the §7
+/// row chunk it owns in every matrix view and the workspace unit it is
+/// allowed to form `&mut` to. This is the task-footprint seam the
+/// static race analyzer ([`crate::verify::races`]) consumes — the same
+/// assignment `run_chunk` executes, exported as data so the analyzer
+/// reasons over what the pool actually does, not a redescription.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TaskSpec {
+    /// Worker index within the dispatch.
+    pub worker: usize,
+    /// First row of the worker's chunk.
+    pub r0: usize,
+    /// Rows in the chunk.
+    pub rows: usize,
+    /// Index of the [`PanelWorkspace`] unit this worker exclusively
+    /// owns (`units[unit]`); always `worker` in a real dispatch.
+    pub unit: usize,
+}
+
+/// The worker-task assignment [`WorkerPool::run_planned`] dispatches
+/// for a §7 partition: worker `w` gets rows `parts[w]` and unit `w`.
+pub fn dispatch_spec(parts: &[(usize, usize)]) -> Vec<TaskSpec> {
+    parts
+        .iter()
+        .enumerate()
+        .map(|(w, &(r0, rows))| TaskSpec {
+            worker: w,
+            r0,
+            rows,
+            unit: w,
+        })
+        .collect()
 }
 
 /// Monomorphized worker entry: runs worker `w`'s share of the task.
@@ -257,7 +291,7 @@ impl WorkerPool {
         // The borrows captured here stay alive across the whole dispatch:
         // `dispatch` blocks until every worker completed the epoch, which
         // is what makes the SendPtr Send impls sound.
-        self.gate.dispatch(self.handles.len(), |epoch| Task {
+        let outcome = self.gate.dispatch(self.handles.len(), |epoch| Task {
             run: run_chunk::<Op>,
             mats: SendPtr::new(mats.as_ptr()),
             nmats: mats.len(),
@@ -268,7 +302,20 @@ impl WorkerPool {
             cfg: *cfg,
             fused,
             epoch,
-        })
+        });
+        // A stale completion is recorded by the gate (the worker side is
+        // abort-safe and cannot panic there) and surfaced here as a typed
+        // error: the pool's pointer protocol was violated.
+        if let Some(v) = self.gate.take_violation() {
+            return Err(anyhow!(
+                "pool protocol violation: epoch {} completion outlived its \
+                 dispatch epoch (live: {}, remaining: {})",
+                v.completed,
+                v.live,
+                v.remaining
+            ));
+        }
+        outcome
     }
 }
 
@@ -296,7 +343,12 @@ fn worker_loop(gate: &EpochGate<Task, anyhow::Error>, w: usize) {
         } else {
             Ok(())
         };
-        gate.complete(seen, result.err());
+        // Abort-safe completion: a stale epoch here is recorded in the
+        // gate and surfaced by the dispatcher (`run_planned`) as a typed
+        // error. Panicking instead — as `complete` does — could
+        // double-panic if this thread is already unwinding through the
+        // catch above, turning a reportable bug into a process abort.
+        let _ = gate.try_complete(seen, result.err());
     }
 }
 
@@ -307,25 +359,25 @@ fn worker_loop(gate: &EpochGate<Task, anyhow::Error>, w: usize) {
 fn run_chunk<Op: PairOp>(t: &Task, w: usize) -> Result<()> {
     // SAFETY: `w < t.nparts == units.len()` (checked by the caller in
     // `worker_loop` against the `run_planned` ensure), and we are inside
-    // the dispatch epoch that published these pointers.
+    // the dispatch epoch that published these pointers. [INV-DISJOINT]
     let (r0, rows) = unsafe { *t.parts.index(w) };
     // SAFETY: in bounds as above; worker `w` is the only thread that forms
     // a reference to unit `w`, and the dispatcher's exclusive borrow of the
-    // units slice is live for the whole epoch.
+    // units slice is live for the whole epoch. [INV-DISJOINT]
     let unit = unsafe { &mut *t.units.at(w) };
     // SAFETY: `seqplan` points at a single epoch-live SeqPlan that no
-    // thread mutates during the dispatch.
+    // thread mutates during the dispatch. [INV-EPOCH]
     let sp = unsafe { t.seqplan.index(0) };
     for b in 0..t.nmats {
         // SAFETY: `b < t.nmats == mats.len()`; the views are read-only
-        // shape + pointer descriptors.
+        // shape + pointer descriptors. [INV-EPOCH]
         let mv = unsafe { *t.mats.index(b) };
         if t.fused {
             unit.panel.prepare(rows, mv.cols);
             // SAFETY: `mv` describes a matrix exclusively borrowed by the
             // dispatcher for this epoch; rows `[r0, r0+rows)` belong to
             // this worker alone (disjoint §7 partition), and the strided
-            // view stays in bounds (`r0 + rows <= mv.rows <= mv.ld`).
+            // view stays in bounds (`r0 + rows <= mv.rows <= mv.ld`). [INV-DISJOINT]
             unsafe {
                 run_panel_planned_fused::<Op>(
                     &mut unit.panel,
@@ -342,13 +394,13 @@ fn run_chunk<Op: PairOp>(t: &Task, w: usize) -> Result<()> {
         } else {
             // SAFETY: same disjoint-rows/in-bounds argument as the fused
             // branch — pack reads and unpack writes touch only this
-            // worker's `[r0, r0+rows)` rows of the epoch-live matrix.
+            // worker's `[r0, r0+rows)` rows of the epoch-live matrix. [INV-DISJOINT]
             unsafe {
                 unit.panel
                     .pack_from_raw(mv.data, mv.ld, mv.rows, r0, rows, mv.cols)
             };
             run_panel_planned::<Op>(&mut unit.panel, sp, &t.cfg)?;
-            // SAFETY: as above.
+            // SAFETY: as above. [INV-DISJOINT]
             unsafe { unit.panel.unpack_to_raw(mv.data, mv.ld, mv.rows, r0) };
         }
     }

@@ -203,6 +203,44 @@ mod tests {
         );
     }
 
+    /// Every partition the scheduler produces also passes the static
+    /// race analyzer: the footprint × happens-before graph built from
+    /// its chunks is race-free in all three execution modes, and
+    /// sliding one chunk into its neighbour is caught as a typed
+    /// write-write race (not merely a partition-shape error).
+    #[test]
+    fn partitions_build_race_free_graphs() {
+        use crate::verify::{build_graph, check_graph, race_spec, Error};
+
+        let seq = RotationSequence::random(24, 6, 11);
+        for (m, threads) in [(100, 4), (65, 8), (7, 3), (33, 2), (960, 7)] {
+            for fused in [false, true] {
+                let c = cfg(threads);
+                let mut sp = SeqPlan::new();
+                sp.plan_into(&seq, &c);
+                let parts = partition_rows(m, c.threads, c.mr);
+                let base = race_spec(&sp, m, 24, &parts, &c, fused);
+                for spec in [base.clone(), base.clone().inverse(), base.clone().batch(3)] {
+                    assert!(
+                        check_graph(&build_graph(&spec)).is_none(),
+                        "m={m} t={threads} fused={fused}: clean partition flagged racy"
+                    );
+                }
+
+                if parts.len() >= 2 {
+                    let mut bad = parts.clone();
+                    bad[1].0 = bad[1].0.saturating_sub(4);
+                    bad[1].1 += 4; // reach back into worker 0's rows
+                    let spec = race_spec(&sp, m, 24, &bad, &c, fused);
+                    assert!(
+                        matches!(check_graph(&build_graph(&spec)), Some(Error::RaceWW { .. })),
+                        "m={m} t={threads} fused={fused}: overlap not caught as race-ww"
+                    );
+                }
+            }
+        }
+    }
+
     #[test]
     fn parallel_matches_naive() {
         for threads in [1, 2, 3, 7] {

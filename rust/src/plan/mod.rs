@@ -193,7 +193,7 @@ fn replay_serial_fused(
         let rows = mb.min(m - ib);
         unit.panel.prepare(rows, cols);
         // SAFETY: `a` is exclusively borrowed for the whole loop; panels
-        // cover disjoint row ranges `[ib, ib + rows)` and `ld >= m`.
+        // cover disjoint row ranges `[ib, ib + rows)` and `ld >= m`. [INV-DISJOINT]
         unsafe {
             kernel::run_panel_planned_fused::<Givens>(
                 &mut unit.panel,
@@ -372,7 +372,9 @@ impl PlanBuilder {
     /// the Eq 5.1–5.6 bounds are all re-derived and a violation fails
     /// the build with the first typed error. Debug builds check at
     /// [`crate::verify::VerifyLevel::Full`] (per-op interpretation,
-    /// provenance, memop-ledger oracle); release builds use the
+    /// provenance, memop-ledger oracle, and the static race analyzer's
+    /// footprint × happens-before pass over every execution mode);
+    /// release builds use the
     /// O(calls) [`crate::verify::VerifyLevel::Quick`] subset — plan
     /// construction is cold, so the check is effectively free. Disable
     /// only for benchmarking plan construction itself.

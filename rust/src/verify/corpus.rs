@@ -2,13 +2,18 @@
 //! an adversarial shape sweep (every supported kernel, serial + pooled,
 //! fused + staged, plus degenerate shapes) that must PASS, and a
 //! mutation corpus (corrupted schedules, partitions, and configs) that
-//! must be REJECTED with a specific [`Error::code`].
+//! must be REJECTED with a specific [`Error::code`]. `--races` swaps in
+//! the race analyzer's corpora: the same shape sweep checked race-free
+//! across all three execution modes, and a 6-class race-injection
+//! corpus ([`RaceMutationKind`]) rejected code-for-code.
 //!
 //! Everything here is replicated line-for-line by `tools/verify.py`
 //! (which reconstructs the same schedules from the same planner
 //! arithmetic): the verdict lines — including the first-error codes —
 //! must match verbatim, and CI diffs the two outputs.
 
+use super::footprint::RegionKind;
+use super::races::{build_graph, check_graph, race_spec, NodeAccess};
 use super::{Report, VerifyLevel};
 use super::{verify_config, verify_partition, verify_seqplan};
 use crate::blocking::{plan_bounds_for, solve_cache_for, try_plan, CacheParams};
@@ -220,6 +225,208 @@ fn run_shape(case: &ShapeCase) -> (String, bool) {
             true,
         ),
         Some(e) => (format!("{head}: FAIL {}", e.code()), false),
+    }
+}
+
+/// The race-injection corpus: six defect classes, each corrupting the
+/// pure-data execution description (or the built happens-before graph)
+/// the way a real bug in the §7 dispatch layer would, and each required
+/// to be rejected with a specific race code.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RaceMutationKind {
+    /// Shift the second §7 chunk down so two workers write the same
+    /// matrix rows.
+    OverlapParts,
+    /// Point worker 1 at worker 0's packed-panel unit.
+    SharedPanel,
+    /// Add a stray node between publish and join that writes the C/S
+    /// stream arena the workers are reading.
+    ArenaWriteAfterPublish,
+    /// Alias two batch targets onto one matrix at a sub-`m_r` row
+    /// offset, so the workers' chunk boundaries no longer line up.
+    BatchAlias,
+    /// Make worker 1 touch worker 0's private scratch.
+    ScratchShared,
+    /// Drop the last worker's completion edge to the join.
+    MissingJoin,
+}
+
+impl RaceMutationKind {
+    /// Stable corpus name (also used by `tools/verify.py`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RaceMutationKind::OverlapParts => "overlap-parts",
+            RaceMutationKind::SharedPanel => "shared-panel",
+            RaceMutationKind::ArenaWriteAfterPublish => "arena-write-after-publish",
+            RaceMutationKind::BatchAlias => "batch-alias",
+            RaceMutationKind::ScratchShared => "scratch-shared",
+            RaceMutationKind::MissingJoin => "missing-join",
+        }
+    }
+
+    /// The [`super::Error::code`] the race pass must reject this with.
+    pub fn expected_code(&self) -> &'static str {
+        match self {
+            RaceMutationKind::OverlapParts => "race-ww",
+            RaceMutationKind::SharedPanel => "race-ww",
+            RaceMutationKind::ArenaWriteAfterPublish => "race-rw",
+            RaceMutationKind::BatchAlias => "race-ww",
+            RaceMutationKind::ScratchShared => "shared-mut-scratch",
+            RaceMutationKind::MissingJoin => "epoch-unordered",
+        }
+    }
+}
+
+/// Every race-injection class, in corpus order.
+pub fn race_mutation_corpus() -> Vec<RaceMutationKind> {
+    vec![
+        RaceMutationKind::OverlapParts,
+        RaceMutationKind::SharedPanel,
+        RaceMutationKind::ArenaWriteAfterPublish,
+        RaceMutationKind::BatchAlias,
+        RaceMutationKind::ScratchShared,
+        RaceMutationKind::MissingJoin,
+    ]
+}
+
+/// Run the race corpus and render one verdict line per case: the
+/// positive sweep checks every shape case's three execution modes
+/// (`execute`, `execute_inverse`, 3-target `execute_batch`) race-free;
+/// `mutate` runs the race-injection classes instead. Line format and
+/// codes are mirrored byte-for-byte by `tools/verify.py --races`.
+pub fn race_verdicts(mutate: bool) -> (Vec<String>, bool) {
+    let mut lines = Vec::new();
+    let mut ok = true;
+    if mutate {
+        for kind in race_mutation_corpus() {
+            let (line, good) = run_race_mutation(kind);
+            lines.push(line);
+            ok &= good;
+        }
+    } else {
+        for case in shape_corpus() {
+            let (line, good) = run_race_shape(&case);
+            lines.push(line);
+            ok &= good;
+        }
+    }
+    (lines, ok)
+}
+
+fn run_race_shape(case: &ShapeCase) -> (String, bool) {
+    let head = case_head("race", case);
+    let cfg = match try_plan(case.mr, case.kr, CacheParams::PAPER_MACHINE, case.threads) {
+        Ok(c) => c,
+        Err(_) => return (format!("{head}: FAIL plan-infeasible"), false),
+    };
+    let mut sp = SeqPlan::new();
+    if case.n >= 2 && case.k > 0 {
+        let ident = RotationSequence::identity(case.n, case.k);
+        sp.plan_into(&ident, &cfg);
+    }
+    let parts = if case.threads > 1 {
+        partition_rows(case.m, cfg.threads, cfg.mr)
+    } else {
+        Vec::new()
+    };
+    let base = race_spec(&sp, case.m, case.n, &parts, &cfg, case.fused);
+    let tasks = base.tasks.len();
+    let modes = [base.clone(), base.clone().inverse(), base.batch(3)];
+    for spec in &modes {
+        if let Some(e) = check_graph(&build_graph(spec)) {
+            return (format!("{head}: FAIL {}", e.code()), false);
+        }
+    }
+    (format!("{head}: PASS tasks={tasks} modes=3"), true)
+}
+
+fn run_race_mutation(kind: RaceMutationKind) -> (String, bool) {
+    let case = MUT_BASE;
+    let head = case_head(&format!("race-mut {}", kind.name()), &case);
+    let cfg = match try_plan(case.mr, case.kr, CacheParams::PAPER_MACHINE, case.threads) {
+        Ok(c) => c,
+        Err(_) => return (format!("{head}: FAIL plan-infeasible"), false),
+    };
+    let ident = RotationSequence::identity(case.n, case.k);
+    let mut sp = SeqPlan::new();
+    sp.plan_into(&ident, &cfg);
+    let parts = partition_rows(case.m, cfg.threads, cfg.mr);
+    let err = match kind {
+        RaceMutationKind::OverlapParts => {
+            let mut parts = parts;
+            if let Some(p) = parts.get_mut(1) {
+                p.0 = p.0.saturating_sub(4);
+            }
+            let spec = race_spec(&sp, case.m, case.n, &parts, &cfg, case.fused);
+            check_graph(&build_graph(&spec))
+        }
+        RaceMutationKind::SharedPanel => {
+            let mut spec = race_spec(&sp, case.m, case.n, &parts, &cfg, case.fused);
+            if let Some(t) = spec.tasks.get_mut(1) {
+                t.unit = 0;
+            }
+            check_graph(&build_graph(&spec))
+        }
+        RaceMutationKind::ArenaWriteAfterPublish => {
+            let spec = race_spec(&sp, case.m, case.n, &parts, &cfg, case.fused);
+            let bytes = spec.stream_bytes;
+            let mut g = build_graph(&spec);
+            let streams = g
+                .regions
+                .iter()
+                .position(|k| matches!(k, RegionKind::Streams));
+            let idx = g.nodes.len();
+            g.nodes.push(NodeAccess::new(g.regions.len()));
+            if let (Some(r), Some(node)) = (streams, g.nodes.last_mut()) {
+                node.write(r, 0, bytes);
+            }
+            g.edges.push((g.publish, idx));
+            g.edges.push((idx, g.join));
+            check_graph(&g)
+        }
+        RaceMutationKind::BatchAlias => {
+            let mut spec = race_spec(&sp, case.m, case.n, &parts, &cfg, case.fused).batch(2);
+            if let Some(v) = spec.views.get_mut(1) {
+                v.region = 0;
+                v.row_offset = case.mr / 2;
+            }
+            check_graph(&build_graph(&spec))
+        }
+        RaceMutationKind::ScratchShared => {
+            let spec = race_spec(&sp, case.m, case.n, &parts, &cfg, case.fused);
+            let mut g = build_graph(&spec);
+            let scratch0 = g
+                .regions
+                .iter()
+                .position(|k| matches!(k, RegionKind::Scratch(0)));
+            let intruder = g.workers.get(1).copied();
+            if let (Some(r), Some(w1)) = (scratch0, intruder) {
+                if let Some(node) = g.nodes.get_mut(w1) {
+                    node.read(r, 0, 1);
+                    node.write(r, 0, 1);
+                }
+            }
+            check_graph(&g)
+        }
+        RaceMutationKind::MissingJoin => {
+            let spec = race_spec(&sp, case.m, case.n, &parts, &cfg, case.fused);
+            let mut g = build_graph(&spec);
+            if let Some(&last) = g.workers.last() {
+                let join = g.join;
+                g.edges.retain(|&(a, b)| !(a == last && b == join));
+            }
+            check_graph(&g)
+        }
+    };
+    match err {
+        None => (format!("{head}: ACCEPT (BAD)"), false),
+        Some(e) if e.code() == kind.expected_code() => {
+            (format!("{head}: REJECT {}", e.code()), true)
+        }
+        Some(e) => (
+            format!("{head}: REJECT {} (WANT {})", e.code(), kind.expected_code()),
+            false,
+        ),
     }
 }
 

@@ -1,0 +1,196 @@
+//! Byte-interval footprints for the race analyzer.
+//!
+//! The §7 pool's aliasing argument is quantitative: worker `w` touches
+//! rows `[r0, r0 + rows)` of the caller's matrix, panel unit `w`, and
+//! nothing else another worker writes. This module gives that argument a
+//! unit of account — half-open byte intervals over named address regions
+//! — so [`super::races`] can intersect exact footprints instead of
+//! trusting the prose on `SendPtr`/`SendPtrMut`.
+//!
+//! Everything here is derived from the *planned schedule* (the same
+//! `SeqPlan`/partition data the unsafe core consumes), never from live
+//! pointers: the analysis runs at plan-build time, before any unsafe
+//! code does.
+
+use crate::kernel::SeqPlan;
+
+/// One addressable region of a planned execution. Region *indices* are
+/// assigned by [`super::races::build_graph`]: matrix views first (one
+/// region per distinct caller matrix), then the packed-panel arena, the
+/// C/S stream arena, and one scratch region per worker task.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RegionKind {
+    /// A caller matrix (column-major, `ld * cols` doubles). The payload
+    /// is the matrix's index within the dispatch (0 except for batch).
+    Matrix(usize),
+    /// The per-worker packed-panel units, modeled as ONE region: unit
+    /// `w` is a sub-range, so a shared unit shows up as an overlap.
+    Units,
+    /// The shared C/S wave-stream arena (`SeqPlan` buffer): written by
+    /// the prologue pack, read-only for every worker.
+    Streams,
+    /// Per-worker private scratch (gemm accumulators, spill buffers),
+    /// modeled as a 1-byte marker owned by the payload task: any second
+    /// task touching it is a structural sharing violation regardless of
+    /// byte ranges.
+    Scratch(usize),
+}
+
+/// A set of half-open byte intervals `[lo, hi)`, kept sorted, disjoint,
+/// and merged. `push` maintains the invariant, so a set is always ready
+/// for intersection.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct IntervalSet {
+    spans: Vec<(usize, usize)>,
+}
+
+impl IntervalSet {
+    pub fn new() -> Self {
+        Self { spans: Vec::new() }
+    }
+
+    /// Union `[lo, hi)` into the set (empty intervals are ignored).
+    /// Adjacent spans merge — the set models *coverage*, and two
+    /// touching spans cover the same bytes as their union.
+    pub fn push(&mut self, lo: usize, hi: usize) {
+        if lo >= hi {
+            return;
+        }
+        self.spans.push((lo, hi));
+        self.spans.sort_unstable();
+        let mut merged: Vec<(usize, usize)> = Vec::with_capacity(self.spans.len());
+        for &(a, b) in &self.spans {
+            match merged.last_mut() {
+                Some(last) if a <= last.1 => last.1 = last.1.max(b),
+                _ => merged.push((a, b)),
+            }
+        }
+        self.spans = merged;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// The sorted, disjoint spans (exposed for the brute-force oracle
+    /// in `tests/race_props.rs`).
+    pub fn spans(&self) -> &[(usize, usize)] {
+        &self.spans
+    }
+
+    /// Lowest byte offset contained in both sets, if any — a sort-merge
+    /// sweep over the two sorted span lists.
+    pub fn first_overlap(&self, other: &IntervalSet) -> Option<usize> {
+        let (mut i, mut j) = (0, 0);
+        while i < self.spans.len() && j < other.spans.len() {
+            let (a0, a1) = self.spans[i];
+            let (b0, b1) = other.spans[j];
+            let lo = a0.max(b0);
+            let hi = a1.min(b1);
+            if lo < hi {
+                return Some(lo);
+            }
+            if a1 <= b1 {
+                i += 1;
+            } else {
+                j += 1;
+            }
+        }
+        None
+    }
+}
+
+/// The column sets a worker touches *in the caller's strided matrix*,
+/// derived from the planned schedule exactly the way the kernels decide
+/// layout:
+///
+/// * staged pipelines pack every column in and unpack every column out,
+///   so both sets are the full `[0, n)`;
+/// * fused pipelines strided-load column `c` only in the FIRST k-block
+///   and only when `c >= load_split` at that call (§4 forward
+///   frontier), and strided-store only in the LAST k-block when
+///   `c <= store_split - 1` (backward suffix-min).
+///
+/// Returned as `(reads, writes)` in column units (the caller scales by
+/// rows × 8 bytes per its view geometry).
+pub fn schedule_col_sets(sp: &SeqPlan, n: usize, fused: bool) -> (IntervalSet, IntervalSet) {
+    let mut reads = IntervalSet::new();
+    let mut writes = IntervalSet::new();
+    if !fused {
+        reads.push(0, n);
+        writes.push(0, n);
+        return (reads, writes);
+    }
+    let blocks = sp.blocks();
+    if let Some(b0) = blocks.first() {
+        for c in b0.calls() {
+            let lo = c.col_lo().max(c.load_split);
+            let hi = c.col_hi();
+            if lo <= hi {
+                reads.push(lo, hi + 1);
+            }
+        }
+    }
+    if let Some(bl) = blocks.last() {
+        for c in bl.calls() {
+            let lo = c.col_lo();
+            let hi = c.col_hi().min(c.store_split.saturating_sub(1));
+            if lo <= hi {
+                writes.push(lo, hi + 1);
+            }
+        }
+    }
+    (reads, writes)
+}
+
+/// Bytes of the shared C/S stream arena the schedule occupies: every
+/// call stores `nwaves * width` rotations at 2 doubles (C, S) each.
+pub fn stream_arena_bytes(sp: &SeqPlan) -> usize {
+    let mut total = 0usize;
+    for b in sp.blocks() {
+        for c in b.calls() {
+            total = total.saturating_add(c.stream.nwaves().saturating_mul(c.width) * 16);
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_merges_and_sorts() {
+        let mut s = IntervalSet::new();
+        s.push(10, 20);
+        s.push(0, 5);
+        s.push(18, 30);
+        s.push(5, 5); // empty, ignored
+        assert_eq!(s.spans(), &[(0, 5), (10, 30)]);
+        s.push(5, 10); // adjacent on both sides: fuses everything
+        assert_eq!(s.spans(), &[(0, 30)]);
+    }
+
+    #[test]
+    fn first_overlap_finds_lowest_byte() {
+        let mut a = IntervalSet::new();
+        a.push(0, 10);
+        a.push(20, 30);
+        let mut b = IntervalSet::new();
+        b.push(10, 20); // only touches, half-open: no overlap
+        assert_eq!(a.first_overlap(&b), None);
+        b.push(25, 40);
+        assert_eq!(a.first_overlap(&b), Some(25));
+        assert_eq!(b.first_overlap(&a), Some(25));
+    }
+
+    #[test]
+    fn empty_sets_never_overlap() {
+        let e = IntervalSet::new();
+        let mut a = IntervalSet::new();
+        a.push(0, 100);
+        assert!(e.is_empty());
+        assert_eq!(e.first_overlap(&a), None);
+        assert_eq!(a.first_overlap(&e), None);
+    }
+}

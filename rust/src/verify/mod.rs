@@ -28,6 +28,12 @@
 //!    contract of [`crate::parallel::partition_rows`].
 //! 5. **Bounds** — the plan's [`KernelConfig`] satisfies the Eq 5.1–5.6
 //!    cache inequalities it was solved under.
+//! 6. **Races** (Full level) — every execution mode of the plan
+//!    (`execute` / `execute_inverse` / 3-target `execute_batch`) is
+//!    proven race-free by intersecting each dispatched task's exact
+//!    byte-range footprints (matrix rows × fused column thresholds,
+//!    packed-panel units, the stream arena, scratch) across the
+//!    [`crate::parallel::epoch`] happens-before graph — see [`races`].
 //!
 //! Three exposures share the implementation:
 //!
@@ -45,9 +51,18 @@
 //!   contract).
 
 mod corpus;
+pub mod footprint;
+pub mod races;
 mod schedule;
 
-pub use corpus::{corpus_verdicts, mutation_corpus, shape_corpus, MutationKind, ShapeCase};
+pub use corpus::{
+    corpus_verdicts, mutation_corpus, race_mutation_corpus, race_verdicts, shape_corpus,
+    MutationKind, RaceMutationKind, ShapeCase,
+};
+pub use footprint::{schedule_col_sets, stream_arena_bytes, IntervalSet, RegionKind};
+pub use races::{
+    build_graph, check_graph, race_spec, verify_races, NodeAccess, RaceSpec, TaskGraph, ViewSpec,
+};
 pub use schedule::{verify_config, verify_partition, verify_seqplan};
 
 use crate::blocking::CacheParams;
@@ -168,6 +183,34 @@ pub enum Error {
         last: bool,
         rows: usize,
     },
+    /// Two HB-unordered graph nodes write an overlapping byte range of
+    /// one region (a write-write race).
+    RaceWW {
+        region: usize,
+        a: usize,
+        b: usize,
+        at: usize,
+    },
+    /// An HB-unordered pair where one node writes a byte range the
+    /// other reads (a write-read race).
+    RaceRW {
+        region: usize,
+        writer: usize,
+        reader: usize,
+        at: usize,
+    },
+    /// A per-worker scratch region is touched by a second HB-unordered
+    /// node — scratch must have a single exclusive owner.
+    SharedMutScratch {
+        region: usize,
+        owner: usize,
+        a: usize,
+        b: usize,
+    },
+    /// A worker node is missing its publish/join ordering in the epoch
+    /// happens-before graph (the structural precondition of the race
+    /// check).
+    EpochUnordered { node: usize, what: &'static str },
 }
 
 impl Error {
@@ -187,6 +230,10 @@ impl Error {
             Error::Bounds { .. } => "bounds",
             Error::Provenance { .. } => "provenance",
             Error::Ledger { .. } => "ledger",
+            Error::RaceWW { .. } => "race-ww",
+            Error::RaceRW { .. } => "race-rw",
+            Error::SharedMutScratch { .. } => "shared-mut-scratch",
+            Error::EpochUnordered { .. } => "epoch-unordered",
         }
     }
 }
@@ -296,6 +343,35 @@ impl std::fmt::Display for Error {
                 "block {block}: closed-form memop ledger disagrees with the \
                  per-column count (first={first} last={last} rows={rows})"
             ),
+            Error::RaceWW { region, a, b, at } => write!(
+                f,
+                "region {region}: HB-unordered nodes {a} and {b} both write \
+                 byte {at}"
+            ),
+            Error::RaceRW {
+                region,
+                writer,
+                reader,
+                at,
+            } => write!(
+                f,
+                "region {region}: node {writer} writes byte {at} while \
+                 HB-unordered node {reader} reads it"
+            ),
+            Error::SharedMutScratch {
+                region,
+                owner,
+                a,
+                b,
+            } => write!(
+                f,
+                "region {region}: worker {owner}'s scratch is touched by \
+                 HB-unordered nodes {a} and {b} (scratch must have one \
+                 exclusive owner)"
+            ),
+            Error::EpochUnordered { node, what } => {
+                write!(f, "graph node {node} {what}")
+            }
         }
     }
 }
@@ -355,15 +431,25 @@ pub fn verify_plan(plan: &RotationPlan, cache: Option<CacheParams>, level: Verif
         crate::plan::Side::Right => (m, n),
         crate::plan::Side::Left => (n, m),
     };
+    let mut schedule = None;
     if wn >= 2 && k > 0 {
         let ident = RotationSequence::identity(wn, k);
         let mut sp = SeqPlan::new();
         sp.plan_into(&ident, cfg);
         verify_seqplan(&sp, wn, k, cfg, plan.is_fused(), level, &mut report);
+        schedule = Some(sp);
     }
     if !plan.parts().is_empty() {
         verify_partition(plan.parts(), wm, cfg.threads, cfg.mr, &mut report);
     }
     verify_config(cfg, plan.bounds(), cache, plan.is_tuned(), &mut report);
+    // The race pass runs last and only on clean schedules: its graph
+    // model assumes the thresholds and partition it builds from are
+    // themselves coherent.
+    if level == VerifyLevel::Full && report.ok() {
+        if let Some(sp) = &schedule {
+            verify_races(sp, wm, wn, plan.parts(), cfg, plan.is_fused(), &mut report);
+        }
+    }
     report
 }

@@ -1,0 +1,459 @@
+//! Static race analyzer: prove a planned execution race-free from task
+//! footprints plus the epoch happens-before graph.
+//!
+//! For every execution mode a plan can run in (serial or pooled ×
+//! fused or staged × `execute` / `execute_inverse` / `execute_batch`),
+//! this pass models the dispatch as a small graph:
+//!
+//! * **nodes** — the dispatcher's prologue (stream packing, inverse
+//!   column mirror), the `EpochGate` publish, one node per worker task,
+//!   the join, and the epilogue;
+//! * **edges** — program order on the dispatcher plus the gate's
+//!   publish→worker and worker→join edges, taken literally from
+//!   [`crate::parallel::epoch::dispatch_hb_edges`] (the same module the
+//!   loom model checks verbatim);
+//! * **footprints** — each node's exact byte-range reads and writes
+//!   over every addressable region ([`RegionKind`]): matrix rows from
+//!   the §7 partition × columns from the per-call
+//!   `load_split`/`store_split` thresholds, per-worker packed-panel
+//!   unit ranges, the shared C/S stream arena, per-worker scratch.
+//!
+//! Two nodes are *HB-unordered* when neither reaches the other through
+//! the edge set. Any write-write or write-read byte overlap between
+//! HB-unordered nodes is a race, reported as a typed [`Error`] with a
+//! stable code: [`Error::RaceWW`] (`race-ww`), [`Error::RaceRW`]
+//! (`race-rw`), [`Error::SharedMutScratch`] (`shared-mut-scratch`), or
+//! [`Error::EpochUnordered`] (`epoch-unordered`, a worker missing its
+//! publish/join ordering entirely).
+//!
+//! Exposures: [`super::verify_plan`] runs [`verify_races`] at
+//! [`super::VerifyLevel::Full`]; `cargo xtask verify --races
+//! [--mutate]` sweeps the shape corpus plus a 6-class race-injection
+//! corpus; `tools/verify.py --races` mirrors the whole pass
+//! line-for-line for toolchain-free containers.
+
+use super::footprint::{schedule_col_sets, stream_arena_bytes, IntervalSet, RegionKind};
+use super::Error;
+use crate::blocking::KernelConfig;
+use crate::kernel::SeqPlan;
+use crate::parallel::epoch::{dispatch_hb_edges, HbNode};
+use crate::parallel::pool::{dispatch_spec, TaskSpec};
+
+/// One matrix view of a dispatch: which matrix region it addresses and
+/// at what row offset. A plain `execute` has one view at region 0,
+/// offset 0; `execute_batch` has one view per target matrix. Distinct
+/// views mapping to one region (or offset views) model aliasing
+/// targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ViewSpec {
+    pub region: usize,
+    pub row_offset: usize,
+}
+
+/// Pure-data description of one planned execution mode — everything the
+/// analyzer needs, and nothing it must trust: the race-injection corpus
+/// corrupts these fields (or the built [`TaskGraph`]) to prove each
+/// defect class is caught.
+#[derive(Clone, Debug)]
+pub struct RaceSpec {
+    /// Worked rows (the matrix leading dimension the kernels see).
+    pub wm: usize,
+    /// Worked columns.
+    pub wn: usize,
+    pub mr: usize,
+    /// `false` = serial execution (a fully ordered three-node chain).
+    pub pooled: bool,
+    /// One task per dispatched worker (serial: one task covering all
+    /// rows), from [`dispatch_spec`].
+    pub tasks: Vec<TaskSpec>,
+    pub views: Vec<ViewSpec>,
+    /// `execute_inverse`: the dispatcher mirror-sweeps every matrix
+    /// before publish and again after join.
+    pub inverse: bool,
+    /// Matrix columns strided-read by each task, in column units.
+    pub read_cols: IntervalSet,
+    /// Matrix columns strided-written by each task.
+    pub write_cols: IntervalSet,
+    /// Size of the shared C/S stream arena.
+    pub stream_bytes: usize,
+}
+
+impl RaceSpec {
+    /// The `execute_inverse` variant of this spec.
+    pub fn inverse(mut self) -> Self {
+        self.inverse = true;
+        self
+    }
+
+    /// The `execute_batch` variant over `b` distinct target matrices.
+    pub fn batch(mut self, b: usize) -> Self {
+        self.views = (0..b)
+            .map(|region| ViewSpec {
+                region,
+                row_offset: 0,
+            })
+            .collect();
+        self
+    }
+}
+
+/// Derive the base (plain `execute`) [`RaceSpec`] for a planned
+/// schedule: tasks from the §7 partition via [`dispatch_spec`], column
+/// sets from the per-call thresholds, stream-arena size from the wave
+/// counts. An empty partition means serial execution — one task
+/// covering all `wm` rows on a fully ordered chain.
+pub fn race_spec(
+    sp: &SeqPlan,
+    wm: usize,
+    wn: usize,
+    parts: &[(usize, usize)],
+    cfg: &KernelConfig,
+    fused: bool,
+) -> RaceSpec {
+    let pooled = !parts.is_empty();
+    let tasks = if pooled {
+        dispatch_spec(parts)
+    } else {
+        vec![TaskSpec {
+            worker: 0,
+            r0: 0,
+            rows: wm,
+            unit: 0,
+        }]
+    };
+    let (read_cols, write_cols) = schedule_col_sets(sp, wn, fused);
+    RaceSpec {
+        wm,
+        wn,
+        mr: cfg.mr,
+        pooled,
+        tasks,
+        views: vec![ViewSpec {
+            region: 0,
+            row_offset: 0,
+        }],
+        inverse: false,
+        read_cols,
+        write_cols,
+        stream_bytes: stream_arena_bytes(sp),
+    }
+}
+
+/// One graph node's reads and writes, indexed by region.
+#[derive(Clone, Debug, Default)]
+pub struct NodeAccess {
+    pub reads: Vec<IntervalSet>,
+    pub writes: Vec<IntervalSet>,
+}
+
+impl NodeAccess {
+    pub fn new(nregions: usize) -> Self {
+        Self {
+            reads: vec![IntervalSet::new(); nregions],
+            writes: vec![IntervalSet::new(); nregions],
+        }
+    }
+
+    pub fn read(&mut self, region: usize, lo: usize, hi: usize) {
+        if let Some(set) = self.reads.get_mut(region) {
+            set.push(lo, hi);
+        }
+    }
+
+    pub fn write(&mut self, region: usize, lo: usize, hi: usize) {
+        if let Some(set) = self.writes.get_mut(region) {
+            set.push(lo, hi);
+        }
+    }
+
+    fn touches(&self, region: usize) -> bool {
+        let r = self.reads.get(region).map(|s| !s.is_empty());
+        let w = self.writes.get(region).map(|s| !s.is_empty());
+        r == Some(true) || w == Some(true)
+    }
+}
+
+/// The happens-before graph of one execution mode, ready for checking.
+/// Fields are public so the race-injection corpus (and `race_props`)
+/// can corrupt a built graph — stray nodes, dropped join edges, shared
+/// scratch — and assert the checker rejects it.
+#[derive(Clone, Debug)]
+pub struct TaskGraph {
+    pub nodes: Vec<NodeAccess>,
+    pub edges: Vec<(usize, usize)>,
+    pub regions: Vec<RegionKind>,
+    /// Node indices of the dispatched worker tasks (empty for serial).
+    pub workers: Vec<usize>,
+    /// Node index of the `EpochGate` publish (serial: the prologue).
+    pub publish: usize,
+    /// Node index of the join (serial: the epilogue).
+    pub join: usize,
+}
+
+/// Node layout of a pooled dispatch. Serial executions collapse to
+/// `[prologue, exec, epilogue]` program order.
+const PROLOGUE: usize = 0;
+const PUBLISH: usize = 1;
+const FIRST_WORKER: usize = 2;
+
+fn hb_node_index(node: HbNode, nworkers: usize) -> usize {
+    match node {
+        HbNode::Publish => PUBLISH,
+        HbNode::Worker(w) => FIRST_WORKER + w,
+        HbNode::Join => FIRST_WORKER + nworkers,
+    }
+}
+
+/// Add one task's footprints to its node: strided matrix rows × the
+/// schedule's column sets for every view, its own panel-unit range, a
+/// read of the whole stream arena, and its private scratch marker.
+fn task_footprints(
+    na: &mut NodeAccess,
+    spec: &RaceSpec,
+    t: &TaskSpec,
+    task_idx: usize,
+    unit_offs: &[(usize, usize)],
+    nmats: usize,
+) {
+    let ld = spec.wm;
+    for v in &spec.views {
+        let a = t.r0 + v.row_offset;
+        let b = a + t.rows;
+        for &(c0, c1) in spec.read_cols.spans() {
+            for j in c0..c1 {
+                na.read(v.region, (j * ld + a) * 8, (j * ld + b) * 8);
+            }
+        }
+        for &(c0, c1) in spec.write_cols.spans() {
+            for j in c0..c1 {
+                na.write(v.region, (j * ld + a) * 8, (j * ld + b) * 8);
+            }
+        }
+    }
+    if let Some(&(off, len)) = unit_offs.get(t.unit) {
+        na.read(nmats, off * 8, (off + len) * 8);
+        na.write(nmats, off * 8, (off + len) * 8);
+    }
+    na.read(nmats + 1, 0, spec.stream_bytes);
+    let scratch = nmats + 2 + task_idx;
+    na.read(scratch, 0, 1);
+    na.write(scratch, 0, 1);
+}
+
+/// Build the happens-before graph + footprints for one execution mode.
+pub fn build_graph(spec: &RaceSpec) -> TaskGraph {
+    let nmats = spec
+        .views
+        .iter()
+        .map(|v| v.region + 1)
+        .max()
+        .unwrap_or(1)
+        .max(1);
+    let ntasks = spec.tasks.len();
+    let mut regions: Vec<RegionKind> = (0..nmats).map(RegionKind::Matrix).collect();
+    regions.push(RegionKind::Units);
+    regions.push(RegionKind::Streams);
+    for t in 0..ntasks {
+        regions.push(RegionKind::Scratch(t));
+    }
+    let nregions = regions.len();
+
+    // Panel-unit sub-ranges, laid out back to back exactly like the
+    // context's per-part workspaces: unit `u` holds the m_r-quantized
+    // chunk rows of part `u` across all wn columns.
+    let mut unit_offs = Vec::with_capacity(ntasks);
+    let mut off = 0usize;
+    for t in &spec.tasks {
+        let chunks = if spec.mr == 0 {
+            1
+        } else {
+            t.rows.div_ceil(spec.mr).max(1)
+        };
+        let len = chunks * spec.mr * spec.wn;
+        unit_offs.push((off, len));
+        off += len;
+    }
+
+    let matrix_full = spec.wm * spec.wn * 8;
+    if !spec.pooled {
+        // Serial: prologue -> exec -> epilogue, fully ordered.
+        let mut nodes = vec![NodeAccess::new(nregions); 3];
+        nodes[0].write(nmats + 1, 0, spec.stream_bytes);
+        if spec.inverse {
+            for v in &spec.views {
+                nodes[0].read(v.region, 0, matrix_full);
+                nodes[0].write(v.region, 0, matrix_full);
+                nodes[2].read(v.region, 0, matrix_full);
+                nodes[2].write(v.region, 0, matrix_full);
+            }
+        }
+        if let Some(t) = spec.tasks.first() {
+            task_footprints(&mut nodes[1], spec, t, 0, &unit_offs, nmats);
+        }
+        return TaskGraph {
+            nodes,
+            edges: vec![(0, 1), (1, 2)],
+            regions,
+            workers: Vec::new(),
+            publish: 0,
+            join: 2,
+        };
+    }
+
+    // Pooled: prologue, publish, workers, join, epilogue.
+    let join = FIRST_WORKER + ntasks;
+    let epilogue = join + 1;
+    let mut nodes = vec![NodeAccess::new(nregions); epilogue + 1];
+    nodes[PROLOGUE].write(nmats + 1, 0, spec.stream_bytes);
+    if spec.inverse {
+        for v in &spec.views {
+            nodes[PROLOGUE].read(v.region, 0, matrix_full);
+            nodes[PROLOGUE].write(v.region, 0, matrix_full);
+            nodes[epilogue].read(v.region, 0, matrix_full);
+            nodes[epilogue].write(v.region, 0, matrix_full);
+        }
+    }
+    for (i, t) in spec.tasks.iter().enumerate() {
+        task_footprints(&mut nodes[FIRST_WORKER + i], spec, t, i, &unit_offs, nmats);
+    }
+    let mut edges = vec![(PROLOGUE, PUBLISH)];
+    for (a, b) in dispatch_hb_edges(ntasks) {
+        edges.push((hb_node_index(a, ntasks), hb_node_index(b, ntasks)));
+    }
+    edges.push((join, epilogue));
+    TaskGraph {
+        nodes,
+        edges,
+        regions,
+        workers: (0..ntasks).map(|w| FIRST_WORKER + w).collect(),
+        publish: PUBLISH,
+        join,
+    }
+}
+
+/// Transitive reachability over the edge list (nodes are few: one per
+/// worker plus four).
+fn reachability(g: &TaskGraph) -> Vec<Vec<bool>> {
+    let n = g.nodes.len();
+    let mut adj = vec![Vec::new(); n];
+    for &(a, b) in &g.edges {
+        if a < n && b < n {
+            adj[a].push(b);
+        }
+    }
+    let mut reach = vec![vec![false; n]; n];
+    for (s, row) in reach.iter_mut().enumerate() {
+        row[s] = true;
+        let mut stack = vec![s];
+        while let Some(u) = stack.pop() {
+            for &v in &adj[u] {
+                if !row[v] {
+                    row[v] = true;
+                    stack.push(v);
+                }
+            }
+        }
+    }
+    reach
+}
+
+/// Check a built graph. Deterministic order — first error wins:
+///
+/// 1. structural: every worker node must be reached by the publish and
+///    must reach the join ([`Error::EpochUnordered`]);
+/// 2. for each HB-unordered node pair (ascending), each region
+///    (ascending): a scratch region touched by both is
+///    [`Error::SharedMutScratch`]; then write∩write
+///    ([`Error::RaceWW`]); then write∩read either way
+///    ([`Error::RaceRW`]).
+pub fn check_graph(g: &TaskGraph) -> Option<Error> {
+    let reach = reachability(g);
+    for &w in &g.workers {
+        if !reach.get(g.publish).and_then(|r| r.get(w)).copied().unwrap_or(false) {
+            return Some(Error::EpochUnordered {
+                node: w,
+                what: "is not reached by the dispatch publish",
+            });
+        }
+        if !reach.get(w).and_then(|r| r.get(g.join)).copied().unwrap_or(false) {
+            return Some(Error::EpochUnordered {
+                node: w,
+                what: "does not reach the epoch join",
+            });
+        }
+    }
+    let nn = g.nodes.len();
+    for i in 0..nn {
+        for j in (i + 1)..nn {
+            if reach[i][j] || reach[j][i] {
+                continue;
+            }
+            let (ni, nj) = (&g.nodes[i], &g.nodes[j]);
+            for (r, kind) in g.regions.iter().enumerate() {
+                if let RegionKind::Scratch(owner) = kind {
+                    if ni.touches(r) && nj.touches(r) {
+                        return Some(Error::SharedMutScratch {
+                            region: r,
+                            owner: *owner,
+                            a: i,
+                            b: j,
+                        });
+                    }
+                    continue;
+                }
+                let empty = IntervalSet::new();
+                let wi = ni.writes.get(r).unwrap_or(&empty);
+                let wj = nj.writes.get(r).unwrap_or(&empty);
+                let ri = ni.reads.get(r).unwrap_or(&empty);
+                let rj = nj.reads.get(r).unwrap_or(&empty);
+                if let Some(at) = wi.first_overlap(wj) {
+                    return Some(Error::RaceWW {
+                        region: r,
+                        a: i,
+                        b: j,
+                        at,
+                    });
+                }
+                if let Some(at) = wi.first_overlap(rj) {
+                    return Some(Error::RaceRW {
+                        region: r,
+                        writer: i,
+                        reader: j,
+                        at,
+                    });
+                }
+                if let Some(at) = wj.first_overlap(ri) {
+                    return Some(Error::RaceRW {
+                        region: r,
+                        writer: j,
+                        reader: i,
+                        at,
+                    });
+                }
+            }
+        }
+    }
+    None
+}
+
+/// The `VerifyLevel::Full` race pass: check all three execution modes
+/// of the planned schedule — `execute`, `execute_inverse`, and a
+/// 3-target `execute_batch` — pushing the first error found.
+pub fn verify_races(
+    sp: &SeqPlan,
+    wm: usize,
+    wn: usize,
+    parts: &[(usize, usize)],
+    cfg: &KernelConfig,
+    fused: bool,
+    report: &mut super::Report,
+) {
+    let base = race_spec(sp, wm, wn, parts, cfg, fused);
+    let modes = [base.clone(), base.clone().inverse(), base.batch(3)];
+    for spec in &modes {
+        if let Some(err) = check_graph(&build_graph(spec)) {
+            report.errors.push(err);
+            return;
+        }
+    }
+}

@@ -204,7 +204,7 @@ fn fused_reflectors_match_staged_reference() {
             let rows = c.mb.min(m - ib);
             panel.prepare(rows, n);
             // SAFETY: `fused` is exclusively borrowed; panels cover
-            // disjoint row ranges.
+            // disjoint row ranges. [INV-DISJOINT]
             unsafe {
                 run_panel_planned_fused::<<ReflectorSequence as OpSequence>::Op>(
                     &mut panel,

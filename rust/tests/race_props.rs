@@ -1,0 +1,169 @@
+//! Race-analyzer property suites:
+//!
+//! * the race shape corpus PASSes across all three execution modes and
+//!   the race-injection corpus is REJECTed class-for-class (the same
+//!   sweeps `cargo xtask verify --races [--mutate]` and
+//!   `tools/verify.py --races` print and CI diffs);
+//! * `IntervalSet` agrees with a brute-force per-byte set oracle that
+//!   shares no code with its sort-merge representation;
+//! * randomized planner schedules + `partition_rows` partitions build
+//!   graphs the checker proves race-free, and randomly injected row
+//!   overlaps are caught as typed [`Error::RaceWW`];
+//! * `PlanBuilder`'s default `Full`-level verification includes the
+//!   race pass and stays clean on threaded plans.
+
+use rotseq::blocking::{plan, CacheParams};
+use rotseq::kernel::SeqPlan;
+use rotseq::parallel::partition_rows;
+use rotseq::plan::RotationPlan;
+use rotseq::rot::RotationSequence;
+use rotseq::testutil::property;
+use rotseq::verify::{
+    build_graph, check_graph, race_spec, race_verdicts, verify_plan, Error, IntervalSet,
+    VerifyLevel,
+};
+use std::collections::HashSet;
+
+#[test]
+fn race_shape_corpus_all_pass() {
+    let (lines, ok) = race_verdicts(false);
+    assert!(ok, "race shape corpus has failures:\n{}", lines.join("\n"));
+    assert!(!lines.is_empty());
+    for line in &lines {
+        assert!(line.contains(": PASS "), "not a PASS verdict: {line}");
+        assert!(line.contains("modes=3"), "not all modes checked: {line}");
+    }
+}
+
+#[test]
+fn race_mutation_corpus_rejected_code_for_code() {
+    let (lines, ok) = race_verdicts(true);
+    assert!(ok, "race mutation corpus has failures:\n{}", lines.join("\n"));
+    assert_eq!(lines.len(), 6, "six injection classes");
+    for line in &lines {
+        assert!(line.contains(": REJECT "), "not a REJECT verdict: {line}");
+        assert!(!line.contains("WANT"), "rejected with wrong code: {line}");
+    }
+}
+
+#[test]
+fn interval_set_matches_per_byte_oracle() {
+    property(
+        "IntervalSet ⊨ per-byte set",
+        0x1A7E_5E75,
+        200,
+        |rng| {
+            let mut lists = Vec::new();
+            for _ in 0..2 {
+                let mut spans = Vec::new();
+                for _ in 0..rng.next_below(8) {
+                    let lo = rng.next_below(120);
+                    spans.push((lo, lo + rng.next_below(40)));
+                }
+                lists.push(spans);
+            }
+            let b = lists.pop().unwrap_or_default();
+            let a = lists.pop().unwrap_or_default();
+            (a, b)
+        },
+        |(sa, sb)| {
+            let build = |spans: &[(usize, usize)]| {
+                let mut set = IntervalSet::new();
+                let mut bytes: HashSet<usize> = HashSet::new();
+                for &(lo, hi) in spans {
+                    set.push(lo, hi);
+                    bytes.extend(lo..hi);
+                }
+                (set, bytes)
+            };
+            let (a, ab) = build(sa);
+            let (b, bb) = build(sb);
+            // Canonical form: sorted, strictly separated (adjacent spans
+            // merged), and covering exactly the oracle's bytes.
+            let mut covered: HashSet<usize> = HashSet::new();
+            let mut prev_hi = None;
+            for &(lo, hi) in a.spans() {
+                assert!(lo < hi, "empty span stored");
+                if let Some(p) = prev_hi {
+                    assert!(lo > p, "spans not merged/sorted: {:?}", a.spans());
+                }
+                prev_hi = Some(hi);
+                covered.extend(lo..hi);
+            }
+            assert_eq!(covered, ab, "coverage drifted from the byte oracle");
+            assert_eq!(a.is_empty(), ab.is_empty());
+            // first_overlap == the least byte in the set intersection.
+            let want = ab.intersection(&bb).min().copied();
+            assert_eq!(a.first_overlap(&b), want);
+            assert_eq!(b.first_overlap(&a), want);
+        },
+    );
+}
+
+/// Plan a schedule for (n, k) on the paper machine with the 16x2 kernel.
+fn planned(n: usize, k: usize, threads: usize) -> (SeqPlan, rotseq::blocking::KernelConfig) {
+    let cfg = plan(16, 2, CacheParams::PAPER_MACHINE, threads);
+    assert_eq!((cfg.mr, cfg.kr), (16, 2), "paper machine fits the 16x2 kernel");
+    let seqs = RotationSequence::random(n, k, 0xCA5E ^ ((n as u64) << 8) ^ (k as u64));
+    let mut sp = SeqPlan::new();
+    sp.plan_into(&seqs, &cfg);
+    (sp, cfg)
+}
+
+#[test]
+fn random_partitions_prove_race_free_and_injected_overlaps_are_ww() {
+    property(
+        "races ⊨ partition_rows",
+        0x0D15_C04D,
+        60,
+        |rng| {
+            (
+                16 + rng.next_below(400),
+                2 + rng.next_below(60),
+                1 + rng.next_below(12),
+                2 + rng.next_below(6),
+                rng.next_below(2) == 0,
+                1 + rng.next_below(8),
+            )
+        },
+        |&(m, n, k, threads, fused, delta)| {
+            let (sp, cfg) = planned(n, k, threads);
+            let parts = partition_rows(m, cfg.threads, cfg.mr);
+            let base = race_spec(&sp, m, n, &parts, &cfg, fused);
+            for spec in [base.clone(), base.clone().inverse(), base.clone().batch(3)] {
+                assert!(
+                    check_graph(&build_graph(&spec)).is_none(),
+                    "clean dispatch flagged racy (m={m} n={n} k={k} t={threads})"
+                );
+            }
+            // Injection: slide the second chunk down into the first's rows.
+            if parts.len() >= 2 {
+                let mut bad = parts.clone();
+                let shift = delta.min(bad[1].0);
+                if shift > 0 {
+                    bad[1].0 -= shift;
+                    bad[1].1 += shift;
+                    let spec = race_spec(&sp, m, n, &bad, &cfg, fused);
+                    match check_graph(&build_graph(&spec)) {
+                        Some(Error::RaceWW { .. }) => {}
+                        other => panic!(
+                            "overlap of {shift} rows not caught as race-ww: {other:?}"
+                        ),
+                    }
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn builder_full_verify_runs_the_race_pass_clean() {
+    let built = RotationPlan::builder()
+        .shape(100, 41, 6)
+        .cache(CacheParams::PAPER_MACHINE)
+        .threads(4)
+        .build()
+        .expect("threaded build passes Full verification incl. the race pass");
+    let report = verify_plan(&built, Some(CacheParams::PAPER_MACHINE), VerifyLevel::Full);
+    assert!(report.ok(), "{:?}", report.errors);
+}

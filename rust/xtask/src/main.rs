@@ -1,14 +1,18 @@
 //! Repo-local build tasks.
 //!
 //! * `cargo xtask lint` — source-level lints for the rotseq unsafe core.
-//! * `cargo xtask verify [--mutate]` — the plan-schedule verifier corpus:
-//!   sweeps the adversarial shape corpus (every case must PASS) or, with
-//!   `--mutate`, the corrupted-schedule corpus (every case must be
-//!   REJECTed with its expected error code). One verdict line per case
+//! * `cargo xtask verify [--races] [--mutate]` — the plan-schedule
+//!   verifier corpus: sweeps the adversarial shape corpus (every case
+//!   must PASS) or, with `--mutate`, the corrupted-schedule corpus
+//!   (every case must be REJECTed with its expected error code). With
+//!   `--races` the same sweep runs the static race analyzer instead:
+//!   every shape case must prove its pooled/fused/batch executions
+//!   race-free, and `--races --mutate` must reject every race-injection
+//!   mutant with its expected `race-*` code. One verdict line per case
 //!   on stdout; `tools/verify.py` must emit byte-identical lines (the
 //!   same parity contract CI enforces for `tools/lint.py`).
 //!
-//! Four lint families, all pure-std text analysis (no syn/proc-macro
+//! Five lint families, all pure-std text analysis (no syn/proc-macro
 //! dependencies, so the lint builds offline and in seconds):
 //!
 //! 1. **SAFETY comments** — every `unsafe { … }` block and every
@@ -28,6 +32,11 @@
 //!    `dispatch_sizes!` monomorphization table (kernel/mod.rs), and every
 //!    dispatch arm must pass `KRP1 == KR + 1` (the wave-buffer constant
 //!    the microkernel's circular slot file is sized by).
+//! 5. **Invariant citations** — every `// SAFETY:` comment must cite at
+//!    least one `[INV-*]` invariant ID from the registry in
+//!    `docs/SAFETY.md`, the cited ID must exist there, and every
+//!    registered ID must be cited by at least one comment (a dead ID
+//!    means the registry and the code have drifted apart).
 //!
 //! The lints scan a comment-and-string-blanked view of each file so that
 //! doc examples mentioning `unwrap()` or `unsafe` never trip them, while
@@ -43,7 +52,10 @@ fn main() -> ExitCode {
     let cmd = args.first().map(String::as_str).unwrap_or("lint");
     match cmd {
         "lint" => run_lint(),
-        "verify" => run_verify(args.iter().any(|a| a == "--mutate")),
+        "verify" => run_verify(
+            args.iter().any(|a| a == "--races"),
+            args.iter().any(|a| a == "--mutate"),
+        ),
         other => {
             eprintln!("unknown xtask `{other}` (available: lint, verify)");
             ExitCode::FAILURE
@@ -51,15 +63,25 @@ fn main() -> ExitCode {
     }
 }
 
-/// `cargo xtask verify [--mutate]`: run the schedule-verifier corpus and
+/// `cargo xtask verify [--races] [--mutate]`: run the schedule-verifier
+/// corpus (or, with `--races`, the static race analyzer's corpora) and
 /// print one verdict line per case. Verdict lines go to stdout (CI diffs
 /// them against `tools/verify.py`), the summary to stderr.
-fn run_verify(mutate: bool) -> ExitCode {
-    let (lines, ok) = rotseq::verify::corpus_verdicts(mutate);
+fn run_verify(races: bool, mutate: bool) -> ExitCode {
+    let (lines, ok) = if races {
+        rotseq::verify::race_verdicts(mutate)
+    } else {
+        rotseq::verify::corpus_verdicts(mutate)
+    };
     for line in &lines {
         println!("{line}");
     }
-    let mode = if mutate { "mutation" } else { "shape" };
+    let mode = match (races, mutate) {
+        (true, true) => "race-mutation",
+        (true, false) => "race",
+        (false, true) => "mutation",
+        (false, false) => "shape",
+    };
     if ok {
         eprintln!("xtask verify: {} {mode} cases ok", lines.len());
         ExitCode::SUCCESS
@@ -91,12 +113,22 @@ fn run_lint() -> ExitCode {
     files.sort();
 
     let mut violations: Vec<String> = Vec::new();
+    let defined = load_defined_invariants(&root, &mut violations);
+    let mut cited: Vec<String> = Vec::new();
     for path in &files {
         let Ok(src) = fs::read_to_string(path) else {
             violations.push(format!("{}: unreadable", rel(path, &root)));
             continue;
         };
         lint_file(&rel(path, &root), &src, &mut violations);
+        lint_inv_citations(&rel(path, &root), &src, &defined, &mut cited, &mut violations);
+    }
+    for id in &defined {
+        if !cited.contains(id) {
+            violations.push(format!(
+                "docs/SAFETY.md: invariant [{id}] is never cited by a `// SAFETY:` comment"
+            ));
+        }
     }
     lint_kernel_drift(&root, &mut violations);
 
@@ -384,6 +416,99 @@ fn has_safety_doc(raw_lines: &[&str], idx: usize) -> bool {
     false
 }
 
+/// Extract well-formed `[INV-*]` identifiers (uppercase/digit/dash body,
+/// closing bracket required) from a text, in order of appearance.
+fn inv_ids(text: &str) -> Vec<String> {
+    let b = text.as_bytes();
+    let mut ids = Vec::new();
+    let mut i = 0;
+    while let Some(pos) = text[i..].find("[INV-") {
+        let at = i + pos;
+        let mut j = at + 1;
+        while j < b.len() && (b[j].is_ascii_uppercase() || b[j].is_ascii_digit() || b[j] == b'-') {
+            j += 1;
+        }
+        if j < b.len() && b[j] == b']' && j > at + 5 {
+            ids.push(text[at + 1..j].to_string());
+            i = j + 1;
+        } else {
+            i = at + 5;
+        }
+    }
+    ids
+}
+
+/// The `[INV-*]` registry: every ID mentioned anywhere in docs/SAFETY.md.
+fn load_defined_invariants(root: &Path, violations: &mut Vec<String>) -> Vec<String> {
+    let path = match root.parent() {
+        Some(repo) => repo.join("docs/SAFETY.md"),
+        None => PathBuf::from("docs/SAFETY.md"),
+    };
+    let Ok(doc) = fs::read_to_string(&path) else {
+        violations
+            .push("docs/SAFETY.md: unreadable (the [INV-*] invariant registry lives there)".into());
+        return Vec::new();
+    };
+    let mut ids = inv_ids(&doc);
+    ids.sort();
+    ids.dedup();
+    if ids.is_empty() {
+        violations.push("docs/SAFETY.md: defines no [INV-*] invariant IDs".into());
+    }
+    ids
+}
+
+/// Lint 5: every `// SAFETY:` comment cites a registered invariant.
+///
+/// A citation block is the line whose trimmed form starts with
+/// `// SAFETY:` plus the contiguous `//` comment lines below it. The
+/// trimmed-prefix anchor keeps prose that merely *mentions* "SAFETY:"
+/// mid-line (e.g. lib.rs's module doc) out of scope.
+fn lint_inv_citations(
+    name: &str,
+    src: &str,
+    defined: &[String],
+    cited: &mut Vec<String>,
+    violations: &mut Vec<String>,
+) {
+    let lines: Vec<&str> = src.lines().collect();
+    let mut idx = 0;
+    while idx < lines.len() {
+        if !lines[idx].trim_start().starts_with("// SAFETY:") {
+            idx += 1;
+            continue;
+        }
+        let lineno = idx + 1;
+        let mut block = String::new();
+        let mut j = idx;
+        while j < lines.len() {
+            let t = lines[j].trim_start();
+            if j > idx && !t.starts_with("//") {
+                break;
+            }
+            block.push_str(t);
+            block.push('\n');
+            j += 1;
+        }
+        let ids = inv_ids(&block);
+        if ids.is_empty() {
+            violations.push(format!(
+                "{name}:{lineno}: `// SAFETY:` comment without an `[INV-*]` citation (IDs are registered in docs/SAFETY.md)"
+            ));
+        }
+        for id in ids {
+            if !defined.iter().any(|d| *d == id) {
+                violations.push(format!(
+                    "{name}:{lineno}: `// SAFETY:` cites unknown invariant [{id}] (not in docs/SAFETY.md)"
+                ));
+            } else if !cited.contains(&id) {
+                cited.push(id);
+            }
+        }
+        idx = j;
+    }
+}
+
 /// Parse `(a, b)` pairs out of a source snippet.
 fn parse_pairs(snippet: &str) -> Vec<(usize, usize)> {
     let mut pairs = Vec::new();
@@ -576,5 +701,58 @@ mod tests {
     #[test]
     fn parse_pairs_reads_tuples() {
         assert_eq!(parse_pairs("(1, 1), (8, 2)"), vec![(1, 1), (8, 2)]);
+    }
+
+    #[test]
+    fn inv_ids_extracts_well_formed_citations() {
+        assert_eq!(
+            inv_ids("per [INV-LANES] and [INV-EPOCH-2]; not [INV-] or [INV-oops]"),
+            vec!["INV-LANES".to_string(), "INV-EPOCH-2".to_string()]
+        );
+        assert!(inv_ids("unterminated [INV-LANES at end of line").is_empty());
+    }
+
+    #[test]
+    fn safety_comment_without_citation_is_flagged() {
+        let defined = vec!["INV-LANES".to_string()];
+        let src = "fn f() {\n    // SAFETY: plainly fine.\n    unsafe { g() }\n}\n";
+        let mut cited = Vec::new();
+        let mut v = Vec::new();
+        lint_inv_citations("src/a.rs", src, &defined, &mut cited, &mut v);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("without an `[INV-*]` citation"));
+    }
+
+    #[test]
+    fn citation_in_continuation_line_counts() {
+        let defined = vec!["INV-LANES".to_string()];
+        let src = "// SAFETY: the lanes are in\n// bounds per [INV-LANES].\nunsafe { g() }\n";
+        let mut cited = Vec::new();
+        let mut v = Vec::new();
+        lint_inv_citations("src/a.rs", src, &defined, &mut cited, &mut v);
+        assert!(v.is_empty(), "{v:?}");
+        assert_eq!(cited, vec!["INV-LANES".to_string()]);
+    }
+
+    #[test]
+    fn unknown_invariant_citation_is_flagged() {
+        let defined = vec!["INV-LANES".to_string()];
+        let src = "// SAFETY: per [INV-BOGUS].\nunsafe { g() }\n";
+        let mut cited = Vec::new();
+        let mut v = Vec::new();
+        lint_inv_citations("src/a.rs", src, &defined, &mut cited, &mut v);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("unknown invariant [INV-BOGUS]"));
+        assert!(cited.is_empty());
+    }
+
+    #[test]
+    fn mid_line_safety_prose_is_not_an_anchor() {
+        let defined = vec!["INV-LANES".to_string()];
+        let src = "//! prose about `// SAFETY:` comments in general.\nfn f() {}\n";
+        let mut cited = Vec::new();
+        let mut v = Vec::new();
+        lint_inv_citations("src/lib.rs", src, &defined, &mut cited, &mut v);
+        assert!(v.is_empty(), "{v:?}");
     }
 }

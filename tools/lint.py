@@ -13,6 +13,9 @@ Families:
      `unwrap()`/`.expect(` in non-test code under plan/, coordinator/,
      tune/, verify/
   4. SUPPORTED_KERNELS ↔ dispatch_sizes! drift (incl. KRP1 == KR + 1)
+  5. every `// SAFETY:` comment cites an `[INV-*]` ID registered in
+     docs/SAFETY.md, every cited ID exists, every registered ID is
+     cited at least once
 """
 
 import re
@@ -162,6 +165,64 @@ def lint_file(name, src, violations):
                     )
 
 
+INV_ID = re.compile(r"\[(INV-[A-Z0-9-]+)\]")
+
+
+def inv_ids(text):
+    """xtask inv_ids: well-formed [INV-*] citations, in order."""
+    return INV_ID.findall(text)
+
+
+def load_defined_invariants(violations):
+    """xtask load_defined_invariants: the docs/SAFETY.md registry."""
+    path = ROOT.parent / "docs/SAFETY.md"
+    try:
+        doc = path.read_text()
+    except OSError:
+        violations.append(
+            "docs/SAFETY.md: unreadable (the [INV-*] invariant registry lives there)"
+        )
+        return []
+    ids = sorted(set(inv_ids(doc)))
+    if not ids:
+        violations.append("docs/SAFETY.md: defines no [INV-*] invariant IDs")
+    return ids
+
+
+def lint_inv_citations(name, src, defined, cited, violations):
+    """xtask lint_inv_citations: a citation block is a line whose trimmed
+    form starts with `// SAFETY:` plus the contiguous `//` lines below;
+    it must cite a registered invariant."""
+    lines = src.split("\n")
+    idx = 0
+    while idx < len(lines):
+        if not lines[idx].lstrip().startswith("// SAFETY:"):
+            idx += 1
+            continue
+        ln = idx + 1
+        block = []
+        j = idx
+        while j < len(lines):
+            t = lines[j].lstrip()
+            if j > idx and not t.startswith("//"):
+                break
+            block.append(t)
+            j += 1
+        ids = inv_ids("\n".join(block))
+        if not ids:
+            violations.append(
+                f"{name}:{ln}: `// SAFETY:` comment without an `[INV-*]` citation"
+            )
+        for i in ids:
+            if i not in defined:
+                violations.append(
+                    f"{name}:{ln}: `// SAFETY:` cites unknown invariant [{i}]"
+                )
+            elif i not in cited:
+                cited.append(i)
+        idx = j
+
+
 def parse_pairs(snippet):
     return [
         (int(a), int(b))
@@ -218,9 +279,18 @@ def main():
         d = ROOT / sub
         if d.is_dir():
             files.extend(sorted(d.rglob("*.rs")))
+    defined = load_defined_invariants(violations)
+    cited = []
     for path in files:
         name = path.relative_to(ROOT).as_posix()
-        lint_file(name, path.read_text(), violations)
+        src = path.read_text()
+        lint_file(name, src, violations)
+        lint_inv_citations(name, src, defined, cited, violations)
+    for i in defined:
+        if i not in cited:
+            violations.append(
+                f"docs/SAFETY.md: invariant [{i}] is never cited by a `// SAFETY:` comment"
+            )
     lint_kernel_drift(violations)
     if violations:
         print("\n".join(violations))

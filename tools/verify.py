@@ -18,7 +18,14 @@ What it does, end to end, with no Rust involved:
   4. prints one verdict line per corpus case, identical to the Rust
      runner's stdout.
 
-Usage: tools/verify.py [--mutate]   (exit 0 iff every case lands right)
+With --races the same sweep runs the static race analyzer instead
+(rust/src/verify/races.rs + footprint.rs): every shape case's three
+execution modes (execute / execute_inverse / 3-target execute_batch)
+must prove race-free from task byte-footprints plus the EpochGate
+happens-before graph, and --races --mutate must reject each of the six
+race-injection classes with its exact race-* code.
+
+Usage: tools/verify.py [--races] [--mutate]   (exit 0 iff every case lands right)
 """
 
 import re
@@ -422,6 +429,306 @@ def verify_config(cfg, bounds, cache, tuned):
     return None
 
 
+# --- rust/src/verify/footprint.rs ---------------------------------------
+
+
+class ISet:
+    """footprint.rs IntervalSet: sorted, disjoint, merged half-open
+    byte spans."""
+
+    __slots__ = ("spans",)
+
+    def __init__(self):
+        self.spans = []
+
+    def push(self, lo, hi):
+        if lo >= hi:
+            return
+        self.spans.append((lo, hi))
+        self.spans.sort()
+        merged = []
+        for a, b in self.spans:
+            if merged and a <= merged[-1][1]:
+                merged[-1] = (merged[-1][0], max(merged[-1][1], b))
+            else:
+                merged.append((a, b))
+        self.spans = merged
+
+    def is_empty(self):
+        return not self.spans
+
+    def first_overlap(self, other):
+        """Lowest byte in both sets (sort-merge sweep), or None."""
+        i = j = 0
+        while i < len(self.spans) and j < len(other.spans):
+            a0, a1 = self.spans[i]
+            b0, b1 = other.spans[j]
+            lo, hi = max(a0, b0), min(a1, b1)
+            if lo < hi:
+                return lo
+            if a1 <= b1:
+                i += 1
+            else:
+                j += 1
+        return None
+
+
+def schedule_col_sets(blocks, n, fused):
+    """footprint.rs schedule_col_sets: strided (reads, writes) column
+    sets. Staged pipelines pack/unpack every column; fused ones
+    strided-load only past load_split in the first k-block and
+    strided-store only below store_split in the last."""
+    reads, writes = ISet(), ISet()
+    if not fused:
+        reads.push(0, n)
+        writes.push(0, n)
+        return reads, writes
+    if blocks:
+        for c in blocks[0].calls():
+            lo = max(c.col_lo(), c.load_split)
+            hi = c.col_hi()
+            if lo <= hi:
+                reads.push(lo, hi + 1)
+        for c in blocks[-1].calls():
+            lo = c.col_lo()
+            hi = min(c.col_hi(), max(c.store_split - 1, 0))
+            if lo <= hi:
+                writes.push(lo, hi + 1)
+    return reads, writes
+
+
+def stream_arena_bytes(blocks):
+    """footprint.rs stream_arena_bytes: nwaves * width rotations at 2
+    doubles (C, S) each."""
+    return sum(c.nwaves * c.width * 16 for bp in blocks for c in bp.calls())
+
+
+# --- rust/src/parallel/pool.rs dispatch_spec ----------------------------
+
+
+def dispatch_spec(parts):
+    """pool.rs dispatch_spec: worker w owns rows parts[w] and unit w."""
+    return [
+        dict(worker=w, r0=r0, rows=rows, unit=w)
+        for w, (r0, rows) in enumerate(parts)
+    ]
+
+
+# --- rust/src/verify/races.rs -------------------------------------------
+
+
+class RaceSpec:
+    """races.rs RaceSpec: pure-data description of one execution mode.
+    views are mutable [region, row_offset] pairs so the race-injection
+    corpus can corrupt them."""
+
+    __slots__ = ("wm", "wn", "mr", "pooled", "tasks", "views", "inverse",
+                 "read_cols", "write_cols", "stream_bytes")
+
+    def __init__(self, wm, wn, mr, pooled, tasks, views, inverse,
+                 read_cols, write_cols, stream_bytes):
+        self.wm = wm
+        self.wn = wn
+        self.mr = mr
+        self.pooled = pooled
+        self.tasks = tasks
+        self.views = views
+        self.inverse = inverse
+        self.read_cols = read_cols
+        self.write_cols = write_cols
+        self.stream_bytes = stream_bytes
+
+    def as_inverse(self):
+        """races.rs RaceSpec::inverse."""
+        return RaceSpec(self.wm, self.wn, self.mr, self.pooled, self.tasks,
+                        self.views, True, self.read_cols, self.write_cols,
+                        self.stream_bytes)
+
+    def as_batch(self, b):
+        """races.rs RaceSpec::batch."""
+        return RaceSpec(self.wm, self.wn, self.mr, self.pooled, self.tasks,
+                        [[region, 0] for region in range(b)], self.inverse,
+                        self.read_cols, self.write_cols, self.stream_bytes)
+
+
+def race_spec(blocks, wm, wn, parts, cfg, fused):
+    """races.rs race_spec: the base (plain execute) spec."""
+    pooled = bool(parts)
+    tasks = dispatch_spec(parts) if pooled else [
+        dict(worker=0, r0=0, rows=wm, unit=0)
+    ]
+    reads, writes = schedule_col_sets(blocks, wn, fused)
+    return RaceSpec(wm, wn, cfg["mr"], pooled, tasks, [[0, 0]], False,
+                    reads, writes, stream_arena_bytes(blocks))
+
+
+class NodeAccess:
+    """races.rs NodeAccess: one node's per-region read/write sets."""
+
+    __slots__ = ("reads", "writes")
+
+    def __init__(self, nregions):
+        self.reads = [ISet() for _ in range(nregions)]
+        self.writes = [ISet() for _ in range(nregions)]
+
+    def read(self, region, lo, hi):
+        if region < len(self.reads):
+            self.reads[region].push(lo, hi)
+
+    def write(self, region, lo, hi):
+        if region < len(self.writes):
+            self.writes[region].push(lo, hi)
+
+    def touches(self, region):
+        return (region < len(self.reads)
+                and (not self.reads[region].is_empty()
+                     or not self.writes[region].is_empty()))
+
+
+class TaskGraph:
+    """races.rs TaskGraph. Regions are ("matrix", b) / ("units",) /
+    ("streams",) / ("scratch", t) tuples, in the same index order."""
+
+    __slots__ = ("nodes", "edges", "regions", "workers", "publish", "join")
+
+    def __init__(self, nodes, edges, regions, workers, publish, join):
+        self.nodes = nodes
+        self.edges = edges
+        self.regions = regions
+        self.workers = workers
+        self.publish = publish
+        self.join = join
+
+
+def task_footprints(na, spec, t, task_idx, unit_offs, nmats):
+    """races.rs task_footprints: matrix rows x column sets per view,
+    the task's panel unit, the stream arena, private scratch."""
+    ld = spec.wm
+    for region, row_offset in spec.views:
+        a = t["r0"] + row_offset
+        b = a + t["rows"]
+        for c0, c1 in spec.read_cols.spans:
+            for j in range(c0, c1):
+                na.read(region, (j * ld + a) * 8, (j * ld + b) * 8)
+        for c0, c1 in spec.write_cols.spans:
+            for j in range(c0, c1):
+                na.write(region, (j * ld + a) * 8, (j * ld + b) * 8)
+    if t["unit"] < len(unit_offs):
+        off, length = unit_offs[t["unit"]]
+        na.read(nmats, off * 8, (off + length) * 8)
+        na.write(nmats, off * 8, (off + length) * 8)
+    na.read(nmats + 1, 0, spec.stream_bytes)
+    scratch = nmats + 2 + task_idx
+    na.read(scratch, 0, 1)
+    na.write(scratch, 0, 1)
+
+
+def build_graph(spec):
+    """races.rs build_graph: node layout, unit offsets, HB edges."""
+    nmats = max(max((v[0] + 1 for v in spec.views), default=0), 1)
+    ntasks = len(spec.tasks)
+    regions = [("matrix", b) for b in range(nmats)]
+    regions.append(("units",))
+    regions.append(("streams",))
+    regions.extend(("scratch", t) for t in range(ntasks))
+    nregions = len(regions)
+
+    unit_offs = []
+    off = 0
+    for t in spec.tasks:
+        chunks = 1 if spec.mr == 0 else max(-(-t["rows"] // spec.mr), 1)
+        length = chunks * spec.mr * spec.wn
+        unit_offs.append((off, length))
+        off += length
+
+    matrix_full = spec.wm * spec.wn * 8
+    if not spec.pooled:
+        nodes = [NodeAccess(nregions) for _ in range(3)]
+        nodes[0].write(nmats + 1, 0, spec.stream_bytes)
+        if spec.inverse:
+            for region, _ in spec.views:
+                nodes[0].read(region, 0, matrix_full)
+                nodes[0].write(region, 0, matrix_full)
+                nodes[2].read(region, 0, matrix_full)
+                nodes[2].write(region, 0, matrix_full)
+        task_footprints(nodes[1], spec, spec.tasks[0], 0, unit_offs, nmats)
+        return TaskGraph(nodes, [(0, 1), (1, 2)], regions, [], 0, 2)
+
+    # Pooled: prologue=0, publish=1, workers 2.., join, epilogue.
+    join = 2 + ntasks
+    epilogue = join + 1
+    nodes = [NodeAccess(nregions) for _ in range(epilogue + 1)]
+    nodes[0].write(nmats + 1, 0, spec.stream_bytes)
+    if spec.inverse:
+        for region, _ in spec.views:
+            nodes[0].read(region, 0, matrix_full)
+            nodes[0].write(region, 0, matrix_full)
+            nodes[epilogue].read(region, 0, matrix_full)
+            nodes[epilogue].write(region, 0, matrix_full)
+    for i, t in enumerate(spec.tasks):
+        task_footprints(nodes[2 + i], spec, t, i, unit_offs, nmats)
+    edges = [(0, 1)]
+    for w in range(ntasks):  # epoch.rs dispatch_hb_edges
+        edges.append((1, 2 + w))
+        edges.append((2 + w, join))
+    edges.append((join, epilogue))
+    return TaskGraph(nodes, edges, regions,
+                     [2 + w for w in range(ntasks)], 1, join)
+
+
+def reachability(g):
+    """races.rs reachability: DFS per source, self-reachable."""
+    n = len(g.nodes)
+    adj = [[] for _ in range(n)]
+    for a, b in g.edges:
+        if a < n and b < n:
+            adj[a].append(b)
+    reach = []
+    for s in range(n):
+        row = [False] * n
+        row[s] = True
+        stack = [s]
+        while stack:
+            u = stack.pop()
+            for v in adj[u]:
+                if not row[v]:
+                    row[v] = True
+                    stack.append(v)
+        reach.append(row)
+    return reach
+
+
+def check_graph(g):
+    """races.rs check_graph, same deterministic order; returns the
+    first Error::code or None."""
+    reach = reachability(g)
+    for w in g.workers:
+        if not reach[g.publish][w]:
+            return "epoch-unordered"
+        if not reach[w][g.join]:
+            return "epoch-unordered"
+    nn = len(g.nodes)
+    for i in range(nn):
+        for j in range(i + 1, nn):
+            if reach[i][j] or reach[j][i]:
+                continue
+            ni, nj = g.nodes[i], g.nodes[j]
+            for r, kind in enumerate(g.regions):
+                if kind[0] == "scratch":
+                    if ni.touches(r) and nj.touches(r):
+                        return "shared-mut-scratch"
+                    continue
+                wi, wj = ni.writes[r], nj.writes[r]
+                ri, rj = ni.reads[r], nj.reads[r]
+                if wi.first_overlap(wj) is not None:
+                    return "race-ww"
+                if wi.first_overlap(rj) is not None:
+                    return "race-rw"
+                if wj.first_overlap(ri) is not None:
+                    return "race-rw"
+    return None
+
+
 # --- rust/src/verify/corpus.rs ------------------------------------------
 
 
@@ -535,6 +842,90 @@ def run_mutation(kind, expected):
     return f"{head}: REJECT {err} (WANT {expected})", False
 
 
+RACE_MUTATIONS = (
+    ("overlap-parts", "race-ww"),
+    ("shared-panel", "race-ww"),
+    ("arena-write-after-publish", "race-rw"),
+    ("batch-alias", "race-ww"),
+    ("scratch-shared", "shared-mut-scratch"),
+    ("missing-join", "epoch-unordered"),
+)
+
+
+def run_race_shape(case):
+    """corpus.rs run_race_shape: all three execution modes race-free."""
+    m, n, k, mr, kr, t, fused = case
+    head = case_head("race", case)
+    cfg, _bounds = try_plan(mr, kr, PAPER, t)
+    if cfg is None:
+        return f"{head}: FAIL plan-infeasible", False
+    blocks = build_blocks(n, k, cfg)[0] if n >= 2 and k > 0 else []
+    parts = partition_rows(m, cfg["threads"], cfg["mr"]) if t > 1 else []
+    base = race_spec(blocks, m, n, parts, cfg, fused)
+    tasks = len(base.tasks)
+    for spec in (base, base.as_inverse(), base.as_batch(3)):
+        err = check_graph(build_graph(spec))
+        if err is not None:
+            return f"{head}: FAIL {err}", False
+    return f"{head}: PASS tasks={tasks} modes=3", True
+
+
+def run_race_mutation(kind, expected):
+    """corpus.rs run_race_mutation: inject one defect class, demand its
+    exact race code."""
+    case = MUT_BASE
+    m, n, k, mr, kr, t, fused = case
+    head = case_head(f"race-mut {kind}", case)
+    cfg, _bounds = try_plan(mr, kr, PAPER, t)
+    if cfg is None:
+        return f"{head}: FAIL plan-infeasible", False
+    blocks = build_blocks(n, k, cfg)[0]
+    parts = partition_rows(m, cfg["threads"], cfg["mr"])
+    if kind == "overlap-parts":
+        r0, rows = parts[1]
+        parts[1] = (max(r0 - 4, 0), rows)
+        err = check_graph(build_graph(race_spec(blocks, m, n, parts, cfg, fused)))
+    elif kind == "shared-panel":
+        spec = race_spec(blocks, m, n, parts, cfg, fused)
+        spec.tasks[1]["unit"] = 0
+        err = check_graph(build_graph(spec))
+    elif kind == "arena-write-after-publish":
+        spec = race_spec(blocks, m, n, parts, cfg, fused)
+        g = build_graph(spec)
+        streams = next(r for r, kd in enumerate(g.regions)
+                       if kd[0] == "streams")
+        idx = len(g.nodes)
+        stray = NodeAccess(len(g.regions))
+        stray.write(streams, 0, spec.stream_bytes)
+        g.nodes.append(stray)
+        g.edges.append((g.publish, idx))
+        g.edges.append((idx, g.join))
+        err = check_graph(g)
+    elif kind == "batch-alias":
+        spec = race_spec(blocks, m, n, parts, cfg, fused).as_batch(2)
+        spec.views[1][0] = 0
+        spec.views[1][1] = mr // 2
+        err = check_graph(build_graph(spec))
+    elif kind == "scratch-shared":
+        g = build_graph(race_spec(blocks, m, n, parts, cfg, fused))
+        scratch0 = next(r for r, kd in enumerate(g.regions)
+                        if kd == ("scratch", 0))
+        w1 = g.workers[1]
+        g.nodes[w1].read(scratch0, 0, 1)
+        g.nodes[w1].write(scratch0, 0, 1)
+        err = check_graph(g)
+    else:  # missing-join
+        g = build_graph(race_spec(blocks, m, n, parts, cfg, fused))
+        last, join = g.workers[-1], g.join
+        g.edges = [e for e in g.edges if e != (last, join)]
+        err = check_graph(g)
+    if err is None:
+        return f"{head}: ACCEPT (BAD)", False
+    if err == expected:
+        return f"{head}: REJECT {err}", True
+    return f"{head}: REJECT {err} (WANT {expected})", False
+
+
 def corpus_verdicts(mutate):
     lines, ok = [], True
     if mutate:
@@ -550,12 +941,30 @@ def corpus_verdicts(mutate):
     return lines, ok
 
 
+def race_verdicts(mutate):
+    """corpus.rs race_verdicts: the --races sweeps."""
+    lines, ok = [], True
+    if mutate:
+        for kind, expected in RACE_MUTATIONS:
+            line, good = run_race_mutation(kind, expected)
+            lines.append(line)
+            ok &= good
+    else:
+        for case in shape_corpus():
+            line, good = run_race_shape(case)
+            lines.append(line)
+            ok &= good
+    return lines, ok
+
+
 def main():
+    races = "--races" in sys.argv[1:]
     mutate = "--mutate" in sys.argv[1:]
-    lines, ok = corpus_verdicts(mutate)
+    lines, ok = race_verdicts(mutate) if races else corpus_verdicts(mutate)
     for line in lines:
         print(line)
-    mode = "mutation" if mutate else "shape"
+    mode = {(True, True): "race-mutation", (True, False): "race",
+            (False, True): "mutation", (False, False): "shape"}[(races, mutate)]
     if ok:
         print(f"verify.py: {len(lines)} {mode} cases ok", file=sys.stderr)
         return 0
