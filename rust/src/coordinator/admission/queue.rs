@@ -1,0 +1,475 @@
+//! The admission queue core: a pure state machine over `(key, payload)`
+//! arrivals, sharded by key hash, with one deadline wheel per shard.
+//!
+//! Nothing in this module spawns threads, sleeps, or reads a wall clock —
+//! every transition takes `now_ns` as an argument — so the deterministic
+//! unit suites drive it with a [`super::FakeClock`] and assert exact
+//! outcomes. The runtime wrapper ([`super::Admission`]) adds locking and
+//! flusher wake-ups around this core without changing its semantics.
+
+use super::wheel::DeadlineWheel;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+
+/// What to do with an arrival that would exceed the shard's queue depth.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverflowPolicy {
+    /// Shed: hand the payload back as [`Offer::Full`] (the coordinator
+    /// turns it into a typed `Error::QueueFull` on the reply channel).
+    Reject,
+    /// Make room: flush the oldest pending group immediately and queue
+    /// the arrival.
+    FlushOldest,
+}
+
+/// A coalesced batch ready for one dispatch: every payload arrived with
+/// the same key, each stamped with its enqueue instant (for window-wait
+/// accounting).
+pub struct Batch<K, T> {
+    pub key: K,
+    pub items: Vec<(T, u64)>,
+}
+
+impl<K, T> Batch<K, T> {
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+/// Outcome of [`Shard::offer`] / [`AdmissionCore::offer`].
+pub enum Offer<K, T> {
+    /// Queued behind the key's pending group. `armed` carries the
+    /// deadline when this arrival opened the group (the runtime pokes the
+    /// flusher); `None` when it joined an existing group.
+    Queued { armed: Option<u64> },
+    /// The arrival filled the group to the size cap: dispatch this batch
+    /// now (the arrival is inside it).
+    Flush(Batch<K, T>),
+    /// Depth bound hit under [`OverflowPolicy::FlushOldest`]: the evicted
+    /// batch must be dispatched, the arrival was queued.
+    MadeRoom {
+        evicted: Batch<K, T>,
+        armed: Option<u64>,
+    },
+    /// Depth bound hit under [`OverflowPolicy::Reject`]: the payload is
+    /// handed back for shedding.
+    Full { item: T, depth: usize, limit: usize },
+}
+
+/// One pending same-key group: its payloads (with enqueue stamps) and the
+/// deadline armed by its first arrival.
+struct Group<T> {
+    items: Vec<(T, u64)>,
+    deadline_ns: u64,
+}
+
+/// Per-shard tunables (copied from `AdmissionConfig` at construction).
+#[derive(Clone, Copy)]
+pub struct ShardCfg {
+    pub window_ns: u64,
+    pub batch_max: usize,
+    pub queue_depth: usize,
+    pub overflow: OverflowPolicy,
+    pub wheel_slots: usize,
+}
+
+/// One shard: the groups owned by a slice of the key space, plus the
+/// deadline wheel that orders their expiries.
+pub struct Shard<K, T> {
+    groups: HashMap<K, Group<T>>,
+    wheel: DeadlineWheel<K>,
+    cfg: ShardCfg,
+    /// Payloads currently queued across all groups in this shard.
+    queued: usize,
+    peak_queued: usize,
+    /// Scratch for wheel harvests (reused; never holds data across calls).
+    due_keys: Vec<K>,
+}
+
+impl<K: Copy + Eq + Hash, T> Shard<K, T> {
+    pub fn new(cfg: ShardCfg) -> Self {
+        // Slot granularity ~1/16th of the window keeps harvest walks
+        // short while bounding deadline quantization error well under the
+        // window itself.
+        let granularity = (cfg.window_ns / 16).max(1);
+        Self {
+            groups: HashMap::new(),
+            wheel: DeadlineWheel::new(granularity, cfg.wheel_slots.max(2)),
+            cfg,
+            queued: 0,
+            peak_queued: 0,
+            due_keys: Vec::new(),
+        }
+    }
+
+    /// Admit one payload. Pure: all time comes in through `now_ns`.
+    pub fn offer(&mut self, key: K, item: T, now_ns: u64) -> Offer<K, T> {
+        debug_assert!(self.cfg.batch_max >= 1);
+        if self.queued >= self.cfg.queue_depth {
+            match self.cfg.overflow {
+                OverflowPolicy::Reject => {
+                    return Offer::Full {
+                        item,
+                        depth: self.queued,
+                        limit: self.cfg.queue_depth,
+                    };
+                }
+                OverflowPolicy::FlushOldest => {
+                    if let Some(evicted) = self.pop_oldest_group() {
+                        let armed = self.push(key, item, now_ns);
+                        return Offer::MadeRoom { evicted, armed };
+                    }
+                    // Depth bound with nothing queued: the bound is 0 —
+                    // degenerate config; pass the arrival straight through
+                    // as a singleton batch rather than wedging.
+                    return Offer::Flush(Batch {
+                        key,
+                        items: vec![(item, now_ns)],
+                    });
+                }
+            }
+        }
+        let armed = self.push(key, item, now_ns);
+        // Size-cap flush: the group is dispatched the instant it fills.
+        let full = self
+            .groups
+            .get(&key)
+            .is_some_and(|g| g.items.len() >= self.cfg.batch_max);
+        if full {
+            if let Some(batch) = self.take_group(key) {
+                return Offer::Flush(batch);
+            }
+        }
+        Offer::Queued { armed }
+    }
+
+    /// Queue `item` under `key`, opening (and arming) the group on first
+    /// arrival. Returns the armed deadline for a newly opened group.
+    fn push(&mut self, key: K, item: T, now_ns: u64) -> Option<u64> {
+        self.queued += 1;
+        self.peak_queued = self.peak_queued.max(self.queued);
+        match self.groups.get_mut(&key) {
+            Some(g) => {
+                g.items.push((item, now_ns));
+                None
+            }
+            None => {
+                let deadline = now_ns.saturating_add(self.cfg.window_ns);
+                self.groups.insert(
+                    key,
+                    Group {
+                        items: vec![(item, now_ns)],
+                        deadline_ns: deadline,
+                    },
+                );
+                self.wheel.schedule(key, deadline);
+                Some(deadline)
+            }
+        }
+    }
+
+    fn take_group(&mut self, key: K) -> Option<Batch<K, T>> {
+        let g = self.groups.remove(&key)?;
+        self.queued -= g.items.len();
+        // The wheel entry goes stale; the next harvest skips it (the key
+        // no longer resolves to a group, or resolves to a *newer* group
+        // whose own deadline differs).
+        Some(Batch { key, items: g.items })
+    }
+
+    /// The pending group whose deadline is earliest (eviction victim for
+    /// [`OverflowPolicy::FlushOldest`]).
+    fn pop_oldest_group(&mut self) -> Option<Batch<K, T>> {
+        let key = self
+            .groups
+            .iter()
+            .min_by_key(|(_, g)| g.deadline_ns)
+            .map(|(k, _)| *k)?;
+        self.take_group(key)
+    }
+
+    /// Harvest every group whose window has expired by `now_ns`,
+    /// appending ready batches to `out`.
+    pub fn expire(&mut self, now_ns: u64, out: &mut Vec<Batch<K, T>>) {
+        let mut due = std::mem::take(&mut self.due_keys);
+        due.clear();
+        self.wheel.take_due(now_ns, &mut due);
+        for key in due.drain(..) {
+            // Lazy-cancellation filter: the group may have been flushed
+            // (size cap) and possibly re-opened since this wheel entry
+            // was armed. Only a group whose own deadline has passed goes.
+            let ripe = self
+                .groups
+                .get(&key)
+                .is_some_and(|g| g.deadline_ns <= now_ns);
+            if ripe {
+                if let Some(batch) = self.take_group(key) {
+                    out.push(batch);
+                }
+            }
+        }
+        self.due_keys = due;
+    }
+
+    /// Flush everything pending regardless of deadlines (shutdown drain).
+    pub fn drain(&mut self, out: &mut Vec<Batch<K, T>>) {
+        let keys: Vec<K> = self.groups.keys().copied().collect();
+        for key in keys {
+            if let Some(batch) = self.take_group(key) {
+                out.push(batch);
+            }
+        }
+    }
+
+    /// Earliest pending deadline in this shard (None when idle). May
+    /// report a stale (lazily cancelled) deadline — the flusher then
+    /// wakes, harvests nothing, and re-arms; it never misses a real one.
+    pub fn next_deadline(&self) -> Option<u64> {
+        if self.groups.is_empty() {
+            return None;
+        }
+        self.wheel.next_deadline()
+    }
+
+    /// Payloads currently queued.
+    pub fn queued(&self) -> usize {
+        self.queued
+    }
+
+    /// High-water mark of queued payloads.
+    pub fn peak_queued(&self) -> usize {
+        self.peak_queued
+    }
+
+    /// Queue depth of one key's pending group.
+    pub fn depth_of(&self, key: &K) -> usize {
+        self.groups.get(key).map_or(0, |g| g.items.len())
+    }
+}
+
+/// The sharded core: routes each key to one [`Shard`] by hash. Pure like
+/// the shards; the runtime wrapper owns the locking.
+pub struct AdmissionCore<K, T> {
+    shards: Vec<Shard<K, T>>,
+}
+
+impl<K: Copy + Eq + Hash, T> AdmissionCore<K, T> {
+    pub fn new(shards: usize, cfg: ShardCfg) -> Self {
+        Self {
+            shards: (0..shards.max(1)).map(|_| Shard::new(cfg)).collect(),
+        }
+    }
+
+    pub fn shard_index(&self, key: &K) -> usize {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() % self.shards.len() as u64) as usize
+    }
+
+    pub fn offer(&mut self, key: K, item: T, now_ns: u64) -> Offer<K, T> {
+        let idx = self.shard_index(&key);
+        self.shards[idx].offer(key, item, now_ns)
+    }
+
+    pub fn expire(&mut self, now_ns: u64) -> Vec<Batch<K, T>> {
+        let mut out = Vec::new();
+        for s in &mut self.shards {
+            s.expire(now_ns, &mut out);
+        }
+        out
+    }
+
+    pub fn drain(&mut self) -> Vec<Batch<K, T>> {
+        let mut out = Vec::new();
+        for s in &mut self.shards {
+            s.drain(&mut out);
+        }
+        out
+    }
+
+    pub fn next_deadline(&self) -> Option<u64> {
+        self.shards.iter().filter_map(Shard::next_deadline).min()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.shards.iter().map(Shard::queued).sum()
+    }
+
+    pub fn peak_queued(&self) -> usize {
+        self.shards.iter().map(Shard::peak_queued).max().unwrap_or(0)
+    }
+
+    pub fn depth_of(&self, key: &K) -> usize {
+        let idx = self.shard_index(key);
+        self.shards[idx].depth_of(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(window_ns: u64, batch_max: usize, queue_depth: usize, overflow: OverflowPolicy) -> ShardCfg {
+        ShardCfg {
+            window_ns,
+            batch_max,
+            queue_depth,
+            overflow,
+            wheel_slots: 64,
+        }
+    }
+
+    fn queued_ok<K, T>(o: &Offer<K, T>) -> bool {
+        matches!(o, Offer::Queued { .. })
+    }
+
+    #[test]
+    fn window_expiry_releases_the_group_exactly_once() {
+        let mut s: Shard<u32, &str> = Shard::new(cfg(1_000, 100, 100, OverflowPolicy::Reject));
+        assert!(matches!(
+            s.offer(7, "a", 0),
+            Offer::Queued { armed: Some(1_000) }
+        ));
+        assert!(matches!(s.offer(7, "b", 400), Offer::Queued { armed: None }));
+        let mut out = Vec::new();
+        s.expire(999, &mut out);
+        assert!(out.is_empty(), "window not yet expired");
+        s.expire(1_000, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), 2);
+        assert_eq!(out[0].key, 7);
+        assert_eq!(out[0].items[0], ("a", 0));
+        assert_eq!(out[0].items[1], ("b", 400));
+        out.clear();
+        s.expire(5_000, &mut out);
+        assert!(out.is_empty(), "nothing left to expire");
+        assert_eq!(s.queued(), 0);
+    }
+
+    #[test]
+    fn size_cap_flushes_without_waiting_for_the_window() {
+        let mut s: Shard<u32, u32> = Shard::new(cfg(1_000_000, 3, 100, OverflowPolicy::Reject));
+        assert!(queued_ok(&s.offer(1, 10, 0)));
+        assert!(queued_ok(&s.offer(1, 11, 1)));
+        match s.offer(1, 12, 2) {
+            Offer::Flush(b) => {
+                assert_eq!(b.len(), 3);
+                assert_eq!(
+                    b.items.iter().map(|&(v, _)| v).collect::<Vec<_>>(),
+                    vec![10, 11, 12]
+                );
+            }
+            _ => panic!("third arrival must flush at batch_max=3"),
+        }
+        assert_eq!(s.queued(), 0);
+        // The stale wheel entry must not resurrect anything.
+        let mut out = Vec::new();
+        s.expire(2_000_000, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn reopened_group_after_size_cap_gets_its_own_window() {
+        let mut s: Shard<u32, u32> = Shard::new(cfg(1_000, 2, 100, OverflowPolicy::Reject));
+        assert!(queued_ok(&s.offer(1, 0, 0)));
+        assert!(matches!(s.offer(1, 1, 10), Offer::Flush(_)));
+        // Re-open the same key: new group, new deadline (500+1000).
+        assert!(matches!(
+            s.offer(1, 2, 500),
+            Offer::Queued { armed: Some(1_500) }
+        ));
+        let mut out = Vec::new();
+        // The stale entry from the first group (deadline 1000) fires in
+        // the wheel but must not release the new group early.
+        s.expire(1_000, &mut out);
+        assert!(out.is_empty(), "stale wheel entry must be skipped");
+        s.expire(1_500, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].items, vec![(2, 500)]);
+    }
+
+    #[test]
+    fn backpressure_reject_hands_the_item_back() {
+        let mut s: Shard<u32, &str> = Shard::new(cfg(1_000, 100, 2, OverflowPolicy::Reject));
+        assert!(queued_ok(&s.offer(1, "a", 0)));
+        assert!(queued_ok(&s.offer(2, "b", 0)));
+        match s.offer(3, "c", 0) {
+            Offer::Full { item, depth, limit } => {
+                assert_eq!(item, "c");
+                assert_eq!(depth, 2);
+                assert_eq!(limit, 2);
+            }
+            _ => panic!("depth bound must shed"),
+        }
+        assert_eq!(s.queued(), 2, "shed arrival not queued");
+        assert_eq!(s.peak_queued(), 2);
+    }
+
+    #[test]
+    fn backpressure_flush_oldest_makes_room() {
+        let mut s: Shard<u32, &str> = Shard::new(cfg(1_000, 100, 2, OverflowPolicy::FlushOldest));
+        assert!(queued_ok(&s.offer(1, "a", 0)));
+        assert!(queued_ok(&s.offer(2, "b", 100)));
+        match s.offer(3, "c", 200) {
+            Offer::MadeRoom { evicted, armed } => {
+                assert_eq!(evicted.key, 1, "oldest deadline evicted");
+                assert_eq!(evicted.items, vec![("a", 0)]);
+                assert_eq!(armed, Some(1_200));
+            }
+            _ => panic!("FlushOldest must evict, not shed"),
+        }
+        assert_eq!(s.queued(), 2);
+        assert_eq!(s.depth_of(&2), 1);
+        assert_eq!(s.depth_of(&3), 1);
+    }
+
+    #[test]
+    fn drain_flushes_everything_pending() {
+        let mut core: AdmissionCore<u32, u32> =
+            AdmissionCore::new(4, cfg(1_000_000, 100, 1_000, OverflowPolicy::Reject));
+        for key in 0..10u32 {
+            for item in 0..3u32 {
+                assert!(queued_ok(&core.offer(key, item, 0)));
+            }
+        }
+        assert_eq!(core.queued(), 30);
+        let mut batches = core.drain();
+        assert_eq!(batches.len(), 10);
+        batches.sort_by_key(|b| b.key);
+        for (i, b) in batches.iter().enumerate() {
+            assert_eq!(b.key, i as u32);
+            assert_eq!(b.len(), 3);
+        }
+        assert_eq!(core.queued(), 0);
+        assert_eq!(core.next_deadline(), None);
+    }
+
+    #[test]
+    fn distinct_keys_never_share_a_batch() {
+        let mut core: AdmissionCore<(u32, u64), u32> =
+            AdmissionCore::new(8, cfg(100, 100, 1_000, OverflowPolicy::Reject));
+        // Same "plan", different content hash: must form separate groups.
+        assert!(queued_ok(&core.offer((1, 0xAAAA), 1, 0)));
+        assert!(queued_ok(&core.offer((1, 0xBBBB), 2, 0)));
+        let batches = core.expire(100);
+        assert_eq!(batches.len(), 2);
+        assert!(batches.iter().all(|b| b.len() == 1));
+    }
+
+    #[test]
+    fn next_deadline_is_the_earliest_across_shards() {
+        let mut core: AdmissionCore<u32, u32> =
+            AdmissionCore::new(4, cfg(1_000, 100, 1_000, OverflowPolicy::Reject));
+        assert!(queued_ok(&core.offer(11, 0, 500)));
+        assert!(queued_ok(&core.offer(23, 0, 200)));
+        assert_eq!(core.next_deadline(), Some(1_200));
+        let batches = core.expire(1_200);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(core.next_deadline(), Some(1_500));
+    }
+}

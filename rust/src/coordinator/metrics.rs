@@ -1,6 +1,26 @@
 //! Coordinator metrics: thread-safe counters + snapshot.
+//!
+//! Beyond the job/plan counters, the admission subsystem
+//! ([`super::admission`]) reports its batching behavior here: batched vs
+//! solo dispatch counts, a batch-size histogram, window-wait latency,
+//! bypass/shed counts, queue-depth high-water mark, and the stream-pack
+//! ledger sums that prove per-job packing traffic drops with batch size.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Batch-size histogram buckets: `1, 2, 3-4, 5-8, 9-16, 17+`.
+pub const BATCH_HIST_BUCKETS: usize = 6;
+
+fn batch_bucket(size: u64) -> usize {
+    match size {
+        0 | 1 => 0,
+        2 => 1,
+        3..=4 => 2,
+        5..=8 => 3,
+        9..=16 => 4,
+        _ => 5,
+    }
+}
 
 /// Aggregated service counters (atomics; shared across workers).
 #[derive(Default)]
@@ -12,6 +32,23 @@ pub struct Metrics {
     busy_nanos: AtomicU64,
     plan_cache_hits: AtomicU64,
     plan_cache_misses: AtomicU64,
+    // --- admission ---
+    batched_dispatches: AtomicU64,
+    batched_jobs: AtomicU64,
+    solo_dispatches: AtomicU64,
+    bypass_jobs: AtomicU64,
+    shed_jobs: AtomicU64,
+    window_wait_ns_total: AtomicU64,
+    window_wait_ns_max: AtomicU64,
+    batch_hist: [AtomicU64; BATCH_HIST_BUCKETS],
+    /// Sum over batched dispatches of the per-dispatch stream-pack
+    /// doubles (each dispatch packs once for the whole batch).
+    stream_pack_batched_doubles: AtomicU64,
+    /// Sum over solo kernel dispatches of their stream-pack doubles.
+    stream_pack_solo_doubles: AtomicU64,
+    /// Solo kernel dispatches contributing to the solo stream-pack sum.
+    stream_pack_solo_jobs: AtomicU64,
+    admission_queue_peak: AtomicU64,
 }
 
 /// A point-in-time copy of the counters.
@@ -24,6 +61,27 @@ pub struct MetricsSnapshot {
     pub busy_nanos: u64,
     pub plan_cache_hits: u64,
     pub plan_cache_misses: u64,
+    /// Batched `execute_batch` dispatches (each covers >= 1 job).
+    pub batched_dispatches: u64,
+    /// Jobs completed inside batched dispatches.
+    pub batched_jobs: u64,
+    /// Jobs dispatched alone (bypass, non-batchable, or fallback).
+    pub solo_dispatches: u64,
+    /// Jobs that skipped the admission queues entirely (adaptive policy:
+    /// cold keys, non-kernel algorithms). Zero queue wait by construction.
+    pub bypass_jobs: u64,
+    /// Jobs shed with `Error::QueueFull` at the depth bound.
+    pub shed_jobs: u64,
+    /// Total / max nanoseconds batched jobs waited in their window.
+    pub window_wait_ns_total: u64,
+    pub window_wait_ns_max: u64,
+    /// Dispatch counts by batch size: `1, 2, 3-4, 5-8, 9-16, 17+`.
+    pub batch_hist: [u64; BATCH_HIST_BUCKETS],
+    pub stream_pack_batched_doubles: u64,
+    pub stream_pack_solo_doubles: u64,
+    pub stream_pack_solo_jobs: u64,
+    /// High-water mark of per-shard queued jobs in the admission layer.
+    pub admission_queue_peak: u64,
 }
 
 impl Metrics {
@@ -55,6 +113,49 @@ impl Metrics {
         self.plan_cache_misses.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One coalesced `execute_batch` dispatch of `batch_size` jobs whose
+    /// schedule packed `stream_pack_doubles` doubles (once for the whole
+    /// batch — the amortized quantity).
+    pub fn record_batch_dispatch(&self, batch_size: u64, stream_pack_doubles: u64) {
+        self.batched_dispatches.fetch_add(1, Ordering::Relaxed);
+        self.batched_jobs.fetch_add(batch_size, Ordering::Relaxed);
+        self.batch_hist[batch_bucket(batch_size)].fetch_add(1, Ordering::Relaxed);
+        self.stream_pack_batched_doubles
+            .fetch_add(stream_pack_doubles, Ordering::Relaxed);
+    }
+
+    /// One job executed alone; kernel dispatches pass their stream-pack
+    /// ledger so the solo baseline is measured, not assumed.
+    pub fn record_solo_dispatch(&self, stream_pack_doubles: Option<u64>) {
+        self.solo_dispatches.fetch_add(1, Ordering::Relaxed);
+        if let Some(doubles) = stream_pack_doubles {
+            self.stream_pack_solo_doubles
+                .fetch_add(doubles, Ordering::Relaxed);
+            self.stream_pack_solo_jobs.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// A job took the adaptive-policy bypass (no queue, no added wait).
+    pub fn record_bypass(&self) {
+        self.bypass_jobs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A job was shed with `Error::QueueFull`.
+    pub fn record_shed(&self) {
+        self.shed_jobs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One batched job waited `wait_ns` between enqueue and dispatch.
+    pub fn record_window_wait(&self, wait_ns: u64) {
+        self.window_wait_ns_total.fetch_add(wait_ns, Ordering::Relaxed);
+        self.window_wait_ns_max.fetch_max(wait_ns, Ordering::Relaxed);
+    }
+
+    /// Raise the admission queue-depth high-water mark.
+    pub fn record_queue_peak(&self, peak: u64) {
+        self.admission_queue_peak.fetch_max(peak, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
@@ -64,6 +165,25 @@ impl Metrics {
             busy_nanos: self.busy_nanos.load(Ordering::Relaxed),
             plan_cache_hits: self.plan_cache_hits.load(Ordering::Relaxed),
             plan_cache_misses: self.plan_cache_misses.load(Ordering::Relaxed),
+            batched_dispatches: self.batched_dispatches.load(Ordering::Relaxed),
+            batched_jobs: self.batched_jobs.load(Ordering::Relaxed),
+            solo_dispatches: self.solo_dispatches.load(Ordering::Relaxed),
+            bypass_jobs: self.bypass_jobs.load(Ordering::Relaxed),
+            shed_jobs: self.shed_jobs.load(Ordering::Relaxed),
+            window_wait_ns_total: self.window_wait_ns_total.load(Ordering::Relaxed),
+            window_wait_ns_max: self.window_wait_ns_max.load(Ordering::Relaxed),
+            batch_hist: [
+                self.batch_hist[0].load(Ordering::Relaxed),
+                self.batch_hist[1].load(Ordering::Relaxed),
+                self.batch_hist[2].load(Ordering::Relaxed),
+                self.batch_hist[3].load(Ordering::Relaxed),
+                self.batch_hist[4].load(Ordering::Relaxed),
+                self.batch_hist[5].load(Ordering::Relaxed),
+            ],
+            stream_pack_batched_doubles: self.stream_pack_batched_doubles.load(Ordering::Relaxed),
+            stream_pack_solo_doubles: self.stream_pack_solo_doubles.load(Ordering::Relaxed),
+            stream_pack_solo_jobs: self.stream_pack_solo_jobs.load(Ordering::Relaxed),
+            admission_queue_peak: self.admission_queue_peak.load(Ordering::Relaxed),
         }
     }
 }
@@ -75,6 +195,45 @@ impl MetricsSnapshot {
             0.0
         } else {
             self.flops_done as f64 / self.busy_nanos as f64
+        }
+    }
+
+    /// Mean jobs per batched dispatch (0 when none happened).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batched_dispatches == 0 {
+            0.0
+        } else {
+            self.batched_jobs as f64 / self.batched_dispatches as f64
+        }
+    }
+
+    /// Mean window wait per batched job, in microseconds.
+    pub fn mean_window_wait_us(&self) -> f64 {
+        if self.batched_jobs == 0 {
+            0.0
+        } else {
+            self.window_wait_ns_total as f64 / self.batched_jobs as f64 / 1e3
+        }
+    }
+
+    /// Mean stream-pack doubles **per job** inside batched dispatches:
+    /// each dispatch packs once, so this is sum(P) / sum(B) — the ledger
+    /// quantity that must sit strictly below the solo baseline once real
+    /// coalescing happens.
+    pub fn stream_pack_per_batched_job(&self) -> f64 {
+        if self.batched_jobs == 0 {
+            0.0
+        } else {
+            self.stream_pack_batched_doubles as f64 / self.batched_jobs as f64
+        }
+    }
+
+    /// Mean stream-pack doubles per solo kernel job (the baseline).
+    pub fn stream_pack_per_solo_job(&self) -> f64 {
+        if self.stream_pack_solo_jobs == 0 {
+            0.0
+        } else {
+            self.stream_pack_solo_doubles as f64 / self.stream_pack_solo_jobs as f64
         }
     }
 }
@@ -101,5 +260,50 @@ mod tests {
     #[test]
     fn empty_gflops_is_zero() {
         assert_eq!(Metrics::new().snapshot().gflops(), 0.0);
+    }
+
+    #[test]
+    fn admission_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_batch_dispatch(4, 1_000);
+        m.record_batch_dispatch(2, 1_000);
+        m.record_solo_dispatch(Some(1_000));
+        m.record_solo_dispatch(None); // non-kernel solo: no ledger
+        m.record_bypass();
+        m.record_shed();
+        m.record_window_wait(300);
+        m.record_window_wait(500);
+        m.record_queue_peak(7);
+        m.record_queue_peak(3); // lower: must not regress the max
+        let s = m.snapshot();
+        assert_eq!(s.batched_dispatches, 2);
+        assert_eq!(s.batched_jobs, 6);
+        assert_eq!(s.solo_dispatches, 2);
+        assert_eq!(s.bypass_jobs, 1);
+        assert_eq!(s.shed_jobs, 1);
+        assert_eq!(s.window_wait_ns_total, 800);
+        assert_eq!(s.window_wait_ns_max, 500);
+        assert_eq!(s.admission_queue_peak, 7);
+        assert_eq!(s.batch_hist, [0, 1, 1, 0, 0, 0]);
+        assert!((s.mean_batch_size() - 3.0).abs() < 1e-12);
+        // Per-job amortization: 2000 packed doubles over 6 batched jobs
+        // vs 1000 per solo job.
+        assert!((s.stream_pack_per_batched_job() - 2_000.0 / 6.0).abs() < 1e-9);
+        assert!((s.stream_pack_per_solo_job() - 1_000.0).abs() < 1e-12);
+        assert!(s.stream_pack_per_batched_job() < s.stream_pack_per_solo_job());
+    }
+
+    #[test]
+    fn batch_buckets_partition_sizes() {
+        assert_eq!(batch_bucket(1), 0);
+        assert_eq!(batch_bucket(2), 1);
+        assert_eq!(batch_bucket(3), 2);
+        assert_eq!(batch_bucket(4), 2);
+        assert_eq!(batch_bucket(5), 3);
+        assert_eq!(batch_bucket(8), 3);
+        assert_eq!(batch_bucket(9), 4);
+        assert_eq!(batch_bucket(16), 4);
+        assert_eq!(batch_bucket(17), 5);
+        assert_eq!(batch_bucket(1_000), 5);
     }
 }

@@ -7,13 +7,20 @@
 //! heuristics mirroring the Fig 5 crossovers), runs it on a worker pool,
 //! and aggregates metrics. The offline vendor set has no tokio, so the
 //! event loop is `std::thread` + channels.
+//!
+//! The opt-in [`admission`] layer adds deadline-window micro-batching:
+//! same-plan, same-sequence jobs arriving within a window coalesce into
+//! one `execute_batch` dispatch, amortizing the wave-stream pack across
+//! requests (see [`Coordinator::start_with_admission`]).
 
+pub mod admission;
 mod metrics;
 mod plancache;
 mod router;
 mod server;
 
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use admission::{AdmissionConfig, BatchKey};
+pub use metrics::{Metrics, MetricsSnapshot, BATCH_HIST_BUCKETS};
 pub use plancache::{ExecTracker, KeyStats, PlanCache, PlanKey, DEFAULT_MAX_CACHED};
 pub use router::{route, RoutePolicy};
 pub use server::{Coordinator, Job, JobResult, JobSpec};

@@ -284,6 +284,43 @@ impl PlanCache {
         stats.get(key).copied().unwrap_or_default()
     }
 
+    /// One coordinator housekeeping tick for the workspace pool: cap each
+    /// cached key's context shelf at its observed
+    /// [`KeyStats::peak_concurrency`] (a one-off burst then trims back to
+    /// real steady-state demand instead of permanently inflating the
+    /// pool), advance the pool's idle clock, and reap contexts nothing
+    /// has rented for more than `max_idle_ticks` ticks. Driven by the
+    /// admission flusher when batching is enabled
+    /// ([`crate::coordinator::Coordinator::start_with_admission`]);
+    /// callable directly by tests and embedders. Returns the number of
+    /// contexts reaped this tick.
+    pub fn maintain(&self, max_idle_ticks: u64) -> usize {
+        let caps: Vec<(crate::plan::WorkspaceSig, usize)> = {
+            let plans = self.plans.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            let stats = self.stats.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            plans
+                .iter()
+                .map(|(key, entry)| {
+                    let peak = stats.get(key).map_or(0, |s| s.peak_concurrency);
+                    // Keep at least one context per live signature: the
+                    // steady-state reuse path must survive maintenance.
+                    (entry.plan.workspace_sig(), peak.max(1) as usize)
+                })
+                .collect()
+        };
+        // Two keys can in principle share a workspace signature; the
+        // shelf serves both, so the cap is the max of their peaks.
+        let mut merged: HashMap<crate::plan::WorkspaceSig, usize> = HashMap::new();
+        for (sig, cap) in caps {
+            let slot = merged.entry(sig).or_insert(0);
+            *slot = (*slot).max(cap);
+        }
+        for (sig, cap) in merged {
+            self.workspaces.set_shelf_cap(sig, cap);
+        }
+        self.workspaces.tick_and_reap(max_idle_ticks)
+    }
+
     /// Number of cached plans (observability).
     pub fn cached_plans(&self) -> usize {
         let plans = self.plans.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
@@ -550,6 +587,35 @@ mod tests {
             config: KernelConfig::default(),
         };
         assert_eq!(cache_obj.tuned_key(key).config, tuned);
+    }
+
+    #[test]
+    fn maintain_caps_shelves_at_peak_concurrency_and_reaps_idle() {
+        let cache = PlanCache::new();
+        let k = key();
+        let (plan, _) = cache.get_or_build(&k).unwrap();
+        // A burst shelves 4 contexts, but the key's observed concurrency
+        // peak is only 2.
+        let ctxs: Vec<_> = (0..4).map(|_| cache.workspace_pool().rent(&plan)).collect();
+        {
+            let _t1 = cache.track(k);
+            let _t2 = cache.track(k);
+        }
+        assert_eq!(cache.key_stats(&k).peak_concurrency, 2);
+        for c in ctxs {
+            cache.workspace_pool().give_back(c);
+        }
+        assert_eq!(cache.workspace_pool().pooled(), 4);
+        // Housekeeping trims the shelf to the peak.
+        let reaped = cache.maintain(1_000);
+        assert_eq!(cache.workspace_pool().pooled(), 2);
+        assert_eq!(cache.workspace_pool().ctxs_reaped(), 2);
+        assert_eq!(reaped, 0, "cap trim is not an idle reap");
+        // Contexts idle across more than max_idle_ticks ticks are reaped.
+        let reaped = cache.maintain(1);
+        assert_eq!(reaped, 2);
+        assert_eq!(cache.workspace_pool().pooled(), 0);
+        assert_eq!(cache.workspace_pool().ctxs_reaped(), 4);
     }
 
     #[test]

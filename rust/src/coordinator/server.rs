@@ -6,7 +6,17 @@
 //! [`crate::plan::ExecCtx`]s from the cache's
 //! [`crate::plan::WorkspacePool`] — no re-planning and no plan cloning
 //! per job, even when same-key jobs overlap.
+//!
+//! With [`Coordinator::start_with_admission`], submissions additionally
+//! pass through the [`super::admission`] layer: jobs resolving to the
+//! same plan and carrying bitwise-identical sequences coalesce within a
+//! deadline window into one
+//! [`crate::plan::RotationPlan::execute_batch`] dispatch, packing the
+//! `C`/`S` wave streams once for the whole group.
 
+use super::admission::{
+    self, sequences_identical, seq_fingerprint, Admission, AdmissionConfig, Batch, BatchKey, Offer,
+};
 use super::metrics::Metrics;
 use super::plancache::{PlanCache, PlanKey};
 use super::router::{route, RoutePolicy};
@@ -17,7 +27,7 @@ use crate::rot::{OpSequence, RotationSequence};
 use anyhow::Result;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// What a job should do.
 #[derive(Clone, Debug)]
@@ -61,14 +71,38 @@ pub struct Job {
 pub struct JobResult {
     pub matrix: Matrix,
     pub algorithm: Algorithm,
+    /// Wall time of the dispatch that carried this job (the whole batch's
+    /// when it was coalesced).
     pub elapsed_s: f64,
+    /// Effective per-job rate: this job's flops over its amortized share
+    /// (`elapsed / batch_size`) of the dispatch.
     pub gflops: f64,
+    /// How many jobs shared the dispatch (1 = solo/bypass).
+    pub batch_size: usize,
+}
+
+/// A job parked in the admission layer with its reply channel.
+struct QueuedJob {
+    job: Job,
+    reply: Sender<Result<JobResult>>,
+}
+
+/// A coalesced group bound for one `execute_batch` dispatch.
+struct BatchJob {
+    /// The resolved plan key every member mapped to.
+    key: PlanKey,
+    members: Vec<QueuedJob>,
 }
 
 enum Message {
     Work(Job, Sender<Result<JobResult>>),
+    Batch(BatchJob),
     Shutdown,
 }
+
+/// How many flusher ticks a pooled `ExecCtx` may sit idle before the
+/// housekeeping pass reaps it (see [`PlanCache::maintain`]).
+const POOL_IDLE_TICKS: u64 = 64;
 
 /// The coordinator: owns the worker pool, the plan cache, and the metrics.
 pub struct Coordinator {
@@ -77,11 +111,44 @@ pub struct Coordinator {
     metrics: Arc<Metrics>,
     plans: Arc<PlanCache>,
     policy: RoutePolicy,
+    admission: Option<Arc<Admission<QueuedJob>>>,
+    flusher: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Start `workers` worker threads.
+    /// Start `workers` worker threads. No admission layer: every job
+    /// dispatches solo, exactly as before.
     pub fn start(workers: usize, policy: RoutePolicy) -> Self {
+        Self::start_inner(workers, policy, None, None)
+    }
+
+    /// Start with deadline-window micro-batching: submissions that
+    /// resolve to the same plan and carry bitwise-identical sequences
+    /// coalesce (within `cfg.window_ns`, up to `cfg.batch_max`) into one
+    /// `execute_batch` dispatch. A flusher thread harvests expired
+    /// windows and runs pool housekeeping.
+    pub fn start_with_admission(workers: usize, policy: RoutePolicy, cfg: AdmissionConfig) -> Self {
+        Self::start_inner(workers, policy, Some(cfg), None)
+    }
+
+    /// Admission with an injected [`admission::Clock`] — deterministic
+    /// tests drive windows with an [`admission::FakeClock`] instead of
+    /// wall time.
+    pub fn start_with_admission_clock(
+        workers: usize,
+        policy: RoutePolicy,
+        cfg: AdmissionConfig,
+        clock: Arc<dyn admission::Clock>,
+    ) -> Self {
+        Self::start_inner(workers, policy, Some(cfg), Some(clock))
+    }
+
+    fn start_inner(
+        workers: usize,
+        policy: RoutePolicy,
+        admission_cfg: Option<AdmissionConfig>,
+        clock: Option<Arc<dyn admission::Clock>>,
+    ) -> Self {
         let (tx, rx) = channel::<Message>();
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::new());
@@ -94,12 +161,27 @@ impl Coordinator {
                 std::thread::spawn(move || worker_loop(rx, metrics, plans, policy))
             })
             .collect();
+        let admission = admission_cfg.map(|cfg| {
+            Arc::new(match clock {
+                Some(clock) => Admission::with_clock(cfg, clock),
+                None => Admission::new(cfg),
+            })
+        });
+        let flusher = admission.as_ref().map(|adm| {
+            let adm = Arc::clone(adm);
+            let tx = tx.clone();
+            let metrics = Arc::clone(&metrics);
+            let plans = Arc::clone(&plans);
+            std::thread::spawn(move || flusher_loop(&adm, &tx, &metrics, &plans))
+        });
         Self {
             tx,
             workers: handles,
             metrics,
             plans,
             policy,
+            admission,
+            flusher,
         }
     }
 
@@ -109,17 +191,62 @@ impl Coordinator {
     pub fn submit(&self, job: Job) -> Receiver<Result<JobResult>> {
         let (rtx, rrx) = channel();
         self.metrics.record_submit();
-        if let Err(send_err) = self.tx.send(Message::Work(job, rtx)) {
-            self.metrics.record_failure();
-            // Recover the reply sender from the unsent message so the
-            // caller's receiver yields an error rather than a disconnect.
-            if let Message::Work(_, rtx) = send_err.0 {
-                let _ = rtx.send(Err(anyhow::anyhow!(
-                    "coordinator is shut down: job channel closed"
-                )));
-            }
+        if let Some(msg) = self.admit(job, rtx) {
+            send_or_fail(&self.tx, &self.metrics, msg);
         }
         rrx
+    }
+
+    /// Route one submission through the admission layer when one is
+    /// enabled. Returns the message to dispatch immediately (solo/bypass),
+    /// or `None` when the job was queued for a window, coalesced into an
+    /// already-dispatched batch, or shed with a typed error.
+    fn admit(&self, job: Job, rtx: Sender<Result<JobResult>>) -> Option<Message> {
+        let Some(adm) = &self.admission else {
+            return Some(Message::Work(job, rtx));
+        };
+        let m = job.matrix.rows();
+        let n = job.matrix.cols();
+        let k = job.seq.k();
+        // The admission key is the RESOLVED plan identity — router
+        // applied, tuned-config swap applied. Keying on the raw spec
+        // would let an explicit-config job coalesce with a tuned-default
+        // batch whose KernelConfig differs; groups must share one plan
+        // byte-for-byte.
+        let key = self.plans.tuned_key(job.spec.plan_key(self.policy, m, n, k));
+        let batchable = key.algorithm == Algorithm::Kernel && job.seq.n() == n && m > 0 && n >= 2;
+        // Adaptive policy: only keys hot enough that overlap has been
+        // observed are worth a window; singleton traffic bypasses with
+        // zero added latency.
+        let hot =
+            self.plans.key_stats(&key).peak_concurrency >= adm.config().min_peak_concurrency;
+        if !batchable || !hot {
+            self.metrics.record_bypass();
+            return Some(Message::Work(job, rtx));
+        }
+        let bkey = BatchKey {
+            plan: key,
+            seq_hash: seq_fingerprint(&job.seq),
+        };
+        match adm.offer(bkey, QueuedJob { job, reply: rtx }) {
+            Offer::Queued { .. } => None,
+            Offer::Flush(batch) => {
+                dispatch_batch(batch, &self.tx, &self.metrics, adm);
+                None
+            }
+            Offer::MadeRoom { evicted, .. } => {
+                dispatch_batch(evicted, &self.tx, &self.metrics, adm);
+                None
+            }
+            Offer::Full { item, depth, limit } => {
+                self.metrics.record_shed();
+                self.metrics.record_failure();
+                let _ = item
+                    .reply
+                    .send(Err(admission::Error::QueueFull { depth, limit }.into()));
+                None
+            }
+        }
     }
 
     /// Submit and wait.
@@ -139,6 +266,16 @@ impl Coordinator {
         &self.plans
     }
 
+    /// Whether the admission layer is active.
+    pub fn admission_enabled(&self) -> bool {
+        self.admission.is_some()
+    }
+
+    /// Jobs currently parked in admission queues (0 when disabled).
+    pub fn admission_queued(&self) -> usize {
+        self.admission.as_ref().map_or(0, |a| a.queued())
+    }
+
     /// Enable autotuning for every subsequent job: analytic-default
     /// kernel jobs consult `db` (tuned for `cache`) through the plan
     /// cache. See [`PlanCache::set_tune_db`].
@@ -151,14 +288,99 @@ impl Coordinator {
         self.policy
     }
 
-    /// Stop accepting work and join the workers.
+    /// Stop accepting work and join the workers. Admission queues are
+    /// drained first: every parked job is dispatched (as its partial
+    /// batch) before the shutdown markers enter the channel, so FIFO
+    /// ordering guarantees the workers process all of them.
     pub fn shutdown(mut self) {
+        if let Some(adm) = self.admission.take() {
+            adm.begin_shutdown();
+            if let Some(flusher) = self.flusher.take() {
+                let _ = flusher.join();
+            }
+            for batch in adm.drain() {
+                dispatch_batch(batch, &self.tx, &self.metrics, &adm);
+            }
+        }
         for _ in 0..self.workers.len() {
             let _ = self.tx.send(Message::Shutdown);
         }
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
+    }
+}
+
+/// Send `msg`, routing channel-closed failures back through the reply
+/// sender(s) carried inside the unsent message.
+fn send_or_fail(tx: &Sender<Message>, metrics: &Metrics, msg: Message) {
+    let Err(send_err) = tx.send(msg) else { return };
+    match send_err.0 {
+        Message::Work(_, rtx) => {
+            metrics.record_failure();
+            let _ = rtx.send(Err(anyhow::anyhow!(
+                "coordinator is shut down: job channel closed"
+            )));
+        }
+        Message::Batch(batch) => {
+            for member in batch.members {
+                metrics.record_failure();
+                let _ = member.reply.send(Err(anyhow::anyhow!(
+                    "coordinator is shut down: job channel closed"
+                )));
+            }
+        }
+        Message::Shutdown => {}
+    }
+}
+
+/// Hand a harvested admission batch to the worker channel, stamping
+/// window-wait and queue-peak metrics on the way.
+fn dispatch_batch(
+    batch: Batch<BatchKey, QueuedJob>,
+    tx: &Sender<Message>,
+    metrics: &Metrics,
+    adm: &Admission<QueuedJob>,
+) {
+    if batch.is_empty() {
+        return;
+    }
+    metrics.record_queue_peak(adm.peak_queued() as u64);
+    let now = adm.now_ns();
+    let mut members = Vec::with_capacity(batch.items.len());
+    for (member, enqueued_ns) in batch.items {
+        metrics.record_window_wait(now.saturating_sub(enqueued_ns));
+        members.push(member);
+    }
+    let msg = Message::Batch(BatchJob {
+        key: batch.key.plan,
+        members,
+    });
+    send_or_fail(tx, metrics, msg);
+}
+
+/// The admission flusher: harvest expired windows, dispatch them, run
+/// pool housekeeping, then sleep until the earliest pending deadline (or
+/// an idle heartbeat that keeps the reaper ticking).
+fn flusher_loop(
+    adm: &Admission<QueuedJob>,
+    tx: &Sender<Message>,
+    metrics: &Metrics,
+    plans: &PlanCache,
+) {
+    const IDLE_PARK: Duration = Duration::from_millis(25);
+    while !adm.is_shutting_down() {
+        for batch in adm.collect_due() {
+            dispatch_batch(batch, tx, metrics, adm);
+        }
+        plans.maintain(POOL_IDLE_TICKS);
+        let park = match adm.next_deadline() {
+            Some(deadline) => {
+                Duration::from_nanos(deadline.saturating_sub(adm.now_ns()).max(1))
+            }
+            None => IDLE_PARK,
+        };
+        adm.park(park);
     }
 }
 
@@ -180,6 +402,9 @@ fn worker_loop(
             Ok(Message::Work(job, reply)) => {
                 let result = execute_job(job, policy, &metrics, &plans);
                 let _ = reply.send(result);
+            }
+            Ok(Message::Batch(batch)) => {
+                execute_batch_job(batch, policy, &metrics, &plans);
             }
             Ok(Message::Shutdown) | Err(_) => return,
         }
@@ -224,15 +449,20 @@ fn execute_job(
     let t0 = Instant::now();
     let outcome = plan.execute(&mut ctx, &mut job.matrix, &job.seq);
     let elapsed = t0.elapsed();
+    let stream_pack = ctx.last_stream_pack();
     plans.workspace_pool().give_back(ctx);
     match outcome {
         Ok(()) => {
             metrics.record_complete(flops, elapsed.as_nanos() as u64);
+            // The solo stream-pack baseline only means something for the
+            // kernel path — other algorithms never pack wave streams.
+            metrics.record_solo_dispatch((algo == Algorithm::Kernel).then_some(stream_pack));
             Ok(JobResult {
                 matrix: job.matrix,
                 algorithm: algo,
                 elapsed_s: elapsed.as_secs_f64(),
                 gflops: flops as f64 / elapsed.as_secs_f64().max(1e-12) / 1e9,
+                batch_size: 1,
             })
         }
         Err(e) => {
@@ -242,11 +472,114 @@ fn execute_job(
     }
 }
 
+/// Execute one coalesced batch: split off any member whose sequence is
+/// not bitwise identical to the representative (hash-collision guard —
+/// those run solo in this same worker), then drive the rest through one
+/// `execute_batch` dispatch sharing one plan lookup, one rented context,
+/// and one wave-stream pack.
+fn execute_batch_job(batch: BatchJob, policy: RoutePolicy, metrics: &Metrics, plans: &PlanCache) {
+    let BatchJob { key, members } = batch;
+    let mut coalesced: Vec<QueuedJob> = Vec::with_capacity(members.len());
+    let mut collisions: Vec<QueuedJob> = Vec::new();
+    for member in members {
+        if coalesced.is_empty()
+            || sequences_identical(&coalesced[0].job.seq, &member.job.seq)
+        {
+            coalesced.push(member);
+        } else {
+            collisions.push(member);
+        }
+    }
+    execute_coalesced(key, coalesced, metrics, plans);
+    for member in collisions {
+        let result = execute_job(member.job, policy, metrics, plans);
+        let _ = member.reply.send(result);
+    }
+}
+
+fn execute_coalesced(key: PlanKey, members: Vec<QueuedJob>, metrics: &Metrics, plans: &PlanCache) {
+    let batch_size = members.len();
+    if batch_size == 0 {
+        return;
+    }
+    // One plan lookup for the whole group: the cache cost is amortized
+    // exactly like the wave-stream pack below.
+    let plan = match plans.get_or_build(&key) {
+        Ok((plan, hit)) => {
+            if hit {
+                metrics.record_plan_hit();
+            } else {
+                metrics.record_plan_miss();
+            }
+            plan
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for member in members {
+                metrics.record_failure();
+                let _ = member
+                    .reply
+                    .send(Err(anyhow::anyhow!("batched plan build failed: {msg}")));
+            }
+            return;
+        }
+    };
+    // Every member counts toward the key's concurrency stats — the
+    // adaptive policy sees batched load the same as solo load.
+    let trackers: Vec<_> = members.iter().map(|_| plans.track(key)).collect();
+    let mut mats: Vec<Matrix> = Vec::with_capacity(batch_size);
+    let mut replies: Vec<Sender<Result<JobResult>>> = Vec::with_capacity(batch_size);
+    let mut seq: Option<RotationSequence> = None;
+    for member in members {
+        let Job { matrix, seq: s, .. } = member.job;
+        mats.push(matrix);
+        replies.push(member.reply);
+        seq.get_or_insert(s);
+    }
+    let Some(seq) = seq else { return };
+    let flops = OpSequence::flops(&seq, key.m);
+    let mut ctx = plans.workspace_pool().rent(&plan);
+    let t0 = Instant::now();
+    let outcome = plan.execute_batch(&mut ctx, &mut mats, &seq);
+    let elapsed = t0.elapsed();
+    let stream_pack = ctx.last_stream_pack();
+    plans.workspace_pool().give_back(ctx);
+    drop(trackers);
+    match outcome {
+        Ok(()) => {
+            metrics.record_batch_dispatch(batch_size as u64, stream_pack);
+            let per_job_nanos = elapsed.as_nanos() as u64 / batch_size as u64;
+            let per_job_s = elapsed.as_secs_f64() / batch_size as f64;
+            for (matrix, reply) in mats.into_iter().zip(replies) {
+                metrics.record_complete(flops, per_job_nanos);
+                let _ = reply.send(Ok(JobResult {
+                    matrix,
+                    algorithm: key.algorithm,
+                    elapsed_s: elapsed.as_secs_f64(),
+                    gflops: flops as f64 / per_job_s.max(1e-12) / 1e9,
+                    batch_size,
+                }));
+            }
+        }
+        Err(e) => {
+            // Partial-failure isolation: the damage is confined to this
+            // group — every member learns the cause, the service and the
+            // other keys' traffic are untouched.
+            let msg = format!("{e:#}");
+            for reply in replies {
+                metrics.record_failure();
+                let _ = reply.send(Err(anyhow::anyhow!("batched execute failed: {msg}")));
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::matrix::{max_abs_diff, Matrix};
     use crate::rot::apply_naive;
+    use super::admission::{FakeClock, OverflowPolicy};
 
     fn small_cfg() -> KernelConfig {
         KernelConfig {
@@ -280,6 +613,7 @@ mod tests {
             .unwrap();
         assert_eq!(max_abs_diff(&result.matrix, &expected), 0.0);
         assert!(result.gflops > 0.0);
+        assert_eq!(result.batch_size, 1);
 
         let snap = coord.metrics().snapshot();
         assert_eq!(snap.jobs_completed, 1);
@@ -412,6 +746,221 @@ mod tests {
         });
         assert!(r.is_err());
         assert_eq!(coord.metrics().snapshot().jobs_failed, 1);
+        coord.shutdown();
+    }
+
+    fn kernel_job(seq: &RotationSequence, a: &Matrix) -> Job {
+        Job {
+            matrix: a.clone(),
+            seq: seq.clone(),
+            spec: JobSpec {
+                algorithm: Some(Algorithm::Kernel),
+                config: small_cfg(),
+            },
+        }
+    }
+
+    /// Deterministic batching: min_peak 0 batches immediately, a huge
+    /// window means only the size cap flushes, so exactly one batch of
+    /// `batch_max` jobs goes out — no wall clock involved.
+    #[test]
+    fn size_cap_coalesces_into_one_batched_dispatch() {
+        let clock = Arc::new(FakeClock::new());
+        let coord = Coordinator::start_with_admission_clock(
+            2,
+            RoutePolicy::Auto,
+            AdmissionConfig {
+                window_ns: u64::MAX / 4, // never expires under the fake clock
+                batch_max: 4,
+                min_peak_concurrency: 0,
+                ..AdmissionConfig::default()
+            },
+            clock as Arc<dyn admission::Clock>,
+        );
+        let (m, n, k) = (32, 16, 4);
+        let seq = RotationSequence::random(n, k, 9);
+        let a = Matrix::random(m, n, 10);
+        let mut expected = a.clone();
+        apply_naive(&mut expected, &seq);
+
+        let receivers: Vec<_> = (0..4).map(|_| coord.submit(kernel_job(&seq, &a))).collect();
+        for rx in receivers {
+            let r = rx.recv().unwrap().unwrap();
+            assert_eq!(max_abs_diff(&r.matrix, &expected), 0.0);
+            assert_eq!(r.batch_size, 4, "all four jobs share one dispatch");
+        }
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.batched_dispatches, 1);
+        assert_eq!(snap.batched_jobs, 4);
+        assert_eq!(snap.jobs_completed, 4);
+        // One plan build for the whole batch.
+        assert_eq!(snap.plan_cache_misses + snap.plan_cache_hits, 1);
+        assert!(snap.stream_pack_batched_doubles > 0);
+        coord.shutdown();
+    }
+
+    /// Batched execution is bitwise identical to solo execution of the
+    /// same jobs.
+    #[test]
+    fn batched_results_match_solo_results_bitwise() {
+        let (m, n, k) = (40, 24, 6);
+        let seq = RotationSequence::random(n, k, 21);
+        let mats: Vec<Matrix> = (0..3).map(|s| Matrix::random(m, n, 300 + s)).collect();
+
+        let solo = Coordinator::start(1, RoutePolicy::Auto);
+        let solo_out: Vec<Matrix> = mats
+            .iter()
+            .map(|a| solo.run(kernel_job(&seq, a)).unwrap().matrix)
+            .collect();
+        solo.shutdown();
+
+        let clock = Arc::new(FakeClock::new());
+        let coord = Coordinator::start_with_admission_clock(
+            1,
+            RoutePolicy::Auto,
+            AdmissionConfig {
+                window_ns: u64::MAX / 4,
+                batch_max: 3,
+                min_peak_concurrency: 0,
+                ..AdmissionConfig::default()
+            },
+            clock as Arc<dyn admission::Clock>,
+        );
+        let receivers: Vec<_> = mats.iter().map(|a| coord.submit(kernel_job(&seq, a))).collect();
+        for (rx, want) in receivers.into_iter().zip(&solo_out) {
+            let got = rx.recv().unwrap().unwrap();
+            assert_eq!(got.batch_size, 3);
+            assert_eq!(max_abs_diff(&got.matrix, want), 0.0, "bitwise identical");
+        }
+        coord.shutdown();
+    }
+
+    /// Cold keys (peak_concurrency below the bar) bypass the window
+    /// entirely: batch_size 1, no queue wait recorded.
+    #[test]
+    fn cold_keys_bypass_admission() {
+        let clock = Arc::new(FakeClock::new());
+        let coord = Coordinator::start_with_admission_clock(
+            1,
+            RoutePolicy::Auto,
+            AdmissionConfig::default(), // min_peak_concurrency: 2
+            clock as Arc<dyn admission::Clock>,
+        );
+        let (m, n, k) = (24, 16, 3);
+        let seq = RotationSequence::random(n, k, 5);
+        let a = Matrix::random(m, n, 6);
+        let r = coord.run(kernel_job(&seq, &a)).unwrap();
+        assert_eq!(r.batch_size, 1);
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.bypass_jobs, 1);
+        assert_eq!(snap.batched_dispatches, 0);
+        assert_eq!(snap.window_wait_ns_total, 0, "zero added latency");
+        coord.shutdown();
+    }
+
+    /// Typed backpressure: at the depth bound under Reject, the job is
+    /// shed with a downcastable `admission::Error::QueueFull`.
+    #[test]
+    fn queue_full_sheds_with_typed_error() {
+        let clock = Arc::new(FakeClock::new());
+        let coord = Coordinator::start_with_admission_clock(
+            1,
+            RoutePolicy::Auto,
+            AdmissionConfig {
+                window_ns: u64::MAX / 4,
+                batch_max: 64,
+                queue_depth: 2,
+                overflow: OverflowPolicy::Reject,
+                min_peak_concurrency: 0,
+                ..AdmissionConfig::default()
+            },
+            clock as Arc<dyn admission::Clock>,
+        );
+        let (m, n, k) = (24, 16, 3);
+        let seq = RotationSequence::random(n, k, 5);
+        let a = Matrix::random(m, n, 6);
+        let r1 = coord.submit(kernel_job(&seq, &a));
+        let r2 = coord.submit(kernel_job(&seq, &a));
+        let r3 = coord.submit(kernel_job(&seq, &a));
+        let err = r3.recv().unwrap().unwrap_err();
+        let typed = err.downcast_ref::<admission::Error>();
+        assert_eq!(
+            typed,
+            Some(&admission::Error::QueueFull { depth: 2, limit: 2 })
+        );
+        assert_eq!(coord.metrics().snapshot().shed_jobs, 1);
+        // The queued pair still completes on shutdown drain.
+        coord.shutdown();
+        assert!(r1.recv().unwrap().is_ok());
+        assert!(r2.recv().unwrap().is_ok());
+    }
+
+    /// Shutdown drains pending windows: parked jobs are dispatched as
+    /// their partial batch, never dropped.
+    #[test]
+    fn shutdown_drains_pending_windows() {
+        let clock = Arc::new(FakeClock::new());
+        let coord = Coordinator::start_with_admission_clock(
+            2,
+            RoutePolicy::Auto,
+            AdmissionConfig {
+                window_ns: u64::MAX / 4,
+                batch_max: 64, // cap never reached: jobs stay parked
+                min_peak_concurrency: 0,
+                ..AdmissionConfig::default()
+            },
+            clock as Arc<dyn admission::Clock>,
+        );
+        let (m, n, k) = (32, 16, 4);
+        let seq = RotationSequence::random(n, k, 9);
+        let a = Matrix::random(m, n, 10);
+        let mut expected = a.clone();
+        apply_naive(&mut expected, &seq);
+        let receivers: Vec<_> = (0..3).map(|_| coord.submit(kernel_job(&seq, &a))).collect();
+        assert_eq!(coord.admission_queued(), 3);
+        coord.shutdown();
+        for rx in receivers {
+            let r = rx.recv().unwrap().unwrap();
+            assert_eq!(max_abs_diff(&r.matrix, &expected), 0.0);
+            assert_eq!(r.batch_size, 3, "drained as one partial batch");
+        }
+    }
+
+    /// Different sequences never share a dispatch even under one plan
+    /// key: the seq hash splits the groups.
+    #[test]
+    fn distinct_sequences_do_not_coalesce() {
+        let clock = Arc::new(FakeClock::new());
+        let coord = Coordinator::start_with_admission_clock(
+            1,
+            RoutePolicy::Auto,
+            AdmissionConfig {
+                window_ns: u64::MAX / 4,
+                batch_max: 2,
+                min_peak_concurrency: 0,
+                ..AdmissionConfig::default()
+            },
+            clock as Arc<dyn admission::Clock>,
+        );
+        let (m, n, k) = (32, 16, 4);
+        let seq_a = RotationSequence::random(n, k, 1);
+        let seq_b = RotationSequence::random(n, k, 2);
+        let a = Matrix::random(m, n, 10);
+        let mut want_a = a.clone();
+        apply_naive(&mut want_a, &seq_a);
+        let mut want_b = a.clone();
+        apply_naive(&mut want_b, &seq_b);
+        // Interleave: a, b, a, b. Each pair flushes at its own size cap.
+        let ra1 = coord.submit(kernel_job(&seq_a, &a));
+        let rb1 = coord.submit(kernel_job(&seq_b, &a));
+        let ra2 = coord.submit(kernel_job(&seq_a, &a));
+        let rb2 = coord.submit(kernel_job(&seq_b, &a));
+        for (rx, want) in [(ra1, &want_a), (ra2, &want_a), (rb1, &want_b), (rb2, &want_b)] {
+            let r = rx.recv().unwrap().unwrap();
+            assert_eq!(r.batch_size, 2);
+            assert_eq!(max_abs_diff(&r.matrix, want), 0.0);
+        }
+        assert_eq!(coord.metrics().snapshot().batched_dispatches, 2);
         coord.shutdown();
     }
 }

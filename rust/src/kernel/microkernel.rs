@@ -106,6 +106,12 @@ impl WaveStream {
     pub fn per_wave(&self) -> usize {
         self.per_wave
     }
+
+    /// Doubles live in the stream after the last repack
+    /// (`per_wave * nwaves` — what one replay of this call reads).
+    pub fn live_doubles(&self) -> usize {
+        self.per_wave * self.nwaves
+    }
 }
 
 /// The register-window wave kernel (§3).

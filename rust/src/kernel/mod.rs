@@ -386,6 +386,16 @@ impl SeqPlan {
     pub fn buffer_doubles(&self) -> usize {
         self.blocks.iter().map(KBlockPlan::buffer_doubles).sum()
     }
+
+    /// Doubles moved packing the live schedule's wave streams — the
+    /// per-dispatch stream-pack traffic (read every `C`/`S` scalar from
+    /// the sequence, write it into the arena). Constant in the number of
+    /// matrices a batch execute replays the schedule over, which is the
+    /// measurable amortization the coordinator's admission batching buys:
+    /// per-job stream-pack traffic is this value divided by batch size.
+    pub fn stream_pack_doubles(&self) -> u64 {
+        self.blocks().iter().map(KBlockPlan::stream_pack_doubles).sum()
+    }
 }
 
 impl Default for SeqPlan {

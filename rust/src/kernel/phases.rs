@@ -185,6 +185,20 @@ impl KBlockPlan {
             .chain(self.spare.iter());
         live.map(|c| c.stream.capacity()).sum()
     }
+
+    /// Doubles moved to pack this block's wave streams: each live call
+    /// reads its `C`/`S` scalars from the sequence and writes them into
+    /// the stream arena (2x the stream's live length). Paid once per
+    /// `plan_into`, i.e. once per dispatch — batch executes amortize it
+    /// across every matrix in the batch.
+    pub fn stream_pack_doubles(&self) -> u64 {
+        self.startup
+            .iter()
+            .chain(self.pipeline.iter().flatten())
+            .chain(self.shutdown.iter())
+            .map(|c| 2 * c.stream.live_doubles() as u64)
+            .sum()
+    }
 }
 
 impl Default for KBlockPlan {

@@ -14,12 +14,13 @@
 //! rotseq svd      --m <m> --n <n>
 //! rotseq pjrt     [--artifacts DIR]
 //! rotseq serve    [--workers W] [--tuned] [--db PATH]   (reads jobs from stdin)
+//!                 [--window-us U --batch-max B --batch-min-peak P]  (micro-batching)
 //! ```
 
 use anyhow::{bail, Context, Result};
 use rotseq::bench_harness as bh;
 use rotseq::blocking::{plan, plan_bounds_for, CacheParams, KernelConfig};
-use rotseq::coordinator::{Coordinator, Job, JobSpec, RoutePolicy};
+use rotseq::coordinator::{AdmissionConfig, Coordinator, Job, JobSpec, RoutePolicy};
 use rotseq::kernel::Algorithm;
 use rotseq::matrix::{frobenius_norm, Matrix};
 use rotseq::plan::{Direction, RotationPlan, Side};
@@ -157,7 +158,9 @@ fn print_usage() {
          \x20 eig      --n 120                                   implicit-QR eigensolver demo\n\
          \x20 svd      --m 160 --n 80                            Jacobi SVD demo\n\
          \x20 pjrt     [--artifacts artifacts]                   run AOT artifacts via PJRT\n\
-         \x20 serve    [--workers 2] [--tuned]                   job coordinator on stdin"
+         \x20 serve    [--workers 2] [--tuned]                   job coordinator on stdin\n\
+         \x20          [--window-us 500 --batch-max 16]          opt-in deadline-window\n\
+         \x20          [--batch-min-peak 2]                      micro-batching"
     );
 }
 
@@ -481,7 +484,29 @@ fn cmd_pjrt(a: &Args) -> Result<()> {
 /// `metrics` — print the service counters.
 fn cmd_serve(a: &Args) -> Result<()> {
     let workers = a.get("workers", 2usize)?;
-    let coord = Coordinator::start(workers, RoutePolicy::Auto);
+    // Micro-batching is strictly opt-in: any of the admission flags turns
+    // it on; without them the service path is byte-for-byte the old one.
+    let admission = ["window-us", "batch-max", "batch-min-peak"]
+        .iter()
+        .any(|k| a.values.contains_key(*k));
+    let coord = if admission {
+        let defaults = AdmissionConfig::default();
+        let cfg = AdmissionConfig {
+            window_ns: a.get("window-us", defaults.window_ns / 1_000)?.saturating_mul(1_000),
+            batch_max: a.get("batch-max", defaults.batch_max)?,
+            min_peak_concurrency: a.get("batch-min-peak", defaults.min_peak_concurrency)?,
+            ..defaults
+        };
+        println!(
+            "admission enabled: window {}us, batch max {}, min peak concurrency {}",
+            cfg.window_ns / 1_000,
+            cfg.batch_max,
+            cfg.min_peak_concurrency
+        );
+        Coordinator::start_with_admission(workers, RoutePolicy::Auto, cfg)
+    } else {
+        Coordinator::start(workers, RoutePolicy::Auto)
+    };
     // --tuned: analytic-default kernel jobs run with TuneDb configs.
     if a.has("tuned") || a.values.contains_key("db") {
         let db_path = a.get_str("db", &rotseq::tune::TuneDb::default_path().to_string_lossy());
@@ -521,6 +546,33 @@ fn cmd_serve(a: &Args) -> Result<()> {
                     ws.ctxs_reused(),
                     ws.pooled()
                 );
+                if coord.admission_enabled() {
+                    // One parseable line: the CI smoke asserts batched
+                    // dispatches happened, the mean batch exceeded 1, and
+                    // the amortized per-job stream-pack traffic sits below
+                    // the solo baseline.
+                    let hist: Vec<String> =
+                        s.batch_hist.iter().map(|c| c.to_string()).collect();
+                    println!(
+                        "admission: batched {} dispatches / {} jobs (mean {:.2}) | \
+                         solo {} | bypass {} | shed {} | \
+                         wait mean {:.1}us max {:.1}us | hist [{}] | \
+                         pack/job batched {:.0} solo {:.0} | queue peak {} | reaped {}",
+                        s.batched_dispatches,
+                        s.batched_jobs,
+                        s.mean_batch_size(),
+                        s.solo_dispatches,
+                        s.bypass_jobs,
+                        s.shed_jobs,
+                        s.mean_window_wait_us(),
+                        s.window_wait_ns_max as f64 / 1_000.0,
+                        hist.join(" "),
+                        s.stream_pack_per_batched_job(),
+                        s.stream_pack_per_solo_job(),
+                        s.admission_queue_peak,
+                        ws.ctxs_reaped()
+                    );
+                }
             }
             ["burst", rest @ ..] if rest.len() >= 5 => {
                 let count: usize = rest[0].parse().context("count")?;
@@ -534,14 +586,18 @@ fn cmd_serve(a: &Args) -> Result<()> {
                 };
                 // Submit everything before collecting anything: the jobs
                 // are genuinely in flight together, so same-shape fan-out
-                // over the shared Arc plan actually happens.
+                // over the shared Arc plan actually happens. The burst
+                // shares ONE rotation sequence across its jobs (distinct
+                // matrices): that is the serving pattern micro-batching
+                // coalesces, and the shared plan key is unaffected.
                 let config = config_from_args(a)?;
+                let seq = RotationSequence::random(n, k, seed ^ 0xFEED);
                 let t0 = std::time::Instant::now();
                 let receivers: Vec<_> = (0..count as u64)
                     .map(|i| {
                         coord.submit(Job {
                             matrix: Matrix::random(m, n, seed ^ i),
-                            seq: RotationSequence::random(n, k, (seed ^ i) ^ 0xFEED),
+                            seq: seq.clone(),
                             spec: JobSpec { algorithm, config },
                         })
                     })

@@ -129,6 +129,9 @@ pub struct ExecCtx {
     /// Element-move ledger of the most recent kernel execute through this
     /// context (see [`Self::last_memops`]).
     pub(crate) last_memops: MemopCounts,
+    /// Stream-pack traffic of the most recent kernel dispatch (see
+    /// [`Self::last_stream_pack`]).
+    pub(crate) last_stream_pack: u64,
 }
 
 impl ExecCtx {
@@ -180,6 +183,7 @@ impl ExecCtx {
                     views: Vec::with_capacity(usize::from(pooled)),
                     pool,
                     last_memops: MemopCounts::default(),
+                    last_stream_pack: 0,
                 }
             }
             Algorithm::Gemm => ExecCtx {
@@ -190,6 +194,7 @@ impl ExecCtx {
                 views: Vec::new(),
                 pool: None,
                 last_memops: MemopCounts::default(),
+                last_stream_pack: 0,
             },
             _ => ExecCtx {
                 sig,
@@ -199,6 +204,7 @@ impl ExecCtx {
                 views: Vec::new(),
                 pool: None,
                 last_memops: MemopCounts::default(),
+                last_stream_pack: 0,
             },
         }
     }
@@ -242,6 +248,18 @@ impl ExecCtx {
         self.last_memops
     }
 
+    /// Doubles moved packing the `C`/`S` wave streams in the most recent
+    /// kernel dispatch through this context. Unlike [`Self::last_memops`],
+    /// a batch execute does **not** scale this by the batch size: the
+    /// streams are packed once per dispatch however many matrices replay
+    /// them, so per-job stream-pack traffic is this value divided by the
+    /// batch size — the ledger the coordinator's admission metrics use to
+    /// prove batching reduces per-job traffic. Zero for non-kernel
+    /// algorithms.
+    pub fn last_stream_pack(&self) -> u64 {
+        self.last_stream_pack
+    }
+
     /// Re-point this context at `plan`'s shared [`WorkerPool`] when the
     /// plan has one and the context carries a different pool. Signatures
     /// don't encode pool identity (two same-sig plans may differ only in
@@ -264,10 +282,17 @@ impl ExecCtx {
 /// it also keeps its private [`WorkerPool`]'s parked OS threads alive
 /// while shelved — so an unbounded pool would grow resident memory *and*
 /// idle threads for the life of the service as new shapes arrive.
-/// (Idle-context reaping is a ROADMAP follow-on; services that fan out
-/// wide thread counts should configure a shared pool per thread count,
-/// as the coordinator does via [`crate::coordinator::PlanCache::pool_for`].)
+/// (Services that fan out wide thread counts should configure a shared
+/// pool per thread count, as the coordinator does via
+/// [`crate::coordinator::PlanCache::pool_for`].)
 pub const DEFAULT_MAX_POOLED_CTXS: usize = 32;
+
+/// A context shelved for reuse, stamped with the pool generation at which
+/// it was returned (see [`WorkspacePool::tick_and_reap`]).
+struct Shelved {
+    ctx: ExecCtx,
+    shelved_gen: u64,
+}
 
 /// A lock-cheap pool of reusable [`ExecCtx`]s, keyed by [`WorkspaceSig`].
 /// `rent` pops a matching context (or builds one on first sight of a
@@ -275,11 +300,24 @@ pub const DEFAULT_MAX_POOLED_CTXS: usize = 32;
 /// The lock is held only for the pop/push — never while a context is built
 /// or an execution runs — so N workers fan out over one shared plan
 /// without serializing on the pool.
+///
+/// Two mechanisms keep a long-lived pool proportional to real demand
+/// rather than historical bursts: per-signature shelf caps
+/// ([`Self::set_shelf_cap`], fed by the coordinator from observed
+/// `KeyStats::peak_concurrency`), and idle-generation reaping
+/// ([`Self::tick_and_reap`], driven by the coordinator's housekeeping
+/// tick) which drops contexts nothing has rented for several ticks.
 pub struct WorkspacePool {
-    shelves: Mutex<HashMap<WorkspaceSig, Vec<ExecCtx>>>,
+    shelves: Mutex<HashMap<WorkspaceSig, Vec<Shelved>>>,
     max_pooled: usize,
+    /// Per-signature overrides of the shelf depth (the global
+    /// `max_pooled` still bounds the total).
+    sig_caps: Mutex<HashMap<WorkspaceSig, usize>>,
+    /// Logical idle clock: bumped once per [`Self::tick_and_reap`].
+    generation: AtomicU64,
     created: AtomicU64,
     reused: AtomicU64,
+    reaped: AtomicU64,
 }
 
 impl Default for WorkspacePool {
@@ -297,8 +335,14 @@ impl WorkspacePool {
     /// section is a bare pop/push on plain collections, so a panicked
     /// renter cannot leave a shelf torn — and a context pool that panics
     /// on rent would take the whole serving process down with it.
-    fn shelves(&self) -> std::sync::MutexGuard<'_, HashMap<WorkspaceSig, Vec<ExecCtx>>> {
+    fn shelves(&self) -> std::sync::MutexGuard<'_, HashMap<WorkspaceSig, Vec<Shelved>>> {
         self.shelves
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    fn sig_caps(&self) -> std::sync::MutexGuard<'_, HashMap<WorkspaceSig, usize>> {
+        self.sig_caps
             .lock()
             .unwrap_or_else(std::sync::PoisonError::into_inner)
     }
@@ -309,8 +353,11 @@ impl WorkspacePool {
         Self {
             shelves: Mutex::new(HashMap::new()),
             max_pooled,
+            sig_caps: Mutex::new(HashMap::new()),
+            generation: AtomicU64::new(0),
             created: AtomicU64::new(0),
             reused: AtomicU64::new(0),
+            reaped: AtomicU64::new(0),
         }
     }
 
@@ -326,7 +373,8 @@ impl WorkspacePool {
             shelves.get_mut(&sig).and_then(Vec::pop)
         };
         match recycled {
-            Some(mut ctx) => {
+            Some(shelved) => {
+                let mut ctx = shelved.ctx;
                 ctx.rebind_pool(plan);
                 self.reused.fetch_add(1, Ordering::Relaxed);
                 ctx
@@ -339,15 +387,62 @@ impl WorkspacePool {
     }
 
     /// Return a rented context for the next execution with its signature.
-    /// At capacity the context is dropped (steady-state traffic never hits
-    /// this; it only bounds memory under shape churn).
+    /// At capacity — global, or this signature's [`Self::set_shelf_cap`]
+    /// override — the context is dropped (steady-state traffic never hits
+    /// this; it only bounds memory under shape churn and after bursts).
     pub fn give_back(&self, ctx: ExecCtx) {
+        let sig_cap = self.sig_caps().get(&ctx.sig).copied();
+        let gen = self.generation.load(Ordering::Relaxed);
         let mut shelves = self.shelves();
         let total: usize = shelves.values().map(Vec::len).sum();
         if total >= self.max_pooled {
             return;
         }
-        shelves.entry(ctx.sig).or_default().push(ctx);
+        let shelf = shelves.entry(ctx.sig).or_default();
+        if sig_cap.is_some_and(|cap| shelf.len() >= cap) {
+            return;
+        }
+        shelf.push(Shelved {
+            ctx,
+            shelved_gen: gen,
+        });
+    }
+
+    /// Cap the number of idle contexts shelved for `sig`. The coordinator
+    /// sets this to each key's observed `KeyStats::peak_concurrency` so a
+    /// one-off burst cannot permanently inflate the pool; existing excess
+    /// is trimmed immediately (oldest first).
+    pub fn set_shelf_cap(&self, sig: WorkspaceSig, cap: usize) {
+        self.sig_caps().insert(sig, cap);
+        let mut shelves = self.shelves();
+        if let Some(shelf) = shelves.get_mut(&sig) {
+            while shelf.len() > cap {
+                shelf.remove(0);
+                self.reaped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// One housekeeping tick: advance the idle clock and drop every
+    /// shelved context that has sat through more than `max_idle_ticks`
+    /// ticks without being rented. Returns the number reaped. Rent/return
+    /// traffic refreshes a context's stamp (it is re-shelved at the
+    /// current generation), so only genuinely idle buffers — and their
+    /// private worker-pool threads — are released.
+    pub fn tick_and_reap(&self, max_idle_ticks: u64) -> usize {
+        let gen = self.generation.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut reaped = 0usize;
+        let mut shelves = self.shelves();
+        shelves.retain(|_, shelf| {
+            shelf.retain(|s| {
+                let keep = s.shelved_gen + max_idle_ticks >= gen;
+                reaped += usize::from(!keep);
+                keep
+            });
+            !shelf.is_empty()
+        });
+        self.reaped.fetch_add(reaped as u64, Ordering::Relaxed);
+        reaped
     }
 
     /// Idle contexts currently shelved (observability).
@@ -366,6 +461,11 @@ impl WorkspacePool {
     /// Rents served from the shelf without building anything.
     pub fn ctxs_reused(&self) -> u64 {
         self.reused.load(Ordering::Relaxed)
+    }
+
+    /// Contexts dropped by idle reaping or shelf-cap trimming.
+    pub fn ctxs_reaped(&self) -> u64 {
+        self.reaped.load(Ordering::Relaxed)
     }
 }
 

@@ -792,15 +792,20 @@ impl RotationPlan {
             views,
             pool,
             last_memops,
+            last_stream_pack,
             ..
         } = ctx;
         *last_memops = MemopCounts::default();
+        *last_stream_pack = 0;
         if units.is_empty() {
             // m == 0 under threads > 1: nothing to do.
             return Ok(());
         }
         let sp = seqplan.get_or_insert_with(SeqPlan::new);
         sp.plan_into(seq, &cfg);
+        // Packed once per dispatch, replayed by every matrix: deliberately
+        // NOT scaled by `nmats` (per-job share = this / batch size).
+        *last_stream_pack = sp.stream_pack_doubles();
         if let Some(pool) = pool {
             views.clear();
             views.extend(mats.iter_mut().map(MatView::of));
@@ -883,6 +888,7 @@ impl RotationPlan {
     fn run_forward(&self, ctx: &mut ExecCtx, a: &mut Matrix, seq: &RotationSequence) -> Result<()> {
         let cfg = self.cfg;
         ctx.last_memops = MemopCounts::default();
+        ctx.last_stream_pack = 0;
         match self.algo {
             Algorithm::Naive => crate::rot::apply_naive(a, seq),
             Algorithm::Wavefront => crate::rot::apply_wavefront(a, seq),
@@ -916,6 +922,7 @@ impl RotationPlan {
                     views,
                     pool,
                     last_memops,
+                    last_stream_pack,
                     ..
                 } = ctx;
                 if units.is_empty() {
@@ -927,6 +934,7 @@ impl RotationPlan {
                     // unless the plan opted for the staged reference.
                     let sp = seqplan.get_or_insert_with(SeqPlan::new);
                     sp.plan_into(seq, &cfg);
+                    *last_stream_pack = sp.stream_pack_doubles();
                     if let Some(pool) = pool {
                         views.clear();
                         views.push(MatView::of(a));

@@ -101,6 +101,17 @@ impl Session {
             .unwrap_or_default()
     }
 
+    /// Shorthand for [`ExecCtx::last_stream_pack`]: the per-dispatch
+    /// stream-pack traffic of this session's most recent kernel execute
+    /// (constant across a batch — divide by the batch size for the
+    /// per-job share). Zero when the context is gone.
+    pub fn last_stream_pack(&self) -> u64 {
+        self.ctx
+            .as_ref()
+            .map(ExecCtx::last_stream_pack)
+            .unwrap_or_default()
+    }
+
     /// This session's context (introspection: the no-growth suites watch
     /// [`ExecCtx::capacity_doubles`] and [`ExecCtx::packing_ptrs`]).
     /// [`super::Error::SessionContextUnavailable`] when the context has

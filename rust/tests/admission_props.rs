@@ -1,0 +1,268 @@
+//! Admission-control properties, end to end through the public API.
+//!
+//! Everything here is deterministic: coordinators run with an injected
+//! `FakeClock`, so windows never expire on their own — batches form only
+//! through the size cap or the shutdown drain, and no assertion depends
+//! on wall-clock timing.
+
+use rotseq::coordinator::admission::{Clock, FakeClock};
+use rotseq::coordinator::{AdmissionConfig, Coordinator, Job, JobSpec, RoutePolicy};
+use rotseq::kernel::Algorithm;
+use rotseq::matrix::{max_abs_diff, Matrix};
+use rotseq::rot::{apply_naive, RotationSequence};
+use std::sync::Arc;
+
+fn kernel_spec() -> JobSpec {
+    JobSpec {
+        algorithm: Some(Algorithm::Kernel),
+        config: rotseq::blocking::KernelConfig {
+            mr: 8,
+            kr: 2,
+            mb: 16,
+            kb: 4,
+            nb: 8,
+            threads: 1,
+        },
+    }
+}
+
+fn job(seq: &RotationSequence, a: &Matrix) -> Job {
+    Job {
+        matrix: a.clone(),
+        seq: seq.clone(),
+        spec: kernel_spec(),
+    }
+}
+
+/// A coordinator whose admission windows only close via size cap
+/// (`batch_max`) or shutdown — the fake clock never moves.
+fn batching_coord(workers: usize, batch_max: usize) -> Coordinator {
+    Coordinator::start_with_admission_clock(
+        workers,
+        RoutePolicy::Auto,
+        AdmissionConfig {
+            window_ns: u64::MAX / 4,
+            batch_max,
+            min_peak_concurrency: 0,
+            ..AdmissionConfig::default()
+        },
+        Arc::new(FakeClock::new()) as Arc<dyn Clock>,
+    )
+}
+
+/// Property: batched execution is bitwise identical to solo execution
+/// and to the naive reference, across shapes and batch sizes.
+#[test]
+fn batched_execution_is_bitwise_identical_to_solo() {
+    for (m, n, k, bsize) in [(24, 16, 3, 2), (40, 24, 6, 4), (64, 32, 8, 8)] {
+        let seq = RotationSequence::random(n, k, 77 + bsize as u64);
+        let mats: Vec<Matrix> = (0..bsize)
+            .map(|s| Matrix::random(m, n, 1000 + s as u64))
+            .collect();
+
+        // Solo baseline through a plain coordinator.
+        let solo = Coordinator::start(1, RoutePolicy::Auto);
+        let solo_out: Vec<Matrix> = mats
+            .iter()
+            .map(|a| solo.run(job(&seq, a)).unwrap().matrix)
+            .collect();
+        solo.shutdown();
+
+        // Same jobs, coalesced into one dispatch by the size cap.
+        let coord = batching_coord(1, bsize);
+        let receivers: Vec<_> = mats.iter().map(|a| coord.submit(job(&seq, a))).collect();
+        for (i, (rx, want)) in receivers.into_iter().zip(&solo_out).enumerate() {
+            let got = rx.recv().unwrap().unwrap();
+            assert_eq!(got.batch_size, bsize, "m={m} n={n} k={k} job {i}");
+            assert_eq!(
+                max_abs_diff(&got.matrix, want),
+                0.0,
+                "batched != solo at m={m} n={n} k={k} job {i}"
+            );
+            let mut naive = mats[i].clone();
+            apply_naive(&mut naive, &seq);
+            assert_eq!(max_abs_diff(&got.matrix, &naive), 0.0, "vs naive reference");
+        }
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.batched_dispatches, 1);
+        assert_eq!(snap.batched_jobs, bsize as u64);
+        coord.shutdown();
+    }
+}
+
+/// Property: the per-job amortized stream-pack traffic is `P / B` —
+/// strictly decreasing in the batch size for a fixed plan and sequence.
+/// This is the ledger-level form of the paper's amortization argument
+/// carried into the serving layer.
+#[test]
+fn per_job_stream_pack_decreases_monotonically_with_batch_size() {
+    let (m, n, k) = (48, 24, 6);
+    let seq = RotationSequence::random(n, k, 5);
+    let mut per_job = Vec::new();
+    for bsize in [1usize, 2, 4, 8] {
+        let coord = batching_coord(1, bsize);
+        let mats: Vec<Matrix> = (0..bsize)
+            .map(|s| Matrix::random(m, n, 40 + s as u64))
+            .collect();
+        let receivers: Vec<_> = mats.iter().map(|a| coord.submit(job(&seq, a))).collect();
+        for rx in receivers {
+            rx.recv().unwrap().unwrap();
+        }
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.batched_jobs, bsize as u64);
+        let share = snap.stream_pack_per_batched_job();
+        assert!(share > 0.0, "kernel dispatches pack a nonzero stream");
+        per_job.push(share);
+        coord.shutdown();
+    }
+    for w in per_job.windows(2) {
+        assert!(
+            w[1] < w[0],
+            "per-job stream-pack must strictly decrease with batch size: {per_job:?}"
+        );
+    }
+    // And the amortization is exact: share(B) == share(1) / B.
+    for (i, bsize) in [1.0f64, 2.0, 4.0, 8.0].iter().enumerate() {
+        let expected = per_job[0] / bsize;
+        assert!(
+            (per_job[i] - expected).abs() < 1e-9,
+            "share({bsize}) = {} != P/B = {expected}",
+            per_job[i]
+        );
+    }
+}
+
+/// Singleton keys (peak concurrency below the adaptive bar) bypass the
+/// window: batch size 1, zero recorded queue wait.
+#[test]
+fn cold_keys_bypass_with_zero_added_latency() {
+    let coord = Coordinator::start_with_admission_clock(
+        2,
+        RoutePolicy::Auto,
+        AdmissionConfig::default(), // min_peak_concurrency = 2
+        Arc::new(FakeClock::new()) as Arc<dyn Clock>,
+    );
+    let (m, n, k) = (24, 16, 3);
+    let seq = RotationSequence::random(n, k, 5);
+    for s in 0..4u64 {
+        let a = Matrix::random(m, n, 60 + s);
+        let mut want = a.clone();
+        apply_naive(&mut want, &seq);
+        let r = coord.run(job(&seq, &a)).unwrap();
+        assert_eq!(r.batch_size, 1);
+        assert_eq!(max_abs_diff(&r.matrix, &want), 0.0);
+    }
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.bypass_jobs, 4);
+    assert_eq!(snap.batched_dispatches, 0);
+    assert_eq!(snap.window_wait_ns_total, 0);
+    coord.shutdown();
+}
+
+/// Backpressure: beyond the queue depth under `Reject`, jobs shed with a
+/// typed, downcastable error; everything already queued still completes.
+#[test]
+fn depth_bound_sheds_with_typed_queue_full_error() {
+    let coord = Coordinator::start_with_admission_clock(
+        1,
+        RoutePolicy::Auto,
+        AdmissionConfig {
+            window_ns: u64::MAX / 4,
+            batch_max: 64,
+            queue_depth: 3,
+            min_peak_concurrency: 0,
+            ..AdmissionConfig::default()
+        },
+        Arc::new(FakeClock::new()) as Arc<dyn Clock>,
+    );
+    let (m, n, k) = (24, 16, 3);
+    let seq = RotationSequence::random(n, k, 9);
+    let a = Matrix::random(m, n, 3);
+    let queued: Vec<_> = (0..3).map(|_| coord.submit(job(&seq, &a))).collect();
+    let shed = coord.submit(job(&seq, &a));
+    let err = shed.recv().unwrap().unwrap_err();
+    match err.downcast_ref::<rotseq::coordinator::admission::Error>() {
+        Some(rotseq::coordinator::admission::Error::QueueFull { depth, limit }) => {
+            assert_eq!((*depth, *limit), (3, 3));
+        }
+        other => panic!("expected QueueFull, got {other:?} ({err:#})"),
+    }
+    assert_eq!(coord.metrics().snapshot().shed_jobs, 1);
+    // Shutdown drains the parked group; nothing queued is lost.
+    coord.shutdown();
+    for rx in queued {
+        let r = rx.recv().unwrap().unwrap();
+        assert_eq!(r.batch_size, 3);
+    }
+}
+
+/// Shutdown drains pending windows as partial batches — never drops.
+#[test]
+fn shutdown_drains_partial_windows() {
+    let coord = batching_coord(2, 64);
+    let (m, n, k) = (32, 16, 4);
+    let seq = RotationSequence::random(n, k, 9);
+    let mats: Vec<Matrix> = (0..5).map(|s| Matrix::random(m, n, 80 + s)).collect();
+    let receivers: Vec<_> = mats.iter().map(|a| coord.submit(job(&seq, a))).collect();
+    coord.shutdown();
+    for (rx, a) in receivers.into_iter().zip(&mats) {
+        let r = rx.recv().unwrap().unwrap();
+        assert_eq!(r.batch_size, 5, "one partial batch of everything parked");
+        let mut want = a.clone();
+        apply_naive(&mut want, &seq);
+        assert_eq!(max_abs_diff(&r.matrix, &want), 0.0);
+    }
+}
+
+/// Jobs with an explicit config never coalesce with tuned-default jobs:
+/// the admission key is the *resolved* plan identity. Here two sequences
+/// that share a plan key but differ in content must also stay separate.
+#[test]
+fn different_sequences_and_configs_never_share_a_dispatch() {
+    let coord = batching_coord(1, 2);
+    let (m, n, k) = (32, 16, 4);
+    let seq_a = RotationSequence::random(n, k, 1);
+    let seq_b = RotationSequence::random(n, k, 2);
+    let a = Matrix::random(m, n, 7);
+
+    let mut spec_big = kernel_spec();
+    spec_big.config.mb = 32; // different config => different resolved plan
+
+    // Same plan key, different sequence content: two separate groups.
+    let r1 = coord.submit(job(&seq_a, &a));
+    let r2 = coord.submit(job(&seq_b, &a));
+    // Different config: a third group even under the same shape + seq.
+    let r3 = coord.submit(Job {
+        matrix: a.clone(),
+        seq: seq_a.clone(),
+        spec: spec_big.clone(),
+    });
+    // Fill each group to its size cap so everything flushes.
+    let r4 = coord.submit(job(&seq_a, &a));
+    let r5 = coord.submit(job(&seq_b, &a));
+    let r6 = coord.submit(Job {
+        matrix: a.clone(),
+        seq: seq_a.clone(),
+        spec: spec_big,
+    });
+
+    for (rx, seq) in [
+        (r1, &seq_a),
+        (r2, &seq_b),
+        (r3, &seq_a),
+        (r4, &seq_a),
+        (r5, &seq_b),
+        (r6, &seq_a),
+    ] {
+        let r = rx.recv().unwrap().unwrap();
+        assert_eq!(r.batch_size, 2, "each group flushed at its own cap");
+        let mut want = a.clone();
+        apply_naive(&mut want, seq);
+        assert_eq!(max_abs_diff(&r.matrix, &want), 0.0);
+    }
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.batched_dispatches, 3);
+    // Three distinct plans were built — one per resolved identity pair.
+    assert_eq!(coord.plan_cache().distinct_keys(), 2, "two plan keys");
+    coord.shutdown();
+}

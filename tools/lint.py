@@ -24,6 +24,8 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent / "rust"
 TRANSMUTE_ALLOWLIST = {"src/kernel/microkernel.rs"}
+# Prefix match: nested subsystems (e.g. coordinator/admission/) are
+# covered automatically.
 NO_PANIC_DIRS = ("plan/", "coordinator/", "tune/", "verify/")
 SAFETY_WINDOW = 10
 
