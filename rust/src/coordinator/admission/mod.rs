@@ -49,6 +49,12 @@ pub enum Error {
     /// The job's shard was at its queue-depth bound under the `Reject`
     /// overflow policy; the job was shed, not executed.
     QueueFull { depth: usize, limit: usize },
+    /// The job's coalescing window was abandoned — its flusher tick
+    /// panicked (contained), or the shutdown drain ran past
+    /// [`AdmissionConfig::drain_deadline_ns`] — and every member was shed
+    /// with this error instead of executing. `members` is the window's
+    /// size at abort time.
+    WindowAborted { members: usize },
 }
 
 impl std::fmt::Display for Error {
@@ -57,6 +63,10 @@ impl std::fmt::Display for Error {
             Error::QueueFull { depth, limit } => write!(
                 f,
                 "admission queue full ({depth} queued, limit {limit}): job shed"
+            ),
+            Error::WindowAborted { members } => write!(
+                f,
+                "admission window aborted ({members} jobs): flusher fault or drain deadline exceeded; job shed"
             ),
         }
     }
@@ -86,6 +96,12 @@ pub struct AdmissionConfig {
     /// `KeyStats::peak_concurrency` is at least this; colder keys bypass
     /// with zero added latency. 0 batches everything (deterministic CI).
     pub min_peak_concurrency: u64,
+    /// Shutdown drain budget: once `drain_deadline_ns` nanoseconds (on
+    /// the admission clock) have elapsed since the drain began, remaining
+    /// parked windows are shed with [`Error::WindowAborted`] instead of
+    /// dispatched, and shutdown stops waiting on the workers. Bounds the
+    /// time a `Coordinator::shutdown` can block on a wedged queue.
+    pub drain_deadline_ns: u64,
 }
 
 impl Default for AdmissionConfig {
@@ -98,6 +114,7 @@ impl Default for AdmissionConfig {
             shards: 8,
             wheel_slots: 64,
             min_peak_concurrency: 2,
+            drain_deadline_ns: 5_000_000_000,
         }
     }
 }
@@ -235,8 +252,12 @@ impl<T> Admission<T> {
         outcome
     }
 
-    /// Harvest every batch whose window has expired.
+    /// Harvest every batch whose window has expired. The failpoint sits
+    /// BEFORE the core lock is taken: an injected panic here leaves the
+    /// queue untouched, so the flusher's containment path can re-harvest
+    /// the same windows and shed them with a typed error.
     pub fn collect_due(&self) -> Vec<Batch<BatchKey, T>> {
+        crate::failpoint!("admission.wheel.harvest");
         let now = self.now_ns();
         self.core().expire(now)
     }

@@ -49,6 +49,19 @@ pub struct Metrics {
     /// Solo kernel dispatches contributing to the solo stream-pack sum.
     stream_pack_solo_jobs: AtomicU64,
     admission_queue_peak: AtomicU64,
+    // --- robustness (fault containment / graceful degradation) ---
+    /// Transient execute failures retried once by a coordinator worker.
+    retries: AtomicU64,
+    /// Jobs shed with `admission::Error::WindowAborted` (flusher fault
+    /// or shutdown drain deadline).
+    windows_aborted: AtomicU64,
+    /// Gauges mirrored from [`super::plancache::PlanCache::robustness_totals`]:
+    /// worker panics contained by the shared pools, pool rebuilds,
+    /// serial-fallback executes, and tainted (quarantined) contexts.
+    worker_panics: AtomicU64,
+    pool_rebuilds: AtomicU64,
+    degraded_executes: AtomicU64,
+    ctxs_tainted: AtomicU64,
 }
 
 /// A point-in-time copy of the counters.
@@ -82,6 +95,19 @@ pub struct MetricsSnapshot {
     pub stream_pack_solo_jobs: u64,
     /// High-water mark of per-shard queued jobs in the admission layer.
     pub admission_queue_peak: u64,
+    /// Transient execute failures a worker retried exactly once.
+    pub retries: u64,
+    /// Jobs shed with `WindowAborted` (flusher fault / drain deadline).
+    pub windows_aborted: u64,
+    /// Worker panics contained at the pool boundary (gauge).
+    pub worker_panics: u64,
+    /// Quarantine-and-respawn cycles of the shared worker pools (gauge).
+    pub pool_rebuilds: u64,
+    /// Executes served by the serial fallback while a pool was degraded
+    /// or failed (gauge).
+    pub degraded_executes: u64,
+    /// Rented contexts discarded as tainted instead of re-shelved (gauge).
+    pub ctxs_tainted: u64,
 }
 
 impl Metrics {
@@ -156,6 +182,32 @@ impl Metrics {
         self.admission_queue_peak.fetch_max(peak, Ordering::Relaxed);
     }
 
+    /// A worker retried one transient execute failure.
+    pub fn record_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `members` jobs were shed with `admission::Error::WindowAborted`.
+    pub fn record_windows_aborted(&self, members: u64) {
+        self.windows_aborted.fetch_add(members, Ordering::Relaxed);
+    }
+
+    /// Mirror the plan cache's containment totals into the snapshot
+    /// (monotonic gauges; `fetch_max` so stale syncs never regress them).
+    pub fn sync_robustness(
+        &self,
+        worker_panics: u64,
+        pool_rebuilds: u64,
+        degraded_executes: u64,
+        ctxs_tainted: u64,
+    ) {
+        self.worker_panics.fetch_max(worker_panics, Ordering::Relaxed);
+        self.pool_rebuilds.fetch_max(pool_rebuilds, Ordering::Relaxed);
+        self.degraded_executes
+            .fetch_max(degraded_executes, Ordering::Relaxed);
+        self.ctxs_tainted.fetch_max(ctxs_tainted, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
@@ -184,6 +236,12 @@ impl Metrics {
             stream_pack_solo_doubles: self.stream_pack_solo_doubles.load(Ordering::Relaxed),
             stream_pack_solo_jobs: self.stream_pack_solo_jobs.load(Ordering::Relaxed),
             admission_queue_peak: self.admission_queue_peak.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            windows_aborted: self.windows_aborted.load(Ordering::Relaxed),
+            worker_panics: self.worker_panics.load(Ordering::Relaxed),
+            pool_rebuilds: self.pool_rebuilds.load(Ordering::Relaxed),
+            degraded_executes: self.degraded_executes.load(Ordering::Relaxed),
+            ctxs_tainted: self.ctxs_tainted.load(Ordering::Relaxed),
         }
     }
 }
@@ -291,6 +349,23 @@ mod tests {
         assert!((s.stream_pack_per_batched_job() - 2_000.0 / 6.0).abs() < 1e-9);
         assert!((s.stream_pack_per_solo_job() - 1_000.0).abs() < 1e-12);
         assert!(s.stream_pack_per_batched_job() < s.stream_pack_per_solo_job());
+    }
+
+    #[test]
+    fn robustness_counters_accumulate_and_gauges_never_regress() {
+        let m = Metrics::new();
+        m.record_retry();
+        m.record_retry();
+        m.record_windows_aborted(3);
+        m.sync_robustness(2, 1, 4, 1);
+        m.sync_robustness(1, 0, 2, 0); // stale sync: must not regress
+        let s = m.snapshot();
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.windows_aborted, 3);
+        assert_eq!(s.worker_panics, 2);
+        assert_eq!(s.pool_rebuilds, 1);
+        assert_eq!(s.degraded_executes, 4);
+        assert_eq!(s.ctxs_tainted, 1);
     }
 
     #[test]

@@ -21,6 +21,6 @@ mod server;
 
 pub use admission::{AdmissionConfig, BatchKey};
 pub use metrics::{Metrics, MetricsSnapshot, BATCH_HIST_BUCKETS};
-pub use plancache::{ExecTracker, KeyStats, PlanCache, PlanKey, DEFAULT_MAX_CACHED};
+pub use plancache::{ExecTracker, KeyStats, PlanCache, PlanKey, RobustnessTotals, DEFAULT_MAX_CACHED};
 pub use router::{route, RoutePolicy};
-pub use server::{Coordinator, Job, JobResult, JobSpec};
+pub use server::{Coordinator, ExecutePanicked, Job, JobResult, JobSpec};

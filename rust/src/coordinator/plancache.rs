@@ -62,6 +62,22 @@ pub struct KeyStats {
     pub peak_concurrency: u64,
 }
 
+/// Aggregated containment counters across a cache's shared worker pools
+/// and its workspace pool — the observable ledger of the robustness
+/// machinery (see `docs/ROBUSTNESS.md`). All monotonic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RobustnessTotals {
+    /// Worker panics contained at the pool boundary.
+    pub worker_panics: u64,
+    /// Quarantine-and-respawn cycles across the pools.
+    pub pool_rebuilds: u64,
+    /// Executes served by the serial fallback while a pool was degraded
+    /// or failed.
+    pub degraded_executes: u64,
+    /// Rented contexts discarded as tainted instead of re-shelved.
+    pub ctxs_tainted: u64,
+}
+
 /// A bounded map of shared plans, keyed by [`PlanKey`], plus the
 /// [`WorkspacePool`] their executions rent contexts from. At capacity the
 /// least-recently-used key is evicted (in-flight executions keep their
@@ -319,6 +335,24 @@ impl PlanCache {
             self.workspaces.set_shelf_cap(sig, cap);
         }
         self.workspaces.tick_and_reap(max_idle_ticks)
+    }
+
+    /// Sum the containment counters over every shared worker pool this
+    /// cache has spawned, plus the workspace pool's taint count. The
+    /// coordinator mirrors these into its metrics snapshot after each
+    /// execute.
+    pub fn robustness_totals(&self) -> RobustnessTotals {
+        let mut totals = RobustnessTotals {
+            ctxs_tainted: self.workspaces.ctxs_tainted(),
+            ..RobustnessTotals::default()
+        };
+        let pools = self.workers.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        for pool in pools.values() {
+            totals.worker_panics += pool.worker_panics();
+            totals.pool_rebuilds += pool.pool_rebuilds();
+            totals.degraded_executes += pool.degraded_executes();
+        }
+        totals
     }
 
     /// Number of cached plans (observability).
@@ -616,6 +650,25 @@ mod tests {
         assert_eq!(reaped, 2);
         assert_eq!(cache.workspace_pool().pooled(), 0);
         assert_eq!(cache.workspace_pool().ctxs_reaped(), 4);
+    }
+
+    #[test]
+    fn robustness_totals_aggregate_pools_and_workspace_taints() {
+        let cache = PlanCache::new();
+        assert_eq!(cache.robustness_totals(), RobustnessTotals::default());
+        let k = key();
+        let (plan, _) = cache.get_or_build(&k).unwrap();
+        // Taint one rental: the guard quarantines it instead of
+        // re-shelving, and the cache's ledger must see it.
+        let mut guard = cache.workspace_pool().rent_guard(&plan);
+        guard.taint();
+        drop(guard);
+        let totals = cache.robustness_totals();
+        assert_eq!(totals.ctxs_tainted, 1);
+        assert_eq!(totals.worker_panics, 0);
+        // Spawning shared pools keeps the (zero) pool counters summed in.
+        let _p2 = cache.pool_for(2);
+        assert_eq!(cache.robustness_totals().pool_rebuilds, 0);
     }
 
     #[test]

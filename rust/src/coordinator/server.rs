@@ -23,8 +23,10 @@ use super::router::{route, RoutePolicy};
 use crate::blocking::KernelConfig;
 use crate::kernel::Algorithm;
 use crate::matrix::Matrix;
+use crate::plan::{ExecCtx, RotationPlan};
 use crate::rot::{OpSequence, RotationSequence};
 use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -79,6 +81,131 @@ pub struct JobResult {
     pub gflops: f64,
     /// How many jobs shared the dispatch (1 = solo/bypass).
     pub batch_size: usize,
+}
+
+/// A panic that unwound out of one execute attempt and was contained at
+/// the coordinator worker boundary. The rented context is quarantined as
+/// tainted by its [`crate::plan::RentedCtx`] guard, so the attempt leaves
+/// no reusable broken state behind — the failure is transient and the
+/// worker retries it exactly once.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ExecutePanicked {
+    /// The panic payload, when it carried a string.
+    pub message: String,
+}
+
+impl std::fmt::Display for ExecutePanicked {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "execute panicked (contained): {}", self.message)
+    }
+}
+
+impl std::error::Error for ExecutePanicked {}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Whether one failed execute attempt is worth the single retry: a worker
+/// panic contained at the pool boundary (typed) or at this layer
+/// ([`ExecutePanicked`]), a workspace-signature mismatch (the fresh rental
+/// on retry heals it), or an injected fault from the failpoint harness.
+/// Everything else (bad kernel config, plan build failure) is
+/// deterministic and fails fast.
+fn is_transient(e: &anyhow::Error) -> bool {
+    if matches!(
+        e.downcast_ref::<crate::parallel::pool::Error>(),
+        Some(crate::parallel::pool::Error::WorkerPanicked { .. })
+    ) {
+        return true;
+    }
+    if e.downcast_ref::<ExecutePanicked>().is_some()
+        || e.downcast_ref::<crate::fault::InjectedFault>().is_some()
+    {
+        return true;
+    }
+    matches!(
+        e.downcast_ref::<crate::plan::Error>(),
+        Some(crate::plan::Error::WorkspaceMismatch { .. })
+    )
+}
+
+/// Nanoseconds of backoff budget before the single retry of a transient
+/// failure. The actual wait is a seeded splitmix64 jitter in
+/// [base/4, base) so racing retries decorrelate, and it is a hard wall
+/// cap: tests injecting faults never stall longer than this.
+const RETRY_BACKOFF_BASE_NS: u64 = 200_000;
+
+/// Monotone draw ordinal: each retry anywhere in the process jitters
+/// differently, deterministically.
+static RETRY_ORDINAL: AtomicU64 = AtomicU64::new(0);
+
+fn retry_backoff() {
+    let mut z = RETRY_ORDINAL
+        .fetch_add(1, Ordering::Relaxed)
+        .wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    let span = RETRY_BACKOFF_BASE_NS - RETRY_BACKOFF_BASE_NS / 4;
+    std::thread::sleep(Duration::from_nanos(
+        RETRY_BACKOFF_BASE_NS / 4 + z % span,
+    ));
+}
+
+/// Run one containment-wrapped execute attempt against a freshly rented
+/// context. A panic unwinding out of the execute — injected by the
+/// failpoint harness or organic — is caught here; the RAII guard
+/// quarantines the rental as tainted instead of re-shelving it, and the
+/// caller sees a typed [`ExecutePanicked`]. On success, returns the
+/// attempt's wall time and its stream-pack ledger reading.
+fn contained_attempt(
+    plans: &PlanCache,
+    plan: &Arc<RotationPlan>,
+    run: impl FnOnce(&mut ExecCtx) -> Result<()>,
+) -> Result<(Duration, u64)> {
+    crate::failpoint!("coordinator.worker.execute", |f| Err(anyhow::Error::new(
+        f
+    )));
+    let t0 = Instant::now();
+    // AssertUnwindSafe: on unwind nothing the closure touched is reused —
+    // the rental lives inside the boundary, so its RAII guard sees
+    // `thread::panicking()` during the unwind and quarantines the context
+    // as tainted instead of re-shelving it; the caller restores the
+    // operand matrix from its pristine snapshot before retrying; and the
+    // plan itself is immutable ([INV-UNWIND] is the pool-internal half of
+    // this contract). A panic in the rent itself is contained the same
+    // way — there is simply no rental to quarantine yet.
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut guard = plans.workspace_pool().rent_guard(plan);
+        let result = run(&mut guard);
+        (result, guard)
+    }));
+    let elapsed = t0.elapsed();
+    match outcome {
+        Ok((Ok(()), guard)) => Ok((elapsed, guard.last_stream_pack())),
+        Ok((Err(e), _guard)) => Err(e),
+        Err(payload) => Err(anyhow::Error::new(ExecutePanicked {
+            message: panic_message(payload.as_ref()),
+        })),
+    }
+}
+
+/// Mirror the plan cache's containment totals into the metrics snapshot.
+fn sync_robustness(metrics: &Metrics, plans: &PlanCache) {
+    let totals = plans.robustness_totals();
+    metrics.sync_robustness(
+        totals.worker_panics,
+        totals.pool_rebuilds,
+        totals.degraded_executes,
+        totals.ctxs_tainted,
+    );
 }
 
 /// A job parked in the admission layer with its reply channel.
@@ -292,21 +419,39 @@ impl Coordinator {
     /// drained first: every parked job is dispatched (as its partial
     /// batch) before the shutdown markers enter the channel, so FIFO
     /// ordering guarantees the workers process all of them.
+    ///
+    /// The drain is bounded by [`AdmissionConfig::drain_deadline_ns`] on
+    /// the admission clock: once exceeded, remaining windows are shed
+    /// with a typed [`admission::Error::WindowAborted`] (never silently
+    /// dropped) and the workers are detached instead of joined — a
+    /// wedged worker cannot block shutdown past the deadline. The
+    /// shutdown markers are still sent, so healthy workers exit cleanly.
     pub fn shutdown(mut self) {
+        let mut deadline_exceeded = false;
         if let Some(adm) = self.admission.take() {
             adm.begin_shutdown();
             if let Some(flusher) = self.flusher.take() {
                 let _ = flusher.join();
             }
+            let deadline = adm
+                .now_ns()
+                .saturating_add(adm.config().drain_deadline_ns);
             for batch in adm.drain() {
-                dispatch_batch(batch, &self.tx, &self.metrics, &adm);
+                if adm.now_ns() >= deadline {
+                    deadline_exceeded = true;
+                    shed_batch(batch, &self.metrics);
+                } else {
+                    dispatch_batch(batch, &self.tx, &self.metrics, &adm);
+                }
             }
         }
         for _ in 0..self.workers.len() {
             let _ = self.tx.send(Message::Shutdown);
         }
         for h in self.workers.drain(..) {
-            let _ = h.join();
+            if !deadline_exceeded {
+                let _ = h.join();
+            }
         }
     }
 }
@@ -359,9 +504,32 @@ fn dispatch_batch(
     send_or_fail(tx, metrics, msg);
 }
 
+/// Shed one admission batch: every member's reply channel gets a typed
+/// [`admission::Error::WindowAborted`] instead of a result. Used when a
+/// flusher tick faulted over the window or the shutdown drain ran past
+/// its deadline — bounded, observable degradation instead of a silent
+/// stall.
+fn shed_batch(batch: Batch<BatchKey, QueuedJob>, metrics: &Metrics) {
+    let members = batch.items.len();
+    metrics.record_windows_aborted(members as u64);
+    for (member, _enqueued_ns) in batch.items {
+        metrics.record_failure();
+        let _ = member
+            .reply
+            .send(Err(admission::Error::WindowAborted { members }.into()));
+    }
+}
+
 /// The admission flusher: harvest expired windows, dispatch them, run
 /// pool housekeeping, then sleep until the earliest pending deadline (or
 /// an idle heartbeat that keeps the reaper ticking).
+///
+/// Each tick's harvest runs under `catch_unwind`: the two failpoints on
+/// this path (`admission.flusher.tick`, `admission.wheel.harvest`) both
+/// sit before any queue mutation, so after a contained panic the due
+/// windows are still parked — the recovery pass re-harvests them and
+/// sheds every member with a typed [`admission::Error::WindowAborted`]
+/// rather than leaving their reply channels dangling forever.
 fn flusher_loop(
     adm: &Admission<QueuedJob>,
     tx: &Sender<Message>,
@@ -370,10 +538,29 @@ fn flusher_loop(
 ) {
     const IDLE_PARK: Duration = Duration::from_millis(25);
     while !adm.is_shutting_down() {
-        for batch in adm.collect_due() {
-            dispatch_batch(batch, tx, metrics, adm);
+        let harvested = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            crate::failpoint!("admission.flusher.tick");
+            adm.collect_due()
+        }));
+        match harvested {
+            Ok(batches) => {
+                for batch in batches {
+                    dispatch_batch(batch, tx, metrics, adm);
+                }
+            }
+            Err(_payload) => {
+                // The tick panicked before any queue state was consumed;
+                // a second harvest (panic-class faults fire once) returns
+                // the same due windows, now shed instead of dispatched.
+                // An organic repeated panic here kills the flusher
+                // thread, but shutdown still drains the queues.
+                for batch in adm.collect_due() {
+                    shed_batch(batch, metrics);
+                }
+            }
         }
         plans.maintain(POOL_IDLE_TICKS);
+        sync_robustness(metrics, plans);
         let park = match adm.next_deadline() {
             Some(deadline) => {
                 Duration::from_nanos(deadline.saturating_sub(adm.now_ns()).max(1))
@@ -442,34 +629,48 @@ fn execute_job(
             return Err(e);
         }
     };
-    // Per-execution buffers come from the cache's shared WorkspacePool.
-    let mut ctx = plans.workspace_pool().rent(&plan);
     let _in_flight = plans.track(key);
     let flops = OpSequence::flops(&job.seq, m);
-    let t0 = Instant::now();
-    let outcome = plan.execute(&mut ctx, &mut job.matrix, &job.seq);
-    let elapsed = t0.elapsed();
-    let stream_pack = ctx.last_stream_pack();
-    plans.workspace_pool().give_back(ctx);
-    match outcome {
-        Ok(()) => {
-            metrics.record_complete(flops, elapsed.as_nanos() as u64);
-            // The solo stream-pack baseline only means something for the
-            // kernel path — other algorithms never pack wave streams.
-            metrics.record_solo_dispatch((algo == Algorithm::Kernel).then_some(stream_pack));
-            Ok(JobResult {
-                matrix: job.matrix,
-                algorithm: algo,
-                elapsed_s: elapsed.as_secs_f64(),
-                gflops: flops as f64 / elapsed.as_secs_f64().max(1e-12) / 1e9,
-                batch_size: 1,
-            })
+    // Transient-failure insurance: executes mutate the matrix in place
+    // and a contained panic can leave it partially rotated, so the single
+    // retry needs the pristine operand back. One O(m*n) copy per job,
+    // far below the execute's O(m*n*k) work.
+    let pristine = job.matrix.clone();
+    let mut retried = false;
+    let (elapsed, stream_pack) = loop {
+        // Per-attempt buffers come from the cache's shared WorkspacePool,
+        // inside an RAII guard — a panic unwinding out of the execute can
+        // no longer leak the rental (it is quarantined as tainted).
+        let outcome = contained_attempt(plans, &plan, |ctx| {
+            plan.execute(ctx, &mut job.matrix, &job.seq)
+        });
+        match outcome {
+            Ok(out) => break out,
+            Err(e) if !retried && is_transient(&e) => {
+                retried = true;
+                metrics.record_retry();
+                job.matrix = pristine.clone();
+                retry_backoff();
+            }
+            Err(e) => {
+                metrics.record_failure();
+                sync_robustness(metrics, plans);
+                return Err(e);
+            }
         }
-        Err(e) => {
-            metrics.record_failure();
-            Err(e)
-        }
-    }
+    };
+    metrics.record_complete(flops, elapsed.as_nanos() as u64);
+    // The solo stream-pack baseline only means something for the
+    // kernel path — other algorithms never pack wave streams.
+    metrics.record_solo_dispatch((algo == Algorithm::Kernel).then_some(stream_pack));
+    sync_robustness(metrics, plans);
+    Ok(JobResult {
+        matrix: job.matrix,
+        algorithm: algo,
+        elapsed_s: elapsed.as_secs_f64(),
+        gflops: flops as f64 / elapsed.as_secs_f64().max(1e-12) / 1e9,
+        batch_size: 1,
+    })
 }
 
 /// Execute one coalesced batch: split off any member whose sequence is
@@ -538,15 +739,30 @@ fn execute_coalesced(key: PlanKey, members: Vec<QueuedJob>, metrics: &Metrics, p
     }
     let Some(seq) = seq else { return };
     let flops = OpSequence::flops(&seq, key.m);
-    let mut ctx = plans.workspace_pool().rent(&plan);
-    let t0 = Instant::now();
-    let outcome = plan.execute_batch(&mut ctx, &mut mats, &seq);
-    let elapsed = t0.elapsed();
-    let stream_pack = ctx.last_stream_pack();
-    plans.workspace_pool().give_back(ctx);
+    // Same transient-retry contract as the solo path: snapshot the
+    // operands, contain panics at the attempt boundary, retry exactly
+    // once with pristine inputs and a fresh rental.
+    let pristine: Vec<Matrix> = mats.clone();
+    let mut retried = false;
+    let outcome = loop {
+        let attempt = contained_attempt(plans, &plan, |ctx| {
+            plan.execute_batch(ctx, &mut mats, &seq)
+        });
+        match attempt {
+            Ok(out) => break Ok(out),
+            Err(e) if !retried && is_transient(&e) => {
+                retried = true;
+                metrics.record_retry();
+                mats.clone_from(&pristine);
+                retry_backoff();
+            }
+            Err(e) => break Err(e),
+        }
+    };
     drop(trackers);
+    sync_robustness(metrics, plans);
     match outcome {
-        Ok(()) => {
+        Ok((elapsed, stream_pack)) => {
             metrics.record_batch_dispatch(batch_size as u64, stream_pack);
             let per_job_nanos = elapsed.as_nanos() as u64 / batch_size as u64;
             let per_job_s = elapsed.as_secs_f64() / batch_size as f64;
@@ -924,6 +1140,68 @@ mod tests {
             assert_eq!(max_abs_diff(&r.matrix, &expected), 0.0);
             assert_eq!(r.batch_size, 3, "drained as one partial batch");
         }
+    }
+
+    /// Transient-retry classification: contained panics (pool-typed or
+    /// coordinator-caught), workspace mismatches, and injected faults
+    /// are retried; deterministic failures are not.
+    #[test]
+    fn transient_classification_drives_the_single_retry() {
+        let pool_err = anyhow::Error::new(crate::parallel::pool::Error::WorkerPanicked {
+            worker: 1,
+            epoch: 7,
+        });
+        assert!(is_transient(&pool_err));
+        let caught = anyhow::Error::new(ExecutePanicked {
+            message: "boom".to_string(),
+        });
+        assert!(is_transient(&caught));
+        let injected = anyhow::Error::new(crate::fault::InjectedFault {
+            site: "coordinator.worker.execute",
+            seed: 0xbeef,
+        });
+        assert!(is_transient(&injected));
+        let deterministic = anyhow::anyhow!("unsupported mr");
+        assert!(!is_transient(&deterministic));
+        let shed = anyhow::Error::new(admission::Error::QueueFull { depth: 2, limit: 2 });
+        assert!(!is_transient(&shed), "typed sheds are terminal");
+    }
+
+    /// A zero drain deadline sheds every parked window at shutdown with
+    /// the typed `WindowAborted` error instead of blocking on dispatch —
+    /// the bounded-drain contract, driven entirely by the fake clock.
+    #[test]
+    fn shutdown_drain_deadline_sheds_parked_windows_typed() {
+        let clock = Arc::new(FakeClock::new());
+        let coord = Coordinator::start_with_admission_clock(
+            1,
+            RoutePolicy::Auto,
+            AdmissionConfig {
+                window_ns: u64::MAX / 4,
+                batch_max: 64, // cap never reached: jobs stay parked
+                min_peak_concurrency: 0,
+                drain_deadline_ns: 0,
+                ..AdmissionConfig::default()
+            },
+            clock as Arc<dyn admission::Clock>,
+        );
+        let (m, n, k) = (24, 16, 3);
+        let seq = RotationSequence::random(n, k, 5);
+        let a = Matrix::random(m, n, 6);
+        let receivers: Vec<_> = (0..3).map(|_| coord.submit(kernel_job(&seq, &a))).collect();
+        assert_eq!(coord.admission_queued(), 3);
+        let metrics = Arc::clone(&coord.metrics);
+        coord.shutdown();
+        for rx in receivers {
+            let err = rx.recv().unwrap().unwrap_err();
+            assert_eq!(
+                err.downcast_ref::<admission::Error>(),
+                Some(&admission::Error::WindowAborted { members: 3 })
+            );
+        }
+        let snap = metrics.snapshot();
+        assert_eq!(snap.windows_aborted, 3);
+        assert_eq!(snap.jobs_failed, 3);
     }
 
     /// Different sequences never share a dispatch even under one plan

@@ -1,0 +1,375 @@
+//! Deterministic fault injection: `failpoint!` sites + a seeded [`FaultPlan`].
+//!
+//! The serving stack (pool → plan → coordinator → admission) is laced with
+//! named **failpoint sites** — `failpoint!("pool.worker.pre_complete")` —
+//! that are zero-cost unless the crate is built with `--features failpoints`
+//! *and* a [`FaultPlan`] has been installed in the process-global registry.
+//! A plan scripts one [`FaultAction`] per site and is fully replayable from
+//! a `u64` seed ([`FaultPlan::seeded`]), so every chaos schedule found by the
+//! sweep in `tests/chaos_props.rs` or the `rotseq chaos` runner can be
+//! reproduced bit-for-bit from its seed alone.
+//!
+//! Like PR 9's [`Clock`], time is injected: [`FaultAction::Delay`] waits on
+//! the plan's clock (a [`FakeClock`](crate::coordinator::admission::FakeClock)
+//! in tests), with a small wall-clock cap so an unadvanced fake clock can
+//! never wedge a worker.
+//!
+//! The registry of sites, their containment boundaries, typed error codes
+//! and degradation behavior is documented in `docs/ROBUSTNESS.md`; the
+//! failpoint-site drift lint (`cargo xtask lint` family 6 /
+//! `tools/lint.py`) keeps the code and that taxonomy table in sync.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::admission::{Clock, MonotonicClock};
+
+/// Every failpoint site compiled into the crate, in taxonomy order.
+///
+/// `FaultPlan::seeded(seed, fault::SITES)` arms all of them at once; the
+/// drift lint cross-checks this list's call sites against the
+/// `docs/ROBUSTNESS.md` taxonomy table.
+pub const SITES: &[&str] = &[
+    "pool.dispatch.publish",
+    "pool.worker.pre_complete",
+    "plan.ctx.rent",
+    "coordinator.worker.execute",
+    "admission.flusher.tick",
+    "admission.wheel.harvest",
+    "tune.measure",
+];
+
+/// What an armed site does when execution reaches it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Panic at the site (once per installed plan). The surrounding layer's
+    /// `catch_unwind` boundary must contain it — that containment is exactly
+    /// what the chaos suite proves.
+    Panic,
+    /// Return an [`InjectedFault`] error on the n-th hit of the site
+    /// (1-based), exactly once. At unit-form sites with no error channel
+    /// this escalates to a (contained) panic.
+    ErrOnce(u32),
+    /// Busy-wait until the plan's injected clock has advanced `ns`
+    /// nanoseconds (wall-capped so an unadvanced `FakeClock` cannot wedge).
+    Delay(u64),
+    /// Yield the OS scheduler once — a scheduling perturbation, not a fault.
+    Yield,
+}
+
+/// The typed error an `ErrOnce` site injects, carried to the caller by the
+/// err-form of [`failpoint!`](crate::failpoint) and wrapped in the layer's
+/// own error type (`anyhow` in the pool, reply errors in the coordinator).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct InjectedFault {
+    /// The site that fired.
+    pub site: &'static str,
+    /// The seed of the plan that scripted it (replay handle).
+    pub seed: u64,
+}
+
+impl fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "injected fault at {} (seed {:#x})", self.site, self.seed)
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+struct SiteScript {
+    site: String,
+    action: FaultAction,
+    hits: u64,
+    fired: bool,
+}
+
+/// A seeded, per-site fault script. Install with [`install`]; every armed
+/// site then consults it on each hit. Replayable: `FaultPlan::seeded(s, v)`
+/// is a pure function of `(s, v)`.
+pub struct FaultPlan {
+    seed: u64,
+    clock: Arc<dyn Clock>,
+    scripts: Vec<SiteScript>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no site armed) carrying `seed` for derived scripts.
+    pub fn new(seed: u64) -> Self {
+        FaultPlan { seed, clock: Arc::new(MonotonicClock), scripts: Vec::new() }
+    }
+
+    /// Arm every listed site with an action derived deterministically from
+    /// `seed ^ fnv1a(site)` — the replayable chaos schedule.
+    pub fn seeded(seed: u64, sites: &[&str]) -> Self {
+        let mut plan = FaultPlan::new(seed);
+        for site in sites {
+            plan = plan.script(site, derive_action(seed, site));
+        }
+        plan
+    }
+
+    /// Arm `site` with `action` (builder form; last script for a site wins).
+    pub fn script(mut self, site: &str, action: FaultAction) -> Self {
+        self.scripts.retain(|s| s.site != site);
+        self.scripts.push(SiteScript { site: site.to_string(), action, hits: 0, fired: false });
+        self
+    }
+
+    /// Replace the delay clock (tests inject a
+    /// [`FakeClock`](crate::coordinator::admission::FakeClock)).
+    pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> Self {
+        self.clock = clock;
+        self
+    }
+
+    /// The replay seed this plan was built from.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The scripted action for `site`, if armed.
+    pub fn action(&self, site: &str) -> Option<FaultAction> {
+        self.scripts.iter().find(|s| s.site == site).map(|s| s.action)
+    }
+
+    /// How many times `site` has been reached under this plan.
+    pub fn hits(&self, site: &str) -> u64 {
+        self.scripts.iter().find(|s| s.site == site).map_or(0, |s| s.hits)
+    }
+
+    /// Whether `site`'s one-shot action (`Panic`/`ErrOnce`) has fired.
+    pub fn fired(&self, site: &str) -> bool {
+        self.scripts.iter().find(|s| s.site == site).is_some_and(|s| s.fired)
+    }
+
+    fn on_hit(&mut self, site: &'static str) -> Option<InjectedFault> {
+        let seed = self.seed;
+        let clock = Arc::clone(&self.clock);
+        let sc = self.scripts.iter_mut().find(|s| s.site == site)?;
+        sc.hits += 1;
+        match sc.action {
+            FaultAction::Panic => {
+                if !sc.fired {
+                    sc.fired = true;
+                    panic!("injected panic at failpoint {site} (seed {seed:#x})");
+                }
+                None
+            }
+            FaultAction::ErrOnce(n) => {
+                if sc.hits == u64::from(n) && !sc.fired {
+                    sc.fired = true;
+                    Some(InjectedFault { site, seed })
+                } else {
+                    None
+                }
+            }
+            FaultAction::Delay(ns) => {
+                wait_ns(clock.as_ref(), ns);
+                None
+            }
+            FaultAction::Yield => {
+                std::thread::yield_now();
+                None
+            }
+        }
+    }
+}
+
+/// The deterministic seed → action map behind [`FaultPlan::seeded`].
+pub fn derive_action(seed: u64, site: &str) -> FaultAction {
+    let r = splitmix64(seed ^ fnv1a(site));
+    match r % 4 {
+        0 => FaultAction::Panic,
+        1 => FaultAction::ErrOnce(1 + ((r >> 2) % 2) as u32),
+        2 => FaultAction::Delay((r >> 2) % 50_000),
+        _ => FaultAction::Yield,
+    }
+}
+
+/// Clock-driven wait with a wall cap: waits until `clock` has advanced
+/// `ns`, or `DELAY_WALL_CAP` of real time has passed — whichever comes
+/// first — so a `FakeClock` nobody advances cannot wedge the process.
+const DELAY_WALL_CAP: Duration = Duration::from_millis(5);
+
+fn wait_ns(clock: &dyn Clock, ns: u64) {
+    let t0 = clock.now_ns();
+    let wall = Instant::now();
+    while clock.now_ns().wrapping_sub(t0) < ns && wall.elapsed() < DELAY_WALL_CAP {
+        std::thread::yield_now();
+    }
+}
+
+static ACTIVE: Mutex<Option<FaultPlan>> = Mutex::new(None);
+static TOTAL_HITS: AtomicU64 = AtomicU64::new(0);
+
+fn registry() -> std::sync::MutexGuard<'static, Option<FaultPlan>> {
+    // A Panic action fires while the registry lock is held, poisoning it;
+    // the plan's per-site state is a single non-tearing update, so poison
+    // is recovered exactly like the pool/coordinator locks.
+    ACTIVE.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Install `plan` as the process-global fault script (replacing any).
+pub fn install(plan: FaultPlan) {
+    *registry() = Some(plan);
+}
+
+/// Disarm and return the active plan (its hit counters intact), if any.
+pub fn clear() -> Option<FaultPlan> {
+    registry().take()
+}
+
+/// Whether a plan is currently installed.
+pub fn is_armed() -> bool {
+    registry().is_some()
+}
+
+/// Total failpoint hits since process start (armed plans only).
+pub fn total_hits() -> u64 {
+    TOTAL_HITS.load(Ordering::Relaxed)
+}
+
+/// The err-form registry hit: consult the active plan at `site`.
+///
+/// Returns `Some(fault)` when an `ErrOnce` script fires (the caller's
+/// `failpoint!` err-form early-returns with it); `Panic` scripts panic out
+/// of this call into the enclosing containment boundary; `Delay`/`Yield`
+/// perturb and return `None`. Called only by the `failpoint!` macro — the
+/// default build never reaches it.
+pub fn hit(site: &'static str) -> Option<InjectedFault> {
+    let mut guard = registry();
+    let plan = guard.as_mut()?;
+    TOTAL_HITS.fetch_add(1, Ordering::Relaxed);
+    plan.on_hit(site)
+}
+
+/// The unit-form registry hit: sites with no error channel escalate an
+/// `ErrOnce` firing to a (contained) panic so no scripted fault is lost.
+pub fn hit_unit(site: &'static str) {
+    if let Some(fault) = hit(site) {
+        panic!("{fault} escalated to panic (unit-form site)");
+    }
+}
+
+/// A named fault-injection site.
+///
+/// Statement form — `failpoint!("pool.worker.pre_complete");` — honors
+/// `Panic`/`Delay`/`Yield` and escalates `ErrOnce` to a panic (the site has
+/// no error channel). Err form —
+/// `failpoint!("pool.dispatch.publish", |f| Err(f.into()));` — early-returns
+/// the closure's value from the *enclosing function* when an `ErrOnce`
+/// script fires.
+///
+/// Without `--features failpoints` both forms expand to an empty block:
+/// zero code, zero branches, zero cost in the hot path.
+#[macro_export]
+macro_rules! failpoint {
+    ($site:expr) => {{
+        #[cfg(feature = "failpoints")]
+        $crate::fault::hit_unit($site);
+    }};
+    ($site:expr, $on_err:expr) => {{
+        #[cfg(feature = "failpoints")]
+        if let Some(fault) = $crate::fault::hit($site) {
+            return ($on_err)(fault);
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::admission::FakeClock;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    #[test]
+    fn seeded_plans_are_replayable() {
+        for seed in [0u64, 1, 7, 0xDEAD_BEEF] {
+            let a = FaultPlan::seeded(seed, SITES);
+            let b = FaultPlan::seeded(seed, SITES);
+            for site in SITES {
+                assert_eq!(a.action(site), b.action(site), "seed {seed:#x} site {site}");
+                assert_eq!(a.action(site), Some(derive_action(seed, site)));
+            }
+        }
+        // Distinct seeds must be able to produce distinct schedules.
+        let actions: Vec<Vec<_>> = (0..16)
+            .map(|s| SITES.iter().map(|site| derive_action(s, site)).collect())
+            .collect();
+        assert!(actions.windows(2).any(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    fn err_once_fires_exactly_once_on_nth_hit() {
+        let mut plan = FaultPlan::new(42).script("x.y", FaultAction::ErrOnce(2));
+        assert_eq!(plan.on_hit("x.y"), None);
+        let fault = plan.on_hit("x.y").expect("second hit fires");
+        assert_eq!(fault.seed, 42);
+        assert_eq!(plan.on_hit("x.y"), None);
+        assert_eq!(plan.hits("x.y"), 3);
+        assert!(plan.fired("x.y"));
+    }
+
+    // One test owns the process-global registry end to end — the unit
+    // runner is multi-threaded, so splitting these assertions across tests
+    // would race on install/clear.
+    #[test]
+    fn registry_panic_once_poison_recovery_and_inert_when_cleared() {
+        install(FaultPlan::new(9).script("p.q", FaultAction::Panic));
+        let r = catch_unwind(AssertUnwindSafe(|| hit_unit("p.q")));
+        assert!(r.is_err(), "first hit panics");
+        // The poisoned registry is recovered and the one-shot flag stuck.
+        hit_unit("p.q");
+        let plan = clear().expect("plan still installed");
+        assert_eq!(plan.hits("p.q"), 2);
+        assert!(plan.fired("p.q"));
+        assert!(!is_armed());
+        assert_eq!(hit("no.such.site"), None);
+        hit_unit("no.such.site");
+    }
+
+    #[test]
+    fn delay_waits_on_injected_clock_with_wall_cap() {
+        let clock = Arc::new(FakeClock::at(0));
+        let mut plan = FaultPlan::new(3)
+            .script("d.e", FaultAction::Delay(1_000))
+            .with_clock(clock.clone());
+        clock.advance(2_000); // already elapsed: returns immediately
+        let t = Instant::now();
+        assert_eq!(plan.on_hit("d.e"), None);
+        assert!(t.elapsed() < DELAY_WALL_CAP);
+        // Never advanced past the target: the wall cap bounds the wait.
+        let clock2 = Arc::new(FakeClock::at(0));
+        let mut plan2 = FaultPlan::new(3)
+            .script("d.e", FaultAction::Delay(u64::MAX / 2))
+            .with_clock(clock2);
+        let t = Instant::now();
+        assert_eq!(plan2.on_hit("d.e"), None);
+        assert!(t.elapsed() >= DELAY_WALL_CAP);
+    }
+
+    #[test]
+    fn unarmed_sites_are_inert() {
+        let mut plan = FaultPlan::seeded(5, &["only.this"]);
+        assert_eq!(plan.on_hit("other.site"), None);
+        assert_eq!(plan.hits("other.site"), 0);
+    }
+}

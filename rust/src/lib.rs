@@ -79,6 +79,7 @@ pub mod apps;
 pub mod bench_harness;
 pub mod blocking;
 pub mod coordinator;
+pub mod fault;
 pub mod gemm;
 pub mod jsonio;
 pub mod kernel;

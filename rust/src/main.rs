@@ -133,6 +133,7 @@ fn run() -> Result<()> {
         "svd" => cmd_svd(&args),
         "pjrt" => cmd_pjrt(&args),
         "serve" => cmd_serve(&args),
+        "chaos" => cmd_chaos(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -160,7 +161,9 @@ fn print_usage() {
          \x20 pjrt     [--artifacts artifacts]                   run AOT artifacts via PJRT\n\
          \x20 serve    [--workers 2] [--tuned]                   job coordinator on stdin\n\
          \x20          [--window-us 500 --batch-max 16]          opt-in deadline-window\n\
-         \x20          [--batch-min-peak 2]                      micro-batching"
+         \x20          [--batch-min-peak 2]                      micro-batching\n\
+         \x20 chaos    [--seed 42 --schedules 8]                 seeded fault-injection runner\n\
+         \x20          [--sites a.b,c.d]                         (needs --features failpoints)"
     );
 }
 
@@ -546,6 +549,16 @@ fn cmd_serve(a: &Args) -> Result<()> {
                     ws.ctxs_reused(),
                     ws.pooled()
                 );
+                println!(
+                    "robustness: {} retries | {} windows aborted | {} worker panics | \
+                     {} pool rebuilds | {} degraded executes | {} ctxs tainted",
+                    s.retries,
+                    s.windows_aborted,
+                    s.worker_panics,
+                    s.pool_rebuilds,
+                    s.degraded_executes,
+                    s.ctxs_tainted
+                );
                 if coord.admission_enabled() {
                     // One parseable line: the CI smoke asserts batched
                     // dispatches happened, the mean batch exceeded 1, and
@@ -655,5 +668,158 @@ fn cmd_serve(a: &Args) -> Result<()> {
         s.jobs_completed, s.jobs_failed
     );
     coord.shutdown();
+    Ok(())
+}
+
+/// `rotseq chaos`: the seeded fault-injection runner. Requires the
+/// `failpoints` build; the default build carries zero failpoint overhead
+/// and therefore cannot inject anything.
+#[cfg(not(feature = "failpoints"))]
+fn cmd_chaos(_a: &Args) -> Result<()> {
+    println!(
+        "chaos: built without the `failpoints` feature — no fault sites are compiled in.\n\
+         rebuild with `cargo run --features failpoints -- chaos --seed 42`"
+    );
+    Ok(())
+}
+
+/// For each schedule `i`, install `FaultPlan::seeded(seed + i, sites)`,
+/// drive a small admission-enabled coordinator workload through it, and
+/// require: every job resolves to exactly one typed result (no stalls,
+/// bounded by the drain deadline), and a post-fault clean run is bitwise
+/// identical to the naive oracle. Prints `chaos: ok` iff all schedules
+/// hold.
+#[cfg(feature = "failpoints")]
+fn cmd_chaos(a: &Args) -> Result<()> {
+    use rotseq::fault::{self, FaultPlan};
+    use std::time::Duration;
+
+    let seed = a.get("seed", 42u64)?;
+    let schedules = a.get("schedules", 8u64)?.max(1);
+    let sites_arg = a.get_str("sites", "");
+    let sites: Vec<&'static str> = if sites_arg.trim().is_empty() {
+        fault::SITES.to_vec()
+    } else {
+        sites_arg
+            .split(',')
+            .map(|raw| {
+                let want = raw.trim();
+                fault::SITES
+                    .iter()
+                    .copied()
+                    .find(|known| *known == want)
+                    .ok_or_else(|| anyhow::anyhow!("unknown failpoint site '{want}'"))
+            })
+            .collect::<Result<_>>()?
+    };
+    println!(
+        "chaos: seed {seed:#x}, {schedules} schedules over {} sites",
+        sites.len()
+    );
+
+    let (m, n, k) = (48usize, 24usize, 4usize);
+    let cfg = KernelConfig {
+        mr: 8,
+        kr: 2,
+        mb: 16,
+        kb: 4,
+        nb: 8,
+        threads: 1,
+    };
+    let mut par_cfg = cfg;
+    par_cfg.threads = 3; // exercises the §7 pool sites
+    let seq = RotationSequence::random(n, k, 7);
+    let a0 = Matrix::random(m, n, 8);
+    let mut oracle = a0.clone();
+    rotseq::rot::apply_naive(&mut oracle, &seq);
+
+    let mut total_ok = 0u64;
+    let mut total_err = 0u64;
+    for i in 0..schedules {
+        fault::install(FaultPlan::seeded(seed.wrapping_add(i), &sites));
+        let coord = Coordinator::start_with_admission(
+            2,
+            RoutePolicy::Auto,
+            AdmissionConfig {
+                window_ns: 200_000,
+                batch_max: 4,
+                min_peak_concurrency: 0,
+                drain_deadline_ns: 2_000_000_000,
+                ..AdmissionConfig::default()
+            },
+        );
+        let mut receivers = Vec::new();
+        for j in 0..6usize {
+            receivers.push(coord.submit(Job {
+                matrix: a0.clone(),
+                seq: seq.clone(),
+                spec: JobSpec {
+                    algorithm: Some(Algorithm::Kernel),
+                    config: if j == 5 { par_cfg } else { cfg },
+                },
+            }));
+        }
+        // First pass: collect what resolves on its own; a dead flusher or
+        // degraded pool may park the rest until the shutdown drain.
+        fn tally(
+            res: Result<rotseq::coordinator::JobResult>,
+            oracle: &Matrix,
+            ok: &mut u64,
+            typed_err: &mut u64,
+            schedule: u64,
+        ) -> Result<()> {
+            match res {
+                Ok(r) => {
+                    if rotseq::matrix::max_abs_diff(&r.matrix, oracle) != 0.0 {
+                        anyhow::bail!("schedule {schedule}: completed job diverged from the oracle");
+                    }
+                    *ok += 1;
+                }
+                Err(_) => *typed_err += 1,
+            }
+            Ok(())
+        }
+        let mut pending = Vec::new();
+        let (mut ok, mut typed_err) = (0u64, 0u64);
+        for rx in receivers {
+            match rx.recv_timeout(Duration::from_millis(750)) {
+                Ok(res) => tally(res, &oracle, &mut ok, &mut typed_err, i)?,
+                Err(_) => pending.push(rx),
+            }
+        }
+        coord.shutdown(); // bounded by drain_deadline_ns
+        for rx in pending {
+            match rx.recv_timeout(Duration::from_millis(750)) {
+                Ok(res) => tally(res, &oracle, &mut ok, &mut typed_err, i)?,
+                Err(_) => anyhow::bail!(
+                    "schedule {i}: a job never resolved (containment hole: missing typed result)"
+                ),
+            }
+        }
+        fault::clear();
+        println!("chaos: schedule {i}: {ok} ok, {typed_err} typed errors");
+        total_ok += ok;
+        total_err += typed_err;
+
+        // Post-fault determinism: with the registry cleared, the same job
+        // must execute bitwise identically to the oracle.
+        let coord = Coordinator::start(1, RoutePolicy::Auto);
+        let r = coord.run(Job {
+            matrix: a0.clone(),
+            seq: seq.clone(),
+            spec: JobSpec {
+                algorithm: Some(Algorithm::Kernel),
+                config: cfg,
+            },
+        })?;
+        coord.shutdown();
+        if rotseq::matrix::max_abs_diff(&r.matrix, &oracle) != 0.0 {
+            anyhow::bail!("schedule {i}: post-fault execute diverged from the clean oracle");
+        }
+    }
+    println!(
+        "chaos: {total_ok} jobs ok, {total_err} typed errors, 0 stalls; post-fault executes bitwise clean"
+    );
+    println!("chaos: ok");
     Ok(())
 }

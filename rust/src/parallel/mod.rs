@@ -28,5 +28,5 @@ pub mod speedup_model;
 mod scheduler;
 
 pub use epoch::{dispatch_hb_edges, HbNode, StaleEpoch};
-pub use pool::{dispatch_spec, MatView, TaskSpec, WorkerPool};
+pub use pool::{dispatch_spec, Health, MatView, TaskSpec, WorkerPool};
 pub use scheduler::{apply_parallel, apply_parallel_packed, partition_rows};

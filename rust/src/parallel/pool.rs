@@ -39,8 +39,10 @@ use crate::kernel::{
 use crate::matrix::Matrix;
 use crate::rot::PairOp;
 use anyhow::{anyhow, ensure, Result};
+use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
 
 /// Raw view of a column-major matrix (element `(i, j)` at
@@ -232,34 +234,218 @@ struct Task {
     epoch: u64,
 }
 
+/// Typed pool failures, carried inside the `anyhow::Error` channel the
+/// [`EpochGate`] already propagates (downcast with
+/// [`anyhow::Error::downcast_ref`]). The stable error code for the
+/// `docs/ROBUSTNESS.md` taxonomy is the variant name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Error {
+    /// A worker's task panicked; the unwind was contained by the worker
+    /// loop's `catch_unwind`, the epoch still joined (no deadlocked
+    /// dispatch), and the pool transitioned to [`Health::Degraded`] with
+    /// the worker quarantined.
+    WorkerPanicked {
+        /// Index of the panicking worker.
+        worker: usize,
+        /// The dispatch epoch the panic was contained in.
+        epoch: u64,
+    },
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Error::WorkerPanicked { worker, epoch } => write!(
+                f,
+                "pool worker {worker} panicked in epoch {epoch} (contained; pool degraded)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// The pool health-state machine (diagrammed in `docs/ROBUSTNESS.md`):
+/// `Healthy` → (worker panic) → `Degraded` → (lazy rebuild on next
+/// dispatch, bounded by [`WorkerPool::REBUILD_BUDGET`]) → `Healthy`, or →
+/// `Failed` once the budget is exhausted. `Failed` is terminal; callers
+/// fall back to the bitwise-identical serial path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Health {
+    /// All workers live; dispatches run pooled.
+    Healthy,
+    /// A worker panicked and is quarantined; the next dispatch rebuilds.
+    Degraded,
+    /// Rebuild budget exhausted; the pool no longer accepts dispatches.
+    Failed,
+}
+
+const HEALTH_HEALTHY: u8 = 0;
+const HEALTH_DEGRADED: u8 = 1;
+const HEALTH_FAILED: u8 = 2;
+
 /// A set of long-lived worker threads executing pre-planned §7 row-parallel
 /// applies. Created once (per execution context, or shared across
 /// contexts/plans via [`crate::plan::PlanBuilder::pool`] and
 /// [`crate::coordinator::PlanCache`]); dropped pools join their threads.
+///
+/// The gate + thread handles sit behind a mutex so a [`Health::Degraded`]
+/// pool can quarantine its dead worker set and rebuild in place; the lock
+/// is uncontended on the steady-state path (dispatches were already
+/// serialized at the epoch hand-off).
 pub struct WorkerPool {
+    core: Mutex<PoolCore>,
+    target: usize,
+    health: AtomicU8,
+    rebuild_budget: AtomicU32,
+    quarantined: Mutex<Vec<usize>>,
+    worker_panics: AtomicU64,
+    rebuilds: AtomicU64,
+    degraded_executes: AtomicU64,
+}
+
+struct PoolCore {
     gate: Arc<EpochGate<Task, anyhow::Error>>,
     handles: Vec<JoinHandle<()>>,
 }
 
+fn spawn_workers(workers: usize) -> PoolCore {
+    let gate = Arc::new(EpochGate::new());
+    let handles = (0..workers)
+        .map(|w| {
+            let gate = Arc::clone(&gate);
+            std::thread::Builder::new()
+                .name(format!("rotseq-pool-{w}"))
+                .spawn(move || worker_loop(&gate, w))
+                .expect("spawn pool worker")
+        })
+        .collect();
+    PoolCore { gate, handles }
+}
+
 impl WorkerPool {
+    /// How many in-place rebuilds a pool performs before a further worker
+    /// panic parks it in the terminal [`Health::Failed`] state.
+    pub const REBUILD_BUDGET: u32 = 8;
+
     /// Spawn `workers` persistent threads (at least one).
     pub fn new(workers: usize) -> Self {
-        let gate = Arc::new(EpochGate::new());
-        let handles = (0..workers.max(1))
-            .map(|w| {
-                let gate = Arc::clone(&gate);
-                std::thread::Builder::new()
-                    .name(format!("rotseq-pool-{w}"))
-                    .spawn(move || worker_loop(&gate, w))
-                    .expect("spawn pool worker")
-            })
-            .collect();
-        Self { gate, handles }
+        let target = workers.max(1);
+        Self {
+            core: Mutex::new(spawn_workers(target)),
+            target,
+            health: AtomicU8::new(HEALTH_HEALTHY),
+            rebuild_budget: AtomicU32::new(Self::REBUILD_BUDGET),
+            quarantined: Mutex::new(Vec::new()),
+            worker_panics: AtomicU64::new(0),
+            rebuilds: AtomicU64::new(0),
+            degraded_executes: AtomicU64::new(0),
+        }
     }
 
     /// Number of persistent worker threads.
     pub fn workers(&self) -> usize {
-        self.handles.len()
+        self.target
+    }
+
+    /// Current health state (racy snapshot; use [`Self::serviceable`] to
+    /// also attempt the lazy rebuild a `Degraded` pool is owed).
+    pub fn health(&self) -> Health {
+        match self.health.load(Ordering::SeqCst) {
+            HEALTH_HEALTHY => Health::Healthy,
+            HEALTH_DEGRADED => Health::Degraded,
+            _ => Health::Failed,
+        }
+    }
+
+    /// Worker panics contained by this pool so far.
+    pub fn worker_panics(&self) -> u64 {
+        self.worker_panics.load(Ordering::Relaxed)
+    }
+
+    /// In-place rebuilds performed so far.
+    pub fn pool_rebuilds(&self) -> u64 {
+        self.rebuilds.load(Ordering::Relaxed)
+    }
+
+    /// Executes that fell back to the serial path because this pool was
+    /// `Degraded`/`Failed` (recorded by the plan layer).
+    pub fn degraded_executes(&self) -> u64 {
+        self.degraded_executes.load(Ordering::Relaxed)
+    }
+
+    /// Record one serial-fallback execute against this pool.
+    pub fn note_degraded_execute(&self) {
+        self.degraded_executes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Workers quarantined since the last successful rebuild.
+    pub fn quarantined(&self) -> Vec<usize> {
+        self.quarantined
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .clone()
+    }
+
+    /// Whether the pool can take a dispatch right now. `Healthy` pools
+    /// answer immediately; a `Degraded` pool first attempts its lazy
+    /// rebuild (tearing down the quarantined generation, spawning a fresh
+    /// one) within [`Self::REBUILD_BUDGET`]; past the budget it parks in
+    /// `Failed` and the caller takes the serial path.
+    pub fn serviceable(&self) -> bool {
+        match self.health() {
+            Health::Healthy => true,
+            Health::Failed => false,
+            Health::Degraded => self.try_rebuild() == Health::Healthy,
+        }
+    }
+
+    fn note_worker_panic(&self, worker: usize) {
+        self.worker_panics.fetch_add(1, Ordering::Relaxed);
+        self.quarantined
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .push(worker);
+        let _ = self.health.compare_exchange(
+            HEALTH_HEALTHY,
+            HEALTH_DEGRADED,
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+        );
+    }
+
+    fn try_rebuild(&self) -> Health {
+        let mut core = self.core.lock().unwrap_or_else(PoisonError::into_inner);
+        // Re-check under the lock: a racing caller may have rebuilt (or
+        // failed) the pool while we waited.
+        match self.health() {
+            Health::Healthy => return Health::Healthy,
+            Health::Failed => return Health::Failed,
+            Health::Degraded => {}
+        }
+        let budget_left = self
+            .rebuild_budget
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |b| b.checked_sub(1))
+            .is_ok();
+        if !budget_left {
+            self.health.store(HEALTH_FAILED, Ordering::SeqCst);
+            return Health::Failed;
+        }
+        // Retire the quarantined generation: the contained workers are
+        // still parked on their (old) gate, so shutdown + join cannot
+        // hang, then spawn a fresh generation on a fresh gate.
+        core.gate.shutdown();
+        for h in core.handles.drain(..) {
+            let _ = h.join();
+        }
+        *core = spawn_workers(self.target);
+        self.rebuilds.fetch_add(1, Ordering::Relaxed);
+        self.quarantined
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .clear();
+        self.health.store(HEALTH_HEALTHY, Ordering::SeqCst);
+        Health::Healthy
     }
 
     /// Apply the pre-planned streams in `seqplan` to every matrix in
@@ -288,32 +474,44 @@ impl WorkerPool {
         if mats.is_empty() || parts.is_empty() {
             return Ok(());
         }
-        // The borrows captured here stay alive across the whole dispatch:
-        // `dispatch` blocks until every worker completed the epoch, which
-        // is what makes the SendPtr Send impls sound.
-        let outcome = self.gate.dispatch(self.handles.len(), |epoch| Task {
-            run: run_chunk::<Op>,
-            mats: SendPtr::new(mats.as_ptr()),
-            nmats: mats.len(),
-            parts: SendPtr::new(parts.as_ptr()),
-            nparts: parts.len(),
-            units: SendPtrMut::new(units.as_mut_ptr()),
-            seqplan: SendPtr::new(seqplan),
-            cfg: *cfg,
-            fused,
-            epoch,
-        });
-        // A stale completion is recorded by the gate (the worker side is
-        // abort-safe and cannot panic there) and surfaced here as a typed
-        // error: the pool's pointer protocol was violated.
-        if let Some(v) = self.gate.take_violation() {
-            return Err(anyhow!(
-                "pool protocol violation: epoch {} completion outlived its \
-                 dispatch epoch (live: {}, remaining: {})",
-                v.completed,
-                v.live,
-                v.remaining
-            ));
+        crate::failpoint!("pool.dispatch.publish", |f| Err(anyhow::Error::new(f)));
+        let outcome = {
+            let core = self.core.lock().unwrap_or_else(PoisonError::into_inner);
+            // The borrows captured here stay alive across the whole
+            // dispatch: `dispatch` blocks until every worker completed the
+            // epoch, which is what makes the SendPtr Send impls sound.
+            let outcome = core.gate.dispatch(core.handles.len(), |epoch| Task {
+                run: run_chunk::<Op>,
+                mats: SendPtr::new(mats.as_ptr()),
+                nmats: mats.len(),
+                parts: SendPtr::new(parts.as_ptr()),
+                nparts: parts.len(),
+                units: SendPtrMut::new(units.as_mut_ptr()),
+                seqplan: SendPtr::new(seqplan),
+                cfg: *cfg,
+                fused,
+                epoch,
+            });
+            // A stale completion is recorded by the gate (the worker side
+            // is abort-safe and cannot panic there) and surfaced here as a
+            // typed error: the pool's pointer protocol was violated.
+            if let Some(v) = core.gate.take_violation() {
+                return Err(anyhow!(
+                    "pool protocol violation: epoch {} completion outlived its \
+                     dispatch epoch (live: {}, remaining: {})",
+                    v.completed,
+                    v.live,
+                    v.remaining
+                ));
+            }
+            outcome
+        };
+        // A contained worker panic degrades the pool: the worker is
+        // quarantined and the next dispatch rebuilds (see `serviceable`).
+        if let Err(e) = &outcome {
+            if let Some(&Error::WorkerPanicked { worker, .. }) = e.downcast_ref::<Error>() {
+                self.note_worker_panic(worker);
+            }
         }
         outcome
     }
@@ -321,8 +519,9 @@ impl WorkerPool {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        self.gate.shutdown();
-        for h in self.handles.drain(..) {
+        let mut core = self.core.lock().unwrap_or_else(PoisonError::into_inner);
+        core.gate.shutdown();
+        for h in core.handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -338,8 +537,23 @@ fn worker_loop(gate: &EpochGate<Task, anyhow::Error>, w: usize) {
             "pool worker {w}: task stamp outlived its dispatch epoch"
         );
         let result = if w < task.nparts {
-            catch_unwind(AssertUnwindSafe(|| (task.run)(&task, w)))
-                .unwrap_or_else(|_| Err(anyhow!("pool worker {w} panicked")))
+            // SAFETY: AssertUnwindSafe is justified by the containment
+            // contract: the closure only touches this worker's disjoint
+            // slice of the epoch-published Task, and on unwind nothing
+            // half-written is ever observed — the panic becomes a typed
+            // `Error::WorkerPanicked`, the pool degrades and quarantines
+            // this worker, and any rented ctx crossing the boundary is
+            // discarded as tainted rather than reused. [INV-UNWIND]
+            catch_unwind(AssertUnwindSafe(|| {
+                crate::failpoint!("pool.worker.pre_complete");
+                (task.run)(&task, w)
+            }))
+            .unwrap_or_else(|_| {
+                Err(anyhow::Error::new(Error::WorkerPanicked {
+                    worker: w,
+                    epoch: seen,
+                }))
+            })
         } else {
             Ok(())
         };
@@ -589,5 +803,57 @@ mod tests {
         // A completion arriving for the already-retired epoch 1 is a
         // use-after-dispatch; the gate must panic.
         gate.complete(1, None);
+    }
+
+    #[test]
+    fn worker_panicked_error_is_typed_and_stable() {
+        let e = anyhow::Error::new(Error::WorkerPanicked { worker: 2, epoch: 7 });
+        let t = e.downcast_ref::<Error>().expect("typed through anyhow");
+        assert_eq!(*t, Error::WorkerPanicked { worker: 2, epoch: 7 });
+        assert!(e.to_string().contains("pool worker 2 panicked in epoch 7"));
+    }
+
+    #[test]
+    fn health_machine_degrades_rebuilds_and_fails_within_budget() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.health(), Health::Healthy);
+        assert!(pool.serviceable());
+
+        // Contained panic: Degraded + quarantine, then a serviceable()
+        // call performs the lazy rebuild back to Healthy.
+        pool.note_worker_panic(1);
+        assert_eq!(pool.health(), Health::Degraded);
+        assert_eq!(pool.quarantined(), vec![1]);
+        assert_eq!(pool.worker_panics(), 1);
+        assert!(pool.serviceable());
+        assert_eq!(pool.health(), Health::Healthy);
+        assert_eq!(pool.pool_rebuilds(), 1);
+        assert!(pool.quarantined().is_empty());
+
+        // The rebuilt generation still executes correctly (bitwise).
+        let (m, n, k) = (40, 12, 3);
+        let c = cfg(2);
+        let (parts, mut units) = setup(m, n, &c);
+        let seq = RotationSequence::random(n, k, 5);
+        let mut a = Matrix::random(m, n, 2);
+        let mut expected = a.clone();
+        apply_naive(&mut expected, &seq);
+        let mut sp = SeqPlan::new();
+        sp.plan_into(&seq, &c);
+        let views = [MatView::of(&mut a)];
+        pool.run_planned::<Givens>(&views, &parts, &mut units, &sp, &c, true)
+            .unwrap();
+        assert_eq!(max_abs_diff(&a, &expected), 0.0);
+
+        // Exhaust the rebuild budget: the pool parks in terminal Failed.
+        for _ in 0..WorkerPool::REBUILD_BUDGET {
+            pool.note_worker_panic(0);
+            pool.serviceable();
+        }
+        assert_eq!(pool.health(), Health::Failed);
+        assert!(!pool.serviceable());
+        assert_eq!(pool.pool_rebuilds(), u64::from(WorkerPool::REBUILD_BUDGET));
+        pool.note_degraded_execute();
+        assert_eq!(pool.degraded_executes(), 1);
     }
 }

@@ -318,6 +318,7 @@ pub struct WorkspacePool {
     created: AtomicU64,
     reused: AtomicU64,
     reaped: AtomicU64,
+    tainted: AtomicU64,
 }
 
 impl Default for WorkspacePool {
@@ -358,6 +359,21 @@ impl WorkspacePool {
             created: AtomicU64::new(0),
             reused: AtomicU64::new(0),
             reaped: AtomicU64::new(0),
+            tainted: AtomicU64::new(0),
+        }
+    }
+
+    /// Rent a context wrapped in the RAII [`RentedCtx`] guard: however the
+    /// caller's execute ends — return, `?`, or an unwinding panic — the
+    /// context comes home (or is discarded as tainted), so the pool never
+    /// leaks a rental. This is the rental path the `Session` facade and
+    /// the coordinator use; bare [`Self::rent`]/[`Self::give_back`] remain
+    /// for callers that manage the lifecycle themselves.
+    pub fn rent_guard(self: &Arc<Self>, plan: &RotationPlan) -> RentedCtx {
+        RentedCtx {
+            ctx: Some(self.rent(plan)),
+            home: Some(Arc::clone(self)),
+            tainted: false,
         }
     }
 
@@ -367,6 +383,7 @@ impl WorkspacePool {
     /// are re-pointed at the plan's shared [`WorkerPool`] when it has one
     /// (signatures don't encode pool identity).
     pub fn rent(&self, plan: &RotationPlan) -> ExecCtx {
+        crate::failpoint!("plan.ctx.rent");
         let sig = plan.workspace_sig();
         let recycled = {
             let mut shelves = self.shelves();
@@ -467,6 +484,90 @@ impl WorkspacePool {
     pub fn ctxs_reaped(&self) -> u64 {
         self.reaped.load(Ordering::Relaxed)
     }
+
+    /// Rentals discarded instead of re-shelved because their execute
+    /// unwound (buffer state unknown) or the renter tainted them
+    /// explicitly. A non-zero value is the no-leak proof working as
+    /// intended: the rental came back to the pool's accounting even
+    /// though the context itself was quarantined.
+    pub fn ctxs_tainted(&self) -> u64 {
+        self.tainted.load(Ordering::Relaxed)
+    }
+
+    /// Account for (and drop) a rental whose buffers can no longer be
+    /// trusted — an execute unwound through it mid-write.
+    pub fn discard_tainted(&self, ctx: ExecCtx) {
+        self.tainted.fetch_add(1, Ordering::Relaxed);
+        drop(ctx);
+    }
+}
+
+/// RAII rental of an [`ExecCtx`] from a [`WorkspacePool`] (see
+/// [`WorkspacePool::rent_guard`]), or a guard-shaped wrapper over an owned
+/// context ([`RentedCtx::owned`]). Derefs to the context; on drop the
+/// context is returned to its home pool — **including during unwind**,
+/// where it is discarded as tainted instead of re-shelved, because a panic
+/// mid-execute leaves packing buffers in an unknown state.
+pub struct RentedCtx {
+    ctx: Option<ExecCtx>,
+    home: Option<Arc<WorkspacePool>>,
+    tainted: bool,
+}
+
+impl RentedCtx {
+    /// Wrap a context the caller owns outright (no home pool): drop just
+    /// drops it. Lets the `Session` facade route owned and rented
+    /// contexts through one unwind-safe path.
+    pub fn owned(ctx: ExecCtx) -> RentedCtx {
+        RentedCtx { ctx: Some(ctx), home: None, tainted: false }
+    }
+
+    /// Mark the rental as unfit for reuse: on drop it is counted in
+    /// [`WorkspacePool::ctxs_tainted`] and discarded, never re-shelved.
+    pub fn taint(&mut self) {
+        self.tainted = true;
+    }
+
+    /// Whether this rental has been marked tainted.
+    pub fn is_tainted(&self) -> bool {
+        self.tainted
+    }
+}
+
+impl std::ops::Deref for RentedCtx {
+    type Target = ExecCtx;
+
+    fn deref(&self) -> &ExecCtx {
+        match &self.ctx {
+            Some(ctx) => ctx,
+            // The Option is only None after Drop has taken the context,
+            // and Drop is the last thing that runs on a guard.
+            None => unreachable!("RentedCtx used after drop"),
+        }
+    }
+}
+
+impl std::ops::DerefMut for RentedCtx {
+    fn deref_mut(&mut self) -> &mut ExecCtx {
+        match &mut self.ctx {
+            Some(ctx) => ctx,
+            None => unreachable!("RentedCtx used after drop"),
+        }
+    }
+}
+
+impl Drop for RentedCtx {
+    fn drop(&mut self) {
+        let Some(ctx) = self.ctx.take() else { return };
+        let Some(home) = self.home.take() else { return };
+        // `thread::panicking()` makes the guard unwind-aware: a rental
+        // dropped mid-panic is quarantined even if nobody called taint().
+        if self.tainted || std::thread::panicking() {
+            home.discard_tainted(ctx);
+        } else {
+            home.give_back(ctx);
+        }
+    }
 }
 
 // The whole point of the split: plans are shared across threads, contexts
@@ -477,4 +578,61 @@ fn _assert_ctx_mobility() {
     fn assert_send<T: Send>() {}
     assert_send_sync::<WorkspacePool>();
     assert_send::<ExecCtx>();
+    assert_send::<RentedCtx>();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    fn small_plan() -> RotationPlan {
+        RotationPlan::builder().shape(24, 16, 3).build().unwrap()
+    }
+
+    /// Regression for the rental-leak bug (no `#[should_panic]` — the
+    /// panic is contained and the pool counters are the assertion): an
+    /// execute unwinding through a live rental must surrender the context
+    /// to the pool's accounting as tainted, never leak it.
+    #[test]
+    fn rented_ctx_returns_on_clean_drop_and_taints_on_unwind() {
+        let pool = Arc::new(WorkspacePool::new());
+        let plan = small_plan();
+        {
+            let _guard = pool.rent_guard(&plan);
+        }
+        assert_eq!(pool.pooled(), 1);
+        assert_eq!(pool.ctxs_created(), 1);
+        assert_eq!(pool.ctxs_tainted(), 0);
+
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let mut guard = pool.rent_guard(&plan);
+            let _ = &mut *guard;
+            panic!("mid-execute unwind");
+        }));
+        assert!(r.is_err());
+        assert_eq!(pool.ctxs_tainted(), 1);
+        assert_eq!(pool.pooled(), 0, "tainted rental is not re-shelved");
+
+        // The pool still serves rentals after the unwind...
+        drop(pool.rent_guard(&plan));
+        assert_eq!(pool.pooled(), 1);
+
+        // ...and an explicit taint on the happy path also discards.
+        let mut g = pool.rent_guard(&plan);
+        g.taint();
+        assert!(g.is_tainted());
+        drop(g);
+        assert_eq!(pool.ctxs_tainted(), 2);
+        assert_eq!(pool.pooled(), 0);
+    }
+
+    #[test]
+    fn owned_guard_drops_without_a_home_pool() {
+        let plan = small_plan();
+        let guard = RentedCtx::owned(ExecCtx::for_plan(&plan));
+        assert!(!guard.is_tainted());
+        assert_eq!(guard.sig(), &plan.workspace_sig());
+        drop(guard);
+    }
 }

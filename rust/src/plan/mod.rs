@@ -66,7 +66,7 @@
 mod ctx;
 mod session;
 
-pub use ctx::{Error, ExecCtx, WorkspacePool, WorkspaceSig, DEFAULT_MAX_POOLED_CTXS};
+pub use ctx::{Error, ExecCtx, RentedCtx, WorkspacePool, WorkspaceSig, DEFAULT_MAX_POOLED_CTXS};
 pub use session::Session;
 
 use anyhow::{bail, ensure, Result};
@@ -806,7 +806,20 @@ impl RotationPlan {
         // Packed once per dispatch, replayed by every matrix: deliberately
         // NOT scaled by `nmats` (per-job share = this / batch size).
         *last_stream_pack = sp.stream_pack_doubles();
-        if let Some(pool) = pool {
+        // Graceful degradation: a Degraded pool gets its lazy rebuild
+        // inside `serviceable`; if that fails (or the pool is terminally
+        // Failed) this execute falls through to the serial replay —
+        // bitwise identical by the equivalence suites — and the fallback
+        // is recorded on the pool (`degraded_executes`).
+        let pooled = match pool {
+            Some(p) if p.serviceable() => Some(p),
+            Some(p) => {
+                p.note_degraded_execute();
+                None
+            }
+            None => None,
+        };
+        if let Some(pool) = pooled {
             views.clear();
             views.extend(mats.iter_mut().map(MatView::of));
             let res = pool.run_planned::<Givens>(views, &self.parts, units, sp, &cfg, fused);
@@ -935,7 +948,18 @@ impl RotationPlan {
                     let sp = seqplan.get_or_insert_with(SeqPlan::new);
                     sp.plan_into(seq, &cfg);
                     *last_stream_pack = sp.stream_pack_doubles();
-                    if let Some(pool) = pool {
+                    // Same degradation contract as `batch_kernel`: a
+                    // non-serviceable pool routes this execute through the
+                    // bitwise-identical serial replay and is counted.
+                    let pooled = match pool {
+                        Some(p) if p.serviceable() => Some(p),
+                        Some(p) => {
+                            p.note_degraded_execute();
+                            None
+                        }
+                        None => None,
+                    };
+                    if let Some(pool) = pooled {
                         views.clear();
                         views.push(MatView::of(a));
                         let res =

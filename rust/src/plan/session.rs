@@ -22,31 +22,31 @@ use crate::rot::RotationSequence;
 use anyhow::Result;
 use std::sync::Arc;
 
-use super::{ExecCtx, RotationPlan, WorkspacePool};
+use super::{ExecCtx, RentedCtx, RotationPlan, WorkspacePool};
 use crate::blocking::KernelConfig;
 use crate::coordinator::{PlanCache, PlanKey};
 
 /// A shared plan plus this executor's private context. Cheap to create
 /// per worker/request: the plan is an `Arc` clone, the context is rented
 /// (or built once and reused for the session's lifetime).
+///
+/// The context always travels inside a [`RentedCtx`] RAII guard, so a
+/// panic unwinding through a session cannot leak a pool rental: the guard
+/// returns it — or quarantines it as tainted — on the way out.
 pub struct Session {
     plan: Arc<RotationPlan>,
     /// `Some` except transiently during drop.
-    ctx: Option<ExecCtx>,
-    /// Where the context returns when the session ends (pool-rented
-    /// sessions only; `Session::new` contexts just drop).
-    home: Option<Arc<WorkspacePool>>,
+    ctx: Option<RentedCtx>,
 }
 
 impl Session {
     /// A session over an already-shared plan, with a freshly built
     /// context.
     pub fn new(plan: Arc<RotationPlan>) -> Session {
-        let ctx = ExecCtx::for_plan(&plan);
+        let ctx = RentedCtx::owned(ExecCtx::for_plan(&plan));
         Session {
             plan,
             ctx: Some(ctx),
-            home: None,
         }
     }
 
@@ -66,13 +66,12 @@ impl Session {
     }
 
     /// A session whose context is rented from `pool` (and returned on
-    /// drop).
+    /// drop — tainted instead of re-shelved if the drop is an unwind).
     pub fn rented(plan: Arc<RotationPlan>, pool: Arc<WorkspacePool>) -> Session {
-        let ctx = pool.rent(&plan);
+        let ctx = pool.rent_guard(&plan);
         Session {
             plan,
             ctx: Some(ctx),
-            home: Some(pool),
         }
     }
 
@@ -96,7 +95,7 @@ impl Session {
     /// context is gone (only transiently possible mid-drop).
     pub fn last_memops(&self) -> crate::kernel::MemopCounts {
         self.ctx
-            .as_ref()
+            .as_deref()
             .map(ExecCtx::last_memops)
             .unwrap_or_default()
     }
@@ -107,7 +106,7 @@ impl Session {
     /// per-job share). Zero when the context is gone.
     pub fn last_stream_pack(&self) -> u64 {
         self.ctx
-            .as_ref()
+            .as_deref()
             .map(ExecCtx::last_stream_pack)
             .unwrap_or_default()
     }
@@ -119,14 +118,14 @@ impl Session {
     /// error beats aborting a serving process.
     pub fn ctx(&self) -> Result<&ExecCtx> {
         self.ctx
-            .as_ref()
+            .as_deref()
             .ok_or_else(|| super::Error::SessionContextUnavailable.into())
     }
 
     /// Apply `seq` to `a` in the plan's direction (see
     /// [`RotationPlan::execute`]).
     pub fn execute(&mut self, a: &mut Matrix, seq: &RotationSequence) -> Result<()> {
-        match self.ctx.as_mut() {
+        match self.ctx.as_deref_mut() {
             Some(ctx) => self.plan.execute(ctx, a, seq),
             None => Err(super::Error::SessionContextUnavailable.into()),
         }
@@ -134,7 +133,7 @@ impl Session {
 
     /// Undo an [`Self::execute`] (see [`RotationPlan::execute_inverse`]).
     pub fn execute_inverse(&mut self, a: &mut Matrix, seq: &RotationSequence) -> Result<()> {
-        match self.ctx.as_mut() {
+        match self.ctx.as_deref_mut() {
             Some(ctx) => self.plan.execute_inverse(ctx, a, seq),
             None => Err(super::Error::SessionContextUnavailable.into()),
         }
@@ -143,7 +142,7 @@ impl Session {
     /// Apply one sequence set to many same-shaped matrices (see
     /// [`RotationPlan::execute_batch`]).
     pub fn execute_batch(&mut self, mats: &mut [Matrix], seq: &RotationSequence) -> Result<()> {
-        match self.ctx.as_mut() {
+        match self.ctx.as_deref_mut() {
             Some(ctx) => self.plan.execute_batch(ctx, mats, seq),
             None => Err(super::Error::SessionContextUnavailable.into()),
         }
@@ -155,17 +154,13 @@ impl Session {
         mats: &mut [Matrix],
         seq: &RotationSequence,
     ) -> Result<()> {
-        match self.ctx.as_mut() {
+        match self.ctx.as_deref_mut() {
             Some(ctx) => self.plan.execute_batch_inverse(ctx, mats, seq),
             None => Err(super::Error::SessionContextUnavailable.into()),
         }
     }
 }
 
-impl Drop for Session {
-    fn drop(&mut self) {
-        if let (Some(pool), Some(ctx)) = (self.home.take(), self.ctx.take()) {
-            pool.give_back(ctx);
-        }
-    }
-}
+// No manual `Drop`: the `RentedCtx` guard is the drop path — it returns
+// the rental to its home pool on a clean drop and quarantines it as
+// tainted when the session is dropped by an unwinding panic.

@@ -272,6 +272,10 @@ pub fn tune_shape(
     let mut a = Matrix::random(m, n, 7);
     let pool = (threads > 1).then(|| Arc::new(crate::parallel::WorkerPool::new(threads)));
     for &idx in &survivors {
+        // Chaos hook: an injected fault aborts the whole tuning run with
+        // a typed error instead of recording a half-measured winner.
+        crate::failpoint!("tune.measure", |f| Err(anyhow::Error::new(f)
+            .context("tuning measurement aborted by injected fault")));
         let config = scored[idx].config;
         let mut builder = RotationPlan::builder().shape(m, n, k).config(config);
         if let Some(pool) = &pool {

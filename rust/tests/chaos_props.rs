@@ -1,0 +1,267 @@
+//! Chaos properties: seeded fault schedules over the failpoint site
+//! registry, driven through every serving shape — {serial, pooled} ×
+//! {solo, batched} — must never violate the containment contract:
+//!
+//! 1. every run terminates (no wedged channels, bounded drains);
+//! 2. every job resolves to exactly one typed result — a bitwise-clean
+//!    matrix or a downcastable error, never a silent drop;
+//! 3. once the registry is cleared, executes are bitwise identical to
+//!    the clean naive oracle (no fault leaves persistent corruption).
+//!
+//! The fault registry is process-global, so every test here serializes
+//! on one mutex; the suite runs only under `--features failpoints`.
+#![cfg(feature = "failpoints")]
+
+use rotseq::blocking::KernelConfig;
+use rotseq::coordinator::{AdmissionConfig, Coordinator, Job, JobResult, JobSpec, RoutePolicy};
+use rotseq::fault::{self, FaultAction, FaultPlan};
+use rotseq::kernel::Algorithm;
+use rotseq::matrix::{max_abs_diff, Matrix};
+use rotseq::plan::{RotationPlan, Session, WorkspacePool};
+use rotseq::rot::{apply_naive, RotationSequence};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+/// One lock around the process-global fault registry: schedules from
+/// concurrently running tests must never interleave.
+static REGISTRY: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    REGISTRY.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn small_cfg() -> KernelConfig {
+    KernelConfig {
+        mr: 8,
+        kr: 2,
+        mb: 16,
+        kb: 4,
+        nb: 8,
+        threads: 1,
+    }
+}
+
+struct Fixture {
+    m: usize,
+    n: usize,
+    k: usize,
+    seq: RotationSequence,
+    a0: Matrix,
+    want: Matrix,
+}
+
+fn fixture() -> Fixture {
+    let (m, n, k) = (32, 16, 3);
+    let seq = RotationSequence::random(n, k, 5);
+    let a0 = Matrix::random(m, n, 6);
+    let mut want = a0.clone();
+    apply_naive(&mut want, &seq);
+    Fixture {
+        m,
+        n,
+        k,
+        seq,
+        a0,
+        want,
+    }
+}
+
+fn job(fx: &Fixture, cfg: KernelConfig) -> Job {
+    Job {
+        matrix: fx.a0.clone(),
+        seq: fx.seq.clone(),
+        spec: JobSpec {
+            algorithm: Some(Algorithm::Kernel),
+            config: cfg,
+        },
+    }
+}
+
+/// A completed job must be bitwise clean; a typed error is an acceptable
+/// outcome under injection. Anything else (a hang) is caught by the
+/// caller's timeout.
+fn check(res: anyhow::Result<JobResult>, want: &Matrix, schedule: u64) {
+    if let Ok(r) = res {
+        assert_eq!(
+            max_abs_diff(&r.matrix, want),
+            0.0,
+            "schedule {schedule}: completed job must be bitwise clean"
+        );
+    }
+}
+
+/// Drive one coordinator workload (3 same-key jobs) under the currently
+/// installed fault plan and assert the exactly-one-typed-result property.
+fn run_coordinator_schedule(fx: &Fixture, batched: bool, cfg: KernelConfig, schedule: u64) {
+    let coord = if batched {
+        Coordinator::start_with_admission(
+            2,
+            RoutePolicy::Auto,
+            AdmissionConfig {
+                window_ns: 200_000,
+                batch_max: 3, // == job count: size-cap flush, no flusher dependency
+                min_peak_concurrency: 0,
+                drain_deadline_ns: 2_000_000_000,
+                ..AdmissionConfig::default()
+            },
+        )
+    } else {
+        Coordinator::start(2, RoutePolicy::Auto)
+    };
+    let receivers: Vec<_> = (0..3).map(|_| coord.submit(job(fx, cfg))).collect();
+    let mut pending = Vec::new();
+    let mut resolved = 0usize;
+    for rx in receivers {
+        match rx.recv_timeout(Duration::from_millis(750)) {
+            Ok(res) => {
+                check(res, &fx.want, schedule);
+                resolved += 1;
+            }
+            Err(_) => pending.push(rx),
+        }
+    }
+    // The drain-deadline bound means shutdown itself terminates even when
+    // the fault wedged a window.
+    coord.shutdown();
+    for rx in pending {
+        match rx.recv_timeout(Duration::from_millis(750)) {
+            Ok(res) => {
+                check(res, &fx.want, schedule);
+                resolved += 1;
+            }
+            Err(_) => panic!("schedule {schedule}: a job never resolved (missing typed result)"),
+        }
+    }
+    assert_eq!(resolved, 3, "schedule {schedule}: exactly one result per job");
+}
+
+/// Serial solo: the plan/session path with a pool rental, no coordinator.
+/// An injected panic unwinds into this test; catching it here plays the
+/// role of the embedder's boundary, and the RAII guard must still have
+/// quarantined the rental.
+fn run_serial_schedule(fx: &Fixture, schedule: u64) {
+    let outcome = catch_unwind(AssertUnwindSafe(|| -> anyhow::Result<Matrix> {
+        let plan = Arc::new(
+            RotationPlan::builder()
+                .shape(fx.m, fx.n, fx.k)
+                .config(small_cfg())
+                .build()?,
+        );
+        let pool = Arc::new(WorkspacePool::new());
+        let mut sess = Session::rented(plan, pool);
+        let mut a = fx.a0.clone();
+        sess.execute(&mut a, &fx.seq)?;
+        Ok(a)
+    }));
+    match outcome {
+        Ok(Ok(a)) => assert_eq!(
+            max_abs_diff(&a, &fx.want),
+            0.0,
+            "schedule {schedule}: serial execute must be bitwise clean"
+        ),
+        Ok(Err(_)) | Err(_) => {} // typed error or contained panic
+    }
+}
+
+/// >= 64 seeded schedules over the full site registry, cycling through
+/// the four serving shapes. After every schedule the registry is cleared
+/// and a clean execute must be bitwise identical to the oracle.
+#[test]
+fn seeded_schedules_terminate_with_typed_results_and_bitwise_recovery() {
+    let _g = lock();
+    let fx = fixture();
+    let mut par_cfg = small_cfg();
+    par_cfg.threads = 3;
+    for schedule in 0..64u64 {
+        fault::install(FaultPlan::seeded(0x5eed_0000u64.wrapping_add(schedule), fault::SITES));
+        match schedule % 4 {
+            0 => run_serial_schedule(&fx, schedule),
+            1 => run_coordinator_schedule(&fx, true, small_cfg(), schedule),
+            2 => run_coordinator_schedule(&fx, false, par_cfg, schedule),
+            _ => run_coordinator_schedule(&fx, true, par_cfg, schedule),
+        }
+        fault::clear();
+        // Post-fault determinism: the cleared registry must leave no
+        // corruption behind, across both the serial and pooled paths.
+        let coord = Coordinator::start(1, RoutePolicy::Auto);
+        let r = coord
+            .run(job(&fx, small_cfg()))
+            .unwrap_or_else(|e| panic!("schedule {schedule}: post-fault execute failed: {e:#}"));
+        coord.shutdown();
+        assert_eq!(
+            max_abs_diff(&r.matrix, &fx.want),
+            0.0,
+            "schedule {schedule}: post-fault execute diverged from the clean oracle"
+        );
+    }
+}
+
+/// A scripted `ErrOnce` at the coordinator execute boundary is absorbed
+/// by the single retry: the job completes bitwise clean, the retry
+/// counter reads exactly 1, and nothing is recorded as failed.
+#[test]
+fn scripted_err_once_is_absorbed_by_the_single_retry() {
+    let _g = lock();
+    let fx = fixture();
+    fault::install(
+        FaultPlan::new(0xE1).script("coordinator.worker.execute", FaultAction::ErrOnce(1)),
+    );
+    let coord = Coordinator::start(1, RoutePolicy::Auto);
+    let r = coord
+        .run(job(&fx, small_cfg()))
+        .expect("the retry must absorb one injected fault");
+    assert_eq!(max_abs_diff(&r.matrix, &fx.want), 0.0);
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.retries, 1);
+    assert_eq!(snap.jobs_failed, 0);
+    assert_eq!(snap.jobs_completed, 1);
+    coord.shutdown();
+    fault::clear();
+}
+
+/// A scripted panic inside a §7 pool worker is contained at the pool
+/// boundary (typed `WorkerPanicked`), degrades the pool, and the
+/// coordinator's retry rides the quarantine-and-respawn rebuild to a
+/// bitwise-clean completion — the full containment → degradation →
+/// recovery chain, observable end to end in the metrics gauges.
+#[test]
+fn scripted_worker_panic_rides_the_rebuild_to_success() {
+    let _g = lock();
+    let fx = fixture();
+    fault::install(FaultPlan::new(0xF2).script("pool.worker.pre_complete", FaultAction::Panic));
+    let coord = Coordinator::start(1, RoutePolicy::Auto);
+    let mut cfg = small_cfg();
+    cfg.threads = 3;
+    let r = coord
+        .run(job(&fx, cfg))
+        .expect("the retry must ride the pool rebuild");
+    assert_eq!(max_abs_diff(&r.matrix, &fx.want), 0.0);
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.retries, 1);
+    assert_eq!(snap.jobs_failed, 0);
+    assert!(snap.worker_panics >= 1, "containment must be visible");
+    assert!(snap.pool_rebuilds >= 1, "the rebuild must be visible");
+    coord.shutdown();
+    fault::clear();
+}
+
+/// A scripted panic at the context-rent site is contained at the worker
+/// execute boundary even though no rental exists yet, and the retry
+/// completes clean.
+#[test]
+fn scripted_rent_panic_is_contained_and_retried() {
+    let _g = lock();
+    let fx = fixture();
+    fault::install(FaultPlan::new(0xA3).script("plan.ctx.rent", FaultAction::Panic));
+    let coord = Coordinator::start(1, RoutePolicy::Auto);
+    let r = coord
+        .run(job(&fx, small_cfg()))
+        .expect("the retry must absorb the rent-site panic");
+    assert_eq!(max_abs_diff(&r.matrix, &fx.want), 0.0);
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.retries, 1);
+    assert_eq!(snap.jobs_failed, 0);
+    coord.shutdown();
+    fault::clear();
+}

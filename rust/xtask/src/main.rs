@@ -12,7 +12,7 @@
 //!   on stdout; `tools/verify.py` must emit byte-identical lines (the
 //!   same parity contract CI enforces for `tools/lint.py`).
 //!
-//! Five lint families, all pure-std text analysis (no syn/proc-macro
+//! Six lint families, all pure-std text analysis (no syn/proc-macro
 //! dependencies, so the lint builds offline and in seconds):
 //!
 //! 1. **SAFETY comments** — every `unsafe { … }` block and every
@@ -37,6 +37,12 @@
 //!    `docs/SAFETY.md`, the cited ID must exist there, and every
 //!    registered ID must be cited by at least one comment (a dead ID
 //!    means the registry and the code have drifted apart).
+//! 6. **Failpoint-site drift** — every `failpoint!("a.b.c")` site name
+//!    in the sources must appear in the failure-taxonomy table of
+//!    `docs/ROBUSTNESS.md` (backticked dotted tokens in its `|` rows),
+//!    and every site the taxonomy lists must still have a `failpoint!()`
+//!    call site — the failure-mode contract and the injection harness
+//!    cannot drift apart.
 //!
 //! The lints scan a comment-and-string-blanked view of each file so that
 //! doc examples mentioning `unwrap()` or `unsafe` never trip them, while
@@ -132,6 +138,7 @@ fn run_lint() -> ExitCode {
         }
     }
     lint_kernel_drift(&root, &mut violations);
+    lint_failpoint_drift(&root, &files, &mut violations);
 
     if violations.is_empty() {
         println!("xtask lint: {} files clean", files.len());
@@ -626,6 +633,108 @@ fn lint_kernel_drift(root: &Path, violations: &mut Vec<String>) {
     }
 }
 
+/// `failpoint!("a.b.c"…)` site names in a source text, with 1-based line
+/// numbers. Scans the *raw* text (the site name is a string literal, which
+/// `scrub` would blank) — doc-comment examples therefore count as
+/// mentions, which is intended: an example referencing an unregistered
+/// site is exactly the drift this lint exists to catch.
+fn failpoint_sites(src: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (idx, line) in src.lines().enumerate() {
+        let mut start = 0;
+        while let Some(pos) = line[start..].find("failpoint!(") {
+            let at = start + pos + "failpoint!(".len();
+            let rest = line[at..].trim_start();
+            if let Some(stripped) = rest.strip_prefix('"') {
+                if let Some(end) = stripped.find('"') {
+                    out.push((idx + 1, stripped[..end].to_string()));
+                }
+            }
+            start = at;
+        }
+    }
+    out
+}
+
+/// Backticked site-shaped tokens in one line: lowercase dotted names
+/// (`a.b`, `a.b.c`, …) whose every segment is `[a-z0-9_]+`. Rust paths
+/// (`::`), file paths (`/`), type names (uppercase) and dotless metric
+/// names all fail the shape and are ignored.
+fn backticked_dotted_tokens(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = line;
+    while let Some(lo) = rest.find('`') {
+        let tail = &rest[lo + 1..];
+        let Some(hi) = tail.find('`') else { break };
+        let tok = &tail[..hi];
+        if tok.contains('.')
+            && tok.split('.').all(|seg| {
+                !seg.is_empty()
+                    && seg
+                        .bytes()
+                        .all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'_')
+            })
+        {
+            out.push(tok.to_string());
+        }
+        rest = &tail[hi + 1..];
+    }
+    out
+}
+
+/// Lint 6: failpoint-site drift. The failure-taxonomy table in
+/// docs/ROBUSTNESS.md (backticked dotted tokens in `|` rows) is the
+/// registry; every `failpoint!()` call site must name a registered site
+/// and every registered site must still exist in the sources.
+fn lint_failpoint_drift(root: &Path, files: &[PathBuf], violations: &mut Vec<String>) {
+    let doc_path = match root.parent() {
+        Some(repo) => repo.join("docs/ROBUSTNESS.md"),
+        None => PathBuf::from("docs/ROBUSTNESS.md"),
+    };
+    let Ok(doc) = fs::read_to_string(&doc_path) else {
+        violations.push(
+            "docs/ROBUSTNESS.md: unreadable (the failpoint-site taxonomy lives there)".into(),
+        );
+        return;
+    };
+    let mut doc_sites: Vec<String> = Vec::new();
+    for line in doc.lines() {
+        if !line.trim_start().starts_with('|') {
+            continue;
+        }
+        for site in backticked_dotted_tokens(line) {
+            if !doc_sites.contains(&site) {
+                doc_sites.push(site);
+            }
+        }
+    }
+
+    let mut code_sites: Vec<String> = Vec::new();
+    for path in files {
+        let Ok(src) = fs::read_to_string(path) else {
+            continue; // already reported as unreadable by the main loop
+        };
+        let name = rel(path, root);
+        for (lineno, site) in failpoint_sites(&src) {
+            if !doc_sites.contains(&site) {
+                violations.push(format!(
+                    "{name}:{lineno}: failpoint site `{site}` not in the docs/ROBUSTNESS.md taxonomy table"
+                ));
+            }
+            if !code_sites.contains(&site) {
+                code_sites.push(site);
+            }
+        }
+    }
+    for site in &doc_sites {
+        if !code_sites.contains(site) {
+            violations.push(format!(
+                "docs/ROBUSTNESS.md: taxonomy site `{site}` has no failpoint!() call site"
+            ));
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -745,6 +854,33 @@ mod tests {
         assert_eq!(v.len(), 1, "{v:?}");
         assert!(v[0].contains("unknown invariant [INV-BOGUS]"));
         assert!(cited.is_empty());
+    }
+
+    #[test]
+    fn failpoint_sites_parses_both_macro_forms() {
+        let src = concat!(
+            "crate::failpoint!(\"pool.worker.pre_complete\");\n",
+            "crate::failpoint!( \"pool.dispatch.publish\", |f| Err(f.into()));\n",
+            "let s = \"plan.ctx.rent\"; // bare string, not a call site\n",
+        );
+        assert_eq!(
+            failpoint_sites(src),
+            vec![
+                (1, "pool.worker.pre_complete".to_string()),
+                (2, "pool.dispatch.publish".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn backticked_dotted_tokens_matches_the_site_shape_only() {
+        let row = "| `pool.worker.pre_complete` | `WorkerPool::run_planned` via \
+                   `catch_unwind` | `worker_panics` | see `docs/FOO.md` |";
+        assert_eq!(
+            backticked_dotted_tokens(row),
+            vec!["pool.worker.pre_complete".to_string()]
+        );
+        assert!(backticked_dotted_tokens("| `Delay(ns)` | `FakeClock` |").is_empty());
     }
 
     #[test]

@@ -2,7 +2,7 @@
 """Python mirror of `cargo xtask lint` (rust/xtask/src/main.rs).
 
 The container this repo grows in has no Rust toolchain, so this mirror
-lets the same four lint families run pre-commit; CI runs the Rust
+lets the same six lint families run pre-commit; CI runs the Rust
 implementation. Keep the two in sync — the Rust crate is the source of
 truth for behavior.
 
@@ -16,6 +16,9 @@ Families:
   5. every `// SAFETY:` comment cites an `[INV-*]` ID registered in
      docs/SAFETY.md, every cited ID exists, every registered ID is
      cited at least once
+  6. failpoint-site drift: every `failpoint!("a.b.c")` site is in the
+     docs/ROBUSTNESS.md taxonomy table, and every taxonomy site still
+     has a `failpoint!()` call site
 """
 
 import re
@@ -271,6 +274,65 @@ def lint_kernel_drift(violations):
         if ekrp1 != kr + 1:
             violations.append(
                 f"kernel drift: arm ({mr}, {kr}) has KRP1={ekrp1}, expected {kr + 1}"
+            )
+
+
+FAILPOINT_CALL = re.compile(r'failpoint!\(\s*"([^"\n]*)"')
+DOC_SITE = re.compile(r"`([a-z0-9_]+(?:\.[a-z0-9_]+)+)`")
+
+
+def failpoint_sites(src):
+    """xtask failpoint_sites: `failpoint!("a.b.c"…)` names with 1-based
+    line numbers, scanned on the raw text (the name is a string literal,
+    which scrub() would blank; doc examples intentionally count)."""
+    out = []
+    for idx, line in enumerate(src.split("\n")):
+        for m in FAILPOINT_CALL.finditer(line):
+            out.append((idx + 1, m.group(1)))
+    return out
+
+
+def backticked_dotted_tokens(line):
+    """xtask backticked_dotted_tokens: backticked lowercase dotted names
+    (`a.b.c`) — the site shape; `::` paths, `/` paths, uppercase type
+    names and dotless metric names don't match."""
+    return DOC_SITE.findall(line)
+
+
+def lint_failpoint_drift(files, violations):
+    """xtask lint_failpoint_drift (family 6): the docs/ROBUSTNESS.md
+    taxonomy table (`|` rows) is the site registry; call sites and the
+    registry must not drift."""
+    path = ROOT.parent / "docs/ROBUSTNESS.md"
+    try:
+        doc = path.read_text()
+    except OSError:
+        violations.append(
+            "docs/ROBUSTNESS.md: unreadable (the failpoint-site taxonomy lives there)"
+        )
+        return
+    doc_sites = []
+    for line in doc.split("\n"):
+        if not line.lstrip().startswith("|"):
+            continue
+        for site in backticked_dotted_tokens(line):
+            if site not in doc_sites:
+                doc_sites.append(site)
+    code_sites = []
+    for path in files:
+        name = path.relative_to(ROOT).as_posix()
+        for ln, site in failpoint_sites(path.read_text()):
+            if site not in doc_sites:
+                violations.append(
+                    f"{name}:{ln}: failpoint site `{site}` not in the "
+                    "docs/ROBUSTNESS.md taxonomy table"
+                )
+            if site not in code_sites:
+                code_sites.append(site)
+    for site in doc_sites:
+        if site not in code_sites:
+            violations.append(
+                f"docs/ROBUSTNESS.md: taxonomy site `{site}` has no failpoint!() call site"
             )
 
 
